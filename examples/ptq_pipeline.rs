@@ -1,0 +1,82 @@
+//! End-to-end PTQ driver (the repo's E2E validation workload):
+//!
+//!   1. load the pretrained FP model + the synthetic corpus,
+//!   2. run the full AQuant pipeline — activation-scale search, block-wise
+//!      reconstruction with the adaptive rounding border (Algorithm 1),
+//!      all schedules driven by the Rust coordinator over AOT-compiled
+//!      JAX step programs,
+//!   3. evaluate FP vs nearest vs AQuant at W2A2 on the test split,
+//!   4. print the per-block loss trajectory and the accuracy comparison.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!   cargo run --release --offline --example ptq_pipeline -- [model] [iters]
+
+use anyhow::Result;
+
+use aquant::config::{Bits, Method, RunConfig};
+use aquant::coordinator::chain::QuantCtx;
+use aquant::coordinator::state::Knobs;
+use aquant::coordinator::Calibrator;
+use aquant::eval::eval_quant_accuracy_limited;
+use aquant::exp::cell::Ctx;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "mobiles".into());
+    let iters: u32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(100);
+    let bits = Bits::parse("W2A2")?;
+    let eval_n = 512;
+
+    let ctx = Ctx::new("artifacts", Some(iters))?;
+    println!("== AQuant end-to-end PTQ: {model} @ {} ==", bits.name());
+    let fp = ctx.fp_accuracy(&model)?;
+    println!("FP baseline: {:.2}%", fp * 100.0);
+
+    let nearest = ctx.run_cell(&model, Method::Nearest, bits)?;
+    println!("nearest {}: {:.2}%", bits.name(), nearest * 100.0);
+
+    // Run the calibration explicitly (not via cache) to show the loop.
+    let mut cfg = RunConfig::new(&model, Method::AQuant, bits);
+    cfg.calib.iters = iters;
+    let chain = ctx.chain(&model)?;
+    let calibrator = Calibrator::new(chain, cfg.clone());
+    let t0 = std::time::Instant::now();
+    let (st, reports) = calibrator.run(&ctx.dataset.calib)?;
+    println!(
+        "calibrated {} units x {iters} iters in {:.1}s:",
+        reports.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    for r in &reports {
+        println!(
+            "  {:<28} loss {:.5} -> {:.5}",
+            r.unit, r.first_loss, r.last_loss
+        );
+    }
+
+    let chain = ctx.chain(&model)?;
+    let q = QuantCtx {
+        state: &st,
+        bits,
+        knobs: Knobs::inference(Method::AQuant, bits),
+    };
+    let aquant = eval_quant_accuracy_limited(&chain, &ctx.dataset.test, &q, eval_n)?;
+    println!("\n{:<22} {:>8}", "config", "top-1");
+    println!("{:<22} {:>7.2}%", "FP", fp * 100.0);
+    println!(
+        "{:<22} {:>7.2}%",
+        format!("nearest {}", bits.name()),
+        nearest * 100.0
+    );
+    println!(
+        "{:<22} {:>7.2}%",
+        format!("AQuant {}", bits.name()),
+        aquant * 100.0
+    );
+    println!(
+        "\nAQuant recovers {:+.2} points over nearest rounding.",
+        (aquant - nearest) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Quickstart: load the AOT artifacts, inspect the model zoo, and compare
+//! full-precision vs nearest-rounding quantized accuracy on a slice of the
+//! test set — no calibration involved.
+//!
+//! Run after `make artifacts && cargo build --release`:
+//!   cargo run --release --offline --example quickstart
+
+use anyhow::Result;
+
+use aquant::config::{Bits, Method};
+use aquant::exp::cell::Ctx;
+
+fn main() -> Result<()> {
+    let ctx = Ctx::new("artifacts", None)?;
+    println!("platform: {}", ctx.rt.platform());
+    println!("models: {:?}", ctx.models());
+
+    let model = "mobiles"; // smallest — quickest demo
+    let topo = ctx.topo(model)?;
+    println!(
+        "\n{model}: {} blocks / {} layers / {} params",
+        topo.blocks.len(),
+        topo.all_layers().len(),
+        topo.all_layers().iter().map(|l| l.weight_elems()).sum::<usize>()
+    );
+
+    let fp = ctx.fp_accuracy(model)?;
+    println!("FP accuracy:            {:.2}%", fp * 100.0);
+
+    // Nearest rounding needs no calibration — just scale search.
+    for bits_s in ["W4A4", "W2A2"] {
+        let bits = Bits::parse(bits_s)?;
+        let acc = ctx.run_cell(model, Method::Nearest, bits)?;
+        println!("nearest {bits_s} accuracy:  {:.2}%", acc * 100.0);
+    }
+    println!("\nNext: `aquant eval --model {model} --method aquant --bits W2A2`");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Serving example: quantized inference behind a TCP server (pure-Rust
+//! engine — no Python, no PJRT on the request path), with a load-generating
+//! client reporting latency and throughput.
+//!
+//!   cargo run --release --offline --example serve -- [model] [bits] [batch] [n_req]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use aquant::config::{Bits, Method};
+use aquant::exp::cell::{build_quantized_engine, Ctx};
+use aquant::server;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).cloned().unwrap_or_else(|| "mobiles".into());
+    let bits = Bits::parse(&args.get(2).cloned().unwrap_or_else(|| "W4A4".into()))?;
+    let batch: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let n_req: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let ctx = Ctx::new("artifacts", Some(60))?;
+    println!("building quantized engine: {model} nearest {}", bits.name());
+    let engine = Arc::new(build_quantized_engine(&ctx, &model, Method::Nearest, bits)?);
+    let test = ctx.dataset.test.clone();
+    let img_elems = test.img_elems();
+
+    let addr = "127.0.0.1:7311";
+    let srv_engine = engine.clone();
+    let handle = std::thread::spawn(move || server::serve(srv_engine, addr, Some(1)));
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    // Load generator: n_req batched requests over one connection.
+    let mut lat = Vec::new();
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    for r in 0..n_req {
+        let idx: Vec<usize> = (r * batch..(r + 1) * batch).map(|i| i % test.n).collect();
+        let images = test.gather(&idx);
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(4 + images.len() * 4);
+        out.extend_from_slice(&(batch as u32).to_le_bytes());
+        for v in &images {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        stream.write_all(&out)?;
+        let mut hdr = [0u8; 4];
+        stream.read_exact(&mut hdr)?;
+        let m = u32::from_le_bytes(hdr) as usize;
+        let mut buf = vec![0u8; m * 4];
+        stream.read_exact(&mut buf)?;
+        lat.push(t0.elapsed());
+        let preds: Vec<u32> = buf
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        for (&i, &p) in idx.iter().zip(&preds) {
+            total += 1;
+            if test.labels[i] == p {
+                hits += 1;
+            }
+        }
+    }
+    drop(stream);
+    let _ = handle.join();
+
+    lat.sort();
+    let sum: std::time::Duration = lat.iter().sum();
+    println!("\n== serving report ==");
+    println!("requests: {n_req} x batch {batch}  ({img_elems} f32/image)");
+    println!(
+        "latency  p50 {:?}  p95 {:?}  mean {:?}",
+        lat[lat.len() / 2],
+        lat[((lat.len() as f64 * 0.95) as usize).min(lat.len() - 1)],
+        sum / lat.len() as u32
+    );
+    println!(
+        "throughput: {:.0} images/s",
+        (n_req * batch) as f64 / sum.as_secs_f64()
+    );
+    println!("accuracy over served batches: {:.2}%", hits as f64 / total as f64 * 100.0);
+    Ok(())
+}

@@ -1,0 +1,241 @@
+"""AOT compiler: train → fold → lower every program → write artifacts.
+
+Runs ONCE at build time (`make artifacts`); Python is never on the request
+path. Outputs under ``artifacts/``:
+
+  data/*.bin                synthetic corpus (shared bytes with Rust)
+  ckpt/<model>.npz          raw training checkpoints (cache)
+  weights/<model>/*.bin     BN-folded FP weights (Rust reads these)
+  qinit/<model>/wbits<M>/   weight scales s_w + AdaRound V init per bit-width
+  *.hlo.txt                 lowered programs (HLO text — see below)
+  manifest.json             program registry + topology/data/weights meta
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import ptq, quant, train
+from .models import MODELS, ModelDef
+from .models.defs import BlockSpec
+from .models.forward import fold_bn
+
+WBITS_CONFIGS = (2, 3, 4, 8)
+EPOCHS = {"resnet10s": 8, "mobiles": 10, "regnets": 8}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(fn, arg_specs, result_names, name: str, out_dir: str) -> dict:
+    """Lower `fn` and return its manifest entry."""
+    specs = [jax.ShapeDtypeStruct(tuple(a.shape), jnp.float32) for a in arg_specs]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *specs)
+    results = [
+        {"name": rn, "shape": list(s.shape), "dtype": "f32"}
+        for rn, s in zip(result_names, out_shapes)
+    ]
+    return {
+        "path": path,
+        "args": [
+            {"name": a.name, "shape": list(a.shape), "dtype": a.dtype} for a in arg_specs
+        ],
+        "results": results,
+    }
+
+
+def export_weights(model: ModelDef, folded, out_dir: str) -> dict:
+    meta = {}
+    wdir = os.path.join(out_dir, "weights", model.name)
+    os.makedirs(wdir, exist_ok=True)
+    for l in model.all_layers():
+        w = np.asarray(folded[l.name]["w"], "<f4")
+        b = np.asarray(folded[l.name]["b"], "<f4")
+        w.tofile(os.path.join(wdir, f"{l.name}.w.bin"))
+        b.tofile(os.path.join(wdir, f"{l.name}.b.bin"))
+        meta[l.name] = {
+            "w": f"weights/{model.name}/{l.name}.w.bin",
+            "w_shape": list(w.shape),
+            "b": f"weights/{model.name}/{l.name}.b.bin",
+            "b_shape": list(b.shape),
+        }
+    return meta
+
+
+def export_qinit(model: ModelDef, folded, out_dir: str) -> dict:
+    """Per-bit-width weight scales + AdaRound V init."""
+    meta = {}
+    for bits in WBITS_CONFIGS:
+        qdir = os.path.join(out_dir, "qinit", model.name, f"wbits{bits}")
+        os.makedirs(qdir, exist_ok=True)
+        bm = {}
+        for l in model.all_layers():
+            w2 = folded[l.name]["w"]
+            s_w = quant.weight_scale_mse(w2, bits)
+            v0 = quant.v_init(w2, s_w)
+            np.asarray(s_w, "<f4").tofile(os.path.join(qdir, f"{l.name}.s_w.bin"))
+            np.asarray(v0, "<f4").tofile(os.path.join(qdir, f"{l.name}.V.bin"))
+            bm[l.name] = {
+                "s_w": f"qinit/{model.name}/wbits{bits}/{l.name}.s_w.bin",
+                "V": f"qinit/{model.name}/wbits{bits}/{l.name}.V.bin",
+            }
+        meta[str(bits)] = bm
+    return meta
+
+
+def model_topology_meta(model: ModelDef) -> dict:
+    shapes = model.shapes()
+
+    def layer_meta(l):
+        c, h, w = shapes[l.name]
+        ho, wo = l.out_hw(h, w)
+        return {
+            "name": l.name,
+            "kind": l.kind,
+            "ic": l.ic,
+            "oc": l.oc,
+            "k": l.k,
+            "stride": l.stride,
+            "pad": l.pad,
+            "groups": l.groups,
+            "relu": l.relu,
+            "gap_input": l.gap_input,
+            "rows": l.rows,
+            "in_chw": [c, h, w],
+            "out_chw": [l.oc, ho, wo],
+        }
+
+    return {
+        "name": model.name,
+        "in_c": model.in_c,
+        "in_hw": list(model.in_hw),
+        "n_classes": model.n_classes,
+        "blocks": [
+            {
+                "name": b.name,
+                "residual": b.residual,
+                "downsample": b.downsample.name if b.downsample else None,
+                "layers": [layer_meta(l) for l in b.layers]
+                + ([layer_meta(b.downsample)] if b.downsample else []),
+            }
+            for b in model.blocks
+        ],
+    }
+
+
+def layer_partition(model: ModelDef) -> list[BlockSpec]:
+    """Every layer as its own reconstruction unit (AdaRound granularity)."""
+    return [
+        BlockSpec(name=f"L_{l.name}", layers=(l,), residual=False, downsample=None)
+        for l in model.all_layers()
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--epochs-scale", type=float, default=1.0)
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    model_names = [m for m in args.models.split(",") if m]
+
+    t0 = time.time()
+    print("== data ==")
+    splits = data_mod.canonical_splits()
+    data_meta = data_mod.export(os.path.join(out_dir, "data"), splits)
+
+    programs: dict = {}
+    meta: dict = {
+        "data": data_meta,
+        "models": {},
+        "weights": {},
+        "qinit": {},
+        "knobs": ptq.KNOBS,
+        "fp_acc": {},
+        "calib_batch": ptq.BATCH_CALIB,
+    }
+
+    for name in model_names:
+        model = MODELS[name]
+        print(f"== model {name} ==")
+        ckpt = os.path.join(out_dir, "ckpt", f"{name}.npz")
+        if os.path.exists(ckpt):
+            params = train.load_ckpt(ckpt)
+            acc = train.accuracy(
+                model, params, splits["test"].images, splits["test"].labels
+            )
+            print(f"  loaded checkpoint, test acc {acc * 100:.2f}%")
+        else:
+            epochs = max(1, int(EPOCHS[name] * args.epochs_scale))
+            params, acc = train.train_model(model, splits, epochs=epochs)
+            train.save_ckpt(ckpt, params)
+        meta["fp_acc"][name] = acc
+        folded = fold_bn(model, params)
+        meta["weights"][name] = export_weights(model, folded, out_dir)
+        meta["qinit"][name] = export_qinit(model, folded, out_dir)
+        meta["models"][name] = model_topology_meta(model)
+
+        print("  lowering programs ...")
+        b = ptq.BATCH_CALIB
+        for l in model.all_layers():
+            fn, a, r = ptq.make_layer_forward(model, l, b, quantized=False)
+            programs[f"fp_{name}_{l.name}"] = lower_program(
+                fn, a, r, f"fp_{name}_{l.name}", out_dir
+            )
+            fn, a, r = ptq.make_layer_forward(model, l, b, quantized=True)
+            programs[f"q_{name}_{l.name}"] = lower_program(
+                fn, a, r, f"q_{name}_{l.name}", out_dir
+            )
+        for blk in model.blocks:
+            fn, a, r = ptq.make_block_step(model, blk)
+            programs[f"step_{name}_B_{blk.name}"] = lower_program(
+                fn, a, r, f"step_{name}_B_{blk.name}", out_dir
+            )
+        for blk in layer_partition(model):
+            fn, a, r = ptq.make_block_step(model, blk)
+            programs[f"step_{name}_{blk.name}"] = lower_program(
+                fn, a, r, f"step_{name}_{blk.name}", out_dir
+            )
+        fn, a, r = ptq.make_model_forward(model, b, quantized=False)
+        programs[f"fp_full_{name}"] = lower_program(fn, a, r, f"fp_full_{name}", out_dir)
+        fn, a, r = ptq.make_model_forward(model, b, quantized=True)
+        programs[f"q_full_{name}"] = lower_program(fn, a, r, f"q_full_{name}", out_dir)
+        print(f"  done ({time.time() - t0:.0f}s elapsed)")
+
+    manifest = {
+        "producer": f"jax {jax.__version__}",
+        "programs": programs,
+        "meta": meta,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== wrote {len(programs)} programs to {out_dir} ({time.time() - t0:.0f}s) ==")
+
+
+if __name__ == "__main__":
+    main()

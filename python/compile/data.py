@@ -1,0 +1,127 @@
+"""Synthetic image-classification corpus (ImageNet substitute).
+
+The paper evaluates PTQ on ImageNet; this environment has no dataset, so we
+generate a deterministic 24-class procedural-texture corpus that exercises
+the same code paths: convolutional features, realistic (heavy-tailed,
+ReLU-sparse) activation statistics, and enough headroom that low-bit
+quantization visibly degrades accuracy.
+
+Each class is an oriented grating with a class-specific (orientation,
+frequency, color tint) triple; samples add per-image phase, amplitude
+jitter, a random low-frequency illumination gradient, and pixel noise, so
+nearest neighbours do not trivially solve it.
+
+Everything is keyed by an integer seed; the exact same bytes are written to
+``artifacts/data/*.bin`` for the Rust side (raw little-endian f32 / u32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+IMG_H = 24
+IMG_W = 24
+IMG_C = 3
+N_CLASSES = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class Split:
+    """One dataset split (images NCHW float32 in [0,1]-ish, labels u32)."""
+
+    images: np.ndarray  # (N, C, H, W) f32
+    labels: np.ndarray  # (N,) u32
+
+    @property
+    def n(self) -> int:
+        return int(self.images.shape[0])
+
+
+def _class_params(n_classes: int = N_CLASSES):
+    """Per-class (orientation, frequency, tint) table — fixed, not random."""
+    oris = np.linspace(0.0, np.pi, n_classes, endpoint=False)
+    freqs = 2.5 + 1.5 * (np.arange(n_classes) % 3)
+    tints = np.stack(
+        [
+            0.5 + 0.5 * np.cos(2 * np.pi * np.arange(n_classes) / n_classes),
+            0.5 + 0.5 * np.sin(2 * np.pi * np.arange(n_classes) / n_classes),
+            np.linspace(0.3, 1.0, n_classes),
+        ],
+        axis=1,
+    )
+    return oris, freqs, tints
+
+
+def generate(n: int, seed: int) -> Split:
+    """Generate `n` labelled images deterministically from `seed`."""
+    rng = np.random.RandomState(seed)
+    oris, freqs, tints = _class_params()
+    yy, xx = np.meshgrid(
+        np.linspace(-1, 1, IMG_H), np.linspace(-1, 1, IMG_W), indexing="ij"
+    )
+    labels = rng.randint(0, N_CLASSES, size=n).astype(np.uint32)
+    images = np.empty((n, IMG_C, IMG_H, IMG_W), dtype=np.float32)
+    for i in range(n):
+        c = int(labels[i])
+        theta = oris[c] + rng.uniform(-0.05, 0.05)
+        freq = freqs[c] * rng.uniform(0.92, 1.08)
+        phase = rng.uniform(0, 2 * np.pi)
+        u = np.cos(theta) * xx + np.sin(theta) * yy
+        grating = 0.5 + 0.5 * np.sin(2 * np.pi * freq * u + phase)
+        amp = rng.uniform(0.5, 1.0)
+        # low-frequency illumination gradient
+        gx, gy = rng.uniform(-0.3, 0.3, size=2)
+        illum = 0.15 * (gx * xx + gy * yy)
+        base = amp * grating + illum
+        img = base[None, :, :] * tints[c][:, None, None]
+        img += rng.normal(0.0, 0.32, size=img.shape)
+        images[i] = img.astype(np.float32)
+    return Split(images=images, labels=labels)
+
+
+# Canonical splits (seeds are part of the experiment definition).
+TRAIN_SEED, CALIB_SEED, TEST_SEED = 1001, 2002, 3003
+N_TRAIN, N_CALIB, N_TEST = 6144, 256, 1536
+
+
+def canonical_splits() -> dict[str, Split]:
+    return {
+        "train": generate(N_TRAIN, TRAIN_SEED),
+        "calib": generate(N_CALIB, CALIB_SEED),
+        "test": generate(N_TEST, TEST_SEED),
+    }
+
+
+def export(out_dir: str, splits: dict[str, Split]) -> dict:
+    """Write raw .bin files + return the manifest meta section."""
+    os.makedirs(out_dir, exist_ok=True)
+    meta = {
+        "h": IMG_H,
+        "w": IMG_W,
+        "c": IMG_C,
+        "n_classes": N_CLASSES,
+        "splits": {},
+    }
+    for name, split in splits.items():
+        img_file = f"data/{name}_images.bin"
+        lab_file = f"data/{name}_labels.bin"
+        split.images.astype("<f4").tofile(os.path.join(out_dir, f"{name}_images.bin"))
+        split.labels.astype("<u4").tofile(os.path.join(out_dir, f"{name}_labels.bin"))
+        meta["splits"][name] = {
+            "images": img_file,
+            "labels": lab_file,
+            "n": split.n,
+        }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+if __name__ == "__main__":
+    s = canonical_splits()
+    for k, v in s.items():
+        print(k, v.images.shape, v.labels[:8])

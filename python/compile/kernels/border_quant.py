@@ -1,0 +1,98 @@
+"""Pallas kernel: fused adaptive-border activation quantization.
+
+The inference hot-spot of AQuant. One VMEM pass over an im2col'd activation
+tile computes the border polynomial, the sigmoid bound, the per-channel
+fusion mean, and the round/clip/dequantize — so the border never costs an
+extra HBM round-trip. This is the TPU re-expression of the paper's
+"fuse B(x) with img2col" CUDA argument (§4.3 / Figure 3); see DESIGN.md
+§Hardware-Adaptation.
+
+Tiling: grid over output-pixel columns. Each step holds a ``(R, TILE_P)``
+activation block plus the ``(R, 4)`` parameter table in VMEM. For the
+largest layer in the zoo (R = 96·9 = 864) and TILE_P = 256 that is
+864·256·4 B ≈ 0.9 MB — comfortably inside a TPU core's ~16 MB VMEM with
+double-buffering headroom (see DESIGN.md §Perf for the roofline estimate).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_P = 256
+
+
+def _kernel(x_ref, params_ref, scalars_ref, o_ref, *, k2: int):
+    x = x_ref[...]  # (R, TILE_P)
+    prm = params_ref[...]  # (R, 4)
+    sc = scalars_ref[...]  # (8,)
+    s, qmin, qmax = sc[0], sc[1], sc[2]
+    border_en, fuse_en, b2_en, aq_en = sc[3], sc[4], sc[5], sc[6]
+    b0 = prm[:, 0][:, None]
+    b1 = prm[:, 1][:, None]
+    b2 = prm[:, 2][:, None]
+    alpha = prm[:, 3][:, None]
+    r, tp = x.shape
+    xs = x / s
+    u = (b2_en * b2) * xs * xs + b1 * xs + b0
+    be = 0.5 + border_en * (jax.nn.sigmoid(2.5 * u) - 0.5)
+    seg = (alpha * be).reshape(r // k2, k2, tp)
+    fused = jnp.broadcast_to(
+        jnp.mean(seg, axis=1, keepdims=True), seg.shape
+    ).reshape(r, tp)
+    border = fuse_en * fused + (1.0 - fuse_en) * be
+    q = jnp.clip(jnp.ceil(xs - border), qmin, qmax)
+    o_ref[...] = aq_en * (s * q) + (1.0 - aq_en) * x
+
+
+def border_quant_pallas(x, params, scalars, k2: int, tile_p: int = TILE_P):
+    """Fused border quantization of im2col'd activations.
+
+    Args mirror :func:`..kernels.ref.border_quant_ref`:
+      x:       (N, R, P) f32.
+      params:  (R, 4) f32 — [b0, b1, b2, alpha] columns.
+      scalars: (8,) f32 — [s, qmin, qmax, border_en, fuse_en, b2_en,
+               aq_en, _pad].
+      k2:      static segment length (kernel-size²); must divide R.
+
+    Returns (N, R, P) f32.
+    """
+    n, r, p = x.shape
+    if r % k2 != 0:
+        raise ValueError(f"R={r} not a multiple of k2={k2}")
+    # Collapse batch into the pixel axis so one grid covers everything:
+    # (N, R, P) -> (R, N·P), padded to a tile multiple.
+    xt = jnp.swapaxes(x, 0, 1).reshape(r, n * p)
+    total = n * p
+    pad = (-total) % tile_p
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, pad)))
+    padded = total + pad
+    grid = padded // tile_p
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k2=k2),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((r, tile_p), lambda j: (0, j)),
+            pl.BlockSpec((r, 4), lambda j: (0, 0)),
+            pl.BlockSpec((8,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((r, tile_p), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((r, padded), x.dtype),
+        interpret=True,
+    )(xt, params, scalars)
+
+    out = out[:, :total].reshape(r, n, p)
+    return jnp.swapaxes(out, 0, 1)
+
+
+def make_scalars(s, qmin, qmax, border_en=1.0, fuse_en=1.0, b2_en=1.0, aq_en=1.0):
+    """Assemble the kernel's scalar block (helper for tests/aot)."""
+    return jnp.asarray([s, qmin, qmax, border_en, fuse_en, b2_en, aq_en, 0.0], jnp.float32)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused border-quantization kernel.
+
+This is the CORE correctness signal for L1: pytest sweeps shapes and
+parameter regimes asserting ``border_quant_pallas == border_quant_ref``
+(both are f32 pipelines with identical operation order).
+
+The math is the paper's inference-time activation quantization:
+
+    xs = x / s
+    u  = b2·xs² + b1·xs + b0           (quadratic border, Eq. 8)
+    Bᴱ = 0.5 + (sigmoid(2.5·u) − 0.5)  (bounded border, Appendix B)
+    Bᴵ = per-input-channel mean of α·Bᴱ (border fusion, Eq. 9)
+    q  = clip(ceil(xs − B), qmin, qmax)
+    x̂  = s·q
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def border_quant_ref(x, params, scalars, k2: int):
+    """Oracle. Args mirror the Pallas kernel:
+
+    x:       (N, R, P) im2col'd activations, R = i_c·k².
+    params:  (R, 4) columns [b0, b1, b2, alpha].
+    scalars: (8,) = [s, qmin, qmax, border_en, fuse_en, b2_en, aq_en, _pad].
+    k2:      static kernel-size² (segment length for fusion).
+    """
+    s, qmin, qmax, border_en, fuse_en, b2_en, aq_en = (scalars[i] for i in range(7))
+    b0 = params[:, 0][None, :, None]
+    b1 = params[:, 1][None, :, None]
+    b2 = params[:, 2][None, :, None]
+    alpha = params[:, 3][None, :, None]
+    n, r, p = x.shape
+    xs = x / s
+    u = (b2_en * b2) * xs * xs + b1 * xs + b0
+    be = 0.5 + border_en * (jax.nn.sigmoid(2.5 * u) - 0.5)
+    seg = (alpha * be).reshape(n, r // k2, k2, p)
+    fused = jnp.broadcast_to(jnp.mean(seg, axis=2, keepdims=True), seg.shape).reshape(n, r, p)
+    border = fuse_en * fused + (1.0 - fuse_en) * be
+    q = jnp.clip(jnp.ceil(xs - border), qmin, qmax)
+    return aq_en * (s * q) + (1.0 - aq_en) * x

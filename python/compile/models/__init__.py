@@ -1,0 +1,3 @@
+"""Model zoo: small CNNs covering the paper's three design families."""
+
+from .defs import LayerSpec, BlockSpec, ModelDef, MODELS, model_by_name  # noqa: F401

@@ -1,0 +1,278 @@
+"""Model definitions as explicit layer/block specs.
+
+The specs are the single source of truth shared by:
+  * the JAX forward builders (training, FP reference, quantized PTQ graphs),
+  * ``aot.py`` (program lowering + manifest metadata),
+  * the Rust side (mirrored from the manifest: the integer inference engine
+    and the calibration coordinator read the same topology).
+
+The zoo covers the paper's three CNN design families at laptop scale:
+  * ``resnet10s``  — residual blocks (ResNet-18/50 family),
+  * ``mobiles``    — depthwise-separable convolutions (MobileNetV2/MNasNet),
+  * ``regnets``    — group convolutions (RegNet-600MF/3.2GF).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..data import IMG_C, IMG_H, IMG_W, N_CLASSES
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One matmul-bearing layer (conv expressed as im2col + matmul, or fc).
+
+    ``groups`` follows the usual convention: weights have shape
+    ``(oc, (ic // groups) · k²)``; depthwise = ``groups == ic``.
+    ``relu`` is the layer's *own* activation; for residual blocks the final
+    relu happens after the skip-add and is owned by the block.
+    ``gap_input`` (fc only): global-average-pool the (N, C, H, W) input
+    before the matmul.
+    """
+
+    name: str
+    kind: str  # "conv" | "fc"
+    ic: int
+    oc: int
+    k: int = 1
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    relu: bool = True
+    gap_input: bool = False
+
+    @property
+    def rows(self) -> int:
+        """im2col row count R = i_c · k² (patch features per output pixel)."""
+        return self.ic * self.k * self.k
+
+    @property
+    def rows_per_group(self) -> int:
+        return (self.ic // self.groups) * self.k * self.k
+
+    @property
+    def weight_shape(self) -> tuple[int, int]:
+        return (self.oc, self.rows_per_group)
+
+    def out_hw(self, h: int, w: int) -> tuple[int, int]:
+        if self.kind == "fc":
+            return (1, 1)
+        ho = (h + 2 * self.pad - self.k) // self.stride + 1
+        wo = (w + 2 * self.pad - self.k) // self.stride + 1
+        return (ho, wo)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """A reconstruction unit for block-wise PTQ (BRECQ granularity).
+
+    ``residual``: add the block input to the main-path output, then relu.
+    ``downsample``: optional 1×1 projection on the skip path (also
+    quantized — it is a conv layer like any other).
+    """
+
+    name: str
+    layers: tuple[LayerSpec, ...]
+    residual: bool = False
+    downsample: Optional[LayerSpec] = None
+
+    def all_layers(self) -> list[LayerSpec]:
+        out = list(self.layers)
+        if self.downsample is not None:
+            out.append(self.downsample)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    blocks: tuple[BlockSpec, ...]
+    in_hw: tuple[int, int] = (IMG_H, IMG_W)
+    in_c: int = IMG_C
+    n_classes: int = N_CLASSES
+
+    def all_layers(self) -> list[LayerSpec]:
+        out: list[LayerSpec] = []
+        for b in self.blocks:
+            out.extend(b.all_layers())
+        return out
+
+    def layer(self, name: str) -> LayerSpec:
+        for l in self.all_layers():
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def shapes(self) -> dict[str, tuple[int, int, int]]:
+        """Input (C, H, W) of every layer, plus block in/out shapes."""
+        shapes: dict[str, tuple[int, int, int]] = {}
+        c, h, w = self.in_c, *self.in_hw
+        for b in self.blocks:
+            if b.downsample is not None:
+                shapes[b.downsample.name] = (c, h, w)
+            for l in b.layers:
+                shapes[l.name] = (c, h, w)
+                h, w = l.out_hw(h, w)
+                c = l.oc
+        return shapes
+
+
+def _conv(name, ic, oc, k=3, stride=1, groups=1, relu=True) -> LayerSpec:
+    return LayerSpec(
+        name=name,
+        kind="conv",
+        ic=ic,
+        oc=oc,
+        k=k,
+        stride=stride,
+        pad=k // 2,
+        groups=groups,
+        relu=relu,
+    )
+
+
+def _resnet10s() -> ModelDef:
+    """Residual family: stem + 4 basic blocks + fc head (~330k params)."""
+
+    def basic(name, ic, oc, stride):
+        ds = None
+        if stride != 1 or ic != oc:
+            ds = LayerSpec(
+                name=f"{name}_ds",
+                kind="conv",
+                ic=ic,
+                oc=oc,
+                k=1,
+                stride=stride,
+                pad=0,
+                relu=False,
+            )
+        return BlockSpec(
+            name=name,
+            layers=(
+                _conv(f"{name}_c1", ic, oc, stride=stride),
+                _conv(f"{name}_c2", oc, oc, relu=False),
+            ),
+            residual=True,
+            downsample=ds,
+        )
+
+    blocks = (
+        BlockSpec("stem", ( _conv("stem_c", IMG_C, 24),)),
+        basic("b1", 24, 24, 1),
+        basic("b2", 24, 48, 2),
+        basic("b3", 48, 96, 2),
+        basic("b4", 96, 96, 1),
+        BlockSpec(
+            "head",
+            (
+                LayerSpec(
+                    name="head_fc",
+                    kind="fc",
+                    ic=96,
+                    oc=N_CLASSES,
+                    k=1,
+                    relu=False,
+                    gap_input=True,
+                ),
+            ),
+        ),
+    )
+    return ModelDef("resnet10s", blocks)
+
+
+def _mobiles() -> ModelDef:
+    """Depthwise-separable family (MobileNet-style), ~30k params."""
+
+    def dsblock(name, ic, oc, stride):
+        return BlockSpec(
+            name=name,
+            layers=(
+                _conv(f"{name}_dw", ic, ic, stride=stride, groups=ic),
+                _conv(f"{name}_pw", ic, oc, k=1),
+            ),
+        )
+
+    blocks = (
+        BlockSpec("stem", (_conv("stem_c", IMG_C, 16),)),
+        dsblock("m1", 16, 32, 1),
+        dsblock("m2", 32, 64, 2),
+        dsblock("m3", 64, 96, 2),
+        BlockSpec(
+            "head",
+            (
+                LayerSpec(
+                    name="head_fc",
+                    kind="fc",
+                    ic=96,
+                    oc=N_CLASSES,
+                    k=1,
+                    relu=False,
+                    gap_input=True,
+                ),
+            ),
+        ),
+    )
+    return ModelDef("mobiles", blocks)
+
+
+def _regnets() -> ModelDef:
+    """Group-convolution family (RegNet-style X block), ~180k params."""
+
+    def xblock(name, ic, oc, stride, groups=4):
+        ds = None
+        if stride != 1 or ic != oc:
+            ds = LayerSpec(
+                name=f"{name}_ds",
+                kind="conv",
+                ic=ic,
+                oc=oc,
+                k=1,
+                stride=stride,
+                pad=0,
+                relu=False,
+            )
+        return BlockSpec(
+            name=name,
+            layers=(
+                _conv(f"{name}_a", ic, oc, k=1),
+                _conv(f"{name}_b", oc, oc, stride=stride, groups=groups),
+                _conv(f"{name}_c", oc, oc, k=1, relu=False),
+            ),
+            residual=True,
+            downsample=ds,
+        )
+
+    blocks = (
+        BlockSpec("stem", (_conv("stem_c", IMG_C, 32),)),
+        xblock("x1", 32, 48, 2),
+        xblock("x2", 48, 80, 2),
+        BlockSpec(
+            "head",
+            (
+                LayerSpec(
+                    name="head_fc",
+                    kind="fc",
+                    ic=80,
+                    oc=N_CLASSES,
+                    k=1,
+                    relu=False,
+                    gap_input=True,
+                ),
+            ),
+        ),
+    )
+    return ModelDef("regnets", blocks)
+
+
+MODELS: dict[str, ModelDef] = {
+    m.name: m for m in (_resnet10s(), _mobiles(), _regnets())
+}
+
+
+def model_by_name(name: str) -> ModelDef:
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+    return MODELS[name]

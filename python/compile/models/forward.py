@@ -1,0 +1,244 @@
+"""Forward builders over the model specs.
+
+Two styles:
+
+* **Training forward** (``train_forward``): direct ``lax.conv`` + BatchNorm
+  + ReLU, used only by ``train.py`` to pretrain the FP models.
+* **Folded forward** (``layer_forward`` / ``block_forward_fp``): the PTQ
+  view — BatchNorm folded into weights, every conv expressed as
+  im2col patches × matmul (exactly the paper's ``(o_c, i_c·k²) ×
+  (i_c·k², h_o·w_o)`` formulation). An optional ``patches_fn`` hook lets
+  the PTQ graphs quantize the patches at the layer's input, which is the
+  paper's refactored activation-quantization position.
+
+The im2col row ordering (channel-major: row = c·k² + kh·k + kw, groups
+contiguous) is verified against ``lax.conv_general_dilated`` in pytest and
+is mirrored by the Rust engine (`rust/src/nn/im2col.rs`).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .defs import BlockSpec, LayerSpec, ModelDef
+
+Params = dict  # name -> dict of arrays
+
+
+# ---------------------------------------------------------------------------
+# Training-time forward (BN, lax.conv)
+# ---------------------------------------------------------------------------
+
+
+def init_params(model: ModelDef, seed: int) -> Params:
+    """He-init conv/fc weights + BN parameters and running stats."""
+    rng = np.random.RandomState(seed)
+    params: Params = {}
+    for l in model.all_layers():
+        fan_in = l.rows_per_group if l.kind == "conv" else l.ic
+        std = float(np.sqrt(2.0 / fan_in))
+        if l.kind == "conv":
+            w = rng.normal(0.0, std, size=(l.oc, l.ic // l.groups, l.k, l.k))
+        else:
+            w = rng.normal(0.0, std, size=(l.oc, l.ic))
+        params[l.name] = {
+            "w": jnp.asarray(w, jnp.float32),
+            "b": jnp.zeros((l.oc,), jnp.float32),
+            # BN (convs only; fc head has no BN)
+            "gamma": jnp.ones((l.oc,), jnp.float32),
+            "beta": jnp.zeros((l.oc,), jnp.float32),
+            "rmean": jnp.zeros((l.oc,), jnp.float32),
+            "rvar": jnp.ones((l.oc,), jnp.float32),
+        }
+    return params
+
+
+def _conv_raw(l: LayerSpec, w, x):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        (l.stride, l.stride),
+        [(l.pad, l.pad), (l.pad, l.pad)],
+        feature_group_count=l.groups,
+    )
+
+
+def train_forward(model: ModelDef, params: Params, x, train: bool, momentum: float = 0.1):
+    """Forward with BatchNorm. Returns (logits, new_running_stats)."""
+    new_stats = {}
+
+    def bn_relu(l: LayerSpec, p, h):
+        if train:
+            mean = jnp.mean(h, axis=(0, 2, 3))
+            var = jnp.var(h, axis=(0, 2, 3))
+            new_stats[l.name] = (
+                (1 - momentum) * p["rmean"] + momentum * mean,
+                (1 - momentum) * p["rvar"] + momentum * var,
+            )
+        else:
+            mean, var = p["rmean"], p["rvar"]
+        h = (h - mean[None, :, None, None]) / jnp.sqrt(var[None, :, None, None] + 1e-5)
+        h = h * p["gamma"][None, :, None, None] + p["beta"][None, :, None, None]
+        return h
+
+    h = x
+    for blk in model.blocks:
+        skip = h
+        for i, l in enumerate(blk.layers):
+            p = params[l.name]
+            if l.kind == "fc":
+                if l.gap_input and h.ndim == 4:
+                    h = jnp.mean(h, axis=(2, 3))
+                h = h @ p["w"].T + p["b"]
+            else:
+                h = _conv_raw(l, p["w"], h) + p["b"][None, :, None, None]
+                h = bn_relu(l, p, h)
+                is_last = i == len(blk.layers) - 1
+                if l.relu or (is_last and blk.residual):
+                    # residual blocks: main-path output stays pre-relu; the
+                    # relu after the add is applied below.
+                    if l.relu and not (is_last and blk.residual):
+                        h = jax.nn.relu(h)
+        if blk.residual:
+            if blk.downsample is not None:
+                d = blk.downsample
+                pd = params[d.name]
+                sk = _conv_raw(d, pd["w"], skip) + pd["b"][None, :, None, None]
+                sk = (sk - pd["rmean"][None, :, None, None]) / jnp.sqrt(
+                    pd["rvar"][None, :, None, None] + 1e-5
+                ) * pd["gamma"][None, :, None, None] + pd["beta"][None, :, None, None]
+                # (training uses batch stats only on the main path for
+                # simplicity; the skip projection BN uses running stats —
+                # folded identically at export)
+                skip = sk
+            h = jax.nn.relu(h + skip)
+    return h, new_stats
+
+
+# ---------------------------------------------------------------------------
+# BN folding (PTQ starts from folded weights)
+# ---------------------------------------------------------------------------
+
+
+def fold_bn(model: ModelDef, params: Params) -> dict[str, dict[str, jnp.ndarray]]:
+    """Fold BN into conv weights; flatten conv weights to (oc, icg·k²).
+
+    Returns name -> {"w": (oc, r), "b": (oc,)} ready for the im2col path.
+    """
+    folded = {}
+    for l in model.all_layers():
+        p = params[l.name]
+        if l.kind == "fc":
+            folded[l.name] = {"w": p["w"], "b": p["b"]}
+            continue
+        scale = p["gamma"] / jnp.sqrt(p["rvar"] + 1e-5)
+        w = p["w"] * scale[:, None, None, None]
+        b = p["beta"] + (p["b"] - p["rmean"]) * scale
+        folded[l.name] = {"w": w.reshape(l.oc, l.rows_per_group), "b": b}
+    return folded
+
+
+# ---------------------------------------------------------------------------
+# Folded (PTQ) forward: im2col patches × matmul
+# ---------------------------------------------------------------------------
+
+
+def extract_patches(l: LayerSpec, x):
+    """im2col: (N, ic, H, W) -> (N, ic·k², ho·wo)."""
+    patches = lax.conv_general_dilated_patches(
+        x, (l.k, l.k), (l.stride, l.stride), padding=[(l.pad, l.pad), (l.pad, l.pad)]
+    )
+    n = patches.shape[0]
+    return patches.reshape(n, l.rows, -1)
+
+
+def layer_forward(
+    l: LayerSpec,
+    w2,
+    b,
+    x,
+    patches_fn: Optional[Callable] = None,
+    weight_fn: Optional[Callable] = None,
+    apply_relu: Optional[bool] = None,
+):
+    """One folded layer: im2col -> [quantize patches] -> matmul -> bias.
+
+    ``patches_fn``: hook applied to the (N, R, P) patch tensor — the
+    activation-quantization node.
+    ``weight_fn``: hook applied to the (oc, r) weight matrix — the weight-
+    quantization node.
+    ``apply_relu``: override the spec's relu (residual blocks defer it).
+    """
+    relu = l.relu if apply_relu is None else apply_relu
+    w_used = weight_fn(w2) if weight_fn is not None else w2
+    if l.kind == "fc":
+        if l.gap_input and x.ndim == 4:
+            x = jnp.mean(x, axis=(2, 3))
+        h = x[:, None, :]  # (N, 1, ic) -> rows axis second for the hook
+        h = jnp.swapaxes(h, 1, 2)  # (N, ic, 1): R=ic, P=1
+        if patches_fn is not None:
+            h = patches_fn(h)
+        out = jnp.einsum("or,nrp->nop", w_used, h)[:, :, 0] + b
+        return jax.nn.relu(out) if relu else out
+    n = x.shape[0]
+    h_in, w_in = x.shape[2], x.shape[3]
+    ho, wo = l.out_hw(h_in, w_in)
+    pm = extract_patches(l, x)
+    if patches_fn is not None:
+        pm = patches_fn(pm)
+    if l.groups == 1:
+        out = jnp.einsum("or,nrp->nop", w_used, pm)
+    else:
+        rg = l.rows_per_group
+        ocg = l.oc // l.groups
+        outs = []
+        for g in range(l.groups):
+            rows = pm[:, g * rg : (g + 1) * rg, :]
+            wg = w_used[g * ocg : (g + 1) * ocg]
+            outs.append(jnp.einsum("or,nrp->nop", wg, rows))
+        out = jnp.concatenate(outs, axis=1)
+    out = out.reshape(n, l.oc, ho, wo) + b[None, :, None, None]
+    return jax.nn.relu(out) if relu else out
+
+
+def block_forward(
+    blk: BlockSpec,
+    weights: dict,
+    x,
+    patches_fn_for: Optional[Callable[[LayerSpec], Optional[Callable]]] = None,
+    weight_fn_for: Optional[Callable[[LayerSpec], Optional[Callable]]] = None,
+):
+    """Folded forward of one block (FP when no hooks are given)."""
+    pf = patches_fn_for or (lambda l: None)
+    wf = weight_fn_for or (lambda l: None)
+    h = x
+    for i, l in enumerate(blk.layers):
+        is_last = i == len(blk.layers) - 1
+        relu = l.relu and not (is_last and blk.residual)
+        h = layer_forward(
+            l, weights[l.name]["w"], weights[l.name]["b"], h,
+            patches_fn=pf(l), weight_fn=wf(l), apply_relu=relu,
+        )
+    if blk.residual:
+        skip = x
+        if blk.downsample is not None:
+            d = blk.downsample
+            skip = layer_forward(
+                d, weights[d.name]["w"], weights[d.name]["b"], x,
+                patches_fn=pf(d), weight_fn=wf(d), apply_relu=False,
+            )
+        h = jax.nn.relu(h + skip)
+    return h
+
+
+def model_forward(model: ModelDef, weights: dict, x, **hooks):
+    """Folded forward of the whole model -> logits."""
+    h = x
+    for blk in model.blocks:
+        h = block_forward(blk, weights, h, **hooks)
+    return h

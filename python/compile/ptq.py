@@ -1,0 +1,355 @@
+"""PTQ graph builders: block-reconstruction step functions and quantized
+forward programs, in the flattened-argument convention consumed by the
+Rust coordinator.
+
+Argument naming convention (recorded in the manifest; the Rust side is
+fully generic over it):
+
+  ``w:<layer>.w``, ``w:<layer>.b``      folded FP weights (constant inputs)
+  ``state:<layer>.V``                   AdaRound soft-rounding logits
+  ``state:<layer>.s_w``                 per-out-channel weight scales (fixed)
+  ``state:<layer>.s_a``                 activation scale (learned, scalar)
+  ``state:<layer>.bp``                  border params (R, 4): b0 b1 b2 α
+  ``adam:...m`` / ``adam:...v``         Adam moments for each learned leaf
+  ``adam:t``                            global step counter
+  ``batch:x_in|x_fp|y_fp|mask``         calibration batch (mask = QDrop)
+  ``hyper:bits``                        (L, 4): qmin_a qmax_a qmin_w qmax_w
+  ``hyper:knobs``                       (12,): lr_v lr_s lr_b α_round β λ
+                                        wq_en aq_en border_en fuse_en b2_en _
+
+Step programs return the updated ``state:``/``adam:`` tensors under the
+same names plus ``out:loss``; the coordinator writes results back into its
+state store by name (see rust/src/coordinator/).
+
+Forward programs (`q_L`, `fp_L`, `q_full`, `fp_full`) never apply the
+*deferred* relu of residual blocks — for per-layer programs the Rust side
+owns the block wiring (adds + relus); the full-model programs handle it
+in-graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .kernels.border_quant import border_quant_pallas
+from .models.defs import BlockSpec, LayerSpec, ModelDef
+from .models.forward import block_forward, layer_forward
+
+KNOBS = (
+    "lr_v lr_s lr_b alpha_round beta lam wq_en aq_en border_en fuse_en b2_en spare".split()
+)
+
+# indices into the knobs vector
+K = {name: i for i, name in enumerate(KNOBS)}
+
+
+@dataclasses.dataclass
+class ArgSpec:
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "f32"
+
+
+def layer_state_shapes(l: LayerSpec) -> dict[str, tuple[int, ...]]:
+    """Shapes of the per-layer quant state."""
+    return {
+        "V": l.weight_shape,
+        "s_w": (l.oc, 1),
+        "s_a": (),
+        "bp": (l.rows, 4),
+    }
+
+
+LEARNED = ("V", "s_a", "bp")  # leaves Adam updates, with lrs (lr_v, lr_s, lr_b)
+
+
+# ---------------------------------------------------------------------------
+# Quant hooks
+# ---------------------------------------------------------------------------
+
+
+def _act_hook_ste(l: LayerSpec, st, bits_row, knobs):
+    """Trainable activation-quant hook for the patches of layer `l`."""
+
+    def hook(pm):
+        return quant.act_quant_ste(
+            pm,
+            st["s_a"],
+            st["bp"][:, 0],
+            st["bp"][:, 1],
+            st["bp"][:, 2],
+            st["bp"][:, 3],
+            l.k * l.k if l.kind == "conv" else 1,
+            bits_row[0],
+            bits_row[1],
+            knobs[K["border_en"]],
+            knobs[K["fuse_en"]],
+            knobs[K["b2_en"]],
+            knobs[K["aq_en"]],
+            knobs[K["alpha_round"]],
+        )
+
+    return hook
+
+
+def _act_hook_hard(l: LayerSpec, st, bits_row, knobs):
+    """Inference activation-quant hook — the Pallas kernel."""
+
+    def hook(pm):
+        scalars = jnp.concatenate(
+            [
+                jnp.reshape(st["s_a"], (1,)),
+                bits_row[0:1],
+                bits_row[1:2],
+                knobs[K["border_en"] : K["border_en"] + 1],
+                knobs[K["fuse_en"] : K["fuse_en"] + 1],
+                knobs[K["b2_en"] : K["b2_en"] + 1],
+                knobs[K["aq_en"] : K["aq_en"] + 1],
+                jnp.zeros((1,), jnp.float32),
+            ]
+        )
+        k2 = l.k * l.k if l.kind == "conv" else 1
+        return border_quant_pallas(pm, st["bp"], scalars, k2)
+
+    return hook
+
+
+def _weight_hook(l: LayerSpec, st, bits_row, knobs, hard: bool):
+    fn = quant.weight_quant_hard if hard else quant.weight_quant_soft
+
+    def hook(w2):
+        return fn(w2, st["s_w"], st["V"], bits_row[2], bits_row[3], knobs[K["wq_en"]])
+
+    return hook
+
+
+# ---------------------------------------------------------------------------
+# Block step program
+# ---------------------------------------------------------------------------
+
+
+def make_block_step(model: ModelDef, blk: BlockSpec):
+    """Build (fn, arg_specs, result_names) for one block's calibration step.
+
+    The returned ``fn`` takes the flat argument list in arg_specs order and
+    returns the flat result tuple. One Adam step on (V, s_a, bp) of every
+    layer in the block, minimizing block-output MSE + the AdaRound
+    regularizer (Algorithm 1 + Appendix B schedules; all schedule values
+    arrive as runtime hypers from the Rust coordinator).
+    """
+    layers = blk.all_layers()
+    shapes = model.shapes()
+    c0, h0, w0 = shapes[blk.layers[0].name]
+    # block output shape
+    hh, ww = h0, w0
+    for l in blk.layers:
+        hh, ww = l.out_hw(hh, ww)
+    oc_out = blk.layers[-1].oc
+    batch = BATCH_CALIB
+
+    args: list[ArgSpec] = []
+    for l in layers:
+        args.append(ArgSpec(f"w:{l.name}.w", l.weight_shape))
+        args.append(ArgSpec(f"w:{l.name}.b", (l.oc,)))
+    for l in layers:
+        for k, shp in layer_state_shapes(l).items():
+            args.append(ArgSpec(f"state:{l.name}.{k}", shp))
+    for l in layers:
+        for leaf in LEARNED:
+            shp = layer_state_shapes(l)[leaf]
+            args.append(ArgSpec(f"adam:{l.name}.{leaf}.m", shp))
+            args.append(ArgSpec(f"adam:{l.name}.{leaf}.v", shp))
+    args.append(ArgSpec("adam:t", ()))
+    if blk.layers[0].kind == "fc":
+        # head block: input is the (N, C, H, W) feature map pre-GAP
+        pass
+    args.append(ArgSpec("batch:x_in", (batch, c0, h0, w0)))
+    args.append(ArgSpec("batch:x_fp", (batch, c0, h0, w0)))
+    out_shape = (batch, oc_out) if blk.layers[-1].kind == "fc" else (batch, oc_out, hh, ww)
+    args.append(ArgSpec("batch:y_fp", out_shape))
+    args.append(ArgSpec("batch:mask", (batch, c0, h0, w0)))
+    args.append(ArgSpec("hyper:bits", (len(layers), 4)))
+    args.append(ArgSpec("hyper:knobs", (len(KNOBS),)))
+
+    names = [a.name for a in args]
+    idx = {n: i for i, n in enumerate(names)}
+
+    result_names = (
+        [f"state:{l.name}.{k}" for l in layers for k in LEARNED]
+        + [
+            f"adam:{l.name}.{leaf}.{mv}"
+            for l in layers
+            for leaf in LEARNED
+            for mv in ("m", "v")
+        ]
+        + ["adam:t", "out:loss"]
+    )
+
+    def fn(*flat):
+        def get(n):
+            return flat[idx[n]]
+
+        weights = {
+            l.name: {"w": get(f"w:{l.name}.w"), "b": get(f"w:{l.name}.b")} for l in layers
+        }
+        fixed_state = {
+            l.name: {k: get(f"state:{l.name}.{k}") for k in ("s_w",)} for l in layers
+        }
+        learned = {
+            l.name: {k: get(f"state:{l.name}.{k}") for k in LEARNED} for l in layers
+        }
+        knobs = get("hyper:knobs")
+        bits = get("hyper:bits")
+        x_in, x_fp = get("batch:x_in"), get("batch:x_fp")
+        y_fp, mask = get("batch:y_fp"), get("batch:mask")
+        # QDrop: elementwise substitution of FP activations at the block input
+        x_used = mask * x_fp + (1.0 - mask) * x_in
+        lidx = {l.name: i for i, l in enumerate(layers)}
+
+        def loss_fn(learned):
+            st = {
+                l.name: {**fixed_state[l.name], **learned[l.name]} for l in layers
+            }
+
+            def pf(l):
+                return _act_hook_ste(l, st[l.name], bits[lidx[l.name]], knobs)
+
+            def wf(l):
+                return _weight_hook(l, st[l.name], bits[lidx[l.name]], knobs, hard=False)
+
+            out = block_forward(blk, weights, x_used, patches_fn_for=pf, weight_fn_for=wf)
+            mse = jnp.mean((out - y_fp) ** 2)
+            reg = sum(
+                quant.freg(learned[l.name]["V"], knobs[K["beta"]]) for l in layers
+            )
+            return mse + knobs[K["lam"]] * knobs[K["wq_en"]] * reg
+
+        grads = jax.grad(loss_fn)(learned)
+        loss = loss_fn(learned)
+
+        t = get("adam:t") + 1.0
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        lrs = {"V": knobs[K["lr_v"]], "s_a": knobs[K["lr_s"]], "bp": knobs[K["lr_b"]]}
+        new_state, new_adam = [], []
+        for l in layers:
+            for leaf in LEARNED:
+                g = grads[l.name][leaf]
+                m = get(f"adam:{l.name}.{leaf}.m")
+                v = get(f"adam:{l.name}.{leaf}.v")
+                m1 = b1 * m + (1 - b1) * g
+                v1 = b2 * v + (1 - b2) * g * g
+                mh = m1 / (1 - b1**t)
+                vh = v1 / (1 - b2**t)
+                upd = learned[l.name][leaf] - lrs[leaf] * mh / (jnp.sqrt(vh) + eps)
+                new_state.append(upd)
+                new_adam.extend([m1, v1])
+        return tuple(new_state) + tuple(new_adam) + (t, loss)
+
+    return fn, args, result_names
+
+
+BATCH_CALIB = 32
+
+
+# ---------------------------------------------------------------------------
+# Forward programs
+# ---------------------------------------------------------------------------
+
+
+def make_layer_forward(model: ModelDef, l: LayerSpec, batch: int, quantized: bool):
+    """(fn, arg_specs, result_names) for a single layer forward.
+
+    Quantized version uses hard weights + the Pallas border kernel.
+    No relu is applied — the Rust coordinator owns inter-layer wiring.
+    """
+    shapes = model.shapes()
+    c, h, w = shapes[l.name]
+    args = [
+        ArgSpec(f"w:{l.name}.w", l.weight_shape),
+        ArgSpec(f"w:{l.name}.b", (l.oc,)),
+    ]
+    if quantized:
+        for k, shp in layer_state_shapes(l).items():
+            args.append(ArgSpec(f"state:{l.name}.{k}", shp))
+        args.append(ArgSpec("hyper:bits", (1, 4)))
+        args.append(ArgSpec("hyper:knobs", (len(KNOBS),)))
+    args.append(ArgSpec("batch:x", (batch, c, h, w)))
+    names = [a.name for a in args]
+    idx = {n: i for i, n in enumerate(names)}
+
+    def fn(*flat):
+        def get(n):
+            return flat[idx[n]]
+
+        x = get("batch:x")
+        pfn = wfn = None
+        if quantized:
+            st = {k: get(f"state:{l.name}.{k}") for k in layer_state_shapes(l)}
+            knobs = get("hyper:knobs")
+            bits = get("hyper:bits")
+            pfn = _act_hook_hard(l, st, bits[0], knobs)
+            wfn = _weight_hook(l, st, bits[0], knobs, hard=True)
+        out = layer_forward(
+            l, get(f"w:{l.name}.w"), get(f"w:{l.name}.b"), x,
+            patches_fn=pfn, weight_fn=wfn, apply_relu=False,
+        )
+        return (out,)
+
+    return fn, args, ["out:y"]
+
+
+def make_model_forward(model: ModelDef, batch: int, quantized: bool):
+    """(fn, arg_specs, result_names) for the whole-model forward -> logits.
+
+    This is the **request-path** program: hard quantization with the Pallas
+    border kernel in every layer (or plain FP when ``quantized=False``).
+    """
+    layers = model.all_layers()
+    args: list[ArgSpec] = []
+    for l in layers:
+        args.append(ArgSpec(f"w:{l.name}.w", l.weight_shape))
+        args.append(ArgSpec(f"w:{l.name}.b", (l.oc,)))
+    if quantized:
+        for l in layers:
+            for k, shp in layer_state_shapes(l).items():
+                args.append(ArgSpec(f"state:{l.name}.{k}", shp))
+        args.append(ArgSpec("hyper:bits", (len(layers), 4)))
+        args.append(ArgSpec("hyper:knobs", (len(KNOBS),)))
+    args.append(ArgSpec("batch:x", (batch, model.in_c, *model.in_hw)))
+    names = [a.name for a in args]
+    idx = {n: i for i, n in enumerate(names)}
+    lidx = {l.name: i for i, l in enumerate(layers)}
+
+    def fn(*flat):
+        def get(n):
+            return flat[idx[n]]
+
+        weights = {
+            l.name: {"w": get(f"w:{l.name}.w"), "b": get(f"w:{l.name}.b")} for l in layers
+        }
+        pf = wf = None
+        if quantized:
+            knobs = get("hyper:knobs")
+            bits = get("hyper:bits")
+            st = {
+                l.name: {k: get(f"state:{l.name}.{k}") for k in layer_state_shapes(l)}
+                for l in layers
+            }
+
+            def pf(l):  # noqa: F811
+                return _act_hook_hard(l, st[l.name], bits[lidx[l.name]], knobs)
+
+            def wf(l):  # noqa: F811
+                return _weight_hook(l, st[l.name], bits[lidx[l.name]], knobs, hard=True)
+
+        h = get("batch:x")
+        for blk in model.blocks:
+            h = block_forward(blk, weights, h, patches_fn_for=pf, weight_fn_for=wf)
+        return (h,)
+
+    return fn, args, ["out:logits"]

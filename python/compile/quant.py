@@ -1,0 +1,190 @@
+"""Quantization math: uniform quantizers, AdaRound soft weight rounding,
+and the paper's adaptive rounding border (AQuant).
+
+Conventions
+-----------
+* Activations are quantized on the **im2col'd patches** of each layer's
+  input — the paper's refactored quantization-node position (Appendix B):
+  layer ``l`` receives un-quantized activations and AQuant quantizes them at
+  the beginning of ``l``, so gradients of the border parameters see the
+  layer's weights.
+* The border polynomial is evaluated on ``x / s`` (activation in units of
+  the quantization step) rather than raw ``x``. This is a reparametrization
+  of the paper's ``b2 x² + b1 x + b0`` (absorb powers of ``s`` into ``b:``)
+  that keeps the parameters dimensionless and well-conditioned across
+  layers with very different dynamic ranges.
+* The border offset is bounded to (-0.5, 0.5) with a sigmoid scaled by 2.5,
+  exactly as Appendix B prescribes: ``B = 0.5 + sigmoid(2.5·u) - 0.5``.
+* Rounding is ``ceil(x/s − B)`` (Definition 2.1); with ``B = 0.5`` (all
+  border parameters zero) this is nearest rounding, so an *uncalibrated*
+  border is exactly the rounding-to-nearest baseline.
+
+All functions are pure jnp so they trace into HLO; the Pallas kernel in
+``kernels/border_quant.py`` implements the same hard forward for the
+inference path and is checked against :func:`act_quant_hard` (via
+``kernels/ref.py``) in pytest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators
+# ---------------------------------------------------------------------------
+
+
+def ceil_ste(u):
+    """Ceil with a straight-through gradient (d ceil/du ≈ 1)."""
+    return u + jax.lax.stop_gradient(jnp.ceil(u) - u)
+
+
+def floor_ste(u):
+    """Floor with a straight-through gradient."""
+    return u + jax.lax.stop_gradient(jnp.floor(u) - u)
+
+
+# ---------------------------------------------------------------------------
+# Border function (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+
+def border_offset(u):
+    """Bounded border adjustment in (-0.5, 0.5): ``sigmoid(2.5·u) − 0.5``."""
+    return jax.nn.sigmoid(2.5 * u) - 0.5
+
+
+def border_value(xs, b0, b1, b2, alpha, k2, border_en, fuse_en, b2_en):
+    """Evaluate the adaptive rounding border for im2col'd activations.
+
+    Args:
+      xs: activations in units of scale, shape ``(N, R, P)`` with
+        ``R = i_c·k²`` rows (im2col) and ``P`` output pixels.
+      b0, b1, b2, alpha: border parameters, each shape ``(R,)``.
+      k2: kernel-size² — the length of each input-channel segment of R.
+      border_en: scalar 0/1 — 0 degrades to nearest rounding (B = 0.5).
+      fuse_en: scalar 0/1 — border fusion (Eq. 9): per-input-channel
+        weighted mean of the element-wise borders.
+      b2_en: scalar 0/1 — quadratic (1) vs linear (0) border (Table 4).
+
+    Returns:
+      Border tensor broadcastable against ``xs``: ``(N, R, P)``.
+    """
+    n, r, p = xs.shape
+    u = (b2_en * b2)[None, :, None] * xs * xs + b1[None, :, None] * xs + b0[None, :, None]
+    be = 0.5 + border_en * border_offset(u)
+    # Border fusion: average α_j·B^E_j over each input channel's k² taps and
+    # share the fused value within the channel (Eq. 9).
+    seg = (alpha[None, :, None] * be).reshape(n, r // k2, k2, p)
+    fused = jnp.broadcast_to(jnp.mean(seg, axis=2, keepdims=True), seg.shape)
+    fused = fused.reshape(n, r, p)
+    return fuse_en * fused + (1.0 - fuse_en) * be
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization
+# ---------------------------------------------------------------------------
+
+
+def act_quant_hard(x, s, b0, b1, b2, alpha, k2, qmin, qmax, border_en, fuse_en, b2_en, aq_en):
+    """Hard (inference) activation fake-quant with adaptive border.
+
+    ``x`` is the im2col'd patch tensor ``(N, R, P)``. Returns the
+    dequantized tensor of the same shape. ``aq_en = 0`` bypasses
+    quantization entirely (W-only settings like W2A32).
+    """
+    xs = x / s
+    border = border_value(xs, b0, b1, b2, alpha, k2, border_en, fuse_en, b2_en)
+    q = jnp.clip(jnp.ceil(xs - border), qmin, qmax)
+    return aq_en * (s * q) + (1.0 - aq_en) * x
+
+
+def act_quant_ste(
+    x, s, b0, b1, b2, alpha, k2, qmin, qmax, border_en, fuse_en, b2_en, aq_en, alpha_round
+):
+    """Trainable activation fake-quant (STE) with the rounding schedule.
+
+    Appendix B's rounding schedule: the rounding error is introduced
+    gradually, ``x̂ = x + α_round·(quant(x) − x)`` with α_round 0 → 1 over
+    finetuning, to stop border-induced rounding flips from destabilizing
+    the optimization.
+    """
+    xs = x / s
+    border = border_value(xs, b0, b1, b2, alpha, k2, border_en, fuse_en, b2_en)
+    q = jnp.clip(ceil_ste(xs - border), qmin, qmax)
+    xq = s * q
+    xq = x + alpha_round * (xq - x)
+    return aq_en * xq + (1.0 - aq_en) * x
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (AdaRound-style soft rounding)
+# ---------------------------------------------------------------------------
+
+
+def rect_sigmoid(v):
+    """AdaRound's rectified sigmoid h(V) ∈ [0, 1]."""
+    return jnp.clip(jax.nn.sigmoid(v) * 1.2 - 0.1, 0.0, 1.0)
+
+
+def rect_sigmoid_inv(h):
+    """Inverse of :func:`rect_sigmoid` on (0, 1) — used for V init."""
+    h = jnp.clip(h, 1e-4, 1.0 - 1e-4)
+    p = (h + 0.1) / 1.2
+    return jnp.log(p / (1.0 - p))
+
+
+def weight_quant_soft(w, s_w, v, qmin, qmax, wq_en):
+    """Soft-quantized weights: ``s·clip(floor(w/s) + h(V), qmin, qmax)``."""
+    wq = s_w * jnp.clip(jnp.floor(w / s_w) + rect_sigmoid(v), qmin, qmax)
+    return wq_en * wq + (1.0 - wq_en) * w
+
+
+def weight_quant_hard(w, s_w, v, qmin, qmax, wq_en):
+    """Hard weights: the binary solution h(V) ≥ 0.5 → round up."""
+    up = (rect_sigmoid(v) >= 0.5).astype(w.dtype)
+    wq = s_w * jnp.clip(jnp.floor(w / s_w) + up, qmin, qmax)
+    return wq_en * wq + (1.0 - wq_en) * w
+
+
+def freg(v, beta):
+    """AdaRound's rounding regularizer ``Σ 1 − |2h(V) − 1|^β`` (Eq. 4 app)."""
+    return jnp.sum(1.0 - jnp.abs(2.0 * rect_sigmoid(v) - 1.0) ** beta)
+
+
+# ---------------------------------------------------------------------------
+# Scale initialization (build-time, weights only — activation scales are
+# searched by the Rust coordinator at calibration time)
+# ---------------------------------------------------------------------------
+
+
+def weight_scale_mse(w2d, bits: int, grid: int = 60):
+    """Per-output-channel symmetric scale minimizing quantization MSE.
+
+    Args:
+      w2d: weights ``(o_c, r)``.
+      bits: signed bit-width M; levels in [−2^{M−1}, 2^{M−1} − 1].
+
+    Returns:
+      scales ``(o_c, 1)``.
+    """
+    qmin = -(2 ** (bits - 1))
+    qmax = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(w2d), axis=1, keepdims=True) + 1e-12
+    best_s = absmax / qmax
+    best_err = jnp.full_like(absmax, jnp.inf)
+    for i in range(grid):
+        frac = 1.0 - 0.8 * i / grid
+        s = absmax * frac / qmax
+        q = jnp.clip(jnp.round(w2d / s), qmin, qmax)
+        err = jnp.sum((s * q - w2d) ** 2, axis=1, keepdims=True)
+        best_s = jnp.where(err < best_err, s, best_s)
+        best_err = jnp.minimum(err, best_err)
+    return best_s
+
+
+def v_init(w2d, s_w):
+    """AdaRound V init: soft quantization reproduces w exactly at start."""
+    frac = w2d / s_w - jnp.floor(w2d / s_w)
+    return rect_sigmoid_inv(frac)

@@ -1,0 +1,158 @@
+"""FP pretraining of the model zoo on the synthetic corpus.
+
+This substitutes for "download a torchvision checkpoint": PTQ needs a
+converged full-precision model, and we train one per family at build time
+(a couple of minutes each on CPU). Checkpoints are cached under
+``artifacts/ckpt/`` so `make artifacts` is incremental.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .models import ModelDef
+from .models.forward import init_params, train_forward
+
+TRAIN_SEED = 7
+
+
+def _loss_fn(model: ModelDef, params, x, y):
+    logits, stats = train_forward(model, params, x, train=True)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return loss, stats
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def _adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# BN running stats are *not* gradient-updated; mask them out of Adam.
+_TRAINABLE = ("w", "b", "gamma", "beta")
+
+
+def _split_trainable(params):
+    train = {n: {k: v for k, v in p.items() if k in _TRAINABLE} for n, p in params.items()}
+    stats = {
+        n: {k: v for k, v in p.items() if k not in _TRAINABLE} for n, p in params.items()
+    }
+    return train, stats
+
+
+def _merge(train, stats):
+    return {n: {**train[n], **stats[n]} for n in train}
+
+
+def accuracy(model: ModelDef, params, images, labels, batch: int = 256) -> float:
+    """Top-1 accuracy with running BN stats (eval mode)."""
+    hits = 0
+
+    @jax.jit
+    def fwd(x):
+        logits, _ = train_forward(model, params, x, train=False)
+        return jnp.argmax(logits, axis=1)
+
+    for i in range(0, len(labels), batch):
+        x = jnp.asarray(images[i : i + batch])
+        pred = np.asarray(fwd(x))
+        hits += int((pred == labels[i : i + batch]).sum())
+    return hits / len(labels)
+
+
+def train_model(
+    model: ModelDef,
+    splits: dict[str, data_mod.Split],
+    epochs: int = 8,
+    batch: int = 128,
+    lr: float = 2e-3,
+    verbose: bool = True,
+):
+    """Train; returns (params_with_stats, test_accuracy)."""
+    params = init_params(model, seed=TRAIN_SEED)
+    train_p, stats = _split_trainable(params)
+    opt = _adam_init(train_p)
+    tr = splits["train"]
+    rng = np.random.RandomState(11)
+
+    @jax.jit
+    def step(train_p, stats, opt, x, y, lr):
+        full = _merge(train_p, stats)
+        (loss, new_stats), grads = jax.value_and_grad(
+            lambda tp: _loss_fn(model, _merge(tp, stats), x, y), has_aux=True
+        )(train_p)
+        new_train, new_opt = _adam_update(train_p, grads, opt, lr)
+        # merge updated running stats back into the static side
+        merged_stats = {
+            n: {
+                **stats[n],
+                **(
+                    {"rmean": new_stats[n][0], "rvar": new_stats[n][1]}
+                    if n in new_stats
+                    else {}
+                ),
+            }
+            for n in stats
+        }
+        del full
+        return new_train, merged_stats, new_opt, loss
+
+    n = tr.n
+    steps_per_epoch = n // batch
+    t0 = time.time()
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        ep_loss = 0.0
+        cur_lr = lr * (0.5 ** (ep // 3))
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch : (s + 1) * batch]
+            x = jnp.asarray(tr.images[idx])
+            y = jnp.asarray(tr.labels[idx].astype(np.int32))
+            train_p, stats, opt, loss = step(train_p, stats, opt, x, y, jnp.float32(cur_lr))
+            ep_loss += float(loss)
+        if verbose:
+            print(
+                f"  [{model.name}] epoch {ep + 1}/{epochs} "
+                f"loss {ep_loss / steps_per_epoch:.4f} ({time.time() - t0:.0f}s)"
+            )
+    params = _merge(train_p, stats)
+    acc = accuracy(model, params, splits["test"].images, splits["test"].labels)
+    if verbose:
+        print(f"  [{model.name}] test accuracy {acc * 100:.2f}%")
+    return params, acc
+
+
+def save_ckpt(path: str, params) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    flat = {}
+    for lname, p in params.items():
+        for k, v in p.items():
+            flat[f"{lname}/{k}"] = np.asarray(v)
+    np.savez(path, **flat)
+
+
+def load_ckpt(path: str):
+    z = np.load(path)
+    params: dict = {}
+    for key in z.files:
+        lname, k = key.rsplit("/", 1)
+        params.setdefault(lname, {})[k] = jnp.asarray(z[key])
+    return params

@@ -1,0 +1,7 @@
+"""Make the `compile` package importable regardless of pytest's cwd
+(repo root or python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

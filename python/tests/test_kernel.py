@@ -1,0 +1,132 @@
+"""L1 correctness: the Pallas fused border-quantization kernel against the
+pure-jnp oracle, swept over shapes and parameter regimes with hypothesis.
+This is the CORE correctness signal for the inference path."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.border_quant import border_quant_pallas, make_scalars
+from compile.kernels.ref import border_quant_ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def run_both(x, params, scalars, k2, tile_p=64):
+    got = border_quant_pallas(
+        jnp.asarray(x), jnp.asarray(params), jnp.asarray(scalars), k2, tile_p=tile_p
+    )
+    want = border_quant_ref(
+        jnp.asarray(x), jnp.asarray(params), jnp.asarray(scalars), k2
+    )
+    return np.asarray(got), np.asarray(want)
+
+
+@given(
+    n=st.integers(1, 3),
+    ic=st.integers(1, 6),
+    k=st.sampled_from([1, 3]),
+    p=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+    border_en=st.booleans(),
+    fuse_en=st.booleans(),
+    b2_en=st.booleans(),
+)
+def test_kernel_matches_ref(n, ic, k, p, seed, border_en, fuse_en, b2_en):
+    rng = np.random.RandomState(seed % 100000)
+    k2 = k * k
+    r = ic * k2
+    x = rng.randn(n, r, p).astype(np.float32) * 2.0
+    params = (rng.randn(r, 4) * 0.5).astype(np.float32)
+    scalars = make_scalars(
+        s=0.17, qmin=0.0, qmax=15.0,
+        border_en=float(border_en), fuse_en=float(fuse_en),
+        b2_en=float(b2_en), aq_en=1.0,
+    )
+    got, want = run_both(x, params, scalars, k2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    p=st.integers(1, 200),
+    tile=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_tile_invariance(p, tile, seed):
+    """Result must not depend on the tile size (padding is masked off)."""
+    rng = np.random.RandomState(seed)
+    r, k2 = 18, 9
+    x = rng.randn(2, r, p).astype(np.float32)
+    params = (rng.randn(r, 4) * 0.3).astype(np.float32)
+    scalars = make_scalars(0.1, 0.0, 7.0)
+    a, _ = run_both(x, params, scalars, k2, tile_p=tile)
+    b, _ = run_both(x, params, scalars, k2, tile_p=257)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_zero_params_is_nearest_rounding():
+    """All-zero border params + border_en must equal nearest rounding."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(2, 9, 33).astype(np.float32)
+    params = np.zeros((9, 4), np.float32)
+    params[:, 3] = 1.0  # alpha
+    s = 0.2
+    for flags in [(1.0, 1.0, 1.0), (0.0, 0.0, 0.0), (1.0, 0.0, 1.0)]:
+        scalars = make_scalars(s, 0.0, 15.0, *flags)
+        got, _ = run_both(x, params, scalars, 9)
+        want = s * np.clip(np.ceil(x / s - 0.5), 0.0, 15.0)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_aq_disabled_is_identity():
+    rng = np.random.RandomState(1)
+    x = rng.randn(1, 12, 10).astype(np.float32)
+    params = (rng.randn(12, 4) * 0.5).astype(np.float32)
+    scalars = make_scalars(0.3, 0.0, 3.0, aq_en=0.0)
+    got, _ = run_both(x, params, scalars, 4)
+    np.testing.assert_allclose(got, x, atol=1e-7)
+
+
+def test_output_on_quant_grid():
+    """Quantized outputs must be multiples of s within [qmin, qmax]·s."""
+    rng = np.random.RandomState(2)
+    x = (rng.randn(2, 27, 21) * 3).astype(np.float32)
+    params = (rng.randn(27, 4) * 0.4).astype(np.float32)
+    s = 0.25
+    scalars = make_scalars(s, 0.0, 15.0)
+    got, _ = run_both(x, params, scalars, 9)
+    codes = got / s
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+    assert codes.min() >= -1e-4 and codes.max() <= 15.0 + 1e-4
+
+
+def test_fusion_shares_border_within_channel():
+    """With fusion, all k² taps of an input channel share one border, so
+    equal inputs in a channel quantize identically."""
+    rng = np.random.RandomState(3)
+    ic, k2, p = 3, 9, 5
+    r = ic * k2
+    # same value within each channel segment
+    base = rng.rand(1, ic, 1, p).astype(np.float32) * 2
+    x = np.broadcast_to(base, (1, ic, k2, p)).reshape(1, r, p).copy()
+    params = (rng.randn(r, 4) * 0.5).astype(np.float32)
+    scalars = make_scalars(0.11, 0.0, 15.0, fuse_en=1.0)
+    got, _ = run_both(x, params, scalars, k2)
+    got = got.reshape(1, ic, k2, p)
+    for c in range(ic):
+        for j in range(1, k2):
+            np.testing.assert_array_equal(got[0, c, 0], got[0, c, j])
+
+
+def test_rejects_bad_segments():
+    x = jnp.zeros((1, 10, 4))
+    params = jnp.zeros((10, 4))
+    with pytest.raises(ValueError):
+        border_quant_pallas(x, params, make_scalars(1.0, 0.0, 3.0), k2=3)

@@ -1,0 +1,91 @@
+"""Producer-side contract checks on artifacts/manifest.json (skipped when
+artifacts have not been built). The Rust consumer trusts exactly these
+invariants."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_every_program_file_exists(manifest):
+    for name, p in manifest["programs"].items():
+        path = os.path.join(ART, p["path"])
+        assert os.path.exists(path), f"{name}: missing {p['path']}"
+        assert os.path.getsize(path) > 100
+
+
+def test_arg_roles_are_known(manifest):
+    roles = {"w", "state", "adam", "batch", "hyper"}
+    for name, p in manifest["programs"].items():
+        for a in p["args"]:
+            role = a["name"].split(":")[0]
+            assert role in roles, f"{name}: bad arg {a['name']}"
+            assert isinstance(a["shape"], list)
+            assert a["dtype"] == "f32"
+
+
+def test_step_programs_return_their_state(manifest):
+    """Every step program's state/adam results must be a subset of its
+    args with identical shapes (the coordinator writes back by name)."""
+    for name, p in manifest["programs"].items():
+        if not name.startswith("step_"):
+            continue
+        args = {a["name"]: a["shape"] for a in p["args"]}
+        losses = 0
+        for r in p["results"]:
+            if r["name"] == "out:loss":
+                losses += 1
+                assert r["shape"] == []
+                continue
+            assert r["name"] in args, f"{name}: result {r['name']} not an arg"
+            assert r["shape"] == args[r["name"]], f"{name}: shape drift {r['name']}"
+        assert losses == 1
+
+
+def test_knobs_convention_matches_ptq(manifest):
+    from compile import ptq
+
+    assert manifest["meta"]["knobs"] == ptq.KNOBS
+    for name, p in manifest["programs"].items():
+        for a in p["args"]:
+            if a["name"] == "hyper:knobs":
+                assert a["shape"] == [len(ptq.KNOBS)], name
+
+
+def test_models_meta_consistent_with_zoo(manifest):
+    from compile.models import MODELS
+
+    meta = manifest["meta"]["models"]
+    assert set(meta) <= set(MODELS)
+    for name, m in meta.items():
+        model = MODELS[name]
+        flat = [l for b in m["blocks"] for l in b["layers"]]
+        assert len(flat) == len(model.all_layers())
+        for lm, l in zip(flat, model.all_layers()):
+            assert lm["name"] == l.name
+            assert lm["rows"] == l.rows
+            assert tuple(lm["in_chw"])[0] == l.ic
+
+
+def test_weight_files_have_exact_sizes(manifest):
+    for model, layers in manifest["meta"]["weights"].items():
+        for lname, m in layers.items():
+            w = os.path.join(ART, m["w"])
+            n = 1
+            for d in m["w_shape"]:
+                n *= d
+            assert os.path.getsize(w) == 4 * n, f"{model}/{lname}"

@@ -1,0 +1,152 @@
+"""Model math: im2col-matmul forward == lax.conv, BN folding, block/step
+builders, and the data generator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from compile import data as data_mod
+from compile import ptq
+from compile.models import MODELS
+from compile.models.defs import BlockSpec, LayerSpec
+from compile.models.forward import (
+    extract_patches,
+    fold_bn,
+    init_params,
+    layer_forward,
+    model_forward,
+    train_forward,
+)
+
+
+@pytest.mark.parametrize("groups,k,stride", [(1, 3, 1), (1, 3, 2), (4, 3, 1), (8, 3, 2), (1, 1, 1)])
+def test_patches_matmul_matches_lax_conv(groups, k, stride):
+    rng = np.random.RandomState(0)
+    ic, oc, h = 8, 8, 10
+    l = LayerSpec(
+        name="t", kind="conv", ic=ic, oc=oc, k=k, stride=stride,
+        pad=k // 2, groups=groups, relu=False,
+    )
+    x = jnp.asarray(rng.randn(2, ic, h, h), jnp.float32)
+    w4 = jnp.asarray(rng.randn(oc, ic // groups, k, k), jnp.float32)
+    b = jnp.asarray(rng.randn(oc), jnp.float32)
+    ref = lax.conv_general_dilated(
+        x, w4, (stride, stride), [(k // 2, k // 2)] * 2, feature_group_count=groups
+    ) + b[None, :, None, None]
+    got = layer_forward(l, w4.reshape(oc, -1), b, x, apply_relu=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_folded_forward_matches_eval_bn(name):
+    model = MODELS[name]
+    params = init_params(model, 3)
+    # make running stats non-trivial
+    for l in model.all_layers():
+        rng = np.random.RandomState(hash(l.name) % 1000)
+        params[l.name]["rmean"] = jnp.asarray(rng.randn(l.oc) * 0.1, jnp.float32)
+        params[l.name]["rvar"] = jnp.asarray(1.0 + rng.rand(l.oc), jnp.float32)
+    x = jnp.asarray(np.random.RandomState(0).randn(2, model.in_c, *model.in_hw), jnp.float32)
+    ref, _ = train_forward(model, params, x, train=False)
+    folded = fold_bn(model, params)
+    got = model_forward(model, folded, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_patches_shape_and_rows_order():
+    l = LayerSpec(name="t", kind="conv", ic=2, oc=2, k=3, stride=1, pad=1)
+    x = jnp.arange(2 * 4 * 4, dtype=jnp.float32).reshape(1, 2, 4, 4)
+    pm = extract_patches(l, x)
+    assert pm.shape == (1, 18, 16)
+    # channel-major rows: row c*9+4 (center tap) at pixel p equals x[c, p]
+    for c in range(2):
+        np.testing.assert_allclose(
+            np.asarray(pm[0, c * 9 + 4, :]), np.asarray(x[0, c].reshape(-1))
+        )
+
+
+def test_block_step_improves_loss():
+    """A few optimizer steps on a single-layer block must reduce the
+    reconstruction MSE (end-to-end sanity of the step builder)."""
+    model = MODELS["mobiles"]
+    blk = model.blocks[0]  # stem
+    fn, args, res_names = ptq.make_block_step(model, blk)
+    jfn = jax.jit(fn)
+    rng = np.random.RandomState(0)
+
+    vals = {}
+    l = blk.layers[0]
+    w = rng.randn(*l.weight_shape).astype(np.float32) * 0.3
+    vals[f"w:{l.name}.w"] = w
+    vals[f"w:{l.name}.b"] = np.zeros(l.oc, np.float32)
+    from compile import quant
+
+    s_w = np.asarray(quant.weight_scale_mse(jnp.asarray(w), 4))
+    vals[f"state:{l.name}.V"] = np.asarray(quant.v_init(jnp.asarray(w), jnp.asarray(s_w)))
+    vals[f"state:{l.name}.s_w"] = s_w
+    vals[f"state:{l.name}.s_a"] = np.float32(0.05)
+    bp = np.zeros((l.rows, 4), np.float32)
+    bp[:, 3] = 1.0
+    vals[f"state:{l.name}.bp"] = bp
+    for leaf in ("V", "s_a", "bp"):
+        shp = ptq.layer_state_shapes(l)[leaf]
+        vals[f"adam:{l.name}.{leaf}.m"] = np.zeros(shp, np.float32)
+        vals[f"adam:{l.name}.{leaf}.v"] = np.zeros(shp, np.float32)
+    vals["adam:t"] = np.float32(0)
+    b = ptq.BATCH_CALIB
+    x = (rng.rand(b, l.ic, 24, 24) * 2).astype(np.float32)
+    vals["batch:x_in"] = x
+    vals["batch:x_fp"] = x
+    # FP target
+    y = layer_forward(
+        l, jnp.asarray(w), jnp.zeros(l.oc), jnp.asarray(x), apply_relu=True
+    )
+    vals["batch:y_fp"] = np.asarray(y)
+    vals["batch:mask"] = np.zeros_like(x)
+    vals["hyper:bits"] = np.asarray([[-8.0, 7.0, -8.0, 7.0]], np.float32)
+    knobs = np.zeros(len(ptq.KNOBS), np.float32)
+    knobs[ptq.K["lr_v"]] = 3e-3
+    knobs[ptq.K["lr_s"]] = 4e-5
+    knobs[ptq.K["lr_b"]] = 1e-3
+    knobs[ptq.K["alpha_round"]] = 1.0
+    knobs[ptq.K["beta"]] = 20.0
+    knobs[ptq.K["lam"]] = 0.0
+    for k in ("wq_en", "aq_en", "border_en", "fuse_en", "b2_en"):
+        knobs[ptq.K[k]] = 1.0
+    vals["hyper:knobs"] = knobs
+
+    flat = [jnp.asarray(vals[a.name]) for a in args]
+    losses = []
+    for _ in range(60):
+        outs = jfn(*flat)
+        by_name = dict(zip(res_names, outs))
+        losses.append(float(by_name["out:loss"]))
+        for i, a in enumerate(args):
+            if a.name in by_name:
+                flat[i] = by_name[a.name]
+    assert losses[-1] < losses[0] * 0.98, f"loss did not improve: {losses[0]} -> {losses[-1]}"
+
+
+def test_data_deterministic_and_balanced():
+    a = data_mod.generate(64, 42)
+    b = data_mod.generate(64, 42)
+    np.testing.assert_array_equal(a.images, b.images)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    c = data_mod.generate(64, 43)
+    assert not np.array_equal(a.images, c.images)
+    big = data_mod.generate(2000, 7)
+    counts = np.bincount(big.labels, minlength=data_mod.N_CLASSES)
+    assert counts.min() > 0.4 * counts.mean()
+
+
+def test_model_shapes_consistent():
+    for model in MODELS.values():
+        shapes = model.shapes()
+        for blk in model.blocks:
+            for l in blk.all_layers():
+                c, h, w = shapes[l.name]
+                assert c == l.ic, f"{model.name}/{l.name}"
+                ho, wo = l.out_hw(h, w)
+                assert ho > 0 and wo > 0

@@ -1,0 +1,134 @@
+"""L2 quantization math: STE forwards, soft/hard weight rounding, scale
+search, border properties."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import quant
+
+
+def test_nearest_border_at_zero_params():
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 9, 5), jnp.float32)
+    b = quant.border_value(
+        x, jnp.zeros(9), jnp.zeros(9), jnp.zeros(9), jnp.ones(9), 9, 1.0, 1.0, 1.0
+    )
+    np.testing.assert_allclose(np.asarray(b), 0.5, atol=1e-7)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(deadline=None, max_examples=20)
+def test_hard_equals_ste_at_alpha1(seed):
+    """At α_round = 1 the STE forward equals the hard forward."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, 12, 7) * 2, jnp.float32)
+    args = dict(
+        s=0.21,
+        b0=jnp.asarray(rng.randn(12) * 0.3, jnp.float32),
+        b1=jnp.asarray(rng.randn(12) * 0.3, jnp.float32),
+        b2=jnp.asarray(rng.randn(12) * 0.3, jnp.float32),
+        alpha=jnp.ones(12),
+        k2=4,
+        qmin=0.0,
+        qmax=15.0,
+        border_en=1.0,
+        fuse_en=1.0,
+        b2_en=1.0,
+        aq_en=1.0,
+    )
+    hard = quant.act_quant_hard(x, **{k: v for k, v in args.items()})
+    ste = quant.act_quant_ste(x, **args, alpha_round=1.0)
+    np.testing.assert_allclose(np.asarray(hard), np.asarray(ste), atol=1e-6)
+
+
+def test_rounding_schedule_blends():
+    x = jnp.asarray(np.random.RandomState(1).randn(1, 4, 3), jnp.float32)
+    kw = dict(
+        s=0.3, b0=jnp.zeros(4), b1=jnp.zeros(4), b2=jnp.zeros(4),
+        alpha=jnp.ones(4), k2=2, qmin=0.0, qmax=3.0,
+        border_en=0.0, fuse_en=0.0, b2_en=0.0, aq_en=1.0,
+    )
+    at0 = quant.act_quant_ste(x, **kw, alpha_round=0.0)
+    at1 = quant.act_quant_ste(x, **kw, alpha_round=1.0)
+    athalf = quant.act_quant_ste(x, **kw, alpha_round=0.5)
+    np.testing.assert_allclose(np.asarray(at0), np.asarray(x), atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(athalf), 0.5 * np.asarray(x) + 0.5 * np.asarray(at1), atol=1e-6
+    )
+
+
+def test_border_params_receive_gradients():
+    """The refactored quantization position must backprop into b: and s."""
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.rand(1, 6, 4) * 3, jnp.float32)
+    w = jnp.asarray(rng.randn(5, 6), jnp.float32)
+
+    def loss(b0, b1, s):
+        q = quant.act_quant_ste(
+            x, s, b0, b1, jnp.zeros(6), jnp.ones(6), 3, 0.0, 15.0,
+            1.0, 1.0, 1.0, 1.0, 1.0,
+        )
+        y = jnp.einsum("or,nrp->nop", w, q)
+        return jnp.sum(y * y)
+
+    g0, g1, gs = jax.grad(loss, argnums=(0, 1, 2))(
+        jnp.zeros(6), jnp.zeros(6), jnp.asarray(0.2)
+    )
+    assert float(jnp.abs(g0).sum()) > 0
+    assert float(jnp.abs(g1).sum()) > 0
+    assert float(jnp.abs(gs)) > 0
+
+
+@given(seed=st.integers(0, 500), bits=st.sampled_from([2, 3, 4, 8]))
+@settings(deadline=None, max_examples=20)
+def test_v_init_reproduces_weights(seed, bits):
+    """Soft quantization at V init must reproduce the FP weights exactly
+    (AdaRound's starting point)."""
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(4, 10) * 0.5, jnp.float32)
+    s = quant.weight_scale_mse(w, bits)
+    v = quant.v_init(w, s)
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    soft = quant.weight_quant_soft(w, s, v, qmin, qmax, 1.0)
+    # exact only when the weight is representable in range; allow the
+    # clipped tail to deviate
+    clipped = np.abs(np.asarray(w / s)) > (qmax - 1)
+    diff = np.abs(np.asarray(soft - w))
+    if (~clipped).any():
+        assert diff[~clipped].max() < 2e-3
+
+
+def test_hard_weights_on_grid():
+    rng = np.random.RandomState(3)
+    w = jnp.asarray(rng.randn(3, 8), jnp.float32)
+    s = quant.weight_scale_mse(w, 2)
+    v = quant.v_init(w, s)
+    hard = quant.weight_quant_hard(w, s, v, -2.0, 1.0, 1.0)
+    codes = np.asarray(hard / s)
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+    assert codes.min() >= -2.0 - 1e-5 and codes.max() <= 1.0 + 1e-5
+
+
+def test_weight_scale_beats_absmax():
+    rng = np.random.RandomState(4)
+    w = jnp.asarray(
+        np.concatenate([rng.randn(1, 63) * 0.1, [[4.0]]], axis=1), jnp.float32
+    )
+    s_opt = quant.weight_scale_mse(w, 4)
+    qmin, qmax = -8, 7
+    s_naive = jnp.max(jnp.abs(w), axis=1, keepdims=True) / qmax
+
+    def mse(s):
+        q = jnp.clip(jnp.round(w / s), qmin, qmax)
+        return float(jnp.sum((s * q - w) ** 2))
+
+    assert mse(s_opt) <= mse(s_naive) + 1e-7
+
+
+def test_freg_converges_to_zero_at_binary():
+    v = jnp.asarray([[-20.0, 20.0]])
+    assert float(quant.freg(v, 2.0)) < 1e-6
+    v_mid = jnp.asarray([[0.0]])
+    assert float(quant.freg(v_mid, 2.0)) > 0.9

@@ -1,0 +1,53 @@
+//! Calibration-loop benches: the full-model quantized forward and the
+//! per-layer quantized forward (the PJRT hot paths bounding every
+//! accuracy table's wall-clock).
+
+use aquant::config::{Bits, Method, RunConfig};
+use aquant::coordinator::chain::QuantCtx;
+use aquant::coordinator::state::Knobs;
+use aquant::exp::cell::Ctx;
+use aquant::quant::tensor::Tensor;
+use aquant::util::bench::{bench, default_budget};
+
+fn main() {
+    let Ok(ctx) = Ctx::new("artifacts", Some(2)) else {
+        eprintln!("calib_step: artifacts/ missing — run `make artifacts` first. Skipping.");
+        return;
+    };
+    let budget = default_budget();
+    let model = "mobiles".to_string();
+    let bits = Bits { w: 2, a: 2 };
+    let cfg = RunConfig::new(&model, Method::AQuant, bits);
+    let st = ctx.calibrated_state(&cfg).expect("calibrate");
+    let chain = ctx.chain(&model).expect("chain");
+    let b = chain.batch;
+    let d = &ctx.dataset.calib;
+    let idx: Vec<usize> = (0..b).collect();
+    let x = Tensor::new(vec![b, d.c, d.h, d.w], d.gather(&idx)).unwrap();
+
+    let q = QuantCtx {
+        state: &st,
+        bits,
+        knobs: Knobs::inference(Method::AQuant, bits),
+    };
+    // warm the executable cache
+    let _ = chain.full(&x, Some(&q)).unwrap();
+    let r = bench("q_full/batch32 (pallas border kernel)", budget, || {
+        let _ = chain.full(&x, Some(&q)).unwrap();
+    });
+    println!("{}", r.row());
+    let _ = chain.full(&x, None).unwrap();
+    let r = bench("fp_full/batch32", budget, || {
+        let _ = chain.full(&x, None).unwrap();
+    });
+    println!("{}", r.row());
+    let topo = ctx.topo(&model).unwrap();
+    let l = &topo.blocks[1].layers[0];
+    let tap = chain.walk(&x, None).unwrap();
+    let lx = tap.taps.get(&l.name).unwrap().clone();
+    let _ = chain.q_layer(l, &lx, &q).unwrap();
+    let r = bench("q_layer/batch32", budget, || {
+        let _ = chain.q_layer(l, &lx, &q).unwrap();
+    });
+    println!("{}", r.row());
+}

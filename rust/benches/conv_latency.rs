@@ -1,0 +1,54 @@
+//! Figure 3 bench: per-model conv latency with the border function
+//! original (no act quant) vs fused into im2col vs unfused (second pass).
+//!
+//! Uses the in-tree harness (criterion is unavailable offline); run with
+//! `cargo bench --offline` after `make artifacts`.
+
+use aquant::config::Bits;
+use aquant::coordinator::state::bits_row_for;
+use aquant::exp::cell::Ctx;
+use aquant::nn::engine::{ActQuant, Engine, FusionMode};
+use aquant::quant::border::BorderFn;
+use aquant::util::bench::{bench, default_budget};
+
+fn main() {
+    let Ok(ctx) = Ctx::new("artifacts", None) else {
+        eprintln!("conv_latency: artifacts/ missing — run `make artifacts` first. Skipping.");
+        return;
+    };
+    let budget = default_budget();
+    let bits = Bits { w: 32, a: 4 };
+    println!("Figure 3 latency bench (per-image forward, µs)");
+    for model in ctx.models() {
+        let topo = ctx.topo(&model).unwrap().clone();
+        let weights = ctx.weights(&model).unwrap().clone();
+        let image = ctx.dataset.test.image(0).to_vec();
+        for (label, mode) in [
+            ("original", None),
+            ("fused", Some(FusionMode::Fused)),
+            ("unfused", Some(FusionMode::Unfused)),
+        ] {
+            let mut eng = Engine::new(topo.clone(), weights.clone());
+            if let Some(m) = mode {
+                eng.fusion = m;
+                for l in topo.all_layers() {
+                    let row = bits_row_for(&topo, bits, &l.name);
+                    let params = vec![0.05f32; l.rows * 4];
+                    eng.set_act_quant(
+                        &l.name,
+                        ActQuant::Border {
+                            border: BorderFn::from_params(params, l.k2(), true, true),
+                            s: 0.05,
+                            qmin: row.qmin_a,
+                            qmax: row.qmax_a,
+                        },
+                    );
+                }
+            }
+            let r = bench(&format!("{model}/forward/{label}"), budget, || {
+                let _ = eng.forward(&image, None).unwrap();
+            });
+            println!("{}", r.row());
+        }
+    }
+}

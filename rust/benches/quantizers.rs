@@ -1,0 +1,54 @@
+//! Micro-benchmarks of the quantization substrate: nearest rounding,
+//! border-function evaluation (element-wise / fused / quadratic), the
+//! A-rounding flip algorithm (Table 1's "impractical" scheme — measured
+//! here to substantiate that claim), and activation scale search.
+
+use aquant::quant::arounding::around_column;
+use aquant::quant::border::BorderFn;
+use aquant::quant::scale_search::search_scale;
+use aquant::util::bench::{bench, default_budget};
+use aquant::util::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    let mut rng = Rng::new(42);
+    let rows = 32 * 9; // a typical mid-layer im2col column
+    let k2 = 9;
+    let col: Vec<f32> = (0..rows).map(|_| rng.range_f32(0.0, 3.0)).collect();
+    let params: Vec<f32> = (0..rows * 4).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+
+    println!("quantizer micro-benches (one {rows}-row im2col column)");
+    let nearest = BorderFn::nearest(rows, k2);
+    let mut scratch = Vec::new();
+    let mut buf = col.clone();
+    let r = bench("nearest/column", budget, || {
+        buf.copy_from_slice(&col);
+        nearest.quant_column(&mut buf, 0.1, 0.0, 15.0, &mut scratch);
+    });
+    println!("{}", r.row());
+
+    for (label, fuse, b2) in [
+        ("border-elem-linear", false, false),
+        ("border-elem-quadratic", false, true),
+        ("border-fused-quadratic", true, true),
+    ] {
+        let b = BorderFn::from_params(params.clone(), k2, fuse, b2);
+        let r = bench(&format!("{label}/column"), budget, || {
+            buf.copy_from_slice(&col);
+            b.quant_column(&mut buf, 0.1, 0.0, 15.0, &mut scratch);
+        });
+        println!("{}", r.row());
+    }
+
+    let r = bench("arounding/column", budget, || {
+        buf.copy_from_slice(&col);
+        around_column(&mut buf, 0.1, 0.0, 15.0, k2);
+    });
+    println!("{}", r.row());
+
+    let sample: Vec<f32> = (0..4096).map(|_| rng.range_f32(0.0, 4.0)).collect();
+    let r = bench("scale-search/4096x60", budget, || {
+        let _ = search_scale(&sample, 0.0, 15.0, 60);
+    });
+    println!("{}", r.row());
+}

@@ -1,0 +1,76 @@
+//! Smoke test for the AOT chain: load the prototype calibration step
+//! (fwd + bwd + Adam, with a Pallas fake-quant kernel inside) lowered by
+//! /tmp/proto_gen.py, execute it on the PJRT CPU client, and print results.
+//!
+//! Usage: smoke_aot [path/to/step.hlo.txt]
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let path = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "/tmp/proto_step.hlo.txt".to_string());
+    if !std::path::Path::new(&path).exists() {
+        eprintln!(
+            "smoke_aot: {path} not found — generate it with `python scripts/proto_gen.py` \
+             (see DESIGN.md §6); skipping."
+        );
+        return Ok(());
+    }
+    let rt_dir = std::path::Path::new(&path).parent().unwrap().to_path_buf();
+    let rt = aquant::runtime::Runtime::new(&rt_dir)?;
+    println!("platform={}", rt.platform());
+    let exe = rt.compile_file("proto_step", std::path::Path::new(&path), 6)?;
+
+    // Same inputs as proto_gen.py (seed 0 via numpy is replicated there; it
+    // dumped the concatenated inputs to /tmp/proto_inputs.npy — but for the
+    // smoke we just re-derive the deterministic parts and check the border
+    // update magnitude).
+    let (n, d, o) = (4usize, 3usize, 2usize);
+    let raw = std::fs::read("/tmp/proto_inputs.npy")?;
+    // .npy v1 header: 128-byte aligned; find data offset
+    let hlen = u16::from_le_bytes([raw[8], raw[9]]) as usize;
+    let data = &raw[10 + hlen..];
+    let f: Vec<f32> = data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut off = 0usize;
+    let mut take = |k: usize| {
+        let s = f[off..off + k].to_vec();
+        off += k;
+        s
+    };
+    let w = take(d * o);
+    let b = take(n * o);
+    let m = take(n * o);
+    let v = take(n * o);
+    let t = take(1);
+    let x = take(n * d);
+    let y = take(n * o);
+    let lr = take(1);
+
+    use aquant::runtime::literal_f32 as lf;
+    let args = vec![
+        lf(&w, &[d as i64, o as i64])?,
+        lf(&b, &[n as i64, o as i64])?,
+        lf(&m, &[n as i64, o as i64])?,
+        lf(&v, &[n as i64, o as i64])?,
+        xla::Literal::scalar(t[0]),
+        lf(&x, &[n as i64, d as i64])?,
+        lf(&y, &[n as i64, o as i64])?,
+        xla::Literal::scalar(lr[0]),
+    ];
+    let outs = exe.run(&args)?;
+    println!("n_results={}", outs.len());
+    let w1 = outs[0].to_vec::<f32>()?;
+    let b1 = outs[1].to_vec::<f32>()?;
+    let loss = outs[5].to_vec::<f32>()?;
+    println!("loss={} b1[0]={} w1[0]={}", loss[0], b1[0], w1[0]);
+    // values printed by proto_gen.py:
+    assert!((loss[0] - 1.7301981449127197).abs() < 1e-5, "loss mismatch");
+    assert!((b1[0] - 0.5099999308586121).abs() < 1e-6, "border mismatch");
+    assert!((w1[0] - 1.7580479383468628).abs() < 1e-5, "weight mismatch");
+    println!("smoke_aot OK");
+    Ok(())
+}

@@ -1,0 +1,298 @@
+//! Quantization run configuration: method × bit-width → per-layer bit
+//! policy and calibration hyper-parameters (the paper's §5 experimental
+//! setup, expressed as data).
+
+use anyhow::{bail, Result};
+
+/// PTQ method under evaluation. `Nearest` is the "Rounding" row of the
+/// paper's tables; the rest map 1:1 onto the compared methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Rounding-to-nearest, MSE-searched scales, no calibration.
+    Nearest,
+    /// AdaRound: per-layer weight-rounding reconstruction.
+    AdaRound,
+    /// BRECQ: block-wise weight-rounding + learned activation step size.
+    Brecq,
+    /// QDrop: BRECQ + random dropping of block-input quantization.
+    QDrop,
+    /// AQuant: QDrop-style dropping + the adaptive rounding border.
+    AQuant,
+    /// Ablation: linear border (b2 disabled). Table 4.
+    AQuantLinear,
+    /// Ablation: element-wise border only (fusion disabled). Table 4.
+    AQuantNoFusion,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "nearest" | "rounding" => Method::Nearest,
+            "adaround" => Method::AdaRound,
+            "brecq" => Method::Brecq,
+            "qdrop" => Method::QDrop,
+            "aquant" => Method::AQuant,
+            "aquant-linear" => Method::AQuantLinear,
+            "aquant-nofusion" => Method::AQuantNoFusion,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Nearest => "nearest",
+            Method::AdaRound => "adaround",
+            Method::Brecq => "brecq",
+            Method::QDrop => "qdrop",
+            Method::AQuant => "aquant",
+            Method::AQuantLinear => "aquant-linear",
+            Method::AQuantNoFusion => "aquant-nofusion",
+        }
+    }
+
+    /// Does this method learn an adaptive border?
+    pub fn uses_border(&self) -> bool {
+        matches!(
+            self,
+            Method::AQuant | Method::AQuantLinear | Method::AQuantNoFusion
+        )
+    }
+
+    /// Reconstruction granularity: layer-wise (AdaRound) or block-wise.
+    pub fn layer_wise(&self) -> bool {
+        matches!(self, Method::AdaRound)
+    }
+
+    /// QDrop-style block-input drop probability.
+    pub fn drop_prob(&self) -> f32 {
+        match self {
+            Method::QDrop | Method::AQuant | Method::AQuantLinear | Method::AQuantNoFusion => 0.5,
+            _ => 0.0,
+        }
+    }
+
+    /// Requires any calibration at all?
+    pub fn calibrates(&self) -> bool {
+        !matches!(self, Method::Nearest)
+    }
+
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Nearest,
+            Method::AdaRound,
+            Method::Brecq,
+            Method::QDrop,
+            Method::AQuant,
+            Method::AQuantLinear,
+            Method::AQuantNoFusion,
+        ]
+    }
+}
+
+/// Bit-width setting, e.g. W2A2 or W32A4 (32 = keep full precision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bits {
+    pub w: u32,
+    pub a: u32,
+}
+
+impl Bits {
+    pub fn parse(s: &str) -> Result<Bits> {
+        let s = s.to_ascii_uppercase();
+        let Some(rest) = s.strip_prefix('W') else {
+            bail!("bits spec must look like W4A4, got {s:?}")
+        };
+        let Some((w, a)) = rest.split_once('A') else {
+            bail!("bits spec must look like W4A4, got {s:?}")
+        };
+        Ok(Bits {
+            w: w.parse()?,
+            a: a.parse()?,
+        })
+    }
+
+    pub fn name(&self) -> String {
+        format!("W{}A{}", self.w, self.a)
+    }
+
+    pub fn w_quantized(&self) -> bool {
+        self.w < 32
+    }
+
+    pub fn a_quantized(&self) -> bool {
+        self.a < 32
+    }
+}
+
+/// Per-layer integer ranges fed to the HLO programs as the `hyper:bits`
+/// rows [qmin_a, qmax_a, qmin_w, qmax_w].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BitsRow {
+    pub qmin_a: f32,
+    pub qmax_a: f32,
+    pub qmin_w: f32,
+    pub qmax_w: f32,
+    /// Which qinit directory (wbits) this layer's scales come from.
+    pub w_init_bits: u32,
+}
+
+impl BitsRow {
+    /// Flat [qmin_a, qmax_a, qmin_w, qmax_w] as fed to HLO.
+    pub fn as_row(&self) -> [f32; 4] {
+        [self.qmin_a, self.qmax_a, self.qmin_w, self.qmax_w]
+    }
+}
+
+/// The paper keeps the first and last layer at 8 bits (Appendix C).
+pub fn layer_bits(bits: Bits, is_first: bool, is_last: bool, signed_act: bool) -> BitsRow {
+    let ab = if bits.a >= 32 {
+        8 // unused when aq_en = 0
+    } else if is_first || is_last {
+        8
+    } else {
+        bits.a
+    };
+    let wb = if bits.w >= 32 {
+        8 // unused when wq_en = 0
+    } else if is_first || is_last {
+        8
+    } else {
+        bits.w
+    };
+    let (qmin_a, qmax_a) = if signed_act {
+        (-(2f32.powi(ab as i32 - 1)), 2f32.powi(ab as i32 - 1) - 1.0)
+    } else {
+        (0.0, 2f32.powi(ab as i32) - 1.0)
+    };
+    let qmin_w = -(2f32.powi(wb as i32 - 1));
+    let qmax_w = 2f32.powi(wb as i32 - 1) - 1.0;
+    BitsRow {
+        qmin_a,
+        qmax_a,
+        qmin_w,
+        qmax_w,
+        w_init_bits: wb,
+    }
+}
+
+/// Calibration hyper-parameters (Appendix B/C defaults, iteration count
+/// scaled to this testbed — the paper uses 20k iterations on ImageNet).
+#[derive(Debug, Clone)]
+pub struct CalibConfig {
+    pub iters: u32,
+    pub batch: usize,
+    pub lr_v: f32,
+    pub lr_s: f32,
+    pub lr_b: f32,
+    /// AdaRound regularizer weight λ and β anneal range.
+    pub lam: f32,
+    pub beta_start: f32,
+    pub beta_end: f32,
+    /// Fraction of iterations with α_round = 0 before the linear ramp
+    /// (Appendix B rounding schedule).
+    pub warmup_frac: f32,
+    pub seed: u64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            iters: 600,
+            batch: 32,
+            lr_v: 3e-3,
+            lr_s: 4e-5,
+            lr_b: 1e-3,
+            lam: 0.01,
+            beta_start: 20.0,
+            beta_end: 2.0,
+            warmup_frac: 0.2,
+            seed: 0xCA11B,
+        }
+    }
+}
+
+/// One full experiment cell: model × method × bits.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub method: Method,
+    pub bits: Bits,
+    pub calib: CalibConfig,
+}
+
+impl RunConfig {
+    pub fn new(model: &str, method: Method, bits: Bits) -> Self {
+        let mut calib = CalibConfig::default();
+        if method.uses_border() {
+            // AQuant slows h(V) convergence (Appendix C): stronger
+            // regularization, lower starting β.
+            calib.beta_start = 16.0;
+            calib.lam = 0.05;
+        }
+        RunConfig {
+            model: model.to_string(),
+            method,
+            bits,
+            calib,
+        }
+    }
+
+    /// Tag used for qstate directories and result rows.
+    pub fn tag(&self) -> String {
+        format!("{}_{}_{}", self.model, self.method.name(), self.bits.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_bits() {
+        let b = Bits::parse("W2A4").unwrap();
+        assert_eq!((b.w, b.a), (2, 4));
+        assert_eq!(Bits::parse("w32a2").unwrap().name(), "W32A2");
+        assert!(Bits::parse("4A4").is_err());
+        assert!(Bits::parse("WxAy").is_err());
+    }
+
+    #[test]
+    fn parse_method() {
+        assert_eq!(Method::parse("AQuant").unwrap(), Method::AQuant);
+        assert_eq!(Method::parse("rounding").unwrap(), Method::Nearest);
+        assert!(Method::parse("magic").is_err());
+    }
+
+    #[test]
+    fn first_last_kept_8bit() {
+        let b = Bits::parse("W2A2").unwrap();
+        let mid = layer_bits(b, false, false, false);
+        assert_eq!((mid.qmin_a, mid.qmax_a), (0.0, 3.0));
+        assert_eq!((mid.qmin_w, mid.qmax_w), (-2.0, 1.0));
+        let first = layer_bits(b, true, false, true);
+        assert_eq!((first.qmin_a, first.qmax_a), (-128.0, 127.0));
+        assert_eq!(first.w_init_bits, 8);
+        let last = layer_bits(b, false, true, false);
+        assert_eq!((last.qmin_w, last.qmax_w), (-128.0, 127.0));
+    }
+
+    #[test]
+    fn method_traits() {
+        assert!(Method::AQuant.uses_border());
+        assert!(!Method::QDrop.uses_border());
+        assert!(Method::AdaRound.layer_wise());
+        assert_eq!(Method::QDrop.drop_prob(), 0.5);
+        assert_eq!(Method::Brecq.drop_prob(), 0.0);
+        assert!(!Method::Nearest.calibrates());
+        assert_eq!(Method::all().len(), 7);
+    }
+
+    #[test]
+    fn run_config_tag() {
+        let rc = RunConfig::new("resnet10s", Method::AQuant, Bits::parse("W2A2").unwrap());
+        assert_eq!(rc.tag(), "resnet10s_aquant_W2A2");
+        assert_eq!(rc.calib.beta_start, 16.0);
+        let rc2 = RunConfig::new("resnet10s", Method::QDrop, Bits::parse("W2A2").unwrap());
+        assert_eq!(rc2.calib.beta_start, 20.0);
+    }
+}

@@ -1,0 +1,395 @@
+//! The calibration driver: Algorithm 1 over the model's reconstruction
+//! units (blocks for BRECQ/QDrop/AQuant, single layers for AdaRound),
+//! entirely in Rust — the JAX step programs are pure state-in/state-out
+//! functions selected from the manifest.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::chain::{from_literal, to_literal, ChainRunner, QuantCtx};
+use super::schedule::Schedule;
+use super::state::{bits_row_for, Knobs, StateStore};
+use crate::config::RunConfig;
+use crate::data::Split;
+use crate::nn::topology::{BlockTopo, LayerTopo, ModelTopo};
+use crate::quant::scale_search;
+use crate::quant::tensor::Tensor;
+use crate::runtime::{literal_f32, ProgramSpec, Runtime};
+use crate::util::rng::Rng;
+
+/// One reconstruction unit: a block or a single layer.
+struct Unit<'t> {
+    /// step program name
+    program: String,
+    /// layers in the unit, python `all_layers()` order
+    layers: Vec<&'t LayerTopo>,
+    /// name of the layer whose input is the unit input
+    input_layer: String,
+    /// block name when this is a block unit (targets come from block_out)
+    block: Option<String>,
+}
+
+/// Progress line emitted per unit.
+#[derive(Debug, Clone)]
+pub struct UnitReport {
+    pub unit: String,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub iters: u32,
+}
+
+/// The calibrator for one run-config cell.
+pub struct Calibrator<'a> {
+    pub chain: ChainRunner<'a>,
+    pub cfg: RunConfig,
+    pub verbose: bool,
+}
+
+impl<'a> Calibrator<'a> {
+    pub fn new(chain: ChainRunner<'a>, cfg: RunConfig) -> Self {
+        Calibrator {
+            chain,
+            cfg,
+            verbose: false,
+        }
+    }
+
+    fn units(&self) -> Vec<Unit<'_>> {
+        let topo: &ModelTopo = self.chain.topo;
+        if self.cfg.method.layer_wise() {
+            topo.all_layers()
+                .into_iter()
+                .map(|l| Unit {
+                    program: format!("step_{}_L_{}", topo.name, l.name),
+                    layers: vec![l],
+                    input_layer: l.name.clone(),
+                    block: None,
+                })
+                .collect()
+        } else {
+            topo.blocks
+                .iter()
+                .map(|b: &BlockTopo| Unit {
+                    program: format!("step_{}_B_{}", topo.name, b.name),
+                    layers: b.layers.iter().collect(),
+                    input_layer: b.layers[0].name.clone(),
+                    block: Some(b.name.clone()),
+                })
+                .collect()
+        }
+    }
+
+    /// Concatenate per-group layer taps into one (N, ...) tensor.
+    fn concat_groups(groups: &[Tensor]) -> Tensor {
+        let mut shape = groups[0].shape.clone();
+        shape[0] = groups.iter().map(|g| g.shape[0]).sum();
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for g in groups {
+            data.extend_from_slice(&g.data);
+        }
+        Tensor::new(shape, data).unwrap()
+    }
+
+    /// Gather rows `idx` of a (N, ...) tensor into a (len, ...) tensor.
+    fn gather_rows(t: &Tensor, idx: &[usize]) -> Tensor {
+        let per: usize = t.shape[1..].iter().product();
+        let mut shape = t.shape.clone();
+        shape[0] = idx.len();
+        let mut data = Vec::with_capacity(idx.len() * per);
+        for &i in idx {
+            data.extend_from_slice(&t.data[i * per..(i + 1) * per]);
+        }
+        Tensor::new(shape, data).unwrap()
+    }
+
+    /// Run the full calibration; returns (state, per-unit reports).
+    pub fn run(&self, calib: &Split) -> Result<(StateStore, Vec<UnitReport>)> {
+        let rt: &Runtime = self.chain.rt;
+        let topo = self.chain.topo;
+        let manifest = rt.manifest().ok_or_else(|| anyhow!("no manifest"))?;
+        let b = self.chain.batch;
+        if calib.n % b != 0 {
+            bail!("calib set size {} not a multiple of program batch {b}", calib.n);
+        }
+        let n_groups = calib.n / b;
+
+        let mut st = StateStore::init_for_run(
+            rt.artifacts_dir(),
+            manifest,
+            topo,
+            &self.cfg,
+        )?;
+
+        // ---- FP chain over the calibration set: taps + block outputs ----
+        let mut fp_taps: HashMap<String, Vec<Tensor>> = HashMap::new();
+        let mut fp_block_out: HashMap<String, Vec<Tensor>> = HashMap::new();
+        for g in 0..n_groups {
+            let idx: Vec<usize> = (g * b..(g + 1) * b).collect();
+            let x = Tensor::new(
+                vec![b, calib.c, calib.h, calib.w],
+                calib.gather(&idx),
+            )?;
+            let rec = self.chain.walk(&x, None)?;
+            for (k, v) in rec.taps {
+                fp_taps.entry(k).or_default().push(v);
+            }
+            for (k, v) in rec.block_out {
+                fp_block_out.entry(k).or_default().push(v);
+            }
+        }
+        let fp_taps: HashMap<String, Tensor> = fp_taps
+            .into_iter()
+            .map(|(k, v)| (k, Self::concat_groups(&v)))
+            .collect();
+        let fp_block_out: HashMap<String, Tensor> = fp_block_out
+            .into_iter()
+            .map(|(k, v)| (k, Self::concat_groups(&v)))
+            .collect();
+
+        // ---- Activation scale init (MSE search over FP inputs) ----
+        for l in topo.all_layers() {
+            let row = bits_row_for(topo, self.cfg.bits, &l.name);
+            let tap = fp_taps
+                .get(&l.name)
+                .ok_or_else(|| anyhow!("no FP tap for {}", l.name))?;
+            let sample = scale_search::sample_values(&tap.data, 8192, 0x5CA1E);
+            let s = scale_search::search_scale(&sample, row.qmin_a, row.qmax_a, 60);
+            st.set(&format!("state:{}.s_a", l.name), Tensor::scalar(s));
+        }
+
+        if !self.cfg.method.calibrates() {
+            return Ok((st, Vec::new()));
+        }
+
+        // ---- Unit-by-unit reconstruction ----
+        let sched = Schedule::new(&self.cfg.calib);
+        let mut rng = Rng::new(self.cfg.calib.seed);
+        let mut reports = Vec::new();
+        let infer_knobs = Knobs::inference(self.cfg.method, self.cfg.bits);
+        for unit in self.units() {
+            // Noised inputs: quantized chain with the *current* state.
+            let qctx = QuantCtx {
+                state: &st,
+                bits: self.cfg.bits,
+                knobs: infer_knobs,
+            };
+            let mut q_tap_groups: Vec<Tensor> = Vec::new();
+            for g in 0..n_groups {
+                let idx: Vec<usize> = (g * b..(g + 1) * b).collect();
+                let x = Tensor::new(
+                    vec![b, calib.c, calib.h, calib.w],
+                    calib.gather(&idx),
+                )?;
+                let rec = self.chain.walk_until(&x, Some(&qctx), Some(&unit.input_layer))?;
+                q_tap_groups.push(
+                    rec.taps
+                        .get(&unit.input_layer)
+                        .ok_or_else(|| anyhow!("no q tap {}", unit.input_layer))?
+                        .clone(),
+                );
+            }
+            let x_in_all = Self::concat_groups(&q_tap_groups);
+            let x_fp_all = fp_taps
+                .get(&unit.input_layer)
+                .ok_or_else(|| anyhow!("no fp tap {}", unit.input_layer))?;
+
+            // Targets: FP unit output.
+            let y_fp_all = match &unit.block {
+                Some(bname) => fp_block_out
+                    .get(bname)
+                    .ok_or_else(|| anyhow!("no fp block out {bname}"))?
+                    .clone(),
+                None => {
+                    // layer unit: FP layer forward + its own relu
+                    let l = unit.layers[0];
+                    let mut groups = Vec::new();
+                    for g in 0..n_groups {
+                        let idx: Vec<usize> = (g * b..(g + 1) * b).collect();
+                        let xg = Self::gather_rows(x_fp_all, &idx);
+                        let mut y = self.chain.fp_layer(l, &xg)?;
+                        if l.relu {
+                            y.relu_inplace();
+                        }
+                        groups.push(y);
+                    }
+                    Self::concat_groups(&groups)
+                }
+            };
+
+            // Fresh optimizer per unit.
+            let state_names: Vec<String> = unit
+                .layers
+                .iter()
+                .flat_map(|l| {
+                    ["V", "s_a", "bp"]
+                        .iter()
+                        .map(|k| format!("state:{}.{k}", l.name))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            st.reset_adam(&state_names);
+
+            let spec = manifest.req_program(&unit.program)?.clone();
+            let drop_p = self.cfg.method.drop_prob();
+            let mut first_loss = f32::NAN;
+            let mut last_loss = f32::NAN;
+            for iter in 0..self.cfg.calib.iters {
+                let idx: Vec<usize> = (0..b).map(|_| rng.below(calib.n)).collect();
+                let x_in = Self::gather_rows(&x_in_all, &idx);
+                let x_fp = Self::gather_rows(x_fp_all, &idx);
+                let y_fp = Self::gather_rows(&y_fp_all, &idx);
+                let mut mask = Tensor::zeros(x_in.shape.clone());
+                if drop_p > 0.0 {
+                    for v in &mut mask.data {
+                        *v = rng.bernoulli(drop_p) as u8 as f32;
+                    }
+                }
+                let knobs = self.step_knobs(&sched, iter);
+                let loss = self.step(
+                    &spec,
+                    &mut st,
+                    &unit,
+                    &x_in,
+                    &x_fp,
+                    &y_fp,
+                    &mask,
+                    knobs,
+                )?;
+                if iter == 0 {
+                    first_loss = loss;
+                }
+                last_loss = loss;
+            }
+            if self.verbose {
+                println!(
+                    "  [{}] {}: loss {first_loss:.5} -> {last_loss:.5}",
+                    self.cfg.tag(),
+                    unit.program
+                );
+            }
+            reports.push(UnitReport {
+                unit: unit.program.clone(),
+                first_loss,
+                last_loss,
+                iters: self.cfg.calib.iters,
+            });
+        }
+        Ok((st, reports))
+    }
+
+    /// Knobs for a calibration step at `iter`.
+    fn step_knobs(&self, sched: &Schedule, iter: u32) -> Knobs {
+        let m = self.cfg.method;
+        let bits = self.cfg.bits;
+        let c = &self.cfg.calib;
+        Knobs {
+            lr_v: if bits.w_quantized() { c.lr_v } else { 0.0 },
+            lr_s: if matches!(m, crate::config::Method::AdaRound) || !bits.a_quantized() {
+                0.0
+            } else {
+                c.lr_s
+            },
+            lr_b: if m.uses_border() && bits.a_quantized() {
+                c.lr_b
+            } else {
+                0.0
+            },
+            alpha_round: sched.alpha_round(iter),
+            beta: sched.beta(iter),
+            lam: c.lam,
+            wq_en: bits.w_quantized(),
+            aq_en: bits.a_quantized(),
+            border_en: m.uses_border(),
+            fuse_en: m.uses_border() && m != crate::config::Method::AQuantNoFusion,
+            b2_en: m.uses_border() && m != crate::config::Method::AQuantLinear,
+        }
+    }
+
+    /// One step-program invocation: assemble args by manifest order,
+    /// execute, write results back into the store. Returns the loss.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        spec: &ProgramSpec,
+        st: &mut StateStore,
+        unit: &Unit<'_>,
+        x_in: &Tensor,
+        x_fp: &Tensor,
+        y_fp: &Tensor,
+        mask: &Tensor,
+        knobs: Knobs,
+    ) -> Result<f32> {
+        let topo = self.chain.topo;
+        let exe = self.chain.rt.load(&spec_name(spec))?;
+        let mut args = Vec::with_capacity(spec.args.len());
+        for a in &spec.args {
+            let lit = match a.role() {
+                "w" => {
+                    let (lname, field) = a
+                        .local_name()
+                        .rsplit_once('.')
+                        .ok_or_else(|| anyhow!("bad w arg {}", a.name))?;
+                    let lw = self
+                        .chain_weights(lname)
+                        .ok_or_else(|| anyhow!("weights {lname}"))?;
+                    match field {
+                        "w" => {
+                            let l = topo.layer(lname)?;
+                            literal_f32(&lw.w, &[l.oc as i64, l.rows_per_group() as i64])?
+                        }
+                        "b" => literal_f32(&lw.b, &[lw.b.len() as i64])?,
+                        _ => bail!("unknown weight field {field}"),
+                    }
+                }
+                "state" | "adam" => to_literal(st.get(&a.name)?)?,
+                "batch" => match a.local_name() {
+                    "x_in" => to_literal(x_in)?,
+                    "x_fp" => to_literal(x_fp)?,
+                    "y_fp" => to_literal(y_fp)?,
+                    "mask" => to_literal(mask)?,
+                    other => bail!("unknown batch arg {other}"),
+                },
+                "hyper" => match a.local_name() {
+                    "bits" => {
+                        let mut rows = Vec::with_capacity(unit.layers.len() * 4);
+                        for l in &unit.layers {
+                            rows.extend(
+                                bits_row_for(topo, self.cfg.bits, &l.name).as_row(),
+                            );
+                        }
+                        literal_f32(&rows, &[unit.layers.len() as i64, 4])?
+                    }
+                    "knobs" => literal_f32(&knobs.to_vec(), &[12])?,
+                    other => bail!("unknown hyper arg {other}"),
+                },
+                role => bail!("unknown arg role {role} in {}", a.name),
+            };
+            args.push(lit);
+        }
+        let outs = exe.run(&args)?;
+        let mut loss = f32::NAN;
+        for (r, lit) in spec.results.iter().zip(outs.iter()) {
+            if r.name == "out:loss" {
+                loss = lit.to_vec::<f32>()?[0];
+            } else {
+                let shape: Vec<usize> = r.shape.iter().map(|&d| d as usize).collect();
+                st.set(&r.name, from_literal(lit, shape)?);
+            }
+        }
+        if !loss.is_finite() {
+            bail!("non-finite loss in {}", spec_name(spec));
+        }
+        Ok(loss)
+    }
+
+    fn chain_weights(&self, lname: &str) -> Option<&crate::nn::engine::LayerWeights> {
+        // ChainRunner holds the weights; expose through a helper.
+        self.chain.weights().get(lname)
+    }
+}
+
+fn spec_name(spec: &ProgramSpec) -> String {
+    // program name == file stem of its path
+    spec.path.trim_end_matches(".hlo.txt").to_string()
+}

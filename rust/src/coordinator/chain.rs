@@ -1,0 +1,257 @@
+//! Forward-chain runner: drives the per-layer PJRT programs (`fp_*`, `q_*`)
+//! with the block wiring (relu, residual adds, downsample) done on the
+//! host. Produces per-layer input taps and per-block outputs — the
+//! calibration inputs/targets of Algorithm 1 — and runs the full-model
+//! programs for evaluation.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::state::{bits_row_for, Knobs, StateStore};
+use crate::config::Bits;
+use crate::nn::engine::LayerWeights;
+use crate::nn::topology::{LayerTopo, ModelTopo};
+use crate::quant::tensor::Tensor;
+use crate::runtime::{literal_f32, Runtime};
+
+/// Tensor -> literal.
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    literal_f32(&t.data, &t.dims_i64())
+}
+
+/// literal -> Tensor (shape supplied by caller; PJRT literals know their
+/// shape but the manifest is the contract we trust).
+pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(shape, data)
+}
+
+/// Quantization context for a chain walk.
+pub struct QuantCtx<'a> {
+    pub state: &'a StateStore,
+    pub bits: Bits,
+    pub knobs: Knobs,
+}
+
+/// Output of a chain walk.
+#[derive(Debug)]
+pub struct WalkRecord {
+    /// Input feature map of every layer (downsample layers see the block
+    /// input), shape (B, C, H, W).
+    pub taps: HashMap<String, Tensor>,
+    /// Output of every block (post-residual, post-relu).
+    pub block_out: HashMap<String, Tensor>,
+    /// Final model output (logits), shape (B, n_classes).
+    pub logits: Tensor,
+}
+
+/// Chain runner bound to one model.
+pub struct ChainRunner<'a> {
+    pub rt: &'a Runtime,
+    pub topo: &'a ModelTopo,
+    weights: &'a HashMap<String, LayerWeights>,
+    /// Static batch size the programs were lowered with.
+    pub batch: usize,
+}
+
+impl<'a> ChainRunner<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        topo: &'a ModelTopo,
+        weights: &'a HashMap<String, LayerWeights>,
+    ) -> Result<Self> {
+        let batch = rt
+            .manifest()
+            .ok_or_else(|| anyhow!("runtime has no manifest"))?
+            .meta_section("calib_batch")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("calib_batch"))?;
+        Ok(ChainRunner {
+            rt,
+            topo,
+            weights,
+            batch,
+        })
+    }
+
+    /// The host-side folded FP weights this chain runs with.
+    pub fn weights(&self) -> &HashMap<String, LayerWeights> {
+        self.weights
+    }
+
+    fn weight_args(&self, l: &LayerTopo) -> Result<Vec<xla::Literal>> {
+        let lw = self
+            .weights
+            .get(&l.name)
+            .ok_or_else(|| anyhow!("missing weights {}", l.name))?;
+        Ok(vec![
+            literal_f32(&lw.w, &[l.oc as i64, l.rows_per_group() as i64])?,
+            literal_f32(&lw.b, &[l.oc as i64])?,
+        ])
+    }
+
+    fn state_args(&self, l: &LayerTopo, st: &StateStore) -> Result<Vec<xla::Literal>> {
+        // Order must match ptq.layer_state_shapes: V, s_w, s_a, bp.
+        Ok(vec![
+            to_literal(st.get(&format!("state:{}.V", l.name))?)?,
+            to_literal(st.get(&format!("state:{}.s_w", l.name))?)?,
+            to_literal(st.get(&format!("state:{}.s_a", l.name))?)?,
+            to_literal(st.get(&format!("state:{}.bp", l.name))?)?,
+        ])
+    }
+
+    /// One FP layer forward (no relu).
+    pub fn fp_layer(&self, l: &LayerTopo, x: &Tensor) -> Result<Tensor> {
+        let exe = self.rt.load(&format!("fp_{}_{}", self.topo.name, l.name))?;
+        let mut args = self.weight_args(l)?;
+        args.push(to_literal(x)?);
+        let out = exe.run(&args)?;
+        let shape = self.layer_out_shape(l);
+        from_literal(&out[0], shape)
+    }
+
+    /// One quantized layer forward (hard quant, Pallas border kernel).
+    pub fn q_layer(&self, l: &LayerTopo, x: &Tensor, q: &QuantCtx) -> Result<Tensor> {
+        let exe = self.rt.load(&format!("q_{}_{}", self.topo.name, l.name))?;
+        let mut args = self.weight_args(l)?;
+        args.extend(self.state_args(l, q.state)?);
+        let row = bits_row_for(self.topo, q.bits, &l.name);
+        args.push(literal_f32(&row.as_row(), &[1, 4])?);
+        args.push(literal_f32(&q.knobs.to_vec(), &[12])?);
+        args.push(to_literal(x)?);
+        let out = exe.run(&args)?;
+        let shape = self.layer_out_shape(l);
+        from_literal(&out[0], shape)
+    }
+
+    fn layer_out_shape(&self, l: &LayerTopo) -> Vec<usize> {
+        if l.kind == "fc" {
+            vec![self.batch, l.oc]
+        } else {
+            vec![self.batch, l.out_chw.0, l.out_chw.1, l.out_chw.2]
+        }
+    }
+
+    /// Walk the whole model, batched (x: (B, C, H, W)); `quant` = None for
+    /// the FP chain. Records layer-input taps and block outputs.
+    pub fn walk(&self, x: &Tensor, quant: Option<&QuantCtx>) -> Result<WalkRecord> {
+        self.walk_until(x, quant, None)
+    }
+
+    /// Walk, stopping as soon as the tap for `stop_at` has been recorded
+    /// (the calibration loop only needs a unit's *input*, so the suffix of
+    /// the model need not be executed).
+    pub fn walk_until(
+        &self,
+        x: &Tensor,
+        quant: Option<&QuantCtx>,
+        stop_at: Option<&str>,
+    ) -> Result<WalkRecord> {
+        let mut rec = WalkRecord {
+            taps: HashMap::new(),
+            block_out: HashMap::new(),
+            logits: Tensor::zeros(vec![0]),
+        };
+        let mut h = x.clone();
+        for blk in &self.topo.blocks {
+            let block_input = h.clone();
+            let main: Vec<&LayerTopo> = blk.main_layers().collect();
+            for (i, l) in main.iter().enumerate() {
+                rec.taps.insert(l.name.clone(), h.clone());
+                if stop_at == Some(l.name.as_str()) {
+                    return Ok(rec);
+                }
+                let mut out = match quant {
+                    Some(q) => self.q_layer(l, &h, q)?,
+                    None => self.fp_layer(l, &h)?,
+                };
+                let is_last = i == main.len() - 1;
+                if l.relu && !(is_last && blk.residual) {
+                    out.relu_inplace();
+                }
+                h = out;
+            }
+            if blk.residual {
+                let skip = if let Some(ds) = blk.downsample_layer() {
+                    rec.taps.insert(ds.name.clone(), block_input.clone());
+                    if stop_at == Some(ds.name.as_str()) {
+                        return Ok(rec);
+                    }
+                    match quant {
+                        Some(q) => self.q_layer(ds, &block_input, q)?,
+                        None => self.fp_layer(ds, &block_input)?,
+                    }
+                } else {
+                    block_input
+                };
+                h.add_inplace(&skip);
+                h.relu_inplace();
+            }
+            rec.block_out.insert(blk.name.clone(), h.clone());
+        }
+        rec.logits = h;
+        Ok(rec)
+    }
+
+    /// Full-model program (fast path): logits for one batch.
+    pub fn full(&self, x: &Tensor, quant: Option<&QuantCtx>) -> Result<Tensor> {
+        let layers = self.topo.all_layers();
+        let (name, mut args) = match quant {
+            None => {
+                let mut args = Vec::new();
+                for l in &layers {
+                    args.extend(self.weight_args(l)?);
+                }
+                (format!("fp_full_{}", self.topo.name), args)
+            }
+            Some(q) => {
+                let mut args = Vec::new();
+                for l in &layers {
+                    args.extend(self.weight_args(l)?);
+                }
+                for l in &layers {
+                    args.extend(self.state_args(l, q.state)?);
+                }
+                let mut bits = Vec::with_capacity(layers.len() * 4);
+                for l in &layers {
+                    bits.extend(bits_row_for(self.topo, q.bits, &l.name).as_row());
+                }
+                args.push(literal_f32(&bits, &[layers.len() as i64, 4])?);
+                args.push(literal_f32(&q.knobs.to_vec(), &[12])?);
+                (format!("q_full_{}", self.topo.name), args)
+            }
+        };
+        args.push(to_literal(x)?);
+        let exe = self.rt.load(&name)?;
+        let out = exe.run(&args)?;
+        from_literal(&out[0], vec![self.batch, self.topo.n_classes])
+    }
+}
+
+/// Argmax per row of a (B, C) tensor.
+pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
+    let b = t.shape[0];
+    let c = t.shape[1];
+    (0..b)
+        .map(|i| {
+            let row = &t.data[i * c..(i + 1) * c];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+}

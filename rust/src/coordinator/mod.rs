@@ -1,0 +1,17 @@
+//! The PTQ coordinator (L3): owns the calibration loop of Algorithm 1.
+//!
+//! The JAX-side step programs are pure functions (state in → state out);
+//! everything stateful lives here: the quant-state store, the schedules
+//! (α_round ramp, β anneal), QDrop mask generation, batch sampling, the
+//! block ordering, and the forward chains that produce each block's
+//! calibration inputs/targets.
+
+pub mod calib;
+pub mod chain;
+pub mod schedule;
+pub mod state;
+
+pub use calib::Calibrator;
+pub use chain::ChainRunner;
+pub use schedule::Schedule;
+pub use state::StateStore;

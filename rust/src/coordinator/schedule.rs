@@ -1,0 +1,95 @@
+//! Calibration schedules (Appendix B/C):
+//!   * rounding schedule α_round — 0 for the first `warmup_frac` of the
+//!     iterations, then a linear ramp to 1 (stabilizes border-induced
+//!     rounding flips);
+//!   * β anneal for the AdaRound regularizer — `beta_start` → `beta_end`
+//!     (linear in iteration, after the warmup);
+//!   * learning rates — constant (matching the baselines' setup).
+
+use crate::config::CalibConfig;
+
+/// Schedule evaluator over a block's finetuning iterations.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    cfg: CalibConfig,
+}
+
+impl Schedule {
+    pub fn new(cfg: &CalibConfig) -> Self {
+        Schedule { cfg: cfg.clone() }
+    }
+
+    /// Progress in [0, 1].
+    fn frac(&self, iter: u32) -> f32 {
+        if self.cfg.iters <= 1 {
+            return 1.0;
+        }
+        iter as f32 / (self.cfg.iters - 1) as f32
+    }
+
+    /// Rounding schedule α_round(iter).
+    pub fn alpha_round(&self, iter: u32) -> f32 {
+        let f = self.frac(iter);
+        let w = self.cfg.warmup_frac;
+        if f < w {
+            0.0
+        } else if w >= 1.0 {
+            1.0
+        } else {
+            ((f - w) / (1.0 - w)).min(1.0)
+        }
+    }
+
+    /// β anneal (AdaRound): high → low so h(V) converges to {0, 1}.
+    pub fn beta(&self, iter: u32) -> f32 {
+        let f = self.frac(iter);
+        self.cfg.beta_start + (self.cfg.beta_end - self.cfg.beta_start) * f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(iters: u32) -> CalibConfig {
+        CalibConfig {
+            iters,
+            ..CalibConfig::default()
+        }
+    }
+
+    #[test]
+    fn alpha_ramps_zero_to_one() {
+        let s = Schedule::new(&cfg(100));
+        assert_eq!(s.alpha_round(0), 0.0);
+        assert_eq!(s.alpha_round(10), 0.0); // inside 20% warmup
+        assert!(s.alpha_round(50) > 0.0 && s.alpha_round(50) < 1.0);
+        assert!((s.alpha_round(99) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alpha_monotone() {
+        let s = Schedule::new(&cfg(137));
+        let mut last = -1.0;
+        for i in 0..137 {
+            let a = s.alpha_round(i);
+            assert!(a >= last);
+            last = a;
+        }
+    }
+
+    #[test]
+    fn beta_anneals_down() {
+        let s = Schedule::new(&cfg(100));
+        assert_eq!(s.beta(0), 20.0);
+        assert!((s.beta(99) - 2.0).abs() < 1e-5);
+        assert!(s.beta(50) < s.beta(10));
+    }
+
+    #[test]
+    fn degenerate_single_iter() {
+        let s = Schedule::new(&cfg(1));
+        assert_eq!(s.alpha_round(0), 1.0);
+        assert_eq!(s.beta(0), 2.0);
+    }
+}

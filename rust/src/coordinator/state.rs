@@ -1,0 +1,255 @@
+//! The quant-state store: every learned/fixed tensor of a quantization
+//! run, keyed by the manifest's namespaced argument names
+//! (`state:<layer>.<leaf>`, `adam:...`), plus persistence.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{layer_bits, Bits, BitsRow, Method, RunConfig};
+use crate::nn::loader;
+use crate::nn::topology::ModelTopo;
+use crate::quant::tensor::Tensor;
+use crate::runtime::Manifest;
+use crate::util::tensor_io;
+
+/// Host-side tensor store for one calibration run.
+#[derive(Debug, Clone, Default)]
+pub struct StateStore {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("state store missing {name:?}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Initialize the full quant state for a run: AdaRound V + weight
+    /// scales from the qinit artifacts (at each layer's effective
+    /// bit-width), zero border polynomial with α = 1, and a placeholder
+    /// activation scale (filled by scale search before calibration).
+    pub fn init_for_run(
+        artifacts_dir: &Path,
+        manifest: &Manifest,
+        topo: &ModelTopo,
+        cfg: &RunConfig,
+    ) -> Result<StateStore> {
+        let mut st = StateStore::new();
+        let layers = topo.all_layers();
+        for l in &layers {
+            let row = bits_row_for(topo, cfg.bits, &l.name);
+            let (s_w, v) =
+                loader::load_qinit(artifacts_dir, manifest, &topo.name, &l.name, row.w_init_bits)?;
+            st.set(
+                &format!("state:{}.V", l.name),
+                Tensor::new(vec![l.oc, l.rows_per_group()], v)?,
+            );
+            st.set(
+                &format!("state:{}.s_w", l.name),
+                Tensor::new(vec![l.oc, 1], s_w)?,
+            );
+            st.set(&format!("state:{}.s_a", l.name), Tensor::scalar(1.0));
+            let mut bp = Tensor::zeros(vec![l.rows, 4]);
+            for r in 0..l.rows {
+                bp.data[r * 4 + 3] = 1.0; // α init (fusion weights)
+            }
+            st.set(&format!("state:{}.bp", l.name), bp);
+        }
+        Ok(st)
+    }
+
+    /// Zero the Adam moments for a set of state names (called per block
+    /// before its reconstruction, matching fresh-optimizer-per-block).
+    pub fn reset_adam(&mut self, state_names: &[String]) {
+        for n in state_names {
+            if let Some(t) = self.map.get(n) {
+                let shape = t.shape.clone();
+                let m = Tensor::zeros(shape.clone());
+                let v = Tensor::zeros(shape);
+                let base = n.strip_prefix("state:").unwrap_or(n);
+                self.map.insert(format!("adam:{base}.m"), m);
+                self.map.insert(format!("adam:{base}.v"), v);
+            }
+        }
+        self.map.insert("adam:t".into(), Tensor::scalar(0.0));
+    }
+
+    /// Persist the `state:` entries to a directory.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut index = Vec::new();
+        for (name, t) in &self.map {
+            if !name.starts_with("state:") {
+                continue;
+            }
+            let file = format!("{}.bin", name.replace([':', '/'], "_"));
+            tensor_io::write_f32(&dir.join(&file), &t.data)?;
+            index.push(format!(
+                "{name}\t{file}\t{}",
+                t.shape
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ));
+        }
+        std::fs::write(dir.join("index.tsv"), index.join("\n") + "\n")?;
+        Ok(())
+    }
+
+    /// Load previously saved `state:` entries.
+    pub fn load(dir: &Path) -> Result<StateStore> {
+        let mut st = StateStore::new();
+        let index = std::fs::read_to_string(dir.join("index.tsv"))?;
+        for line in index.lines() {
+            let mut parts = line.split('\t');
+            let name = parts.next().ok_or_else(|| anyhow!("bad index line"))?;
+            let file = parts.next().ok_or_else(|| anyhow!("bad index line"))?;
+            let shape: Vec<usize> = parts
+                .next()
+                .ok_or_else(|| anyhow!("bad index line"))?
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap())
+                .collect();
+            let data = tensor_io::read_f32(&dir.join(file))?;
+            st.set(name, Tensor::new(shape, data)?);
+        }
+        Ok(st)
+    }
+}
+
+/// The per-layer bits row under the paper's policy (first/last at 8 bits,
+/// first layer's activations signed — it sees the raw image).
+pub fn bits_row_for(topo: &ModelTopo, bits: Bits, layer: &str) -> BitsRow {
+    let is_first = topo.first_layer() == layer;
+    let is_last = topo.last_layer() == layer;
+    layer_bits(bits, is_first, is_last, is_first)
+}
+
+/// Knob vector assembly (must match `python/compile/ptq.py::KNOBS`).
+#[derive(Debug, Clone, Copy)]
+pub struct Knobs {
+    pub lr_v: f32,
+    pub lr_s: f32,
+    pub lr_b: f32,
+    pub alpha_round: f32,
+    pub beta: f32,
+    pub lam: f32,
+    pub wq_en: bool,
+    pub aq_en: bool,
+    pub border_en: bool,
+    pub fuse_en: bool,
+    pub b2_en: bool,
+}
+
+impl Knobs {
+    /// Inference-time knobs for a method × bits cell.
+    pub fn inference(method: Method, bits: Bits) -> Knobs {
+        Knobs {
+            lr_v: 0.0,
+            lr_s: 0.0,
+            lr_b: 0.0,
+            alpha_round: 1.0,
+            beta: 2.0,
+            lam: 0.0,
+            wq_en: bits.w_quantized(),
+            aq_en: bits.a_quantized(),
+            border_en: method.uses_border(),
+            fuse_en: method.uses_border() && method != Method::AQuantNoFusion,
+            b2_en: method.uses_border() && method != Method::AQuantLinear,
+        }
+    }
+
+    pub fn to_vec(self) -> Vec<f32> {
+        vec![
+            self.lr_v,
+            self.lr_s,
+            self.lr_b,
+            self.alpha_round,
+            self.beta,
+            self.lam,
+            self.wq_en as u8 as f32,
+            self.aq_en as u8 as f32,
+            self.border_en as u8 as f32,
+            self.fuse_en as u8 as f32,
+            self.b2_en as u8 as f32,
+            0.0,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_roundtrip_disk() {
+        let mut st = StateStore::new();
+        st.set("state:l1.V", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        st.set("state:l1.s_a", Tensor::scalar(0.25));
+        st.set("adam:t", Tensor::scalar(5.0)); // not persisted
+        let dir = std::env::temp_dir().join("aquant_state_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        st.save(&dir).unwrap();
+        let st2 = StateStore::load(&dir).unwrap();
+        assert_eq!(st2.get("state:l1.V").unwrap().shape, vec![2, 3]);
+        assert_eq!(st2.get("state:l1.s_a").unwrap().data, vec![0.25]);
+        assert!(st2.get("adam:t").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reset_adam_creates_moments() {
+        let mut st = StateStore::new();
+        st.set("state:l1.V", Tensor::zeros(vec![2, 2]));
+        st.reset_adam(&["state:l1.V".to_string()]);
+        assert_eq!(st.get("adam:l1.V.m").unwrap().shape, vec![2, 2]);
+        assert_eq!(st.get("adam:t").unwrap().data, vec![0.0]);
+    }
+
+    #[test]
+    fn knobs_vector_matches_convention() {
+        let k = Knobs::inference(Method::AQuant, Bits { w: 2, a: 2 });
+        let v = k.to_vec();
+        assert_eq!(v.len(), 12);
+        assert_eq!(v[6], 1.0); // wq_en
+        assert_eq!(v[7], 1.0); // aq_en
+        assert_eq!(v[8], 1.0); // border_en
+        let k = Knobs::inference(Method::QDrop, Bits { w: 32, a: 4 });
+        let v = k.to_vec();
+        assert_eq!(v[6], 0.0); // weights FP
+        assert_eq!(v[8], 0.0); // no border
+        let k = Knobs::inference(Method::AQuantLinear, Bits { w: 2, a: 2 });
+        assert!(!k.b2_en && k.fuse_en);
+        let k = Knobs::inference(Method::AQuantNoFusion, Bits { w: 2, a: 2 });
+        assert!(k.b2_en && !k.fuse_en);
+    }
+}

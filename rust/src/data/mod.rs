@@ -1,0 +1,118 @@
+//! Dataset access: the synthetic corpus exported by `python/compile/data.py`
+//! (identical bytes on both sides — raw little-endian f32 NCHW images and
+//! u32 labels).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Manifest;
+use crate::util::tensor_io;
+
+/// One split, images flattened NCHW.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub images: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Split {
+    /// Per-image element count.
+    pub fn img_elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Borrow image i.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let e = self.img_elems();
+        &self.images[i * e..(i + 1) * e]
+    }
+
+    /// Gather a batch of images by indices into a flat buffer.
+    pub fn gather(&self, idx: &[usize]) -> Vec<f32> {
+        let e = self.img_elems();
+        let mut out = Vec::with_capacity(idx.len() * e);
+        for &i in idx {
+            out.extend_from_slice(self.image(i));
+        }
+        out
+    }
+}
+
+/// The three canonical splits.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train: Split,
+    pub calib: Split,
+    pub test: Split,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Load from the artifacts directory using the manifest's data meta.
+    pub fn load(artifacts_dir: &Path, manifest: &Manifest) -> Result<Dataset> {
+        let meta = manifest.meta_section("data")?;
+        let h = meta.req("h")?.as_usize().ok_or_else(|| anyhow!("h"))?;
+        let w = meta.req("w")?.as_usize().ok_or_else(|| anyhow!("w"))?;
+        let c = meta.req("c")?.as_usize().ok_or_else(|| anyhow!("c"))?;
+        let n_classes = meta
+            .req("n_classes")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("n_classes"))?;
+        let splits = meta.req("splits")?;
+        let load_split = |name: &str| -> Result<Split> {
+            let s = splits.req(name)?;
+            let n = s.req("n")?.as_usize().ok_or_else(|| anyhow!("n"))?;
+            let images = tensor_io::read_f32_exact(
+                &artifacts_dir.join(s.req("images")?.as_str().unwrap()),
+                n * c * h * w,
+            )?;
+            let labels =
+                tensor_io::read_u32(&artifacts_dir.join(s.req("labels")?.as_str().unwrap()))?;
+            if labels.len() != n {
+                return Err(anyhow!("{name}: {} labels for {n} images", labels.len()));
+            }
+            Ok(Split {
+                images,
+                labels,
+                n,
+                c,
+                h,
+                w,
+            })
+        };
+        Ok(Dataset {
+            train: load_split("train")?,
+            calib: load_split("calib")?,
+            test: load_split("test")?,
+            n_classes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_accessors() {
+        let s = Split {
+            images: (0..2 * 3 * 2 * 2).map(|i| i as f32).collect(),
+            labels: vec![1, 2],
+            n: 2,
+            c: 3,
+            h: 2,
+            w: 2,
+        };
+        assert_eq!(s.img_elems(), 12);
+        assert_eq!(s.image(1)[0], 12.0);
+        let b = s.gather(&[1, 0]);
+        assert_eq!(b.len(), 24);
+        assert_eq!(b[0], 12.0);
+        assert_eq!(b[12], 0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Top-1 accuracy over the test split.
+
+use anyhow::Result;
+
+use crate::coordinator::chain::{argmax_rows, ChainRunner, QuantCtx};
+use crate::data::Split;
+use crate::nn::engine::Engine;
+use crate::quant::tensor::Tensor;
+
+/// Accuracy via the full-model PJRT program (FP).
+pub fn eval_fp_accuracy(chain: &ChainRunner<'_>, test: &Split) -> Result<f64> {
+    eval_impl(chain, test, None, None)
+}
+
+/// FP accuracy over at most `limit` test images.
+pub fn eval_fp_accuracy_limited(
+    chain: &ChainRunner<'_>,
+    test: &Split,
+    limit: usize,
+) -> Result<f64> {
+    eval_impl(chain, test, None, Some(limit))
+}
+
+/// Accuracy via the full-model PJRT program (hard-quantized with the
+/// Pallas border kernel).
+pub fn eval_quant_accuracy(chain: &ChainRunner<'_>, test: &Split, q: &QuantCtx) -> Result<f64> {
+    eval_impl(chain, test, Some(q), None)
+}
+
+/// Quantized accuracy over at most `limit` test images.
+pub fn eval_quant_accuracy_limited(
+    chain: &ChainRunner<'_>,
+    test: &Split,
+    q: &QuantCtx,
+    limit: usize,
+) -> Result<f64> {
+    eval_impl(chain, test, Some(q), Some(limit))
+}
+
+fn eval_impl(
+    chain: &ChainRunner<'_>,
+    test: &Split,
+    q: Option<&QuantCtx<'_>>,
+    limit: Option<usize>,
+) -> Result<f64> {
+    let b = chain.batch;
+    let n = limit.unwrap_or(test.n).min(test.n);
+    let n_full = (n / b) * b;
+    let mut hits = 0usize;
+    for g in 0..n_full / b {
+        let idx: Vec<usize> = (g * b..(g + 1) * b).collect();
+        let x = Tensor::new(vec![b, test.c, test.h, test.w], test.gather(&idx))?;
+        let logits = chain.full(&x, q)?;
+        let pred = argmax_rows(&logits);
+        for (&i, &p) in idx.iter().zip(pred.iter()) {
+            if test.labels[i] as usize == p {
+                hits += 1;
+            }
+        }
+    }
+    Ok(hits as f64 / n_full as f64)
+}
+
+/// Accuracy via the pure-Rust engine (used for Table 1 and parity tests).
+pub fn eval_engine_accuracy(engine: &Engine, test: &Split, limit: Option<usize>) -> Result<f64> {
+    let n = limit.unwrap_or(test.n).min(test.n);
+    let mut hits = 0usize;
+    for i in 0..n {
+        let logits = engine.forward(test.image(i), None)?;
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if test.labels[i] as usize == pred {
+            hits += 1;
+        }
+    }
+    Ok(hits as f64 / n as f64)
+}

@@ -1,0 +1,12 @@
+//! Evaluation harness: accuracy over the test split (via the full-model
+//! PJRT programs), the Fig. 2 propagated-error profile, and the §5.3
+//! parameter-overhead accounting.
+
+pub mod accuracy;
+pub mod overhead;
+pub mod profile;
+
+pub use accuracy::{
+    eval_engine_accuracy, eval_fp_accuracy, eval_fp_accuracy_limited, eval_quant_accuracy,
+    eval_quant_accuracy_limited,
+};

@@ -1,0 +1,40 @@
+//! §5.3 parameter-overhead accounting: extra border-function parameters
+//! (3·i_c·k² per conv for the polynomial — α is absorbable) relative to
+//! the model's weight count, and the extra model size under a given
+//! weight bit-width with 16-bit border parameters.
+
+use crate::nn::topology::ModelTopo;
+
+/// Overhead of one model.
+#[derive(Debug, Clone)]
+pub struct OverheadReport {
+    pub model: String,
+    pub weight_params: usize,
+    pub border_params: usize,
+    /// border / weights.
+    pub param_ratio: f64,
+    /// Extra model size with 16-bit borders over `wbits`-bit weights.
+    pub size_ratio_w4: f64,
+}
+
+/// Compute the report (border = 3 polynomial coefficients per im2col row,
+/// shared across the layer's o_c output channels — the paper's 3/o_c
+/// argument).
+pub fn overhead(topo: &ModelTopo) -> OverheadReport {
+    let mut weight_params = 0usize;
+    let mut border_params = 0usize;
+    for l in topo.all_layers() {
+        weight_params += l.weight_elems();
+        border_params += 3 * l.rows;
+    }
+    let param_ratio = border_params as f64 / weight_params as f64;
+    // 16-bit borders vs 4-bit weights (paper's "3% of the model size" case)
+    let size_ratio_w4 = (border_params as f64 * 16.0) / (weight_params as f64 * 4.0);
+    OverheadReport {
+        model: topo.name.clone(),
+        weight_params,
+        border_params,
+        param_ratio,
+        size_ratio_w4,
+    }
+}

@@ -1,0 +1,68 @@
+//! Figure 2: the propagated error w.r.t. the noised activation x'.
+//!
+//! For a pixel of a mid-network layer's input, compare the noised
+//! (quantized-prefix) activation x' against the full-precision x over the
+//! calibration set, group x' into 16 magnitude clusters, and report the
+//! mean error per cluster — reproducing the two-phase trend the paper
+//! uses to justify the *quadratic* border (§4.2).
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::chain::{ChainRunner, QuantCtx};
+use crate::data::Split;
+use crate::quant::tensor::Tensor;
+
+/// One cluster row of Figure 2.
+#[derive(Debug, Clone)]
+pub struct ErrorCluster {
+    /// Cluster center (mean |x'| of members).
+    pub x_center: f32,
+    /// Mean error x' − x.
+    pub mean_err: f32,
+    /// Member count.
+    pub n: usize,
+}
+
+/// Profile the propagated error of `layer`'s input.
+pub fn propagated_error(
+    chain: &ChainRunner<'_>,
+    calib: &Split,
+    q: &QuantCtx<'_>,
+    layer: &str,
+    n_clusters: usize,
+) -> Result<Vec<ErrorCluster>> {
+    let b = chain.batch;
+    let n_groups = calib.n / b;
+    let mut fp_vals = Vec::new();
+    let mut nz_vals = Vec::new();
+    for g in 0..n_groups {
+        let idx: Vec<usize> = (g * b..(g + 1) * b).collect();
+        let x = Tensor::new(vec![b, calib.c, calib.h, calib.w], calib.gather(&idx))?;
+        let fp = chain.walk(&x, None)?;
+        let nz = chain.walk(&x, Some(q))?;
+        let fp_tap = fp.taps.get(layer).ok_or_else(|| anyhow!("no tap {layer}"))?;
+        let nz_tap = nz.taps.get(layer).ok_or_else(|| anyhow!("no tap {layer}"))?;
+        fp_vals.extend_from_slice(&fp_tap.data);
+        nz_vals.extend_from_slice(&nz_tap.data);
+    }
+    // Cluster by |x'| into equal-count bins (the paper's 16 clusters).
+    let mut order: Vec<usize> = (0..nz_vals.len()).collect();
+    order.sort_by(|&a, &b| nz_vals[a].abs().partial_cmp(&nz_vals[b].abs()).unwrap());
+    let per = order.len() / n_clusters;
+    let mut out = Vec::with_capacity(n_clusters);
+    for c in 0..n_clusters {
+        let members = &order[c * per..if c == n_clusters - 1 { order.len() } else { (c + 1) * per }];
+        let mut x_sum = 0.0f64;
+        let mut e_sum = 0.0f64;
+        for &i in members {
+            x_sum += nz_vals[i].abs() as f64;
+            e_sum += (nz_vals[i] - fp_vals[i]) as f64;
+        }
+        out.push(ErrorCluster {
+            x_center: (x_sum / members.len() as f64) as f32,
+            mean_err: (e_sum / members.len() as f64) as f32,
+            n: members.len(),
+        });
+    }
+    Ok(out)
+}

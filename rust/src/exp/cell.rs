@@ -1,0 +1,212 @@
+//! One experiment cell = model × method × bits: calibrate (cached on
+//! disk under artifacts/qstate/<tag>/) and evaluate top-1 accuracy.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Bits, Method, RunConfig};
+use crate::coordinator::chain::{ChainRunner, QuantCtx};
+use crate::coordinator::state::{Knobs, StateStore};
+use crate::coordinator::Calibrator;
+use crate::data::Dataset;
+use crate::eval::{eval_fp_accuracy_limited, eval_quant_accuracy_limited};
+use crate::nn::engine::LayerWeights;
+use crate::nn::loader;
+use crate::nn::topology::ModelTopo;
+use crate::runtime::Runtime;
+
+/// Methods compared in Table 3 (order matches the paper's rows).
+pub const QUANT_METHODS: &[Method] = &[
+    Method::AdaRound,
+    Method::Brecq,
+    Method::QDrop,
+    Method::AQuant,
+];
+
+/// Shared experiment context: runtime + dataset + per-model caches.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub dataset: Dataset,
+    pub results_dir: PathBuf,
+    pub iters_override: Option<u32>,
+    pub verbose: bool,
+    /// Cap on test images per accuracy evaluation (keeps the experiment
+    /// sweep tractable on a single-core testbed; the full split is 1536).
+    pub eval_limit: usize,
+    topos: HashMap<String, ModelTopo>,
+    weights: HashMap<String, HashMap<String, LayerWeights>>,
+}
+
+impl Ctx {
+    pub fn new(artifacts_dir: &str, iters_override: Option<u32>) -> Result<Ctx> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let manifest = rt
+            .manifest()
+            .ok_or_else(|| anyhow!("no manifest at {artifacts_dir}; run `make artifacts`"))?
+            .clone();
+        let dataset = Dataset::load(rt.artifacts_dir(), &manifest)?;
+        let mut topos = HashMap::new();
+        let mut weights = HashMap::new();
+        let models = manifest
+            .meta_section("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models meta"))?;
+        for name in models.keys() {
+            topos.insert(name.clone(), loader::load_topology(&manifest, name)?);
+            weights.insert(
+                name.clone(),
+                loader::load_weights(rt.artifacts_dir(), &manifest, name)?,
+            );
+        }
+        let results_dir = PathBuf::from("results");
+        std::fs::create_dir_all(&results_dir)?;
+        Ok(Ctx {
+            rt,
+            dataset,
+            results_dir,
+            iters_override,
+            verbose: false,
+            eval_limit: 512,
+            topos,
+            weights,
+        })
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.topos.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn topo(&self, model: &str) -> Result<&ModelTopo> {
+        self.topos
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))
+    }
+
+    pub fn weights(&self, model: &str) -> Result<&HashMap<String, LayerWeights>> {
+        self.weights
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model}"))
+    }
+
+    pub fn chain(&self, model: &str) -> Result<ChainRunner<'_>> {
+        ChainRunner::new(&self.rt, self.topo(model)?, self.weights(model)?)
+    }
+
+    /// FP baseline accuracy via the fp_full program.
+    pub fn fp_accuracy(&self, model: &str) -> Result<f64> {
+        eval_fp_accuracy_limited(&self.chain(model)?, &self.dataset.test, self.eval_limit)
+    }
+
+    /// Calibrate a cell (or load its cached state) and return the state.
+    pub fn calibrated_state(&self, cfg: &RunConfig) -> Result<StateStore> {
+        let qdir = self
+            .rt
+            .artifacts_dir()
+            .join("qstate")
+            .join(cfg.tag())
+            .join(format!("it{}", self.effective_iters(cfg)));
+        if qdir.join("index.tsv").exists() {
+            return StateStore::load(&qdir);
+        }
+        let mut cfg = cfg.clone();
+        cfg.calib.iters = self.effective_iters(&cfg);
+        let chain = self.chain(&cfg.model)?;
+        let mut calibrator = Calibrator::new(chain, cfg.clone());
+        calibrator.verbose = self.verbose;
+        let (st, _reports) = calibrator.run(&self.dataset.calib)?;
+        st.save(&qdir)?;
+        Ok(st)
+    }
+
+    fn effective_iters(&self, cfg: &RunConfig) -> u32 {
+        self.iters_override.unwrap_or(cfg.calib.iters)
+    }
+
+    /// Calibrate + evaluate one cell. Returns top-1 accuracy.
+    pub fn run_cell(&self, model: &str, method: Method, bits: Bits) -> Result<f64> {
+        let cfg = RunConfig::new(model, method, bits);
+        let st = self.calibrated_state(&cfg)?;
+        let chain = self.chain(model)?;
+        let q = QuantCtx {
+            state: &st,
+            bits,
+            knobs: Knobs::inference(method, bits),
+        };
+        eval_quant_accuracy_limited(&chain, &self.dataset.test, &q, self.eval_limit)
+    }
+
+    /// Append a rendered table to results/<file> and stdout.
+    pub fn emit(&self, file: &str, text: &str) -> Result<()> {
+        println!("{text}");
+        std::fs::write(self.results_dir.join(file), text)?;
+        Ok(())
+    }
+}
+
+/// Build a pure-Rust quantized inference engine from a calibrated cell:
+/// hard-quantized weights + the learned border function per layer. This is
+/// the serving path (no PJRT on the hot loop).
+pub fn build_quantized_engine(
+    ctx: &Ctx,
+    model: &str,
+    method: Method,
+    bits: Bits,
+) -> Result<crate::nn::engine::Engine> {
+    use crate::coordinator::state::bits_row_for;
+    use crate::nn::engine::{ActQuant, Engine};
+    use crate::quant::border::BorderFn;
+    use crate::quant::weights::harden;
+
+    let cfg = RunConfig::new(model, method, bits);
+    let st = ctx.calibrated_state(&cfg)?;
+    let topo = ctx.topo(model)?.clone();
+    let fp_weights = ctx.weights(model)?;
+    let knobs = Knobs::inference(method, bits);
+    let mut weights = HashMap::new();
+    let mut engine_quant: Vec<(String, ActQuant)> = Vec::new();
+    for l in topo.all_layers() {
+        let row = bits_row_for(&topo, bits, &l.name);
+        let lw = &fp_weights[&l.name];
+        let w = if bits.w_quantized() {
+            let s_w = st.get(&format!("state:{}.s_w", l.name))?;
+            let v = st.get(&format!("state:{}.V", l.name))?;
+            harden(&lw.w, &s_w.data, &v.data, l.oc, row.qmin_w, row.qmax_w)
+        } else {
+            lw.w.clone()
+        };
+        weights.insert(
+            l.name.clone(),
+            LayerWeights {
+                w,
+                b: lw.b.clone(),
+            },
+        );
+        if bits.a_quantized() {
+            let s_a = st.get(&format!("state:{}.s_a", l.name))?.data[0];
+            let bp = st.get(&format!("state:{}.bp", l.name))?;
+            let border = if knobs.border_en {
+                BorderFn::from_params(bp.data.clone(), l.k2(), knobs.fuse_en, knobs.b2_en)
+            } else {
+                BorderFn::nearest(l.rows, l.k2())
+            };
+            engine_quant.push((
+                l.name.clone(),
+                ActQuant::Border {
+                    border,
+                    s: s_a,
+                    qmin: row.qmin_a,
+                    qmax: row.qmax_a,
+                },
+            ));
+        }
+    }
+    let mut engine = Engine::new(topo, weights);
+    for (name, q) in engine_quant {
+        engine.set_act_quant(&name, q);
+    }
+    Ok(engine)
+}

@@ -1,0 +1,9 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§5) on this testbed. See DESIGN.md §5 for the experiment
+//! index and the expected shape of each result.
+
+pub mod cell;
+pub mod figs;
+pub mod tables;
+
+pub use cell::{Ctx, QUANT_METHODS};

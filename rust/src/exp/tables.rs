@@ -1,0 +1,184 @@
+//! Tables 1–4 of the paper, regenerated on this testbed.
+
+use anyhow::Result;
+
+use super::cell::{Ctx, QUANT_METHODS};
+use crate::config::{Bits, Method};
+use crate::coordinator::state::bits_row_for;
+use crate::nn::engine::{ActQuant, Engine};
+use crate::quant::border::BorderFn;
+use crate::quant::scale_search;
+
+fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+/// Table 1: A-rounding vs N-rounding under W32A2 (FP weights, 2-bit
+/// activations) — the motivation experiment. Pure-Rust engine + the
+/// SQuant-style flip algorithm.
+pub fn table1(ctx: &Ctx, test_limit: usize) -> Result<String> {
+    let mut rows = vec![
+        "Table 1: adjusted rounding (A-rounding) vs nearest rounding, W32A2".to_string(),
+        format!("(test subset: {test_limit} images; FP weights; 8-bit first/last layer)"),
+        format!("{:<14} {:>10} {:>12} {:>12}", "model", "FP", "N-rounding", "A-rounding"),
+    ];
+    let bits = Bits { w: 32, a: 2 };
+    for model in ctx.models() {
+        let topo = ctx.topo(&model)?.clone();
+        let weights = ctx.weights(&model)?.clone();
+        // FP engine accuracy (sanity anchor).
+        let fp_engine = Engine::new(topo.clone(), weights.clone());
+        let fp_acc =
+            crate::eval::eval_engine_accuracy(&fp_engine, &ctx.dataset.test, Some(test_limit))?;
+
+        // Per-layer activation scales from FP taps over a calib subset.
+        let mut taps: std::collections::HashMap<String, Vec<f32>> = Default::default();
+        for i in 0..64.min(ctx.dataset.calib.n) {
+            let mut t = Default::default();
+            fp_engine.forward(ctx.dataset.calib.image(i), Some(&mut t))?;
+            for (k, v) in t {
+                taps.entry(k).or_default().extend_from_slice(&v.data);
+            }
+        }
+        let mut scales = std::collections::HashMap::new();
+        for l in topo.all_layers() {
+            let row = bits_row_for(&topo, bits, &l.name);
+            let sample = scale_search::sample_values(&taps[&l.name], 8192, 0x7AB1E);
+            let s = scale_search::search_scale(&sample, row.qmin_a, row.qmax_a, 60);
+            scales.insert(l.name.clone(), (s, row));
+        }
+
+        let mut accs = Vec::new();
+        for around in [false, true] {
+            let mut eng = Engine::new(topo.clone(), weights.clone());
+            for l in topo.all_layers() {
+                let (s, row) = scales[&l.name];
+                let q = if around {
+                    ActQuant::ARound {
+                        s,
+                        qmin: row.qmin_a,
+                        qmax: row.qmax_a,
+                    }
+                } else {
+                    ActQuant::Border {
+                        border: BorderFn::nearest(l.rows, l.k2()),
+                        s,
+                        qmin: row.qmin_a,
+                        qmax: row.qmax_a,
+                    }
+                };
+                eng.set_act_quant(&l.name, q);
+            }
+            accs.push(crate::eval::eval_engine_accuracy(
+                &eng,
+                &ctx.dataset.test,
+                Some(test_limit),
+            )?);
+        }
+        rows.push(format!(
+            "{:<14} {:>10} {:>12} {:>12}",
+            model,
+            pct(fp_acc),
+            pct(accs[0]),
+            pct(accs[1])
+        ));
+    }
+    Ok(rows.join("\n") + "\n")
+}
+
+/// Table 2: activation-only quantization (W32A4, W32A2) — nearest vs
+/// QDrop vs AQuant. QDrop degenerates with FP weights (its optimization
+/// lives in the weights), which is exactly the paper's point.
+pub fn table2(ctx: &Ctx, models: &[String]) -> Result<String> {
+    let methods = [Method::Nearest, Method::QDrop, Method::AQuant];
+    let mut rows = vec![
+        "Table 2: activation-only quantization".to_string(),
+        format!(
+            "{:<14} {:>8} {:>10} {:>10} {:>10}",
+            "model", "bits", "Rounding", "QDrop", "AQuant"
+        ),
+    ];
+    for model in models {
+        let fp = ctx.fp_accuracy(model)?;
+        rows.push(format!("{:<14} {:>8} FP acc {}", model, "W32A32", pct(fp)));
+        for bits_s in ["W32A4", "W32A2"] {
+            let bits = Bits::parse(bits_s)?;
+            let mut accs = Vec::new();
+            for m in methods {
+                accs.push(ctx.run_cell(model, m, bits)?);
+            }
+            rows.push(format!(
+                "{:<14} {:>8} {:>10} {:>10} {:>10}",
+                model,
+                bits_s,
+                pct(accs[0]),
+                pct(accs[1]),
+                pct(accs[2])
+            ));
+        }
+    }
+    Ok(rows.join("\n") + "\n")
+}
+
+/// Table 3: fully quantized models, AdaRound / BRECQ / QDrop / AQuant at
+/// W4A4, W2A4, W3A3, W2A2.
+pub fn table3(ctx: &Ctx, models: &[String]) -> Result<String> {
+    let mut rows = vec![
+        "Table 3: fully quantized models".to_string(),
+        format!(
+            "{:<14} {:>6} {:>10} {:>10} {:>10} {:>10}",
+            "model", "bits", "AdaRound", "BRECQ", "QDrop", "AQuant"
+        ),
+    ];
+    for model in models {
+        let fp = ctx.fp_accuracy(model)?;
+        rows.push(format!("{:<14} {:>6} FP acc {}", model, "FP", pct(fp)));
+        for bits_s in ["W4A4", "W2A4", "W3A3", "W2A2"] {
+            let bits = Bits::parse(bits_s)?;
+            let mut accs = Vec::new();
+            for &m in QUANT_METHODS {
+                accs.push(ctx.run_cell(model, m, bits)?);
+            }
+            rows.push(format!(
+                "{:<14} {:>6} {:>10} {:>10} {:>10} {:>10}",
+                model,
+                bits_s,
+                pct(accs[0]),
+                pct(accs[1]),
+                pct(accs[2]),
+                pct(accs[3])
+            ));
+        }
+    }
+    Ok(rows.join("\n") + "\n")
+}
+
+/// Table 4: ablations — border function form (linear vs quadratic) and
+/// border fusion (on vs off), at W2A2 and W3A3.
+pub fn table4(ctx: &Ctx, models: &[String]) -> Result<String> {
+    let mut rows = vec![
+        "Table 4: border-function and border-fusion ablations".to_string(),
+        format!(
+            "{:<14} {:>6} {:>10} {:>10} | {:>10} {:>10}",
+            "model", "bits", "linear", "quadratic", "no-fusion", "fusion"
+        ),
+    ];
+    for model in models {
+        for bits_s in ["W2A2", "W3A3"] {
+            let bits = Bits::parse(bits_s)?;
+            let lin = ctx.run_cell(model, Method::AQuantLinear, bits)?;
+            let quad = ctx.run_cell(model, Method::AQuant, bits)?;
+            let nofuse = ctx.run_cell(model, Method::AQuantNoFusion, bits)?;
+            rows.push(format!(
+                "{:<14} {:>6} {:>10} {:>10} | {:>10} {:>10}",
+                model,
+                bits_s,
+                pct(lin),
+                pct(quad),
+                pct(nofuse),
+                pct(quad)
+            ));
+        }
+    }
+    Ok(rows.join("\n") + "\n")
+}

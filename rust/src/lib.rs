@@ -1,0 +1,26 @@
+//! AQuant: adaptive activation-rounding-border post-training quantization.
+//!
+//! A three-layer reproduction of *"Efficient Activation Quantization via
+//! Adaptive Rounding Border for Post-Training Quantization"* (AQuant):
+//!
+//! * **L3 (this crate)** — the PTQ coordinator: block-wise calibration
+//!   scheduling, rounding/annealing schedules, the pure-Rust quantization
+//!   substrate and integer inference engine, evaluation and serving.
+//! * **L2 (python/compile)** — JAX models and PTQ step graphs, AOT-lowered
+//!   to HLO text artifacts consumed by [`runtime`].
+//! * **L1 (python/compile/kernels)** — the Pallas fused border-quantization
+//!   kernel, verified against a pure-jnp oracle.
+//!
+//! Python runs only at build time (`make artifacts`); the request path is
+//! Rust + PJRT.
+
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod exp;

@@ -1,0 +1,176 @@
+//! `aquant` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                               manifest / artifact summary
+//!   calibrate --model M --method X --bits WaAb [--iters N]
+//!   eval      --model M --method X --bits WaAb
+//!   exp       <table1|table2|table3|table4|fig1|fig2|fig3|overhead|all>
+//!   serve     --model M --method X --bits WaAb --addr HOST:PORT
+//!
+//! All subcommands accept --artifacts DIR (default: artifacts).
+
+use anyhow::{bail, Result};
+
+use aquant::config::{Bits, Method, RunConfig};
+use aquant::exp::{cell::Ctx, figs, tables};
+use aquant::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "info" => info(&args),
+        "calibrate" => calibrate(&args),
+        "eval" => eval_cmd(&args),
+        "exp" => exp(&args),
+        "serve" => serve(&args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; see `aquant help`"),
+    }
+}
+
+const HELP: &str = "\
+aquant — adaptive activation-rounding-border PTQ (AQuant reproduction)
+
+USAGE: aquant <subcommand> [flags]
+
+  info                           artifact / manifest summary
+  calibrate --model M --method X --bits WaAb [--iters N]
+  eval      --model M --method X --bits WaAb [--iters N]
+  exp       <table1|table2|table3|table4|fig1|fig2|fig3|overhead|all>
+            [--iters N] [--models a,b] [--table1-limit N]
+  serve     --model M --method X --bits WaAb [--addr H:P] [--iters N]
+
+methods: nearest adaround brecq qdrop aquant aquant-linear aquant-nofusion
+bits:    e.g. W4A4, W2A2, W32A2 (32 = full precision)
+";
+
+fn ctx_from(args: &Args) -> Result<Ctx> {
+    let dir = args.str_flag("artifacts", "artifacts");
+    let iters = match args.flags.get("iters") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    let mut ctx = Ctx::new(&dir, iters)?;
+    ctx.verbose = args.bool_flag("verbose");
+    Ok(ctx)
+}
+
+fn info(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let manifest = ctx.rt.manifest().unwrap();
+    println!("platform: {}", ctx.rt.platform());
+    println!("producer: {}", manifest.producer);
+    println!("programs: {}", manifest.programs.len());
+    println!(
+        "dataset: train {} / calib {} / test {} ({} classes, {}x{}x{})",
+        ctx.dataset.train.n,
+        ctx.dataset.calib.n,
+        ctx.dataset.test.n,
+        ctx.dataset.n_classes,
+        ctx.dataset.test.c,
+        ctx.dataset.test.h,
+        ctx.dataset.test.w,
+    );
+    for model in ctx.models() {
+        let topo = ctx.topo(&model)?;
+        let n_params: usize = topo.all_layers().iter().map(|l| l.weight_elems()).sum();
+        println!(
+            "model {model}: {} blocks, {} layers, {} weight params, FP acc {:.2}%",
+            topo.blocks.len(),
+            topo.all_layers().len(),
+            n_params,
+            aquant::nn::loader::fp_accuracy(manifest, &model)? * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn parse_cell(args: &Args) -> Result<(String, Method, Bits)> {
+    Ok((
+        args.req_flag("model")?,
+        Method::parse(&args.req_flag("method")?)?,
+        Bits::parse(&args.req_flag("bits")?)?,
+    ))
+}
+
+fn calibrate(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let (model, method, bits) = parse_cell(args)?;
+    let cfg = RunConfig::new(&model, method, bits);
+    let t0 = std::time::Instant::now();
+    let _st = ctx.calibrated_state(&cfg)?;
+    println!(
+        "calibrated {} in {:.1}s (state cached under artifacts/qstate/{})",
+        cfg.tag(),
+        t0.elapsed().as_secs_f64(),
+        cfg.tag()
+    );
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let (model, method, bits) = parse_cell(args)?;
+    let fp = ctx.fp_accuracy(&model)?;
+    let acc = ctx.run_cell(&model, method, bits)?;
+    println!(
+        "{model} {} {}: top-1 {:.2}% (FP {:.2}%)",
+        method.name(),
+        bits.name(),
+        acc * 100.0,
+        fp * 100.0
+    );
+    Ok(())
+}
+
+fn exp(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let models = match args.flags.get("models") {
+        Some(m) => m.split(',').map(str::to_string).collect(),
+        None => ctx.models(),
+    };
+    let t1_limit = args.num_flag("table1-limit", 512usize)?;
+    let run = |name: &str| -> Result<()> {
+        let t0 = std::time::Instant::now();
+        match name {
+            "table1" => ctx.emit("table1.txt", &tables::table1(&ctx, t1_limit)?)?,
+            "table2" => ctx.emit("table2.txt", &tables::table2(&ctx, &models)?)?,
+            "table3" => ctx.emit("table3.txt", &tables::table3(&ctx, &models)?)?,
+            "table4" => ctx.emit("table4.txt", &tables::table4(&ctx, &models)?)?,
+            "fig1" => ctx.emit("fig1.txt", &figs::fig1())?,
+            "fig2" => ctx.emit("fig2.txt", &figs::fig2(&ctx, &models[0])?)?,
+            "fig3" => ctx.emit("fig3.txt", &figs::fig3(&ctx, &models[0], 4, 20)?)?,
+            "overhead" => ctx.emit("overhead.txt", &figs::overhead_table(&ctx)?)?,
+            other => bail!("unknown experiment {other:?}"),
+        }
+        eprintln!("[{name} done in {:.1}s]", t0.elapsed().as_secs_f64());
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "fig1", "overhead", "fig3", "table1", "fig2", "table2", "table3", "table4",
+        ] {
+            run(name)?;
+        }
+    } else {
+        run(which)?;
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let (model, method, bits) = parse_cell(args)?;
+    let addr = args.str_flag("addr", "127.0.0.1:7000");
+    let engine = aquant::exp::cell::build_quantized_engine(&ctx, &model, method, bits)?;
+    aquant::server::serve(std::sync::Arc::new(engine), &addr, None)?;
+    Ok(())
+}

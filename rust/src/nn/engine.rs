@@ -1,0 +1,281 @@
+//! Model execution over the pure-Rust im2col engine.
+//!
+//! The engine runs a whole model (or a single layer, for profiling) with
+//! per-layer activation-quantization hooks. It is used for:
+//!   * Table 1 (A-rounding vs nearest, W32A2) — `ActQuant::ARound`,
+//!   * Figure 3 (latency breakdown: fused vs unfused border) — `forward_timed`,
+//!   * the serving example (quantized inference without PJRT).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::im2col;
+use super::topology::{LayerTopo, ModelTopo};
+use crate::quant::arounding::around_column;
+use crate::quant::border::BorderFn;
+use crate::quant::tensor::Tensor;
+
+/// Activation quantization applied to each im2col column of a layer.
+#[derive(Debug, Clone)]
+pub enum ActQuant {
+    /// Full precision.
+    None,
+    /// Border-function quantization (nearest when params are zero /
+    /// border_en = false).
+    Border {
+        border: BorderFn,
+        s: f32,
+        qmin: f32,
+        qmax: f32,
+    },
+    /// The SQuant-style flip algorithm (Table 1's A-rounding).
+    ARound { s: f32, qmin: f32, qmax: f32 },
+}
+
+impl ActQuant {
+    fn apply(&self, col: &mut [f32], k2: usize, scratch: &mut Vec<f32>) {
+        match self {
+            ActQuant::None => {}
+            ActQuant::Border {
+                border,
+                s,
+                qmin,
+                qmax,
+            } => border.quant_column(col, *s, *qmin, *qmax, scratch),
+            ActQuant::ARound { s, qmin, qmax } => around_column(col, *s, *qmin, *qmax, k2),
+        }
+    }
+}
+
+/// One layer's (possibly pre-quantized) weights.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Border-fusion strategy for the conv loop (Figure 3's configurations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionMode {
+    /// Quantize each column inside the im2col gather (hot in cache).
+    Fused,
+    /// Gather everything, then a second quantization pass over the buffer.
+    Unfused,
+}
+
+/// The inference engine: topology + weights + per-layer activation quant.
+pub struct Engine {
+    pub topo: ModelTopo,
+    pub weights: HashMap<String, LayerWeights>,
+    pub act_quant: HashMap<String, ActQuant>,
+    pub fusion: FusionMode,
+}
+
+/// Per-layer timing sample from `forward_timed`.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub layer: String,
+    pub im2col_quant_us: f64,
+    pub gemm_us: f64,
+}
+
+impl Engine {
+    pub fn new(topo: ModelTopo, weights: HashMap<String, LayerWeights>) -> Self {
+        Engine {
+            topo,
+            weights,
+            act_quant: HashMap::new(),
+            fusion: FusionMode::Fused,
+        }
+    }
+
+    /// Set one layer's activation quantization.
+    pub fn set_act_quant(&mut self, layer: &str, q: ActQuant) {
+        self.act_quant.insert(layer.to_string(), q);
+    }
+
+    fn layer_weights(&self, name: &str) -> Result<&LayerWeights> {
+        self.weights
+            .get(name)
+            .ok_or_else(|| anyhow!("engine missing weights for {name}"))
+    }
+
+    /// Run one layer on one image (no relu). Returns (C,H,W) output and
+    /// fills `timing` when given.
+    fn run_layer(
+        &self,
+        l: &LayerTopo,
+        x: &[f32],
+        timing: Option<&mut LayerTiming>,
+    ) -> Result<Vec<f32>> {
+        let lw = self.layer_weights(&l.name)?;
+        let aq = self.act_quant.get(&l.name).unwrap_or(&ActQuant::None);
+        if l.kind == "fc" {
+            // GAP + matmul; the "patches" are the C-vector (R = ic, k2 = 1).
+            let (c, h, w) = l.in_chw;
+            let mut v = vec![0.0f32; c];
+            if l.gap_input && h * w > 1 {
+                for ci in 0..c {
+                    let plane = &x[ci * h * w..(ci + 1) * h * w];
+                    v[ci] = plane.iter().sum::<f32>() / (h * w) as f32;
+                }
+            } else {
+                v.copy_from_slice(&x[..c]);
+            }
+            let mut scratch = Vec::new();
+            aq.apply(&mut v, 1, &mut scratch);
+            let mut out = vec![0.0f32; l.oc];
+            for o in 0..l.oc {
+                let wrow = &lw.w[o * c..(o + 1) * c];
+                out[o] = wrow.iter().zip(&v).map(|(a, b)| a * b).sum::<f32>() + lw.b[o];
+            }
+            return Ok(out);
+        }
+        let (_, ho, wo) = l.out_chw;
+        let np = ho * wo;
+        let mut patches = vec![0.0f32; np * l.rows];
+        let k2 = l.k2();
+        let mut scratch = Vec::new();
+        let t0 = Instant::now();
+        match (self.fusion, matches!(aq, ActQuant::None)) {
+            (_, true) => im2col::extract(l, x, &mut patches),
+            (FusionMode::Fused, false) => {
+                im2col::extract_fused(l, x, &mut patches, |col| aq.apply(col, k2, &mut scratch))
+            }
+            (FusionMode::Unfused, false) => {
+                im2col::extract(l, x, &mut patches);
+                for p in 0..np {
+                    aq.apply(&mut patches[p * l.rows..(p + 1) * l.rows], k2, &mut scratch);
+                }
+            }
+        }
+        let t_im2col = t0.elapsed();
+        let mut out = vec![0.0f32; l.oc * np];
+        let t1 = Instant::now();
+        im2col::gemm(l, &lw.w, &lw.b, &patches, &mut out);
+        if let Some(t) = timing {
+            t.layer = l.name.clone();
+            t.im2col_quant_us = t_im2col.as_secs_f64() * 1e6;
+            t.gemm_us = t1.elapsed().as_secs_f64() * 1e6;
+        }
+        Ok(out)
+    }
+
+    /// Forward one image (C,H,W) -> logits. Optionally capture every
+    /// layer's *input* feature map into `taps` (for Fig. 2 profiling).
+    pub fn forward(
+        &self,
+        image: &[f32],
+        mut taps: Option<&mut HashMap<String, Tensor>>,
+    ) -> Result<Vec<f32>> {
+        let mut h = image.to_vec();
+        for blk in &self.topo.blocks {
+            let block_input = h.clone();
+            let main: Vec<&LayerTopo> = blk.main_layers().collect();
+            for (i, l) in main.iter().enumerate() {
+                if let Some(t) = taps.as_deref_mut() {
+                    t.insert(
+                        l.name.clone(),
+                        Tensor::new(vec![l.in_chw.0, l.in_chw.1, l.in_chw.2], h.clone())?,
+                    );
+                }
+                let mut out = self.run_layer(l, &h, None)?;
+                let is_last = i == main.len() - 1;
+                let defer_relu = is_last && blk.residual;
+                if l.relu && !defer_relu {
+                    for v in &mut out {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                h = out;
+            }
+            if blk.residual {
+                let skip = if let Some(ds) = blk.downsample_layer() {
+                    if let Some(t) = taps.as_deref_mut() {
+                        t.insert(
+                            ds.name.clone(),
+                            Tensor::new(
+                                vec![ds.in_chw.0, ds.in_chw.1, ds.in_chw.2],
+                                block_input.clone(),
+                            )?,
+                        );
+                    }
+                    self.run_layer(ds, &block_input, None)?
+                } else {
+                    block_input
+                };
+                for (a, b) in h.iter_mut().zip(&skip) {
+                    *a += b;
+                    if *a < 0.0 {
+                        *a = 0.0;
+                    }
+                }
+            }
+        }
+        Ok(h)
+    }
+
+    /// Forward one image, timing each conv layer (Figure 3).
+    pub fn forward_timed(&self, image: &[f32]) -> Result<Vec<LayerTiming>> {
+        let mut h = image.to_vec();
+        let mut timings = Vec::new();
+        for blk in &self.topo.blocks {
+            let block_input = h.clone();
+            let main: Vec<&LayerTopo> = blk.main_layers().collect();
+            for (i, l) in main.iter().enumerate() {
+                let mut t = LayerTiming {
+                    layer: String::new(),
+                    im2col_quant_us: 0.0,
+                    gemm_us: 0.0,
+                };
+                let mut out = self.run_layer(l, &h, Some(&mut t))?;
+                if l.kind == "conv" {
+                    timings.push(t);
+                }
+                let is_last = i == main.len() - 1;
+                if l.relu && !(is_last && blk.residual) {
+                    for v in &mut out {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                h = out;
+            }
+            if blk.residual {
+                let skip = if let Some(ds) = blk.downsample_layer() {
+                    self.run_layer(ds, &block_input, None)?
+                } else {
+                    block_input
+                };
+                for (a, b) in h.iter_mut().zip(&skip) {
+                    *a += b;
+                    if *a < 0.0 {
+                        *a = 0.0;
+                    }
+                }
+            }
+        }
+        Ok(timings)
+    }
+
+    /// Batch forward -> argmax class per image.
+    pub fn classify_batch(&self, images: &[&[f32]]) -> Result<Vec<usize>> {
+        images
+            .iter()
+            .map(|img| {
+                let logits = self.forward(img, None)?;
+                Ok(logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap())
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,210 @@
+//! im2col patch extraction, matching the JAX
+//! `conv_general_dilated_patches` row ordering (channel-major:
+//! row = c·k² + kh·k + kw; groups occupy contiguous row ranges).
+//!
+//! Layout: patches are stored **column-major per output pixel** — the
+//! buffer is `(P, R)` row-major with P = ho·wo, so each output pixel's R
+//! patch values are contiguous. This makes both the border quantization
+//! (which operates on one im2col column = one VDP vector) and the GEMM
+//! inner loop cache-friendly.
+//!
+//! `extract_fused` applies a column-quantization hook while the gathered
+//! column is still hot in cache — the Figure 3 "fused" configuration; the
+//! unfused path does a second pass over the full patch buffer.
+
+use super::topology::LayerTopo;
+
+/// Plain im2col: gather patches of `x` (C,H,W) into `out` (P·R).
+pub fn extract(l: &LayerTopo, x: &[f32], out: &mut [f32]) {
+    extract_impl(l, x, out, |_col| {});
+}
+
+/// im2col with a per-column hook applied while the column is hot.
+pub fn extract_fused<F: FnMut(&mut [f32])>(l: &LayerTopo, x: &[f32], out: &mut [f32], hook: F) {
+    extract_impl(l, x, out, hook);
+}
+
+#[inline(always)]
+fn extract_impl<F: FnMut(&mut [f32])>(l: &LayerTopo, x: &[f32], out: &mut [f32], mut hook: F) {
+    let (c_in, h, w) = l.in_chw;
+    let (_, ho, wo) = l.out_chw;
+    let (k, s, p) = (l.k, l.stride, l.pad);
+    let r = l.rows;
+    debug_assert_eq!(x.len(), c_in * h * w);
+    debug_assert_eq!(out.len(), ho * wo * r);
+    let k2 = k * k;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let col = &mut out[(oy * wo + ox) * r..(oy * wo + ox + 1) * r];
+            let base_y = (oy * s) as isize - p as isize;
+            let base_x = (ox * s) as isize - p as isize;
+            for c in 0..c_in {
+                let plane = &x[c * h * w..(c + 1) * h * w];
+                let dst = &mut col[c * k2..(c + 1) * k2];
+                let mut i = 0;
+                for ky in 0..k {
+                    let yy = base_y + ky as isize;
+                    if yy < 0 || yy >= h as isize {
+                        for _ in 0..k {
+                            dst[i] = 0.0;
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    let row = &plane[yy as usize * w..(yy as usize + 1) * w];
+                    for kx in 0..k {
+                        let xx = base_x + kx as isize;
+                        dst[i] = if xx < 0 || xx >= w as isize {
+                            0.0
+                        } else {
+                            row[xx as usize]
+                        };
+                        i += 1;
+                    }
+                }
+            }
+            hook(col);
+        }
+    }
+}
+
+/// GEMM over extracted patches: `out[o][p] = Σ_r w[o][r_g] · patches[p][r]`
+/// with grouped row ranges, plus bias. `out` is (oc, P) row-major.
+pub fn gemm(l: &LayerTopo, wts: &[f32], bias: &[f32], patches: &[f32], out: &mut [f32]) {
+    let (_, ho, wo) = l.out_chw;
+    let np = ho * wo;
+    let r = l.rows;
+    let rg = l.rows_per_group();
+    let ocg = l.oc / l.groups;
+    debug_assert_eq!(wts.len(), l.oc * rg);
+    debug_assert_eq!(out.len(), l.oc * np);
+    for o in 0..l.oc {
+        let g = o / ocg;
+        let wrow = &wts[o * rg..(o + 1) * rg];
+        let b = bias[o];
+        let orow = &mut out[o * np..(o + 1) * np];
+        for p in 0..np {
+            let col = &patches[p * r + g * rg..p * r + (g + 1) * rg];
+            let mut acc = 0.0f32;
+            for (a, b_) in wrow.iter().zip(col) {
+                acc += a * b_;
+            }
+            orow[p] = acc + b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::topology::LayerTopo;
+
+    fn layer(ic: usize, oc: usize, k: usize, stride: usize, pad: usize, groups: usize, h: usize, w: usize) -> LayerTopo {
+        let ho = (h + 2 * pad - k) / stride + 1;
+        let wo = (w + 2 * pad - k) / stride + 1;
+        LayerTopo {
+            name: "t".into(),
+            kind: "conv".into(),
+            ic,
+            oc,
+            k,
+            stride,
+            pad,
+            groups,
+            relu: false,
+            gap_input: false,
+            rows: ic * k * k,
+            in_chw: (ic, h, w),
+            out_chw: (oc, ho, wo),
+        }
+    }
+
+    /// Naive direct convolution for cross-checking.
+    fn conv_naive(l: &LayerTopo, wts: &[f32], bias: &[f32], x: &[f32]) -> Vec<f32> {
+        let (ic, h, w) = l.in_chw;
+        let (oc, ho, wo) = l.out_chw;
+        let icg = ic / l.groups;
+        let ocg = oc / l.groups;
+        let mut out = vec![0.0f32; oc * ho * wo];
+        for o in 0..oc {
+            let g = o / ocg;
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = bias[o];
+                    for ci in 0..icg {
+                        let c = g * icg + ci;
+                        for ky in 0..l.k {
+                            for kx in 0..l.k {
+                                let yy = (oy * l.stride + ky) as isize - l.pad as isize;
+                                let xx = (ox * l.stride + kx) as isize - l.pad as isize;
+                                if yy < 0 || yy >= h as isize || xx < 0 || xx >= w as isize {
+                                    continue;
+                                }
+                                let xv = x[c * h * w + yy as usize * w + xx as usize];
+                                let wv = wts[o * icg * l.k * l.k + ci * l.k * l.k + ky * l.k + kx];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out[o * ho * wo + oy * wo + ox] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    fn check_layer(l: LayerTopo, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let (ic, h, w) = l.in_chw;
+        let x: Vec<f32> = (0..ic * h * w).map(|_| rng.normal()).collect();
+        let wts: Vec<f32> = (0..l.weight_elems()).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..l.oc).map(|_| rng.normal()).collect();
+        let (_, ho, wo) = l.out_chw;
+        let mut patches = vec![0.0f32; ho * wo * l.rows];
+        extract(&l, &x, &mut patches);
+        let mut out = vec![0.0f32; l.oc * ho * wo];
+        gemm(&l, &wts, &bias, &patches, &mut out);
+        let expect = conv_naive(&l, &wts, &bias, &x);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conv_matches_naive_basic() {
+        check_layer(layer(3, 5, 3, 1, 1, 1, 7, 7), 1);
+    }
+
+    #[test]
+    fn conv_matches_naive_strided() {
+        check_layer(layer(4, 6, 3, 2, 1, 1, 8, 8), 2);
+    }
+
+    #[test]
+    fn conv_matches_naive_1x1() {
+        check_layer(layer(8, 4, 1, 1, 0, 1, 6, 6), 3);
+    }
+
+    #[test]
+    fn conv_matches_naive_grouped() {
+        check_layer(layer(8, 8, 3, 1, 1, 4, 6, 6), 4);
+    }
+
+    #[test]
+    fn conv_matches_naive_depthwise() {
+        check_layer(layer(6, 6, 3, 2, 1, 6, 8, 8), 5);
+    }
+
+    #[test]
+    fn fused_hook_sees_every_column() {
+        let l = layer(2, 2, 3, 1, 1, 1, 4, 4);
+        let x: Vec<f32> = (0..2 * 16).map(|i| i as f32).collect();
+        let mut patches = vec![0.0f32; 16 * l.rows];
+        let mut count = 0;
+        extract_fused(&l, &x, &mut patches, |col| {
+            assert_eq!(col.len(), l.rows);
+            count += 1;
+        });
+        assert_eq!(count, 16);
+    }
+}

@@ -1,0 +1,78 @@
+//! Load topologies, folded FP weights, and qinit tensors from the
+//! artifacts directory (manifest `meta.models` / `meta.weights` /
+//! `meta.qinit` sections).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::LayerWeights;
+use super::topology::ModelTopo;
+use crate::runtime::Manifest;
+use crate::util::tensor_io;
+
+/// Parse a model's topology from the manifest.
+pub fn load_topology(manifest: &Manifest, model: &str) -> Result<ModelTopo> {
+    let j = manifest.meta_section("models")?.req(model)?;
+    ModelTopo::from_json(j)
+}
+
+/// Load a model's folded FP weights.
+pub fn load_weights(
+    artifacts_dir: &Path,
+    manifest: &Manifest,
+    model: &str,
+) -> Result<HashMap<String, LayerWeights>> {
+    let meta = manifest.meta_section("weights")?.req(model)?;
+    let topo = load_topology(manifest, model)?;
+    let mut out = HashMap::new();
+    for l in topo.all_layers() {
+        let m = meta.req(&l.name)?;
+        let w = tensor_io::read_f32_exact(
+            &artifacts_dir.join(m.req("w")?.as_str().unwrap()),
+            l.weight_elems(),
+        )?;
+        let b = tensor_io::read_f32_exact(
+            &artifacts_dir.join(m.req("b")?.as_str().unwrap()),
+            l.oc,
+        )?;
+        out.insert(l.name.clone(), LayerWeights { w, b });
+    }
+    Ok(out)
+}
+
+/// Load a model's per-bit-width weight-quantization init (s_w, V).
+pub fn load_qinit(
+    artifacts_dir: &Path,
+    manifest: &Manifest,
+    model: &str,
+    layer: &str,
+    wbits: u32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let meta = manifest
+        .meta_section("qinit")?
+        .req(model)?
+        .req(&wbits.to_string())?
+        .req(layer)?;
+    let topo = load_topology(manifest, model)?;
+    let l = topo.layer(layer)?;
+    let s_w = tensor_io::read_f32_exact(
+        &artifacts_dir.join(meta.req("s_w")?.as_str().unwrap()),
+        l.oc,
+    )?;
+    let v = tensor_io::read_f32_exact(
+        &artifacts_dir.join(meta.req("V")?.as_str().unwrap()),
+        l.weight_elems(),
+    )?;
+    Ok((s_w, v))
+}
+
+/// FP test accuracy recorded by the trainer (manifest `meta.fp_acc`).
+pub fn fp_accuracy(manifest: &Manifest, model: &str) -> Result<f64> {
+    manifest
+        .meta_section("fp_acc")?
+        .req(model)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("fp_acc not a number"))
+}

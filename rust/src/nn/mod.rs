@@ -1,0 +1,15 @@
+//! Pure-Rust integer inference engine.
+//!
+//! Mirrors the im2col-conv formulation of the JAX side (verified
+//! numerically in integration tests against the PJRT `fp_*`/`q_*`
+//! programs) and is the measurable substrate for Figure 3: the border
+//! function either **fused into the im2col gather** (the paper's kernel-
+//! fusion claim) or run as a separate pass.
+
+pub mod engine;
+pub mod im2col;
+pub mod loader;
+pub mod topology;
+
+pub use engine::{ActQuant, Engine, LayerWeights};
+pub use topology::{BlockTopo, LayerTopo, ModelTopo};

@@ -1,0 +1,231 @@
+//! Model topology, mirrored from the manifest's `meta.models` section
+//! (produced by `python/compile/aot.py::model_topology_meta`).
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One matmul-bearing layer (conv as im2col×matmul, or fc).
+#[derive(Debug, Clone)]
+pub struct LayerTopo {
+    pub name: String,
+    pub kind: String, // "conv" | "fc"
+    pub ic: usize,
+    pub oc: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub relu: bool,
+    pub gap_input: bool,
+    /// im2col rows R = ic·k².
+    pub rows: usize,
+    /// Input (C, H, W).
+    pub in_chw: (usize, usize, usize),
+    /// Output (C, H, W).
+    pub out_chw: (usize, usize, usize),
+}
+
+impl LayerTopo {
+    pub fn k2(&self) -> usize {
+        if self.kind == "fc" {
+            1
+        } else {
+            self.k * self.k
+        }
+    }
+
+    pub fn rows_per_group(&self) -> usize {
+        (self.ic / self.groups) * self.k2()
+    }
+
+    /// Weight matrix shape (oc, rows_per_group).
+    pub fn weight_elems(&self) -> usize {
+        self.oc * self.rows_per_group()
+    }
+
+    fn from_json(j: &Json) -> Result<LayerTopo> {
+        let us = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("layer field {k} not a number"))
+        };
+        let chw = |k: &str| -> Result<(usize, usize, usize)> {
+            let v = j.req(k)?.as_i64_vec()?;
+            Ok((v[0] as usize, v[1] as usize, v[2] as usize))
+        };
+        Ok(LayerTopo {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("layer name"))?
+                .to_string(),
+            kind: j
+                .req("kind")?
+                .as_str()
+                .ok_or_else(|| anyhow!("layer kind"))?
+                .to_string(),
+            ic: us("ic")?,
+            oc: us("oc")?,
+            k: us("k")?,
+            stride: us("stride")?,
+            pad: us("pad")?,
+            groups: us("groups")?,
+            relu: j.req("relu")?.as_bool().unwrap_or(false),
+            gap_input: j.req("gap_input")?.as_bool().unwrap_or(false),
+            rows: us("rows")?,
+            in_chw: chw("in_chw")?,
+            out_chw: chw("out_chw")?,
+        })
+    }
+}
+
+/// A reconstruction/wiring block.
+#[derive(Debug, Clone)]
+pub struct BlockTopo {
+    pub name: String,
+    pub residual: bool,
+    /// Name of the skip-path 1×1 projection, if any (listed in `layers`).
+    pub downsample: Option<String>,
+    /// Main-path layers in order, downsample (if any) last.
+    pub layers: Vec<LayerTopo>,
+}
+
+impl BlockTopo {
+    /// Main-path layers (excluding the downsample projection).
+    pub fn main_layers(&self) -> impl Iterator<Item = &LayerTopo> {
+        let ds = self.downsample.clone();
+        self.layers
+            .iter()
+            .filter(move |l| Some(&l.name) != ds.as_ref())
+    }
+
+    pub fn downsample_layer(&self) -> Option<&LayerTopo> {
+        let ds = self.downsample.as_ref()?;
+        self.layers.iter().find(|l| &l.name == ds)
+    }
+}
+
+/// A whole model.
+#[derive(Debug, Clone)]
+pub struct ModelTopo {
+    pub name: String,
+    pub in_c: usize,
+    pub in_hw: (usize, usize),
+    pub n_classes: usize,
+    pub blocks: Vec<BlockTopo>,
+}
+
+impl ModelTopo {
+    pub fn from_json(j: &Json) -> Result<ModelTopo> {
+        let blocks = j
+            .req("blocks")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("blocks not an array"))?
+            .iter()
+            .map(|b| {
+                Ok(BlockTopo {
+                    name: b
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("block name"))?
+                        .to_string(),
+                    residual: b.req("residual")?.as_bool().unwrap_or(false),
+                    downsample: b
+                        .get("downsample")
+                        .and_then(|d| d.as_str())
+                        .map(str::to_string),
+                    layers: b
+                        .req("layers")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("layers not an array"))?
+                        .iter()
+                        .map(LayerTopo::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let hw = j.req("in_hw")?.as_i64_vec()?;
+        Ok(ModelTopo {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("model name"))?
+                .to_string(),
+            in_c: j.req("in_c")?.as_usize().ok_or_else(|| anyhow!("in_c"))?,
+            in_hw: (hw[0] as usize, hw[1] as usize),
+            n_classes: j
+                .req("n_classes")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("n_classes"))?,
+            blocks,
+        })
+    }
+
+    /// All layers in execution order (downsamples included, after their
+    /// block's main path — matching `ModelDef.all_layers()` in python).
+    pub fn all_layers(&self) -> Vec<&LayerTopo> {
+        let mut out = Vec::new();
+        for b in &self.blocks {
+            out.extend(b.layers.iter());
+        }
+        out
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerTopo> {
+        self.all_layers()
+            .into_iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow!("layer {name:?} not in model {}", self.name))
+    }
+
+    /// First / last layer names (kept at 8 bits per the paper).
+    pub fn first_layer(&self) -> &str {
+        &self.blocks[0].layers[0].name
+    }
+
+    pub fn last_layer(&self) -> &str {
+        let b = self.blocks.last().unwrap();
+        &b.layers.last().unwrap().name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "tiny", "in_c": 3, "in_hw": [8, 8], "n_classes": 4,
+      "blocks": [
+        {"name": "stem", "residual": false, "downsample": null, "layers": [
+          {"name": "stem_c", "kind": "conv", "ic": 3, "oc": 8, "k": 3,
+           "stride": 1, "pad": 1, "groups": 1, "relu": true,
+           "gap_input": false, "rows": 27, "in_chw": [3, 8, 8],
+           "out_chw": [8, 8, 8]}]},
+        {"name": "b1", "residual": true, "downsample": "b1_ds", "layers": [
+          {"name": "b1_c1", "kind": "conv", "ic": 8, "oc": 16, "k": 3,
+           "stride": 2, "pad": 1, "groups": 1, "relu": true,
+           "gap_input": false, "rows": 72, "in_chw": [8, 8, 8],
+           "out_chw": [16, 4, 4]},
+          {"name": "b1_ds", "kind": "conv", "ic": 8, "oc": 16, "k": 1,
+           "stride": 2, "pad": 0, "groups": 1, "relu": false,
+           "gap_input": false, "rows": 8, "in_chw": [8, 8, 8],
+           "out_chw": [16, 4, 4]}]}
+      ]}"#;
+
+    #[test]
+    fn parse_topology() {
+        let m = ModelTopo::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.blocks.len(), 2);
+        assert_eq!(m.first_layer(), "stem_c");
+        assert_eq!(m.last_layer(), "b1_ds");
+        let b1 = &m.blocks[1];
+        assert_eq!(b1.main_layers().count(), 1);
+        assert_eq!(b1.downsample_layer().unwrap().name, "b1_ds");
+        let l = m.layer("b1_c1").unwrap();
+        assert_eq!(l.rows, 72);
+        assert_eq!(l.k2(), 9);
+        assert_eq!(l.weight_elems(), 16 * 72);
+    }
+}

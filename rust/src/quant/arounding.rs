@@ -1,0 +1,212 @@
+//! A-rounding: the SQuant-style activation flip algorithm from the paper's
+//! §3 / Appendix A — the *motivation* baseline of Table 1.
+//!
+//! Given one im2col activation vector (reshaped (i_c, k²)), start from
+//! nearest rounding and flip individual elements up/down so that
+//!   1. each input channel's rounding-error sum |s_i| ≤ 0.5, then
+//!   2. the whole vector's error sum |Σ s_i| ≤ 0.5, flipping at most one
+//!      element per channel to preserve the per-channel constraint.
+//! Flips prefer elements whose rounding error is closest to ±0.5 (smallest
+//! element-wise damage). This costs O(R log R) per vector at inference —
+//! exactly the "heavy overhead, impractical to use" scheme the paper
+//! replaces with the border function; we implement it to reproduce
+//! Table 1.
+
+/// One element's state during flipping.
+#[derive(Clone, Copy)]
+struct Elem {
+    /// quantized code
+    q: f32,
+    /// rounding error in code units: q − x/s
+    err: f32,
+}
+
+/// Flip-quantize one im2col column in place (dequantized values written
+/// back). `k2` = per-channel segment length; `col.len()` must be a
+/// multiple of `k2`.
+pub fn around_column(col: &mut [f32], s: f32, qmin: f32, qmax: f32, k2: usize) {
+    let rows = col.len();
+    debug_assert_eq!(rows % k2, 0);
+    let mut elems: Vec<Elem> = col
+        .iter()
+        .map(|&x| {
+            let xs = x / s;
+            let q = (xs - 0.5).ceil().clamp(qmin, qmax);
+            Elem { q, err: q - xs }
+        })
+        .collect();
+
+    let n_ch = rows / k2;
+    let mut ch_sum = vec![0.0f32; n_ch];
+
+    // Stage 1: per-channel constraint |s_i| <= 0.5.
+    for ch in 0..n_ch {
+        let seg = ch * k2..(ch + 1) * k2;
+        let mut sum: f32 = elems[seg.clone()].iter().map(|e| e.err).sum();
+        // flips needed (each changes sum by ∓1)
+        while sum > 0.5 {
+            if !flip_best(&mut elems, ch * k2, k2, true, qmin, qmax) {
+                break;
+            }
+            sum -= 1.0;
+        }
+        while sum < -0.5 {
+            if !flip_best(&mut elems, ch * k2, k2, false, qmin, qmax) {
+                break;
+            }
+            sum += 1.0;
+        }
+        ch_sum[ch] = elems[seg].iter().map(|e| e.err).sum();
+    }
+
+    // Stage 2: global constraint, at most one flip per channel.
+    let mut total: f32 = ch_sum.iter().sum();
+    let mut used = vec![false; n_ch];
+    while total > 0.5 {
+        let Some(ch) = best_channel(&elems, &used, k2, true, qmin, qmax) else {
+            break;
+        };
+        flip_best(&mut elems, ch * k2, k2, true, qmin, qmax);
+        used[ch] = true;
+        total -= 1.0;
+    }
+    while total < -0.5 {
+        let Some(ch) = best_channel(&elems, &used, k2, false, qmin, qmax) else {
+            break;
+        };
+        flip_best(&mut elems, ch * k2, k2, false, qmin, qmax);
+        used[ch] = true;
+        total += 1.0;
+    }
+
+    for (c, e) in col.iter_mut().zip(&elems) {
+        *c = s * e.q;
+    }
+}
+
+/// Flip the element in `seg` whose post-flip |error| is smallest.
+/// `down`: flip code down (err -= 1) else up (err += 1).
+/// Returns false if no element can flip (clip bounds).
+fn flip_best(elems: &mut [Elem], start: usize, k2: usize, down: bool, qmin: f32, qmax: f32) -> bool {
+    let mut best: Option<(usize, f32)> = None;
+    for j in start..start + k2 {
+        let e = elems[j];
+        let (new_q, new_err) = if down {
+            (e.q - 1.0, e.err - 1.0)
+        } else {
+            (e.q + 1.0, e.err + 1.0)
+        };
+        if new_q < qmin || new_q > qmax {
+            continue;
+        }
+        let cost = new_err.abs();
+        if best.map(|(_, c)| cost < c).unwrap_or(true) {
+            best = Some((j, cost));
+        }
+    }
+    if let Some((j, _)) = best {
+        if down {
+            elems[j].q -= 1.0;
+            elems[j].err -= 1.0;
+        } else {
+            elems[j].q += 1.0;
+            elems[j].err += 1.0;
+        }
+        true
+    } else {
+        false
+    }
+}
+
+/// Channel (not yet `used`) offering the cheapest flip in the needed
+/// direction.
+fn best_channel(
+    elems: &[Elem],
+    used: &[bool],
+    k2: usize,
+    down: bool,
+    qmin: f32,
+    qmax: f32,
+) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (ch, &u) in used.iter().enumerate() {
+        if u {
+            continue;
+        }
+        for j in ch * k2..(ch + 1) * k2 {
+            let e = elems[j];
+            let (new_q, new_err) = if down {
+                (e.q - 1.0, e.err - 1.0)
+            } else {
+                (e.q + 1.0, e.err + 1.0)
+            };
+            if new_q < qmin || new_q > qmax {
+                continue;
+            }
+            let cost = new_err.abs();
+            if best.map(|(_, c)| cost < c).unwrap_or(true) {
+                best = Some((ch, cost));
+            }
+        }
+    }
+    best.map(|(ch, _)| ch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn err_sum(col: &[f32], orig: &[f32], s: f32) -> f32 {
+        col.iter().zip(orig).map(|(q, x)| q / s - x / s).sum()
+    }
+
+    #[test]
+    fn error_sum_constrained() {
+        prop::check_default("A-rounding bounds the error sum", |rng| {
+            let k2 = 4;
+            let n_ch = 1 + rng.below(8);
+            let rows = n_ch * k2;
+            let s = rng.range_f32(0.05, 0.5);
+            // strictly interior values so flips are always possible
+            let orig = prop::vec_f32(rng, rows, 2.0 * s, 10.0 * s);
+            let mut col = orig.clone();
+            around_column(&mut col, s, 0.0, 63.0, k2);
+            let total = err_sum(&col, &orig, s);
+            assert!(total.abs() <= 0.5 + 1e-4, "total err {total}");
+            // per-channel sums bounded by 1.5 (stage-2 flips may add 1 to a
+            // channel that was already ≤ 0.5)
+            for ch in 0..n_ch {
+                let e = err_sum(&col[ch * k2..(ch + 1) * k2], &orig[ch * k2..(ch + 1) * k2], s);
+                assert!(e.abs() <= 1.5 + 1e-4, "channel err {e}");
+            }
+        });
+    }
+
+    #[test]
+    fn element_error_stays_bounded() {
+        prop::check_default("A-rounding flips at most once per element scale", |rng| {
+            let k2 = 9;
+            let rows = 2 * k2;
+            let s = 0.25;
+            let orig = prop::vec_f32(rng, rows, 1.0, 10.0);
+            let mut col = orig.clone();
+            around_column(&mut col, s, 0.0, 63.0, k2);
+            for (q, x) in col.iter().zip(&orig) {
+                // nearest gives |err| <= 0.5; one flip can push it to 1.5
+                assert!((q / s - x / s).abs() <= 1.5 + 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn respects_clip_bounds() {
+        let k2 = 2;
+        let s = 1.0;
+        let mut col = vec![0.2, 0.3, 0.1, 0.4]; // all round to 0 at qmin
+        around_column(&mut col, s, 0.0, 3.0, k2);
+        for &v in &col {
+            assert!((0.0..=3.0).contains(&v));
+        }
+    }
+}

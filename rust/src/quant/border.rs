@@ -1,0 +1,317 @@
+//! The paper's adaptive rounding border (Eq. 8 + Eq. 9), mirroring
+//! `python/compile/quant.py` / the Pallas kernel bit-for-bit:
+//!
+//!   xs = x / s
+//!   u  = b2·xs² + b1·xs + b0
+//!   Bᴱ = 0.5 + (sigmoid(2.5·u) − 0.5)        (bounded, Appendix B)
+//!   Bᴵ = segment mean of α·Bᴱ over each input channel's k² taps (fusion)
+//!   x̂  = s·clip(⌈xs − B⌉, qmin, qmax)
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Fast `sigmoid(2.5u) − 0.5 = 0.5·tanh(1.25u)` for the inference hot
+/// path. Uses a clamped rational tanh approximation (max abs error vs
+/// the exact offset < 2e-3 — a rounding decision flips only when an
+/// activation sits within that distance of the border; the accuracy
+/// effect is below eval noise, see EXPERIMENTS.md §Perf).
+#[inline(always)]
+fn fast_offset(u: f32) -> f32 {
+    // tanh(x) via the 7th-order Lambert continued fraction, clamped where
+    // tanh has saturated anyway (|tanh(4)| > 0.9993).
+    let x = (1.25 * u).clamp(-4.0, 4.0);
+    let x2 = x * x;
+    let p = x * (10395.0 + x2 * (1260.0 + x2 * 21.0));
+    let q = 10395.0 + x2 * (4725.0 + x2 * (210.0 + x2));
+    0.5 * (p / q)
+}
+
+/// Border parameters for one layer: rows = i_c·k² im2col rows, columns
+/// [b0, b1, b2, alpha] (matching the `(R, 4)` state tensor).
+#[derive(Debug, Clone)]
+pub struct BorderFn {
+    /// (R, 4) row-major (as shipped in the `state:*.bp` tensors).
+    pub params: Vec<f32>,
+    /// Structure-of-arrays copies for the vectorizable hot loop.
+    b0: Vec<f32>,
+    b1: Vec<f32>,
+    b2: Vec<f32>,
+    alpha: Vec<f32>,
+    pub rows: usize,
+    /// Segment length for fusion (k²).
+    pub k2: usize,
+    pub border_en: bool,
+    pub fuse_en: bool,
+    pub b2_en: bool,
+}
+
+impl BorderFn {
+    /// Identity border (nearest rounding): all params zero.
+    pub fn nearest(rows: usize, k2: usize) -> Self {
+        let mut b = BorderFn::from_params(vec![0.0; rows * 4], k2, false, false);
+        b.border_en = false;
+        b
+    }
+
+    /// From a learned (R,4) table.
+    pub fn from_params(params: Vec<f32>, k2: usize, fuse_en: bool, b2_en: bool) -> Self {
+        let rows = params.len() / 4;
+        let col = |i: usize| params.iter().skip(i).step_by(4).copied().collect::<Vec<f32>>();
+        BorderFn {
+            b0: col(0),
+            b1: col(1),
+            b2: col(2),
+            alpha: col(3),
+            params,
+            rows,
+            k2,
+            border_en: true,
+            fuse_en,
+            b2_en,
+        }
+    }
+
+    #[inline]
+    fn row(&self, r: usize) -> (f32, f32, f32, f32) {
+        let p = &self.params[r * 4..r * 4 + 4];
+        (p[0], p[1], p[2], p[3])
+    }
+
+    /// Element-wise border Bᴱ for one normalized activation. Uses the
+    /// fast tanh-rational offset (see `fast_offset`); `be_exact` keeps the
+    /// exp-based reference.
+    #[inline(always)]
+    pub fn be(&self, r: usize, xs: f32) -> f32 {
+        if !self.border_en {
+            return 0.5;
+        }
+        let (b0, b1, b2, _) = self.row(r);
+        let b2 = if self.b2_en { b2 } else { 0.0 };
+        let u = b2 * xs * xs + b1 * xs + b0;
+        0.5 + fast_offset(u)
+    }
+
+    /// Exact (exp-based) element-wise border, matching the JAX reference
+    /// bit-for-bit; used by tests to bound the fast path's deviation.
+    pub fn be_exact(&self, r: usize, xs: f32) -> f32 {
+        if !self.border_en {
+            return 0.5;
+        }
+        let (b0, b1, b2, _) = self.row(r);
+        let b2 = if self.b2_en { b2 } else { 0.0 };
+        let u = b2 * xs * xs + b1 * xs + b0;
+        0.5 + (sigmoid(2.5 * u) - 0.5)
+    }
+
+    /// Compute borders for one im2col column (R normalized activations),
+    /// applying fusion when enabled. `out` has length R.
+    pub fn borders_column(&self, xs: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), self.rows);
+        debug_assert_eq!(out.len(), self.rows);
+        if !self.border_en {
+            out.fill(0.5);
+            return;
+        }
+        if self.b2_en {
+            for r in 0..self.rows {
+                let u = (self.b2[r] * xs[r] + self.b1[r]) * xs[r] + self.b0[r];
+                out[r] = 0.5 + fast_offset(u);
+            }
+        } else {
+            for r in 0..self.rows {
+                let u = self.b1[r] * xs[r] + self.b0[r];
+                out[r] = 0.5 + fast_offset(u);
+            }
+        }
+        if self.fuse_en {
+            // per-channel weighted mean of α·Bᴱ over k² taps (Eq. 9)
+            let k2 = self.k2;
+            for seg in 0..self.rows / k2 {
+                let mut acc = 0.0f32;
+                for j in 0..k2 {
+                    let r = seg * k2 + j;
+                    acc += self.alpha[r] * out[r];
+                }
+                let fused = acc / k2 as f32;
+                out[seg * k2..(seg + 1) * k2].fill(fused);
+            }
+        }
+    }
+
+    /// Quantize-dequantize one im2col column in place. Allocation-free
+    /// after the first call (`scratch` is reused); single-pass when no
+    /// fusion is involved — this is the engine's per-column hot loop.
+    pub fn quant_column(&self, col: &mut [f32], s: f32, qmin: f32, qmax: f32, scratch: &mut Vec<f32>) {
+        let inv_s = 1.0 / s;
+        if !self.border_en {
+            for v in col.iter_mut() {
+                *v = s * (*v * inv_s - 0.5).ceil().clamp(qmin, qmax);
+            }
+            return;
+        }
+        if !self.fuse_en {
+            // one fused pass: normalize, border, round, dequantize —
+            // structure-of-arrays parameter layout keeps this loop
+            // auto-vectorizable
+            if self.b2_en {
+                for r in 0..self.rows {
+                    let xs = col[r] * inv_s;
+                    let u = (self.b2[r] * xs + self.b1[r]) * xs + self.b0[r];
+                    let border = 0.5 + fast_offset(u);
+                    col[r] = s * (xs - border).ceil().clamp(qmin, qmax);
+                }
+            } else {
+                for r in 0..self.rows {
+                    let xs = col[r] * inv_s;
+                    let u = self.b1[r] * xs + self.b0[r];
+                    let border = 0.5 + fast_offset(u);
+                    col[r] = s * (xs - border).ceil().clamp(qmin, qmax);
+                }
+            }
+            return;
+        }
+        // fusion: need the whole channel segment before rounding
+        scratch.resize(2 * self.rows, 0.0);
+        let (xs, borders) = scratch.split_at_mut(self.rows);
+        for (x, v) in xs.iter_mut().zip(col.iter()) {
+            *x = v * inv_s;
+        }
+        self.borders_column(xs, borders);
+        for r in 0..self.rows {
+            col[r] = s * (xs[r] - borders[r]).ceil().clamp(qmin, qmax);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_params_is_nearest() {
+        let b = BorderFn::from_params(vec![0.0; 9 * 4], 9, true, true);
+        for xs in [-3.0f32, -0.4, 0.0, 0.49, 0.51, 7.3] {
+            assert_eq!(b.be(0, xs), 0.5, "xs={xs}");
+        }
+    }
+
+    #[test]
+    fn border_bounded_in_unit_interval() {
+        prop::check_default("border in (0,1)", |rng| {
+            let rows = 9;
+            let params = prop::vec_f32(rng, rows * 4, -3.0, 3.0);
+            let b = BorderFn::from_params(params, 9, false, true);
+            let xs = rng.range_f32(-10.0, 10.0);
+            let v = b.be(rng.below(rows), xs);
+            assert!((0.0..=1.0).contains(&v), "border {v}");
+        });
+    }
+
+    #[test]
+    fn fusion_shares_border_within_channel() {
+        let mut rng = Rng::new(1);
+        let rows = 2 * 4; // 2 channels, k2 = 4
+        let mut params = prop::vec_f32(&mut rng, rows * 4, -0.5, 0.5);
+        // alpha = 1
+        for r in 0..rows {
+            params[r * 4 + 3] = 1.0;
+        }
+        let b = BorderFn::from_params(params, 4, true, true);
+        let xs = prop::vec_f32(&mut rng, rows, -2.0, 2.0);
+        let mut out = vec![0.0; rows];
+        b.borders_column(&xs, &mut out);
+        for seg in 0..2 {
+            for j in 1..4 {
+                assert_eq!(out[seg * 4], out[seg * 4 + j]);
+            }
+        }
+        // fused value is the mean of the element-wise borders
+        let mut out_e = vec![0.0; rows];
+        let be = BorderFn {
+            fuse_en: false,
+            ..b.clone()
+        };
+        be.borders_column(&xs, &mut out_e);
+        let expect: f32 = out_e[0..4].iter().sum::<f32>() / 4.0;
+        assert!((out[0] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fast_offset_close_to_exact_sigmoid() {
+        prop::check_default("fast border within 2e-3 of exact", |rng| {
+            let rows = 8;
+            let params = prop::vec_f32(rng, rows * 4, -2.0, 2.0);
+            let b = BorderFn::from_params(params, 4, false, true);
+            let r = rng.below(rows);
+            let xs = rng.range_f32(-8.0, 8.0);
+            let fast = b.be(r, xs);
+            let exact = b.be_exact(r, xs);
+            assert!(
+                (fast - exact).abs() < 2e-3,
+                "fast {fast} vs exact {exact} (xs={xs})"
+            );
+        });
+    }
+
+    #[test]
+    fn quant_column_fused_path_matches_unfused_math() {
+        // the fused single-pass branch must equal the generic two-pass
+        // branch when fusion is off in both
+        let mut rng = Rng::new(9);
+        let rows = 18;
+        let params = prop::vec_f32(&mut rng, rows * 4, -1.0, 1.0);
+        let b = BorderFn::from_params(params, 9, false, true);
+        let col0 = prop::vec_f32(&mut rng, rows, -0.5, 3.0);
+        let mut fast = col0.clone();
+        let mut scratch = Vec::new();
+        b.quant_column(&mut fast, 0.2, 0.0, 15.0, &mut scratch);
+        // reference: explicit borders_column + round
+        let xs: Vec<f32> = col0.iter().map(|v| v / 0.2).collect();
+        let mut borders = vec![0.0; rows];
+        b.borders_column(&xs, &mut borders);
+        for r in 0..rows {
+            let want = 0.2 * (xs[r] - borders[r]).ceil().clamp(0.0, 15.0);
+            assert_eq!(fast[r], want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn quant_column_nearest_matches_uniform() {
+        let mut rng = Rng::new(2);
+        let rows = 12;
+        let b = BorderFn::nearest(rows, 4);
+        let mut col = prop::vec_f32(&mut rng, rows, -0.5, 3.0);
+        let orig = col.clone();
+        let mut scratch = Vec::new();
+        b.quant_column(&mut col, 0.25, 0.0, 15.0, &mut scratch);
+        for (q, x) in col.iter().zip(&orig) {
+            assert_eq!(*q, crate::quant::uniform::nearest(*x, 0.25, 0.0, 15.0));
+        }
+    }
+
+    #[test]
+    fn prop_border_rounding_consistent() {
+        // Definition 2.1: values with fractional part below B round down.
+        prop::check_default("border rounding direction", |rng| {
+            let rows = 4;
+            let params = prop::vec_f32(rng, rows * 4, -1.0, 1.0);
+            let b = BorderFn::from_params(params, 1, false, true);
+            let r = rng.below(rows);
+            let xs = rng.range_f32(0.0, 6.0);
+            let border = b.be(r, xs);
+            let q = (xs - border).ceil();
+            let frac = xs - xs.floor();
+            // Note the border moves with xs (it is evaluated at xs), so we
+            // only check the local rounding decision.
+            if frac < border - 1e-6 {
+                assert_eq!(q, xs.floor(), "rounds down below border");
+            } else if frac > border + 1e-6 {
+                assert_eq!(q, xs.floor() + 1.0, "rounds up above border");
+            }
+        });
+    }
+}

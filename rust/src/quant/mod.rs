@@ -1,0 +1,17 @@
+//! Pure-Rust quantization substrate.
+//!
+//! Everything here mirrors the JAX-side math in `python/compile/quant.py`
+//! exactly (cross-checked in integration tests against the PJRT programs):
+//! uniform quantizers, the paper's adaptive rounding border, the
+//! A-rounding flip algorithm (Table 1's motivation baseline), and
+//! activation scale search.
+
+pub mod arounding;
+pub mod border;
+pub mod scale_search;
+pub mod tensor;
+pub mod uniform;
+pub mod weights;
+
+pub use border::BorderFn;
+pub use tensor::Tensor;

@@ -1,0 +1,113 @@
+//! Activation scale initialization: percentile start + MSE grid refinement.
+//!
+//! The paper inherits its scale-search from the baselines (AdaRound/QDrop
+//! use an MSE-optimal step). The coordinator runs this at calibration time
+//! over the FP activations of each layer (gathered via the `fp_*` chain).
+
+use crate::util::rng::Rng;
+
+/// Search a scalar scale minimizing quantization MSE over `values`.
+///
+/// `qmin/qmax` define the integer range (0..2^M−1 unsigned, symmetric when
+/// signed). Grid-searches `grid` candidates from the max-based scale down
+/// to 20% of it.
+pub fn search_scale(values: &[f32], qmin: f32, qmax: f32, grid: usize) -> f32 {
+    assert!(!values.is_empty(), "scale search over empty sample");
+    let hi = if qmin < 0.0 {
+        values.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    } else {
+        values.iter().fold(0.0f32, |m, &v| m.max(v))
+    };
+    let hi = hi.max(1e-8);
+    let denom = if qmin < 0.0 { -qmin } else { qmax };
+    let s0 = hi / denom;
+    let mut best_s = s0;
+    let mut best_err = f32::INFINITY;
+    for i in 0..grid {
+        let s = s0 * (1.0 - 0.8 * i as f32 / grid as f32);
+        let mut err = 0.0f64;
+        for &v in values {
+            let q = (v / s - 0.5).ceil().clamp(qmin, qmax);
+            let d = (s * q - v) as f64;
+            err += d * d;
+        }
+        if (err as f32) < best_err {
+            best_err = err as f32;
+            best_s = s;
+        }
+    }
+    best_s
+}
+
+/// Subsample up to `cap` values deterministically (scale search over the
+/// full calibration activations would be needlessly slow).
+pub fn sample_values(values: &[f32], cap: usize, seed: u64) -> Vec<f32> {
+    if values.len() <= cap {
+        return values.to_vec();
+    }
+    let mut rng = Rng::new(seed);
+    (0..cap).map(|_| values[rng.below(values.len())]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn recovers_known_scale() {
+        // values on an exact grid of step 0.1 in [0, 1.5] with 4 bits
+        let values: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let s = search_scale(&values, 0.0, 15.0, 80);
+        // quantizing with the found scale should be near-lossless
+        let mse: f32 = values
+            .iter()
+            .map(|&v| {
+                let q = (v / s - 0.5).ceil().clamp(0.0, 15.0);
+                (s * q - v) * (s * q - v)
+            })
+            .sum::<f32>()
+            / values.len() as f32;
+        assert!(mse < 1e-6, "mse {mse} with s {s}");
+    }
+
+    #[test]
+    fn signed_search_uses_absmax() {
+        let values = vec![-2.0f32, -1.0, 0.5, 1.9];
+        let s = search_scale(&values, -8.0, 7.0, 60);
+        assert!(s > 0.0 && s <= 2.0 / 8.0 + 1e-5);
+    }
+
+    #[test]
+    fn prop_beats_naive_max_scale() {
+        prop::check("MSE-searched scale >= max-based scale", 64, |rng| {
+            // heavy-tailed sample: mostly small values + one outlier
+            let mut values = prop::vec_f32(rng, 256, 0.0, 1.0);
+            values.push(rng.range_f32(5.0, 20.0));
+            let qmax = 15.0;
+            let s_naive = values.iter().cloned().fold(0.0f32, f32::max) / qmax;
+            let s_opt = search_scale(&values, 0.0, qmax, 80);
+            let mse = |s: f32| {
+                values
+                    .iter()
+                    .map(|&v| {
+                        let q = (v / s - 0.5).ceil().clamp(0.0, qmax);
+                        (s * q - v) * (s * q - v)
+                    })
+                    .sum::<f32>()
+            };
+            assert!(mse(s_opt) <= mse(s_naive) + 1e-6);
+        });
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_capped() {
+        let values: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+        let a = sample_values(&values, 512, 9);
+        let b = sample_values(&values, 512, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 512);
+        let small = sample_values(&values[..10], 512, 9);
+        assert_eq!(small.len(), 10);
+    }
+}

@@ -1,0 +1,145 @@
+//! A small dense f32 tensor (row-major) — the host-side currency of the
+//! integer inference engine and the coordinator's state store.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elems, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {shape:?}", self.shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Shape as i64 dims (for PJRT literals).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    /// Elementwise max abs.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Mean squared error against another tensor.
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n as f32
+    }
+
+    /// Batched view: shape [N, ...rest]; returns (rest_elems, slice of item i).
+    pub fn item(&self, i: usize) -> &[f32] {
+        let per: usize = self.shape[1..].iter().product();
+        &self.data[i * per..(i + 1) * per]
+    }
+
+    /// ReLU in place.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Elementwise add in place.
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.len(), 6);
+        let t = t.reshape(vec![3, 2]).unwrap();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert!(t.clone().reshape(vec![4]).is_err());
+        assert!(Tensor::new(vec![2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn math_helpers() {
+        let mut t = Tensor::new(vec![4], vec![-1.0, 2.0, -3.0, 0.5]).unwrap();
+        assert_eq!(t.abs_max(), 3.0);
+        let z = Tensor::zeros(vec![4]);
+        assert!((t.mse(&z) - (1.0 + 4.0 + 9.0 + 0.25) / 4.0).abs() < 1e-6);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 2.0, 0.0, 0.5]);
+        let mut a = Tensor::full(vec![2], 1.0);
+        a.add_inplace(&Tensor::full(vec![2], 2.0));
+        assert_eq!(a.data, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn item_slicing() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.item(1), &[3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Uniform quantization primitives (Definition 2.1's notation):
+//! ``x̂ = s · clip(⌈x/s − B⌉, qmin, qmax)`` with B = 0.5 for nearest.
+
+/// Quantize-dequantize one value with a given border.
+#[inline]
+pub fn quant_dequant(x: f32, s: f32, border: f32, qmin: f32, qmax: f32) -> f32 {
+    let q = (x / s - border).ceil().clamp(qmin, qmax);
+    s * q
+}
+
+/// Nearest rounding (B = 0.5). `ceil(u - 0.5)` rounds exact halves down,
+/// matching the JAX pipeline bit-for-bit.
+#[inline]
+pub fn nearest(x: f32, s: f32, qmin: f32, qmax: f32) -> f32 {
+    quant_dequant(x, s, 0.5, qmin, qmax)
+}
+
+/// Integer code for a value (used by the A-rounding flip algorithm, which
+/// manipulates codes rather than dequantized values).
+#[inline]
+pub fn code(x: f32, s: f32, border: f32, qmin: f32, qmax: f32) -> f32 {
+    (x / s - border).ceil().clamp(qmin, qmax)
+}
+
+/// Quantize a slice in place (nearest).
+pub fn nearest_slice(xs: &mut [f32], s: f32, qmin: f32, qmax: f32) {
+    for x in xs {
+        *x = nearest(*x, s, qmin, qmax);
+    }
+}
+
+/// Signed symmetric weight quantization: round-to-nearest codes.
+pub fn quant_weights(w: &[f32], s_per_row: &[f32], rows: usize, qmin: f32, qmax: f32) -> Vec<f32> {
+    let cols = w.len() / rows;
+    let mut out = vec![0.0; w.len()];
+    for r in 0..rows {
+        let s = s_per_row[r];
+        for c in 0..cols {
+            let i = r * cols + c;
+            // round() (half away from zero) matches jnp.round for weights
+            // up to the half-ulp cases the scale search avoids.
+            out[i] = s * (w[i] / s).round().clamp(qmin, qmax);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn nearest_matches_manual() {
+        // s = 1: values round to integers in [0, 3]
+        assert_eq!(nearest(1.4, 1.0, 0.0, 3.0), 1.0);
+        assert_eq!(nearest(1.6, 1.0, 0.0, 3.0), 2.0);
+        assert_eq!(nearest(-0.7, 1.0, 0.0, 3.0), 0.0); // clipped
+        assert_eq!(nearest(9.0, 1.0, 0.0, 3.0), 3.0); // clipped
+    }
+
+    #[test]
+    fn border_shifts_rounding() {
+        // B = 0.3: fractional parts below 0.3 round down, above round up.
+        assert_eq!(quant_dequant(1.2, 1.0, 0.3, 0.0, 7.0), 1.0);
+        assert_eq!(quant_dequant(1.4, 1.0, 0.3, 0.0, 7.0), 2.0);
+    }
+
+    #[test]
+    fn prop_error_bounded_by_scale() {
+        prop::check_default("nearest error <= s/2 inside range", |rng| {
+            let s = rng.range_f32(0.01, 2.0);
+            let qmax = 15.0;
+            // stay strictly inside the representable range
+            let x = rng.range_f32(0.0, s * qmax);
+            let xq = nearest(x, s, 0.0, qmax);
+            assert!(
+                (xq - x).abs() <= s / 2.0 + 1e-5,
+                "x={x} s={s} xq={xq}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        prop::check_default("quantization is idempotent", |rng| {
+            let s = rng.range_f32(0.01, 2.0);
+            let x = rng.range_f32(-1.0, 10.0);
+            let q1 = nearest(x, s, 0.0, 15.0);
+            let q2 = nearest(q1, s, 0.0, 15.0);
+            assert!((q1 - q2).abs() < 1e-5);
+        });
+    }
+
+    #[test]
+    fn prop_monotone() {
+        prop::check_default("quantization preserves order", |rng| {
+            let s = rng.range_f32(0.01, 2.0);
+            let a = rng.range_f32(-2.0, 10.0);
+            let b = rng.range_f32(-2.0, 10.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(nearest(lo, s, 0.0, 15.0) <= nearest(hi, s, 0.0, 15.0));
+        });
+    }
+
+    #[test]
+    fn weight_quant_rows() {
+        let w = vec![0.9, -1.1, 0.2, 0.4];
+        let s = vec![1.0, 0.1];
+        let q = quant_weights(&w, &s, 2, -2.0, 1.0);
+        assert_eq!(q, vec![1.0, -1.0, 0.1, 0.1]); // second row clipped at qmax=1 -> 0.1
+    }
+}

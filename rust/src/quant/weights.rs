@@ -1,0 +1,80 @@
+//! Weight hard-quantization from the learned AdaRound state — mirrors
+//! `python/compile/quant.py::weight_quant_hard`:
+//! ``w_q = s·clip(floor(w/s) + [h(V) ≥ 0.5], qmin, qmax)`` with
+//! ``h(V) = clip(sigmoid(V)·1.2 − 0.1, 0, 1)``.
+
+/// AdaRound's rectified sigmoid.
+#[inline]
+pub fn rect_sigmoid(v: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-v).exp());
+    (s * 1.2 - 0.1).clamp(0.0, 1.0)
+}
+
+/// Hard-quantize a weight matrix (oc rows) with per-row scales and the
+/// learned rounding logits V.
+pub fn harden(
+    w: &[f32],
+    s_w: &[f32],
+    v: &[f32],
+    oc: usize,
+    qmin: f32,
+    qmax: f32,
+) -> Vec<f32> {
+    let cols = w.len() / oc;
+    let mut out = vec![0.0f32; w.len()];
+    for r in 0..oc {
+        let s = s_w[r];
+        for c in 0..cols {
+            let i = r * cols + c;
+            let up = if rect_sigmoid(v[i]) >= 0.5 { 1.0 } else { 0.0 };
+            out[i] = s * ((w[i] / s).floor() + up).clamp(qmin, qmax);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn rect_sigmoid_range() {
+        assert_eq!(rect_sigmoid(-20.0), 0.0);
+        assert_eq!(rect_sigmoid(20.0), 1.0);
+        assert!((rect_sigmoid(0.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn harden_at_v_init_is_nearest() {
+        // V init makes h(V) equal the fractional part; hardening then
+        // rounds up exactly when frac >= 0.5 (nearest with half-up).
+        prop::check_default("harden(V_init) == nearest", |rng| {
+            let oc = 2;
+            let w = prop::vec_f32(rng, oc * 3, -2.0, 2.0);
+            let s = vec![rng.range_f32(0.05, 0.5), rng.range_f32(0.05, 0.5)];
+            // python v_init: rect_sigmoid_inv(frac)
+            let v: Vec<f32> = w
+                .iter()
+                .enumerate()
+                .map(|(i, &wi)| {
+                    let sc = s[i / 3];
+                    let frac = (wi / sc - (wi / sc).floor()).clamp(1e-4, 1.0 - 1e-4);
+                    let p = (frac + 0.1) / 1.2;
+                    (p / (1.0 - p)).ln()
+                })
+                .collect();
+            let q = harden(&w, &s, &v, oc, -128.0, 127.0);
+            for (i, (&qi, &wi)) in q.iter().zip(&w).enumerate() {
+                let sc = s[i / 3];
+                let frac = wi / sc - (wi / sc).floor();
+                // skip razor-edge cases where clamp in v_init flips the call
+                if (frac - 0.5).abs() < 1e-3 {
+                    continue;
+                }
+                let expect = sc * ((wi / sc).floor() + if frac >= 0.5 { 1.0 } else { 0.0 });
+                assert!((qi - expect).abs() < 1e-5, "w={wi} s={sc} q={qi} expect={expect}");
+            }
+        });
+    }
+}

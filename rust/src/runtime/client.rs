@@ -1,0 +1,177 @@
+//! Thin, safe wrapper around the `xla` crate's PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// A compiled HLO program, ready to execute.
+///
+/// All programs are lowered with `return_tuple=True`, so execution always
+/// yields a flat `Vec<xla::Literal>` of the tuple elements.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of results the lowered tuple carries (from the manifest; 0 if
+    /// loaded outside a manifest, in which case we trust `decompose_tuple`).
+    n_results: usize,
+}
+
+impl Executable {
+    /// Program name (manifest key or file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host literals; returns the decomposed result tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = lit.to_tuple()?;
+        if self.n_results != 0 && parts.len() != self.n_results {
+            return Err(anyhow!(
+                "{}: manifest promises {} results, got {}",
+                self.name,
+                self.n_results,
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// Execute over device buffers, keeping the (tuple) result on device.
+    ///
+    /// This is the calibration hot path: optimizer / quant state never
+    /// round-trips the host between steps.
+    pub fn run_b(&self, args: &[xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let mut outs = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        Ok(outs.remove(0).remove(0))
+    }
+}
+
+/// PJRT CPU runtime: artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    manifest: Option<Manifest>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifacts directory. Loads
+    /// `manifest.json` when present.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            Some(Manifest::load(&manifest_path)?)
+        } else {
+            None
+        };
+        Ok(Self {
+            client,
+            artifacts_dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The artifacts directory this runtime serves from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// The manifest, if `manifest.json` was present.
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) a program by manifest name, memoized.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let (path, n_results) = match &self.manifest {
+            Some(m) => {
+                let spec = m
+                    .program(name)
+                    .ok_or_else(|| anyhow!("program {name:?} not in manifest"))?;
+                (self.artifacts_dir.join(&spec.path), spec.results.len())
+            }
+            None => (self.artifacts_dir.join(format!("{name}.hlo.txt")), 0),
+        };
+        let exe = self.compile_file(name, &path, n_results)?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile an HLO-text file directly (no manifest).
+    pub fn compile_file(&self, name: &str, path: &Path, n_results: usize) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable {
+            name: name.to_string(),
+            exe,
+            n_results,
+        })
+    }
+
+    /// Move a host literal onto the device (for `Executable::run_b`).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("host->device: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {dims:?} wants {n} elems, got {}", data.len()));
+    }
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("shape {dims:?} wants {n} elems, got {}", data.len()));
+    }
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}

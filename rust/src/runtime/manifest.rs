@@ -1,0 +1,208 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (producer) and the Rust runtime (consumer). Parsed with the in-tree
+//! JSON module.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one program argument or result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Argument name as traced in python. Names are namespaced by role:
+    /// `w:`, `state:`, `adam:`, `batch:`, `hyper:` (see aot.py).
+    pub name: String,
+    /// Dimensions; empty = scalar.
+    pub shape: Vec<i64>,
+    /// "f32" | "i32" | "u32".
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<i64>() as usize
+    }
+
+    /// Role prefix of the name (`w`, `state`, `adam`, `batch`, `hyper`).
+    pub fn role(&self) -> &str {
+        self.name.split(':').next().unwrap_or("")
+    }
+
+    /// Name with the role prefix stripped.
+    pub fn local_name(&self) -> &str {
+        self.name.split_once(':').map(|(_, n)| n).unwrap_or(&self.name)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("name not a string"))?
+                .to_string(),
+            shape: j.req("shape")?.as_i64_vec()?,
+            dtype: j
+                .req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow!("dtype not a string"))?
+                .to_string(),
+        })
+    }
+}
+
+/// One lowered HLO program.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    /// Path of the HLO text file, relative to the artifacts dir.
+    pub path: String,
+    /// Positional argument specs, in trace order.
+    pub args: Vec<TensorSpec>,
+    /// Result tuple element specs, in order.
+    pub results: Vec<TensorSpec>,
+}
+
+impl ProgramSpec {
+    /// Indices of args whose role matches.
+    pub fn arg_indices(&self, role: &str) -> Vec<usize> {
+        self.args
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.role() == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Index of the arg with this exact name.
+    pub fn arg_index(&self, name: &str) -> Result<usize> {
+        self.args
+            .iter()
+            .position(|a| a.name == name)
+            .ok_or_else(|| anyhow!("no arg named {name:?}"))
+    }
+}
+
+/// The manifest: program registry + free-form metadata sections.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Producer version string (jax version etc), for diagnostics.
+    pub producer: String,
+    /// name -> program
+    pub programs: BTreeMap<String, ProgramSpec>,
+    /// Free-form sections: model topologies, dataset info, weight files.
+    pub meta: Json,
+}
+
+impl Manifest {
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading manifest {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing manifest {path:?}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Build from parsed JSON.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut programs = BTreeMap::new();
+        let progs = j
+            .req("programs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("programs not an object"))?;
+        for (name, p) in progs {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                p.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    path: p
+                        .req("path")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("path not a string"))?
+                        .to_string(),
+                    args: parse_specs("args").with_context(|| format!("program {name}"))?,
+                    results: parse_specs("results").with_context(|| format!("program {name}"))?,
+                },
+            );
+        }
+        Ok(Manifest {
+            producer: j
+                .get("producer")
+                .and_then(|p| p.as_str())
+                .unwrap_or("")
+                .to_string(),
+            programs,
+            meta: j.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// Look up a program by name.
+    pub fn program(&self, name: &str) -> Option<&ProgramSpec> {
+        self.programs.get(name)
+    }
+
+    /// Program lookup that errors with the name.
+    pub fn req_program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.program(name)
+            .ok_or_else(|| anyhow!("program {name:?} not in manifest"))
+    }
+
+    /// All program names, sorted.
+    pub fn program_names(&self) -> Vec<&str> {
+        self.programs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// A meta section (e.g. "models", "data", "weights").
+    pub fn meta_section(&self, key: &str) -> Result<&Json> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest meta section {key:?} missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "producer": "jax 0.x",
+      "programs": {
+        "step_resnet10s_B0": {
+          "path": "step_resnet10s_B0.hlo.txt",
+          "args": [
+            {"name": "w:conv0", "shape": [16, 27], "dtype": "f32"},
+            {"name": "state:b0", "shape": [27], "dtype": "f32"},
+            {"name": "hyper:lr", "shape": [], "dtype": "f32"}
+          ],
+          "results": [{"name": "loss", "shape": [], "dtype": "f32"}]
+        }
+      },
+      "meta": {"data": {"n_classes": 16}}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let p = m.req_program("step_resnet10s_B0").unwrap();
+        assert_eq!(p.args.len(), 3);
+        assert_eq!(p.args[0].elems(), 16 * 27);
+        assert_eq!(p.args[0].role(), "w");
+        assert_eq!(p.args[0].local_name(), "conv0");
+        assert_eq!(p.arg_indices("state"), vec![1]);
+        assert_eq!(p.arg_index("hyper:lr").unwrap(), 2);
+        assert_eq!(
+            m.meta_section("data").unwrap().get("n_classes").unwrap().as_i64(),
+            Some(16)
+        );
+        assert!(m.program("nope").is_none());
+    }
+}

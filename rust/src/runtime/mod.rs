@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly. See `python/compile/aot.py`.
+
+mod client;
+mod manifest;
+
+pub use client::{literal_f32, literal_i32, Executable, Runtime};
+pub use manifest::{Manifest, ProgramSpec, TensorSpec};

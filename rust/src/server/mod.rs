@@ -1,0 +1,119 @@
+//! Quantized-inference server: a small TCP service over the pure-Rust
+//! engine (Python never on the request path — the engine runs quantized
+//! weights + the border function natively).
+//!
+//! Wire protocol (little-endian):
+//!   request:  u32 n_images, then n·(C·H·W) f32 pixels
+//!   response: u32 n_images, then n u32 class ids
+//!
+//! One thread per connection (std::thread; tokio is unavailable offline).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::engine::Engine;
+
+/// Server statistics.
+#[derive(Debug, Default)]
+pub struct Stats {
+    pub requests: AtomicU64,
+    pub images: AtomicU64,
+    pub total_us: AtomicU64,
+}
+
+/// Serve until the process is killed. `max_conns` bounds accepted
+/// connections when Some (used by tests/examples for bounded runs).
+pub fn serve(engine: Arc<Engine>, addr: &str, max_conns: Option<usize>) -> Result<Stats> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!(
+        "aquant-serve: model {} on {addr} ({} classes)",
+        engine.topo.name, engine.topo.n_classes
+    );
+    let stats = Stats::default();
+    let stats_ref = &stats;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut seen = 0usize;
+        for conn in listener.incoming() {
+            let stream = conn?;
+            let eng = engine.clone();
+            scope.spawn(move || {
+                if let Err(e) = handle(eng, stream, stats_ref) {
+                    eprintln!("aquant-serve: connection error: {e:#}");
+                }
+            });
+            seen += 1;
+            if let Some(m) = max_conns {
+                if seen >= m {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    })?;
+    Ok(stats)
+}
+
+fn handle(engine: Arc<Engine>, mut stream: TcpStream, stats: &Stats) -> Result<()> {
+    let img_elems = {
+        let (h, w) = engine.topo.in_hw;
+        engine.topo.in_c * h * w
+    };
+    loop {
+        let mut hdr = [0u8; 4];
+        match stream.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e.into()),
+        }
+        let n = u32::from_le_bytes(hdr) as usize;
+        if n == 0 || n > 4096 {
+            bail!("bad batch size {n}");
+        }
+        let mut buf = vec![0u8; n * img_elems * 4];
+        stream.read_exact(&mut buf)?;
+        let images: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let t0 = Instant::now();
+        let refs: Vec<&[f32]> = (0..n)
+            .map(|i| &images[i * img_elems..(i + 1) * img_elems])
+            .collect();
+        let preds = engine.classify_batch(&refs)?;
+        let us = t0.elapsed().as_micros() as u64;
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        stats.images.fetch_add(n as u64, Ordering::Relaxed);
+        stats.total_us.fetch_add(us, Ordering::Relaxed);
+        let mut out = Vec::with_capacity(4 + n * 4);
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        for p in preds {
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+        }
+        stream.write_all(&out)?;
+    }
+}
+
+/// Client helper (used by the serve example and tests).
+pub fn classify_remote(addr: &str, images: &[f32], n: usize) -> Result<Vec<u32>> {
+    let mut stream = TcpStream::connect(addr)?;
+    let mut out = Vec::with_capacity(4 + images.len() * 4);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    for v in images {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&out)?;
+    let mut hdr = [0u8; 4];
+    stream.read_exact(&mut hdr)?;
+    let m = u32::from_le_bytes(hdr) as usize;
+    let mut buf = vec![0u8; m * 4];
+    stream.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

@@ -1,0 +1,89 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Warms up, then runs timed iterations until a wall-clock budget is spent,
+//! and reports min / median / p95 / mean per-iteration times. Used by the
+//! `cargo bench` targets (harness = false) and by `aquant exp fig3`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub min: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    /// Median in milliseconds.
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  min {:>9.3?}  med {:>9.3?}  p95 {:>9.3?}  mean {:>9.3?}",
+            self.name, self.iters, self.min, self.median, self.p95, self.mean
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then measured runs until
+/// `budget` elapses (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: 3 runs or 10% of budget, whichever first.
+    let warm_deadline = Instant::now() + budget / 10;
+    for _ in 0..3 {
+        f();
+        if Instant::now() > warm_deadline {
+            break;
+        }
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 10 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        min: samples[0],
+        median: samples[n / 2],
+        p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        mean,
+    }
+}
+
+/// Default per-benchmark budget (override with `AQUANT_BENCH_MS`).
+pub fn default_budget() -> Duration {
+    let ms = std::env::var("AQUANT_BENCH_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(700u64);
+    Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+}

@@ -1,0 +1,125 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `aquant <subcommand> [--flag value] [--bool-flag] positional...`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args {
+            subcommand,
+            flags,
+            positional,
+        })
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String flag with default.
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn req_flag(&self, name: &str) -> Result<String> {
+        self.flags
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    /// Numeric flag with default.
+    pub fn num_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("flag --{name}={v} is not a valid number")),
+        }
+    }
+
+    /// Boolean flag (present or explicit true/false).
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_flags_positionals() {
+        // NOTE: a bare `--flag` greedily consumes a following non-flag token
+        // as its value, so boolean flags go last or use `--flag=true`.
+        let a = Args::parse(v(&[
+            "calibrate",
+            "extra",
+            "--model",
+            "resnet10s",
+            "--bits=2",
+            "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand, "calibrate");
+        assert_eq!(a.str_flag("model", ""), "resnet10s");
+        assert_eq!(a.num_flag::<u32>("bits", 0).unwrap(), 2);
+        assert!(a.bool_flag("verbose"));
+        assert!(!a.bool_flag("quiet"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = Args::parse(v(&["eval"])).unwrap();
+        assert!(a.req_flag("model").is_err());
+        assert_eq!(a.num_flag("iters", 7u32).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(v(&["x", "--n", "abc"])).unwrap();
+        assert!(a.num_flag::<u32>("n", 0).is_err());
+    }
+}

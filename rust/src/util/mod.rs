@@ -1,0 +1,14 @@
+//! In-tree substrate utilities.
+//!
+//! This build environment is offline with only the `xla` crate closure
+//! available, so the pieces a production crate would pull from the
+//! ecosystem (serde_json, clap, criterion, proptest, rayon) are
+//! implemented here, scoped to what the system needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor_io;
+pub mod threadpool;

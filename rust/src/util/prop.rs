@@ -1,0 +1,64 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases and reports the seed of
+//! the first failing case so it can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `AQUANT_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("AQUANT_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `prop(rng)` over `cases` deterministic seeds; panic with the failing
+/// seed on the first failure. `prop` should panic (assert!) on violation.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xA0_5EED ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn check_default<F: FnMut(&mut Rng)>(name: &str, prop: F) {
+    check(name, default_cases(), prop);
+}
+
+/// Generate a random tensor of len `n` with values in [lo, hi).
+pub fn vec_f32(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 64, |rng| {
+            let a = rng.f32();
+            let b = rng.f32();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check("always-false", 4, |_| {
+            assert!(false, "boom");
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! Raw tensor I/O: the interchange format between `python/compile` and the
+//! Rust side for weights, quant-state init, and the dataset.
+//!
+//! Format: little-endian flat array, no header; shape and dtype live in the
+//! manifest (`meta` sections). Python writes with `ndarray.tofile()`.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Read a whole file of little-endian f32.
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let mut buf = Vec::new();
+    File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut buf)?;
+    if buf.len() % 4 != 0 {
+        bail!("{path:?}: size {} not a multiple of 4", buf.len());
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a whole file of little-endian u32.
+pub fn read_u32(path: &Path) -> Result<Vec<u32>> {
+    let mut buf = Vec::new();
+    File::open(path)
+        .with_context(|| format!("opening {path:?}"))?
+        .read_to_end(&mut buf)?;
+    if buf.len() % 4 != 0 {
+        bail!("{path:?}: size {} not a multiple of 4", buf.len());
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write little-endian f32 (used to persist learned quant state).
+pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("creating {path:?}"))?);
+    for v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read exactly `n` f32 elements, erroring on mismatch.
+pub fn read_f32_exact(path: &Path, n: usize) -> Result<Vec<f32>> {
+    let v = read_f32(path)?;
+    if v.len() != n {
+        bail!("{path:?}: expected {n} f32 elems, found {}", v.len());
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let dir = std::env::temp_dir().join("aquant_tensor_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        write_f32(&p, &data).unwrap();
+        assert_eq!(read_f32(&p).unwrap(), data);
+        assert_eq!(read_f32_exact(&p, 4).unwrap(), data);
+        assert!(read_f32_exact(&p, 5).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,171 @@
+//! Property tests over the pure-Rust engine + quant substrate that do not
+//! require artifacts (run in a fresh clone).
+
+use aquant::nn::engine::{ActQuant, Engine, FusionMode, LayerWeights};
+use aquant::nn::topology::{BlockTopo, LayerTopo, ModelTopo};
+use aquant::quant::border::BorderFn;
+use aquant::util::prop;
+use aquant::util::rng::Rng;
+
+fn conv_layer(name: &str, ic: usize, oc: usize, k: usize, stride: usize, h: usize, w: usize, relu: bool) -> LayerTopo {
+    let pad = k / 2;
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    LayerTopo {
+        name: name.into(),
+        kind: "conv".into(),
+        ic,
+        oc,
+        k,
+        stride,
+        pad,
+        groups: 1,
+        relu,
+        gap_input: false,
+        rows: ic * k * k,
+        in_chw: (ic, h, w),
+        out_chw: (oc, ho, wo),
+    }
+}
+
+fn tiny_model(rng: &mut Rng) -> (ModelTopo, std::collections::HashMap<String, LayerWeights>) {
+    let l1 = conv_layer("c1", 3, 4, 3, 1, 8, 8, true);
+    let l2 = conv_layer("c2", 4, 4, 3, 1, 8, 8, false);
+    let fc = LayerTopo {
+        name: "fc".into(),
+        kind: "fc".into(),
+        ic: 4,
+        oc: 5,
+        k: 1,
+        stride: 1,
+        pad: 0,
+        groups: 1,
+        relu: false,
+        gap_input: true,
+        rows: 4,
+        in_chw: (4, 8, 8),
+        out_chw: (5, 1, 1),
+    };
+    let mut weights = std::collections::HashMap::new();
+    for l in [&l1, &l2, &fc] {
+        let w: Vec<f32> = (0..l.weight_elems()).map(|_| rng.normal() * 0.3).collect();
+        let b: Vec<f32> = (0..l.oc).map(|_| rng.normal() * 0.1).collect();
+        weights.insert(l.name.clone(), LayerWeights { w, b });
+    }
+    let topo = ModelTopo {
+        name: "tiny".into(),
+        in_c: 3,
+        in_hw: (8, 8),
+        n_classes: 5,
+        blocks: vec![
+            BlockTopo {
+                name: "b0".into(),
+                residual: false,
+                downsample: None,
+                layers: vec![l1],
+            },
+            BlockTopo {
+                name: "b1".into(),
+                residual: true,
+                downsample: None,
+                layers: vec![l2],
+            },
+            BlockTopo {
+                name: "head".into(),
+                residual: false,
+                downsample: None,
+                layers: vec![fc],
+            },
+        ],
+    };
+    (topo, weights)
+}
+
+#[test]
+fn fused_and_unfused_border_agree_with_same_params() {
+    let mut rng = Rng::new(77);
+    let (topo, weights) = tiny_model(&mut rng);
+    let image: Vec<f32> = (0..3 * 64).map(|_| rng.normal()).collect();
+    // fixed params shared by both engines
+    let mut params_by_layer = std::collections::HashMap::new();
+    for l in topo.all_layers() {
+        let params: Vec<f32> = (0..l.rows * 4).map(|_| rng.normal() * 0.2).collect();
+        params_by_layer.insert(l.name.clone(), params);
+    }
+    let mut outs = Vec::new();
+    for mode in [FusionMode::Fused, FusionMode::Unfused] {
+        let mut eng = Engine::new(topo.clone(), weights.clone());
+        eng.fusion = mode;
+        for l in topo.all_layers() {
+            eng.set_act_quant(
+                &l.name,
+                ActQuant::Border {
+                    border: BorderFn::from_params(
+                        params_by_layer[&l.name].clone(),
+                        l.k2(),
+                        true,
+                        true,
+                    ),
+                    s: 0.1,
+                    qmin: 0.0,
+                    qmax: 15.0,
+                },
+            );
+        }
+        outs.push(eng.forward(&image, None).unwrap());
+    }
+    assert_eq!(outs[0], outs[1], "fusion mode changed the numerics");
+}
+
+#[test]
+fn quantized_forward_close_to_fp_at_8bit() {
+    prop::check("8-bit quantization is near-lossless", 16, |rng| {
+        let (topo, weights) = tiny_model(rng);
+        let image: Vec<f32> = (0..3 * 64).map(|_| rng.normal().abs()).collect();
+        let fp = Engine::new(topo.clone(), weights.clone())
+            .forward(&image, None)
+            .unwrap();
+        let mut eng = Engine::new(topo.clone(), weights.clone());
+        for l in topo.all_layers() {
+            eng.set_act_quant(
+                &l.name,
+                ActQuant::Border {
+                    border: BorderFn::nearest(l.rows, l.k2()),
+                    s: 4.0 / 255.0,
+                    qmin: -128.0,
+                    qmax: 127.0,
+                },
+            );
+        }
+        let q = eng.forward(&image, None).unwrap();
+        for (a, b) in fp.iter().zip(&q) {
+            assert!((a - b).abs() < 0.35, "8-bit drift too large: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn residual_block_identity_skip() {
+    // With zero conv weights in a residual block, output == relu(input).
+    let mut rng = Rng::new(5);
+    let (topo, mut weights) = tiny_model(&mut rng);
+    weights.get_mut("c2").unwrap().w.iter_mut().for_each(|v| *v = 0.0);
+    weights.get_mut("c2").unwrap().b.iter_mut().for_each(|v| *v = 0.0);
+    let eng = Engine::new(topo.clone(), weights.clone());
+    let image: Vec<f32> = (0..3 * 64).map(|_| rng.normal()).collect();
+    let mut taps = std::collections::HashMap::new();
+    let _ = eng.forward(&image, Some(&mut taps)).unwrap();
+    // the input of c2 is the block input; the block output equals
+    // relu(0 + skip) = skip (inputs are post-relu, hence non-negative)
+    let skip = &taps["c2"];
+    let mut expect = skip.data.clone();
+    expect.iter_mut().for_each(|v| {
+        if *v < 0.0 {
+            *v = 0.0
+        }
+    });
+    // forward again capturing the fc input (= block output pooled later)
+    let mut taps2 = std::collections::HashMap::new();
+    let _ = eng.forward(&image, Some(&mut taps2)).unwrap();
+    assert_eq!(taps2["fc"].data, expect);
+}

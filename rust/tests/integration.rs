@@ -1,0 +1,186 @@
+//! Integration tests over the AOT artifacts: the JAX-lowered PJRT
+//! programs and the pure-Rust engine must agree bit-tightly — this is the
+//! cross-layer parity signal (L1 pallas == L2 jnp is covered by pytest;
+//! here L3-rust == lowered-L2).
+//!
+//! These tests need `make artifacts`; they skip (with a notice) when the
+//! artifacts directory is absent so `cargo test` works in a fresh clone.
+
+use std::path::Path;
+
+use aquant::config::{Bits, Method, RunConfig};
+use aquant::coordinator::chain::QuantCtx;
+use aquant::coordinator::state::{bits_row_for, Knobs, StateStore};
+use aquant::exp::cell::{build_quantized_engine, Ctx};
+use aquant::nn::engine::{ActQuant, Engine};
+use aquant::quant::border::BorderFn;
+use aquant::quant::tensor::Tensor;
+
+fn ctx() -> Option<Ctx> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping integration test: no artifacts/manifest.json");
+        return None;
+    }
+    Some(Ctx::new("artifacts", Some(2)).expect("ctx"))
+}
+
+#[test]
+fn manifest_lists_all_models_and_programs() {
+    let Some(ctx) = ctx() else { return };
+    let manifest = ctx.rt.manifest().unwrap();
+    for model in ctx.models() {
+        let topo = ctx.topo(&model).unwrap();
+        for l in topo.all_layers() {
+            assert!(manifest.program(&format!("fp_{model}_{}", l.name)).is_some());
+            assert!(manifest.program(&format!("q_{model}_{}", l.name)).is_some());
+            assert!(manifest
+                .program(&format!("step_{model}_L_{}", l.name))
+                .is_some());
+        }
+        for b in &topo.blocks {
+            assert!(manifest
+                .program(&format!("step_{model}_B_{}", b.name))
+                .is_some());
+        }
+        assert!(manifest.program(&format!("fp_full_{model}")).is_some());
+        assert!(manifest.program(&format!("q_full_{model}")).is_some());
+    }
+}
+
+#[test]
+fn rust_engine_matches_pjrt_fp_forward() {
+    let Some(ctx) = ctx() else { return };
+    let model = "mobiles";
+    let chain = ctx.chain(model).unwrap();
+    let b = chain.batch;
+    let d = &ctx.dataset.test;
+    let idx: Vec<usize> = (0..b).collect();
+    let x = Tensor::new(vec![b, d.c, d.h, d.w], d.gather(&idx)).unwrap();
+    let pjrt_logits = chain.full(&x, None).unwrap();
+
+    let engine = Engine::new(
+        ctx.topo(model).unwrap().clone(),
+        ctx.weights(model).unwrap().clone(),
+    );
+    for i in 0..4 {
+        let logits = engine.forward(d.image(i), None).unwrap();
+        for (j, &v) in logits.iter().enumerate() {
+            let want = pjrt_logits.data[i * logits.len() + j];
+            assert!(
+                (v - want).abs() < 1e-2,
+                "img {i} logit {j}: rust {v} vs pjrt {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_engine_matches_pjrt_quantized_forward() {
+    let Some(ctx) = ctx() else { return };
+    let model = "mobiles";
+    let bits = Bits { w: 4, a: 4 };
+    // Nearest (scale-search-only) state so both sides share exact params.
+    let cfg = RunConfig::new(model, Method::Nearest, bits);
+    let st = ctx.calibrated_state(&cfg).unwrap();
+    let chain = ctx.chain(model).unwrap();
+    let b = chain.batch;
+    let d = &ctx.dataset.test;
+    let idx: Vec<usize> = (0..b).collect();
+    let x = Tensor::new(vec![b, d.c, d.h, d.w], d.gather(&idx)).unwrap();
+    let q = QuantCtx {
+        state: &st,
+        bits,
+        knobs: Knobs::inference(Method::Nearest, bits),
+    };
+    let pjrt_logits = chain.full(&x, Some(&q)).unwrap();
+
+    let engine = build_quantized_engine(&ctx, model, Method::Nearest, bits).unwrap();
+    let nc = ctx.topo(model).unwrap().n_classes;
+    let mut agree = 0;
+    for i in 0..8 {
+        let logits = engine.forward(d.image(i), None).unwrap();
+        let mut max_diff = 0.0f32;
+        for (j, &v) in logits.iter().enumerate() {
+            max_diff = max_diff.max((v - pjrt_logits.data[i * nc + j]).abs());
+        }
+        // f32 accumulation-order differences only
+        if max_diff < 5e-2 {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 7, "only {agree}/8 images matched PJRT quantized logits");
+}
+
+#[test]
+fn q_layer_nearest_equals_border_zero() {
+    // q_* programs with zero border params must equal the rust nearest
+    // quantizer on the same patches (Definition 2.1 ⇒ B = 0.5).
+    let Some(ctx) = ctx() else { return };
+    let model = "mobiles";
+    let bits = Bits { w: 32, a: 4 };
+    let cfg = RunConfig::new(model, Method::Nearest, bits);
+    let st = ctx.calibrated_state(&cfg).unwrap();
+    let topo = ctx.topo(model).unwrap();
+    let chain = ctx.chain(model).unwrap();
+    let d = &ctx.dataset.test;
+    let b = chain.batch;
+    let idx: Vec<usize> = (0..b).collect();
+    let x = Tensor::new(vec![b, d.c, d.h, d.w], d.gather(&idx)).unwrap();
+    let q = QuantCtx {
+        state: &st,
+        bits,
+        knobs: Knobs::inference(Method::Nearest, bits),
+    };
+    let rec = chain.walk(&x, Some(&q)).unwrap();
+
+    // Rust engine with the same scales/borders (weights FP).
+    let mut engine = Engine::new(topo.clone(), ctx.weights(model).unwrap().clone());
+    for l in topo.all_layers() {
+        let row = bits_row_for(topo, bits, &l.name);
+        let s = st.get(&format!("state:{}.s_a", l.name)).unwrap().data[0];
+        engine.set_act_quant(
+            &l.name,
+            ActQuant::Border {
+                border: BorderFn::nearest(l.rows, l.k2()),
+                s,
+                qmin: row.qmin_a,
+                qmax: row.qmax_a,
+            },
+        );
+    }
+    for i in 0..2 {
+        let logits = engine.forward(d.image(i), None).unwrap();
+        let nc = topo.n_classes;
+        for (j, &v) in logits.iter().enumerate() {
+            let want = rec.logits.data[i * nc + j];
+            assert!(
+                (v - want).abs() < 5e-2,
+                "img {i} logit {j}: rust {v} vs pjrt {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn state_store_roundtrip_via_calibration_cache() {
+    let Some(ctx) = ctx() else { return };
+    let cfg = RunConfig::new("mobiles", Method::Nearest, Bits { w: 4, a: 4 });
+    let st1 = ctx.calibrated_state(&cfg).unwrap();
+    let st2 = ctx.calibrated_state(&cfg).unwrap(); // from cache
+    for name in st1.names() {
+        let a = st1.get(name).unwrap();
+        let b = st2.get(name).unwrap();
+        assert_eq!(a.shape, b.shape, "{name}");
+        assert_eq!(a.data, b.data, "{name}");
+    }
+    let _ = StateStore::new(); // exercise Default path
+}
+
+#[test]
+fn dataset_matches_manifest_counts() {
+    let Some(ctx) = ctx() else { return };
+    assert_eq!(ctx.dataset.calib.n % 32, 0);
+    assert!(ctx.dataset.test.n >= 512);
+    let max_label = *ctx.dataset.test.labels.iter().max().unwrap() as usize;
+    assert!(max_label < ctx.dataset.n_classes);
+}

@@ -1,0 +1,109 @@
+"""Prototype: lower a calibration step (fwd + bwd + Adam) containing a
+pallas fake-quant kernel (interpret=True, STE via custom_vjp) to HLO text,
+and verify the same numerics in python so the rust side can assert."""
+import sys
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+from jax.experimental import pallas as pl
+import functools
+
+
+def _fq_kernel(x_ref, b_ref, o_ref):
+    x = x_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jnp.clip(jnp.ceil(x - b), 0.0, 3.0)
+
+
+def _fq_pallas(x, b):
+    return pl.pallas_call(
+        _fq_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, b)
+
+
+@jax.custom_vjp
+def fake_quant(x, b):
+    return _fq_pallas(x, b)
+
+
+def _fq_fwd(x, b):
+    return _fq_pallas(x, b), None
+
+
+def _fq_bwd(res, g):
+    return (g, -g)  # STE: d/dx ~= 1, d/db ~= -1
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def loss_fn(w, b, x, y):
+    a = x @ w
+    q = fake_quant(a, b)
+    return jnp.mean((q - y) ** 2)
+
+
+def step(w, b, m, v, t, x, y, lr):
+    gw, gb = jax.grad(loss_fn, argnums=(0, 1))(w, b, x, y)
+    loss = loss_fn(w, b, x, y)
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+    t1 = t + 1.0
+    m1 = beta1 * m + (1 - beta1) * gb
+    v1 = beta2 * v + (1 - beta2) * gb * gb
+    mh = m1 / (1 - beta1**t1)
+    vh = v1 / (1 - beta2**t1)
+    b1 = b - lr * mh / (jnp.sqrt(vh) + eps)
+    w1 = w - lr * gw
+    return (w1, b1, m1, v1, t1, loss)
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "/tmp/proto_step.hlo.txt"
+    N, D, O = 4, 3, 2
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((D, O), f32),  # w
+        jax.ShapeDtypeStruct((N, O), f32),  # b (border per-elem, toy)
+        jax.ShapeDtypeStruct((N, O), f32),  # m
+        jax.ShapeDtypeStruct((N, O), f32),  # v
+        jax.ShapeDtypeStruct((), f32),      # t
+        jax.ShapeDtypeStruct((N, D), f32),  # x
+        jax.ShapeDtypeStruct((N, O), f32),  # y
+        jax.ShapeDtypeStruct((), f32),      # lr
+    )
+    lowered = jax.jit(step).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars")
+
+    # reference numerics for rust assert
+    import numpy as np
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(D, O), f32)
+    b = jnp.full((N, O), 0.5, f32)
+    m = jnp.zeros((N, O), f32)
+    v = jnp.zeros((N, O), f32)
+    t = jnp.asarray(0.0, f32)
+    x = jnp.asarray(rng.rand(N, D), f32)
+    y = jnp.asarray(rng.rand(N, O), f32)
+    lr = jnp.asarray(0.01, f32)
+    outs = jax.jit(step)(w, b, m, v, t, x, y, lr)
+    print("loss:", float(outs[5]))
+    print("b1[0,0]:", float(outs[1][0, 0]))
+    print("w1[0,0]:", float(outs[0][0, 0]))
+    np.save("/tmp/proto_inputs.npy", np.concatenate([np.asarray(a).ravel() for a in (w, b, m, v, t, x, y, lr)]))
+
+
+if __name__ == "__main__":
+    main()
