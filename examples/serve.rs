@@ -1,76 +1,96 @@
-//! Serving example: quantized inference behind a TCP server (pure-Rust
-//! engine — no Python, no PJRT on the request path), with a load-generating
-//! client reporting latency and throughput.
+//! Serving example: quantized inference behind the dynamic-batching TCP
+//! server (pure-Rust engine — no Python, no PJRT on the request path),
+//! with a multi-client load generator reporting latency, throughput, and
+//! the server's own batching stats.
 //!
-//!   cargo run --release --offline --example serve -- [model] [bits] [batch] [n_req]
+//!   cargo run --release --offline --example serve -- \
+//!       [model] [bits] [batch] [n_req] [clients] [workers] [max_batch] [wait_us]
+//!
+//! Defaults: mobiles W4A4, 32-image requests, 8 requests x 4 clients,
+//! auto workers, max-batch 64, 200us batch wait.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use aquant::config::{Bits, Method};
+use aquant::config::{Bits, Method, ServeConfig};
 use aquant::exp::cell::{build_quantized_engine, Ctx};
-use aquant::server;
+use aquant::server::{classify_on, Server};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let model = args.get(1).cloned().unwrap_or_else(|| "mobiles".into());
     let bits = Bits::parse(&args.get(2).cloned().unwrap_or_else(|| "W4A4".into()))?;
-    let batch: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(32);
-    let n_req: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let arg_n = |i: usize, d: usize| args.get(i).and_then(|s| s.parse().ok()).unwrap_or(d);
+    let batch = arg_n(3, 32).clamp(1, aquant::server::MAX_REQ_IMAGES);
+    let n_req = arg_n(4, 8).max(1);
+    let clients = arg_n(5, 4).max(1);
+    let cfg = ServeConfig {
+        workers: arg_n(6, 0),
+        max_batch: arg_n(7, 64),
+        batch_wait_us: arg_n(8, 200) as u64,
+        max_conns: Some(clients),
+        ..ServeConfig::default()
+    };
 
     let ctx = Ctx::new("artifacts", Some(60))?;
     println!("building quantized engine: {model} nearest {}", bits.name());
     let engine = Arc::new(build_quantized_engine(&ctx, &model, Method::Nearest, bits)?);
-    let test = ctx.dataset.test.clone();
+    // read-only test split shared across client threads (cloning the
+    // full image buffer per client would multiply memory by `clients`)
+    let test = Arc::new(ctx.dataset.test.clone());
     let img_elems = test.img_elems();
 
-    let addr = "127.0.0.1:7311";
-    let srv_engine = engine.clone();
-    let handle = std::thread::spawn(move || server::serve(srv_engine, addr, Some(1)));
-    std::thread::sleep(std::time::Duration::from_millis(300));
+    let srv = Server::bind(engine, "127.0.0.1:0", cfg)?;
+    let addr = srv.local_addr()?;
+    let stats = srv.stats(); // live handle, before the accept loop starts
+    let server = std::thread::spawn(move || srv.run());
 
-    // Load generator: n_req batched requests over one connection.
-    let mut lat = Vec::new();
-    let mut hits = 0usize;
-    let mut total = 0usize;
-    use std::io::{Read, Write};
-    let mut stream = std::net::TcpStream::connect(addr)?;
-    for r in 0..n_req {
-        let idx: Vec<usize> = (r * batch..(r + 1) * batch).map(|i| i % test.n).collect();
-        let images = test.gather(&idx);
-        let t0 = Instant::now();
-        let mut out = Vec::with_capacity(4 + images.len() * 4);
-        out.extend_from_slice(&(batch as u32).to_le_bytes());
-        for v in &images {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-        stream.write_all(&out)?;
-        let mut hdr = [0u8; 4];
-        stream.read_exact(&mut hdr)?;
-        let m = u32::from_le_bytes(hdr) as usize;
-        let mut buf = vec![0u8; m * 4];
-        stream.read_exact(&mut buf)?;
-        lat.push(t0.elapsed());
-        let preds: Vec<u32> = buf
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        for (&i, &p) in idx.iter().zip(&preds) {
-            total += 1;
-            if test.labels[i] == p {
-                hits += 1;
+    // Load generators: `clients` connections, `n_req` pipelined batched
+    // requests each — concurrent enough for the batcher to coalesce.
+    let t_start = Instant::now();
+    let mut workers_joins = Vec::new();
+    for c in 0..clients {
+        let test = test.clone();
+        workers_joins.push(std::thread::spawn(move || -> Result<(Vec<Duration>, usize, usize)> {
+            let mut stream = std::net::TcpStream::connect(addr)?;
+            let mut lat = Vec::new();
+            let (mut hits, mut total) = (0usize, 0usize);
+            for r in 0..n_req {
+                let base = (c * n_req + r) * batch;
+                let idx: Vec<usize> = (base..base + batch).map(|i| i % test.n).collect();
+                let images = test.gather(&idx);
+                let t0 = Instant::now();
+                let preds = classify_on(&mut stream, &images, batch)?;
+                lat.push(t0.elapsed());
+                for (&i, &p) in idx.iter().zip(&preds) {
+                    total += 1;
+                    if test.labels[i] == p {
+                        hits += 1;
+                    }
+                }
             }
-        }
+            Ok((lat, hits, total))
+        }));
     }
-    drop(stream);
-    let _ = handle.join();
+    let mut lat = Vec::new();
+    let (mut hits, mut total) = (0usize, 0usize);
+    for j in workers_joins {
+        let (l, h, t) = j.join().expect("client thread")?;
+        lat.extend(l);
+        hits += h;
+        total += t;
+    }
+    let wall = t_start.elapsed();
+    server.join().expect("server thread")?;
 
     lat.sort();
-    let sum: std::time::Duration = lat.iter().sum();
+    let sum: Duration = lat.iter().sum();
     println!("\n== serving report ==");
-    println!("requests: {n_req} x batch {batch}  ({img_elems} f32/image)");
+    println!(
+        "requests: {clients} clients x {n_req} x batch {batch}  ({img_elems} f32/image)"
+    );
     println!(
         "latency  p50 {:?}  p95 {:?}  mean {:?}",
         lat[lat.len() / 2],
@@ -78,9 +98,13 @@ fn main() -> Result<()> {
         sum / lat.len() as u32
     );
     println!(
-        "throughput: {:.0} images/s",
-        (n_req * batch) as f64 / sum.as_secs_f64()
+        "throughput: {:.0} images/s (wall clock, all clients)",
+        (clients * n_req * batch) as f64 / wall.as_secs_f64()
     );
-    println!("accuracy over served batches: {:.2}%", hits as f64 / total as f64 * 100.0);
+    println!("server: {}", stats.report());
+    println!(
+        "accuracy over served batches: {:.2}%",
+        hits as f64 / total as f64 * 100.0
+    );
     Ok(())
 }

@@ -1,0 +1,75 @@
+//! Serving-path throughput: pooled classification at worker counts
+//! 1/2/4 and batch sizes 1/8/64 over a synthetic model with learned
+//! borders on every layer (the serving hot loop).
+//!
+//! Prints human rows plus a machine-readable JSON blob; set
+//! `BENCH_JSON=path` to write the blob to a file instead
+//! (`scripts/bench_check.sh` uses this to emit BENCH_serve.json and
+//! guard the 4-worker speedup floor).
+
+use std::sync::Arc;
+
+use aquant::nn::pool::InferencePool;
+use aquant::nn::synth;
+use aquant::util::bench::{bench, default_budget};
+use aquant::util::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    let mut rng = Rng::new(42);
+    let (topo, weights) = synth::bench_model(&mut rng);
+    let engine = Arc::new(synth::engine_with_random_borders(
+        &topo, &weights, &mut rng, true, true,
+    ));
+    let img_elems = engine.img_elems();
+    let max_batch = 64usize;
+    let images: Vec<f32> = (0..max_batch * img_elems)
+        .map(|_| rng.range_f32(-1.0, 3.0))
+        .collect();
+
+    println!(
+        "serve throughput: model {} ({} f32/image), pooled classify",
+        engine.topo.name, img_elems
+    );
+    // (workers, batch, images_per_sec, median_us)
+    let mut rows: Vec<(usize, usize, f64, f64)> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let pool = InferencePool::new(engine.clone(), workers);
+        for batch in [1usize, 8, 64] {
+            // pre-flattened batch: the timed loop measures pooled
+            // inference (an Arc clone is free), not buffer copying,
+            // so the speedup guard isn't diluted by memcpy
+            let flat = Arc::new(images[..batch * img_elems].to_vec());
+            let r = bench(&format!("pool/workers{workers}/batch{batch}"), budget, || {
+                let preds = pool.classify_flat(flat.clone(), batch).unwrap();
+                std::hint::black_box(preds);
+            });
+            let ips = batch as f64 / r.median.as_secs_f64();
+            println!("{}  {:>12.0} images/s", r.row(), ips);
+            rows.push((workers, batch, ips, r.median.as_secs_f64() * 1e6));
+        }
+    }
+
+    let ips = |w: usize, b: usize| rows.iter().find(|r| r.0 == w && r.1 == b).unwrap().2;
+    let speedup = ips(4, 64) / ips(1, 64);
+    println!("speedup workers 4 vs 1 @ batch 64: {speedup:.2}x");
+
+    let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"rows\": [\n");
+    for (i, (w, b, v, us)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {w}, \"batch\": {b}, \"images_per_sec\": {v:.1}, \
+             \"median_us\": {us:.1}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"speedup_w4_vs_w1_b64\": {speedup:.3}\n}}\n"
+    ));
+    match std::env::var("BENCH_JSON") {
+        Ok(path) if !path.is_empty() => {
+            std::fs::write(&path, &json).expect("write BENCH_JSON");
+            eprintln!("wrote {path}");
+        }
+        _ => println!("{json}"),
+    }
+}

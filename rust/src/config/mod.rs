@@ -211,6 +211,117 @@ impl Default for CalibConfig {
     }
 }
 
+/// Serving-runtime knobs, threaded from the CLI (`aquant serve` /
+/// `examples/serve.rs`) into the dynamic-batching server:
+/// `--workers`, `--max-batch`, `--batch-wait-us`, `--queue-images`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Inference worker threads. 0 = auto (cores − 1).
+    pub workers: usize,
+    /// Max images coalesced into one engine batch.
+    pub max_batch: usize,
+    /// How long the batcher waits for more images once one request is
+    /// pending (0 = dispatch immediately; larger = better coalescing,
+    /// worse tail latency).
+    pub batch_wait_us: u64,
+    /// Bound on queued images; full queue backpressures connections.
+    pub queue_images: usize,
+    /// Accept at most this many connections (`--max-conns`, also used
+    /// by tests/examples for bounded runs); None = run until killed.
+    pub max_conns: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 0,
+            max_batch: 64,
+            batch_wait_us: 200,
+            queue_images: 8192,
+            max_conns: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse the serving flags (absent flags keep defaults;
+    /// `--workers auto` is the same as omitting it).
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let workers = match args.str_flag_opt("workers") {
+            None => d.workers,
+            Some("auto") => 0,
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--workers={v} is not a number (or 'auto')"))?,
+        };
+        let max_conns = match args.str_flag_opt("max-conns") {
+            None => None,
+            Some(v) => Some(
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("--max-conns={v} is not a number"))?,
+            ),
+        };
+        let cfg = ServeConfig {
+            workers,
+            max_batch: args.num_flag("max-batch", d.max_batch)?,
+            batch_wait_us: args.num_flag("batch-wait-us", d.batch_wait_us)?,
+            queue_images: args.num_flag("queue-images", d.queue_images)?,
+            max_conns,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Upper bound on the straggler deadline (60 s): far beyond any
+    /// useful coalescing window, and small enough that
+    /// `Instant::now() + wait` can never overflow.
+    pub const MAX_BATCH_WAIT_US: u64 = 60_000_000;
+
+    /// Upper bound on explicit worker counts — far above any core count
+    /// this serves on, low enough that thread spawning cannot fail
+    /// halfway through startup.
+    pub const MAX_WORKERS: usize = 1024;
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("--max-batch must be >= 1");
+        }
+        if self.queue_images < self.max_batch {
+            bail!(
+                "--queue-images ({}) must be >= --max-batch ({})",
+                self.queue_images,
+                self.max_batch
+            );
+        }
+        if self.batch_wait_us > Self::MAX_BATCH_WAIT_US {
+            bail!(
+                "--batch-wait-us ({}) must be <= {} (60s)",
+                self.batch_wait_us,
+                Self::MAX_BATCH_WAIT_US
+            );
+        }
+        if self.workers > Self::MAX_WORKERS {
+            bail!(
+                "--workers ({}) must be <= {} (a clean config error beats \
+                 panicking mid-way through thread spawning)",
+                self.workers,
+                Self::MAX_WORKERS
+            );
+        }
+        Ok(())
+    }
+
+    /// Worker count with `0 = auto` resolved to cores − 1.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::util::threadpool::default_threads()
+        } else {
+            self.workers
+        }
+    }
+}
+
 /// One full experiment cell: model × method × bits.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -285,6 +396,65 @@ mod tests {
         assert_eq!(Method::Brecq.drop_prob(), 0.0);
         assert!(!Method::Nearest.calibrates());
         assert_eq!(Method::all().len(), 7);
+    }
+
+    #[test]
+    fn serve_config_from_args() {
+        use crate::util::cli::Args;
+        let a = |s: &[&str]| Args::parse(s.iter().map(|x| x.to_string())).unwrap();
+
+        let cfg = ServeConfig::from_args(&a(&["serve"])).unwrap();
+        assert_eq!(cfg, ServeConfig::default());
+
+        let cfg = ServeConfig::from_args(&a(&[
+            "serve",
+            "--workers",
+            "4",
+            "--max-batch",
+            "32",
+            "--batch-wait-us",
+            "500",
+            "--queue-images",
+            "64",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.max_batch, 32);
+        assert_eq!(cfg.batch_wait_us, 500);
+        assert_eq!(cfg.queue_images, 64);
+        assert_eq!(cfg.resolved_workers(), 4);
+
+        let cfg = ServeConfig::from_args(&a(&["serve", "--workers", "auto"])).unwrap();
+        assert_eq!(cfg.workers, 0);
+        assert!(cfg.resolved_workers() >= 1);
+        assert_eq!(cfg.max_conns, None);
+
+        let cfg = ServeConfig::from_args(&a(&["serve", "--max-conns", "12"])).unwrap();
+        assert_eq!(cfg.max_conns, Some(12));
+        assert!(ServeConfig::from_args(&a(&["serve", "--max-conns", "many"])).is_err());
+
+        assert!(ServeConfig::from_args(&a(&["serve", "--workers", "lots"])).is_err());
+        assert!(ServeConfig::from_args(&a(&["serve", "--max-batch", "0"])).is_err());
+        // straggler deadline is bounded so Instant + wait cannot overflow
+        assert!(ServeConfig::from_args(&a(&[
+            "serve",
+            "--batch-wait-us",
+            "18446744073709551615"
+        ]))
+        .is_err());
+        assert!(
+            ServeConfig::from_args(&a(&["serve", "--batch-wait-us", "60000000"])).is_ok()
+        );
+        assert!(ServeConfig::from_args(&a(&["serve", "--workers", "1000000"])).is_err());
+        assert!(ServeConfig::from_args(&a(&["serve", "--workers", "1024"])).is_ok());
+        assert!(ServeConfig::from_args(&a(&[
+            "serve",
+            "--max-batch",
+            "128",
+            "--queue-images",
+            "16"
+        ]))
+        .is_err());
     }
 
     #[test]

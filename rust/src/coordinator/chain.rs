@@ -236,11 +236,13 @@ pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
     (0..b)
         .map(|i| {
             let row = &t.data[i * c..(i + 1) * c];
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap()
+            // Loud failure for offline paths (the serving argmax is
+            // NaN-tolerant by design; a NaN here is a calibration bug).
+            assert!(
+                !row.iter().any(|v| v.is_nan()),
+                "NaN logits in argmax_rows row {i}"
+            );
+            crate::nn::engine::argmax(row)
         })
         .collect()
 }

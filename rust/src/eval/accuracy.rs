@@ -67,12 +67,13 @@ pub fn eval_engine_accuracy(engine: &Engine, test: &Split, limit: Option<usize>)
     let mut hits = 0usize;
     for i in 0..n {
         let logits = engine.forward(test.image(i), None)?;
-        let pred = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap();
+        // Offline eval wants a loud failure on NaN (a calibration bug),
+        // unlike the NaN-tolerant serving argmax.
+        anyhow::ensure!(
+            !logits.iter().any(|v| v.is_nan()),
+            "NaN logits at test image {i} — calibration produced divergent params"
+        );
+        let pred = crate::nn::engine::argmax(&logits);
         if test.labels[i] as usize == pred {
             hits += 1;
         }

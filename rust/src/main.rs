@@ -6,6 +6,7 @@
 //!   eval      --model M --method X --bits WaAb
 //!   exp       <table1|table2|table3|table4|fig1|fig2|fig3|overhead|all>
 //!   serve     --model M --method X --bits WaAb --addr HOST:PORT
+//!             [--workers N] [--max-batch N] [--batch-wait-us N]
 //!
 //! All subcommands accept --artifacts DIR (default: artifacts).
 
@@ -42,9 +43,19 @@ USAGE: aquant <subcommand> [flags]
   exp       <table1|table2|table3|table4|fig1|fig2|fig3|overhead|all>
             [--iters N] [--models a,b] [--table1-limit N]
   serve     --model M --method X --bits WaAb [--addr H:P] [--iters N]
+            [--workers N|auto] [--max-batch N] [--batch-wait-us N]
+            [--queue-images N] [--max-conns N] [--stats-every-s N]
 
 methods: nearest adaround brecq qdrop aquant aquant-linear aquant-nofusion
 bits:    e.g. W4A4, W2A2, W32A2 (32 = full precision)
+
+serve knobs: --workers (inference threads; auto = cores-1),
+  --max-batch (images coalesced per engine batch, default 64),
+  --batch-wait-us (straggler deadline once a request is pending,
+  default 200), --queue-images (queue bound before connections
+  backpressure, default 8192), --max-conns (stop after N connections;
+  default: run forever), --stats-every-s (periodic stats line,
+  default 30, 0 = off)
 ";
 
 fn ctx_from(args: &Args) -> Result<Ctx> {
@@ -170,7 +181,22 @@ fn serve(args: &Args) -> Result<()> {
     let ctx = ctx_from(args)?;
     let (model, method, bits) = parse_cell(args)?;
     let addr = args.str_flag("addr", "127.0.0.1:7000");
+    let cfg = aquant::config::ServeConfig::from_args(args)?;
+    let every = args.num_flag("stats-every-s", 30u64)?;
     let engine = aquant::exp::cell::build_quantized_engine(&ctx, &model, method, bits)?;
-    aquant::server::serve(std::sync::Arc::new(engine), &addr, None)?;
+    let srv = aquant::server::Server::bind(std::sync::Arc::new(engine), &addr, cfg)?;
+    let stats = srv.stats();
+    if every > 0 {
+        // A long-lived server never returns from run(); the live stats
+        // handle is the only way to observe it.
+        let s = stats.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(every));
+            println!("aquant-serve: {}", s.report());
+        });
+    }
+    srv.run()?;
+    // reached only for bounded runs (--max-conns)
+    println!("aquant-serve: {}", stats.report());
     Ok(())
 }

@@ -73,6 +73,31 @@ pub struct Engine {
     pub fusion: FusionMode,
 }
 
+/// Reusable buffers for the allocation-free forward path. One scratch per
+/// worker thread: after the first image every buffer is reused, so the
+/// serving hot loop does no per-image allocation (ISSUE 2 / the paper's
+/// runtime-overhead claim depends on the border staying cheap online).
+#[derive(Debug, Default)]
+pub struct EngineScratch {
+    /// Current activation (ping) and next layer's output (pong).
+    h: Vec<f32>,
+    out: Vec<f32>,
+    /// Residual block input, retained for the skip path.
+    block_in: Vec<f32>,
+    /// Downsample-projection output.
+    skip: Vec<f32>,
+    /// im2col patch buffer (grows to the largest layer, then stable).
+    patches: Vec<f32>,
+    /// Border-function scratch (2·R for the fused-border segment pass).
+    quant: Vec<f32>,
+}
+
+impl EngineScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Per-layer timing sample from `forward_timed`.
 #[derive(Debug, Clone)]
 pub struct LayerTiming {
@@ -103,19 +128,41 @@ impl Engine {
     }
 
     /// Run one layer on one image (no relu). Returns (C,H,W) output and
-    /// fills `timing` when given.
+    /// fills `timing` when given. Thin allocating wrapper over
+    /// [`Engine::run_layer_into`], so there is exactly one copy of the
+    /// layer math regardless of buffer strategy.
     fn run_layer(
         &self,
         l: &LayerTopo,
         x: &[f32],
         timing: Option<&mut LayerTiming>,
     ) -> Result<Vec<f32>> {
+        let (mut out, mut patches, mut scratch) = (Vec::new(), Vec::new(), Vec::new());
+        self.run_layer_into(l, x, &mut out, &mut patches, &mut scratch, timing)?;
+        Ok(out)
+    }
+
+    /// Run one layer writing into caller-owned buffers (the serving hot
+    /// path reuses them via [`EngineScratch`]). Every element of `out`
+    /// (and of the reused `patches` region) is overwritten, so buffers
+    /// carry no state between calls. Timing clock reads only happen when
+    /// `timing` is given, keeping the hot loop clean.
+    fn run_layer_into(
+        &self,
+        l: &LayerTopo,
+        x: &[f32],
+        out: &mut Vec<f32>,
+        patches: &mut Vec<f32>,
+        quant_scratch: &mut Vec<f32>,
+        timing: Option<&mut LayerTiming>,
+    ) -> Result<()> {
         let lw = self.layer_weights(&l.name)?;
         let aq = self.act_quant.get(&l.name).unwrap_or(&ActQuant::None);
         if l.kind == "fc" {
-            // GAP + matmul; the "patches" are the C-vector (R = ic, k2 = 1).
+            // GAP + matmul; `patches` doubles as the pooled C-vector.
             let (c, h, w) = l.in_chw;
-            let mut v = vec![0.0f32; c];
+            patches.resize(c, 0.0);
+            let v = &mut patches[..c];
             if l.gap_input && h * w > 1 {
                 for ci in 0..c {
                     let plane = &x[ci * h * w..(ci + 1) * h * w];
@@ -124,43 +171,115 @@ impl Engine {
             } else {
                 v.copy_from_slice(&x[..c]);
             }
-            let mut scratch = Vec::new();
-            aq.apply(&mut v, 1, &mut scratch);
-            let mut out = vec![0.0f32; l.oc];
+            aq.apply(v, 1, quant_scratch);
+            out.resize(l.oc, 0.0);
             for o in 0..l.oc {
                 let wrow = &lw.w[o * c..(o + 1) * c];
-                out[o] = wrow.iter().zip(&v).map(|(a, b)| a * b).sum::<f32>() + lw.b[o];
+                out[o] = wrow.iter().zip(v.iter()).map(|(a, b)| a * b).sum::<f32>() + lw.b[o];
             }
-            return Ok(out);
+            return Ok(());
         }
         let (_, ho, wo) = l.out_chw;
         let np = ho * wo;
-        let mut patches = vec![0.0f32; np * l.rows];
+        patches.resize(np * l.rows, 0.0);
         let k2 = l.k2();
-        let mut scratch = Vec::new();
-        let t0 = Instant::now();
+        let t0 = timing.is_some().then(Instant::now);
         match (self.fusion, matches!(aq, ActQuant::None)) {
-            (_, true) => im2col::extract(l, x, &mut patches),
+            (_, true) => im2col::extract(l, x, patches),
             (FusionMode::Fused, false) => {
-                im2col::extract_fused(l, x, &mut patches, |col| aq.apply(col, k2, &mut scratch))
+                im2col::extract_fused(l, x, patches, |col| aq.apply(col, k2, quant_scratch))
             }
             (FusionMode::Unfused, false) => {
-                im2col::extract(l, x, &mut patches);
+                im2col::extract(l, x, patches);
                 for p in 0..np {
-                    aq.apply(&mut patches[p * l.rows..(p + 1) * l.rows], k2, &mut scratch);
+                    aq.apply(&mut patches[p * l.rows..(p + 1) * l.rows], k2, quant_scratch);
                 }
             }
         }
-        let t_im2col = t0.elapsed();
-        let mut out = vec![0.0f32; l.oc * np];
-        let t1 = Instant::now();
-        im2col::gemm(l, &lw.w, &lw.b, &patches, &mut out);
+        let t_im2col = t0.map(|t| t.elapsed());
+        out.resize(l.oc * np, 0.0);
+        let t1 = timing.is_some().then(Instant::now);
+        im2col::gemm(l, &lw.w, &lw.b, patches, out);
         if let Some(t) = timing {
             t.layer = l.name.clone();
-            t.im2col_quant_us = t_im2col.as_secs_f64() * 1e6;
-            t.gemm_us = t1.elapsed().as_secs_f64() * 1e6;
+            t.im2col_quant_us = t_im2col.unwrap().as_secs_f64() * 1e6;
+            t.gemm_us = t1.unwrap().elapsed().as_secs_f64() * 1e6;
         }
-        Ok(out)
+        Ok(())
+    }
+
+    /// Forward one image through reusable buffers; returns the logits as
+    /// a view into `scratch`. Bit-identical to `forward(image, None)` —
+    /// asserted by the engine property tests — but allocation-free after
+    /// the first call.
+    ///
+    /// Deliberately NOT merged with [`Engine::forward`]: the allocating
+    /// walk is kept as an independent implementation so the
+    /// `forward_scratch == forward` differential property test
+    /// (rust/tests/pool_props.rs) actually tests the buffer-reuse
+    /// orchestration instead of comparing a function to itself. Any
+    /// change to the block walk must be applied to both (the layer math
+    /// itself is shared via `run_layer_into`).
+    pub fn forward_scratch<'a>(
+        &self,
+        image: &[f32],
+        scratch: &'a mut EngineScratch,
+    ) -> Result<&'a [f32]> {
+        let s = scratch;
+        s.h.clear();
+        s.h.extend_from_slice(image);
+        for blk in &self.topo.blocks {
+            if blk.residual {
+                s.block_in.clear();
+                s.block_in.extend_from_slice(&s.h);
+            }
+            let main: Vec<&LayerTopo> = blk.main_layers().collect();
+            for (i, l) in main.iter().enumerate() {
+                self.run_layer_into(l, &s.h, &mut s.out, &mut s.patches, &mut s.quant, None)?;
+                let is_last = i == main.len() - 1;
+                let defer_relu = is_last && blk.residual;
+                if l.relu && !defer_relu {
+                    for v in &mut s.out {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                std::mem::swap(&mut s.h, &mut s.out);
+            }
+            if blk.residual {
+                if let Some(ds) = blk.downsample_layer() {
+                    self.run_layer_into(
+                        ds,
+                        &s.block_in,
+                        &mut s.skip,
+                        &mut s.patches,
+                        &mut s.quant,
+                        None,
+                    )?;
+                    for (a, b) in s.h.iter_mut().zip(&s.skip) {
+                        *a += b;
+                        if *a < 0.0 {
+                            *a = 0.0;
+                        }
+                    }
+                } else {
+                    for (a, b) in s.h.iter_mut().zip(&s.block_in) {
+                        *a += b;
+                        if *a < 0.0 {
+                            *a = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(&s.h)
+    }
+
+    /// Argmax class for one image via the scratch path.
+    pub fn classify_scratch(&self, image: &[f32], scratch: &mut EngineScratch) -> Result<usize> {
+        let logits = self.forward_scratch(image, scratch)?;
+        Ok(argmax(logits))
     }
 
     /// Forward one image (C,H,W) -> logits. Optionally capture every
@@ -263,19 +382,38 @@ impl Engine {
         Ok(timings)
     }
 
-    /// Batch forward -> argmax class per image.
+    /// Batch forward -> argmax class per image. Sequential reference
+    /// implementation: one scratch reused across the batch, so this is
+    /// the same per-image code path [`crate::nn::pool::InferencePool`] shards
+    /// across workers (which is what makes pooled results bit-identical).
     pub fn classify_batch(&self, images: &[&[f32]]) -> Result<Vec<usize>> {
+        let mut scratch = EngineScratch::default();
         images
             .iter()
-            .map(|img| {
-                let logits = self.forward(img, None)?;
-                Ok(logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap())
-            })
+            .map(|img| self.classify_scratch(img, &mut scratch))
             .collect()
     }
+
+    /// Expected f32 elements per input image (C·H·W).
+    pub fn img_elems(&self) -> usize {
+        let (h, w) = self.topo.in_hw;
+        self.topo.in_c * h * w
+    }
+}
+
+/// Index of the max logit. Total ordering (`f32::total_cmp`) so NaN in
+/// a hostile request payload yields *some* class instead of panicking —
+/// a panic here would kill a long-lived pool worker, turning one bad
+/// request into whole-service degradation. Ties keep the last maximum,
+/// matching the `max_by(partial_cmp)` idiom this replaced for all
+/// non-NaN inputs except the exotic signed-zero tie (`total_cmp` orders
+/// -0.0 < +0.0 where `partial_cmp` called them equal). Shared with the
+/// eval/coordinator argmax sites.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap()
 }

@@ -9,7 +9,10 @@
 pub mod engine;
 pub mod im2col;
 pub mod loader;
+pub mod pool;
+pub mod synth;
 pub mod topology;
 
-pub use engine::{ActQuant, Engine, LayerWeights};
+pub use engine::{ActQuant, Engine, EngineScratch, LayerWeights};
+pub use pool::InferencePool;
 pub use topology::{BlockTopo, LayerTopo, ModelTopo};

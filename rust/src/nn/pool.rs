@@ -1,0 +1,228 @@
+//! Fixed worker thread-pool for batched inference.
+//!
+//! A batch of images is sharded into contiguous index ranges, one per
+//! worker. Each worker is a long-lived thread owning one
+//! [`EngineScratch`], so after warm-up the per-image hot loop performs
+//! no allocation (the im2col patch buffer, border scratch, and
+//! activation ping-pong buffers are all reused).
+//!
+//! Determinism: every image's forward pass is independent and the
+//! per-image code path is exactly [`Engine::classify_scratch`] — the
+//! same path the sequential [`Engine::classify_batch`] uses — so pooled
+//! results are bit-identical to sequential results for any worker count
+//! and any shard split. The pool property tests pin this down.
+//!
+//! Built on `std` only (rayon/crossbeam are unavailable offline): jobs
+//! flow through an `mpsc` channel shared by workers behind a mutex, and
+//! each job carries its own reply sender.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::engine::{Engine, EngineScratch};
+
+/// One contiguous shard of a batch, dispatched to a single worker.
+struct Shard {
+    /// The whole batch, flattened (n · img_elems f32s), shared by ref-count.
+    images: Arc<Vec<f32>>,
+    img_elems: usize,
+    /// Image index range [start, end) this worker classifies.
+    start: usize,
+    end: usize,
+    reply: Sender<ShardReply>,
+}
+
+struct ShardReply {
+    start: usize,
+    /// Predicted classes for the shard, or the first error hit.
+    preds: Result<Vec<usize>, String>,
+}
+
+/// Fixed-size inference thread-pool over a shared [`Engine`].
+pub struct InferencePool {
+    engine: Arc<Engine>,
+    workers: usize,
+    /// Job channel; `None` once shutdown has begun (Drop).
+    tx: Option<Sender<Shard>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl InferencePool {
+    /// Spawn `workers` (min 1) threads, each with its own scratch.
+    pub fn new(engine: Arc<Engine>, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Shard>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let eng = engine.clone();
+            handles.push(std::thread::spawn(move || worker_loop(&eng, &rx)));
+        }
+        InferencePool {
+            engine,
+            workers,
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Classify `n` images stored flat in `images` (n · img_elems f32s).
+    /// Returns per-image argmax classes, bit-identical to the sequential
+    /// [`Engine::classify_batch`].
+    pub fn classify_flat(&self, images: Arc<Vec<f32>>, n: usize) -> Result<Vec<usize>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let img_elems = self.engine.img_elems();
+        ensure!(
+            images.len() == n * img_elems,
+            "flat batch has {} f32s, want {} ({n} x {img_elems})",
+            images.len(),
+            n * img_elems
+        );
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("inference pool shut down"))?;
+        let shards = self.workers.min(n);
+        let chunk = (n + shards - 1) / shards;
+        let (rtx, rrx) = channel::<ShardReply>();
+        let mut sent = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            tx.send(Shard {
+                images: images.clone(),
+                img_elems,
+                start,
+                end,
+                reply: rtx.clone(),
+            })
+            .map_err(|_| anyhow!("inference pool workers gone"))?;
+            sent += 1;
+            start = end;
+        }
+        drop(rtx);
+        let mut out = vec![0usize; n];
+        for _ in 0..sent {
+            let r = rrx
+                .recv()
+                .map_err(|_| anyhow!("inference worker died mid-batch"))?;
+            let preds = r.preds.map_err(|e| anyhow!("inference worker: {e}"))?;
+            out[r.start..r.start + preds.len()].copy_from_slice(&preds);
+        }
+        Ok(out)
+    }
+
+    /// Convenience: classify a slice-of-slices batch (flattens once).
+    pub fn classify_batch(&self, images: &[&[f32]]) -> Result<Vec<usize>> {
+        let mut flat = Vec::with_capacity(images.iter().map(|i| i.len()).sum());
+        for img in images {
+            flat.extend_from_slice(img);
+        }
+        self.classify_flat(Arc::new(flat), images.len())
+    }
+}
+
+impl Drop for InferencePool {
+    fn drop(&mut self) {
+        // Closing the channel unblocks every worker's recv with Err.
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(engine: &Engine, rx: &Mutex<Receiver<Shard>>) {
+    let mut scratch = EngineScratch::new();
+    loop {
+        // Hold the lock only for the blocking recv, not while running
+        // inference, so idle workers can pick up the next shard.
+        let shard = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // another worker panicked holding the lock
+        };
+        let Ok(shard) = shard else { return }; // pool dropped
+        // Contain any engine panic: a dead worker would permanently
+        // shrink the pool, so a panicking image becomes a shard error
+        // instead. The scratch carries no invariants across calls
+        // (every buffer is fully overwritten), so reuse after an
+        // unwind is safe.
+        let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut preds = Vec::with_capacity(shard.end - shard.start);
+            for i in shard.start..shard.end {
+                let img = &shard.images[i * shard.img_elems..(i + 1) * shard.img_elems];
+                match engine.classify_scratch(img, &mut scratch) {
+                    Ok(p) => preds.push(p),
+                    Err(e) => return Err(format!("image {i}: {e:#}")),
+                }
+            }
+            Ok(preds)
+        }))
+        .unwrap_or_else(|_| Err("engine panicked on this shard".to_string()));
+        // The batch submitter may have bailed already; ignore send errors.
+        let _ = shard.reply.send(ShardReply {
+            start: shard.start,
+            preds,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::synth;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, n: usize) -> (Arc<Engine>, Vec<f32>, usize) {
+        let mut rng = Rng::new(seed);
+        let (topo, weights) = synth::tiny_model(&mut rng);
+        let engine = Arc::new(synth::engine_with_random_borders(
+            &topo, &weights, &mut rng, true, true,
+        ));
+        let elems = engine.img_elems();
+        let images: Vec<f32> = (0..n * elems).map(|_| rng.normal()).collect();
+        (engine, images, elems)
+    }
+
+    #[test]
+    fn pool_matches_sequential_basic() {
+        let (engine, images, elems) = setup(11, 10);
+        let refs: Vec<&[f32]> = images.chunks_exact(elems).collect();
+        let want = engine.classify_batch(&refs).unwrap();
+        for workers in [1, 3, 16] {
+            let pool = InferencePool::new(engine.clone(), workers);
+            assert_eq!(pool.classify_batch(&refs).unwrap(), want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pool_reuse_across_batches_and_empty() {
+        let (engine, images, elems) = setup(12, 6);
+        let pool = InferencePool::new(engine.clone(), 2);
+        assert!(pool.classify_batch(&[]).unwrap().is_empty());
+        for split in [1usize, 2, 6] {
+            let refs: Vec<&[f32]> = images.chunks_exact(elems).take(split).collect();
+            let want = engine.classify_batch(&refs).unwrap();
+            assert_eq!(pool.classify_batch(&refs).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn classify_flat_rejects_ragged_buffer() {
+        let (engine, images, _) = setup(13, 2);
+        let pool = InferencePool::new(engine, 2);
+        let mut bad = images.clone();
+        bad.pop();
+        assert!(pool.classify_flat(Arc::new(bad), 2).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! Synthetic model builders for tests, benches, and examples that must
+//! run without AOT artifacts (fresh clone, no `make artifacts`).
+//!
+//! All builders are deterministic in the passed [`Rng`], so a seed fully
+//! pins topology, weights, and border parameters — the property tests
+//! rely on this to replay failures.
+
+use std::collections::HashMap;
+
+use crate::nn::engine::{ActQuant, Engine, LayerWeights};
+use crate::nn::topology::{BlockTopo, LayerTopo, ModelTopo};
+use crate::quant::border::BorderFn;
+use crate::util::rng::Rng;
+
+/// Conv layer topo with the usual `pad = k/2` same-ish padding.
+pub fn conv_layer(
+    name: &str,
+    ic: usize,
+    oc: usize,
+    k: usize,
+    stride: usize,
+    h: usize,
+    w: usize,
+    relu: bool,
+) -> LayerTopo {
+    let pad = k / 2;
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    LayerTopo {
+        name: name.into(),
+        kind: "conv".into(),
+        ic,
+        oc,
+        k,
+        stride,
+        pad,
+        groups: 1,
+        relu,
+        gap_input: false,
+        rows: ic * k * k,
+        in_chw: (ic, h, w),
+        out_chw: (oc, ho, wo),
+    }
+}
+
+/// Global-average-pool + fully-connected head.
+pub fn fc_layer(name: &str, ic: usize, n_classes: usize, h: usize, w: usize) -> LayerTopo {
+    LayerTopo {
+        name: name.into(),
+        kind: "fc".into(),
+        ic,
+        oc: n_classes,
+        k: 1,
+        stride: 1,
+        pad: 0,
+        groups: 1,
+        relu: false,
+        gap_input: true,
+        rows: ic,
+        in_chw: (ic, h, w),
+        out_chw: (n_classes, 1, 1),
+    }
+}
+
+fn random_layer_weights(rng: &mut Rng, l: &LayerTopo) -> LayerWeights {
+    LayerWeights {
+        w: (0..l.weight_elems()).map(|_| rng.normal() * 0.3).collect(),
+        b: (0..l.oc).map(|_| rng.normal() * 0.1).collect(),
+    }
+}
+
+/// The fixed 3-block model used across the engine property tests:
+/// conv(3->4) / residual conv(4->4) / gap-fc(4->5) on 8x8 inputs.
+pub fn tiny_model(rng: &mut Rng) -> (ModelTopo, HashMap<String, LayerWeights>) {
+    let l1 = conv_layer("c1", 3, 4, 3, 1, 8, 8, true);
+    let l2 = conv_layer("c2", 4, 4, 3, 1, 8, 8, false);
+    let fc = fc_layer("fc", 4, 5, 8, 8);
+    let mut weights = HashMap::new();
+    for l in [&l1, &l2, &fc] {
+        weights.insert(l.name.clone(), random_layer_weights(rng, l));
+    }
+    let topo = ModelTopo {
+        name: "tiny".into(),
+        in_c: 3,
+        in_hw: (8, 8),
+        n_classes: 5,
+        blocks: vec![
+            BlockTopo {
+                name: "b0".into(),
+                residual: false,
+                downsample: None,
+                layers: vec![l1],
+            },
+            BlockTopo {
+                name: "b1".into(),
+                residual: true,
+                downsample: None,
+                layers: vec![l2],
+            },
+            BlockTopo {
+                name: "head".into(),
+                residual: false,
+                downsample: None,
+                layers: vec![fc],
+            },
+        ],
+    };
+    (topo, weights)
+}
+
+/// A random small topology: 1–3 conv blocks (random channels, kernel,
+/// stride, 1–2 main layers, optionally residual — identity skip when
+/// shapes allow, or a 1×1 downsample projection) and a gap-fc head.
+/// Inputs stay tiny (6x6 or 8x8) so property tests can afford hundreds
+/// of cases while still covering every engine branch (multi-layer
+/// relu-deferral, identity skip, downsample skip).
+pub fn random_model(rng: &mut Rng) -> (ModelTopo, HashMap<String, LayerWeights>) {
+    let hw = [6, 8][rng.below(2)];
+    let in_c = [2, 3, 4][rng.below(3)];
+    let (mut c, mut h, mut w) = (in_c, hw, hw);
+    let mut blocks = Vec::new();
+    let mut weights = HashMap::new();
+    let n_blocks = 1 + rng.below(3);
+    for bi in 0..n_blocks {
+        let oc = [2, 4, 6, 8][rng.below(4)];
+        let k = [1, 3][rng.below(2)];
+        let stride = if h >= 4 && rng.bernoulli(0.3) { 2 } else { 1 };
+        let mut layers = Vec::new();
+        let l1 = conv_layer(&format!("b{bi}_c1"), c, oc, k, stride, h, w, true);
+        let (_, mut bh, mut bw) = l1.out_chw;
+        let mut bc = oc;
+        weights.insert(l1.name.clone(), random_layer_weights(rng, &l1));
+        layers.push(l1);
+        if rng.bernoulli(0.4) {
+            // second main layer (stride 1): exercises the mid-block
+            // relu / end-of-block relu-deferral distinction
+            let oc2 = [2, 4, 6, 8][rng.below(4)];
+            let k2 = [1, 3][rng.below(2)];
+            let l2 = conv_layer(&format!("b{bi}_c2"), bc, oc2, k2, 1, bh, bw, true);
+            (bc, bh, bw) = (oc2, l2.out_chw.1, l2.out_chw.2);
+            weights.insert(l2.name.clone(), random_layer_weights(rng, &l2));
+            layers.push(l2);
+        }
+        let shape_preserved = bc == c && bh == h && bw == w;
+        let (residual, downsample) = if shape_preserved && rng.bernoulli(0.5) {
+            (true, None)
+        } else if rng.bernoulli(0.35) {
+            // 1x1 skip projection; with pad 0 it lands on the same
+            // integer output dims as the k∈{1,3} main path (only the
+            // first main layer strides)
+            let ds = conv_layer(&format!("b{bi}_ds"), c, bc, 1, stride, h, w, false);
+            debug_assert_eq!(ds.out_chw, (bc, bh, bw));
+            weights.insert(ds.name.clone(), random_layer_weights(rng, &ds));
+            let name = ds.name.clone();
+            layers.push(ds);
+            (true, Some(name))
+        } else {
+            (false, None)
+        };
+        blocks.push(BlockTopo {
+            name: format!("b{bi}"),
+            residual,
+            downsample,
+            layers,
+        });
+        (c, h, w) = (bc, bh, bw);
+    }
+    let n_classes = 3 + rng.below(3);
+    let fc = fc_layer("fc", c, n_classes, h, w);
+    weights.insert(fc.name.clone(), random_layer_weights(rng, &fc));
+    blocks.push(BlockTopo {
+        name: "head".into(),
+        residual: false,
+        downsample: None,
+        layers: vec![fc],
+    });
+    let topo = ModelTopo {
+        name: "synth".into(),
+        in_c,
+        in_hw: (hw, hw),
+        n_classes,
+        blocks,
+    };
+    (topo, weights)
+}
+
+/// A heavier stack for throughput benches: 3 convs (3->16->16->16) on
+/// 16x16 inputs + fc head, enough arithmetic per image for thread
+/// scaling to dominate dispatch overhead.
+pub fn bench_model(rng: &mut Rng) -> (ModelTopo, HashMap<String, LayerWeights>) {
+    let l1 = conv_layer("c1", 3, 16, 3, 1, 16, 16, true);
+    let l2 = conv_layer("c2", 16, 16, 3, 1, 16, 16, true);
+    let l3 = conv_layer("c3", 16, 16, 3, 2, 16, 16, true);
+    let fc = fc_layer("fc", 16, 10, 8, 8);
+    let mut weights = HashMap::new();
+    for l in [&l1, &l2, &l3, &fc] {
+        weights.insert(l.name.clone(), random_layer_weights(rng, l));
+    }
+    let blocks = [l1, l2, l3, fc]
+        .into_iter()
+        .enumerate()
+        .map(|(i, l)| BlockTopo {
+            name: format!("b{i}"),
+            residual: false,
+            downsample: None,
+            layers: vec![l],
+        })
+        .collect();
+    let topo = ModelTopo {
+        name: "synthbench".into(),
+        in_c: 3,
+        in_hw: (16, 16),
+        n_classes: 10,
+        blocks,
+    };
+    (topo, weights)
+}
+
+/// Engine with a random learned border on every layer — puts the full
+/// border-quantization path (the serving hot loop) under test/bench.
+pub fn engine_with_random_borders(
+    topo: &ModelTopo,
+    weights: &HashMap<String, LayerWeights>,
+    rng: &mut Rng,
+    fuse_en: bool,
+    b2_en: bool,
+) -> Engine {
+    let mut eng = Engine::new(topo.clone(), weights.clone());
+    for l in topo.all_layers() {
+        let params: Vec<f32> = (0..l.rows * 4).map(|_| rng.normal() * 0.2).collect();
+        eng.set_act_quant(
+            &l.name,
+            ActQuant::Border {
+                border: BorderFn::from_params(params, l.k2(), fuse_en, b2_en),
+                s: 0.1,
+                qmin: 0.0,
+                qmax: 15.0,
+            },
+        );
+    }
+    eng
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_model_shapes_chain() {
+        let (mut saw_multi, mut saw_ds, mut saw_identity) = (false, false, false);
+        for seed in 0..200 {
+            let mut rng = Rng::new(seed);
+            let (topo, weights) = random_model(&mut rng);
+            let mut chw = (topo.in_c, topo.in_hw.0, topo.in_hw.1);
+            for b in &topo.blocks {
+                let block_in = chw;
+                let mut cur = block_in;
+                for l in b.main_layers() {
+                    assert_eq!(l.in_chw, cur, "layer {} input mismatch", l.name);
+                    cur = l.out_chw;
+                }
+                if let Some(ds) = b.downsample_layer() {
+                    assert!(b.residual, "downsample in non-residual block {}", b.name);
+                    assert_eq!(ds.in_chw, block_in, "downsample {} input", ds.name);
+                    assert_eq!(ds.out_chw, cur, "downsample {} must project to block output", ds.name);
+                    saw_ds = true;
+                } else if b.residual {
+                    assert_eq!(cur, block_in, "identity-skip block {} must preserve shape", b.name);
+                    saw_identity = true;
+                }
+                if b.main_layers().count() > 1 {
+                    saw_multi = true;
+                }
+                for l in &b.layers {
+                    assert_eq!(
+                        weights[&l.name].w.len(),
+                        l.weight_elems(),
+                        "layer {} weights",
+                        l.name
+                    );
+                }
+                chw = cur;
+            }
+        }
+        // the generator must actually produce every engine branch
+        assert!(saw_multi, "no multi-layer block in 200 seeds");
+        assert!(saw_ds, "no downsample residual in 200 seeds");
+        assert!(saw_identity, "no identity residual in 200 seeds");
+    }
+
+    #[test]
+    fn random_model_forward_runs() {
+        let mut rng = Rng::new(3);
+        let (topo, weights) = random_model(&mut rng);
+        let elems = topo.in_c * topo.in_hw.0 * topo.in_hw.1;
+        let image: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+        let eng = engine_with_random_borders(&topo, &weights, &mut rng, true, true);
+        let logits = eng.forward(&image, None).unwrap();
+        assert_eq!(logits.len(), topo.n_classes);
+    }
+}

@@ -1,68 +1,473 @@
-//! Quantized-inference server: a small TCP service over the pure-Rust
-//! engine (Python never on the request path — the engine runs quantized
+//! Quantized-inference server: dynamic batching over a fixed worker
+//! pool (Python never on the request path — the engine runs quantized
 //! weights + the border function natively).
 //!
-//! Wire protocol (little-endian):
-//!   request:  u32 n_images, then n·(C·H·W) f32 pixels
-//!   response: u32 n_images, then n u32 class ids
+//! # Wire protocol (little-endian, unchanged since the seed)
 //!
-//! One thread per connection (std::thread; tokio is unavailable offline).
+//! ```text
+//!   request:  u32 n_images (1..=4096), then n·(C·H·W) f32 pixels
+//!   response: u32 n_images, then n u32 class ids
+//! ```
+//!
+//! A connection may pipeline any number of requests; the server answers
+//! in order. A request with `n = 0` or `n > 4096` is rejected by
+//! closing the connection (counted in [`Stats::rejected`]); a
+//! mid-stream EOF drops only that connection. Either way the accept
+//! loop and batcher keep serving other connections.
+//!
+//! # Architecture
+//!
+//! ```text
+//!   conns (1 thread each, blocking I/O; tokio unavailable offline)
+//!     └─ push(Pending{images, reply}) ──► BatchQueue (bounded, images-
+//!        blocks when full (backpressure)     counted, Mutex+Condvar)
+//!                                              │ pop_batch(max_batch,
+//!                                              │           batch_wait)
+//!                                              ▼
+//!                                         batcher thread
+//!                  coalesces queued requests — possibly from many
+//!                  connections — into one engine-sized batch, then
+//!                                              │ classify_flat
+//!                                              ▼
+//!                                       InferencePool (N workers,
+//!                                       per-worker reusable scratch)
+//! ```
+//!
+//! The batcher takes whatever is queued the moment work is available;
+//! if the batch is still under `max_batch` images it waits up to
+//! `batch_wait_us` for stragglers before dispatching. Each pending
+//! request gets its slice of the batch's predictions back over its own
+//! reply channel.
+//!
+//! Batching cannot change results: every image's forward pass is
+//! independent and pooled execution is bit-identical to the sequential
+//! engine (see `rust/tests/serve_roundtrip.rs` and `pool_props.rs`).
+//!
+//! # Knobs ([`ServeConfig`])
+//!
+//! * `workers` — inference threads (0 = cores − 1)
+//! * `max_batch` — images per engine batch; larger amortizes dispatch,
+//!   smaller bounds latency
+//! * `batch_wait_us` — straggler deadline; 0 = dispatch immediately
+//! * `queue_images` — queue bound; full queue blocks connection pushes
+//!   FIFO (TCP backpressure) instead of growing without limit. Note the
+//!   bound covers *queued* work: payloads still being received are held
+//!   per-connection (streamed in, so allocation tracks bytes actually
+//!   read, capped by the 4096-image protocol limit); bounding total
+//!   connection memory is `--max-conns` / OS limits territory.
 
+use std::collections::VecDeque;
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::config::ServeConfig;
 use crate::nn::engine::Engine;
+use crate::nn::pool::InferencePool;
 
-/// Server statistics.
+/// Hard protocol cap on images per request.
+pub const MAX_REQ_IMAGES: usize = 4096;
+
+/// Batch-size histogram buckets: bucket i counts executed batches with
+/// 2^i ..= 2^(i+1)−1 images (last bucket is open-ended at 4096).
+pub const BATCH_BUCKETS: usize = 13;
+
+/// Server statistics, shared up front via `Arc` so a long-lived server
+/// can be observed while running (the seed only returned stats after
+/// the accept loop exited — useless for a real deployment).
 #[derive(Debug, Default)]
 pub struct Stats {
+    /// Completed (answered) requests.
     pub requests: AtomicU64,
+    /// Images executed through the engine (counted at batch execution,
+    /// so live reads and `mean_batch` stay coherent).
     pub images: AtomicU64,
+    /// Engine time (µs) summed over executed batches.
     pub total_us: AtomicU64,
+    /// Successfully executed engine batches (after coalescing); failed
+    /// batches are counted separately so images/batches/total_us stay
+    /// coherent with answered predictions.
+    pub batches: AtomicU64,
+    /// Batches whose pool execution failed (every coalesced request in
+    /// them got an error reply).
+    pub failed_batches: AtomicU64,
+    /// Requests rejected for a malformed header.
+    pub rejected: AtomicU64,
+    /// Images currently waiting in the batch queue (gauge).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub queue_peak: AtomicU64,
+    /// Histogram of executed batch sizes (log2 buckets).
+    pub batch_hist: [AtomicU64; BATCH_BUCKETS],
 }
 
-/// Serve until the process is killed. `max_conns` bounds accepted
-/// connections when Some (used by tests/examples for bounded runs).
-pub fn serve(engine: Arc<Engine>, addr: &str, max_conns: Option<usize>) -> Result<Stats> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    println!(
-        "aquant-serve: model {} on {addr} ({} classes)",
-        engine.topo.name, engine.topo.n_classes
-    );
-    let stats = Stats::default();
-    let stats_ref = &stats;
-    std::thread::scope(|scope| -> Result<()> {
-        let mut seen = 0usize;
-        for conn in listener.incoming() {
-            let stream = conn?;
-            let eng = engine.clone();
-            scope.spawn(move || {
-                if let Err(e) = handle(eng, stream, stats_ref) {
-                    eprintln!("aquant-serve: connection error: {e:#}");
-                }
-            });
-            seen += 1;
-            if let Some(m) = max_conns {
-                if seen >= m {
+impl Stats {
+    /// Histogram bucket for a batch of `n` images: floor(log2 n),
+    /// clamped to the last bucket.
+    pub fn batch_bucket(n: usize) -> usize {
+        let n = n.max(1);
+        ((usize::BITS - 1 - n.leading_zeros()) as usize).min(BATCH_BUCKETS - 1)
+    }
+
+    /// Record one executed engine batch.
+    pub fn observe_batch(&self, n: usize, us: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.images.fetch_add(n as u64, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        self.batch_hist[Self::batch_bucket(n)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean images per executed batch (coalescing effectiveness).
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.images.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line human summary (printed by `aquant serve` and examples).
+    pub fn report(&self) -> String {
+        let hist: Vec<String> = self
+            .batch_hist
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then(|| format!("{}:{c}", 1usize << i))
+            })
+            .collect();
+        format!(
+            "requests {}  images {}  batches {} (mean {:.1} img/batch)  engine {}us  \
+             failed {}  rejected {}  queue peak {}  batch-size hist [{}]",
+            self.requests.load(Ordering::Relaxed),
+            self.images.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.total_us.load(Ordering::Relaxed),
+            self.failed_batches.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.queue_peak.load(Ordering::Relaxed),
+            hist.join(" "),
+        )
+    }
+}
+
+/// One parsed request waiting to be batched.
+struct Pending {
+    images: Vec<f32>,
+    n: usize,
+    reply: mpsc::Sender<Result<Vec<u32>, String>>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    items: VecDeque<Pending>,
+    queued_images: usize,
+    shutdown: bool,
+    /// FIFO admission tickets: `next_ticket` is taken on push arrival,
+    /// `serving` is the ticket currently allowed to admit. Without
+    /// this, a large request could starve forever behind a stream of
+    /// small ones that always win the condvar race.
+    next_ticket: u64,
+    serving: u64,
+}
+
+/// Bounded request queue: connection threads push, the batcher pops
+/// coalesced batches. Bounded by *image count*, not request count, so
+/// backpressure tracks actual work.
+struct BatchQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap_images: usize,
+}
+
+impl BatchQueue {
+    fn new(cap_images: usize) -> Self {
+        BatchQueue {
+            state: Mutex::new(QueueState::default()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            // The configured bound is honored as-is: push admits a
+            // request larger than the cap only when the queue is empty,
+            // so a tight bound can't deadlock a max-size request.
+            cap_images,
+        }
+    }
+
+    /// Block until there is room, then enqueue (FIFO across blocked
+    /// pushers — see `QueueState` tickets; while a large request waits,
+    /// later arrivals wait behind it, so the queue drains and even an
+    /// over-cap request is eventually admitted alone). Returns false if
+    /// the server is shutting down (request is dropped).
+    fn push(&self, p: Pending, stats: &Stats) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        while !st.shutdown
+            && (ticket != st.serving
+                || (!st.items.is_empty() && st.queued_images + p.n > self.cap_images))
+        {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.shutdown {
+            // Terminal: every other waiter also exits via this branch,
+            // so the unconsumed ticket cannot wedge the line.
+            return false;
+        }
+        st.serving += 1;
+        st.queued_images += p.n;
+        let depth = st.queued_images as u64;
+        st.items.push_back(p);
+        stats.queue_depth.store(depth, Ordering::Relaxed);
+        stats.queue_peak.fetch_max(depth, Ordering::Relaxed);
+        drop(st);
+        self.not_empty.notify_one();
+        // wake the next ticket in line
+        self.not_full.notify_all();
+        true
+    }
+
+    /// Pop a coalesced batch: blocks until at least one request is
+    /// queued, then keeps gathering until `max_batch` images are in hand
+    /// or `wait` has elapsed. Returns None only when shut down *and*
+    /// drained, so no accepted request is ever dropped on the floor.
+    fn pop_batch(&self, max_batch: usize, wait: Duration, stats: &Stats) -> Option<Vec<Pending>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.items.is_empty() {
+                break;
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+        let mut batch = Vec::new();
+        let mut images = 0usize;
+        let deadline = Instant::now() + wait;
+        loop {
+            while let Some(front) = st.items.front() {
+                // Always admit the first request, even oversized ones
+                // (the pool shards them across workers anyway).
+                if !batch.is_empty() && images + front.n > max_batch {
                     break;
+                }
+                let p = st.items.pop_front().unwrap();
+                images += p.n;
+                st.queued_images -= p.n;
+                batch.push(p);
+            }
+            // Wake pushers blocked on a full queue *before* the
+            // straggler wait: the space just freed lets them enqueue in
+            // time to join this very batch (they contend on the mutex
+            // released by wait_timeout below).
+            self.not_full.notify_all();
+            // Items still queued after the drain mean the front didn't
+            // fit — the batch can't grow any further, so waiting out the
+            // straggler deadline would only add latency.
+            if images >= max_batch || st.shutdown || !st.items.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if timeout.timed_out() && st.items.is_empty() {
+                break;
+            }
+        }
+        stats
+            .queue_depth
+            .store(st.queued_images as u64, Ordering::Relaxed);
+        drop(st);
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// A bound server: listener + engine + knobs. Splitting bind from run
+/// lets callers learn the ephemeral port and grab the stats handle
+/// before the (blocking) accept loop starts.
+pub struct Server {
+    listener: TcpListener,
+    engine: Arc<Engine>,
+    cfg: ServeConfig,
+    stats: Arc<Stats>,
+}
+
+impl Server {
+    pub fn bind(engine: Arc<Engine>, addr: &str, cfg: ServeConfig) -> Result<Server> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server {
+            listener,
+            engine,
+            cfg,
+            stats: Arc::new(Stats::default()),
+        })
+    }
+
+    /// Actual bound address (use after binding port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Live statistics handle, valid before/during/after `run`.
+    pub fn stats(&self) -> Arc<Stats> {
+        self.stats.clone()
+    }
+
+    /// Run the accept loop. Blocks until `cfg.max_conns` connections
+    /// have been accepted and completed (or forever when None). All
+    /// queued work is drained before returning.
+    pub fn run(self) -> Result<()> {
+        let workers = self.cfg.resolved_workers();
+        let pool = Arc::new(InferencePool::new(self.engine.clone(), workers));
+        let queue = Arc::new(BatchQueue::new(self.cfg.queue_images));
+        let stats = self.stats.clone();
+        println!(
+            "aquant-serve: model {} on {} ({} classes, {} workers, max-batch {}, wait {}us)",
+            self.engine.topo.name,
+            self.local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".into()),
+            self.engine.topo.n_classes,
+            workers,
+            self.cfg.max_batch,
+            self.cfg.batch_wait_us,
+        );
+        // The batcher is a plain (non-scoped) thread over Arc'd state:
+        // it must outlive the connection scope below, which joins all
+        // handlers before we signal shutdown.
+        let batcher = {
+            let (q, p, s) = (queue.clone(), pool.clone(), stats.clone());
+            let max_batch = self.cfg.max_batch;
+            let wait = Duration::from_micros(self.cfg.batch_wait_us);
+            std::thread::spawn(move || run_batcher(&q, &p, &s, max_batch, wait))
+        };
+        let img_elems = self.engine.img_elems();
+        let listener_dead = std::thread::scope(|scope| {
+            let mut seen = 0usize;
+            let mut accept_errs = 0u32;
+            if self.cfg.max_conns == Some(0) {
+                return false; // "at most 0 connections" means accept none
+            }
+            for conn in self.listener.incoming() {
+                let stream = match conn {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // Transient accept failures (e.g. fd exhaustion
+                        // under load) must not kill a long-lived server;
+                        // back off briefly and keep accepting. A long
+                        // unbroken error streak means the listener is
+                        // gone for good — stop (and report it) instead
+                        // of spinning.
+                        accept_errs += 1;
+                        eprintln!("aquant-serve: accept error ({accept_errs} in a row): {e}");
+                        if accept_errs >= 1000 {
+                            eprintln!("aquant-serve: giving up on accept loop");
+                            return true;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                };
+                accept_errs = 0;
+                let q = queue.clone();
+                let s = stats.clone();
+                scope.spawn(move || {
+                    if let Err(e) = handle(stream, img_elems, &q, &s) {
+                        eprintln!("aquant-serve: connection error: {e:#}");
+                    }
+                });
+                seen += 1;
+                if let Some(m) = self.cfg.max_conns {
+                    if seen >= m {
+                        break;
+                    }
+                }
+            }
+            false
+        });
+        // All handlers have returned; drain the queue and stop.
+        queue.shutdown();
+        batcher
+            .join()
+            .map_err(|_| anyhow!("batcher thread panicked"))?;
+        if listener_dead {
+            bail!("accept loop abandoned after repeated listener errors");
+        }
+        Ok(())
+    }
+}
+
+fn run_batcher(
+    queue: &BatchQueue,
+    pool: &InferencePool,
+    stats: &Stats,
+    max_batch: usize,
+    wait: Duration,
+) {
+    while let Some(mut batch) = queue.pop_batch(max_batch, wait, stats) {
+        if batch.is_empty() {
+            continue;
+        }
+        let n: usize = batch.iter().map(|p| p.n).sum();
+        let flat = if batch.len() == 1 {
+            // Common un-coalesced case: the request's buffer is already
+            // flat — move it instead of re-copying the payload.
+            std::mem::take(&mut batch[0].images)
+        } else {
+            let mut flat = Vec::with_capacity(batch.iter().map(|p| p.images.len()).sum());
+            for p in &batch {
+                flat.extend_from_slice(&p.images);
+            }
+            flat
+        };
+        let t0 = Instant::now();
+        let result = pool.classify_flat(Arc::new(flat), n);
+        match result {
+            Ok(preds) => {
+                stats.observe_batch(n, t0.elapsed().as_micros() as u64);
+                let mut off = 0usize;
+                for p in batch {
+                    let out: Vec<u32> = preds[off..off + p.n].iter().map(|&c| c as u32).collect();
+                    off += p.n;
+                    // Receiver gone = connection already died; fine.
+                    let _ = p.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("{e:#}");
+                for p in batch {
+                    let _ = p.reply.send(Err(msg.clone()));
                 }
             }
         }
-        Ok(())
-    })?;
-    Ok(stats)
+    }
 }
 
-fn handle(engine: Arc<Engine>, mut stream: TcpStream, stats: &Stats) -> Result<()> {
-    let img_elems = {
-        let (h, w) = engine.topo.in_hw;
-        engine.topo.in_c * h * w
-    };
+/// Per-connection loop: parse requests, enqueue, await the batcher's
+/// reply, answer. Any protocol error closes just this connection.
+fn handle(mut stream: TcpStream, img_elems: usize, queue: &BatchQueue, stats: &Stats) -> Result<()> {
     loop {
         let mut hdr = [0u8; 4];
         match stream.read_exact(&mut hdr) {
@@ -71,36 +476,66 @@ fn handle(engine: Arc<Engine>, mut stream: TcpStream, stats: &Stats) -> Result<(
             Err(e) => return Err(e.into()),
         }
         let n = u32::from_le_bytes(hdr) as usize;
-        if n == 0 || n > 4096 {
+        if n == 0 || n > MAX_REQ_IMAGES {
+            stats.rejected.fetch_add(1, Ordering::Relaxed);
             bail!("bad batch size {n}");
         }
-        let mut buf = vec![0u8; n * img_elems * 4];
-        stream.read_exact(&mut buf)?;
-        let images: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        let t0 = Instant::now();
-        let refs: Vec<&[f32]> = (0..n)
-            .map(|i| &images[i * img_elems..(i + 1) * img_elems])
-            .collect();
-        let preds = engine.classify_batch(&refs)?;
-        let us = t0.elapsed().as_micros() as u64;
+        // Stream the payload in, decoding each chunk straight to f32:
+        // allocation tracks bytes actually received (a bare header costs
+        // ~64KB here, not the full payload up front), and there is never
+        // a second full-size byte buffer alive alongside the floats.
+        let total = n * img_elems * 4;
+        let mut images: Vec<f32> = Vec::new();
+        // chunk size is a multiple of 4, so every slice below is too
+        let mut chunk = [0u8; 65536];
+        let mut remaining = total;
+        while remaining > 0 {
+            let want = remaining.min(chunk.len());
+            stream.read_exact(&mut chunk[..want])?; // mid-stream EOF lands here
+            images.extend(
+                chunk[..want]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+            remaining -= want;
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let queued = queue.push(
+            Pending {
+                images,
+                n,
+                reply: rtx,
+            },
+            stats,
+        );
+        if !queued {
+            bail!("server shutting down");
+        }
+        let preds = match rrx.recv() {
+            Ok(Ok(p)) => p,
+            Ok(Err(e)) => bail!("inference failed: {e}"),
+            Err(_) => bail!("batcher dropped the request"),
+        };
         stats.requests.fetch_add(1, Ordering::Relaxed);
-        stats.images.fetch_add(n as u64, Ordering::Relaxed);
-        stats.total_us.fetch_add(us, Ordering::Relaxed);
         let mut out = Vec::with_capacity(4 + n * 4);
         out.extend_from_slice(&(n as u32).to_le_bytes());
         for p in preds {
-            out.extend_from_slice(&(p as u32).to_le_bytes());
+            out.extend_from_slice(&p.to_le_bytes());
         }
         stream.write_all(&out)?;
     }
 }
 
-/// Client helper (used by the serve example and tests).
+/// Client helper (used by the serve example and tests): one request over
+/// a fresh connection.
 pub fn classify_remote(addr: &str, images: &[f32], n: usize) -> Result<Vec<u32>> {
     let mut stream = TcpStream::connect(addr)?;
+    classify_on(&mut stream, images, n)
+}
+
+/// One request/response exchange on an existing connection (clients
+/// that pipeline requests reuse the stream).
+pub fn classify_on(stream: &mut TcpStream, images: &[f32], n: usize) -> Result<Vec<u32>> {
     let mut out = Vec::with_capacity(4 + images.len() * 4);
     out.extend_from_slice(&(n as u32).to_le_bytes());
     for v in images {
@@ -116,4 +551,126 @@ pub fn classify_remote(addr: &str, images: &[f32], n: usize) -> Result<Vec<u32>>
         .chunks_exact(4)
         .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(n: usize) -> (Pending, mpsc::Receiver<Result<Vec<u32>, String>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                images: vec![0.0; n],
+                n,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batch_bucket_is_floor_log2() {
+        assert_eq!(Stats::batch_bucket(1), 0);
+        assert_eq!(Stats::batch_bucket(2), 1);
+        assert_eq!(Stats::batch_bucket(3), 1);
+        assert_eq!(Stats::batch_bucket(4), 2);
+        assert_eq!(Stats::batch_bucket(64), 6);
+        assert_eq!(Stats::batch_bucket(4096), 12);
+        assert_eq!(Stats::batch_bucket(100_000), BATCH_BUCKETS - 1);
+        assert_eq!(Stats::batch_bucket(0), 0); // defensive clamp
+    }
+
+    #[test]
+    fn stats_observe_and_report() {
+        let s = Stats::default();
+        s.observe_batch(8, 100);
+        s.observe_batch(16, 300);
+        assert_eq!(s.images.load(Ordering::Relaxed), 24);
+        assert_eq!(s.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(s.total_us.load(Ordering::Relaxed), 400);
+        assert_eq!(s.batch_hist[3].load(Ordering::Relaxed), 1);
+        assert_eq!(s.batch_hist[4].load(Ordering::Relaxed), 1);
+        assert_eq!(s.mean_batch(), 12.0);
+        let r = s.report();
+        assert!(r.contains("batches 2"), "{r}");
+        assert!(r.contains("8:1"), "{r}");
+        assert!(r.contains("16:1"), "{r}");
+    }
+
+    #[test]
+    fn queue_coalesces_up_to_max_batch() {
+        let q = BatchQueue::new(MAX_REQ_IMAGES);
+        let stats = Stats::default();
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let (p, rx) = pending(2);
+            assert!(q.push(p, &stats));
+            rxs.push(rx);
+        }
+        assert_eq!(stats.queue_peak.load(Ordering::Relaxed), 6);
+        // max_batch 4 takes the first two requests (2+2), leaves one
+        let batch = q.pop_batch(4, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.iter().map(|p| p.n).sum::<usize>(), 4);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 2);
+        let batch = q.pop_batch(4, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn queue_admits_oversized_request_alone() {
+        let q = BatchQueue::new(MAX_REQ_IMAGES);
+        let stats = Stats::default();
+        let (p, _rx) = pending(100);
+        assert!(q.push(p, &stats));
+        let (p2, _rx2) = pending(1);
+        assert!(q.push(p2, &stats));
+        let batch = q.pop_batch(8, Duration::ZERO, &stats).unwrap();
+        assert_eq!(batch.len(), 1, "oversized request dispatched alone");
+        assert_eq!(batch[0].n, 100);
+    }
+
+    #[test]
+    fn full_queue_blocks_push_until_pop_frees_space() {
+        let q = Arc::new(BatchQueue::new(4));
+        let stats = Arc::new(Stats::default());
+        let (p, _rx1) = pending(4);
+        assert!(q.push(p, &stats));
+        // the queue is at its image cap: a second push must block on
+        // not_full until the batcher drains, then admit via its ticket
+        let (p2, _rx2) = pending(3);
+        let pusher = {
+            let (q, s) = (q.clone(), stats.clone());
+            std::thread::spawn(move || q.push(p2, &s))
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!pusher.is_finished(), "push admitted past the image cap");
+        // max_batch 4: pop returns right after draining the first item,
+        // having woken the blocked pusher mid-loop
+        let batch = q.pop_batch(4, Duration::from_millis(500), &stats).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].n, 4);
+        assert!(pusher.join().unwrap(), "blocked push must admit after the drain");
+        let batch = q.pop_batch(4, Duration::from_millis(500), &stats).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].n, 3);
+    }
+
+    #[test]
+    fn queue_drains_after_shutdown_then_ends() {
+        let q = BatchQueue::new(MAX_REQ_IMAGES);
+        let stats = Stats::default();
+        let (p, _rx) = pending(3);
+        assert!(q.push(p, &stats));
+        q.shutdown();
+        // queued work is still delivered...
+        let batch = q.pop_batch(64, Duration::from_millis(50), &stats).unwrap();
+        assert_eq!(batch.len(), 1);
+        // ...then the batcher is told to exit, and pushes are refused
+        assert!(q.pop_batch(64, Duration::from_millis(50), &stats).is_none());
+        let (p2, _rx2) = pending(1);
+        assert!(!q.push(p2, &stats));
+    }
 }

@@ -57,6 +57,12 @@ impl Args {
             .unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional string flag (None when absent) — lets callers tell
+    /// "flag omitted" apart from "flag set to the default's value".
+    pub fn str_flag_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
     /// Required string flag.
     pub fn req_flag(&self, name: &str) -> Result<String> {
         self.flags
@@ -108,6 +114,8 @@ mod tests {
         assert!(a.bool_flag("verbose"));
         assert!(!a.bool_flag("quiet"));
         assert_eq!(a.positional, vec!["extra"]);
+        assert_eq!(a.str_flag_opt("model"), Some("resnet10s"));
+        assert_eq!(a.str_flag_opt("workers"), None);
     }
 
     #[test]

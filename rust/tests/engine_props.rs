@@ -1,85 +1,11 @@
 //! Property tests over the pure-Rust engine + quant substrate that do not
 //! require artifacts (run in a fresh clone).
 
-use aquant::nn::engine::{ActQuant, Engine, FusionMode, LayerWeights};
-use aquant::nn::topology::{BlockTopo, LayerTopo, ModelTopo};
+use aquant::nn::engine::{ActQuant, Engine, FusionMode};
+use aquant::nn::synth::tiny_model;
 use aquant::quant::border::BorderFn;
 use aquant::util::prop;
 use aquant::util::rng::Rng;
-
-fn conv_layer(name: &str, ic: usize, oc: usize, k: usize, stride: usize, h: usize, w: usize, relu: bool) -> LayerTopo {
-    let pad = k / 2;
-    let ho = (h + 2 * pad - k) / stride + 1;
-    let wo = (w + 2 * pad - k) / stride + 1;
-    LayerTopo {
-        name: name.into(),
-        kind: "conv".into(),
-        ic,
-        oc,
-        k,
-        stride,
-        pad,
-        groups: 1,
-        relu,
-        gap_input: false,
-        rows: ic * k * k,
-        in_chw: (ic, h, w),
-        out_chw: (oc, ho, wo),
-    }
-}
-
-fn tiny_model(rng: &mut Rng) -> (ModelTopo, std::collections::HashMap<String, LayerWeights>) {
-    let l1 = conv_layer("c1", 3, 4, 3, 1, 8, 8, true);
-    let l2 = conv_layer("c2", 4, 4, 3, 1, 8, 8, false);
-    let fc = LayerTopo {
-        name: "fc".into(),
-        kind: "fc".into(),
-        ic: 4,
-        oc: 5,
-        k: 1,
-        stride: 1,
-        pad: 0,
-        groups: 1,
-        relu: false,
-        gap_input: true,
-        rows: 4,
-        in_chw: (4, 8, 8),
-        out_chw: (5, 1, 1),
-    };
-    let mut weights = std::collections::HashMap::new();
-    for l in [&l1, &l2, &fc] {
-        let w: Vec<f32> = (0..l.weight_elems()).map(|_| rng.normal() * 0.3).collect();
-        let b: Vec<f32> = (0..l.oc).map(|_| rng.normal() * 0.1).collect();
-        weights.insert(l.name.clone(), LayerWeights { w, b });
-    }
-    let topo = ModelTopo {
-        name: "tiny".into(),
-        in_c: 3,
-        in_hw: (8, 8),
-        n_classes: 5,
-        blocks: vec![
-            BlockTopo {
-                name: "b0".into(),
-                residual: false,
-                downsample: None,
-                layers: vec![l1],
-            },
-            BlockTopo {
-                name: "b1".into(),
-                residual: true,
-                downsample: None,
-                layers: vec![l2],
-            },
-            BlockTopo {
-                name: "head".into(),
-                residual: false,
-                downsample: None,
-                layers: vec![fc],
-            },
-        ],
-    };
-    (topo, weights)
-}
 
 #[test]
 fn fused_and_unfused_border_agree_with_same_params() {

@@ -1,0 +1,90 @@
+//! Properties of the parallel inference substrate: for random
+//! topologies, border parameters, batch sizes, and worker counts,
+//! pooled execution is bit-identical to the sequential engine — in both
+//! `FusionMode`s — and the scratch-buffer forward path is bit-identical
+//! to the allocating one.
+
+use std::sync::Arc;
+
+use aquant::nn::engine::{EngineScratch, FusionMode};
+use aquant::nn::pool::InferencePool;
+use aquant::nn::synth;
+use aquant::util::prop;
+
+#[test]
+fn pool_matches_sequential_for_random_topologies() {
+    prop::check_default("pool == sequential engine", |rng| {
+        let (topo, weights) = synth::random_model(rng);
+        let fuse_en = rng.bernoulli(0.5);
+        let b2_en = rng.bernoulli(0.5);
+        let mut engine = synth::engine_with_random_borders(&topo, &weights, rng, fuse_en, b2_en);
+        engine.fusion = if rng.bernoulli(0.5) {
+            FusionMode::Fused
+        } else {
+            FusionMode::Unfused
+        };
+        let engine = Arc::new(engine);
+        let img_elems = engine.img_elems();
+        let n = 1 + rng.below(9);
+        let images = prop::vec_f32(rng, n * img_elems, -1.0, 3.0);
+        let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
+        let want = engine.classify_batch(&refs).unwrap();
+        for workers in [1usize, 2, 7] {
+            let pool = InferencePool::new(engine.clone(), workers);
+            let got = pool.classify_batch(&refs).unwrap();
+            assert_eq!(
+                got, want,
+                "workers={workers} n={n} fuse={fuse_en} b2={b2_en} fusion={:?}",
+                engine.fusion
+            );
+        }
+    });
+}
+
+#[test]
+fn scratch_forward_is_bit_identical_to_allocating_forward() {
+    prop::check_default("forward_scratch == forward", |rng| {
+        let (topo, weights) = synth::random_model(rng);
+        let mut engine = synth::engine_with_random_borders(
+            &topo,
+            &weights,
+            rng,
+            rng.bernoulli(0.5),
+            rng.bernoulli(0.5),
+        );
+        if rng.bernoulli(0.5) {
+            engine.fusion = FusionMode::Unfused;
+        }
+        let img_elems = engine.img_elems();
+        let mut scratch = EngineScratch::new();
+        // several images through ONE scratch: buffer reuse must not leak
+        // state between forwards
+        for _ in 0..3 {
+            let image = prop::vec_f32(rng, img_elems, -1.0, 3.0);
+            let want = engine.forward(&image, None).unwrap();
+            let got = engine.forward_scratch(&image, &mut scratch).unwrap();
+            assert_eq!(got, want.as_slice());
+        }
+    });
+}
+
+#[test]
+fn pool_shard_split_never_changes_results() {
+    // Same batch, every worker count from 1 to n+2: shard boundaries
+    // move across all positions, results must not.
+    prop::check("shard splits are invisible", 64, |rng| {
+        let (topo, weights) = synth::random_model(rng);
+        let engine = Arc::new(synth::engine_with_random_borders(
+            &topo, &weights, rng, true, true,
+        ));
+        let img_elems = engine.img_elems();
+        let n = 3 + rng.below(6);
+        let images = prop::vec_f32(rng, n * img_elems, -1.0, 3.0);
+        let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
+        let want = engine.classify_batch(&refs).unwrap();
+        for workers in 1..=n + 2 {
+            let pool = InferencePool::new(engine.clone(), workers);
+            assert_eq!(pool.classify_batch(&refs).unwrap(), want, "workers={workers}");
+        }
+    });
+}

@@ -1,0 +1,209 @@
+//! Integration tests for the serving path: real TCP on an ephemeral
+//! port, a tiny synthetic model (no artifacts needed), concurrent
+//! clients, and the protocol's failure modes.
+//!
+//! The core invariant: dynamic batching + the worker pool must not
+//! change results — every served prediction equals the sequential
+//! `Engine::classify_batch` bit-for-bit.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use aquant::config::ServeConfig;
+use aquant::nn::engine::Engine;
+use aquant::nn::synth;
+use aquant::server::{classify_on, classify_remote, Server, Stats};
+use aquant::util::rng::Rng;
+
+fn synth_engine(seed: u64) -> Arc<Engine> {
+    let mut rng = Rng::new(seed);
+    let (topo, weights) = synth::tiny_model(&mut rng);
+    // Learned borders on every layer so the full quantized hot path is
+    // what's being served.
+    Arc::new(synth::engine_with_random_borders(
+        &topo, &weights, &mut rng, true, true,
+    ))
+}
+
+fn start(
+    engine: Arc<Engine>,
+    cfg: ServeConfig,
+) -> (SocketAddr, Arc<Stats>, JoinHandle<anyhow::Result<()>>) {
+    let srv = Server::bind(engine, "127.0.0.1:0", cfg).expect("bind ephemeral");
+    let addr = srv.local_addr().expect("local addr");
+    let stats = srv.stats();
+    let handle = std::thread::spawn(move || srv.run());
+    (addr, stats, handle)
+}
+
+fn random_images(rng: &mut Rng, n: usize, img_elems: usize) -> Vec<f32> {
+    (0..n * img_elems).map(|_| rng.normal()).collect()
+}
+
+fn expected(engine: &Engine, images: &[f32], n: usize) -> Vec<u32> {
+    let elems = engine.img_elems();
+    let refs: Vec<&[f32]> = (0..n).map(|i| &images[i * elems..(i + 1) * elems]).collect();
+    engine
+        .classify_batch(&refs)
+        .unwrap()
+        .iter()
+        .map(|&c| c as u32)
+        .collect()
+}
+
+#[test]
+fn concurrent_clients_match_sequential_engine() {
+    let engine = synth_engine(42);
+    let (n_clients, reqs_per_client, batch) = (4usize, 3usize, 5usize);
+    let cfg = ServeConfig {
+        workers: 3,
+        max_batch: 8,
+        batch_wait_us: 500,
+        max_conns: Some(n_clients + 1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(engine.clone(), cfg);
+    let img_elems = engine.img_elems();
+
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let engine = engine.clone();
+        clients.push(std::thread::spawn(move || {
+            // one connection per client, pipelined requests over it
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut rng = Rng::new(1000 + c as u64);
+            for _ in 0..reqs_per_client {
+                let images = random_images(&mut rng, batch, img_elems);
+                let got = classify_on(&mut stream, &images, batch).unwrap();
+                assert_eq!(got, expected(&engine, &images, batch), "client {c}");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    // one more request through the fresh-connection helper
+    let mut rng = Rng::new(9);
+    let images = random_images(&mut rng, 2, img_elems);
+    let got = classify_remote(&addr.to_string(), &images, 2).unwrap();
+    assert_eq!(got, expected(&engine, &images, 2));
+
+    server.join().unwrap().unwrap();
+    let served = (n_clients * reqs_per_client * batch + 2) as u64;
+    assert_eq!(stats.images.load(Ordering::Relaxed), served);
+    assert_eq!(
+        stats.requests.load(Ordering::Relaxed),
+        (n_clients * reqs_per_client + 1) as u64
+    );
+    assert!(stats.batches.load(Ordering::Relaxed) >= 1);
+    // coalescing can only shrink the batch count, never lose images
+    assert!(stats.batches.load(Ordering::Relaxed) <= stats.requests.load(Ordering::Relaxed));
+}
+
+#[test]
+fn single_image_zero_wait_roundtrip() {
+    let engine = synth_engine(5);
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_wait_us: 0,
+        max_conns: Some(1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(engine.clone(), cfg);
+    let mut rng = Rng::new(6);
+    let images = random_images(&mut rng, 1, engine.img_elems());
+    let got = classify_remote(&addr.to_string(), &images, 1).unwrap();
+    assert_eq!(got, expected(&engine, &images, 1));
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.batches.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.batch_hist[0].load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn nan_payload_is_answered_and_does_not_kill_workers() {
+    // A NaN pixel must not panic a pool worker (that would permanently
+    // shrink the pool): the request gets *some* answer and the server
+    // keeps serving clean requests with correct results afterwards.
+    let engine = synth_engine(21);
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_conns: Some(3),
+        ..ServeConfig::default()
+    };
+    let (addr, _stats, server) = start(engine.clone(), cfg);
+    let a = addr.to_string();
+    let img_elems = engine.img_elems();
+
+    let mut rng = Rng::new(22);
+    let mut evil = random_images(&mut rng, 2, img_elems);
+    evil[7] = f32::NAN;
+    evil[img_elems + 3] = f32::INFINITY;
+    let got = classify_remote(&a, &evil, 2).unwrap();
+    // same total-order argmax as the sequential engine
+    assert_eq!(got, expected(&engine, &evil, 2));
+
+    for seed in [23u64, 24] {
+        let mut rng = Rng::new(seed);
+        let images = random_images(&mut rng, 3, img_elems);
+        let got = classify_remote(&a, &images, 3).unwrap();
+        assert_eq!(got, expected(&engine, &images, 3));
+    }
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_requests_do_not_wedge_server() {
+    let engine = synth_engine(7);
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_conns: Some(5),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(engine.clone(), cfg);
+    let a = addr.to_string();
+    let img_elems = engine.img_elems();
+
+    let expect_closed = |mut s: TcpStream| {
+        let mut b = [0u8; 1];
+        match s.read(&mut b) {
+            Ok(0) | Err(_) => {} // server closed the connection
+            Ok(_) => panic!("server answered a malformed request"),
+        }
+    };
+
+    // n = 0
+    let mut s = TcpStream::connect(&a).unwrap();
+    s.write_all(&0u32.to_le_bytes()).unwrap();
+    expect_closed(s);
+
+    // n > 4096
+    let mut s = TcpStream::connect(&a).unwrap();
+    s.write_all(&5000u32.to_le_bytes()).unwrap();
+    expect_closed(s);
+
+    // mid-stream EOF: header promises 2 images, body cut short
+    let mut s = TcpStream::connect(&a).unwrap();
+    s.write_all(&2u32.to_le_bytes()).unwrap();
+    s.write_all(&vec![0u8; img_elems]).unwrap(); // 1/8 of the payload
+    drop(s);
+
+    // the server must still answer good requests on fresh connections
+    for seed in [1u64, 2] {
+        let mut rng = Rng::new(seed);
+        let images = random_images(&mut rng, 3, img_elems);
+        let got = classify_remote(&a, &images, 3).unwrap();
+        assert_eq!(got, expected(&engine, &images, 3));
+    }
+
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.requests.load(Ordering::Relaxed), 2);
+}
