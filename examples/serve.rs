@@ -1,86 +1,121 @@
-//! Serving example: quantized inference behind the dynamic-batching TCP
-//! server (pure-Rust engine — no Python, no PJRT on the request path),
-//! with a multi-client load generator reporting latency, throughput, and
-//! the server's own batching stats.
+//! Serving example: several quantized models behind ONE dynamic-batching
+//! TCP server and one shared worker pool (pure-Rust engines — no Python,
+//! no PJRT on the request path), with a multi-client load generator that
+//! routes per-model traffic over protocol v2 (plus a v1 client hitting
+//! the default model), checks every answer bit-for-bit against the
+//! sequential engine, and reports latency, throughput, and the server's
+//! per-model batching stats.
 //!
 //!   cargo run --release --offline --example serve -- \
-//!       [model] [bits] [batch] [n_req] [clients] [workers] [max_batch] [wait_us]
+//!       [specs] [batch] [n_req] [clients] [workers] [max_batch] [wait_us]
 //!
-//! Defaults: mobiles W4A4, 32-image requests, 8 requests x 4 clients,
-//! auto workers, max-batch 64, 200us batch wait.
+//! `specs` is a comma-separated model-spec list (see `aquant help`):
+//! synthetic specs (`synth:tiny`, `b=synth:bench:7`, ...) run anywhere;
+//! manifest specs need artifacts — quantized ones (`mobiles:nearest:W4A4`)
+//! additionally need a build with `--features pjrt`, while full-precision
+//! `MODEL:nearest:W32A32` works in every build.
+//!
+//! Defaults: "a=synth:tiny,b=synth:bench", 32-image requests,
+//! 8 requests x 4 clients, auto workers, max-batch 64, 200us batch wait.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use aquant::config::{Bits, Method, ServeConfig};
-use aquant::exp::cell::{build_quantized_engine, Ctx};
-use aquant::server::{classify_on, Server};
+use aquant::config::{Bits, Method, ModelSpec, ServeConfig};
+use aquant::nn::engine::Engine;
+use aquant::server::{classify_on, classify_on_v2, Server};
+use aquant::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let model = args.get(1).cloned().unwrap_or_else(|| "mobiles".into());
-    let bits = Bits::parse(&args.get(2).cloned().unwrap_or_else(|| "W4A4".into()))?;
+    let spec_str = args
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "a=synth:tiny,b=synth:bench".into());
+    let spec_list: Vec<String> = spec_str.split(',').map(str::to_string).collect();
+    let specs = ModelSpec::parse_all(
+        &spec_list,
+        Some(Method::Nearest),
+        Some(Bits::parse("W4A4")?),
+    )?;
     let arg_n = |i: usize, d: usize| args.get(i).and_then(|s| s.parse().ok()).unwrap_or(d);
-    let batch = arg_n(3, 32).clamp(1, aquant::server::MAX_REQ_IMAGES);
-    let n_req = arg_n(4, 8).max(1);
-    let clients = arg_n(5, 4).max(1);
+    let batch = arg_n(2, 32).clamp(1, aquant::server::MAX_REQ_IMAGES);
+    let n_req = arg_n(3, 8).max(1);
+    let clients = arg_n(4, 4).max(1);
     let cfg = ServeConfig {
-        workers: arg_n(6, 0),
-        max_batch: arg_n(7, 64),
-        batch_wait_us: arg_n(8, 200) as u64,
+        workers: arg_n(5, 0),
+        max_batch: arg_n(6, 64),
+        batch_wait_us: arg_n(7, 200) as u64,
         max_conns: Some(clients),
         ..ServeConfig::default()
     };
 
-    let ctx = Ctx::new("artifacts", Some(60))?;
-    println!("building quantized engine: {model} nearest {}", bits.name());
-    let engine = Arc::new(build_quantized_engine(&ctx, &model, Method::Nearest, bits)?);
-    // read-only test split shared across client threads (cloning the
-    // full image buffer per client would multiply memory by `clients`)
-    let test = Arc::new(ctx.dataset.test.clone());
-    let img_elems = test.img_elems();
+    // same spec→registry entry point as `aquant serve` (60-iter
+    // calibration keeps a pjrt-build demo quick; ignored without pjrt)
+    let registry = Arc::new(aquant::server::registry_from_specs(
+        &specs,
+        "artifacts",
+        Some(60),
+        false,
+    )?);
+    let engines: Vec<Arc<Engine>> = registry.iter().map(|(_, e)| e.engine.clone()).collect();
+    let n_models = registry.len();
 
-    let srv = Server::bind(engine, "127.0.0.1:0", cfg)?;
+    let srv = Server::bind(registry, "127.0.0.1:0", cfg)?;
     let addr = srv.local_addr()?;
     let stats = srv.stats(); // live handle, before the accept loop starts
     let server = std::thread::spawn(move || srv.run());
 
     // Load generators: `clients` connections, `n_req` pipelined batched
     // requests each — concurrent enough for the batcher to coalesce.
+    // Client c talks to model c % n_models over protocol v2 (client 0
+    // uses bare v1 headers: the backward-compat path to model id 0),
+    // and checks every prediction against its model's sequential engine.
     let t_start = Instant::now();
-    let mut workers_joins = Vec::new();
+    let mut joins = Vec::new();
     for c in 0..clients {
-        let test = test.clone();
-        workers_joins.push(std::thread::spawn(move || -> Result<(Vec<Duration>, usize, usize)> {
-            let mut stream = std::net::TcpStream::connect(addr)?;
-            let mut lat = Vec::new();
-            let (mut hits, mut total) = (0usize, 0usize);
-            for r in 0..n_req {
-                let base = (c * n_req + r) * batch;
-                let idx: Vec<usize> = (base..base + batch).map(|i| i % test.n).collect();
-                let images = test.gather(&idx);
-                let t0 = Instant::now();
-                let preds = classify_on(&mut stream, &images, batch)?;
-                lat.push(t0.elapsed());
-                for (&i, &p) in idx.iter().zip(&preds) {
-                    total += 1;
-                    if test.labels[i] == p {
-                        hits += 1;
-                    }
+        let model_id = (c % n_models) as u16;
+        let engine = engines[model_id as usize].clone();
+        joins.push(std::thread::spawn(
+            move || -> Result<(Vec<Duration>, usize)> {
+                let mut stream = std::net::TcpStream::connect(addr)?;
+                let img_elems = engine.img_elems();
+                let mut rng = Rng::new(0xC11E27 + c as u64);
+                let mut lat = Vec::new();
+                let mut mismatches = 0usize;
+                for _ in 0..n_req {
+                    let images: Vec<f32> =
+                        (0..batch * img_elems).map(|_| rng.normal()).collect();
+                    let t0 = Instant::now();
+                    let preds = if c == 0 {
+                        classify_on(&mut stream, &images, batch)?
+                    } else {
+                        classify_on_v2(&mut stream, model_id, &images, batch)?
+                    };
+                    lat.push(t0.elapsed());
+                    let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
+                    let want = engine.classify_batch(&refs)?;
+                    // a short (or long) response is itself a mismatch —
+                    // zip alone would silently skip the missing tail
+                    mismatches += preds.len().abs_diff(want.len());
+                    mismatches += preds
+                        .iter()
+                        .zip(&want)
+                        .filter(|(p, w)| **p != **w as u32)
+                        .count();
                 }
-            }
-            Ok((lat, hits, total))
-        }));
+                Ok((lat, mismatches))
+            },
+        ));
     }
     let mut lat = Vec::new();
-    let (mut hits, mut total) = (0usize, 0usize);
-    for j in workers_joins {
-        let (l, h, t) = j.join().expect("client thread")?;
+    let mut mismatches = 0usize;
+    for j in joins {
+        let (l, m) = j.join().expect("client thread")?;
         lat.extend(l);
-        hits += h;
-        total += t;
+        mismatches += m;
     }
     let wall = t_start.elapsed();
     server.join().expect("server thread")?;
@@ -89,7 +124,7 @@ fn main() -> Result<()> {
     let sum: Duration = lat.iter().sum();
     println!("\n== serving report ==");
     println!(
-        "requests: {clients} clients x {n_req} x batch {batch}  ({img_elems} f32/image)"
+        "requests: {clients} clients x {n_req} x batch {batch} across {n_models} model(s)"
     );
     println!(
         "latency  p50 {:?}  p95 {:?}  mean {:?}",
@@ -101,10 +136,10 @@ fn main() -> Result<()> {
         "throughput: {:.0} images/s (wall clock, all clients)",
         (clients * n_req * batch) as f64 / wall.as_secs_f64()
     );
-    println!("server: {}", stats.report());
-    println!(
-        "accuracy over served batches: {:.2}%",
-        hits as f64 / total as f64 * 100.0
-    );
+    println!("{}", stats.report());
+    if mismatches > 0 {
+        bail!("{mismatches} served predictions diverged from the sequential engine");
+    }
+    println!("bit-identity: every served prediction matches the sequential engine");
     Ok(())
 }

@@ -34,14 +34,14 @@ fn main() {
     // (workers, batch, images_per_sec, median_us)
     let mut rows: Vec<(usize, usize, f64, f64)> = Vec::new();
     for workers in [1usize, 2, 4] {
-        let pool = InferencePool::new(engine.clone(), workers);
+        let pool = InferencePool::with_scratch_dims(workers, engine.scratch_dims());
         for batch in [1usize, 8, 64] {
             // pre-flattened batch: the timed loop measures pooled
             // inference (an Arc clone is free), not buffer copying,
             // so the speedup guard isn't diluted by memcpy
             let flat = Arc::new(images[..batch * img_elems].to_vec());
             let r = bench(&format!("pool/workers{workers}/batch{batch}"), budget, || {
-                let preds = pool.classify_flat(flat.clone(), batch).unwrap();
+                let preds = pool.classify_flat(&engine, flat.clone(), batch).unwrap();
                 std::hint::black_box(preds);
             });
             let ips = batch as f64 / r.median.as_secs_f64();

@@ -211,6 +211,133 @@ impl Default for CalibConfig {
     }
 }
 
+/// One model a serving process hosts: a routing name plus where the
+/// engine comes from. Parsed from repeated `--model` flags and threaded
+/// end to end (CLI → registry → protocol-v2 routing); the first spec
+/// becomes model id 0, the default model that also serves v1 clients.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Registry / routing name (unique per server).
+    pub name: String,
+    pub source: ModelSource,
+}
+
+/// Where a hosted model's engine comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSource {
+    /// Synthetic model from `nn::synth` (no artifacts, no PJRT):
+    /// kind is "tiny" | "bench" | "rand".
+    Synth { kind: String, seed: u64 },
+    /// Calibrated engine built from the artifacts manifest.
+    Manifest {
+        model: String,
+        method: Method,
+        bits: Bits,
+    },
+}
+
+impl ModelSpec {
+    /// Parse one `--model` spec:
+    ///
+    /// ```text
+    ///   [NAME=]synth:KIND[:SEED]        KIND = tiny | bench | rand
+    ///   [NAME=]MODEL[:METHOD:BITS]      manifest model; METHOD/BITS
+    ///                                   fall back to --method/--bits
+    /// ```
+    ///
+    /// `NAME` defaults to the synth kind / manifest model name. The
+    /// `synth:` prefix is reserved (a manifest model cannot be named
+    /// "synth").
+    pub fn parse(
+        spec: &str,
+        default_method: Option<Method>,
+        default_bits: Option<Bits>,
+    ) -> Result<ModelSpec> {
+        let (name, rest) = match spec.split_once('=') {
+            Some((n, r)) => (Some(n), r),
+            None => (None, spec),
+        };
+        if let Some(n) = name {
+            if n.is_empty() {
+                bail!("model spec {spec:?}: empty name before '='");
+            }
+        }
+        if rest.is_empty() {
+            bail!("model spec {spec:?}: empty source");
+        }
+        if let Some(synth) = rest.strip_prefix("synth:") {
+            let mut it = synth.split(':');
+            let kind = it.next().unwrap_or("").to_string();
+            if !matches!(kind.as_str(), "tiny" | "bench" | "rand") {
+                bail!("model spec {spec:?}: synth kind must be tiny|bench|rand, got {kind:?}");
+            }
+            let seed = match it.next() {
+                None => 42,
+                Some(s) => s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("model spec {spec:?}: bad seed {s:?}"))?,
+            };
+            if it.next().is_some() {
+                bail!("model spec {spec:?}: trailing fields after synth:KIND:SEED");
+            }
+            return Ok(ModelSpec {
+                name: name.unwrap_or(&kind).to_string(),
+                source: ModelSource::Synth { kind, seed },
+            });
+        }
+        let mut it = rest.split(':');
+        let model = it.next().unwrap_or("").to_string();
+        if model.is_empty() || model == "synth" {
+            bail!("model spec {spec:?}: bad model name {model:?}");
+        }
+        let (method, bits) = match (it.next(), it.next()) {
+            (None, _) => {
+                let m = default_method
+                    .ok_or_else(|| anyhow::anyhow!("model spec {spec:?}: no method (give MODEL:METHOD:BITS or --method)"))?;
+                let b = default_bits
+                    .ok_or_else(|| anyhow::anyhow!("model spec {spec:?}: no bits (give MODEL:METHOD:BITS or --bits)"))?;
+                (m, b)
+            }
+            (Some(m), Some(b)) => (Method::parse(m)?, Bits::parse(b)?),
+            (Some(_), None) => {
+                bail!("model spec {spec:?}: METHOD given without BITS (want MODEL:METHOD:BITS)")
+            }
+        };
+        if it.next().is_some() {
+            bail!("model spec {spec:?}: trailing fields after MODEL:METHOD:BITS");
+        }
+        Ok(ModelSpec {
+            name: name.unwrap_or(&model).to_string(),
+            source: ModelSource::Manifest { model, method, bits },
+        })
+    }
+
+    /// Parse a repeated `--model` flag list; errors on empty input or
+    /// duplicate routing names (the registry would reject them later,
+    /// but the CLI error is clearer).
+    pub fn parse_all(
+        specs: &[String],
+        default_method: Option<Method>,
+        default_bits: Option<Bits>,
+    ) -> Result<Vec<ModelSpec>> {
+        if specs.is_empty() {
+            bail!("no --model specs given");
+        }
+        let mut out: Vec<ModelSpec> = Vec::with_capacity(specs.len());
+        for s in specs {
+            let spec = ModelSpec::parse(s, default_method, default_bits)?;
+            if out.iter().any(|o| o.name == spec.name) {
+                bail!(
+                    "duplicate model name {:?} (disambiguate with NAME=SPEC)",
+                    spec.name
+                );
+            }
+            out.push(spec);
+        }
+        Ok(out)
+    }
+}
+
 /// Serving-runtime knobs, threaded from the CLI (`aquant serve` /
 /// `examples/serve.rs`) into the dynamic-batching server:
 /// `--workers`, `--max-batch`, `--batch-wait-us`, `--queue-images`.
@@ -455,6 +582,77 @@ mod tests {
             "16"
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn model_spec_parsing() {
+        let m = Some(Method::AQuant);
+        let b = Some(Bits { w: 4, a: 4 });
+
+        let s = ModelSpec::parse("synth:tiny", None, None).unwrap();
+        assert_eq!(s.name, "tiny");
+        assert_eq!(
+            s.source,
+            ModelSource::Synth {
+                kind: "tiny".into(),
+                seed: 42
+            }
+        );
+
+        let s = ModelSpec::parse("b=synth:rand:7", None, None).unwrap();
+        assert_eq!(s.name, "b");
+        assert_eq!(
+            s.source,
+            ModelSource::Synth {
+                kind: "rand".into(),
+                seed: 7
+            }
+        );
+
+        // manifest model falling back to --method/--bits defaults
+        let s = ModelSpec::parse("mobiles", m, b).unwrap();
+        assert_eq!(s.name, "mobiles");
+        assert_eq!(
+            s.source,
+            ModelSource::Manifest {
+                model: "mobiles".into(),
+                method: Method::AQuant,
+                bits: Bits { w: 4, a: 4 }
+            }
+        );
+
+        // fully inline method/bits, with a rename
+        let s = ModelSpec::parse("prod=resnet10s:qdrop:W2A2", None, None).unwrap();
+        assert_eq!(s.name, "prod");
+        assert_eq!(
+            s.source,
+            ModelSource::Manifest {
+                model: "resnet10s".into(),
+                method: Method::QDrop,
+                bits: Bits { w: 2, a: 2 }
+            }
+        );
+
+        assert!(ModelSpec::parse("mobiles", None, b).is_err(), "no method");
+        assert!(ModelSpec::parse("mobiles", m, None).is_err(), "no bits");
+        assert!(ModelSpec::parse("mobiles:qdrop", m, b).is_err(), "method sans bits");
+        assert!(ModelSpec::parse("synth:cube", None, None).is_err(), "bad kind");
+        assert!(ModelSpec::parse("synth:rand:x", None, None).is_err(), "bad seed");
+        assert!(ModelSpec::parse("=synth:tiny", None, None).is_err(), "empty name");
+        assert!(ModelSpec::parse("", m, b).is_err());
+        assert!(ModelSpec::parse("synth", m, b).is_err(), "reserved");
+        assert!(ModelSpec::parse("a:b:c:d", m, b).is_err(), "trailing");
+    }
+
+    #[test]
+    fn model_spec_list_rejects_duplicates() {
+        let specs: Vec<String> = vec!["synth:tiny".into(), "synth:tiny:7".into()];
+        assert!(ModelSpec::parse_all(&specs, None, None).is_err());
+        let specs: Vec<String> = vec!["a=synth:tiny".into(), "b=synth:tiny:7".into()];
+        let parsed = ModelSpec::parse_all(&specs, None, None).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].name, "a");
+        assert!(ModelSpec::parse_all(&[], None, None).is_err());
     }
 
     #[test]

@@ -6,12 +6,19 @@
 //! block ordering, and the forward chains that produce each block's
 //! calibration inputs/targets.
 
+// The calibration loop and forward chains execute PJRT programs, so
+// they live behind the `pjrt` feature; schedules and the state store
+// are pure Rust (serving and tooling read cached qstate without PJRT).
+#[cfg(feature = "pjrt")]
 pub mod calib;
+#[cfg(feature = "pjrt")]
 pub mod chain;
 pub mod schedule;
 pub mod state;
 
+#[cfg(feature = "pjrt")]
 pub use calib::Calibrator;
+#[cfg(feature = "pjrt")]
 pub use chain::ChainRunner;
 pub use schedule::Schedule;
 pub use state::StateStore;

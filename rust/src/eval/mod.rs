@@ -1,11 +1,17 @@
 //! Evaluation harness: accuracy over the test split (via the full-model
 //! PJRT programs), the Fig. 2 propagated-error profile, and the §5.3
 //! parameter-overhead accounting.
+//!
+//! Accuracy and profiling run PJRT programs (`pjrt` feature); the
+//! overhead accounting is pure topology arithmetic and always builds.
 
+#[cfg(feature = "pjrt")]
 pub mod accuracy;
 pub mod overhead;
+#[cfg(feature = "pjrt")]
 pub mod profile;
 
+#[cfg(feature = "pjrt")]
 pub use accuracy::{
     eval_engine_accuracy, eval_fp_accuracy, eval_fp_accuracy_limited, eval_quant_accuracy,
     eval_quant_accuracy_limited,

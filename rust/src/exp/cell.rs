@@ -4,9 +4,9 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::config::{Bits, Method, RunConfig};
+use crate::config::{Bits, Method, ModelSource, ModelSpec, RunConfig};
 use crate::coordinator::chain::{ChainRunner, QuantCtx};
 use crate::coordinator::state::{Knobs, StateStore};
 use crate::coordinator::Calibrator;
@@ -209,4 +209,57 @@ pub fn build_quantized_engine(
         engine.set_act_quant(&name, q);
     }
     Ok(engine)
+}
+
+/// Manifest-engine builder for `ModelRegistry::from_specs` in pjrt
+/// builds: calibrates + hardens each manifest spec via
+/// [`build_quantized_engine`], creating the [`Ctx`] lazily on the first
+/// manifest spec (a synth-only registry never pays artifact loading).
+/// Shared by `aquant serve` and `examples/serve.rs` so the two cannot
+/// drift.
+pub struct QuantManifestBuilder {
+    artifacts_dir: String,
+    iters_override: Option<u32>,
+    verbose: bool,
+    ctx: Option<Ctx>,
+}
+
+impl QuantManifestBuilder {
+    pub fn new(artifacts_dir: &str, iters_override: Option<u32>, verbose: bool) -> Self {
+        QuantManifestBuilder {
+            artifacts_dir: artifacts_dir.to_string(),
+            iters_override,
+            verbose,
+            ctx: None,
+        }
+    }
+
+    /// Build the quantized engine for one manifest spec.
+    pub fn build(&mut self, spec: &ModelSpec) -> Result<crate::nn::engine::Engine> {
+        let ModelSource::Manifest {
+            model,
+            method,
+            bits,
+        } = &spec.source
+        else {
+            bail!("spec {:?} is not a manifest model", spec.name);
+        };
+        if self.ctx.is_none() {
+            let mut ctx = Ctx::new(&self.artifacts_dir, self.iters_override)?;
+            ctx.verbose = self.verbose;
+            self.ctx = Some(ctx);
+        }
+        println!(
+            "aquant-serve: building engine {} = {model} {} {}",
+            spec.name,
+            method.name(),
+            bits.name()
+        );
+        build_quantized_engine(
+            self.ctx.as_ref().expect("ctx just built"),
+            model,
+            *method,
+            *bits,
+        )
+    }
 }

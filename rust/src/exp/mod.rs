@@ -1,9 +1,16 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation (§5) on this testbed. See DESIGN.md §5 for the experiment
 //! index and the expected shape of each result.
+//!
+//! Everything here calibrates/evaluates through the PJRT runtime, so the
+//! whole harness sits behind the `pjrt` feature.
 
+#[cfg(feature = "pjrt")]
 pub mod cell;
+#[cfg(feature = "pjrt")]
 pub mod figs;
+#[cfg(feature = "pjrt")]
 pub mod tables;
 
+#[cfg(feature = "pjrt")]
 pub use cell::{Ctx, QUANT_METHODS};

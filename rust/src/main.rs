@@ -5,16 +5,28 @@
 //!   calibrate --model M --method X --bits WaAb [--iters N]
 //!   eval      --model M --method X --bits WaAb
 //!   exp       <table1|table2|table3|table4|fig1|fig2|fig3|overhead|all>
-//!   serve     --model M --method X --bits WaAb --addr HOST:PORT
+//!   serve     --model SPEC [--model SPEC ...] [--addr HOST:PORT]
 //!             [--workers N] [--max-batch N] [--batch-wait-us N]
 //!
 //! All subcommands accept --artifacts DIR (default: artifacts).
+//!
+//! The calibration / evaluation / experiment subcommands execute AOT
+//! HLO programs and need the PJRT runtime (`--features pjrt`). Serving
+//! synthetic models (`--model synth:...`) is pure Rust and works in
+//! every build.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use aquant::config::{Bits, Method, RunConfig};
-use aquant::exp::{cell::Ctx, figs, tables};
+use aquant::config::{Bits, Method, ModelSpec};
+use aquant::nn::registry::ModelRegistry;
 use aquant::util::cli::Args;
+
+#[cfg(feature = "pjrt")]
+use aquant::config::RunConfig;
+#[cfg(feature = "pjrt")]
+use aquant::exp::{cell::Ctx, figs, tables};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -42,25 +54,36 @@ USAGE: aquant <subcommand> [flags]
   eval      --model M --method X --bits WaAb [--iters N]
   exp       <table1|table2|table3|table4|fig1|fig2|fig3|overhead|all>
             [--iters N] [--models a,b] [--table1-limit N]
-  serve     --model M --method X --bits WaAb [--addr H:P] [--iters N]
-            [--workers N|auto] [--max-batch N] [--batch-wait-us N]
-            [--queue-images N] [--max-conns N] [--stats-every-s N]
+  serve     --model SPEC [--model SPEC ...] [--method X] [--bits WaAb]
+            [--addr H:P] [--iters N] [--workers N|auto] [--max-batch N]
+            [--batch-wait-us N] [--queue-images N] [--max-conns N]
+            [--stats-every-s N]
 
 methods: nearest adaround brecq qdrop aquant aquant-linear aquant-nofusion
 bits:    e.g. W4A4, W2A2, W32A2 (32 = full precision)
 
-serve knobs: --workers (inference threads; auto = cores-1),
-  --max-batch (images coalesced per engine batch, default 64),
-  --batch-wait-us (straggler deadline once a request is pending,
-  default 200), --queue-images (queue bound before connections
-  backpressure, default 8192), --max-conns (stop after N connections;
-  default: run forever), --stats-every-s (periodic stats line,
+serve hosts every --model SPEC behind one port and one worker pool
+(protocol v2 routes by model id; v1 clients get the first spec):
+  SPEC = [NAME=]synth:KIND[:SEED]     synthetic model (tiny|bench|rand),
+                                      pure Rust — no artifacts needed
+       | [NAME=]MODEL[:METHOD:BITS]   calibrated manifest model; METHOD/
+                                      BITS default to --method/--bits
+  e.g.  --model prod=mobiles:aquant:W4A4 --model canary=mobiles:qdrop:W4A4
+        --model a=synth:tiny --model b=synth:bench
+
+serve knobs: --workers (inference threads shared by all models; auto =
+  cores-1), --max-batch (images coalesced per engine batch, default 64),
+  --batch-wait-us (per-model straggler deadline once a request is
+  pending, default 200), --queue-images (per-model queue bound before
+  connections backpressure, default 8192), --max-conns (stop after N
+  connections; default: run forever), --stats-every-s (periodic stats,
   default 30, 0 = off)
 ";
 
+#[cfg(feature = "pjrt")]
 fn ctx_from(args: &Args) -> Result<Ctx> {
     let dir = args.str_flag("artifacts", "artifacts");
-    let iters = match args.flags.get("iters") {
+    let iters = match args.str_flag_opt("iters") {
         Some(v) => Some(v.parse()?),
         None => None,
     };
@@ -69,6 +92,21 @@ fn ctx_from(args: &Args) -> Result<Ctx> {
     Ok(ctx)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn needs_pjrt(what: &str) -> Result<()> {
+    bail!(
+        "`{what}` executes AOT HLO programs and needs the PJRT runtime; \
+         rebuild with `--features pjrt` (serving synthetic models with \
+         `serve --model synth:...` works in this build)"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn info(_args: &Args) -> Result<()> {
+    needs_pjrt("info")
+}
+
+#[cfg(feature = "pjrt")]
 fn info(args: &Args) -> Result<()> {
     let ctx = ctx_from(args)?;
     let manifest = ctx.rt.manifest().unwrap();
@@ -99,6 +137,7 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn parse_cell(args: &Args) -> Result<(String, Method, Bits)> {
     Ok((
         args.req_flag("model")?,
@@ -107,6 +146,12 @@ fn parse_cell(args: &Args) -> Result<(String, Method, Bits)> {
     ))
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn calibrate(_args: &Args) -> Result<()> {
+    needs_pjrt("calibrate")
+}
+
+#[cfg(feature = "pjrt")]
 fn calibrate(args: &Args) -> Result<()> {
     let ctx = ctx_from(args)?;
     let (model, method, bits) = parse_cell(args)?;
@@ -122,6 +167,12 @@ fn calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn eval_cmd(_args: &Args) -> Result<()> {
+    needs_pjrt("eval")
+}
+
+#[cfg(feature = "pjrt")]
 fn eval_cmd(args: &Args) -> Result<()> {
     let ctx = ctx_from(args)?;
     let (model, method, bits) = parse_cell(args)?;
@@ -137,6 +188,12 @@ fn eval_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn exp(_args: &Args) -> Result<()> {
+    needs_pjrt("exp")
+}
+
+#[cfg(feature = "pjrt")]
 fn exp(args: &Args) -> Result<()> {
     let ctx = ctx_from(args)?;
     let which = args
@@ -144,7 +201,7 @@ fn exp(args: &Args) -> Result<()> {
         .first()
         .map(|s| s.as_str())
         .unwrap_or("all");
-    let models = match args.flags.get("models") {
+    let models = match args.str_flag_opt("models") {
         Some(m) => m.split(',').map(str::to_string).collect(),
         None => ctx.models(),
     };
@@ -177,14 +234,38 @@ fn exp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the registry for `serve`: synthetic specs are pure Rust; the
+/// manifest path is build-dependent inside
+/// `server::registry_from_specs` (quantized via PJRT with the `pjrt`
+/// feature, full-precision `nearest:W32A32` loading otherwise).
+fn build_registry(args: &Args, specs: &[ModelSpec]) -> Result<ModelRegistry> {
+    let iters = match args.str_flag_opt("iters") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    aquant::server::registry_from_specs(
+        specs,
+        &args.str_flag("artifacts", "artifacts"),
+        iters,
+        args.bool_flag("verbose"),
+    )
+}
+
 fn serve(args: &Args) -> Result<()> {
-    let ctx = ctx_from(args)?;
-    let (model, method, bits) = parse_cell(args)?;
+    let default_method = match args.str_flag_opt("method") {
+        Some(m) => Some(Method::parse(m)?),
+        None => None,
+    };
+    let default_bits = match args.str_flag_opt("bits") {
+        Some(b) => Some(Bits::parse(b)?),
+        None => None,
+    };
+    let specs = ModelSpec::parse_all(args.multi_flag("model"), default_method, default_bits)?;
     let addr = args.str_flag("addr", "127.0.0.1:7000");
     let cfg = aquant::config::ServeConfig::from_args(args)?;
     let every = args.num_flag("stats-every-s", 30u64)?;
-    let engine = aquant::exp::cell::build_quantized_engine(&ctx, &model, method, bits)?;
-    let srv = aquant::server::Server::bind(std::sync::Arc::new(engine), &addr, cfg)?;
+    let registry = Arc::new(build_registry(args, &specs)?);
+    let srv = aquant::server::Server::bind(registry, &addr, cfg)?;
     let stats = srv.stats();
     if every > 0 {
         // A long-lived server never returns from run(); the live stats
@@ -192,11 +273,11 @@ fn serve(args: &Args) -> Result<()> {
         let s = stats.clone();
         std::thread::spawn(move || loop {
             std::thread::sleep(std::time::Duration::from_secs(every));
-            println!("aquant-serve: {}", s.report());
+            println!("{}", s.report());
         });
     }
     srv.run()?;
     // reached only for bounded runs (--max-conns)
-    println!("aquant-serve: {}", stats.report());
+    println!("{}", stats.report());
     Ok(())
 }

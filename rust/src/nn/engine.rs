@@ -77,6 +77,13 @@ pub struct Engine {
 /// worker thread: after the first image every buffer is reused, so the
 /// serving hot loop does no per-image allocation (ISSUE 2 / the paper's
 /// runtime-overhead claim depends on the border staying cheap online).
+///
+/// A scratch is model-agnostic: no buffer carries an exact-size
+/// assumption, so the same scratch serves engines of different shapes
+/// back to back (multi-model serving shares one worker pool). The
+/// activation buffers (`h`/`out`/`block_in`/`skip`) track semantic
+/// lengths via `resize`; the pure work buffers (`patches`/`quant`) only
+/// ever grow, and every user slices exactly the region it overwrites.
 #[derive(Debug, Default)]
 pub struct EngineScratch {
     /// Current activation (ping) and next layer's output (pong).
@@ -86,9 +93,9 @@ pub struct EngineScratch {
     block_in: Vec<f32>,
     /// Downsample-projection output.
     skip: Vec<f32>,
-    /// im2col patch buffer (grows to the largest layer, then stable).
+    /// im2col patch buffer (grow-only; sized to the largest layer seen).
     patches: Vec<f32>,
-    /// Border-function scratch (2·R for the fused-border segment pass).
+    /// Border-function scratch (grow-only; 2·R for the fused-border pass).
     quant: Vec<f32>,
 }
 
@@ -96,6 +103,56 @@ impl EngineScratch {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Scratch with capacity pre-reserved for `dims` (typically the
+    /// max-dims union over a model registry), so a worker serving
+    /// heterogeneous models never reallocates on the hot path, not even
+    /// on its first image of the largest model.
+    pub fn with_dims(dims: ScratchDims) -> Self {
+        EngineScratch {
+            h: Vec::with_capacity(dims.acts),
+            out: Vec::with_capacity(dims.acts),
+            block_in: Vec::with_capacity(dims.acts),
+            skip: Vec::with_capacity(dims.acts),
+            patches: Vec::with_capacity(dims.patches),
+            quant: Vec::with_capacity(dims.quant),
+        }
+    }
+}
+
+/// Worst-case buffer sizes (in f32 elements) an [`EngineScratch`] needs
+/// to run a model allocation-free. Unions over several engines give the
+/// shared-pool sizing for multi-model serving.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchDims {
+    /// Largest activation map (max over layers of in/out C·H·W).
+    pub acts: usize,
+    /// Largest im2col patch buffer (conv: P·R; fc: pooled C).
+    pub patches: usize,
+    /// Largest border scratch (2·R for the fused segment pass).
+    pub quant: usize,
+}
+
+impl ScratchDims {
+    /// Element-wise max of two requirements.
+    pub fn union(self, other: ScratchDims) -> ScratchDims {
+        ScratchDims {
+            acts: self.acts.max(other.acts),
+            patches: self.patches.max(other.patches),
+            quant: self.quant.max(other.quant),
+        }
+    }
+}
+
+/// Grow-only view of a scratch buffer: extends the backing Vec when the
+/// request exceeds it, never shrinks, and hands back exactly the `n`
+/// elements the caller will overwrite. This is what lets one scratch
+/// serve models of different dims without per-model length bookkeeping.
+fn grow(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
 }
 
 /// Per-layer timing sample from `forward_timed`.
@@ -161,8 +218,7 @@ impl Engine {
         if l.kind == "fc" {
             // GAP + matmul; `patches` doubles as the pooled C-vector.
             let (c, h, w) = l.in_chw;
-            patches.resize(c, 0.0);
-            let v = &mut patches[..c];
+            let v = grow(patches, c);
             if l.gap_input && h * w > 1 {
                 for ci in 0..c {
                     let plane = &x[ci * h * w..(ci + 1) * h * w];
@@ -181,7 +237,7 @@ impl Engine {
         }
         let (_, ho, wo) = l.out_chw;
         let np = ho * wo;
-        patches.resize(np * l.rows, 0.0);
+        let patches = grow(patches, np * l.rows);
         let k2 = l.k2();
         let t0 = timing.is_some().then(Instant::now);
         match (self.fusion, matches!(aq, ActQuant::None)) {
@@ -398,6 +454,143 @@ impl Engine {
     pub fn img_elems(&self) -> usize {
         let (h, w) = self.topo.in_hw;
         self.topo.in_c * h * w
+    }
+
+    /// Worst-case scratch sizes for running this model allocation-free.
+    pub fn scratch_dims(&self) -> ScratchDims {
+        let mut d = ScratchDims {
+            acts: self.img_elems(),
+            ..ScratchDims::default()
+        };
+        for l in self.topo.all_layers() {
+            let (ic, ih, iw) = l.in_chw;
+            let (oc, oh, ow) = l.out_chw;
+            d.acts = d.acts.max(ic * ih * iw).max(oc * oh * ow);
+            let patches = if l.kind == "fc" { ic } else { oh * ow * l.rows };
+            d.patches = d.patches.max(patches);
+            d.quant = d.quant.max(2 * l.rows);
+        }
+        d
+    }
+
+    /// Check one layer's internal consistency *before* any arithmetic
+    /// that could divide by zero or index out of bounds: fields like
+    /// `rows` and `groups` come straight from manifest JSON, and the
+    /// im2col/gemm hot loops trust them (`col[c·k²..]` slicing, grouped
+    /// row ranges), so a bad value must be a load-time error.
+    fn validate_layer(&self, l: &LayerTopo) -> Result<()> {
+        let t = &self.topo.name;
+        if l.kind != "conv" && l.kind != "fc" {
+            return Err(anyhow!("model {t}: layer {} has unknown kind {:?}", l.name, l.kind));
+        }
+        if l.ic == 0 || l.oc == 0 || l.k == 0 || l.stride == 0 || l.groups == 0 {
+            return Err(anyhow!(
+                "model {t}: layer {} has zero dim (ic {} oc {} k {} stride {} groups {})",
+                l.name, l.ic, l.oc, l.k, l.stride, l.groups
+            ));
+        }
+        if l.ic % l.groups != 0 || l.oc % l.groups != 0 {
+            return Err(anyhow!(
+                "model {t}: layer {} groups {} must divide ic {} and oc {}",
+                l.name, l.groups, l.ic, l.oc
+            ));
+        }
+        // im2col assumes col length == rows == ic·k² (rows == ic for fc,
+        // where k2() is 1); a smaller `rows` slices out of range, a
+        // larger one feeds gemm stale scratch.
+        if l.rows != l.ic * l.k2() {
+            return Err(anyhow!(
+                "model {t}: layer {} rows {} != ic {} x k2 {}",
+                l.name, l.rows, l.ic, l.k2()
+            ));
+        }
+        if l.in_chw.0 != l.ic || l.out_chw.0 != l.oc {
+            return Err(anyhow!(
+                "model {t}: layer {} channel fields disagree (ic {} in_chw {:?}, oc {} out_chw {:?})",
+                l.name, l.ic, l.in_chw, l.oc, l.out_chw
+            ));
+        }
+        if l.kind == "conv" {
+            // out dims must match the conv arithmetic the extractor's
+            // bounds checks are built around (checked_sub: a kernel
+            // larger than the padded input is an error, not underflow)
+            let (_, h, w) = l.in_chw;
+            let ho = (h + 2 * l.pad)
+                .checked_sub(l.k)
+                .map(|d| d / l.stride + 1)
+                .ok_or_else(|| {
+                    anyhow!("model {t}: layer {} kernel {} exceeds padded input", l.name, l.k)
+                })?;
+            let wo = (w + 2 * l.pad)
+                .checked_sub(l.k)
+                .map(|d| d / l.stride + 1)
+                .ok_or_else(|| {
+                    anyhow!("model {t}: layer {} kernel {} exceeds padded input", l.name, l.k)
+                })?;
+            if l.out_chw != (l.oc, ho, wo) {
+                return Err(anyhow!(
+                    "model {t}: layer {} out_chw {:?} != computed ({}, {ho}, {wo})",
+                    l.name, l.out_chw, l.oc
+                ));
+            }
+        }
+        let lw = self.layer_weights(&l.name)?;
+        if lw.w.len() != l.weight_elems() || lw.b.len() != l.oc {
+            return Err(anyhow!(
+                "model {t}: layer {} weights {}x{} want {}x{}",
+                l.name, lw.w.len(), lw.b.len(), l.weight_elems(), l.oc
+            ));
+        }
+        Ok(())
+    }
+
+    /// Check the topology chains and every layer is internally
+    /// consistent with weights of the right shape. Registry
+    /// construction runs this up front so a malformed model is a
+    /// load-time error, not a mid-request panic in a shared pool worker.
+    pub fn validate(&self) -> Result<()> {
+        let t = &self.topo;
+        if t.blocks.is_empty() || t.n_classes == 0 || self.img_elems() == 0 {
+            return Err(anyhow!("model {}: empty topology", t.name));
+        }
+        let mut chw = (t.in_c, t.in_hw.0, t.in_hw.1);
+        for blk in &t.blocks {
+            let block_in = chw;
+            let mut cur = chw;
+            for l in blk.main_layers() {
+                if l.in_chw != cur {
+                    return Err(anyhow!(
+                        "model {}: layer {} expects input {:?} but gets {:?}",
+                        t.name, l.name, l.in_chw, cur
+                    ));
+                }
+                cur = l.out_chw;
+            }
+            if let Some(ds) = blk.downsample_layer() {
+                if ds.in_chw != block_in || ds.out_chw != cur {
+                    return Err(anyhow!(
+                        "model {}: downsample {} must project {:?} -> {:?}",
+                        t.name, ds.name, block_in, cur
+                    ));
+                }
+            } else if blk.residual && cur != block_in {
+                return Err(anyhow!(
+                    "model {}: identity-skip block {} changes shape {:?} -> {:?}",
+                    t.name, blk.name, block_in, cur
+                ));
+            }
+            for l in &blk.layers {
+                self.validate_layer(l)?;
+            }
+            chw = cur;
+        }
+        if chw.0 * chw.1 * chw.2 != t.n_classes {
+            return Err(anyhow!(
+                "model {}: head emits {:?}, want {} classes",
+                t.name, chw, t.n_classes
+            ));
+        }
+        Ok(())
     }
 }
 

@@ -3,12 +3,13 @@
 //! `meta.qinit` sections).
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use super::engine::LayerWeights;
+use super::engine::{Engine, LayerWeights};
 use super::topology::ModelTopo;
+use crate::config::{Method, ModelSource, ModelSpec};
 use crate::runtime::Manifest;
 use crate::util::tensor_io;
 
@@ -66,6 +67,72 @@ pub fn load_qinit(
         l.weight_elems(),
     )?;
     Ok((s_w, v))
+}
+
+/// Build a full-precision [`Engine`] for one manifest model (topology +
+/// folded FP weights, no activation quantization). This is the
+/// PJRT-free manifest serving path — `aquant serve` uses it for
+/// `MODEL:nearest:W32A32` specs in builds without the `pjrt` feature;
+/// quantized engines come from `exp::cell::build_quantized_engine`
+/// (calibration needs the runtime). Registry construction
+/// ([`crate::nn::registry::ModelRegistry::new`]) validates each engine
+/// and sizes shared scratch over whatever mix of loaded and synthetic
+/// engines the caller assembles.
+pub fn load_engine(artifacts_dir: &Path, manifest: &Manifest, model: &str) -> Result<Engine> {
+    let topo = load_topology(manifest, model)
+        .with_context(|| format!("loading topology for model {model:?}"))?;
+    let weights = load_weights(artifacts_dir, manifest, model)
+        .with_context(|| format!("loading weights for model {model:?}"))?;
+    Ok(Engine::new(topo, weights))
+}
+
+/// Manifest-engine builder for `ModelRegistry::from_specs` in builds
+/// without PJRT: manifest specs are served **full-precision** only
+/// (`nearest` + W32A32 — without the runtime there is no calibration,
+/// so a quantized spec is a configuration error pointing at the `pjrt`
+/// feature). Loads `manifest.json` lazily on first use, once.
+pub struct FpManifestBuilder {
+    artifacts_dir: PathBuf,
+    manifest: Option<Manifest>,
+}
+
+impl FpManifestBuilder {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        FpManifestBuilder {
+            artifacts_dir: artifacts_dir.into(),
+            manifest: None,
+        }
+    }
+
+    /// Build the engine for one manifest spec (see type docs).
+    pub fn build(&mut self, spec: &ModelSpec) -> Result<Engine> {
+        let ModelSource::Manifest {
+            model,
+            method,
+            bits,
+        } = &spec.source
+        else {
+            bail!("spec {:?} is not a manifest model", spec.name);
+        };
+        if *method != Method::Nearest || bits.w_quantized() || bits.a_quantized() {
+            bail!(
+                "model spec {:?} ({model} {} {}) needs calibration and the PJRT \
+                 runtime; rebuild with `--features pjrt`, serve it full-precision \
+                 as {model}:nearest:W32A32, or use synth:...",
+                spec.name,
+                method.name(),
+                bits.name()
+            );
+        }
+        if self.manifest.is_none() {
+            self.manifest = Some(Manifest::load(&self.artifacts_dir.join("manifest.json"))?);
+        }
+        load_engine(
+            &self.artifacts_dir,
+            self.manifest.as_ref().expect("manifest just loaded"),
+            model,
+        )
+    }
 }
 
 /// FP test accuracy recorded by the trainer (manifest `meta.fp_acc`).

@@ -10,9 +10,11 @@ pub mod engine;
 pub mod im2col;
 pub mod loader;
 pub mod pool;
+pub mod registry;
 pub mod synth;
 pub mod topology;
 
-pub use engine::{ActQuant, Engine, EngineScratch, LayerWeights};
+pub use engine::{ActQuant, Engine, EngineScratch, LayerWeights, ScratchDims};
 pub use pool::InferencePool;
+pub use registry::{ModelEntry, ModelRegistry};
 pub use topology::{BlockTopo, LayerTopo, ModelTopo};

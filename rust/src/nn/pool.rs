@@ -1,16 +1,21 @@
 //! Fixed worker thread-pool for batched inference.
 //!
-//! A batch of images is sharded into contiguous index ranges, one per
-//! worker. Each worker is a long-lived thread owning one
-//! [`EngineScratch`], so after warm-up the per-image hot loop performs
-//! no allocation (the im2col patch buffer, border scratch, and
-//! activation ping-pong buffers are all reused).
+//! The pool is **model-agnostic**: each job (shard) carries the
+//! `Arc<Engine>` it runs against, so one pool serves every model in a
+//! [`crate::nn::registry::ModelRegistry`] without duplicating worker
+//! threads. A batch of images is sharded into contiguous index ranges,
+//! one per worker. Each worker is a long-lived thread owning one
+//! [`EngineScratch`]; the scratch is model-agnostic too (grow-only
+//! buffers, pre-sized to the max dims passed at construction), so after
+//! warm-up the per-image hot loop performs no allocation even when
+//! consecutive shards come from models of different shapes.
 //!
 //! Determinism: every image's forward pass is independent and the
 //! per-image code path is exactly [`Engine::classify_scratch`] — the
 //! same path the sequential [`Engine::classify_batch`] uses — so pooled
-//! results are bit-identical to sequential results for any worker count
-//! and any shard split. The pool property tests pin this down.
+//! results are bit-identical to sequential results for any worker count,
+//! any shard split, and any interleaving of models. The pool property
+//! tests pin this down.
 //!
 //! Built on `std` only (rayon/crossbeam are unavailable offline): jobs
 //! flow through an `mpsc` channel shared by workers behind a mutex, and
@@ -22,10 +27,13 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, ensure, Result};
 
-use super::engine::{Engine, EngineScratch};
+use super::engine::{Engine, EngineScratch, ScratchDims};
 
 /// One contiguous shard of a batch, dispatched to a single worker.
 struct Shard {
+    /// The engine this shard runs against (jobs carry their model; the
+    /// pool owns none).
+    engine: Arc<Engine>,
     /// The whole batch, flattened (n · img_elems f32s), shared by ref-count.
     images: Arc<Vec<f32>>,
     img_elems: usize,
@@ -41,9 +49,8 @@ struct ShardReply {
     preds: Result<Vec<usize>, String>,
 }
 
-/// Fixed-size inference thread-pool over a shared [`Engine`].
+/// Fixed-size, model-agnostic inference thread-pool.
 pub struct InferencePool {
-    engine: Arc<Engine>,
     workers: usize,
     /// Job channel; `None` once shutdown has begun (Drop).
     tx: Option<Sender<Shard>>,
@@ -52,18 +59,23 @@ pub struct InferencePool {
 
 impl InferencePool {
     /// Spawn `workers` (min 1) threads, each with its own scratch.
-    pub fn new(engine: Arc<Engine>, workers: usize) -> Self {
+    pub fn new(workers: usize) -> Self {
+        Self::with_scratch_dims(workers, ScratchDims::default())
+    }
+
+    /// Spawn workers whose scratch is pre-reserved for `dims` (use the
+    /// registry's max-dims union so the largest model's first image
+    /// doesn't pay reallocation).
+    pub fn with_scratch_dims(workers: usize, dims: ScratchDims) -> Self {
         let workers = workers.max(1);
         let (tx, rx) = channel::<Shard>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let rx = rx.clone();
-            let eng = engine.clone();
-            handles.push(std::thread::spawn(move || worker_loop(&eng, &rx)));
+            handles.push(std::thread::spawn(move || worker_loop(&rx, dims)));
         }
         InferencePool {
-            engine,
             workers,
             tx: Some(tx),
             handles,
@@ -74,14 +86,21 @@ impl InferencePool {
         self.workers
     }
 
-    /// Classify `n` images stored flat in `images` (n · img_elems f32s).
-    /// Returns per-image argmax classes, bit-identical to the sequential
-    /// [`Engine::classify_batch`].
-    pub fn classify_flat(&self, images: Arc<Vec<f32>>, n: usize) -> Result<Vec<usize>> {
+    /// Classify `n` images stored flat in `images` (n · img_elems f32s)
+    /// with `engine`. Returns per-image argmax classes, bit-identical to
+    /// the sequential [`Engine::classify_batch`]. Safe to call from many
+    /// threads at once (per-model batchers share one pool); each call
+    /// has its own reply channel.
+    pub fn classify_flat(
+        &self,
+        engine: &Arc<Engine>,
+        images: Arc<Vec<f32>>,
+        n: usize,
+    ) -> Result<Vec<usize>> {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let img_elems = self.engine.img_elems();
+        let img_elems = engine.img_elems();
         ensure!(
             images.len() == n * img_elems,
             "flat batch has {} f32s, want {} ({n} x {img_elems})",
@@ -100,6 +119,7 @@ impl InferencePool {
         while start < n {
             let end = (start + chunk).min(n);
             tx.send(Shard {
+                engine: engine.clone(),
                 images: images.clone(),
                 img_elems,
                 start,
@@ -123,12 +143,12 @@ impl InferencePool {
     }
 
     /// Convenience: classify a slice-of-slices batch (flattens once).
-    pub fn classify_batch(&self, images: &[&[f32]]) -> Result<Vec<usize>> {
+    pub fn classify_batch(&self, engine: &Arc<Engine>, images: &[&[f32]]) -> Result<Vec<usize>> {
         let mut flat = Vec::with_capacity(images.iter().map(|i| i.len()).sum());
         for img in images {
             flat.extend_from_slice(img);
         }
-        self.classify_flat(Arc::new(flat), images.len())
+        self.classify_flat(engine, Arc::new(flat), images.len())
     }
 }
 
@@ -142,8 +162,8 @@ impl Drop for InferencePool {
     }
 }
 
-fn worker_loop(engine: &Engine, rx: &Mutex<Receiver<Shard>>) {
-    let mut scratch = EngineScratch::new();
+fn worker_loop(rx: &Mutex<Receiver<Shard>>, dims: ScratchDims) {
+    let mut scratch = EngineScratch::with_dims(dims);
     loop {
         // Hold the lock only for the blocking recv, not while running
         // inference, so idle workers can pick up the next shard.
@@ -155,13 +175,14 @@ fn worker_loop(engine: &Engine, rx: &Mutex<Receiver<Shard>>) {
         // Contain any engine panic: a dead worker would permanently
         // shrink the pool, so a panicking image becomes a shard error
         // instead. The scratch carries no invariants across calls
-        // (every buffer is fully overwritten), so reuse after an
-        // unwind is safe.
+        // (every read region is fully overwritten first) — not even the
+        // model identity, so reuse after an unwind or across models is
+        // safe.
         let preds = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut preds = Vec::with_capacity(shard.end - shard.start);
             for i in shard.start..shard.end {
                 let img = &shard.images[i * shard.img_elems..(i + 1) * shard.img_elems];
-                match engine.classify_scratch(img, &mut scratch) {
+                match shard.engine.classify_scratch(img, &mut scratch) {
                     Ok(p) => preds.push(p),
                     Err(e) => return Err(format!("image {i}: {e:#}")),
                 }
@@ -200,29 +221,61 @@ mod tests {
         let refs: Vec<&[f32]> = images.chunks_exact(elems).collect();
         let want = engine.classify_batch(&refs).unwrap();
         for workers in [1, 3, 16] {
-            let pool = InferencePool::new(engine.clone(), workers);
-            assert_eq!(pool.classify_batch(&refs).unwrap(), want, "workers={workers}");
+            let pool = InferencePool::new(workers);
+            assert_eq!(
+                pool.classify_batch(&engine, &refs).unwrap(),
+                want,
+                "workers={workers}"
+            );
         }
     }
 
     #[test]
     fn pool_reuse_across_batches_and_empty() {
         let (engine, images, elems) = setup(12, 6);
-        let pool = InferencePool::new(engine.clone(), 2);
-        assert!(pool.classify_batch(&[]).unwrap().is_empty());
+        let pool = InferencePool::new(2);
+        assert!(pool.classify_batch(&engine, &[]).unwrap().is_empty());
         for split in [1usize, 2, 6] {
             let refs: Vec<&[f32]> = images.chunks_exact(elems).take(split).collect();
             let want = engine.classify_batch(&refs).unwrap();
-            assert_eq!(pool.classify_batch(&refs).unwrap(), want);
+            assert_eq!(pool.classify_batch(&engine, &refs).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn one_pool_serves_models_of_different_dims() {
+        // tiny (3x8x8 in) and bench (3x16x16 in) interleaved through the
+        // SAME pool: per-worker scratch must reshape between models
+        // without leaking state in either direction.
+        let (tiny, tiny_imgs, te) = setup(13, 4);
+        let mut rng = Rng::new(14);
+        let (topo, weights) = synth::bench_model(&mut rng);
+        let bench = Arc::new(synth::engine_with_random_borders(
+            &topo, &weights, &mut rng, true, true,
+        ));
+        let be = bench.img_elems();
+        assert_ne!(te, be, "test needs heterogeneous dims");
+        let bench_imgs: Vec<f32> = (0..4 * be).map(|_| rng.normal()).collect();
+
+        let tiny_refs: Vec<&[f32]> = tiny_imgs.chunks_exact(te).collect();
+        let bench_refs: Vec<&[f32]> = bench_imgs.chunks_exact(be).collect();
+        let want_tiny = tiny.classify_batch(&tiny_refs).unwrap();
+        let want_bench = bench.classify_batch(&bench_refs).unwrap();
+
+        let dims = tiny.scratch_dims().union(bench.scratch_dims());
+        let pool = InferencePool::with_scratch_dims(2, dims);
+        for _ in 0..3 {
+            assert_eq!(pool.classify_batch(&tiny, &tiny_refs).unwrap(), want_tiny);
+            assert_eq!(pool.classify_batch(&bench, &bench_refs).unwrap(), want_bench);
         }
     }
 
     #[test]
     fn classify_flat_rejects_ragged_buffer() {
         let (engine, images, _) = setup(13, 2);
-        let pool = InferencePool::new(engine, 2);
+        let pool = InferencePool::new(2);
         let mut bad = images.clone();
         bad.pop();
-        assert!(pool.classify_flat(Arc::new(bad), 2).is_err());
+        assert!(pool.classify_flat(&engine, Arc::new(bad), 2).is_err());
     }
 }

@@ -1,0 +1,226 @@
+//! Model registry: the set of engines one serving process hosts.
+//!
+//! Protocol v2 routes requests by a `u16` model id; the registry is the
+//! authority mapping ids (dense, assigned in registration order) and
+//! human-readable names to engines. Model id 0 is the **default model**,
+//! which also serves protocol-v1 clients that cannot name a model.
+//!
+//! Construction is where multi-model serving pays its safety tax once:
+//! every engine is [`Engine::validate`]d (dimension chains + weight
+//! shapes), names are checked unique, and the worst-case
+//! [`ScratchDims`] union over all models is computed so the shared
+//! worker pool can pre-size per-worker scratch for the largest model —
+//! heterogeneous shapes then reuse the same buffers allocation-free.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::engine::{Engine, ScratchDims};
+use super::synth;
+use crate::config::{ModelSource, ModelSpec};
+
+/// Upper bound on hosted models: far above any deployment this serves,
+/// small enough that per-model queues/batchers/stats stay cheap. (The
+/// wire format would allow u16::MAX + 1.)
+pub const MAX_MODELS: usize = 1024;
+
+/// One hosted model: routing name + its engine.
+pub struct ModelEntry {
+    pub name: String,
+    pub engine: Arc<Engine>,
+}
+
+/// Immutable set of models behind one server / worker pool. Ids are the
+/// construction order: 0 is the default (v1-compat) model.
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+    scratch_dims: ScratchDims,
+}
+
+impl ModelRegistry {
+    /// Build and validate a registry. `entries` order assigns model ids.
+    pub fn new(entries: Vec<(String, Arc<Engine>)>) -> Result<ModelRegistry> {
+        if entries.is_empty() {
+            bail!("model registry needs at least one model (id 0 serves v1 clients)");
+        }
+        if entries.len() > MAX_MODELS {
+            bail!("model registry holds {} models, max {MAX_MODELS}", entries.len());
+        }
+        let mut dims = ScratchDims::default();
+        let mut out = Vec::with_capacity(entries.len());
+        for (name, engine) in entries {
+            if name.is_empty() {
+                bail!("model name must be non-empty");
+            }
+            if out.iter().any(|e: &ModelEntry| e.name == name) {
+                bail!("duplicate model name {name:?} in registry");
+            }
+            engine
+                .validate()
+                .map_err(|e| e.context(format!("registering model {name:?}")))?;
+            dims = dims.union(engine.scratch_dims());
+            out.push(ModelEntry { name, engine });
+        }
+        Ok(ModelRegistry {
+            entries: out,
+            scratch_dims: dims,
+        })
+    }
+
+    /// Single-model registry (the pre-v2 server shape): the engine's
+    /// topology name becomes the routing name.
+    pub fn single(engine: Arc<Engine>) -> Result<ModelRegistry> {
+        let name = engine.topo.name.clone();
+        ModelRegistry::new(vec![(name, engine)])
+    }
+
+    /// Build a registry from parsed `--model` specs (id order = spec
+    /// order). Synthetic specs build directly; each manifest spec is
+    /// delegated to `manifest_engine` — quantized via the PJRT
+    /// calibration path in `pjrt` builds, full-precision via
+    /// [`crate::nn::loader::FpManifestBuilder`] otherwise. This is the
+    /// ONE spec→engine loop shared by `aquant serve` and the serve
+    /// example, so the two cannot drift.
+    pub fn from_specs(
+        specs: &[ModelSpec],
+        mut manifest_engine: impl FnMut(&ModelSpec) -> Result<Engine>,
+    ) -> Result<ModelRegistry> {
+        let mut entries = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let engine = match &spec.source {
+                ModelSource::Synth { kind, seed } => synth::engine_from_spec(kind, *seed)?,
+                ModelSource::Manifest { .. } => manifest_engine(spec)?,
+            };
+            entries.push((spec.name.clone(), Arc::new(engine)));
+        }
+        ModelRegistry::new(entries)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entry by wire model id.
+    pub fn get(&self, id: u16) -> Option<&ModelEntry> {
+        self.entries.get(id as usize)
+    }
+
+    /// The v1-compat default model (id 0).
+    pub fn default_entry(&self) -> &ModelEntry {
+        &self.entries[0]
+    }
+
+    /// Wire id for a routing name.
+    pub fn id_of(&self, name: &str) -> Option<u16> {
+        self.entries
+            .iter()
+            .position(|e| e.name == name)
+            .map(|i| i as u16)
+    }
+
+    /// `(id, entry)` in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (u16, &ModelEntry)> {
+        self.entries.iter().enumerate().map(|(i, e)| (i as u16, e))
+    }
+
+    /// Max-dims union over all hosted models — what each shared-pool
+    /// worker's scratch must accommodate.
+    pub fn scratch_dims(&self) -> ScratchDims {
+        self.scratch_dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::synth;
+    use crate::util::rng::Rng;
+
+    fn engine(seed: u64) -> Arc<Engine> {
+        let mut rng = Rng::new(seed);
+        let (topo, weights) = synth::tiny_model(&mut rng);
+        Arc::new(synth::engine_with_random_borders(
+            &topo, &weights, &mut rng, true, true,
+        ))
+    }
+
+    #[test]
+    fn ids_follow_registration_order() {
+        let reg = ModelRegistry::new(vec![
+            ("a".into(), engine(1)),
+            ("b".into(), engine(2)),
+        ])
+        .unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.id_of("a"), Some(0));
+        assert_eq!(reg.id_of("b"), Some(1));
+        assert_eq!(reg.id_of("c"), None);
+        assert_eq!(reg.default_entry().name, "a");
+        assert!(reg.get(2).is_none());
+        assert_eq!(reg.get(1).unwrap().name, "b");
+    }
+
+    #[test]
+    fn rejects_empty_and_duplicates() {
+        assert!(ModelRegistry::new(vec![]).is_err());
+        assert!(ModelRegistry::new(vec![
+            ("m".into(), engine(1)),
+            ("m".into(), engine(2)),
+        ])
+        .is_err());
+        assert!(ModelRegistry::new(vec![("".into(), engine(1))]).is_err());
+    }
+
+    #[test]
+    fn from_specs_builds_synth_and_delegates_manifest() {
+        let specs = vec![
+            ModelSpec::parse("a=synth:tiny", None, None).unwrap(),
+            ModelSpec::parse("b=synth:bench:7", None, None).unwrap(),
+        ];
+        let reg = ModelRegistry::from_specs(&specs, |_| unreachable!("no manifest specs"))
+            .unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.id_of("a"), Some(0));
+        assert_eq!(reg.id_of("b"), Some(1));
+        // a manifest spec reaches the delegate, and its error propagates
+        let specs = vec![ModelSpec::parse("m:nearest:W32A32", None, None).unwrap()];
+        let err = ModelRegistry::from_specs(&specs, |s| {
+            Err(anyhow::anyhow!("no artifacts for {}", s.name))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("no artifacts for m"), "{err}");
+    }
+
+    #[test]
+    fn rejects_invalid_engine() {
+        let mut rng = Rng::new(3);
+        let (topo, mut weights) = synth::tiny_model(&mut rng);
+        // truncate one layer's weights: must fail at registration, not
+        // mid-request in a pool worker
+        weights.get_mut("c1").unwrap().w.pop();
+        let eng = Arc::new(Engine::new(topo, weights));
+        assert!(ModelRegistry::single(eng).is_err());
+    }
+
+    #[test]
+    fn scratch_dims_cover_all_models() {
+        let mut rng = Rng::new(4);
+        let (t1, w1) = synth::tiny_model(&mut rng);
+        let (t2, w2) = synth::bench_model(&mut rng);
+        let e1 = Arc::new(Engine::new(t1, w1));
+        let e2 = Arc::new(Engine::new(t2, w2));
+        let (d1, d2) = (e1.scratch_dims(), e2.scratch_dims());
+        let reg =
+            ModelRegistry::new(vec![("tiny".into(), e1), ("bench".into(), e2)]).unwrap();
+        let d = reg.scratch_dims();
+        for (a, b) in [(d1, d), (d2, d)] {
+            assert!(a.acts <= b.acts && a.patches <= b.patches && a.quant <= b.quant);
+        }
+        assert_eq!(d, d1.union(d2));
+    }
+}

@@ -7,6 +7,8 @@
 
 use std::collections::HashMap;
 
+use anyhow::{bail, Result};
+
 use crate::nn::engine::{ActQuant, Engine, LayerWeights};
 use crate::nn::topology::{BlockTopo, LayerTopo, ModelTopo};
 use crate::quant::border::BorderFn;
@@ -214,6 +216,25 @@ pub fn bench_model(rng: &mut Rng) -> (ModelTopo, HashMap<String, LayerWeights>) 
         blocks,
     };
     (topo, weights)
+}
+
+/// Build a served synthetic engine from a `synth:KIND[:SEED]` model
+/// spec (see `config::ModelSpec`): deterministic in `seed`, with random
+/// learned borders on every layer so the full quantized hot path is
+/// what gets served. Distinct seeds give distinct weights/borders, so a
+/// multi-model registry of same-kind engines still routes observably.
+pub fn engine_from_spec(kind: &str, seed: u64) -> Result<Engine> {
+    let mut rng = Rng::new(seed);
+    let (mut topo, weights) = match kind {
+        "tiny" => tiny_model(&mut rng),
+        "bench" => bench_model(&mut rng),
+        "rand" => random_model(&mut rng),
+        other => bail!("unknown synth model kind {other:?} (want tiny|bench|rand)"),
+    };
+    topo.name = format!("synth-{kind}-{seed}");
+    Ok(engine_with_random_borders(
+        &topo, &weights, &mut rng, true, true,
+    ))
 }
 
 /// Engine with a random learned border on every layer — puts the full

@@ -172,9 +172,15 @@ impl BorderFn {
             }
             return;
         }
-        // fusion: need the whole channel segment before rounding
-        scratch.resize(2 * self.rows, 0.0);
-        let (xs, borders) = scratch.split_at_mut(self.rows);
+        // fusion: need the whole channel segment before rounding.
+        // Grow-only: the scratch is shared across layers (and, under
+        // multi-model serving, across models) with different R, so slice
+        // exactly 2R instead of assuming the buffer length equals 2R.
+        if scratch.len() < 2 * self.rows {
+            scratch.resize(2 * self.rows, 0.0);
+        }
+        let (xs, rest) = scratch.split_at_mut(self.rows);
+        let borders = &mut rest[..self.rows];
         for (x, v) in xs.iter_mut().zip(col.iter()) {
             *x = v * inv_s;
         }

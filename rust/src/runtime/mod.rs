@@ -4,9 +4,18 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids which the crate's
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids and
 //! round-trips cleanly. See `python/compile/aot.py`.
+//!
+//! The executor (`client`) wraps the environment-provided `xla` crate
+//! and is gated behind the `pjrt` cargo feature so the pure-Rust world
+//! (quantization substrate, inference engine, serving runtime) builds
+//! and tests without it. The manifest parser is dependency-free and
+//! always available — topology/weight loading and synthetic serving
+//! never need PJRT.
 
+#[cfg(feature = "pjrt")]
 mod client;
 mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::{literal_f32, literal_i32, Executable, Runtime};
 pub use manifest::{Manifest, ProgramSpec, TensorSpec};

@@ -1,63 +1,74 @@
-//! Quantized-inference server: dynamic batching over a fixed worker
-//! pool (Python never on the request path — the engine runs quantized
-//! weights + the border function natively).
+//! Quantized-inference server: multi-model dynamic batching over one
+//! shared worker pool (Python never on the request path — engines run
+//! quantized weights + the border function natively).
 //!
-//! # Wire protocol (little-endian, unchanged since the seed)
+//! # Wire protocol (little-endian)
+//!
+//! Two request framings share one port; the server byte-sniffs the
+//! first 4 bytes of each request:
 //!
 //! ```text
-//!   request:  u32 n_images (1..=4096), then n·(C·H·W) f32 pixels
-//!   response: u32 n_images, then n u32 class ids
+//!   v1 request:  u32 n_images (1..=4096), then n·(C·H·W) f32 pixels
+//!                (routed to model id 0, the default model)
+//!   v2 request:  magic "AQSV" | u16 version (=2) | u16 model_id |
+//!                u32 n_images (1..=4096), then n·(C·H·W) f32 pixels
+//!   response:    u32 n_images, then n u32 class ids   (both versions)
 //! ```
 //!
-//! A connection may pipeline any number of requests; the server answers
-//! in order. A request with `n = 0` or `n > 4096` is rejected by
-//! closing the connection (counted in [`Stats::rejected`]); a
-//! mid-stream EOF drops only that connection. Either way the accept
-//! loop and batcher keep serving other connections.
+//! Sniffing is unambiguous: a v1 header reading "AQSV" would mean
+//! n = 0x5653_5141 (≈1.4e9), far beyond the 4096-image protocol cap, so
+//! no *valid* v1 request can be mistaken for v2 (pinned by the protocol
+//! property tests). A connection may pipeline any number of requests —
+//! mixing v1 and v2 freely — and the server answers in order. A request
+//! with a bad `n`, an unknown model id, or an unsupported version is
+//! rejected by closing the connection (counted in stats); a mid-stream
+//! EOF drops only that connection. Either way the accept loop and
+//! batchers keep serving other connections.
 //!
 //! # Architecture
 //!
 //! ```text
 //!   conns (1 thread each, blocking I/O; tokio unavailable offline)
-//!     └─ push(Pending{images, reply}) ──► BatchQueue (bounded, images-
-//!        blocks when full (backpressure)     counted, Mutex+Condvar)
-//!                                              │ pop_batch(max_batch,
-//!                                              │           batch_wait)
-//!                                              ▼
-//!                                         batcher thread
-//!                  coalesces queued requests — possibly from many
-//!                  connections — into one engine-sized batch, then
-//!                                              │ classify_flat
-//!                                              ▼
-//!                                       InferencePool (N workers,
-//!                                       per-worker reusable scratch)
+//!     └─ sniff v1/v2 header, resolve model id ──► per-model BatchQueue
+//!        push(Pending{images, reply})              (bounded, images-
+//!        blocks when full (backpressure)            counted, Mutex+Condvar)
+//!                                                    │ pop_batch(max_batch,
+//!                                                    │           batch_wait)
+//!                                                    ▼
+//!                                         one batcher thread per model
+//!                  coalesces queued same-model requests — possibly from
+//!                  many connections — into one engine-sized batch, then
+//!                                                    │ classify_flat(engine)
+//!                                                    ▼
+//!                                       shared InferencePool (N workers,
+//!                                       model-agnostic per-worker scratch)
 //! ```
 //!
-//! The batcher takes whatever is queued the moment work is available;
-//! if the batch is still under `max_batch` images it waits up to
-//! `batch_wait_us` for stragglers before dispatching. Each pending
-//! request gets its slice of the batch's predictions back over its own
-//! reply channel.
+//! Queues and batchers are **per model** so one model's straggler wait
+//! never delays another model's traffic; only the worker pool (the
+//! actual CPU) is shared. Jobs carry their `Arc<Engine>`, and worker
+//! scratch is pre-sized to the registry's max dims, so heterogeneous
+//! models reuse the same threads and buffers.
 //!
 //! Batching cannot change results: every image's forward pass is
 //! independent and pooled execution is bit-identical to the sequential
-//! engine (see `rust/tests/serve_roundtrip.rs` and `pool_props.rs`).
+//! engine (see `rust/tests/serve_roundtrip.rs`, `rust/tests/multi_model.rs`
+//! and `pool_props.rs`).
 //!
 //! # Knobs ([`ServeConfig`])
 //!
-//! * `workers` — inference threads (0 = cores − 1)
+//! * `workers` — inference threads shared by all models (0 = cores − 1)
 //! * `max_batch` — images per engine batch; larger amortizes dispatch,
 //!   smaller bounds latency
 //! * `batch_wait_us` — straggler deadline; 0 = dispatch immediately
-//! * `queue_images` — queue bound; full queue blocks connection pushes
-//!   FIFO (TCP backpressure) instead of growing without limit. Note the
-//!   bound covers *queued* work: payloads still being received are held
+//! * `queue_images` — per-model queue bound; a full queue blocks that
+//!   model's connection pushes FIFO (TCP backpressure) instead of
+//!   growing without limit. Payloads still being received are held
 //!   per-connection (streamed in, so allocation tracks bytes actually
-//!   read, capped by the 4096-image protocol limit); bounding total
-//!   connection memory is `--max-conns` / OS limits territory.
+//!   read, capped by the 4096-image protocol limit).
 
 use std::collections::VecDeque;
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -65,20 +76,114 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::ServeConfig;
+use crate::config::{ModelSpec, ServeConfig};
 use crate::nn::engine::Engine;
 use crate::nn::pool::InferencePool;
+use crate::nn::registry::ModelRegistry;
 
 /// Hard protocol cap on images per request.
 pub const MAX_REQ_IMAGES: usize = 4096;
+
+/// Protocol v2 magic word ("AQSV"). As a v1 little-endian u32 this
+/// reads 0x5653_5141 — far above [`MAX_REQ_IMAGES`] — so byte-sniffing
+/// can never misroute a valid v1 request.
+pub const MAGIC: [u8; 4] = *b"AQSV";
+
+/// Protocol version this server speaks (and the only one it accepts).
+pub const PROTO_VERSION: u16 = 2;
+
+/// Bytes of a v2 request header (magic + version + model id + n).
+pub const V2_HEADER_LEN: usize = 12;
 
 /// Batch-size histogram buckets: bucket i counts executed batches with
 /// 2^i ..= 2^(i+1)−1 images (last bucket is open-ended at 4096).
 pub const BATCH_BUCKETS: usize = 13;
 
-/// Server statistics, shared up front via `Arc` so a long-lived server
-/// can be observed while running (the seed only returned stats after
-/// the accept loop exited — useless for a real deployment).
+/// One parsed request header, either framing. Framing only — range
+/// checks on `n`, version, and model id are the server's job (their
+/// rejection stats differ).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestHeader {
+    V1 { n: u32 },
+    V2 { version: u16, model_id: u16, n: u32 },
+}
+
+impl RequestHeader {
+    /// Images promised by the header.
+    pub fn n(&self) -> u32 {
+        match *self {
+            RequestHeader::V1 { n } | RequestHeader::V2 { n, .. } => n,
+        }
+    }
+
+    /// Model routing: v1 clients always hit the default model (id 0).
+    pub fn model_id(&self) -> u16 {
+        match *self {
+            RequestHeader::V1 { .. } => 0,
+            RequestHeader::V2 { model_id, .. } => model_id,
+        }
+    }
+
+    /// Wire bytes for this header (v1: 4 bytes; v2: 12 bytes). Encoding
+    /// preserves an arbitrary `version` so tests can round-trip
+    /// unsupported versions too.
+    pub fn encode(&self) -> Vec<u8> {
+        match *self {
+            RequestHeader::V1 { n } => n.to_le_bytes().to_vec(),
+            RequestHeader::V2 {
+                version,
+                model_id,
+                n,
+            } => {
+                let mut out = Vec::with_capacity(V2_HEADER_LEN);
+                out.extend_from_slice(&MAGIC);
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&model_id.to_le_bytes());
+                out.extend_from_slice(&n.to_le_bytes());
+                out
+            }
+        }
+    }
+}
+
+/// Encode a v2 header with the current [`PROTO_VERSION`].
+pub fn encode_header_v2(model_id: u16, n: u32) -> [u8; V2_HEADER_LEN] {
+    let mut out = [0u8; V2_HEADER_LEN];
+    out[..4].copy_from_slice(&MAGIC);
+    out[4..6].copy_from_slice(&PROTO_VERSION.to_le_bytes());
+    out[6..8].copy_from_slice(&model_id.to_le_bytes());
+    out[8..12].copy_from_slice(&n.to_le_bytes());
+    out
+}
+
+/// Read one request header, sniffing v1 vs v2 from the first 4 bytes.
+/// `Ok(None)` = clean EOF before a request started (pipelined
+/// connection done). EOF *inside* a v2 header is a truncated frame and
+/// surfaces as `Err(UnexpectedEof)`.
+pub fn read_request_header(stream: &mut impl Read) -> std::io::Result<Option<RequestHeader>> {
+    let mut first = [0u8; 4];
+    match stream.read_exact(&mut first) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    if first == MAGIC {
+        let mut rest = [0u8; V2_HEADER_LEN - 4];
+        stream.read_exact(&mut rest)?;
+        Ok(Some(RequestHeader::V2 {
+            version: u16::from_le_bytes([rest[0], rest[1]]),
+            model_id: u16::from_le_bytes([rest[2], rest[3]]),
+            n: u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]),
+        }))
+    } else {
+        Ok(Some(RequestHeader::V1 {
+            n: u32::from_le_bytes(first),
+        }))
+    }
+}
+
+/// Per-model server statistics, shared up front via `Arc` so a
+/// long-lived server can be observed while running.
 #[derive(Debug, Default)]
 pub struct Stats {
     /// Completed (answered) requests.
@@ -95,9 +200,10 @@ pub struct Stats {
     /// Batches whose pool execution failed (every coalesced request in
     /// them got an error reply).
     pub failed_batches: AtomicU64,
-    /// Requests rejected for a malformed header.
+    /// Requests rejected for a malformed header (bad `n`) after this
+    /// model was resolved.
     pub rejected: AtomicU64,
-    /// Images currently waiting in the batch queue (gauge).
+    /// Images currently waiting in this model's batch queue (gauge).
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     pub queue_peak: AtomicU64,
@@ -130,7 +236,7 @@ impl Stats {
         self.images.load(Ordering::Relaxed) as f64 / b as f64
     }
 
-    /// One-line human summary (printed by `aquant serve` and examples).
+    /// One-line human summary for this model.
     pub fn report(&self) -> String {
         let hist: Vec<String> = self
             .batch_hist
@@ -157,6 +263,86 @@ impl Stats {
     }
 }
 
+/// All of a server's statistics: one [`Stats`] per hosted model
+/// (indexed by model id) plus server-level counters for requests that
+/// failed before any model was resolved.
+#[derive(Debug)]
+pub struct ServerStats {
+    names: Vec<String>,
+    models: Vec<Arc<Stats>>,
+    /// v2 requests naming a model id outside the registry.
+    pub unknown_model: AtomicU64,
+    /// v2 requests with a version this server doesn't speak.
+    pub bad_version: AtomicU64,
+}
+
+impl ServerStats {
+    fn new(registry: &ModelRegistry) -> Self {
+        ServerStats {
+            names: registry.iter().map(|(_, e)| e.name.clone()).collect(),
+            models: registry.iter().map(|_| Arc::new(Stats::default())).collect(),
+            unknown_model: AtomicU64::new(0),
+            bad_version: AtomicU64::new(0),
+        }
+    }
+
+    /// Stats for one model id.
+    pub fn model(&self, id: u16) -> Option<&Arc<Stats>> {
+        self.models.get(id as usize)
+    }
+
+    /// Stats for the default (v1-compat) model.
+    pub fn default_model(&self) -> &Arc<Stats> {
+        &self.models[0]
+    }
+
+    /// Hosted model count.
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Sum of answered requests across models.
+    pub fn total_requests(&self) -> u64 {
+        self.models
+            .iter()
+            .map(|s| s.requests.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Sum of executed images across models.
+    pub fn total_images(&self) -> u64 {
+        self.models
+            .iter()
+            .map(|s| s.images.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Sum of rejected requests: per-model bad-`n` rejections plus the
+    /// server-level unknown-model / bad-version rejections.
+    pub fn total_rejected(&self) -> u64 {
+        self.models
+            .iter()
+            .map(|s| s.rejected.load(Ordering::Relaxed))
+            .sum::<u64>()
+            + self.unknown_model.load(Ordering::Relaxed)
+            + self.bad_version.load(Ordering::Relaxed)
+    }
+
+    /// Multi-line human summary: one line per model + server counters.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (i, (name, s)) in self.names.iter().zip(&self.models).enumerate() {
+            out.push_str(&format!("model {i} {name}: {}\n", s.report()));
+        }
+        out.push_str(&format!(
+            "server: unknown-model {}  bad-version {}",
+            self.unknown_model.load(Ordering::Relaxed),
+            self.bad_version.load(Ordering::Relaxed),
+        ));
+        out
+    }
+}
+
 /// One parsed request waiting to be batched.
 struct Pending {
     images: Vec<f32>,
@@ -177,9 +363,10 @@ struct QueueState {
     serving: u64,
 }
 
-/// Bounded request queue: connection threads push, the batcher pops
-/// coalesced batches. Bounded by *image count*, not request count, so
-/// backpressure tracks actual work.
+/// Bounded request queue: connection threads push, the model's batcher
+/// pops coalesced batches. Bounded by *image count*, not request count,
+/// so backpressure tracks actual work. One queue per hosted model —
+/// straggler waits are per model, never cross-model.
 struct BatchQueue {
     state: Mutex<QueueState>,
     not_empty: Condvar,
@@ -302,26 +489,43 @@ impl BatchQueue {
     }
 }
 
-/// A bound server: listener + engine + knobs. Splitting bind from run
-/// lets callers learn the ephemeral port and grab the stats handle
-/// before the (blocking) accept loop starts.
+/// Everything a connection handler needs to route one request.
+struct Router {
+    registry: Arc<ModelRegistry>,
+    /// One queue per model, indexed by model id.
+    queues: Vec<Arc<BatchQueue>>,
+    stats: Arc<ServerStats>,
+}
+
+/// A bound server: listener + model registry + knobs. Splitting bind
+/// from run lets callers learn the ephemeral port and grab the stats
+/// handle before the (blocking) accept loop starts.
 pub struct Server {
     listener: TcpListener,
-    engine: Arc<Engine>,
+    registry: Arc<ModelRegistry>,
     cfg: ServeConfig,
-    stats: Arc<Stats>,
+    stats: Arc<ServerStats>,
 }
 
 impl Server {
-    pub fn bind(engine: Arc<Engine>, addr: &str, cfg: ServeConfig) -> Result<Server> {
+    /// Bind a multi-model server. Registry id 0 is the default model
+    /// serving protocol-v1 clients.
+    pub fn bind(registry: Arc<ModelRegistry>, addr: &str, cfg: ServeConfig) -> Result<Server> {
         cfg.validate()?;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let stats = Arc::new(ServerStats::new(&registry));
         Ok(Server {
             listener,
-            engine,
+            registry,
             cfg,
-            stats: Arc::new(Stats::default()),
+            stats,
         })
+    }
+
+    /// Bind a single-model server (the pre-v2 shape): wraps the engine
+    /// in a one-entry registry named after its topology.
+    pub fn bind_single(engine: Arc<Engine>, addr: &str, cfg: ServeConfig) -> Result<Server> {
+        Server::bind(Arc::new(ModelRegistry::single(engine)?), addr, cfg)
     }
 
     /// Actual bound address (use after binding port 0).
@@ -330,8 +534,13 @@ impl Server {
     }
 
     /// Live statistics handle, valid before/during/after `run`.
-    pub fn stats(&self) -> Arc<Stats> {
+    pub fn stats(&self) -> Arc<ServerStats> {
         self.stats.clone()
+    }
+
+    /// The hosted models.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.registry.clone()
     }
 
     /// Run the accept loop. Blocks until `cfg.max_conns` connections
@@ -339,30 +548,49 @@ impl Server {
     /// queued work is drained before returning.
     pub fn run(self) -> Result<()> {
         let workers = self.cfg.resolved_workers();
-        let pool = Arc::new(InferencePool::new(self.engine.clone(), workers));
-        let queue = Arc::new(BatchQueue::new(self.cfg.queue_images));
-        let stats = self.stats.clone();
+        let pool = Arc::new(InferencePool::with_scratch_dims(
+            workers,
+            self.registry.scratch_dims(),
+        ));
+        let addr = self
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
         println!(
-            "aquant-serve: model {} on {} ({} classes, {} workers, max-batch {}, wait {}us)",
-            self.engine.topo.name,
-            self.local_addr()
-                .map(|a| a.to_string())
-                .unwrap_or_else(|_| "?".into()),
-            self.engine.topo.n_classes,
+            "aquant-serve: {} model(s) on {addr} ({} workers, max-batch {}, wait {}us)",
+            self.registry.len(),
             workers,
             self.cfg.max_batch,
             self.cfg.batch_wait_us,
         );
-        // The batcher is a plain (non-scoped) thread over Arc'd state:
-        // it must outlive the connection scope below, which joins all
-        // handlers before we signal shutdown.
-        let batcher = {
-            let (q, p, s) = (queue.clone(), pool.clone(), stats.clone());
+        // Per-model queue + batcher. Batchers are plain (non-scoped)
+        // threads over Arc'd state: they must outlive the connection
+        // scope below, which joins all handlers before we signal
+        // shutdown.
+        let mut queues = Vec::with_capacity(self.registry.len());
+        let mut batchers = Vec::with_capacity(self.registry.len());
+        for (id, entry) in self.registry.iter() {
+            println!(
+                "aquant-serve:   id {id} = {} ({} f32/img, {} classes)",
+                entry.name,
+                entry.engine.img_elems(),
+                entry.engine.topo.n_classes,
+            );
+            let queue = Arc::new(BatchQueue::new(self.cfg.queue_images));
+            let (q, p, e) = (queue.clone(), pool.clone(), entry.engine.clone());
+            let s = self.stats.model(id).expect("stats per model").clone();
             let max_batch = self.cfg.max_batch;
             let wait = Duration::from_micros(self.cfg.batch_wait_us);
-            std::thread::spawn(move || run_batcher(&q, &p, &s, max_batch, wait))
+            batchers.push(std::thread::spawn(move || {
+                run_batcher(&q, &p, &e, &s, max_batch, wait)
+            }));
+            queues.push(queue);
+        }
+        let router = Router {
+            registry: self.registry.clone(),
+            queues,
+            stats: self.stats.clone(),
         };
-        let img_elems = self.engine.img_elems();
         let listener_dead = std::thread::scope(|scope| {
             let mut seen = 0usize;
             let mut accept_errs = 0u32;
@@ -390,10 +618,9 @@ impl Server {
                     }
                 };
                 accept_errs = 0;
-                let q = queue.clone();
-                let s = stats.clone();
+                let r = &router;
                 scope.spawn(move || {
-                    if let Err(e) = handle(stream, img_elems, &q, &s) {
+                    if let Err(e) = handle(stream, r) {
                         eprintln!("aquant-serve: connection error: {e:#}");
                     }
                 });
@@ -406,11 +633,13 @@ impl Server {
             }
             false
         });
-        // All handlers have returned; drain the queue and stop.
-        queue.shutdown();
-        batcher
-            .join()
-            .map_err(|_| anyhow!("batcher thread panicked"))?;
+        // All handlers have returned; drain every queue and stop.
+        for q in &router.queues {
+            q.shutdown();
+        }
+        for b in batchers {
+            b.join().map_err(|_| anyhow!("batcher thread panicked"))?;
+        }
         if listener_dead {
             bail!("accept loop abandoned after repeated listener errors");
         }
@@ -418,9 +647,41 @@ impl Server {
     }
 }
 
+/// Build a [`ModelRegistry`] from parsed `--model` specs with the
+/// build-appropriate manifest path: quantized engines via PJRT
+/// calibration when the `pjrt` feature is on, full-precision
+/// `nearest:W32A32` loading otherwise (synthetic specs are pure Rust in
+/// both). This is the single entry point `aquant serve` and
+/// `examples/serve.rs` share — `iters`/`verbose` only affect
+/// calibration and are ignored in non-pjrt builds.
+#[cfg(feature = "pjrt")]
+pub fn registry_from_specs(
+    specs: &[ModelSpec],
+    artifacts_dir: &str,
+    iters: Option<u32>,
+    verbose: bool,
+) -> Result<ModelRegistry> {
+    let mut qb = crate::exp::cell::QuantManifestBuilder::new(artifacts_dir, iters, verbose);
+    ModelRegistry::from_specs(specs, |spec| qb.build(spec))
+}
+
+/// See the `pjrt` variant above; without the feature, manifest specs
+/// are served full-precision via [`crate::nn::loader::FpManifestBuilder`].
+#[cfg(not(feature = "pjrt"))]
+pub fn registry_from_specs(
+    specs: &[ModelSpec],
+    artifacts_dir: &str,
+    _iters: Option<u32>,
+    _verbose: bool,
+) -> Result<ModelRegistry> {
+    let mut fp = crate::nn::loader::FpManifestBuilder::new(artifacts_dir);
+    ModelRegistry::from_specs(specs, |spec| fp.build(spec))
+}
+
 fn run_batcher(
     queue: &BatchQueue,
     pool: &InferencePool,
+    engine: &Arc<Engine>,
     stats: &Stats,
     max_batch: usize,
     wait: Duration,
@@ -442,7 +703,7 @@ fn run_batcher(
             flat
         };
         let t0 = Instant::now();
-        let result = pool.classify_flat(Arc::new(flat), n);
+        let result = pool.classify_flat(engine, Arc::new(flat), n);
         match result {
             Ok(preds) => {
                 stats.observe_batch(n, t0.elapsed().as_micros() as u64);
@@ -465,21 +726,35 @@ fn run_batcher(
     }
 }
 
-/// Per-connection loop: parse requests, enqueue, await the batcher's
-/// reply, answer. Any protocol error closes just this connection.
-fn handle(mut stream: TcpStream, img_elems: usize, queue: &BatchQueue, stats: &Stats) -> Result<()> {
+/// Per-connection loop: sniff + parse requests, route to the model's
+/// queue, await the batcher's reply, answer. Any protocol error closes
+/// just this connection.
+fn handle(mut stream: TcpStream, router: &Router) -> Result<()> {
     loop {
-        let mut hdr = [0u8; 4];
-        match stream.read_exact(&mut hdr) {
-            Ok(()) => {}
-            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+        let hdr = match read_request_header(&mut stream) {
+            Ok(None) => return Ok(()),
+            Ok(Some(h)) => h,
             Err(e) => return Err(e.into()),
+        };
+        if let RequestHeader::V2 { version, .. } = hdr {
+            if version != PROTO_VERSION {
+                router.stats.bad_version.fetch_add(1, Ordering::Relaxed);
+                bail!("unsupported protocol version {version}");
+            }
         }
-        let n = u32::from_le_bytes(hdr) as usize;
+        let model_id = hdr.model_id();
+        let Some(entry) = router.registry.get(model_id) else {
+            router.stats.unknown_model.fetch_add(1, Ordering::Relaxed);
+            bail!("unknown model id {model_id}");
+        };
+        let stats = router.stats.model(model_id).expect("stats per model");
+        let queue = &router.queues[model_id as usize];
+        let n = hdr.n() as usize;
         if n == 0 || n > MAX_REQ_IMAGES {
             stats.rejected.fetch_add(1, Ordering::Relaxed);
             bail!("bad batch size {n}");
         }
+        let img_elems = entry.engine.img_elems();
         // Stream the payload in, decoding each chunk straight to f32:
         // allocation tracks bytes actually received (a bare header costs
         // ~64KB here, not the full payload up front), and there is never
@@ -526,25 +801,48 @@ fn handle(mut stream: TcpStream, img_elems: usize, queue: &BatchQueue, stats: &S
     }
 }
 
-/// Client helper (used by the serve example and tests): one request over
-/// a fresh connection.
+/// Client helper (used by the serve example and tests): one v1 request
+/// over a fresh connection (answered by the default model).
 pub fn classify_remote(addr: &str, images: &[f32], n: usize) -> Result<Vec<u32>> {
     let mut stream = TcpStream::connect(addr)?;
     classify_on(&mut stream, images, n)
 }
 
-/// One request/response exchange on an existing connection (clients
+/// One v2 request over a fresh connection, routed to `model_id`.
+pub fn classify_remote_v2(addr: &str, model_id: u16, images: &[f32], n: usize) -> Result<Vec<u32>> {
+    let mut stream = TcpStream::connect(addr)?;
+    classify_on_v2(&mut stream, model_id, images, n)
+}
+
+/// One v1 request/response exchange on an existing connection (clients
 /// that pipeline requests reuse the stream).
 pub fn classify_on(stream: &mut TcpStream, images: &[f32], n: usize) -> Result<Vec<u32>> {
-    let mut out = Vec::with_capacity(4 + images.len() * 4);
-    out.extend_from_slice(&(n as u32).to_le_bytes());
+    let hdr = (n as u32).to_le_bytes();
+    exchange(stream, &hdr, images)
+}
+
+/// One v2 request/response exchange on an existing connection. v1 and
+/// v2 requests may be interleaved freely on one stream.
+pub fn classify_on_v2(
+    stream: &mut TcpStream,
+    model_id: u16,
+    images: &[f32],
+    n: usize,
+) -> Result<Vec<u32>> {
+    let hdr = encode_header_v2(model_id, n as u32);
+    exchange(stream, &hdr, images)
+}
+
+fn exchange(stream: &mut TcpStream, hdr: &[u8], images: &[f32]) -> Result<Vec<u32>> {
+    let mut out = Vec::with_capacity(hdr.len() + images.len() * 4);
+    out.extend_from_slice(hdr);
     for v in images {
         out.extend_from_slice(&v.to_le_bytes());
     }
     stream.write_all(&out)?;
-    let mut hdr = [0u8; 4];
-    stream.read_exact(&mut hdr)?;
-    let m = u32::from_le_bytes(hdr) as usize;
+    let mut rhdr = [0u8; 4];
+    stream.read_exact(&mut rhdr)?;
+    let m = u32::from_le_bytes(rhdr) as usize;
     let mut buf = vec![0u8; m * 4];
     stream.read_exact(&mut buf)?;
     Ok(buf
@@ -596,6 +894,54 @@ mod tests {
         assert!(r.contains("batches 2"), "{r}");
         assert!(r.contains("8:1"), "{r}");
         assert!(r.contains("16:1"), "{r}");
+    }
+
+    #[test]
+    fn header_v1_roundtrip() {
+        let h = RequestHeader::V1 { n: 77 };
+        let bytes = h.encode();
+        assert_eq!(bytes.len(), 4);
+        let got = read_request_header(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got, h);
+        assert_eq!(got.model_id(), 0);
+        assert_eq!(got.n(), 77);
+    }
+
+    #[test]
+    fn header_v2_roundtrip() {
+        let h = RequestHeader::V2 {
+            version: PROTO_VERSION,
+            model_id: 3,
+            n: 4096,
+        };
+        let bytes = h.encode();
+        assert_eq!(bytes.len(), V2_HEADER_LEN);
+        assert_eq!(&bytes[..4], &MAGIC);
+        assert_eq!(bytes[..], encode_header_v2(3, 4096)[..]);
+        let got = read_request_header(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got, h);
+        assert_eq!(got.model_id(), 3);
+    }
+
+    #[test]
+    fn header_eof_and_truncation() {
+        // empty stream = clean end of connection
+        assert_eq!(read_request_header(&mut std::io::empty()).unwrap(), None);
+        // EOF inside the 4-byte sniff window also reads as clean end
+        // (matches the pre-v2 server's header handling)
+        assert_eq!(read_request_header(&mut &MAGIC[..2]).unwrap(), None);
+        // but EOF after a complete magic word is a truncated v2 frame
+        let full = encode_header_v2(1, 5);
+        for cut in 4..V2_HEADER_LEN {
+            let err = read_request_header(&mut &full[..cut]).unwrap_err();
+            assert_eq!(err.kind(), ErrorKind::UnexpectedEof, "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn magic_cannot_be_a_valid_v1_header() {
+        let as_v1 = u32::from_le_bytes(MAGIC) as usize;
+        assert!(as_v1 > MAX_REQ_IMAGES, "sniffing would be ambiguous");
     }
 
     #[test]

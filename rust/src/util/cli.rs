@@ -1,16 +1,21 @@
 //! Minimal CLI argument parsing (clap is unavailable offline).
 //!
 //! Supports `aquant <subcommand> [--flag value] [--bool-flag] positional...`.
+//! Flags may repeat (`--model a --model b`): every occurrence is kept in
+//! order. Scalar accessors read the **last** occurrence (so a repeated
+//! scalar flag behaves like "last one wins"); [`Args::multi_flag`]
+//! returns them all (multi-model serving routes on this).
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-/// Parsed command line: subcommand, flags, positionals.
+/// Parsed command line: subcommand, flags (every occurrence, in order),
+/// positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: String,
-    pub flags: BTreeMap<String, String>,
+    pub flags: BTreeMap<String, Vec<String>>,
     pub positional: Vec<String>,
 }
 
@@ -19,7 +24,7 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
         let mut it = raw.into_iter().peekable();
         let subcommand = it.next().unwrap_or_default();
-        let mut flags = BTreeMap::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut positional = Vec::new();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
@@ -27,11 +32,17 @@ impl Args {
                     bail!("bare -- not supported");
                 }
                 if let Some((k, v)) = name.split_once('=') {
-                    flags.insert(k.to_string(), v.to_string());
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    flags.insert(name.to_string(), it.next().unwrap());
+                    flags
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(it.next().unwrap());
                 } else {
-                    flags.insert(name.to_string(), "true".to_string());
+                    flags
+                        .entry(name.to_string())
+                        .or_default()
+                        .push("true".to_string());
                 }
             } else {
                 positional.push(a);
@@ -49,31 +60,38 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
-    /// String flag with default.
+    /// String flag with default (last occurrence wins).
     pub fn str_flag(&self, name: &str, default: &str) -> String {
-        self.flags
-            .get(name)
-            .cloned()
+        self.str_flag_opt(name)
+            .map(str::to_string)
             .unwrap_or_else(|| default.to_string())
     }
 
     /// Optional string flag (None when absent) — lets callers tell
     /// "flag omitted" apart from "flag set to the default's value".
     pub fn str_flag_opt(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeated flag, in command-line order
+    /// (empty slice when absent).
+    pub fn multi_flag(&self, name: &str) -> &[String] {
+        self.flags.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     /// Required string flag.
     pub fn req_flag(&self, name: &str) -> Result<String> {
-        self.flags
-            .get(name)
-            .cloned()
+        self.str_flag_opt(name)
+            .map(str::to_string)
             .ok_or_else(|| anyhow!("missing required flag --{name}"))
     }
 
     /// Numeric flag with default.
     pub fn num_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
-        match self.flags.get(name) {
+        match self.str_flag_opt(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
@@ -83,7 +101,7 @@ impl Args {
 
     /// Boolean flag (present or explicit true/false).
     pub fn bool_flag(&self, name: &str) -> bool {
-        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+        matches!(self.str_flag_opt(name), Some("true") | Some("1"))
     }
 }
 
@@ -116,6 +134,28 @@ mod tests {
         assert_eq!(a.positional, vec!["extra"]);
         assert_eq!(a.str_flag_opt("model"), Some("resnet10s"));
         assert_eq!(a.str_flag_opt("workers"), None);
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence_in_order() {
+        let a = Args::parse(v(&[
+            "serve",
+            "--model",
+            "a=synth:tiny",
+            "--workers",
+            "2",
+            "--model=b=synth:bench",
+            "--model",
+            "c",
+        ]))
+        .unwrap();
+        assert_eq!(a.multi_flag("model"), &["a=synth:tiny", "b=synth:bench", "c"]);
+        // scalar accessors see the last occurrence
+        assert_eq!(a.str_flag_opt("model"), Some("c"));
+        assert_eq!(a.req_flag("model").unwrap(), "c");
+        // absent flag: empty slice, no panic
+        assert!(a.multi_flag("nope").is_empty());
+        assert_eq!(a.num_flag::<usize>("workers", 0).unwrap(), 2);
     }
 
     #[test]

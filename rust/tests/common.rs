@@ -1,0 +1,81 @@
+//! Shared scaffolding for the serving integration suites
+//! (`serve_roundtrip.rs`, `multi_model.rs`): server startup on an
+//! ephemeral port, random payloads, sequential-engine expectations, and
+//! the closed-connection assertion. Included via `mod common;` from
+//! each suite (not a test target itself — Cargo.toml declares targets
+//! explicitly with autotests off).
+#![allow(dead_code)] // each suite uses its own subset
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use aquant::config::ServeConfig;
+use aquant::nn::engine::Engine;
+use aquant::nn::registry::ModelRegistry;
+use aquant::nn::synth;
+use aquant::server::{Server, ServerStats};
+use aquant::util::rng::Rng;
+
+/// Tiny synthetic model with learned borders on every layer, so the
+/// full quantized hot path is what's being served.
+pub fn synth_engine(seed: u64) -> Arc<Engine> {
+    let mut rng = Rng::new(seed);
+    let (topo, weights) = synth::tiny_model(&mut rng);
+    Arc::new(synth::engine_with_random_borders(
+        &topo, &weights, &mut rng, true, true,
+    ))
+}
+
+/// Bind an ephemeral-port server over `registry` and run it on its own
+/// thread; returns the address, the live stats handle, and the join
+/// handle (resolves once `cfg.max_conns` connections have completed).
+pub fn start(
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+) -> (SocketAddr, Arc<ServerStats>, JoinHandle<anyhow::Result<()>>) {
+    let srv = Server::bind(registry, "127.0.0.1:0", cfg).expect("bind ephemeral");
+    let addr = srv.local_addr().expect("local addr");
+    let stats = srv.stats();
+    let handle = std::thread::spawn(move || srv.run());
+    (addr, stats, handle)
+}
+
+/// [`start`] for the single-model (pre-v2) server shape.
+pub fn start_single(
+    engine: Arc<Engine>,
+    cfg: ServeConfig,
+) -> (SocketAddr, Arc<ServerStats>, JoinHandle<anyhow::Result<()>>) {
+    start(
+        Arc::new(ModelRegistry::single(engine).expect("valid engine")),
+        cfg,
+    )
+}
+
+pub fn random_images(rng: &mut Rng, n: usize, img_elems: usize) -> Vec<f32> {
+    (0..n * img_elems).map(|_| rng.normal()).collect()
+}
+
+/// Sequential-engine predictions for a flat batch — the bit-identity
+/// reference every served answer is checked against.
+pub fn expected(engine: &Engine, images: &[f32], n: usize) -> Vec<u32> {
+    let elems = engine.img_elems();
+    let refs: Vec<&[f32]> = (0..n).map(|i| &images[i * elems..(i + 1) * elems]).collect();
+    engine
+        .classify_batch(&refs)
+        .unwrap()
+        .iter()
+        .map(|&c| c as u32)
+        .collect()
+}
+
+/// Assert the server closed this connection without answering (the
+/// required reaction to a malformed/unroutable request).
+pub fn expect_closed(mut s: TcpStream) {
+    let mut b = [0u8; 1];
+    match s.read(&mut b) {
+        Ok(0) | Err(_) => {} // server closed the connection
+        Ok(_) => panic!("server answered a bad request"),
+    }
+}

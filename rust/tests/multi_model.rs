@@ -1,0 +1,225 @@
+//! Multi-model serving integration tests: ≥2 synthetic models of
+//! different shapes behind one TCP server and ONE shared worker pool.
+//! (Shared scaffolding in `common.rs`.)
+//!
+//! The acceptance invariant: for concurrent mixed-model traffic, every
+//! served prediction is bit-identical to the named model's sequential
+//! `Engine::classify_batch`, v1 clients keep being served by the
+//! default model, and per-model stats/queues stay independent.
+
+mod common;
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use aquant::config::ServeConfig;
+use aquant::nn::engine::Engine;
+use aquant::nn::registry::ModelRegistry;
+use aquant::nn::synth;
+use aquant::server::{
+    classify_on, classify_on_v2, classify_remote, classify_remote_v2, encode_header_v2, MAGIC,
+};
+use aquant::util::rng::Rng;
+
+use common::{expect_closed, expected, random_images, start};
+
+/// Two models with different input dims and class counts: tiny
+/// (3x8x8 -> 5 classes) and bench (3x16x16 -> 10 classes), both with
+/// learned borders so the full quantized hot path is served.
+fn two_model_registry() -> (Arc<ModelRegistry>, Vec<Arc<Engine>>) {
+    let a = Arc::new(synth::engine_from_spec("tiny", 11).unwrap());
+    let b = Arc::new(synth::engine_from_spec("bench", 22).unwrap());
+    assert_ne!(a.img_elems(), b.img_elems(), "test needs heterogeneous dims");
+    let engines = vec![a.clone(), b.clone()];
+    let reg = ModelRegistry::new(vec![("tiny".into(), a), ("bench".into(), b)]).unwrap();
+    (Arc::new(reg), engines)
+}
+
+#[test]
+fn interleaved_mixed_model_traffic_is_bit_identical() {
+    let (registry, engines) = two_model_registry();
+    let (n_clients, reqs_per_client, batch) = (6usize, 4usize, 3usize);
+    let cfg = ServeConfig {
+        workers: 3,
+        max_batch: 8,
+        batch_wait_us: 300,
+        max_conns: Some(n_clients),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(registry, cfg);
+
+    // Even clients exercise v1 (default model), odd clients v2 model 1;
+    // every client also interleaves a v2 request to the *other* model on
+    // the same connection, so one stream mixes models and framings.
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let engines = engines.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut rng = Rng::new(7000 + c as u64);
+            let primary = (c % 2) as u16;
+            let other = 1 - primary;
+            for r in 0..reqs_per_client {
+                let eng = &engines[primary as usize];
+                let images = random_images(&mut rng, batch, eng.img_elems());
+                let got = if primary == 0 && r % 2 == 0 {
+                    classify_on(&mut stream, &images, batch).unwrap() // v1 path
+                } else {
+                    classify_on_v2(&mut stream, primary, &images, batch).unwrap()
+                };
+                assert_eq!(got, expected(eng, &images, batch), "client {c} req {r}");
+
+                let eng = &engines[other as usize];
+                let images = random_images(&mut rng, 2, eng.img_elems());
+                let got = classify_on_v2(&mut stream, other, &images, 2).unwrap();
+                assert_eq!(got, expected(eng, &images, 2), "client {c} other-model req {r}");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    server.join().unwrap().unwrap();
+
+    // Per-model accounting: each model saw every client once per round.
+    let per_client_imgs = reqs_per_client * batch + reqs_per_client * 2;
+    let total: u64 = (n_clients * per_client_imgs) as u64;
+    let m0 = stats.model(0).unwrap();
+    let m1 = stats.model(1).unwrap();
+    assert_eq!(stats.total_images(), total);
+    assert!(m0.images.load(Ordering::Relaxed) > 0);
+    assert!(m1.images.load(Ordering::Relaxed) > 0);
+    assert_eq!(
+        stats.total_requests(),
+        (n_clients * reqs_per_client * 2) as u64
+    );
+    assert_eq!(stats.total_rejected(), 0);
+    let report = stats.report();
+    assert!(report.contains("model 0 tiny:"), "{report}");
+    assert!(report.contains("model 1 bench:"), "{report}");
+}
+
+#[test]
+fn v1_clients_get_the_default_model() {
+    let (registry, engines) = two_model_registry();
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_conns: Some(2),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(registry, cfg);
+    let a = addr.to_string();
+
+    let mut rng = Rng::new(31);
+    // bare v1 header -> model 0 (tiny), even though model 1 exists
+    let images = random_images(&mut rng, 3, engines[0].img_elems());
+    let got = classify_remote(&a, &images, 3).unwrap();
+    assert_eq!(got, expected(&engines[0], &images, 3));
+    // explicit v2 to model 0 gives the same answers as v1
+    let got2 = classify_remote_v2(&a, 0, &images, 3).unwrap();
+    assert_eq!(got, got2);
+
+    server.join().unwrap().unwrap();
+    let m0 = stats.model(0).unwrap();
+    assert_eq!(m0.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.model(1).unwrap().requests.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn unknown_model_and_bad_version_close_only_that_connection() {
+    let (registry, engines) = two_model_registry();
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_conns: Some(5),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(registry, cfg);
+    let a = addr.to_string();
+
+    // unknown model id (registry has ids 0 and 1)
+    let mut s = TcpStream::connect(&a).unwrap();
+    s.write_all(&encode_header_v2(9, 1)).unwrap();
+    expect_closed(s);
+
+    // unsupported version: hand-build magic + version 1
+    let mut s = TcpStream::connect(&a).unwrap();
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(&MAGIC);
+    hdr.extend_from_slice(&1u16.to_le_bytes());
+    hdr.extend_from_slice(&0u16.to_le_bytes());
+    hdr.extend_from_slice(&1u32.to_le_bytes());
+    s.write_all(&hdr).unwrap();
+    expect_closed(s);
+
+    // v2 header truncated mid-frame
+    let mut s = TcpStream::connect(&a).unwrap();
+    s.write_all(&encode_header_v2(1, 2)[..7]).unwrap();
+    drop(s);
+
+    // the server still answers both models on fresh connections
+    let mut rng = Rng::new(5);
+    for id in [0u16, 1] {
+        let eng = &engines[id as usize];
+        let images = random_images(&mut rng, 2, eng.img_elems());
+        let got = classify_remote_v2(&a, id, &images, 2).unwrap();
+        assert_eq!(got, expected(eng, &images, 2), "model {id} after bad conns");
+    }
+
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.unknown_model.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.bad_version.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.total_rejected(), 2);
+    assert_eq!(stats.total_requests(), 2);
+}
+
+#[test]
+fn many_models_shared_pool_round_robin() {
+    // Four models (two shapes x two seeds): same-shape models must
+    // still route to *their own* weights — distinguishable predictions
+    // come from distinct seeds, and identity is checked per model.
+    let mut entries = Vec::new();
+    let mut engines = Vec::new();
+    for (i, (kind, seed)) in [("tiny", 1u64), ("tiny", 2), ("bench", 3), ("rand", 4)]
+        .iter()
+        .enumerate()
+    {
+        let e = Arc::new(synth::engine_from_spec(kind, *seed).unwrap());
+        engines.push(e.clone());
+        entries.push((format!("m{i}"), e));
+    }
+    let registry = Arc::new(ModelRegistry::new(entries).unwrap());
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 16,
+        batch_wait_us: 100,
+        max_conns: Some(1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(registry, cfg);
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut rng = Rng::new(88);
+    for round in 0..3 {
+        for id in 0..4u16 {
+            let eng = &engines[id as usize];
+            let images = random_images(&mut rng, 2, eng.img_elems());
+            let got = classify_on_v2(&mut stream, id, &images, 2).unwrap();
+            assert_eq!(got, expected(eng, &images, 2), "round {round} model {id}");
+        }
+    }
+    drop(stream);
+    server.join().unwrap().unwrap();
+    for id in 0..4u16 {
+        assert_eq!(
+            stats.model(id).unwrap().requests.load(Ordering::Relaxed),
+            3,
+            "model {id}"
+        );
+    }
+}

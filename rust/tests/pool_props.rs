@@ -2,7 +2,8 @@
 //! topologies, border parameters, batch sizes, and worker counts,
 //! pooled execution is bit-identical to the sequential engine — in both
 //! `FusionMode`s — and the scratch-buffer forward path is bit-identical
-//! to the allocating one.
+//! to the allocating one, including when one scratch (or one pool) is
+//! shared across models of different shapes.
 
 use std::sync::Arc;
 
@@ -30,8 +31,8 @@ fn pool_matches_sequential_for_random_topologies() {
         let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
         let want = engine.classify_batch(&refs).unwrap();
         for workers in [1usize, 2, 7] {
-            let pool = InferencePool::new(engine.clone(), workers);
-            let got = pool.classify_batch(&refs).unwrap();
+            let pool = InferencePool::new(workers);
+            let got = pool.classify_batch(&engine, &refs).unwrap();
             assert_eq!(
                 got, want,
                 "workers={workers} n={n} fuse={fuse_en} b2={b2_en} fusion={:?}",
@@ -69,6 +70,30 @@ fn scratch_forward_is_bit_identical_to_allocating_forward() {
 }
 
 #[test]
+fn one_scratch_serves_alternating_random_models() {
+    // The multi-model serving invariant at its core: a single
+    // EngineScratch alternates between two independently random models
+    // (different dims, borders, block structures) and every forward is
+    // bit-identical to a fresh-scratch run. Catches any exact-size or
+    // stale-state assumption in the reusable buffers.
+    prop::check("shared scratch across models", 96, |rng| {
+        let (t1, w1) = synth::random_model(rng);
+        let (t2, w2) = synth::random_model(rng);
+        let e1 = synth::engine_with_random_borders(&t1, &w1, rng, true, true);
+        let e2 = synth::engine_with_random_borders(&t2, &w2, rng, rng.bernoulli(0.5), true);
+        let mut shared = EngineScratch::new();
+        for _ in 0..2 {
+            for e in [&e1, &e2] {
+                let image = prop::vec_f32(rng, e.img_elems(), -1.0, 3.0);
+                let want = e.forward(&image, None).unwrap();
+                let got = e.forward_scratch(&image, &mut shared).unwrap();
+                assert_eq!(got, want.as_slice());
+            }
+        }
+    });
+}
+
+#[test]
 fn pool_shard_split_never_changes_results() {
     // Same batch, every worker count from 1 to n+2: shard boundaries
     // move across all positions, results must not.
@@ -83,8 +108,36 @@ fn pool_shard_split_never_changes_results() {
         let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
         let want = engine.classify_batch(&refs).unwrap();
         for workers in 1..=n + 2 {
-            let pool = InferencePool::new(engine.clone(), workers);
-            assert_eq!(pool.classify_batch(&refs).unwrap(), want, "workers={workers}");
+            let pool = InferencePool::new(workers);
+            assert_eq!(
+                pool.classify_batch(&engine, &refs).unwrap(),
+                want,
+                "workers={workers}"
+            );
+        }
+    });
+}
+
+#[test]
+fn one_pool_interleaves_random_models_bit_identically() {
+    // Two random models through one pool, interleaved: per-worker
+    // scratch reshapes between models mid-stream and results must stay
+    // bit-identical to each model's sequential engine.
+    prop::check("pool shared across models", 48, |rng| {
+        let (t1, w1) = synth::random_model(rng);
+        let (t2, w2) = synth::random_model(rng);
+        let e1 = Arc::new(synth::engine_with_random_borders(&t1, &w1, rng, true, true));
+        let e2 = Arc::new(synth::engine_with_random_borders(&t2, &w2, rng, true, true));
+        let dims = e1.scratch_dims().union(e2.scratch_dims());
+        let pool = InferencePool::with_scratch_dims(1 + rng.below(4), dims);
+        for _ in 0..2 {
+            for e in [&e1, &e2] {
+                let n = 1 + rng.below(5);
+                let images = prop::vec_f32(rng, n * e.img_elems(), -1.0, 3.0);
+                let refs: Vec<&[f32]> = images.chunks_exact(e.img_elems()).collect();
+                let want = e.classify_batch(&refs).unwrap();
+                assert_eq!(pool.classify_batch(e, &refs).unwrap(), want);
+            }
         }
     });
 }

@@ -1,0 +1,131 @@
+//! Protocol framing properties: v1/v2 request headers survive an
+//! encode → decode round trip for arbitrary model ids, versions, and
+//! image counts; truncation at every byte boundary behaves as specified
+//! (clean EOF inside the 4-byte sniff window, `UnexpectedEof` inside a
+//! started v2 frame); and byte-sniffing can never misroute a valid v1
+//! request.
+
+use std::io::ErrorKind;
+
+use aquant::server::{
+    encode_header_v2, read_request_header, RequestHeader, MAGIC, MAX_REQ_IMAGES, PROTO_VERSION,
+    V2_HEADER_LEN,
+};
+use aquant::util::prop;
+
+#[test]
+fn v1_header_roundtrips_for_any_n() {
+    prop::check_default("v1 encode/decode", |rng| {
+        let n = rng.next_u64() as u32;
+        let h = RequestHeader::V1 { n };
+        let bytes = h.encode();
+        assert_eq!(bytes.len(), 4);
+        // 1 in 2^32 random n values spells MAGIC and legitimately reads
+        // as the start of a v2 frame — such an n can never pass the
+        // <= MAX_REQ_IMAGES range check, so the server rejects it under
+        // either reading. Round-trip only the unambiguous majority.
+        if bytes == MAGIC {
+            return;
+        }
+        let mut r = &bytes[..];
+        let got = read_request_header(&mut r).unwrap().unwrap();
+        assert_eq!(got, h);
+        assert_eq!(got.model_id(), 0, "v1 always routes to the default model");
+        assert!(r.is_empty(), "decode must consume exactly the header");
+    });
+}
+
+#[test]
+fn v2_header_roundtrips_for_any_fields() {
+    prop::check_default("v2 encode/decode", |rng| {
+        let version = rng.next_u64() as u16;
+        let model_id = rng.next_u64() as u16;
+        let n = rng.next_u64() as u32;
+        let h = RequestHeader::V2 {
+            version,
+            model_id,
+            n,
+        };
+        let bytes = h.encode();
+        assert_eq!(bytes.len(), V2_HEADER_LEN);
+        assert_eq!(&bytes[..4], &MAGIC);
+        let mut r = &bytes[..];
+        let got = read_request_header(&mut r).unwrap().unwrap();
+        assert_eq!(got, h);
+        assert_eq!(got.model_id(), model_id);
+        assert_eq!(got.n(), n);
+        assert!(r.is_empty());
+        // the convenience encoder agrees with RequestHeader::encode at
+        // the current protocol version
+        if version == PROTO_VERSION {
+            assert_eq!(bytes, encode_header_v2(model_id, n).to_vec());
+        }
+    });
+}
+
+#[test]
+fn decode_leaves_reader_at_payload_start() {
+    // Streamed decoding depends on the header reader consuming exactly
+    // the header bytes: whatever follows must still be readable.
+    prop::check_default("header consumes exactly itself", |rng| {
+        let payload: Vec<u8> = (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect();
+        let h = if rng.bernoulli(0.5) {
+            RequestHeader::V1 {
+                n: 1 + rng.below(MAX_REQ_IMAGES) as u32,
+            }
+        } else {
+            RequestHeader::V2 {
+                version: PROTO_VERSION,
+                model_id: rng.next_u64() as u16,
+                n: 1 + rng.below(MAX_REQ_IMAGES) as u32,
+            }
+        };
+        let mut bytes = h.encode();
+        bytes.extend_from_slice(&payload);
+        let mut r = &bytes[..];
+        let got = read_request_header(&mut r).unwrap().unwrap();
+        assert_eq!(got, h);
+        assert_eq!(r, &payload[..]);
+    });
+}
+
+#[test]
+fn truncation_at_every_boundary_is_well_defined() {
+    prop::check_default("truncated headers", |rng| {
+        let h = RequestHeader::V2 {
+            version: rng.next_u64() as u16,
+            model_id: rng.next_u64() as u16,
+            n: rng.next_u64() as u32,
+        };
+        let bytes = h.encode();
+        for cut in 0..bytes.len() {
+            let mut r = &bytes[..cut];
+            match read_request_header(&mut r) {
+                // EOF before the sniff window fills = clean end of a
+                // pipelined connection
+                Ok(None) => assert!(cut < 4, "cut={cut} misread as clean EOF"),
+                // EOF after the magic word = truncated v2 frame
+                Err(e) => {
+                    assert!(cut >= 4, "cut={cut} errored inside the sniff window");
+                    assert_eq!(e.kind(), ErrorKind::UnexpectedEof, "cut={cut}");
+                }
+                Ok(Some(got)) => panic!("cut={cut} decoded {got:?} from a truncated frame"),
+            }
+        }
+    });
+}
+
+#[test]
+fn valid_v1_requests_are_never_sniffed_as_v2() {
+    // The whole backward-compat story rests on this: every n the v1
+    // protocol accepts (1..=4096) produces a header whose first bytes
+    // differ from MAGIC.
+    for n in 1..=MAX_REQ_IMAGES as u32 {
+        let bytes = RequestHeader::V1 { n }.encode();
+        assert_ne!(bytes[..], MAGIC[..], "n={n} collides with the magic word");
+        let got = read_request_header(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got, RequestHeader::V1 { n });
+    }
+    // and the magic word itself, read as v1, is out of protocol range
+    assert!(u32::from_le_bytes(MAGIC) as usize > MAX_REQ_IMAGES);
+}

@@ -1,58 +1,23 @@
 //! Integration tests for the serving path: real TCP on an ephemeral
 //! port, a tiny synthetic model (no artifacts needed), concurrent
-//! clients, and the protocol's failure modes.
+//! clients, and the protocol's failure modes. (Multi-model routing has
+//! its own suite in `multi_model.rs`; shared scaffolding in `common.rs`.)
 //!
 //! The core invariant: dynamic batching + the worker pool must not
 //! change results — every served prediction equals the sequential
 //! `Engine::classify_batch` bit-for-bit.
 
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpStream};
+mod common;
+
+use std::io::Write;
+use std::net::TcpStream;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
-use std::thread::JoinHandle;
 
 use aquant::config::ServeConfig;
-use aquant::nn::engine::Engine;
-use aquant::nn::synth;
-use aquant::server::{classify_on, classify_remote, Server, Stats};
+use aquant::server::{classify_on, classify_remote};
 use aquant::util::rng::Rng;
 
-fn synth_engine(seed: u64) -> Arc<Engine> {
-    let mut rng = Rng::new(seed);
-    let (topo, weights) = synth::tiny_model(&mut rng);
-    // Learned borders on every layer so the full quantized hot path is
-    // what's being served.
-    Arc::new(synth::engine_with_random_borders(
-        &topo, &weights, &mut rng, true, true,
-    ))
-}
-
-fn start(
-    engine: Arc<Engine>,
-    cfg: ServeConfig,
-) -> (SocketAddr, Arc<Stats>, JoinHandle<anyhow::Result<()>>) {
-    let srv = Server::bind(engine, "127.0.0.1:0", cfg).expect("bind ephemeral");
-    let addr = srv.local_addr().expect("local addr");
-    let stats = srv.stats();
-    let handle = std::thread::spawn(move || srv.run());
-    (addr, stats, handle)
-}
-
-fn random_images(rng: &mut Rng, n: usize, img_elems: usize) -> Vec<f32> {
-    (0..n * img_elems).map(|_| rng.normal()).collect()
-}
-
-fn expected(engine: &Engine, images: &[f32], n: usize) -> Vec<u32> {
-    let elems = engine.img_elems();
-    let refs: Vec<&[f32]> = (0..n).map(|i| &images[i * elems..(i + 1) * elems]).collect();
-    engine
-        .classify_batch(&refs)
-        .unwrap()
-        .iter()
-        .map(|&c| c as u32)
-        .collect()
-}
+use common::{expect_closed, expected, random_images, start_single, synth_engine};
 
 #[test]
 fn concurrent_clients_match_sequential_engine() {
@@ -65,7 +30,7 @@ fn concurrent_clients_match_sequential_engine() {
         max_conns: Some(n_clients + 1),
         ..ServeConfig::default()
     };
-    let (addr, stats, server) = start(engine.clone(), cfg);
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
     let img_elems = engine.img_elems();
 
     let mut clients = Vec::new();
@@ -92,15 +57,17 @@ fn concurrent_clients_match_sequential_engine() {
     assert_eq!(got, expected(&engine, &images, 2));
 
     server.join().unwrap().unwrap();
+    let m = stats.default_model();
     let served = (n_clients * reqs_per_client * batch + 2) as u64;
-    assert_eq!(stats.images.load(Ordering::Relaxed), served);
+    assert_eq!(m.images.load(Ordering::Relaxed), served);
     assert_eq!(
-        stats.requests.load(Ordering::Relaxed),
+        m.requests.load(Ordering::Relaxed),
         (n_clients * reqs_per_client + 1) as u64
     );
-    assert!(stats.batches.load(Ordering::Relaxed) >= 1);
+    assert_eq!(stats.total_requests(), m.requests.load(Ordering::Relaxed));
+    assert!(m.batches.load(Ordering::Relaxed) >= 1);
     // coalescing can only shrink the batch count, never lose images
-    assert!(stats.batches.load(Ordering::Relaxed) <= stats.requests.load(Ordering::Relaxed));
+    assert!(m.batches.load(Ordering::Relaxed) <= m.requests.load(Ordering::Relaxed));
 }
 
 #[test]
@@ -113,14 +80,15 @@ fn single_image_zero_wait_roundtrip() {
         max_conns: Some(1),
         ..ServeConfig::default()
     };
-    let (addr, stats, server) = start(engine.clone(), cfg);
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
     let mut rng = Rng::new(6);
     let images = random_images(&mut rng, 1, engine.img_elems());
     let got = classify_remote(&addr.to_string(), &images, 1).unwrap();
     assert_eq!(got, expected(&engine, &images, 1));
     server.join().unwrap().unwrap();
-    assert_eq!(stats.batches.load(Ordering::Relaxed), 1);
-    assert_eq!(stats.batch_hist[0].load(Ordering::Relaxed), 1);
+    let m = stats.default_model();
+    assert_eq!(m.batches.load(Ordering::Relaxed), 1);
+    assert_eq!(m.batch_hist[0].load(Ordering::Relaxed), 1);
 }
 
 #[test]
@@ -136,7 +104,7 @@ fn nan_payload_is_answered_and_does_not_kill_workers() {
         max_conns: Some(3),
         ..ServeConfig::default()
     };
-    let (addr, _stats, server) = start(engine.clone(), cfg);
+    let (addr, _stats, server) = start_single(engine.clone(), cfg);
     let a = addr.to_string();
     let img_elems = engine.img_elems();
 
@@ -167,17 +135,9 @@ fn malformed_requests_do_not_wedge_server() {
         max_conns: Some(5),
         ..ServeConfig::default()
     };
-    let (addr, stats, server) = start(engine.clone(), cfg);
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
     let a = addr.to_string();
     let img_elems = engine.img_elems();
-
-    let expect_closed = |mut s: TcpStream| {
-        let mut b = [0u8; 1];
-        match s.read(&mut b) {
-            Ok(0) | Err(_) => {} // server closed the connection
-            Ok(_) => panic!("server answered a malformed request"),
-        }
-    };
 
     // n = 0
     let mut s = TcpStream::connect(&a).unwrap();
@@ -204,6 +164,9 @@ fn malformed_requests_do_not_wedge_server() {
     }
 
     server.join().unwrap().unwrap();
-    assert_eq!(stats.rejected.load(Ordering::Relaxed), 2);
-    assert_eq!(stats.requests.load(Ordering::Relaxed), 2);
+    let m = stats.default_model();
+    // bad-n rejections are attributed to the resolved (default) model
+    assert_eq!(m.rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.total_rejected(), 2);
+    assert_eq!(m.requests.load(Ordering::Relaxed), 2);
 }

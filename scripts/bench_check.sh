@@ -1,37 +1,91 @@
 #!/usr/bin/env bash
 # Serving-path perf guard: run the serve_throughput bench, emit
-# BENCH_serve.json at the repo root, and fail if the 4-worker speedup
-# over 1 worker on a 64-image batch drops below the floor (default
-# 1.5x, override with BENCH_SPEEDUP_FLOOR). Future PRs append their
-# BENCH_serve.json to the perf trajectory.
+# BENCH_serve.json at the repo root, and fail if
+#   (a) the 4-worker speedup over 1 worker on a 64-image batch drops
+#       below the floor (default 1.5x, override BENCH_SPEEDUP_FLOOR), or
+#   (b) absolute throughput (4 workers, 64-image batch) regresses more
+#       than 20% below the best prior entry in bench_history/ (override
+#       BENCH_REGRESSION_FRAC, e.g. 0.3 for 30%).
+# Each passing run is appended to bench_history/ as serve_NNN.json, so
+# the directory is the PR-over-PR perf trajectory.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 OUT="${1:-BENCH_serve.json}"
 FLOOR="${BENCH_SPEEDUP_FLOOR:-1.5}"
+REGRESSION="${BENCH_REGRESSION_FRAC:-0.2}"
+HIST_DIR="bench_history"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_check: cargo not on PATH; skipping ($OUT not written)" >&2
     exit 0
 fi
 if [ ! -f Cargo.toml ]; then
-    # The repo has shipped without a manifest since the seed (the xla
-    # crate closure is environment-provided); authoring one — with a
-    # [[bench]] name = "serve_throughput" harness = false entry — is a
-    # prerequisite tracked in ROADMAP.md.
     echo "bench_check: no Cargo.toml at repo root; skipping ($OUT not written)" >&2
     exit 0
 fi
 
 BENCH_JSON="$OUT" cargo bench --offline --bench serve_throughput
 
-python3 - "$OUT" "$FLOOR" <<'EOF'
-import json, sys
-blob = json.load(open(sys.argv[1]))
-floor = float(sys.argv[2])
+python3 - "$OUT" "$FLOOR" "$REGRESSION" "$HIST_DIR" <<'EOF'
+import glob, json, os, shutil, sys
+
+out, floor, regression, hist_dir = (
+    sys.argv[1], float(sys.argv[2]), float(sys.argv[3]), sys.argv[4]
+)
+blob = json.load(open(out))
+
+def ips(blob, workers=4, batch=64):
+    for row in blob.get("rows", []):
+        if row["workers"] == workers and row["batch"] == batch:
+            return row["images_per_sec"]
+    return None
+
 speedup = blob["speedup_w4_vs_w1_b64"]
 print(f"bench_check: speedup w4/w1 @ batch 64 = {speedup:.2f}x (floor {floor}x)")
 if speedup < floor:
     sys.exit(f"bench_check: FAIL - below the {floor}x floor")
-print("bench_check: OK")
+
+cur = ips(blob)
+if cur is None:
+    sys.exit("bench_check: FAIL - no (workers=4, batch=64) row in the blob")
+
+# Compare against the best prior trajectory entry (absolute throughput
+# moves with the hardware; the 20% window absorbs machine noise while
+# still catching a real serving-path regression).
+prior = []
+for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
+    try:
+        v = ips(json.load(open(path)))
+    except (ValueError, KeyError):
+        print(f"bench_check: warning - unreadable history entry {path}", file=sys.stderr)
+        continue
+    if v is not None:
+        prior.append((v, path))
+if prior:
+    best, best_path = max(prior)
+    print(
+        f"bench_check: w4/b64 throughput {cur:.0f} img/s vs best prior "
+        f"{best:.0f} img/s ({os.path.basename(best_path)}, {len(prior)} entries)"
+    )
+    if cur < best * (1.0 - regression):
+        sys.exit(
+            f"bench_check: FAIL - throughput regressed >{regression:.0%} "
+            f"vs {best_path} ({cur:.0f} < {best * (1.0 - regression):.0f} img/s)"
+        )
+else:
+    print("bench_check: no prior bench_history entries; starting the trajectory")
+
+os.makedirs(hist_dir, exist_ok=True)
+# next index = max existing + 1 (a plain count would re-use an index —
+# and silently overwrite an entry — after any gap in the sequence)
+taken = []
+for path in glob.glob(os.path.join(hist_dir, "serve_*.json")):
+    stem = os.path.basename(path)[len("serve_"):-len(".json")]
+    if stem.isdigit():
+        taken.append(int(stem))
+n = max(taken) + 1 if taken else 0
+dst = os.path.join(hist_dir, f"serve_{n:03d}.json")
+shutil.copyfile(out, dst)
+print(f"bench_check: OK (appended {dst})")
 EOF

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Repo-wide check entry point: runs whatever test layers the current
+# environment can support and reports what it skipped.
+#   - python tests (L1/L2 parity) when pytest is importable
+#   - cargo build --release && cargo test -q (tier-1) when a Rust
+#     toolchain is present (Cargo.toml ships in-repo; the default
+#     feature set is pure Rust, so no network access is needed beyond
+#     the anyhow crate)
+# Exit code is non-zero if any layer that *ran* failed.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+failed=0
+ran=0
+
+if command -v python3 >/dev/null 2>&1 && python3 -c 'import pytest' >/dev/null 2>&1; then
+    echo "check: running python tests (python/tests)"
+    ran=1
+    # test_kernel.py / test_quant.py import `hypothesis`, which some
+    # environments (this container included) do not ship; skipping them
+    # at collection keeps a clean tree green. They run where it exists.
+    ignores=()
+    if ! python3 -c 'import hypothesis' >/dev/null 2>&1; then
+        echo "check: hypothesis unavailable; skipping test_kernel.py + test_quant.py" >&2
+        ignores=(--ignore=python/tests/test_kernel.py --ignore=python/tests/test_quant.py)
+    fi
+    # ${arr[@]+...} guard: expanding an empty array under `set -u` is an
+    # error on bash < 4.4 (stock macOS)
+    python3 -m pytest python/tests -q ${ignores[@]+"${ignores[@]}"} || failed=1
+else
+    echo "check: pytest unavailable; skipping python tests" >&2
+fi
+
+if command -v cargo >/dev/null 2>&1; then
+    echo "check: running tier-1 (cargo build --release && cargo test -q)"
+    ran=1
+    (cargo build --release --offline && cargo test -q --offline) || failed=1
+else
+    echo "check: cargo not on PATH; skipping rust build/tests" >&2
+fi
+
+if [ "$ran" -eq 0 ]; then
+    echo "check: WARNING - no test layer could run in this environment" >&2
+fi
+exit "$failed"
