@@ -13,7 +13,12 @@
 //! synthetic specs (`synth:tiny`, `b=synth:bench:7`, ...) run anywhere;
 //! manifest specs need artifacts — quantized ones (`mobiles:nearest:W4A4`)
 //! additionally need a build with `--features pjrt`, while full-precision
-//! `MODEL:nearest:W32A32` works in every build.
+//! `MODEL:nearest:W32A32` works in every build. Each spec may carry a
+//! per-model serving-policy tail, e.g.
+//! `'a=synth:tiny;weight=3,b=synth:bench;max_batch=8'` (quote it —
+//! `;` is a shell separator) — weights set each model's fair share of
+//! pool admission (weighted deficit-round-robin), the other keys
+//! override the global batching knobs per model.
 //!
 //! Defaults: "a=synth:tiny,b=synth:bench", 32-image requests,
 //! 8 requests x 4 clients, auto workers, max-batch 64, 200us batch wait.
@@ -66,6 +71,9 @@ fn main() -> Result<()> {
     let srv = Server::bind(registry, "127.0.0.1:0", cfg)?;
     let addr = srv.local_addr()?;
     let stats = srv.stats(); // live handle, before the accept loop starts
+    for (spec, policy) in specs.iter().zip(srv.policies()) {
+        println!("policy {}: {}", spec.name, policy.describe());
+    }
     let server = std::thread::spawn(move || srv.run());
 
     // Load generators: `clients` connections, `n_req` pipelined batched

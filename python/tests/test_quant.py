@@ -1,5 +1,12 @@
 """L2 quantization math: STE forwards, soft/hard weight rounding, scale
-search, border properties."""
+search, border properties.
+
+`hypothesis` is optional: environments without it skip this module at
+collection instead of erroring (see test_kernel.py)."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 
 import hypothesis.strategies as st
 import jax

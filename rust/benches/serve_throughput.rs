@@ -1,15 +1,19 @@
 //! Serving-path throughput: pooled classification at worker counts
 //! 1/2/4 and batch sizes 1/8/64 over a synthetic model with learned
-//! borders on every layer (the serving hot loop).
+//! borders on every layer (the serving hot loop), plus a mixed-model
+//! row — tiny and bench batches interleaved through ONE shared pool,
+//! the multi-model serving shape the fair scheduler admits into.
 //!
 //! Prints human rows plus a machine-readable JSON blob; set
 //! `BENCH_JSON=path` to write the blob to a file instead
-//! (`scripts/bench_check.sh` uses this to emit BENCH_serve.json and
-//! guard the 4-worker speedup floor).
+//! (`scripts/bench_check.sh` uses this to emit BENCH_serve.json, guard
+//! the 4-worker speedup floor, and track the mixed row in
+//! `bench_history/`).
 
 use std::sync::Arc;
 
 use aquant::nn::pool::InferencePool;
+use aquant::nn::registry::ModelRegistry;
 use aquant::nn::synth;
 use aquant::util::bench::{bench, default_budget};
 use aquant::util::rng::Rng;
@@ -54,6 +58,60 @@ fn main() {
     let speedup = ips(4, 64) / ips(1, 64);
     println!("speedup workers 4 vs 1 @ batch 64: {speedup:.2}x");
 
+    // Mixed-model row: a 32-image tiny batch AND a 32-image bench batch
+    // submitted concurrently (non-blocking `submit`, awaited together)
+    // through ONE 4-worker pool sized for both models (registry
+    // max-dims scratch) — the shape weighted multi-model admission
+    // produces, with shards of both models genuinely interleaved across
+    // the workers. Tracks cross-model scratch reshaping and dispatch
+    // overhead that single-model rows (and back-to-back blocking calls)
+    // can't see.
+    let tiny = Arc::new(synth::engine_from_spec("tiny", 42).expect("tiny spec"));
+    let mixed_ips = {
+        let registry = ModelRegistry::new(vec![
+            ("tiny".into(), tiny.clone()),
+            ("bench".into(), engine.clone()),
+        ])
+        .expect("mixed registry");
+        let pool = InferencePool::for_registry(4, &registry);
+        let mixed_batch = 32usize;
+        let tiny_imgs: Vec<f32> = (0..mixed_batch * tiny.img_elems())
+            .map(|_| rng.range_f32(-1.0, 3.0))
+            .collect();
+        let tiny_flat = Arc::new(tiny_imgs);
+        let bench_flat = Arc::new(images[..mixed_batch * img_elems].to_vec());
+        let r = bench("pool/mixed2/batch32+32", budget, || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let t = tx.clone();
+            pool.submit(
+                0,
+                &tiny,
+                tiny_flat.clone(),
+                mixed_batch,
+                Box::new(move |r| {
+                    let _ = t.send(r);
+                }),
+            )
+            .unwrap();
+            pool.submit(
+                1,
+                &engine,
+                bench_flat.clone(),
+                mixed_batch,
+                Box::new(move |r| {
+                    let _ = tx.send(r);
+                }),
+            )
+            .unwrap();
+            let a = rx.recv().unwrap().unwrap();
+            let b = rx.recv().unwrap().unwrap();
+            std::hint::black_box((a, b));
+        });
+        let ips = (2 * mixed_batch) as f64 / r.median.as_secs_f64();
+        println!("{}  {:>12.0} images/s (2 models, concurrent)", r.row(), ips);
+        ips
+    };
+
     let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"rows\": [\n");
     for (i, (w, b, v, us)) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -63,7 +121,8 @@ fn main() {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"speedup_w4_vs_w1_b64\": {speedup:.3}\n}}\n"
+        "  ],\n  \"mixed_w4_b32x2_images_per_sec\": {mixed_ips:.1},\n  \
+         \"speedup_w4_vs_w1_b64\": {speedup:.3}\n}}\n"
     ));
     match std::env::var("BENCH_JSON") {
         Ok(path) if !path.is_empty() => {

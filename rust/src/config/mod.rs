@@ -211,15 +211,79 @@ impl Default for CalibConfig {
     }
 }
 
-/// One model a serving process hosts: a routing name plus where the
-/// engine comes from. Parsed from repeated `--model` flags and threaded
-/// end to end (CLI → registry → protocol-v2 routing); the first spec
-/// becomes model id 0, the default model that also serves v1 clients.
+/// Per-model serving-policy overrides parsed from a `--model` spec's
+/// `;key=value` tail. `None` fields fall back to the server-level
+/// defaults (the global `--max-batch/--batch-wait-us/--queue-images`
+/// knobs, weight 1) when resolved into a
+/// [`crate::server::sched::Policy`] at bind time. Spec-side only —
+/// bounds are enforced at resolution, except `weight=0`, which is
+/// rejected here too so the CLI fails before engines are built.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PolicyOverrides {
+    pub max_batch: Option<usize>,
+    pub batch_wait_us: Option<u64>,
+    pub queue_images: Option<usize>,
+    pub weight: Option<u32>,
+}
+
+impl PolicyOverrides {
+    /// Parse the `;key=value` pairs trailing a model spec. Known keys:
+    /// `max_batch`, `batch_wait_us`, `queue_images`, `weight`.
+    /// Unknown keys, duplicates, bad numbers, and `weight=0` are
+    /// errors (`spec` is quoted in messages).
+    pub fn parse_pairs<'a>(
+        pairs: impl Iterator<Item = &'a str>,
+        spec: &str,
+    ) -> Result<PolicyOverrides> {
+        fn num<T: std::str::FromStr>(spec: &str, k: &str, v: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("model spec {spec:?}: {k}={v:?} is not a valid number"))
+        }
+        let mut out = PolicyOverrides::default();
+        for pair in pairs {
+            let (k, v) = crate::util::cli::split_kv(pair)
+                .map_err(|e| anyhow::anyhow!("model spec {spec:?}: {e}"))?;
+            let dup = match k {
+                "max_batch" => out.max_batch.replace(num(spec, k, v)?).is_some(),
+                "batch_wait_us" => out.batch_wait_us.replace(num(spec, k, v)?).is_some(),
+                "queue_images" => out.queue_images.replace(num(spec, k, v)?).is_some(),
+                "weight" => {
+                    let w: u32 = num(spec, k, v)?;
+                    if w == 0 {
+                        bail!("model spec {spec:?}: weight=0 would starve the model (use >= 1)");
+                    }
+                    out.weight.replace(w).is_some()
+                }
+                other => bail!(
+                    "model spec {spec:?}: unknown policy key {other:?} \
+                     (known: max_batch, batch_wait_us, queue_images, weight)"
+                ),
+            };
+            if dup {
+                bail!("model spec {spec:?}: duplicate policy key {k:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when no knob is overridden (the spec had no policy tail).
+    pub fn is_empty(&self) -> bool {
+        *self == PolicyOverrides::default()
+    }
+}
+
+/// One model a serving process hosts: a routing name, where the engine
+/// comes from, and its serving-policy overrides. Parsed from repeated
+/// `--model` flags and threaded end to end (CLI → registry → protocol-v2
+/// routing → fair scheduler); the first spec becomes model id 0, the
+/// default model that also serves v1 clients.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     /// Registry / routing name (unique per server).
     pub name: String,
     pub source: ModelSource,
+    /// Per-model serving knobs from the spec's `;key=value` tail.
+    pub policy: PolicyOverrides,
 }
 
 /// Where a hosted model's engine comes from.
@@ -240,22 +304,28 @@ impl ModelSpec {
     /// Parse one `--model` spec:
     ///
     /// ```text
-    ///   [NAME=]synth:KIND[:SEED]        KIND = tiny | bench | rand
-    ///   [NAME=]MODEL[:METHOD:BITS]      manifest model; METHOD/BITS
-    ///                                   fall back to --method/--bits
+    ///   [NAME=]synth:KIND[:SEED][;key=value...]   KIND = tiny | bench | rand
+    ///   [NAME=]MODEL[:METHOD:BITS][;key=value...] manifest model; METHOD/BITS
+    ///                                             fall back to --method/--bits
     /// ```
     ///
     /// `NAME` defaults to the synth kind / manifest model name. The
     /// `synth:` prefix is reserved (a manifest model cannot be named
-    /// "synth").
+    /// "synth"). The `;key=value` tail sets this model's serving
+    /// policy ([`PolicyOverrides`]): `;max_batch=`, `;batch_wait_us=`,
+    /// `;queue_images=`, `;weight=` — anything unset inherits the
+    /// server-level knobs.
     pub fn parse(
         spec: &str,
         default_method: Option<Method>,
         default_bits: Option<Bits>,
     ) -> Result<ModelSpec> {
-        let (name, rest) = match spec.split_once('=') {
+        let mut fields = spec.split(';');
+        let base = fields.next().unwrap_or("");
+        let policy = PolicyOverrides::parse_pairs(fields, spec)?;
+        let (name, rest) = match base.split_once('=') {
             Some((n, r)) => (Some(n), r),
-            None => (None, spec),
+            None => (None, base),
         };
         if let Some(n) = name {
             if n.is_empty() {
@@ -283,6 +353,7 @@ impl ModelSpec {
             return Ok(ModelSpec {
                 name: name.unwrap_or(&kind).to_string(),
                 source: ModelSource::Synth { kind, seed },
+                policy,
             });
         }
         let mut it = rest.split(':');
@@ -309,6 +380,7 @@ impl ModelSpec {
         Ok(ModelSpec {
             name: name.unwrap_or(&model).to_string(),
             source: ModelSource::Manifest { model, method, bits },
+            policy,
         })
     }
 
@@ -405,6 +477,12 @@ impl ServeConfig {
     /// `Instant::now() + wait` can never overflow.
     pub const MAX_BATCH_WAIT_US: u64 = 60_000_000;
 
+    /// Upper bound on `max_batch` (global and per-model): 16x the
+    /// protocol's per-request cap — coalescing beyond it wins nothing,
+    /// and the bound keeps the fair scheduler's quantum arithmetic
+    /// (`quantum * weight`) far from integer overflow.
+    pub const MAX_MAX_BATCH: usize = 65_536;
+
     /// Upper bound on explicit worker counts — far above any core count
     /// this serves on, low enough that thread spawning cannot fail
     /// halfway through startup.
@@ -413,6 +491,13 @@ impl ServeConfig {
     pub fn validate(&self) -> Result<()> {
         if self.max_batch == 0 {
             bail!("--max-batch must be >= 1");
+        }
+        if self.max_batch > Self::MAX_MAX_BATCH {
+            bail!(
+                "--max-batch ({}) must be <= {}",
+                self.max_batch,
+                Self::MAX_MAX_BATCH
+            );
         }
         if self.queue_images < self.max_batch {
             bail!(
@@ -574,6 +659,23 @@ mod tests {
         );
         assert!(ServeConfig::from_args(&a(&["serve", "--workers", "1000000"])).is_err());
         assert!(ServeConfig::from_args(&a(&["serve", "--workers", "1024"])).is_ok());
+        // max-batch is bounded so quantum*weight arithmetic can't overflow
+        assert!(ServeConfig::from_args(&a(&[
+            "serve",
+            "--max-batch",
+            "65537",
+            "--queue-images",
+            "65537"
+        ]))
+        .is_err());
+        assert!(ServeConfig::from_args(&a(&[
+            "serve",
+            "--max-batch",
+            "65536",
+            "--queue-images",
+            "65536"
+        ]))
+        .is_ok());
         assert!(ServeConfig::from_args(&a(&[
             "serve",
             "--max-batch",
@@ -642,6 +744,59 @@ mod tests {
         assert!(ModelSpec::parse("", m, b).is_err());
         assert!(ModelSpec::parse("synth", m, b).is_err(), "reserved");
         assert!(ModelSpec::parse("a:b:c:d", m, b).is_err(), "trailing");
+    }
+
+    #[test]
+    fn model_spec_policy_tail_parsing() {
+        // no tail -> empty overrides (server defaults apply)
+        let s = ModelSpec::parse("synth:tiny", None, None).unwrap();
+        assert!(s.policy.is_empty());
+
+        // full tail, any order, on a renamed synth spec with a seed
+        let s = ModelSpec::parse(
+            "hot=synth:bench:7;weight=3;max_batch=32;batch_wait_us=50;queue_images=256",
+            None,
+            None,
+        )
+        .unwrap();
+        assert_eq!(s.name, "hot");
+        assert_eq!(
+            s.source,
+            ModelSource::Synth {
+                kind: "bench".into(),
+                seed: 7
+            }
+        );
+        assert_eq!(
+            s.policy,
+            PolicyOverrides {
+                max_batch: Some(32),
+                batch_wait_us: Some(50),
+                queue_images: Some(256),
+                weight: Some(3),
+            }
+        );
+        assert!(!s.policy.is_empty());
+
+        // manifest specs take the same tail
+        let s = ModelSpec::parse("prod=resnet10s:qdrop:W2A2;weight=4", None, None).unwrap();
+        assert_eq!(s.policy.weight, Some(4));
+        assert_eq!(s.policy.max_batch, None);
+
+        // rejections: unknown key, duplicate key, bad number, weight=0,
+        // malformed pair, empty pair
+        assert!(ModelSpec::parse("synth:tiny;turbo=1", None, None).is_err());
+        assert!(ModelSpec::parse("synth:tiny;weight=1;weight=2", None, None).is_err());
+        assert!(ModelSpec::parse("synth:tiny;max_batch=lots", None, None).is_err());
+        assert!(ModelSpec::parse("synth:tiny;weight=0", None, None).is_err());
+        assert!(ModelSpec::parse("synth:tiny;weight", None, None).is_err());
+        assert!(ModelSpec::parse("synth:tiny;", None, None).is_err());
+
+        // the tail must not leak into name/source parsing
+        let a = ModelSpec::parse("a=synth:tiny;weight=2", None, None).unwrap();
+        assert_eq!(a.name, "a");
+        let b = ModelSpec::parse("a=synth:tiny", None, None).unwrap();
+        assert_eq!(a.source, b.source);
     }
 
     #[test]

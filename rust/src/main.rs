@@ -68,7 +68,16 @@ serve hosts every --model SPEC behind one port and one worker pool
                                       pure Rust — no artifacts needed
        | [NAME=]MODEL[:METHOD:BITS]   calibrated manifest model; METHOD/
                                       BITS default to --method/--bits
-  e.g.  --model prod=mobiles:aquant:W4A4 --model canary=mobiles:qdrop:W4A4
+  Either form takes a per-model serving-policy tail `;key=value...`
+  (keys: max_batch, batch_wait_us, queue_images, weight); anything not
+  set inherits the server-level knobs below. weight (default 1) is the
+  model's fair share of worker-pool admission when several models are
+  backlogged (weighted deficit-round-robin — a weight-3 model gets 3
+  images admitted per 1 of a weight-1 model, so a hot model can no
+  longer starve a latency-sensitive one).
+  Quote specs with a policy tail — ';' is a shell separator.
+  e.g.  --model 'prod=mobiles:aquant:W4A4;weight=3' \
+        --model 'canary=mobiles:qdrop:W4A4;max_batch=8;batch_wait_us=0'
         --model a=synth:tiny --model b=synth:bench
 
 serve knobs: --workers (inference threads shared by all models; auto =

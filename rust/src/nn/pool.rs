@@ -10,6 +10,16 @@
 //! warm-up the per-image hot loop performs no allocation even when
 //! consecutive shards come from models of different shapes.
 //!
+//! Submission is **scheduler-driven**: [`InferencePool::submit`] is
+//! non-blocking — it shards the batch, tags every shard with its wire
+//! model id (per-model executed-image accounting lives here, where the
+//! work actually runs), and invokes a completion callback from the last
+//! finishing worker. This lets ONE fair-scheduler thread keep every
+//! model's admissions flowing without blocking on any single batch (see
+//! [`crate::server::sched`]). [`InferencePool::classify_flat`] is the
+//! blocking wrapper (submit + wait) used by benches, tests, and
+//! anything without a scheduler.
+//!
 //! Determinism: every image's forward pass is independent and the
 //! per-image code path is exactly [`Engine::classify_scratch`] — the
 //! same path the sequential [`Engine::classify_batch`] uses — so pooled
@@ -18,9 +28,12 @@
 //! tests pin this down.
 //!
 //! Built on `std` only (rayon/crossbeam are unavailable offline): jobs
-//! flow through an `mpsc` channel shared by workers behind a mutex, and
-//! each job carries its own reply sender.
+//! flow through an `mpsc` channel shared by workers behind a mutex.
+//! The channel is FIFO, so the order batches are submitted in is the
+//! order workers start them in — the fair scheduler's weighted
+//! interleaving survives all the way to the CPUs.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -28,25 +41,65 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, ensure, Result};
 
 use super::engine::{Engine, EngineScratch, ScratchDims};
+use super::registry::ModelRegistry;
+
+/// Completion callback for one submitted batch: predicted classes in
+/// image order, or the first shard error. Invoked exactly once, from
+/// the worker that finishes the batch's last shard.
+pub type BatchDone = Box<dyn FnOnce(Result<Vec<usize>, String>) + Send>;
+
+/// Shared state of one in-flight batch, assembled by its shards.
+struct BatchState {
+    /// Predictions in image order; shards fill disjoint ranges.
+    preds: Mutex<Vec<usize>>,
+    /// First shard error, if any (the whole batch fails).
+    err: Mutex<Option<String>>,
+    /// Shards still running; the worker that drops this to zero calls
+    /// `done`.
+    remaining: AtomicUsize,
+    done: Mutex<Option<BatchDone>>,
+}
+
+impl BatchState {
+    /// Record one finished shard; the last shard in resolves the batch.
+    fn complete(&self, start: usize, result: Result<Vec<usize>, String>) {
+        match result {
+            Ok(p) => {
+                let mut preds = self.preds.lock().unwrap();
+                preds[start..start + p.len()].copy_from_slice(&p);
+            }
+            Err(e) => {
+                let mut err = self.err.lock().unwrap();
+                err.get_or_insert(e);
+            }
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let done = self.done.lock().unwrap().take();
+            if let Some(done) = done {
+                let result = match self.err.lock().unwrap().take() {
+                    Some(e) => Err(e),
+                    None => Ok(std::mem::take(&mut *self.preds.lock().unwrap())),
+                };
+                done(result);
+            }
+        }
+    }
+}
 
 /// One contiguous shard of a batch, dispatched to a single worker.
 struct Shard {
     /// The engine this shard runs against (jobs carry their model; the
     /// pool owns none).
     engine: Arc<Engine>,
+    /// Wire model id, for per-model executed-image accounting.
+    model_id: u16,
     /// The whole batch, flattened (n · img_elems f32s), shared by ref-count.
     images: Arc<Vec<f32>>,
     img_elems: usize,
     /// Image index range [start, end) this worker classifies.
     start: usize,
     end: usize,
-    reply: Sender<ShardReply>,
-}
-
-struct ShardReply {
-    start: usize,
-    /// Predicted classes for the shard, or the first error hit.
-    preds: Result<Vec<usize>, String>,
+    batch: Arc<BatchState>,
 }
 
 /// Fixed-size, model-agnostic inference thread-pool.
@@ -55,6 +108,10 @@ pub struct InferencePool {
     /// Job channel; `None` once shutdown has begun (Drop).
     tx: Option<Sender<Shard>>,
     handles: Vec<JoinHandle<()>>,
+    /// Images successfully executed, by model id. Ids outside the
+    /// accounting range are counted nowhere (reads return 0 for them
+    /// too — writes and reads agree).
+    executed: Arc<Vec<AtomicU64>>,
 }
 
 impl InferencePool {
@@ -65,20 +122,35 @@ impl InferencePool {
 
     /// Spawn workers whose scratch is pre-reserved for `dims` (use the
     /// registry's max-dims union so the largest model's first image
-    /// doesn't pay reallocation).
+    /// doesn't pay reallocation). Accounting has a single model slot;
+    /// use [`InferencePool::for_registry`] for multi-model serving.
     pub fn with_scratch_dims(workers: usize, dims: ScratchDims) -> Self {
+        Self::build(workers, dims, 1)
+    }
+
+    /// Pool sized for a registry: scratch pre-reserved for the max-dims
+    /// union and one executed-images accounting slot per hosted model.
+    pub fn for_registry(workers: usize, registry: &ModelRegistry) -> Self {
+        Self::build(workers, registry.scratch_dims(), registry.len())
+    }
+
+    fn build(workers: usize, dims: ScratchDims, n_models: usize) -> Self {
         let workers = workers.max(1);
+        let executed: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_models.max(1)).map(|_| AtomicU64::new(0)).collect());
         let (tx, rx) = channel::<Shard>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let rx = rx.clone();
-            handles.push(std::thread::spawn(move || worker_loop(&rx, dims)));
+            let executed = executed.clone();
+            handles.push(std::thread::spawn(move || worker_loop(&rx, dims, &executed)));
         }
         InferencePool {
             workers,
             tx: Some(tx),
             handles,
+            executed,
         }
     }
 
@@ -86,20 +158,32 @@ impl InferencePool {
         self.workers
     }
 
-    /// Classify `n` images stored flat in `images` (n · img_elems f32s)
-    /// with `engine`. Returns per-image argmax classes, bit-identical to
-    /// the sequential [`Engine::classify_batch`]. Safe to call from many
-    /// threads at once (per-model batchers share one pool); each call
-    /// has its own reply channel.
-    pub fn classify_flat(
+    /// Images successfully executed for `model_id` (0 when the id is
+    /// outside the accounting range).
+    pub fn executed_images(&self, model_id: u16) -> u64 {
+        self.executed
+            .get(model_id as usize)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Submit `n` images stored flat in `images` (n · img_elems f32s)
+    /// for classification with `engine`, **without blocking**: the
+    /// batch is sharded across workers immediately and `done` is called
+    /// exactly once — with per-image argmax classes bit-identical to
+    /// the sequential [`Engine::classify_batch`], or the first shard
+    /// error — from the worker finishing the last shard. On error
+    /// return (empty/ragged batch, pool shut down) `done` has NOT been
+    /// called; the caller still owns the requests behind it.
+    pub fn submit(
         &self,
+        model_id: u16,
         engine: &Arc<Engine>,
         images: Arc<Vec<f32>>,
         n: usize,
-    ) -> Result<Vec<usize>> {
-        if n == 0 {
-            return Ok(Vec::new());
-        }
+        done: BatchDone,
+    ) -> Result<()> {
+        ensure!(n > 0, "empty batch submitted to pool");
         let img_elems = engine.img_elems();
         ensure!(
             images.len() == n * img_elems,
@@ -113,33 +197,56 @@ impl InferencePool {
             .ok_or_else(|| anyhow!("inference pool shut down"))?;
         let shards = self.workers.min(n);
         let chunk = (n + shards - 1) / shards;
-        let (rtx, rrx) = channel::<ShardReply>();
-        let mut sent = 0usize;
+        let n_shards = (n + chunk - 1) / chunk;
+        let batch = Arc::new(BatchState {
+            preds: Mutex::new(vec![0usize; n]),
+            err: Mutex::new(None),
+            remaining: AtomicUsize::new(n_shards),
+            done: Mutex::new(Some(done)),
+        });
         let mut start = 0usize;
         while start < n {
             let end = (start + chunk).min(n);
             tx.send(Shard {
                 engine: engine.clone(),
+                model_id,
                 images: images.clone(),
                 img_elems,
                 start,
                 end,
-                reply: rtx.clone(),
+                batch: batch.clone(),
             })
             .map_err(|_| anyhow!("inference pool workers gone"))?;
-            sent += 1;
             start = end;
         }
-        drop(rtx);
-        let mut out = vec![0usize; n];
-        for _ in 0..sent {
-            let r = rrx
-                .recv()
-                .map_err(|_| anyhow!("inference worker died mid-batch"))?;
-            let preds = r.preds.map_err(|e| anyhow!("inference worker: {e}"))?;
-            out[r.start..r.start + preds.len()].copy_from_slice(&preds);
+        Ok(())
+    }
+
+    /// Classify `n` images and block for the result: [`InferencePool::submit`]
+    /// plus a wait. Safe to call from many threads at once; each call
+    /// has its own reply channel. Accounting lands in model slot 0.
+    pub fn classify_flat(
+        &self,
+        engine: &Arc<Engine>,
+        images: Arc<Vec<f32>>,
+        n: usize,
+    ) -> Result<Vec<usize>> {
+        if n == 0 {
+            return Ok(Vec::new());
         }
-        Ok(out)
+        let (tx, rx) = channel();
+        self.submit(
+            0,
+            engine,
+            images,
+            n,
+            Box::new(move |r| {
+                let _ = tx.send(r);
+            }),
+        )?;
+        rx.recv()
+            .map_err(|_| anyhow!("inference workers died mid-batch"))?
+            .map_err(|e| anyhow!("inference worker: {e}"))
     }
 
     /// Convenience: classify a slice-of-slices batch (flattens once).
@@ -154,7 +261,9 @@ impl InferencePool {
 
 impl Drop for InferencePool {
     fn drop(&mut self) {
-        // Closing the channel unblocks every worker's recv with Err.
+        // Closing the channel unblocks every worker's recv with Err
+        // once the queued shards drain, so in-flight batches still
+        // complete (and their `done` callbacks run) before the join.
         self.tx.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -162,7 +271,7 @@ impl Drop for InferencePool {
     }
 }
 
-fn worker_loop(rx: &Mutex<Receiver<Shard>>, dims: ScratchDims) {
+fn worker_loop(rx: &Mutex<Receiver<Shard>>, dims: ScratchDims, executed: &[AtomicU64]) {
     let mut scratch = EngineScratch::with_dims(dims);
     loop {
         // Hold the lock only for the blocking recv, not while running
@@ -190,11 +299,20 @@ fn worker_loop(rx: &Mutex<Receiver<Shard>>, dims: ScratchDims) {
             Ok(preds)
         }))
         .unwrap_or_else(|_| Err("engine panicked on this shard".to_string()));
-        // The batch submitter may have bailed already; ignore send errors.
-        let _ = shard.reply.send(ShardReply {
-            start: shard.start,
-            preds,
-        });
+        if preds.is_ok() {
+            if let Some(c) = executed.get(shard.model_id as usize) {
+                c.fetch_add((shard.end - shard.start) as u64, Ordering::Relaxed);
+            }
+        }
+        // catch_unwind around the completion too: a panicking `done`
+        // callback must not kill the worker (the batch submitter sees a
+        // disconnected channel instead).
+        let start = shard.start;
+        let batch = shard.batch.clone();
+        drop(shard);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            batch.complete(start, preds);
+        }));
     }
 }
 
@@ -277,5 +395,84 @@ mod tests {
         let mut bad = images.clone();
         bad.pop();
         assert!(pool.classify_flat(&engine, Arc::new(bad), 2).is_err());
+    }
+
+    #[test]
+    fn async_submit_completes_and_accounts_per_model() {
+        use std::sync::mpsc::channel;
+        let (tiny, tiny_imgs, te) = setup(21, 6);
+        let mut rng = Rng::new(22);
+        let (topo, weights) = synth::bench_model(&mut rng);
+        let bench = Arc::new(synth::engine_with_random_borders(
+            &topo, &weights, &mut rng, true, true,
+        ));
+        let be = bench.img_elems();
+        let bench_imgs: Vec<f32> = (0..2 * be).map(|_| rng.normal()).collect();
+
+        let registry = ModelRegistry::new(vec![
+            ("tiny".into(), tiny.clone()),
+            ("bench".into(), bench.clone()),
+        ])
+        .unwrap();
+        let pool = InferencePool::for_registry(3, &registry);
+
+        // several overlapping async submissions, mixed models
+        let (tx, rx) = channel();
+        for rep in 0..2 {
+            let t = tx.clone();
+            pool.submit(
+                0,
+                &tiny,
+                Arc::new(tiny_imgs.clone()),
+                6,
+                Box::new(move |r| t.send((0u16, rep, r)).unwrap()),
+            )
+            .unwrap();
+            let t = tx.clone();
+            pool.submit(
+                1,
+                &bench,
+                Arc::new(bench_imgs.clone()),
+                2,
+                Box::new(move |r| t.send((1u16, rep, r)).unwrap()),
+            )
+            .unwrap();
+        }
+        drop(tx);
+        let tiny_refs: Vec<&[f32]> = tiny_imgs.chunks_exact(te).collect();
+        let bench_refs: Vec<&[f32]> = bench_imgs.chunks_exact(be).collect();
+        let want = [
+            tiny.classify_batch(&tiny_refs).unwrap(),
+            bench.classify_batch(&bench_refs).unwrap(),
+        ];
+        let mut seen = 0;
+        while let Ok((id, _rep, r)) = rx.recv() {
+            assert_eq!(r.unwrap(), want[id as usize], "model {id}");
+            seen += 1;
+        }
+        assert_eq!(seen, 4);
+        assert_eq!(pool.executed_images(0), 12);
+        assert_eq!(pool.executed_images(1), 4);
+        assert_eq!(pool.executed_images(7), 0, "out-of-range id reads 0");
+    }
+
+    #[test]
+    fn submit_rejects_empty_and_ragged_without_consuming_done() {
+        let (engine, images, _) = setup(23, 2);
+        let pool = InferencePool::new(1);
+        let called = Arc::new(AtomicUsize::new(0));
+        let mk = |c: &Arc<AtomicUsize>| {
+            let c = c.clone();
+            Box::new(move |_r: Result<Vec<usize>, String>| {
+                c.fetch_add(1, Ordering::SeqCst);
+            }) as BatchDone
+        };
+        assert!(pool
+            .submit(0, &engine, Arc::new(Vec::new()), 0, mk(&called))
+            .is_err());
+        let mut bad = images;
+        bad.pop();
+        assert!(pool.submit(0, &engine, Arc::new(bad), 2, mk(&called)).is_err());
+        assert_eq!(called.load(Ordering::SeqCst), 0);
     }
 }

@@ -18,17 +18,22 @@ use anyhow::{bail, Result};
 
 use super::engine::{Engine, ScratchDims};
 use super::synth;
-use crate::config::{ModelSource, ModelSpec};
+use crate::config::{ModelSource, ModelSpec, PolicyOverrides};
 
 /// Upper bound on hosted models: far above any deployment this serves,
 /// small enough that per-model queues/batchers/stats stay cheap. (The
 /// wire format would allow u16::MAX + 1.)
 pub const MAX_MODELS: usize = 1024;
 
-/// One hosted model: routing name + its engine.
+/// One hosted model: routing name + its engine + its serving-policy
+/// overrides (the `;key=value` tail of its `--model` spec). Overrides
+/// are resolved against the server-level defaults into a
+/// [`crate::server::sched::Policy`] when a server binds the registry —
+/// the registry itself stays server-config-agnostic.
 pub struct ModelEntry {
     pub name: String,
     pub engine: Arc<Engine>,
+    pub policy: PolicyOverrides,
 }
 
 /// Immutable set of models behind one server / worker pool. Ids are the
@@ -39,8 +44,21 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
-    /// Build and validate a registry. `entries` order assigns model ids.
+    /// Build and validate a registry. `entries` order assigns model
+    /// ids; every model keeps the server-default serving policy.
     pub fn new(entries: Vec<(String, Arc<Engine>)>) -> Result<ModelRegistry> {
+        ModelRegistry::with_policies(
+            entries
+                .into_iter()
+                .map(|(n, e)| (n, e, PolicyOverrides::default()))
+                .collect(),
+        )
+    }
+
+    /// [`ModelRegistry::new`] with per-model serving-policy overrides.
+    pub fn with_policies(
+        entries: Vec<(String, Arc<Engine>, PolicyOverrides)>,
+    ) -> Result<ModelRegistry> {
         if entries.is_empty() {
             bail!("model registry needs at least one model (id 0 serves v1 clients)");
         }
@@ -49,7 +67,7 @@ impl ModelRegistry {
         }
         let mut dims = ScratchDims::default();
         let mut out = Vec::with_capacity(entries.len());
-        for (name, engine) in entries {
+        for (name, engine, policy) in entries {
             if name.is_empty() {
                 bail!("model name must be non-empty");
             }
@@ -60,7 +78,11 @@ impl ModelRegistry {
                 .validate()
                 .map_err(|e| e.context(format!("registering model {name:?}")))?;
             dims = dims.union(engine.scratch_dims());
-            out.push(ModelEntry { name, engine });
+            out.push(ModelEntry {
+                name,
+                engine,
+                policy,
+            });
         }
         Ok(ModelRegistry {
             entries: out,
@@ -92,9 +114,9 @@ impl ModelRegistry {
                 ModelSource::Synth { kind, seed } => synth::engine_from_spec(kind, *seed)?,
                 ModelSource::Manifest { .. } => manifest_engine(spec)?,
             };
-            entries.push((spec.name.clone(), Arc::new(engine)));
+            entries.push((spec.name.clone(), Arc::new(engine), spec.policy.clone()));
         }
-        ModelRegistry::new(entries)
+        ModelRegistry::with_policies(entries)
     }
 
     pub fn len(&self) -> usize {
@@ -194,6 +216,23 @@ mod tests {
         })
         .unwrap_err();
         assert!(err.to_string().contains("no artifacts for m"), "{err}");
+    }
+
+    #[test]
+    fn entries_carry_policy_overrides() {
+        // plain `new` -> empty overrides (server defaults)
+        let reg = ModelRegistry::new(vec![("a".into(), engine(1))]).unwrap();
+        assert!(reg.get(0).unwrap().policy.is_empty());
+
+        // spec policy tails ride into the entries
+        let specs = vec![
+            ModelSpec::parse("a=synth:tiny;weight=3;max_batch=8", None, None).unwrap(),
+            ModelSpec::parse("b=synth:bench:7", None, None).unwrap(),
+        ];
+        let reg = ModelRegistry::from_specs(&specs, |_| unreachable!()).unwrap();
+        assert_eq!(reg.get(0).unwrap().policy.weight, Some(3));
+        assert_eq!(reg.get(0).unwrap().policy.max_batch, Some(8));
+        assert!(reg.get(1).unwrap().policy.is_empty());
     }
 
     #[test]

@@ -22,8 +22,8 @@
 //! mixing v1 and v2 freely — and the server answers in order. A request
 //! with a bad `n`, an unknown model id, or an unsupported version is
 //! rejected by closing the connection (counted in stats); a mid-stream
-//! EOF drops only that connection. Either way the accept loop and
-//! batchers keep serving other connections.
+//! EOF drops only that connection. Either way the accept loop and the
+//! scheduler keep serving other connections.
 //!
 //! # Architecture
 //!
@@ -32,30 +32,35 @@
 //!     └─ sniff v1/v2 header, resolve model id ──► per-model BatchQueue
 //!        push(Pending{images, reply})              (bounded, images-
 //!        blocks when full (backpressure)            counted, Mutex+Condvar)
-//!                                                    │ pop_batch(max_batch,
-//!                                                    │           batch_wait)
+//!                                                    │ poll / try_pop
 //!                                                    ▼
-//!                                         one batcher thread per model
-//!                  coalesces queued same-model requests — possibly from
-//!                  many connections — into one engine-sized batch, then
-//!                                                    │ classify_flat(engine)
+//!                               ONE fair-scheduler thread (sched.rs):
+//!              weighted deficit-round-robin over every model's queue —
+//!              each admission coalesces queued same-model requests into
+//!              one ≤ max_batch batch (per-model straggler deadlines),
+//!              admitted in weight proportion, throttled by an
+//!              in-flight-images cap
+//!                                                    │ submit(model_id, …)
 //!                                                    ▼
 //!                                       shared InferencePool (N workers,
-//!                                       model-agnostic per-worker scratch)
+//!                                       model-agnostic per-worker scratch;
+//!                                       completions answer the requests)
 //! ```
 //!
-//! Queues and batchers are **per model** so one model's straggler wait
-//! never delays another model's traffic; only the worker pool (the
-//! actual CPU) is shared. Jobs carry their `Arc<Engine>`, and worker
-//! scratch is pre-sized to the registry's max dims, so heterogeneous
-//! models reuse the same threads and buffers.
+//! Queues, policies, and straggler deadlines are **per model** so one
+//! model's wait never delays another model's traffic; only the worker
+//! pool (the actual CPU) is shared, and the [`sched::FairScheduler`]
+//! decides whose queued images reach it next. Jobs carry their
+//! `Arc<Engine>` plus their model id, and worker scratch is pre-sized
+//! to the registry's max dims, so heterogeneous models reuse the same
+//! threads and buffers.
 //!
-//! Batching cannot change results: every image's forward pass is
+//! Scheduling cannot change results: every image's forward pass is
 //! independent and pooled execution is bit-identical to the sequential
 //! engine (see `rust/tests/serve_roundtrip.rs`, `rust/tests/multi_model.rs`
 //! and `pool_props.rs`).
 //!
-//! # Knobs ([`ServeConfig`])
+//! # Knobs ([`ServeConfig`] defaults + per-model [`sched::Policy`])
 //!
 //! * `workers` — inference threads shared by all models (0 = cores − 1)
 //! * `max_batch` — images per engine batch; larger amortizes dispatch,
@@ -66,12 +71,19 @@
 //!   growing without limit. Payloads still being received are held
 //!   per-connection (streamed in, so allocation tracks bytes actually
 //!   read, capped by the 4096-image protocol limit).
+//! * `weight` (per model only, `--model ...;weight=N`) — fair share of
+//!   pool admission when several models are backlogged
+//!
+//! Every knob except `workers` can be overridden per model through the
+//! `--model NAME=SPEC;key=value...` grammar; the flags above set the
+//! server-level defaults.
 
-use std::collections::VecDeque;
+pub mod sched;
+
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -80,6 +92,10 @@ use crate::config::{ModelSpec, ServeConfig};
 use crate::nn::engine::Engine;
 use crate::nn::pool::InferencePool;
 use crate::nn::registry::ModelRegistry;
+
+pub use sched::{FairScheduler, Grant, Policy, MAX_WEIGHT};
+
+use sched::{BatchQueue, Doorbell, Pending, SchedCtx};
 
 /// Hard protocol cap on images per request.
 pub const MAX_REQ_IMAGES: usize = 4096;
@@ -188,10 +204,11 @@ pub fn read_request_header(stream: &mut impl Read) -> std::io::Result<Option<Req
 pub struct Stats {
     /// Completed (answered) requests.
     pub requests: AtomicU64,
-    /// Images executed through the engine (counted at batch execution,
+    /// Images executed through the engine (counted at batch completion,
     /// so live reads and `mean_batch` stay coherent).
     pub images: AtomicU64,
-    /// Engine time (µs) summed over executed batches.
+    /// Batch service time (µs; scheduler admission → pool completion)
+    /// summed over executed batches.
     pub total_us: AtomicU64,
     /// Successfully executed engine batches (after coalescing); failed
     /// batches are counted separately so images/batches/total_us stay
@@ -207,6 +224,15 @@ pub struct Stats {
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     pub queue_peak: AtomicU64,
+    /// Batches admitted into the pool by the fair scheduler.
+    pub admitted: AtomicU64,
+    /// Admission attempts that hit pool backpressure (the in-flight
+    /// cap) while this model had an admissible batch — one count per
+    /// blocked attempt, not per wakeup.
+    pub deferred: AtomicU64,
+    /// Current deficit-round-robin credit, in images (gauge; negative
+    /// after an oversized admission).
+    pub deficit: AtomicI64,
     /// Histogram of executed batch sizes (log2 buckets).
     pub batch_hist: [AtomicU64; BATCH_BUCKETS],
 }
@@ -248,8 +274,9 @@ impl Stats {
             })
             .collect();
         format!(
-            "requests {}  images {}  batches {} (mean {:.1} img/batch)  engine {}us  \
-             failed {}  rejected {}  queue peak {}  batch-size hist [{}]",
+            "requests {}  images {}  batches {} (mean {:.1} img/batch)  service {}us  \
+             failed {}  rejected {}  queue peak {}  admitted {}  deferred {}  \
+             deficit {}  batch-size hist [{}]",
             self.requests.load(Ordering::Relaxed),
             self.images.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -258,6 +285,9 @@ impl Stats {
             self.failed_batches.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.queue_peak.load(Ordering::Relaxed),
+            self.admitted.load(Ordering::Relaxed),
+            self.deferred.load(Ordering::Relaxed),
+            self.deficit.load(Ordering::Relaxed),
             hist.join(" "),
         )
     }
@@ -274,6 +304,10 @@ pub struct ServerStats {
     pub unknown_model: AtomicU64,
     /// v2 requests with a version this server doesn't speak.
     pub bad_version: AtomicU64,
+    /// Completed fair-scheduler rounds that admitted at least one
+    /// batch (starvation bounds are stated in rounds — see
+    /// `rust/tests/multi_model.rs`).
+    pub rounds: AtomicU64,
 }
 
 impl ServerStats {
@@ -283,6 +317,7 @@ impl ServerStats {
             models: registry.iter().map(|_| Arc::new(Stats::default())).collect(),
             unknown_model: AtomicU64::new(0),
             bad_version: AtomicU64::new(0),
+            rounds: AtomicU64::new(0),
         }
     }
 
@@ -335,157 +370,12 @@ impl ServerStats {
             out.push_str(&format!("model {i} {name}: {}\n", s.report()));
         }
         out.push_str(&format!(
-            "server: unknown-model {}  bad-version {}",
+            "server: unknown-model {}  bad-version {}  sched-rounds {}",
             self.unknown_model.load(Ordering::Relaxed),
             self.bad_version.load(Ordering::Relaxed),
+            self.rounds.load(Ordering::Relaxed),
         ));
         out
-    }
-}
-
-/// One parsed request waiting to be batched.
-struct Pending {
-    images: Vec<f32>,
-    n: usize,
-    reply: mpsc::Sender<Result<Vec<u32>, String>>,
-}
-
-#[derive(Default)]
-struct QueueState {
-    items: VecDeque<Pending>,
-    queued_images: usize,
-    shutdown: bool,
-    /// FIFO admission tickets: `next_ticket` is taken on push arrival,
-    /// `serving` is the ticket currently allowed to admit. Without
-    /// this, a large request could starve forever behind a stream of
-    /// small ones that always win the condvar race.
-    next_ticket: u64,
-    serving: u64,
-}
-
-/// Bounded request queue: connection threads push, the model's batcher
-/// pops coalesced batches. Bounded by *image count*, not request count,
-/// so backpressure tracks actual work. One queue per hosted model —
-/// straggler waits are per model, never cross-model.
-struct BatchQueue {
-    state: Mutex<QueueState>,
-    not_empty: Condvar,
-    not_full: Condvar,
-    cap_images: usize,
-}
-
-impl BatchQueue {
-    fn new(cap_images: usize) -> Self {
-        BatchQueue {
-            state: Mutex::new(QueueState::default()),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
-            // The configured bound is honored as-is: push admits a
-            // request larger than the cap only when the queue is empty,
-            // so a tight bound can't deadlock a max-size request.
-            cap_images,
-        }
-    }
-
-    /// Block until there is room, then enqueue (FIFO across blocked
-    /// pushers — see `QueueState` tickets; while a large request waits,
-    /// later arrivals wait behind it, so the queue drains and even an
-    /// over-cap request is eventually admitted alone). Returns false if
-    /// the server is shutting down (request is dropped).
-    fn push(&self, p: Pending, stats: &Stats) -> bool {
-        let mut st = self.state.lock().unwrap();
-        let ticket = st.next_ticket;
-        st.next_ticket += 1;
-        while !st.shutdown
-            && (ticket != st.serving
-                || (!st.items.is_empty() && st.queued_images + p.n > self.cap_images))
-        {
-            st = self.not_full.wait(st).unwrap();
-        }
-        if st.shutdown {
-            // Terminal: every other waiter also exits via this branch,
-            // so the unconsumed ticket cannot wedge the line.
-            return false;
-        }
-        st.serving += 1;
-        st.queued_images += p.n;
-        let depth = st.queued_images as u64;
-        st.items.push_back(p);
-        stats.queue_depth.store(depth, Ordering::Relaxed);
-        stats.queue_peak.fetch_max(depth, Ordering::Relaxed);
-        drop(st);
-        self.not_empty.notify_one();
-        // wake the next ticket in line
-        self.not_full.notify_all();
-        true
-    }
-
-    /// Pop a coalesced batch: blocks until at least one request is
-    /// queued, then keeps gathering until `max_batch` images are in hand
-    /// or `wait` has elapsed. Returns None only when shut down *and*
-    /// drained, so no accepted request is ever dropped on the floor.
-    fn pop_batch(&self, max_batch: usize, wait: Duration, stats: &Stats) -> Option<Vec<Pending>> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if !st.items.is_empty() {
-                break;
-            }
-            if st.shutdown {
-                return None;
-            }
-            st = self.not_empty.wait(st).unwrap();
-        }
-        let mut batch = Vec::new();
-        let mut images = 0usize;
-        let deadline = Instant::now() + wait;
-        loop {
-            while let Some(front) = st.items.front() {
-                // Always admit the first request, even oversized ones
-                // (the pool shards them across workers anyway).
-                if !batch.is_empty() && images + front.n > max_batch {
-                    break;
-                }
-                let p = st.items.pop_front().unwrap();
-                images += p.n;
-                st.queued_images -= p.n;
-                batch.push(p);
-            }
-            // Wake pushers blocked on a full queue *before* the
-            // straggler wait: the space just freed lets them enqueue in
-            // time to join this very batch (they contend on the mutex
-            // released by wait_timeout below).
-            self.not_full.notify_all();
-            // Items still queued after the drain mean the front didn't
-            // fit — the batch can't grow any further, so waiting out the
-            // straggler deadline would only add latency.
-            if images >= max_batch || st.shutdown || !st.items.is_empty() {
-                break;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (guard, timeout) = self
-                .not_empty
-                .wait_timeout(st, deadline - now)
-                .unwrap();
-            st = guard;
-            if timeout.timed_out() && st.items.is_empty() {
-                break;
-            }
-        }
-        stats
-            .queue_depth
-            .store(st.queued_images as u64, Ordering::Relaxed);
-        drop(st);
-        self.not_full.notify_all();
-        Some(batch)
-    }
-
-    fn shutdown(&self) {
-        self.state.lock().unwrap().shutdown = true;
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
     }
 }
 
@@ -495,23 +385,42 @@ struct Router {
     /// One queue per model, indexed by model id.
     queues: Vec<Arc<BatchQueue>>,
     stats: Arc<ServerStats>,
+    /// Rung after every push so the scheduler re-polls.
+    doorbell: Arc<Doorbell>,
 }
 
-/// A bound server: listener + model registry + knobs. Splitting bind
-/// from run lets callers learn the ephemeral port and grab the stats
-/// handle before the (blocking) accept loop starts.
+/// A bound server: listener + model registry + knobs + resolved
+/// per-model policies. Splitting bind from run lets callers learn the
+/// ephemeral port and grab the stats handle before the (blocking)
+/// accept loop starts.
 pub struct Server {
     listener: TcpListener,
     registry: Arc<ModelRegistry>,
     cfg: ServeConfig,
     stats: Arc<ServerStats>,
+    /// Per-model serving policies: each registry entry's overrides
+    /// resolved over the server-level defaults, validated at bind.
+    policies: Vec<Policy>,
 }
 
 impl Server {
     /// Bind a multi-model server. Registry id 0 is the default model
-    /// serving protocol-v1 clients.
+    /// serving protocol-v1 clients. Each entry's policy overrides are
+    /// resolved against `cfg`'s global knobs here, so a bad per-model
+    /// policy fails bind — not the first request.
     pub fn bind(registry: Arc<ModelRegistry>, addr: &str, cfg: ServeConfig) -> Result<Server> {
         cfg.validate()?;
+        let defaults = Policy::from_serve_cfg(&cfg);
+        let policies = registry
+            .iter()
+            .map(|(id, e)| {
+                Policy::resolve(&defaults, &e.policy)
+                    .with_context(|| format!("model {id} ({:?}) serving policy", e.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Fails fast on anything the per-policy checks can't see (e.g.
+        // an empty registry — already impossible, but cheap to pin).
+        FairScheduler::new(&policies)?;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let stats = Arc::new(ServerStats::new(&registry));
         Ok(Server {
@@ -519,6 +428,7 @@ impl Server {
             registry,
             cfg,
             stats,
+            policies,
         })
     }
 
@@ -543,53 +453,67 @@ impl Server {
         self.registry.clone()
     }
 
+    /// Resolved per-model serving policies, in model-id order.
+    pub fn policies(&self) -> &[Policy] {
+        &self.policies
+    }
+
     /// Run the accept loop. Blocks until `cfg.max_conns` connections
     /// have been accepted and completed (or forever when None). All
     /// queued work is drained before returning.
     pub fn run(self) -> Result<()> {
         let workers = self.cfg.resolved_workers();
-        let pool = Arc::new(InferencePool::with_scratch_dims(
-            workers,
-            self.registry.scratch_dims(),
-        ));
+        let pool = Arc::new(InferencePool::for_registry(workers, &self.registry));
         let addr = self
             .local_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "?".into());
         println!(
-            "aquant-serve: {} model(s) on {addr} ({} workers, max-batch {}, wait {}us)",
+            "aquant-serve: {} model(s) on {addr} ({} workers; defaults: max-batch {}, \
+             wait {}us, queue {})",
             self.registry.len(),
             workers,
             self.cfg.max_batch,
             self.cfg.batch_wait_us,
+            self.cfg.queue_images,
         );
-        // Per-model queue + batcher. Batchers are plain (non-scoped)
-        // threads over Arc'd state: they must outlive the connection
-        // scope below, which joins all handlers before we signal
-        // shutdown.
+        // Per-model bounded queue; ONE scheduler thread replaces the
+        // per-model batchers. The scheduler is a plain (non-scoped)
+        // thread over Arc'd state: it must outlive the connection scope
+        // below, which joins all handlers before we signal shutdown.
+        let doorbell = Arc::new(Doorbell::new());
         let mut queues = Vec::with_capacity(self.registry.len());
-        let mut batchers = Vec::with_capacity(self.registry.len());
         for (id, entry) in self.registry.iter() {
+            let policy = &self.policies[id as usize];
             println!(
-                "aquant-serve:   id {id} = {} ({} f32/img, {} classes)",
+                "aquant-serve:   id {id} = {} ({} f32/img, {} classes; {})",
                 entry.name,
                 entry.engine.img_elems(),
                 entry.engine.topo.n_classes,
+                policy.describe(),
             );
-            let queue = Arc::new(BatchQueue::new(self.cfg.queue_images));
-            let (q, p, e) = (queue.clone(), pool.clone(), entry.engine.clone());
-            let s = self.stats.model(id).expect("stats per model").clone();
-            let max_batch = self.cfg.max_batch;
-            let wait = Duration::from_micros(self.cfg.batch_wait_us);
-            batchers.push(std::thread::spawn(move || {
-                run_batcher(&q, &p, &e, &s, max_batch, wait)
-            }));
-            queues.push(queue);
+            queues.push(Arc::new(BatchQueue::new(policy.queue_images, policy.max_batch)));
         }
+        let ctx = SchedCtx {
+            queues: queues.clone(),
+            policies: self.policies.clone(),
+            engines: self.registry.iter().map(|(_, e)| e.engine.clone()).collect(),
+            model_stats: self
+                .registry
+                .iter()
+                .map(|(id, _)| self.stats.model(id).expect("stats per model").clone())
+                .collect(),
+            stats: self.stats.clone(),
+            pool: pool.clone(),
+            doorbell: doorbell.clone(),
+            in_flight: Arc::new(AtomicU64::new(0)),
+        };
+        let scheduler = std::thread::spawn(move || sched::run_scheduler(ctx));
         let router = Router {
             registry: self.registry.clone(),
             queues,
             stats: self.stats.clone(),
+            doorbell: doorbell.clone(),
         };
         let listener_dead = std::thread::scope(|scope| {
             let mut seen = 0usize;
@@ -633,13 +557,17 @@ impl Server {
             }
             false
         });
-        // All handlers have returned; drain every queue and stop.
+        // All handlers have returned (each already holds its reply);
+        // tell the scheduler to drain whatever is left and stop. The
+        // pool is dropped after the join, which completes any batches
+        // still in flight before its workers exit.
         for q in &router.queues {
             q.shutdown();
         }
-        for b in batchers {
-            b.join().map_err(|_| anyhow!("batcher thread panicked"))?;
-        }
+        doorbell.ring();
+        scheduler
+            .join()
+            .map_err(|_| anyhow!("scheduler thread panicked"))?;
         if listener_dead {
             bail!("accept loop abandoned after repeated listener errors");
         }
@@ -678,57 +606,9 @@ pub fn registry_from_specs(
     ModelRegistry::from_specs(specs, |spec| fp.build(spec))
 }
 
-fn run_batcher(
-    queue: &BatchQueue,
-    pool: &InferencePool,
-    engine: &Arc<Engine>,
-    stats: &Stats,
-    max_batch: usize,
-    wait: Duration,
-) {
-    while let Some(mut batch) = queue.pop_batch(max_batch, wait, stats) {
-        if batch.is_empty() {
-            continue;
-        }
-        let n: usize = batch.iter().map(|p| p.n).sum();
-        let flat = if batch.len() == 1 {
-            // Common un-coalesced case: the request's buffer is already
-            // flat — move it instead of re-copying the payload.
-            std::mem::take(&mut batch[0].images)
-        } else {
-            let mut flat = Vec::with_capacity(batch.iter().map(|p| p.images.len()).sum());
-            for p in &batch {
-                flat.extend_from_slice(&p.images);
-            }
-            flat
-        };
-        let t0 = Instant::now();
-        let result = pool.classify_flat(engine, Arc::new(flat), n);
-        match result {
-            Ok(preds) => {
-                stats.observe_batch(n, t0.elapsed().as_micros() as u64);
-                let mut off = 0usize;
-                for p in batch {
-                    let out: Vec<u32> = preds[off..off + p.n].iter().map(|&c| c as u32).collect();
-                    off += p.n;
-                    // Receiver gone = connection already died; fine.
-                    let _ = p.reply.send(Ok(out));
-                }
-            }
-            Err(e) => {
-                stats.failed_batches.fetch_add(1, Ordering::Relaxed);
-                let msg = format!("{e:#}");
-                for p in batch {
-                    let _ = p.reply.send(Err(msg.clone()));
-                }
-            }
-        }
-    }
-}
-
 /// Per-connection loop: sniff + parse requests, route to the model's
-/// queue, await the batcher's reply, answer. Any protocol error closes
-/// just this connection.
+/// queue, ring the scheduler, await the completion reply, answer. Any
+/// protocol error closes just this connection.
 fn handle(mut stream: TcpStream, router: &Router) -> Result<()> {
     loop {
         let hdr = match read_request_header(&mut stream) {
@@ -780,16 +660,22 @@ fn handle(mut stream: TcpStream, router: &Router) -> Result<()> {
                 images,
                 n,
                 reply: rtx,
+                enqueued_at: Instant::now(),
             },
             stats,
         );
-        if !queued {
+        let Some(ring) = queued else {
             bail!("server shutting down");
+        };
+        if ring {
+            // only became-admissible transitions wake the scheduler;
+            // completions ring separately
+            router.doorbell.ring();
         }
         let preds = match rrx.recv() {
             Ok(Ok(p)) => p,
             Ok(Err(e)) => bail!("inference failed: {e}"),
-            Err(_) => bail!("batcher dropped the request"),
+            Err(_) => bail!("scheduler dropped the request"),
         };
         stats.requests.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::with_capacity(4 + n * 4);
@@ -854,18 +740,6 @@ fn exchange(stream: &mut TcpStream, hdr: &[u8], images: &[f32]) -> Result<Vec<u3
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn pending(n: usize) -> (Pending, mpsc::Receiver<Result<Vec<u32>, String>>) {
-        let (tx, rx) = mpsc::channel();
-        (
-            Pending {
-                images: vec![0.0; n],
-                n,
-                reply: tx,
-            },
-            rx,
-        )
-    }
 
     #[test]
     fn batch_bucket_is_floor_log2() {
@@ -942,81 +816,5 @@ mod tests {
     fn magic_cannot_be_a_valid_v1_header() {
         let as_v1 = u32::from_le_bytes(MAGIC) as usize;
         assert!(as_v1 > MAX_REQ_IMAGES, "sniffing would be ambiguous");
-    }
-
-    #[test]
-    fn queue_coalesces_up_to_max_batch() {
-        let q = BatchQueue::new(MAX_REQ_IMAGES);
-        let stats = Stats::default();
-        let mut rxs = Vec::new();
-        for _ in 0..3 {
-            let (p, rx) = pending(2);
-            assert!(q.push(p, &stats));
-            rxs.push(rx);
-        }
-        assert_eq!(stats.queue_peak.load(Ordering::Relaxed), 6);
-        // max_batch 4 takes the first two requests (2+2), leaves one
-        let batch = q.pop_batch(4, Duration::ZERO, &stats).unwrap();
-        assert_eq!(batch.len(), 2);
-        assert_eq!(batch.iter().map(|p| p.n).sum::<usize>(), 4);
-        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 2);
-        let batch = q.pop_batch(4, Duration::ZERO, &stats).unwrap();
-        assert_eq!(batch.len(), 1);
-        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
-    }
-
-    #[test]
-    fn queue_admits_oversized_request_alone() {
-        let q = BatchQueue::new(MAX_REQ_IMAGES);
-        let stats = Stats::default();
-        let (p, _rx) = pending(100);
-        assert!(q.push(p, &stats));
-        let (p2, _rx2) = pending(1);
-        assert!(q.push(p2, &stats));
-        let batch = q.pop_batch(8, Duration::ZERO, &stats).unwrap();
-        assert_eq!(batch.len(), 1, "oversized request dispatched alone");
-        assert_eq!(batch[0].n, 100);
-    }
-
-    #[test]
-    fn full_queue_blocks_push_until_pop_frees_space() {
-        let q = Arc::new(BatchQueue::new(4));
-        let stats = Arc::new(Stats::default());
-        let (p, _rx1) = pending(4);
-        assert!(q.push(p, &stats));
-        // the queue is at its image cap: a second push must block on
-        // not_full until the batcher drains, then admit via its ticket
-        let (p2, _rx2) = pending(3);
-        let pusher = {
-            let (q, s) = (q.clone(), stats.clone());
-            std::thread::spawn(move || q.push(p2, &s))
-        };
-        std::thread::sleep(Duration::from_millis(50));
-        assert!(!pusher.is_finished(), "push admitted past the image cap");
-        // max_batch 4: pop returns right after draining the first item,
-        // having woken the blocked pusher mid-loop
-        let batch = q.pop_batch(4, Duration::from_millis(500), &stats).unwrap();
-        assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].n, 4);
-        assert!(pusher.join().unwrap(), "blocked push must admit after the drain");
-        let batch = q.pop_batch(4, Duration::from_millis(500), &stats).unwrap();
-        assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].n, 3);
-    }
-
-    #[test]
-    fn queue_drains_after_shutdown_then_ends() {
-        let q = BatchQueue::new(MAX_REQ_IMAGES);
-        let stats = Stats::default();
-        let (p, _rx) = pending(3);
-        assert!(q.push(p, &stats));
-        q.shutdown();
-        // queued work is still delivered...
-        let batch = q.pop_batch(64, Duration::from_millis(50), &stats).unwrap();
-        assert_eq!(batch.len(), 1);
-        // ...then the batcher is told to exit, and pushes are refused
-        assert!(q.pop_batch(64, Duration::from_millis(50), &stats).is_none());
-        let (p2, _rx2) = pending(1);
-        assert!(!q.push(p2, &stats));
     }
 }

@@ -1,0 +1,1259 @@
+//! Pluggable scheduling subsystem: per-model serving policies and
+//! weighted-fair admission over the shared worker pool.
+//!
+//! PR 3 gave every model its own [`BatchQueue`] + batcher thread, but
+//! pool admission was first-come-first-served: one hot model saturating
+//! the shared workers starved a latency-sensitive one, and every model
+//! inherited the same global `--max-batch/--batch-wait-us/--queue-images`
+//! knobs. This module replaces that fixed global policy with a
+//! per-model adaptive one — the serving-side analogue of the paper's
+//! move from the fixed 0.5 rounding border to a per-input border
+//! function:
+//!
+//! * [`Policy`] — per-model serving knobs (`max_batch`, `batch_wait_us`,
+//!   `queue_images`, integer `weight`), parsed from extended
+//!   `--model NAME=SPEC[;key=value...]` specs
+//!   ([`crate::config::PolicyOverrides`]) with server-level defaults
+//!   filling whatever a spec leaves out.
+//! * [`FairScheduler`] — weighted deficit-round-robin (DRR) admission:
+//!   the N per-model batcher threads collapse into ONE scheduler loop
+//!   ([`run_scheduler`]) that drains each model's queue into the pool in
+//!   proportion to its weight while preserving per-model straggler
+//!   deadlines and per-model backpressure.
+//!
+//! # Deficit round robin, adapted to batches
+//!
+//! A **persistent cursor** walks the models round-robin. A model with
+//! an admissible batch (a full `max_batch` worth of images queued, an
+//! expired straggler deadline, or shutdown drain) is credited
+//! `quantum x weight` images of deficit when the cursor arrives —
+//! `quantum` is the largest `max_batch` across models, so every ready
+//! model can admit at least one full batch per visit and no weight can
+//! starve — then admits batches while its deficit stays positive.
+//! When the in-flight cap blocks admission the pass STOPS with the
+//! cursor parked on the blocked model; the next wakeup resumes there
+//! with its credit intact (and un-re-credited), so pool backpressure
+//! can never let earlier-visited models lap a later one — the cursor,
+//! not the wakeup, decides whose turn it is. Charges are actual image
+//! counts; an oversized request (a single request larger than
+//! `max_batch`) is admitted whole once the model holds any credit,
+//! driving its deficit negative, and the model then sits out visits
+//! until repeated credits bring it back above zero — debt survives
+//! idle gaps (only positive credit is dropped when a model has nothing
+//! admissible), and when the pool would otherwise go idle the loop is
+//! work-conserving: it admits the debtor's next batch anyway, charged
+//! against the debt, so a lone indebted model can never wedge itself.
+//! For backlogged models this yields service in exact weight
+//! proportion, within one quantum per cycle (pinned by the unit tests
+//! below and `rust/tests/sched_props.rs`).
+//!
+//! A model whose queue holds requests that are *not yet admissible*
+//! (straggler deadline still running) is passed over without credit —
+//! its deadline, not its weight, decides when it next dispatches.
+//!
+//! # Admission backpressure
+//!
+//! Fairness at the pool only exists if admission is throttled: with
+//! unbounded submission the scheduler would instantly dump every queue
+//! into the pool's FIFO and recreate FCFS. The loop therefore tracks
+//! in-flight images (submitted, not yet completed) and stops admitting
+//! at [`inflight_cap`] — roughly two max-size batches — which keeps the
+//! workers pipelined (strictly more than the one-blocking-batch-per-
+//! model shape of PR 2/3) while bounding how far admitted-but-unserved
+//! work can run ahead of the weights. With a single hosted model this
+//! degenerates to PR 2 behavior: every round admits at least one full
+//! batch and rounds repeat back-to-back while a backlog exists.
+//!
+//! The scheduler thread parks on a [`Doorbell`] — rung by request
+//! arrivals, batch completions, and shutdown — with a timeout at the
+//! earliest pending straggler deadline, so it burns no CPU while idle
+//! and never oversleeps a deadline.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{PolicyOverrides, ServeConfig};
+use crate::nn::engine::Engine;
+use crate::nn::pool::InferencePool;
+
+use super::{ServerStats, Stats};
+
+/// Upper bound on a model's scheduling weight. Generous enough for any
+/// real priority split, and — together with the `max_batch` bound in
+/// [`Policy::validate`] — it keeps `quantum * weight` far from
+/// overflow.
+pub const MAX_WEIGHT: u32 = 1024;
+
+/// Lower bound on a model's deficit: one protocol-max request's worth
+/// of debt. Classic DRR bounds overshoot at one packet; clamping here
+/// keeps that bound even when the work-conserving force-admit path
+/// serves a string of oversized requests on an otherwise idle pool —
+/// without the floor, that free service would bank unbounded debt and
+/// starve the model for an unbounded stretch once contention returns.
+pub const DEBT_FLOOR: i64 = -(super::MAX_REQ_IMAGES as i64);
+
+/// One model's resolved serving policy: the per-model version of the
+/// global PR 2 knobs plus its fair-share weight. Built by
+/// [`Policy::resolve`] from a spec's [`PolicyOverrides`] over the
+/// server-level defaults ([`Policy::from_serve_cfg`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Policy {
+    /// Max images coalesced into one engine batch for this model.
+    pub max_batch: usize,
+    /// Straggler deadline (µs) once a request is pending.
+    pub batch_wait_us: u64,
+    /// Bound on queued images; a full queue backpressures this model's
+    /// connections only.
+    pub queue_images: usize,
+    /// Fair-share weight at the pool (1..=[`MAX_WEIGHT`]); a weight-3
+    /// model is admitted three images for every one of a weight-1 model
+    /// when both are backlogged.
+    pub weight: u32,
+}
+
+impl Policy {
+    /// Server-level defaults: the global `--max-batch/--batch-wait-us/
+    /// --queue-images` knobs with weight 1 — exactly the PR 2/PR 3
+    /// behavior for specs that set no policy keys.
+    pub fn from_serve_cfg(cfg: &ServeConfig) -> Policy {
+        Policy {
+            max_batch: cfg.max_batch,
+            batch_wait_us: cfg.batch_wait_us,
+            queue_images: cfg.queue_images,
+            weight: 1,
+        }
+    }
+
+    /// Fill a spec's overrides over `defaults` and validate the result.
+    pub fn resolve(defaults: &Policy, over: &PolicyOverrides) -> Result<Policy> {
+        let p = Policy {
+            max_batch: over.max_batch.unwrap_or(defaults.max_batch),
+            batch_wait_us: over.batch_wait_us.unwrap_or(defaults.batch_wait_us),
+            queue_images: over.queue_images.unwrap_or(defaults.queue_images),
+            weight: over.weight.unwrap_or(defaults.weight),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Same bounds the global knobs get in `ServeConfig::validate`,
+    /// plus the weight range (weight 0 would starve the model by
+    /// construction — rejected, not silently clamped).
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("policy max_batch must be >= 1");
+        }
+        if self.max_batch > ServeConfig::MAX_MAX_BATCH {
+            bail!(
+                "policy max_batch ({}) must be <= {}",
+                self.max_batch,
+                ServeConfig::MAX_MAX_BATCH
+            );
+        }
+        if self.queue_images < self.max_batch {
+            bail!(
+                "policy queue_images ({}) must be >= max_batch ({})",
+                self.queue_images,
+                self.max_batch
+            );
+        }
+        if self.batch_wait_us > ServeConfig::MAX_BATCH_WAIT_US {
+            bail!(
+                "policy batch_wait_us ({}) must be <= {} (60s)",
+                self.batch_wait_us,
+                ServeConfig::MAX_BATCH_WAIT_US
+            );
+        }
+        if self.weight == 0 || self.weight > MAX_WEIGHT {
+            bail!("policy weight ({}) must be in 1..={MAX_WEIGHT}", self.weight);
+        }
+        Ok(())
+    }
+
+    /// Straggler deadline as a `Duration`.
+    pub fn wait(&self) -> Duration {
+        Duration::from_micros(self.batch_wait_us)
+    }
+
+    /// Human one-liner for startup logging.
+    pub fn describe(&self) -> String {
+        format!(
+            "max-batch {}, wait {}us, queue {}, weight {}",
+            self.max_batch, self.batch_wait_us, self.queue_images, self.weight
+        )
+    }
+}
+
+/// What one admission attempt produced (the `admit` callback of
+/// [`FairScheduler::service`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grant {
+    /// A batch of this many images was popped and submitted.
+    Admitted(usize),
+    /// Nothing admissible from this model right now (queue raced empty
+    /// or its deadline hasn't expired) — move on to the next model.
+    Skip,
+    /// Global admission backpressure (the in-flight cap): STOP the
+    /// pass. The scheduler parks on this model — cursor and credit
+    /// survive — and resumes here when capacity frees, so the cap can
+    /// never let earlier-visited models lap the blocked one.
+    Blocked,
+}
+
+/// Weighted deficit-round-robin admission core. Deterministic and
+/// I/O-free: queue state comes in through the `ready` / `admit`
+/// callbacks of [`FairScheduler::service`], so the quantum accounting
+/// is unit-testable without threads, sockets, or clocks.
+///
+/// The cursor is **persistent**, as in classic DRR on a busy egress
+/// link: when admission blocks on backpressure the pass stops *without
+/// advancing*, and the next pass resumes at the same model with its
+/// unspent credit. A fresh-credit-per-pass design (restart at id 0
+/// every time) would let model 0 refill the in-flight cap on every
+/// wakeup and starve higher ids outright.
+pub struct FairScheduler {
+    quantum: u64,
+    weights: Vec<u64>,
+    max_batches: Vec<usize>,
+    deficits: Vec<i64>,
+    /// Next model to visit; survives across passes (parks on Blocked).
+    cursor: usize,
+    /// Has the cursor's model been credited for this visit? Prevents
+    /// re-crediting a parked model on every wakeup.
+    credited: bool,
+}
+
+impl FairScheduler {
+    /// Build from per-model policies (validated again here so direct
+    /// constructions can't smuggle in weight 0). The quantum is the
+    /// largest `max_batch` across models, guaranteeing every ready
+    /// model at least one full batch per visit.
+    pub fn new(policies: &[Policy]) -> Result<FairScheduler> {
+        if policies.is_empty() {
+            bail!("scheduler needs at least one model policy");
+        }
+        for (i, p) in policies.iter().enumerate() {
+            p.validate().with_context(|| format!("model id {i} policy"))?;
+        }
+        let quantum = policies.iter().map(|p| p.max_batch).max().unwrap() as u64;
+        Ok(FairScheduler {
+            quantum,
+            weights: policies.iter().map(|p| p.weight as u64).collect(),
+            max_batches: policies.iter().map(|p| p.max_batch).collect(),
+            deficits: vec![0; policies.len()],
+            cursor: 0,
+            credited: false,
+        })
+    }
+
+    /// Images of credit a model earns per visit per weight unit.
+    pub fn quantum(&self) -> u64 {
+        self.quantum
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Current deficit (images of unspent credit; negative after an
+    /// oversized admission).
+    pub fn deficit(&self, id: usize) -> i64 {
+        self.deficits[id]
+    }
+
+    /// Charge an out-of-pass admission against a model's deficit (the
+    /// scheduler loop's work-conservation path: an idle pool admits a
+    /// debt-paying model's batch rather than idling — the charge keeps
+    /// the long-run accounting honest, floored at [`DEBT_FLOOR`]).
+    pub fn charge(&mut self, id: usize, images: usize) {
+        self.deficits[id] = (self.deficits[id] - images as i64).max(DEBT_FLOOR);
+    }
+
+    fn advance(&mut self) {
+        self.cursor = (self.cursor + 1) % self.weights.len();
+        self.credited = false;
+    }
+
+    /// One service pass: visit up to `n_models` cursor positions,
+    /// crediting each ready model `quantum x weight` images **once per
+    /// visit** (clamped at one visit's worth so a parked model cannot
+    /// bank credit across wakeups) and admitting batches while its
+    /// deficit stays positive.
+    ///
+    /// * `ready(id)` — does model `id` have an admissible batch (full
+    ///   batch queued, straggler deadline expired, or draining)?
+    ///   Not-ready models keep their *debt* (negative deficit — an
+    ///   oversized admission must be paid down even across idle gaps)
+    ///   but lose any positive credit, then are passed over.
+    /// * `admit(id, max_images)` — pop ONE batch of at most
+    ///   `max_images` images (an oversized front request alone) and
+    ///   submit it; see [`Grant`]. `Blocked` ends the pass with the
+    ///   cursor parked on this model.
+    ///
+    /// Returns total images admitted this pass. With no blocking, one
+    /// pass visits every model exactly once — a classic DRR round.
+    pub fn service(
+        &mut self,
+        ready: &mut dyn FnMut(usize) -> bool,
+        admit: &mut dyn FnMut(usize, usize) -> Grant,
+    ) -> u64 {
+        let mut total = 0u64;
+        for _ in 0..self.weights.len() {
+            let id = self.cursor;
+            if !ready(id) {
+                // Keep oversize debt, drop unused positive credit:
+                // weight credit must not accrue while a model declines
+                // service, but debt repayment cannot be dodged by
+                // going briefly idle.
+                self.deficits[id] = self.deficits[id].min(0);
+                self.advance();
+                continue;
+            }
+            if !self.credited {
+                let credit = (self.quantum * self.weights[id]) as i64;
+                self.deficits[id] = (self.deficits[id] + credit).min(credit);
+                self.credited = true;
+            }
+            while self.deficits[id] > 0 {
+                match admit(id, self.max_batches[id]) {
+                    Grant::Admitted(got) => {
+                        // floored at one protocol-max request of debt
+                        self.deficits[id] =
+                            (self.deficits[id] - got as i64).max(DEBT_FLOOR);
+                        total += got as u64;
+                    }
+                    Grant::Skip => break,
+                    Grant::Blocked => return total, // park; resume here
+                }
+            }
+            self.advance();
+        }
+        total
+    }
+}
+
+/// One parsed request waiting to be scheduled.
+pub(crate) struct Pending {
+    pub images: Vec<f32>,
+    pub n: usize,
+    pub reply: mpsc::Sender<Result<Vec<u32>, String>>,
+    /// Arrival time — the straggler deadline is `enqueued_at + wait`.
+    pub enqueued_at: Instant,
+}
+
+#[derive(Default)]
+struct QueueState {
+    items: VecDeque<Pending>,
+    queued_images: usize,
+    shutdown: bool,
+    /// FIFO admission tickets: `next_ticket` is taken on push arrival,
+    /// `serving` is the ticket currently allowed to admit. Without
+    /// this, a large request could starve forever behind a stream of
+    /// small ones that always win the condvar race.
+    next_ticket: u64,
+    serving: u64,
+}
+
+/// What a non-destructive queue poll saw (scheduler-side view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Poll {
+    /// An admissible batch is available right now.
+    Ready,
+    /// Requests queued, none admissible yet; the front dispatches at
+    /// this deadline.
+    Wait(Instant),
+    /// Nothing queued.
+    Empty,
+    /// Shut down and fully drained.
+    Drained,
+}
+
+/// Bounded request queue: connection threads push (blocking on the
+/// per-model image cap — backpressure stays per model), the scheduler
+/// polls and pops coalesced batches. Popping is non-blocking
+/// ([`BatchQueue::try_pop`]) because ONE scheduler thread multiplexes
+/// every model's queue; the blocking wait lives in the scheduler's
+/// doorbell, not here.
+pub(crate) struct BatchQueue {
+    state: Mutex<QueueState>,
+    not_full: Condvar,
+    cap_images: usize,
+    /// The model's `max_batch`: push uses it to detect the
+    /// became-admissible transitions that must wake the scheduler.
+    ready_images: usize,
+}
+
+impl BatchQueue {
+    pub fn new(cap_images: usize, ready_images: usize) -> Self {
+        BatchQueue {
+            state: Mutex::new(QueueState::default()),
+            not_full: Condvar::new(),
+            // The configured bound is honored as-is: push admits a
+            // request larger than the cap only when the queue is empty,
+            // so a tight bound can't deadlock a max-size request.
+            cap_images,
+            ready_images,
+        }
+    }
+
+    /// Block until there is room, then enqueue (FIFO across blocked
+    /// pushers — see `QueueState` tickets; while a large request waits,
+    /// later arrivals wait behind it, so the queue drains and even an
+    /// over-cap request is eventually admitted alone). Returns `None`
+    /// if the server is shutting down (request dropped); otherwise
+    /// `Some(ring)` — ring the scheduler's doorbell only when this push
+    /// could have changed its plans: the queue went empty→non-empty
+    /// (the sleeping scheduler knows no deadline for it yet) or the
+    /// fill crossed `ready_images` (Wait→Ready). A Wait→Wait push
+    /// leaves the front request — and thus the scheduler's sleep
+    /// deadline — unchanged, so under saturating arrival rates the
+    /// scheduler isn't stampeded with a wakeup per request.
+    pub fn push(&self, p: Pending, stats: &Stats) -> Option<bool> {
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        while !st.shutdown
+            && (ticket != st.serving
+                || (!st.items.is_empty() && st.queued_images + p.n > self.cap_images))
+        {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.shutdown {
+            // Terminal: every other waiter also exits via this branch,
+            // so the unconsumed ticket cannot wedge the line.
+            return None;
+        }
+        let was_empty = st.items.is_empty();
+        let old_images = st.queued_images;
+        st.serving += 1;
+        st.queued_images += p.n;
+        let ring = was_empty
+            || (old_images < self.ready_images && st.queued_images >= self.ready_images);
+        let depth = st.queued_images as u64;
+        st.items.push_back(p);
+        stats.queue_depth.store(depth, Ordering::Relaxed);
+        stats.queue_peak.fetch_max(depth, Ordering::Relaxed);
+        drop(st);
+        // wake the next ticket in line
+        self.not_full.notify_all();
+        Some(ring)
+    }
+
+    /// Is a batch admissible under (`max_images`, `wait`) at `now`?
+    /// Admissible = a full batch's worth of images is queued, the
+    /// front request's straggler deadline has expired, or the server
+    /// is draining. Never blocks, never pops.
+    pub fn poll(&self, max_images: usize, wait: Duration, now: Instant) -> Poll {
+        let st = self.state.lock().unwrap();
+        let Some(front) = st.items.front() else {
+            return if st.shutdown { Poll::Drained } else { Poll::Empty };
+        };
+        let deadline = front.enqueued_at + wait;
+        if st.shutdown || st.queued_images >= max_images || deadline <= now {
+            Poll::Ready
+        } else {
+            Poll::Wait(deadline)
+        }
+    }
+
+    /// Pop one coalesced batch of at most `max_images` images if one is
+    /// admissible (same condition as [`BatchQueue::poll`]); the front
+    /// request is always taken even when oversized — the pool shards it
+    /// across workers anyway. Returns None when nothing is admissible.
+    pub fn try_pop(
+        &self,
+        max_images: usize,
+        wait: Duration,
+        now: Instant,
+        stats: &Stats,
+    ) -> Option<Vec<Pending>> {
+        let mut st = self.state.lock().unwrap();
+        let front = st.items.front()?;
+        let deadline = front.enqueued_at + wait;
+        if !st.shutdown && st.queued_images < max_images && deadline > now {
+            return None;
+        }
+        let mut batch = Vec::new();
+        let mut images = 0usize;
+        while let Some(front) = st.items.front() {
+            if !batch.is_empty() && images + front.n > max_images {
+                break;
+            }
+            let p = st.items.pop_front().unwrap();
+            images += p.n;
+            st.queued_images -= p.n;
+            batch.push(p);
+        }
+        stats
+            .queue_depth
+            .store(st.queued_images as u64, Ordering::Relaxed);
+        drop(st);
+        // Space freed: wake pushers blocked on the per-model cap.
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.not_full.notify_all();
+    }
+}
+
+/// Wakeup channel for the scheduler thread: an epoch counter under a
+/// mutex. Ring on request arrival, batch completion, and shutdown;
+/// the scheduler snapshots the epoch *before* scanning queues, so a
+/// ring that races the scan is never lost.
+pub(crate) struct Doorbell {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Doorbell {
+    pub fn new() -> Self {
+        Doorbell {
+            epoch: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn ring(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Park until the epoch moves past `seen`, or (when given) until
+    /// `deadline` — whichever comes first.
+    pub fn wait_past(&self, seen: u64, deadline: Option<Instant>) {
+        let mut e = self.epoch.lock().unwrap();
+        while *e == seen {
+            match deadline {
+                None => e = self.cv.wait(e).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return;
+                    }
+                    let (guard, timeout) = self.cv.wait_timeout(e, d - now).unwrap();
+                    e = guard;
+                    if timeout.timed_out() {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// In-flight image cap for scheduler admission: about two max-size
+/// batches (never below two images per worker), enough to keep every
+/// worker pipelined while bounding how far FIFO pool order can run
+/// ahead of the weighted shares.
+pub(crate) fn inflight_cap(quantum: u64, workers: usize) -> u64 {
+    (2 * quantum).max(2 * workers as u64)
+}
+
+/// Everything the scheduler loop multiplexes: one slot per model, plus
+/// the shared pool, stats, and wakeup plumbing.
+pub(crate) struct SchedCtx {
+    pub queues: Vec<Arc<BatchQueue>>,
+    pub policies: Vec<Policy>,
+    pub engines: Vec<Arc<Engine>>,
+    pub model_stats: Vec<Arc<Stats>>,
+    pub stats: Arc<ServerStats>,
+    pub pool: Arc<InferencePool>,
+    pub doorbell: Arc<Doorbell>,
+    /// Images submitted to the pool and not yet completed.
+    pub in_flight: Arc<AtomicU64>,
+}
+
+/// The scheduler loop: ONE thread replacing the N per-model batchers.
+/// Runs DRR rounds while admissible work and in-flight headroom exist,
+/// parks on the doorbell (bounded by the earliest straggler deadline)
+/// otherwise, and exits once every queue reports shut-down-and-drained.
+/// In-flight batches at exit are completed by the pool's workers before
+/// the pool joins them (results flow through each batch's done
+/// callback, not through this thread).
+pub(crate) fn run_scheduler(ctx: SchedCtx) {
+    let n = ctx.queues.len();
+    let mut fs = FairScheduler::new(&ctx.policies).expect("policies validated at bind");
+    let cap = inflight_cap(fs.quantum(), ctx.pool.workers());
+    let mut polls = vec![Poll::Empty; n];
+    loop {
+        let tick = ctx.doorbell.epoch();
+        let now = Instant::now();
+        for id in 0..n {
+            polls[id] = ctx.queues[id].poll(ctx.policies[id].max_batch, ctx.policies[id].wait(), now);
+        }
+        if polls.iter().all(|p| *p == Poll::Drained) {
+            return;
+        }
+        let any_ready = polls.iter().any(|p| *p == Poll::Ready);
+        let room = ctx.in_flight.load(Ordering::Acquire) < cap;
+        if any_ready && room {
+            let admitted = fs.service(
+                &mut |id| polls[id] == Poll::Ready,
+                &mut |id, max_images| admit_one(&ctx, cap, id, max_images),
+            );
+            for id in 0..n {
+                ctx.model_stats[id]
+                    .deficit
+                    .store(fs.deficit(id), Ordering::Relaxed);
+            }
+            if admitted > 0 {
+                ctx.stats.rounds.fetch_add(1, Ordering::Relaxed);
+                continue; // back-to-back passes while work + headroom exist
+            }
+            // Work-conservation: a pass can admit nothing while a model
+            // is still paying down oversize debt (deficit <= 0 after its
+            // credit). With batches in flight the next completion rings
+            // another pass; with an IDLE pool no future event would —
+            // so admit one batch from the first ready model regardless
+            // of debt (charged, so long-run weights stay honest; with
+            // nothing else runnable, fairness costs nobody anything).
+            if ctx.in_flight.load(Ordering::Acquire) == 0 {
+                let mut forced = 0usize;
+                for id in 0..n {
+                    if polls[id] != Poll::Ready {
+                        continue;
+                    }
+                    if let Grant::Admitted(got) =
+                        admit_one(&ctx, cap, id, ctx.policies[id].max_batch)
+                    {
+                        fs.charge(id, got);
+                        ctx.model_stats[id]
+                            .deficit
+                            .store(fs.deficit(id), Ordering::Relaxed);
+                        forced = got;
+                        break;
+                    }
+                }
+                if forced > 0 {
+                    ctx.stats.rounds.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
+        }
+        // (When the pool is saturated — any_ready && !room — the next
+        // completion rings the doorbell; `deferred` is counted only at
+        // actual Blocked admission attempts inside admit_one, so the
+        // stat isn't amplified by every push-wakeup during saturation.)
+        let deadline = polls
+            .iter()
+            .filter_map(|p| match p {
+                Poll::Wait(d) => Some(*d),
+                _ => None,
+            })
+            .min();
+        ctx.doorbell.wait_past(tick, deadline);
+    }
+}
+
+/// Admit one batch from model `id` into the pool: pop, flatten, submit
+/// with a completion callback that answers every coalesced request,
+/// then account. `Blocked` = in-flight cap reached (the pass parks
+/// here); `Skip` = nothing admissible from this queue right now.
+fn admit_one(ctx: &SchedCtx, cap: u64, id: usize, max_images: usize) -> Grant {
+    if ctx.in_flight.load(Ordering::Acquire) >= cap {
+        ctx.model_stats[id].deferred.fetch_add(1, Ordering::Relaxed);
+        return Grant::Blocked;
+    }
+    let stats = &ctx.model_stats[id];
+    let Some(mut batch) = ctx.queues[id].try_pop(
+        max_images,
+        ctx.policies[id].wait(),
+        Instant::now(),
+        stats,
+    ) else {
+        return Grant::Skip;
+    };
+    let n: usize = batch.iter().map(|p| p.n).sum();
+    let flat = if batch.len() == 1 {
+        // Common un-coalesced case: the request's buffer is already
+        // flat — move it instead of re-copying the payload.
+        std::mem::take(&mut batch[0].images)
+    } else {
+        let mut flat = Vec::with_capacity(batch.iter().map(|p| p.images.len()).sum());
+        for p in &mut batch {
+            // free each source buffer as it's copied: `batch` lives on
+            // inside the completion callback, and keeping every
+            // payload alive there would double the batch's memory for
+            // the whole inference
+            let imgs = std::mem::take(&mut p.images);
+            flat.extend_from_slice(&imgs);
+        }
+        flat
+    };
+    ctx.in_flight.fetch_add(n as u64, Ordering::AcqRel);
+    stats.admitted.fetch_add(1, Ordering::Relaxed);
+    let done = {
+        let stats = stats.clone();
+        let in_flight = ctx.in_flight.clone();
+        let doorbell = ctx.doorbell.clone();
+        let t0 = Instant::now();
+        move |result: Result<Vec<usize>, String>| {
+            match result {
+                Ok(preds) => {
+                    stats.observe_batch(n, t0.elapsed().as_micros() as u64);
+                    let mut off = 0usize;
+                    for p in batch {
+                        let out: Vec<u32> =
+                            preds[off..off + p.n].iter().map(|&c| c as u32).collect();
+                        off += p.n;
+                        // Receiver gone = connection already died; fine.
+                        let _ = p.reply.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+                    for p in batch {
+                        let _ = p.reply.send(Err(e.clone()));
+                    }
+                }
+            }
+            in_flight.fetch_sub(n as u64, Ordering::AcqRel);
+            doorbell.ring();
+        }
+    };
+    if let Err(e) = ctx.pool.submit(
+        id as u16,
+        &ctx.engines[id],
+        Arc::new(flat),
+        n,
+        Box::new(done),
+    ) {
+        // Pool gone (cannot happen while the server owns it, but stay
+        // honest): `submit` only fails before dispatch, with the
+        // callback dropped un-invoked — dropping the replies closes the
+        // waiting connections instead of hanging them.
+        stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+        ctx.in_flight.fetch_sub(n as u64, Ordering::AcqRel);
+        eprintln!("aquant-serve: pool submit failed: {e:#}");
+        return Grant::Skip;
+    }
+    Grant::Admitted(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, weight: u32) -> Policy {
+        Policy {
+            max_batch,
+            batch_wait_us: 0,
+            queue_images: 8192,
+            weight,
+        }
+    }
+
+    #[test]
+    fn policy_resolve_fills_defaults_and_validates() {
+        let d = Policy::from_serve_cfg(&ServeConfig::default());
+        assert_eq!(d.max_batch, 64);
+        assert_eq!(d.weight, 1);
+        let over = PolicyOverrides {
+            max_batch: Some(8),
+            weight: Some(3),
+            ..PolicyOverrides::default()
+        };
+        let p = Policy::resolve(&d, &over).unwrap();
+        assert_eq!(p.max_batch, 8);
+        assert_eq!(p.batch_wait_us, d.batch_wait_us);
+        assert_eq!(p.queue_images, d.queue_images);
+        assert_eq!(p.weight, 3);
+
+        // weight 0 is rejected, not clamped
+        let bad = PolicyOverrides {
+            weight: Some(0),
+            ..PolicyOverrides::default()
+        };
+        assert!(Policy::resolve(&d, &bad).is_err());
+        let bad = PolicyOverrides {
+            weight: Some(MAX_WEIGHT + 1),
+            ..PolicyOverrides::default()
+        };
+        assert!(Policy::resolve(&d, &bad).is_err());
+        // per-model bounds mirror the global ones
+        let bad = PolicyOverrides {
+            max_batch: Some(0),
+            ..PolicyOverrides::default()
+        };
+        assert!(Policy::resolve(&d, &bad).is_err());
+        let bad = PolicyOverrides {
+            queue_images: Some(4),
+            max_batch: Some(8),
+            ..PolicyOverrides::default()
+        };
+        assert!(Policy::resolve(&d, &bad).is_err());
+        // bounded max_batch: quantum * weight must stay overflow-safe
+        let bad = PolicyOverrides {
+            max_batch: Some(ServeConfig::MAX_MAX_BATCH + 1),
+            queue_images: Some(usize::MAX),
+            ..PolicyOverrides::default()
+        };
+        assert!(Policy::resolve(&d, &bad).is_err());
+        let ok = PolicyOverrides {
+            max_batch: Some(ServeConfig::MAX_MAX_BATCH),
+            queue_images: Some(ServeConfig::MAX_MAX_BATCH),
+            weight: Some(MAX_WEIGHT),
+            ..PolicyOverrides::default()
+        };
+        assert!(Policy::resolve(&d, &ok).is_ok());
+    }
+
+    #[test]
+    fn scheduler_rejects_weight_zero_and_empty() {
+        assert!(FairScheduler::new(&[]).is_err());
+        let mut p = policy(8, 1);
+        p.weight = 0;
+        assert!(FairScheduler::new(&[p]).is_err());
+        assert!(FairScheduler::new(&[policy(8, 3), policy(8, 1)]).is_ok());
+    }
+
+    /// Simulated backlogged queues: `admit` serves whole batches of
+    /// `req` -image requests up to the max_images bound (no
+    /// backpressure — one pass == one classic DRR round).
+    fn drain_round(
+        fs: &mut FairScheduler,
+        backlog: &mut [u64],
+        req: usize,
+    ) -> Vec<u64> {
+        let mut admitted = vec![0u64; backlog.len()];
+        // readiness snapshot, as in the real scheduler loop
+        let ready: Vec<bool> = backlog.iter().map(|b| *b > 0).collect();
+        fs.service(
+            &mut |id| ready[id],
+            &mut |id, max_images| {
+                if backlog[id] == 0 {
+                    return Grant::Skip;
+                }
+                // a batch = as many req-sized requests as fit (>= 1)
+                let per = ((max_images / req).max(1) * req) as u64;
+                let take = per.min(backlog[id]);
+                backlog[id] -= take;
+                admitted[id] += take;
+                Grant::Admitted(take as usize)
+            },
+        );
+        admitted
+    }
+
+    #[test]
+    fn backlogged_weights_3_to_1_admit_in_exact_ratio() {
+        // Acceptance criterion: 2 models, weights 3:1, both saturated —
+        // admitted accounting matches 3:1 within one quantum per round.
+        let mut fs = FairScheduler::new(&[policy(8, 3), policy(8, 1)]).unwrap();
+        let q = fs.quantum();
+        assert_eq!(q, 8);
+        let mut backlog = [1_000_000u64, 1_000_000u64];
+        let mut tot = [0u64, 0u64];
+        for _ in 0..100 {
+            let adm = drain_round(&mut fs, &mut backlog, 1);
+            // per-round deviation from the weighted share is < 1 quantum
+            assert!(adm[0] <= 3 * q + q, "round admitted {} for weight 3", adm[0]);
+            assert!(adm[1] <= q + q, "round admitted {} for weight 1", adm[1]);
+            tot[0] += adm[0];
+            tot[1] += adm[1];
+        }
+        // 1-image requests divide the quantum exactly: the ratio is exact
+        assert_eq!(tot[0], 3 * tot[1], "admitted {tot:?}");
+        assert_eq!(tot[1], 100 * q);
+        // zero starvation: the low-weight model was served every round
+        assert!(tot[1] > 0);
+    }
+
+    #[test]
+    fn ragged_requests_stay_within_one_quantum_per_round() {
+        // 3-image requests do not divide max_batch 8: per-round
+        // admissions overshoot by at most one batch (< one quantum).
+        let mut fs = FairScheduler::new(&[policy(8, 3), policy(8, 1)]).unwrap();
+        let q = fs.quantum() as i64;
+        let mut backlog = [600_000u64, 600_000u64];
+        let mut tot = [0i64, 0i64];
+        for _ in 0..200 {
+            let adm = drain_round(&mut fs, &mut backlog, 3);
+            tot[0] += adm[0] as i64;
+            tot[1] += adm[1] as i64;
+            // cumulative deviation from the 3:1 share stays bounded by
+            // one quantum per model (the unspent deficit)
+            assert!((tot[0] - 3 * tot[1]).abs() <= 4 * q, "{tot:?}");
+        }
+        assert!(tot[0] > 0 && tot[1] > 0);
+    }
+
+    #[test]
+    fn oversized_request_goes_negative_then_recovers() {
+        let mut fs = FairScheduler::new(&[policy(8, 1), policy(8, 1)]).unwrap();
+        let q = fs.quantum() as i64; // 8
+        // Model 0's front request is 50 images (oversized, admitted
+        // whole once any credit exists), then stays backlogged with
+        // full batches; model 1 is backlogged throughout.
+        let mut oversize_left = true;
+        let mut per_round_m0 = Vec::new();
+        let mut m1 = 0u64;
+        for round in 0..10 {
+            let mut adm0 = 0u64;
+            fs.service(
+                &mut |_| true,
+                &mut |id, max_images| {
+                    if id == 0 {
+                        let got = if oversize_left {
+                            oversize_left = false;
+                            50 // single oversized request, admitted alone
+                        } else {
+                            max_images
+                        };
+                        adm0 += got as u64;
+                        Grant::Admitted(got)
+                    } else {
+                        m1 += max_images as u64;
+                        Grant::Admitted(max_images)
+                    }
+                },
+            );
+            per_round_m0.push(adm0);
+            if round == 0 {
+                // charged in full: deficit went negative (q - 50)
+                assert_eq!(fs.deficit(0), q - 50);
+            }
+        }
+        // Rounds 1..=5 pay the debt back (credit +q per round from -42);
+        // round 6 the model is above zero again and admits a batch.
+        assert_eq!(per_round_m0[0], 50);
+        assert_eq!(&per_round_m0[1..6], &[0, 0, 0, 0, 0]);
+        assert!(per_round_m0[6] > 0, "{per_round_m0:?}");
+        // model 1 kept its full share every round meanwhile
+        assert_eq!(m1, 10 * fs.quantum());
+        // long-run totals converge back toward the 1:1 weights
+        let m0: u64 = per_round_m0.iter().sum();
+        assert!(m0.abs_diff(m1) <= 2 * fs.quantum(), "m0 {m0} m1 {m1}");
+    }
+
+    #[test]
+    fn single_model_degenerates_to_continuous_batching() {
+        // PR 2 behavior: one model, any weight — every round admits at
+        // least one full batch, and a backlog drains in
+        // ceil(backlog / round_admission) back-to-back rounds with no
+        // deficit ever blocking a ready batch for more than one round.
+        for weight in [1u32, 7] {
+            let mut fs = FairScheduler::new(&[policy(16, weight)]).unwrap();
+            let mut backlog = [1000u64];
+            let mut rounds = 0u64;
+            while backlog[0] > 0 {
+                let before = backlog[0];
+                let adm = drain_round(&mut fs, &mut backlog, 1);
+                assert!(
+                    adm[0] >= before.min(16),
+                    "a ready model admits >= one full batch (got {})",
+                    adm[0]
+                );
+                rounds += 1;
+                assert!(rounds <= 1000, "drain must terminate");
+            }
+            // weight only changes round granularity, not completion
+            assert_eq!(backlog[0], 0, "weight {weight}");
+        }
+    }
+
+    #[test]
+    fn blocked_passes_do_not_bank_credit() {
+        let mut fs = FairScheduler::new(&[policy(8, 2)]).unwrap();
+        // model is ready but admission is fully backpressured: the
+        // cursor parks, and parked wakeups must not re-credit
+        for _ in 0..10 {
+            fs.service(&mut |_| true, &mut |_, _| Grant::Blocked);
+        }
+        // credit is one visit's worth, not 10 wakeups' worth
+        assert_eq!(fs.deficit(0), 2 * fs.quantum() as i64);
+        // idle drops the unused credit entirely
+        fs.service(&mut |_| false, &mut |_, _| Grant::Skip);
+        assert_eq!(fs.deficit(0), 0);
+    }
+
+    #[test]
+    fn backpressure_parks_the_cursor_so_low_ids_cannot_lap_high_ids() {
+        // Regression: with weights 3:1 and an in-flight cap that fits
+        // only 2 batches, a restart-at-id-0 scheduler would let model 0
+        // refill the cap on every wakeup and starve model 1 forever.
+        // The parked cursor must keep the 3:1 share instead.
+        let mut fs = FairScheduler::new(&[policy(8, 3), policy(8, 1)]).unwrap();
+        let cap = 16u64; // images, = inflight_cap(8, workers=2)
+        let mut in_flight = 0u64;
+        let mut completions: Vec<(usize, u64)> = Vec::new(); // (model, images)
+        let mut served = [0u64, 0u64];
+        // event loop: each iteration = one wakeup (completion or initial)
+        for _ in 0..400 {
+            fs.service(
+                &mut |_| true, // both models saturated forever
+                &mut |id, max_images| {
+                    if in_flight >= cap {
+                        return Grant::Blocked;
+                    }
+                    let got = max_images as u64;
+                    in_flight += got;
+                    completions.push((id, got));
+                    served[id] += got;
+                    Grant::Admitted(max_images)
+                },
+            );
+            // complete the oldest batch (pool FIFO), freeing capacity
+            if !completions.is_empty() {
+                let (_, done) = completions.remove(0);
+                in_flight -= done;
+            }
+        }
+        assert!(served[1] > 0, "high-id model starved: {served:?}");
+        let ratio = served[0] as f64 / served[1] as f64;
+        assert!(
+            (ratio - 3.0).abs() < 0.5,
+            "weighted share lost under backpressure: {served:?} (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn oversize_debt_survives_idle_gaps() {
+        // Regression: a model must not erase oversize debt by going
+        // briefly idle — only positive credit is dropped when not ready.
+        let mut fs = FairScheduler::new(&[policy(8, 1), policy(8, 1)]).unwrap();
+        let q = fs.quantum() as i64;
+        // model 0 admits a 50-image oversized request...
+        fs.service(
+            &mut |id| id == 0,
+            &mut |id, _| {
+                if id == 0 {
+                    Grant::Admitted(50)
+                } else {
+                    Grant::Skip
+                }
+            },
+        );
+        assert_eq!(fs.deficit(0), q - 50);
+        // ...then goes idle for several passes while model 1 runs
+        for _ in 0..5 {
+            fs.service(&mut |id| id == 1, &mut |_, m| Grant::Admitted(m));
+        }
+        // the debt is still owed (idle dropped nothing below zero)
+        assert_eq!(fs.deficit(0), q - 50, "idle gap forgave oversize debt");
+    }
+
+    #[test]
+    fn debt_is_floored_at_one_protocol_max_request() {
+        // A string of force-admitted oversized requests (idle-pool work
+        // conservation) must not bank unbounded debt: the floor keeps
+        // post-idle starvation bounded by one max request's repayment.
+        let mut fs = FairScheduler::new(&[policy(8, 1)]).unwrap();
+        for _ in 0..100 {
+            fs.charge(0, 4096);
+        }
+        assert_eq!(fs.deficit(0), DEBT_FLOOR);
+        assert_eq!(DEBT_FLOOR, -4096);
+        // in-pass oversize admissions hit the same floor
+        let mut fs = FairScheduler::new(&[policy(8, 1)]).unwrap();
+        let mut left = 3u32;
+        for _ in 0..3 {
+            fs.service(
+                &mut |_| true,
+                &mut |_, _| {
+                    if left == 0 {
+                        return Grant::Skip;
+                    }
+                    left -= 1;
+                    Grant::Admitted(4096)
+                },
+            );
+        }
+        assert!(fs.deficit(0) >= DEBT_FLOOR, "{}", fs.deficit(0));
+    }
+
+    fn pending(n: usize) -> (Pending, mpsc::Receiver<Result<Vec<u32>, String>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                images: vec![0.0; n],
+                n,
+                reply: tx,
+                enqueued_at: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn queue_poll_tracks_fill_deadline_and_shutdown() {
+        let q = BatchQueue::new(8192, 4);
+        let stats = Stats::default();
+        let wait = Duration::from_secs(3600);
+        let now = Instant::now();
+        assert_eq!(q.poll(4, wait, now), Poll::Empty);
+        let (p, _rx) = pending(2);
+        assert!(q.push(p, &stats).is_some());
+        // 2 < 4 images and the deadline is an hour out -> Wait
+        match q.poll(4, wait, now) {
+            Poll::Wait(d) => assert!(d > now),
+            other => panic!("want Wait, got {other:?}"),
+        }
+        assert!(q.try_pop(4, wait, now, &stats).is_none());
+        // deadline expiry makes the same queue Ready
+        let later = now + wait + Duration::from_secs(1);
+        assert_eq!(q.poll(4, wait, later), Poll::Ready);
+        // filling to max_batch makes it Ready immediately
+        let (p, _rx2) = pending(2);
+        assert!(q.push(p, &stats).is_some());
+        assert_eq!(q.poll(4, wait, now), Poll::Ready);
+        let batch = q.try_pop(4, wait, now, &stats).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+        // drained + shutdown
+        q.shutdown();
+        assert_eq!(q.poll(4, wait, now), Poll::Drained);
+    }
+
+    #[test]
+    fn push_rings_only_on_became_admissible_transitions() {
+        let q = BatchQueue::new(8192, 4);
+        let stats = Stats::default();
+        // empty -> non-empty: the scheduler knows no deadline yet
+        let (p, _r1) = pending(1);
+        assert_eq!(q.push(p, &stats), Some(true));
+        // Wait -> Wait (2 < 4 images): front deadline unchanged, no ring
+        let (p, _r2) = pending(1);
+        assert_eq!(q.push(p, &stats), Some(false));
+        // crossing the max_batch fill (2 -> 4): Wait -> Ready, ring
+        let (p, _r3) = pending(2);
+        assert_eq!(q.push(p, &stats), Some(true));
+        // already Ready by fill: further pushes don't re-ring
+        let (p, _r4) = pending(3);
+        assert_eq!(q.push(p, &stats), Some(false));
+        // drain back to empty; the next push rings again
+        let now = Instant::now();
+        while q.try_pop(4, Duration::ZERO, now, &stats).is_some() {
+            if stats.queue_depth.load(Ordering::Relaxed) == 0 {
+                break;
+            }
+        }
+        let (p, _r5) = pending(1);
+        assert_eq!(q.push(p, &stats), Some(true));
+    }
+
+    #[test]
+    fn queue_coalesces_up_to_max_images() {
+        let q = BatchQueue::new(8192, 4);
+        let stats = Stats::default();
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let (p, rx) = pending(2);
+            assert!(q.push(p, &stats).is_some());
+            rxs.push(rx);
+        }
+        assert_eq!(stats.queue_peak.load(Ordering::Relaxed), 6);
+        let now = Instant::now();
+        // max 4 takes the first two requests (2+2), leaves one
+        let batch = q.try_pop(4, Duration::ZERO, now, &stats).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.iter().map(|p| p.n).sum::<usize>(), 4);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 2);
+        let batch = q.try_pop(4, Duration::ZERO, now, &stats).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn queue_admits_oversized_request_alone() {
+        let q = BatchQueue::new(8192, 8);
+        let stats = Stats::default();
+        let (p, _rx) = pending(100);
+        assert!(q.push(p, &stats).is_some());
+        let (p2, _rx2) = pending(1);
+        assert!(q.push(p2, &stats).is_some());
+        let batch = q
+            .try_pop(8, Duration::ZERO, Instant::now(), &stats)
+            .unwrap();
+        assert_eq!(batch.len(), 1, "oversized request dispatched alone");
+        assert_eq!(batch[0].n, 100);
+    }
+
+    #[test]
+    fn full_queue_blocks_push_until_pop_frees_space() {
+        let q = Arc::new(BatchQueue::new(4, 4));
+        let stats = Arc::new(Stats::default());
+        let (p, _rx1) = pending(4);
+        assert!(q.push(p, &stats).is_some());
+        // the queue is at its image cap: a second push must block on
+        // not_full until the scheduler drains, then admit via its ticket
+        let (p2, _rx2) = pending(3);
+        let pusher = {
+            let (q, s) = (q.clone(), stats.clone());
+            std::thread::spawn(move || q.push(p2, &s).is_some())
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!pusher.is_finished(), "push admitted past the image cap");
+        let batch = q
+            .try_pop(4, Duration::ZERO, Instant::now(), &stats)
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].n, 4);
+        assert!(pusher.join().unwrap(), "blocked push must admit after the drain");
+        let batch = q
+            .try_pop(4, Duration::ZERO, Instant::now(), &stats)
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].n, 3);
+    }
+
+    #[test]
+    fn queue_drains_after_shutdown_then_reports_drained() {
+        let q = BatchQueue::new(8192, 64);
+        let stats = Stats::default();
+        let (p, _rx) = pending(3);
+        assert!(q.push(p, &stats).is_some());
+        q.shutdown();
+        let now = Instant::now();
+        // queued work is still admissible (shutdown forces Ready)...
+        assert_eq!(q.poll(64, Duration::from_secs(60), now), Poll::Ready);
+        let batch = q.try_pop(64, Duration::from_secs(60), now, &stats).unwrap();
+        assert_eq!(batch.len(), 1);
+        // ...then the scheduler is told this model is done, and pushes
+        // are refused
+        assert_eq!(q.poll(64, Duration::ZERO, now), Poll::Drained);
+        let (p2, _rx2) = pending(1);
+        assert!(q.push(p2, &stats).is_none());
+    }
+
+    #[test]
+    fn doorbell_rings_are_never_lost() {
+        let d = Arc::new(Doorbell::new());
+        let seen = d.epoch();
+        // ring BEFORE the wait: wait_past must return immediately
+        d.ring();
+        d.wait_past(seen, None);
+        // timeout path returns without a ring
+        let seen = d.epoch();
+        let t0 = Instant::now();
+        d.wait_past(seen, Some(Instant::now() + Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // a concurrent ring wakes a parked waiter
+        let d2 = d.clone();
+        let seen = d.epoch();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            d2.ring();
+        });
+        d.wait_past(seen, None);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn inflight_cap_scales_with_quantum_and_workers() {
+        assert_eq!(inflight_cap(64, 2), 128);
+        assert_eq!(inflight_cap(1, 8), 16);
+        assert!(inflight_cap(4096, 4) >= 8192);
+    }
+}

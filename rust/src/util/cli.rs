@@ -105,6 +105,16 @@ impl Args {
     }
 }
 
+/// Split one `key=value` token (both sides non-empty). Used by the
+/// `;key=value` policy tails of `--model` specs, kept here so every
+/// key/value mini-grammar in the CLI reports the same shape of error.
+pub fn split_kv(pair: &str) -> Result<(&str, &str)> {
+    match pair.split_once('=') {
+        Some((k, v)) if !k.is_empty() && !v.is_empty() => Ok((k, v)),
+        _ => bail!("expected key=value, got {pair:?}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +179,16 @@ mod tests {
     fn bad_number_errors() {
         let a = Args::parse(v(&["x", "--n", "abc"])).unwrap();
         assert!(a.num_flag::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn split_kv_accepts_pairs_and_rejects_malformed() {
+        assert_eq!(split_kv("weight=3").unwrap(), ("weight", "3"));
+        // value may itself contain '=' (split at the first one)
+        assert_eq!(split_kv("k=a=b").unwrap(), ("k", "a=b"));
+        assert!(split_kv("weight").is_err());
+        assert!(split_kv("=3").is_err());
+        assert!(split_kv("weight=").is_err());
+        assert!(split_kv("").is_err());
     }
 }

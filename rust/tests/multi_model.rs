@@ -14,7 +14,7 @@ use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use aquant::config::ServeConfig;
+use aquant::config::{PolicyOverrides, ServeConfig};
 use aquant::nn::engine::Engine;
 use aquant::nn::registry::ModelRegistry;
 use aquant::nn::synth;
@@ -222,4 +222,149 @@ fn many_models_shared_pool_round_robin() {
             "model {id}"
         );
     }
+}
+
+#[test]
+fn trickle_model_is_not_starved_by_saturating_model() {
+    // Starvation regression for the fair scheduler: model 0 ("hog",
+    // weight 3) saturates the pool from several pipelined clients while
+    // model 1 ("trickle", weight 1, zero straggler wait) sends one
+    // image at a time. Every trickle request must complete within a
+    // bounded number of scheduler rounds and stay bit-identical to its
+    // sequential engine — under FCFS admission it would instead sit
+    // behind the hog's entire backlog.
+    let hog = Arc::new(synth::engine_from_spec("tiny", 11).unwrap());
+    let trickle = Arc::new(synth::engine_from_spec("bench", 22).unwrap());
+    let registry = ModelRegistry::with_policies(vec![
+        (
+            "hog".into(),
+            hog.clone(),
+            PolicyOverrides {
+                weight: Some(3),
+                ..PolicyOverrides::default()
+            },
+        ),
+        (
+            "trickle".into(),
+            trickle.clone(),
+            PolicyOverrides {
+                weight: Some(1),
+                max_batch: Some(4),
+                batch_wait_us: Some(0),
+                ..PolicyOverrides::default()
+            },
+        ),
+    ])
+    .unwrap();
+    let (hog_clients, hog_reqs, hog_batch) = (3usize, 60usize, 8usize);
+    let trickle_reqs = 8usize;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_wait_us: 200,
+        // 16-image bound < the hogs' 3x8 peak queued images, so
+        // per-model queue backpressure genuinely engages during the run
+        // and the fairness assertions hold with pushes blocking too
+        queue_images: 16,
+        max_conns: Some(hog_clients + 1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(Arc::new(registry), cfg);
+
+    let mut hogs = Vec::new();
+    for c in 0..hog_clients {
+        let engine = hog.clone();
+        hogs.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut rng = Rng::new(4000 + c as u64);
+            for r in 0..hog_reqs {
+                let images = random_images(&mut rng, hog_batch, engine.img_elems());
+                let got = classify_on_v2(&mut stream, 0, &images, hog_batch).unwrap();
+                assert_eq!(got, expected(&engine, &images, hog_batch), "hog {c} req {r}");
+            }
+        }));
+    }
+    // Let the hogs build a backlog before the trickle starts.
+    std::thread::sleep(std::time::Duration::from_millis(20));
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut rng = Rng::new(4100);
+    for r in 0..trickle_reqs {
+        let images = random_images(&mut rng, 1, trickle.img_elems());
+        let rounds_before = stats.rounds.load(Ordering::Relaxed);
+        let got = classify_on_v2(&mut stream, 1, &images, 1).unwrap();
+        let delta = stats.rounds.load(Ordering::Relaxed) - rounds_before;
+        assert_eq!(got, expected(&trickle, &images, 1), "trickle req {r}");
+        // Bounded starvation: the weighted scheduler admits a ready
+        // model every round, and the in-flight cap keeps rounds tied to
+        // pool completions, so a trickle request never waits more than
+        // a handful of rounds. 64 is a very generous ceiling — FCFS
+        // behind the hog backlog would blow far past it or time out.
+        assert!(delta <= 64, "trickle req {r} took {delta} scheduler rounds");
+    }
+    drop(stream);
+    for h in hogs {
+        h.join().unwrap();
+    }
+    server.join().unwrap().unwrap();
+
+    let m0 = stats.model(0).unwrap();
+    let m1 = stats.model(1).unwrap();
+    assert_eq!(
+        m0.requests.load(Ordering::Relaxed),
+        (hog_clients * hog_reqs) as u64
+    );
+    assert_eq!(m1.requests.load(Ordering::Relaxed), trickle_reqs as u64);
+    assert_eq!(m1.images.load(Ordering::Relaxed), trickle_reqs as u64);
+    // the trickle model was admitted on its own (sequential 1-image
+    // requests cannot coalesce)
+    assert_eq!(m1.admitted.load(Ordering::Relaxed), trickle_reqs as u64);
+    assert!(m0.admitted.load(Ordering::Relaxed) > 0);
+    assert_eq!(stats.total_rejected(), 0);
+    assert!(stats.rounds.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn policy_tails_thread_from_cli_specs_to_bound_server() {
+    use aquant::config::ModelSpec;
+    use aquant::server::Server;
+
+    // spec tail -> ModelSpec -> registry entry -> resolved Policy on a
+    // bound server, with server-level defaults filling the gaps
+    let specs = vec![
+        ModelSpec::parse("a=synth:tiny;weight=3;max_batch=4", None, None).unwrap(),
+        ModelSpec::parse("b=synth:bench:7;batch_wait_us=0", None, None).unwrap(),
+    ];
+    let registry = Arc::new(ModelRegistry::from_specs(&specs, |_| unreachable!()).unwrap());
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 16,
+        batch_wait_us: 300,
+        queue_images: 128,
+        max_conns: Some(0),
+        ..ServeConfig::default()
+    };
+    let srv = Server::bind(registry.clone(), "127.0.0.1:0", cfg.clone()).unwrap();
+    let p = srv.policies();
+    assert_eq!(p.len(), 2);
+    assert_eq!((p[0].weight, p[0].max_batch), (3, 4));
+    assert_eq!(p[0].batch_wait_us, 300, "unset key inherits the global knob");
+    assert_eq!(p[0].queue_images, 128);
+    assert_eq!((p[1].weight, p[1].max_batch), (1, 16));
+    assert_eq!(p[1].batch_wait_us, 0);
+    srv.run().unwrap(); // max_conns 0: binds, drains, exits cleanly
+
+    // a per-model policy that violates the bounds fails at bind
+    let bad = ModelRegistry::with_policies(vec![(
+        "a".into(),
+        Arc::new(synth::engine_from_spec("tiny", 1).unwrap()),
+        aquant::config::PolicyOverrides {
+            queue_images: Some(4),
+            max_batch: Some(8),
+            ..Default::default()
+        },
+    )])
+    .unwrap();
+    let err = Server::bind(Arc::new(bad), "127.0.0.1:0", cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("queue_images"), "{err:#}");
 }

@@ -1,0 +1,245 @@
+//! Property tests for the fair scheduler's deficit-round-robin core
+//! (`server::sched::FairScheduler`): weighted-share accounting, bounded
+//! per-round deviation, starvation freedom, and the single-model
+//! degenerate case — all driven deterministically through the
+//! `ready`/`admit` callbacks (no threads, sockets, or clocks).
+
+use aquant::server::{FairScheduler, Grant, Policy};
+use aquant::util::prop;
+use aquant::util::rng::Rng;
+
+fn policy(max_batch: usize, weight: u32) -> Policy {
+    Policy {
+        max_batch,
+        batch_wait_us: 0,
+        queue_images: 1 << 20,
+        weight,
+    }
+}
+
+/// Random scheduler shape: 2..=5 models with random weights and
+/// max_batches, plus a per-model request size (all ≤ max_batch, so no
+/// oversize debt — that case has its own unit test in sched.rs).
+fn random_setup(rng: &mut Rng) -> (Vec<Policy>, Vec<usize>) {
+    let n = 2 + (rng.next_u64() % 4) as usize;
+    let mut policies = Vec::new();
+    let mut req_sizes = Vec::new();
+    for _ in 0..n {
+        let max_batch = 1 + (rng.next_u64() % 32) as usize;
+        let weight = 1 + (rng.next_u64() % 8) as u32;
+        policies.push(policy(max_batch, weight));
+        req_sizes.push(1 + (rng.next_u64() % max_batch as u64) as usize);
+    }
+    (policies, req_sizes)
+}
+
+/// One unblocked DRR pass (== one classic round) over simulated
+/// per-model backlogs: each `admit` pops whole `req_sizes[id]`-image
+/// requests up to the `max_images` bound (always at least one request,
+/// mirroring BatchQueue::try_pop).
+fn sim_round(
+    fs: &mut FairScheduler,
+    backlog: &mut [u64],
+    req_sizes: &[usize],
+) -> Vec<u64> {
+    let mut admitted = vec![0u64; backlog.len()];
+    // readiness snapshot at pass start, exactly like the real
+    // scheduler loop's queue polls (ready and admit cannot alias)
+    let ready: Vec<bool> = backlog.iter().map(|b| *b > 0).collect();
+    fs.service(
+        &mut |id| ready[id],
+        &mut |id, max_images| {
+            if backlog[id] == 0 {
+                return Grant::Skip;
+            }
+            let r = req_sizes[id] as u64;
+            let per = ((max_images / req_sizes[id]).max(1) as u64) * r;
+            let take = per.min(backlog[id]);
+            backlog[id] -= take;
+            admitted[id] += take;
+            Grant::Admitted(take as usize)
+        },
+    );
+    admitted
+}
+
+#[test]
+fn prop_backlogged_admission_tracks_weights() {
+    prop::check_default("admission-tracks-weights", |rng| {
+        let (policies, req_sizes) = random_setup(rng);
+        let n = policies.len();
+        let mut fs = FairScheduler::new(&policies).unwrap();
+        let q = fs.quantum();
+        let rounds = 20 + (rng.next_u64() % 60);
+        // effectively infinite backlogs: nobody drains within `rounds`
+        let mut backlog = vec![u64::MAX / 2; n];
+        let mut tot = vec![0u64; n];
+        for _ in 0..rounds {
+            let adm = sim_round(&mut fs, &mut backlog, &req_sizes);
+            for id in 0..n {
+                tot[id] += adm[id];
+                // per-round overshoot past the weighted share is less
+                // than one batch (= at most one quantum)
+                let share = q * policies[id].weight as u64;
+                assert!(
+                    adm[id] < share + q,
+                    "model {id} admitted {} in one round (share {share}, quantum {q})",
+                    adm[id]
+                );
+            }
+        }
+        // cumulative service per weight unit agrees across models to
+        // within one quantum + one request (the unspent deficit)
+        let max_req = *req_sizes.iter().max().unwrap() as i64;
+        for i in 0..n {
+            for j in 0..n {
+                let per_w_i = tot[i] as i64 / policies[i].weight as i64;
+                let per_w_j = tot[j] as i64 / policies[j].weight as i64;
+                assert!(
+                    (per_w_i - per_w_j).abs() <= 2 * (q as i64 + max_req),
+                    "models {i},{j}: per-weight service {per_w_i} vs {per_w_j} \
+                     (q {q}, tot {tot:?}, weights {:?})",
+                    policies.iter().map(|p| p.weight).collect::<Vec<_>>(),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_every_ready_model_is_served_every_round() {
+    // Starvation freedom: while requests are no larger than max_batch,
+    // a backlogged model admits at least one request in EVERY round,
+    // whatever the other models' weights are.
+    prop::check_default("no-round-starvation", |rng| {
+        let (policies, req_sizes) = random_setup(rng);
+        let n = policies.len();
+        let mut fs = FairScheduler::new(&policies).unwrap();
+        let mut backlog = vec![u64::MAX / 2; n];
+        for round in 0..50 {
+            let adm = sim_round(&mut fs, &mut backlog, &req_sizes);
+            for id in 0..n {
+                assert!(
+                    adm[id] > 0,
+                    "round {round}: backlogged model {id} starved ({adm:?})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_deficits_stay_bounded() {
+    // |deficit| never exceeds one round's credit (positive side) or one
+    // batch (negative side): the accounting cannot drift over time.
+    prop::check_default("deficit-bounded", |rng| {
+        let (policies, req_sizes) = random_setup(rng);
+        let n = policies.len();
+        let mut fs = FairScheduler::new(&policies).unwrap();
+        let q = fs.quantum() as i64;
+        let mut backlog: Vec<u64> = (0..n).map(|_| rng.next_u64() % 10_000).collect();
+        for _ in 0..100 {
+            // intermittent traffic: occasionally refill a random model
+            if rng.next_u64() % 4 == 0 {
+                let id = (rng.next_u64() % n as u64) as usize;
+                backlog[id] += rng.next_u64() % 1000;
+            }
+            sim_round(&mut fs, &mut backlog, &req_sizes);
+            for id in 0..n {
+                let d = fs.deficit(id);
+                let hi = q * policies[id].weight as i64;
+                let lo = -(policies[id].max_batch as i64);
+                assert!(
+                    d <= hi && d >= lo,
+                    "model {id} deficit {d} outside [{lo}, {hi}]"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_backpressure_preserves_weighted_shares() {
+    // Regression for the parked-cursor design: with a tight in-flight
+    // cap, a scheduler that restarted at id 0 on every wakeup would let
+    // model 0 refill the cap each time and starve high ids entirely
+    // (verified: the restart variant serves [3208, 0] in the 3:1 unit
+    // scenario). The persistent cursor must keep per-weight service
+    // equal for ALL models under any cap.
+    prop::check("backpressure-weighted-shares", 64, |rng| {
+        let (policies, _req) = random_setup(rng);
+        let n = policies.len();
+        let mut fs = FairScheduler::new(&policies).unwrap();
+        let q = fs.quantum();
+        // 1..=3 quanta of in-flight headroom: tight enough that most
+        // visits block mid-service
+        let cap = q * (1 + rng.next_u64() % 3);
+        let mut in_flight = 0u64;
+        let mut fifo = std::collections::VecDeque::new();
+        let mut served = vec![0u64; n];
+        // event loop: each iteration is one wakeup; the oldest batch in
+        // the pool FIFO completes between wakeups
+        for _ in 0..600 {
+            fs.service(
+                &mut |_| true, // every model saturated throughout
+                &mut |id, max_images| {
+                    if in_flight >= cap {
+                        return Grant::Blocked;
+                    }
+                    in_flight += max_images as u64;
+                    fifo.push_back(max_images as u64);
+                    served[id] += max_images as u64;
+                    Grant::Admitted(max_images)
+                },
+            );
+            if let Some(done) = fifo.pop_front() {
+                in_flight -= done;
+            }
+        }
+        for (id, s) in served.iter().enumerate() {
+            assert!(*s > 0, "model {id} starved under backpressure: {served:?}");
+        }
+        let per_w: Vec<f64> = served
+            .iter()
+            .zip(&policies)
+            .map(|(s, p)| *s as f64 / p.weight as f64)
+            .collect();
+        let mx = per_w.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = per_w.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            mx - mn <= 4.0 * q as f64,
+            "weighted shares lost under backpressure: served {served:?}, \
+             per-weight {per_w:?}, quantum {q}"
+        );
+    });
+}
+
+#[test]
+fn prop_single_model_degenerates_to_continuous_batching() {
+    // PR 2 equivalence: with one hosted model, weight is irrelevant and
+    // every round admits at least one full batch (or the remainder), so
+    // a backlog of B images drains in at most ceil(B / max_batch)
+    // back-to-back rounds — the old single-batcher cadence.
+    prop::check_default("single-model-degenerate", |rng| {
+        let max_batch = 1 + (rng.next_u64() % 64) as usize;
+        let weight = 1 + (rng.next_u64() % 8) as u32;
+        let req = 1 + (rng.next_u64() % max_batch as u64) as usize;
+        let mut fs = FairScheduler::new(&[policy(max_batch, weight)]).unwrap();
+        let total = 1 + rng.next_u64() % 5_000;
+        let mut backlog = vec![total];
+        let per_batch = ((max_batch / req).max(1) * req) as u64;
+        let max_rounds = (total + per_batch - 1) / per_batch;
+        let mut rounds = 0u64;
+        while backlog[0] > 0 {
+            let before = backlog[0];
+            let adm = sim_round(&mut fs, &mut backlog, &[req]);
+            assert!(
+                adm[0] >= before.min(per_batch),
+                "round admitted {} of {before} (per-batch {per_batch})",
+                adm[0]
+            );
+            rounds += 1;
+            assert!(rounds <= max_rounds + 1, "drain exceeded the PR 2 round bound");
+        }
+    });
+}

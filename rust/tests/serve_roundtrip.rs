@@ -92,6 +92,38 @@ fn single_image_zero_wait_roundtrip() {
 }
 
 #[test]
+fn oversized_pipelined_requests_never_wedge_the_scheduler() {
+    // Every request is larger than max_batch, so each admission drives
+    // the model's DRR deficit negative. With no other traffic and
+    // nothing in flight, only the scheduler's work-conservation path
+    // can admit the next one — without it, request 2 would hang
+    // forever behind the debt.
+    let engine = synth_engine(31);
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 2,
+        batch_wait_us: 0,
+        max_conns: Some(1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut rng = Rng::new(32);
+    for r in 0..5 {
+        let images = random_images(&mut rng, 8, engine.img_elems());
+        let got = classify_on(&mut stream, &images, 8).unwrap();
+        assert_eq!(got, expected(&engine, &images, 8), "oversized req {r}");
+    }
+    drop(stream);
+    server.join().unwrap().unwrap();
+    let m = stats.default_model();
+    assert_eq!(m.requests.load(Ordering::Relaxed), 5);
+    assert_eq!(m.images.load(Ordering::Relaxed), 40);
+    // oversized requests are admitted alone: one batch each
+    assert_eq!(m.admitted.load(Ordering::Relaxed), 5);
+}
+
+#[test]
 fn nan_payload_is_answered_and_does_not_kill_workers() {
     // A NaN pixel must not panic a pool worker (that would permanently
     // shrink the pool): the request gets *some* answer and the server

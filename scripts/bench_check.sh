@@ -5,7 +5,11 @@
 #       below the floor (default 1.5x, override BENCH_SPEEDUP_FLOOR), or
 #   (b) absolute throughput (4 workers, 64-image batch) regresses more
 #       than 20% below the best prior entry in bench_history/ (override
-#       BENCH_REGRESSION_FRAC, e.g. 0.3 for 30%).
+#       BENCH_REGRESSION_FRAC, e.g. 0.3 for 30%), or
+#   (c) the mixed-model row (tiny+bench interleaved through one shared
+#       pool, "mixed_w4_b32x2_images_per_sec") regresses more than the
+#       same fraction below the best prior entry that has it (older
+#       history entries without the key are skipped, not failed).
 # Each passing run is appended to bench_history/ as serve_NNN.json, so
 # the directory is the PR-over-PR perf trajectory.
 set -euo pipefail
@@ -52,29 +56,48 @@ if cur is None:
 
 # Compare against the best prior trajectory entry (absolute throughput
 # moves with the hardware; the 20% window absorbs machine noise while
-# still catching a real serving-path regression).
-prior = []
+# still catching a real serving-path regression). One pass over the
+# history files feeds both metrics.
+MIXED = "mixed_w4_b32x2_images_per_sec"
+mixed = blob.get(MIXED)
+if mixed is None:
+    sys.exit(f"bench_check: FAIL - no {MIXED} in the blob")
+
+prior, mixed_prior = [], []
 for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
     try:
-        v = ips(json.load(open(path)))
-    except (ValueError, KeyError):
+        entry = json.load(open(path))
+        v = ips(entry)          # KeyError/TypeError on an off-schema row
+        m = entry.get(MIXED)
+    except (ValueError, KeyError, TypeError, AttributeError):
         print(f"bench_check: warning - unreadable history entry {path}", file=sys.stderr)
         continue
     if v is not None:
         prior.append((v, path))
-if prior:
-    best, best_path = max(prior)
+    if m is not None:
+        mixed_prior.append((m, path))
+
+def gate(label, value, history, no_prior_msg):
+    if not history:
+        print(no_prior_msg)
+        return
+    best, best_path = max(history)
     print(
-        f"bench_check: w4/b64 throughput {cur:.0f} img/s vs best prior "
-        f"{best:.0f} img/s ({os.path.basename(best_path)}, {len(prior)} entries)"
+        f"bench_check: {label} {value:.0f} img/s vs best prior "
+        f"{best:.0f} img/s ({os.path.basename(best_path)}, {len(history)} entries)"
     )
-    if cur < best * (1.0 - regression):
+    if value < best * (1.0 - regression):
         sys.exit(
-            f"bench_check: FAIL - throughput regressed >{regression:.0%} "
-            f"vs {best_path} ({cur:.0f} < {best * (1.0 - regression):.0f} img/s)"
+            f"bench_check: FAIL - {label} regressed >{regression:.0%} "
+            f"vs {best_path} ({value:.0f} < {best * (1.0 - regression):.0f} img/s)"
         )
-else:
-    print("bench_check: no prior bench_history entries; starting the trajectory")
+
+gate("w4/b64 throughput", cur, prior,
+     "bench_check: no prior bench_history entries; starting the trajectory")
+# Mixed-model trajectory: same window, keyed on the multi-model row
+# (entries predating the row simply lack the key and are skipped).
+gate("mixed 2-model throughput", mixed, mixed_prior,
+     f"bench_check: no prior {MIXED} entries; starting the mixed trajectory")
 
 os.makedirs(hist_dir, exist_ok=True)
 # next index = max existing + 1 (a plain count would re-use an index —
