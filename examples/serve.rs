@@ -53,7 +53,9 @@ fn main() -> Result<()> {
         workers: arg_n(5, 0),
         max_batch: arg_n(6, 64),
         batch_wait_us: arg_n(7, 200) as u64,
-        max_conns: Some(clients),
+        // bounded run: the event loop accepts one connection per client
+        // thread, then drains and returns
+        max_accepts: Some(clients),
         ..ServeConfig::default()
     };
 

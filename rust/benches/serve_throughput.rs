@@ -2,16 +2,22 @@
 //! 1/2/4 and batch sizes 1/8/64 over a synthetic model with learned
 //! borders on every layer (the serving hot loop), plus a mixed-model
 //! row — tiny and bench batches interleaved through ONE shared pool,
-//! the multi-model serving shape the fair scheduler admits into.
+//! the multi-model serving shape the fair scheduler admits into — and
+//! a high-connection-count row: 256 concurrent TCP clients pipelining
+//! requests through the readiness event loop end to end (sockets,
+//! decode, queue, scheduler, pool, response writes).
 //!
 //! Prints human rows plus a machine-readable JSON blob; set
 //! `BENCH_JSON=path` to write the blob to a file instead
 //! (`scripts/bench_check.sh` uses this to emit BENCH_serve.json, guard
-//! the 4-worker speedup floor, and track the mixed row in
-//! `bench_history/`).
+//! the 4-worker speedup floor, and track the mixed + 256-connection
+//! rows in `bench_history/`).
 
+use std::io::Write as _;
 use std::sync::Arc;
+use std::time::Instant;
 
+use aquant::config::ServeConfig;
 use aquant::nn::pool::InferencePool;
 use aquant::nn::registry::ModelRegistry;
 use aquant::nn::synth;
@@ -112,6 +118,83 @@ fn main() {
         ips
     };
 
+    // High-connection-count row: 256 concurrent clients against a real
+    // event-loop server (tiny model, so the wire layer — not the
+    // matmuls — dominates). Every client pipelines `reqs` 8-image
+    // requests; 8 driver threads multiplex 32 connections each, so
+    // all 256 connections are genuinely concurrent while the server
+    // side runs them on ONE readiness loop. Wall clock over the whole
+    // burst → images/sec.
+    let conns_ips = {
+        let conns = 256usize;
+        let driver_threads = 8usize;
+        let reqs = 4usize;
+        let batch = 8usize;
+        let tiny_srv = Arc::new(synth::engine_from_spec("tiny", 42).expect("tiny spec"));
+        let elems = tiny_srv.img_elems();
+        let cfg = ServeConfig {
+            workers: 4,
+            max_batch: 64,
+            batch_wait_us: 200,
+            max_accepts: Some(conns),
+            ..ServeConfig::default()
+        };
+        let srv = aquant::server::Server::bind_single(tiny_srv, "127.0.0.1:0", cfg)
+            .expect("bind bench server");
+        let addr = srv.local_addr().expect("addr");
+        let server = std::thread::spawn(move || srv.run());
+        let payload: Vec<u8> = {
+            let imgs: Vec<f32> = (0..batch * elems).map(|_| rng.range_f32(-1.0, 3.0)).collect();
+            let mut req = (batch as u32).to_le_bytes().to_vec();
+            for v in &imgs {
+                req.extend_from_slice(&v.to_le_bytes());
+            }
+            req
+        };
+        let t0 = Instant::now();
+        let mut drivers = Vec::new();
+        for _ in 0..driver_threads {
+            let per = conns / driver_threads;
+            let payload = payload.clone();
+            drivers.push(std::thread::spawn(move || {
+                let mut socks: Vec<std::net::TcpStream> = (0..per)
+                    .map(|_| std::net::TcpStream::connect(addr).expect("connect"))
+                    .collect();
+                // write everything first: all connections in flight at once
+                for s in socks.iter_mut() {
+                    for _ in 0..reqs {
+                        s.write_all(&payload).expect("request");
+                    }
+                }
+                for s in socks.iter_mut() {
+                    for _ in 0..reqs {
+                        use std::io::Read as _;
+                        let mut hdr = [0u8; 4];
+                        s.read_exact(&mut hdr).expect("response header");
+                        let m = u32::from_le_bytes(hdr) as usize;
+                        assert_eq!(m, batch, "short response");
+                        let mut buf = vec![0u8; m * 4];
+                        s.read_exact(&mut buf).expect("response body");
+                    }
+                }
+            }));
+        }
+        for d in drivers {
+            d.join().expect("driver");
+        }
+        let wall = t0.elapsed();
+        server.join().expect("server thread").expect("serve ok");
+        let total = (conns * reqs * batch) as f64;
+        let ips = total / wall.as_secs_f64();
+        println!(
+            "serve/conns256/pipelined {:>10.1}ms {:>12.0} images/s \
+             (256 conns, one event loop)",
+            wall.as_secs_f64() * 1e3,
+            ips
+        );
+        ips
+    };
+
     let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"rows\": [\n");
     for (i, (w, b, v, us)) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -122,6 +205,7 @@ fn main() {
     }
     json.push_str(&format!(
         "  ],\n  \"mixed_w4_b32x2_images_per_sec\": {mixed_ips:.1},\n  \
+         \"conns256_images_per_sec\": {conns_ips:.1},\n  \
          \"speedup_w4_vs_w1_b64\": {speedup:.3}\n}}\n"
     ));
     match std::env::var("BENCH_JSON") {

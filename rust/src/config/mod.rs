@@ -411,8 +411,9 @@ impl ModelSpec {
 }
 
 /// Serving-runtime knobs, threaded from the CLI (`aquant serve` /
-/// `examples/serve.rs`) into the dynamic-batching server:
-/// `--workers`, `--max-batch`, `--batch-wait-us`, `--queue-images`.
+/// `examples/serve.rs`) into the event-loop server: `--workers`,
+/// `--max-batch`, `--batch-wait-us`, `--queue-images`, `--max-conns`,
+/// `--conn-timeout-ms`, `--max-accepts`, `--io-poll`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServeConfig {
     /// Inference worker threads. 0 = auto (cores − 1).
@@ -425,9 +426,21 @@ pub struct ServeConfig {
     pub batch_wait_us: u64,
     /// Bound on queued images; full queue backpressures connections.
     pub queue_images: usize,
-    /// Accept at most this many connections (`--max-conns`, also used
-    /// by tests/examples for bounded runs); None = run until killed.
+    /// Concurrent-connection cap (`--max-conns`): accepts beyond it
+    /// are closed immediately and counted; None = unbounded.
     pub max_conns: Option<usize>,
+    /// Idle/read timeout per connection in ms (`--conn-timeout-ms`):
+    /// a connection the server owes nothing that moves no bytes for
+    /// this long is closed (slow-loris / dead-peer reclamation).
+    /// 0 = never.
+    pub conn_timeout_ms: u64,
+    /// Accept at most this many connections then drain and return
+    /// (`--max-accepts`; bounded runs for tests/examples); None = run
+    /// until killed.
+    pub max_accepts: Option<usize>,
+    /// Force the portable `poll(2)` readiness backend (`--io-poll`)
+    /// instead of the platform default (epoll on Linux).
+    pub poll_fallback: bool,
 }
 
 impl Default for ServeConfig {
@@ -438,6 +451,9 @@ impl Default for ServeConfig {
             batch_wait_us: 200,
             queue_images: 8192,
             max_conns: None,
+            conn_timeout_ms: 0,
+            max_accepts: None,
+            poll_fallback: false,
         }
     }
 }
@@ -454,19 +470,23 @@ impl ServeConfig {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("--workers={v} is not a number (or 'auto')"))?,
         };
-        let max_conns = match args.str_flag_opt("max-conns") {
-            None => None,
-            Some(v) => Some(
-                v.parse()
-                    .map_err(|_| anyhow::anyhow!("--max-conns={v} is not a number"))?,
-            ),
+        let opt_count = |flag: &str| -> Result<Option<usize>> {
+            match args.str_flag_opt(flag) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.parse().map_err(|_| {
+                    anyhow::anyhow!("--{flag}={v} is not a number")
+                })?)),
+            }
         };
         let cfg = ServeConfig {
             workers,
             max_batch: args.num_flag("max-batch", d.max_batch)?,
             batch_wait_us: args.num_flag("batch-wait-us", d.batch_wait_us)?,
             queue_images: args.num_flag("queue-images", d.queue_images)?,
-            max_conns,
+            max_conns: opt_count("max-conns")?,
+            conn_timeout_ms: args.num_flag("conn-timeout-ms", d.conn_timeout_ms)?,
+            max_accepts: opt_count("max-accepts")?,
+            poll_fallback: args.bool_flag("io-poll"),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -487,6 +507,10 @@ impl ServeConfig {
     /// this serves on, low enough that thread spawning cannot fail
     /// halfway through startup.
     pub const MAX_WORKERS: usize = 1024;
+
+    /// Upper bound on the per-connection idle/read timeout (1 hour):
+    /// beyond that "never" (`0`) is what the operator means.
+    pub const MAX_CONN_TIMEOUT_MS: u64 = 3_600_000;
 
     pub fn validate(&self) -> Result<()> {
         if self.max_batch == 0 {
@@ -519,6 +543,19 @@ impl ServeConfig {
                  panicking mid-way through thread spawning)",
                 self.workers,
                 Self::MAX_WORKERS
+            );
+        }
+        if self.max_conns == Some(0) {
+            bail!(
+                "--max-conns 0 would reject every connection \
+                 (use --max-accepts 0 for a bind-only run)"
+            );
+        }
+        if self.conn_timeout_ms > Self::MAX_CONN_TIMEOUT_MS {
+            bail!(
+                "--conn-timeout-ms ({}) must be <= {} (1h); use 0 for no timeout",
+                self.conn_timeout_ms,
+                Self::MAX_CONN_TIMEOUT_MS
             );
         }
         Ok(())
@@ -640,10 +677,39 @@ mod tests {
         assert_eq!(cfg.workers, 0);
         assert!(cfg.resolved_workers() >= 1);
         assert_eq!(cfg.max_conns, None);
+        assert_eq!(cfg.max_accepts, None);
+        assert_eq!(cfg.conn_timeout_ms, 0);
+        assert!(!cfg.poll_fallback);
 
         let cfg = ServeConfig::from_args(&a(&["serve", "--max-conns", "12"])).unwrap();
         assert_eq!(cfg.max_conns, Some(12));
         assert!(ServeConfig::from_args(&a(&["serve", "--max-conns", "many"])).is_err());
+        // 0 concurrent connections is a config error, not a silent DoS
+        assert!(ServeConfig::from_args(&a(&["serve", "--max-conns", "0"])).is_err());
+
+        let cfg = ServeConfig::from_args(&a(&[
+            "serve",
+            "--max-accepts",
+            "3",
+            "--conn-timeout-ms",
+            "250",
+            "--io-poll",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.max_accepts, Some(3));
+        assert_eq!(cfg.conn_timeout_ms, 250);
+        assert!(cfg.poll_fallback);
+        // --max-accepts 0 is the bind-only run used by tests
+        let cfg = ServeConfig::from_args(&a(&["serve", "--max-accepts", "0"])).unwrap();
+        assert_eq!(cfg.max_accepts, Some(0));
+        assert!(ServeConfig::from_args(&a(&["serve", "--max-accepts", "soon"])).is_err());
+        // timeout is bounded (1h); 0 = never
+        assert!(
+            ServeConfig::from_args(&a(&["serve", "--conn-timeout-ms", "3600000"])).is_ok()
+        );
+        assert!(
+            ServeConfig::from_args(&a(&["serve", "--conn-timeout-ms", "3600001"])).is_err()
+        );
 
         assert!(ServeConfig::from_args(&a(&["serve", "--workers", "lots"])).is_err());
         assert!(ServeConfig::from_args(&a(&["serve", "--max-batch", "0"])).is_err());

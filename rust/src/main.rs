@@ -57,6 +57,7 @@ USAGE: aquant <subcommand> [flags]
   serve     --model SPEC [--model SPEC ...] [--method X] [--bits WaAb]
             [--addr H:P] [--iters N] [--workers N|auto] [--max-batch N]
             [--batch-wait-us N] [--queue-images N] [--max-conns N]
+            [--conn-timeout-ms N] [--max-accepts N] [--io-poll]
             [--stats-every-s N]
 
 methods: nearest adaround brecq qdrop aquant aquant-linear aquant-nofusion
@@ -84,9 +85,17 @@ serve knobs: --workers (inference threads shared by all models; auto =
   cores-1), --max-batch (images coalesced per engine batch, default 64),
   --batch-wait-us (per-model straggler deadline once a request is
   pending, default 200), --queue-images (per-model queue bound before
-  connections backpressure, default 8192), --max-conns (stop after N
-  connections; default: run forever), --stats-every-s (periodic stats,
-  default 30, 0 = off)
+  connections backpressure, default 8192), --stats-every-s (periodic
+  stats, default 30, 0 = off)
+
+connection I/O (one epoll event loop owns every socket — connections
+cost state, not threads): --max-conns (concurrent-connection cap;
+accepts beyond it are closed immediately and counted; default
+unbounded), --conn-timeout-ms (idle/read deadline for connections the
+server owes nothing — slow-loris & dead-peer reclamation; default 0 =
+never), --max-accepts (accept N connections then drain and exit;
+bounded runs for tests/benches; default: run forever), --io-poll
+(force the portable poll(2) backend instead of epoll)
 ";
 
 #[cfg(feature = "pjrt")]

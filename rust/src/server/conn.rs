@@ -1,0 +1,1247 @@
+//! Event-driven connection I/O: ONE readiness loop owns every client
+//! socket in non-blocking mode, replacing the thread-per-connection
+//! accept loop. Connection counts now cost a few hundred bytes of
+//! state each instead of a stack + thread, which is what lets the
+//! serving tier hold thousands of mostly-idle clients in front of the
+//! PR 4 scheduler.
+//!
+//! # Shape
+//!
+//! ```text
+//!   Poller (epoll / poll(2), util::poll) ── readiness ──► EventLoop
+//!     token 0: listener   → accept (reject over --max-conns)
+//!     token 1: self-pipe  → pool completions rang; flush responses,
+//!                           retry queue-parked requests
+//!     token n: connection → per-connection state machine:
+//!                           header sniff v1/v2 → streamed f32 payload
+//!                           → try_push to the model's BatchQueue
+//!                           → (in-order) reply staging → partial-write
+//!                           flush
+//! ```
+//!
+//! The BatchQueue / FairScheduler / InferencePool seam is untouched:
+//! the loop pushes the same `Pending`s the blocking handlers did, and
+//! completions travel the same per-request channel — the only addition
+//! is that [`super::sched::ReplySink`] rings this loop's
+//! [`crate::util::poll::Waker`] so a completion interrupts the kernel
+//! wait.
+//!
+//! # Invariants
+//!
+//! * **Bit-identical serving**: request decode, validation order,
+//!   rejection stats, and response encoding are byte-for-byte the
+//!   blocking server's; per-connection responses go out in request
+//!   order (pipelined requests may now *execute* concurrently, but
+//!   every image's forward pass is independent, so results cannot
+//!   change — pinned by the unchanged integration suites).
+//! * **Bounded buffers**: payloads decode straight into the request's
+//!   `Vec<f32>` (allocation tracks the validated `n`, capped by the
+//!   4096-image protocol limit); staged responses stop being pulled
+//!   from their channels past [`WRITE_BUF_SOFT_CAP`] so a non-reading
+//!   client cannot balloon the write buffer.
+//! * **Backpressure without blocking**: a full model queue parks the
+//!   connection (read interest off — the kernel's receive window takes
+//!   over) instead of blocking the loop. Liveness: a full queue is
+//!   non-empty, the scheduler must eventually pop it (fill or straggler
+//!   deadline), every popped batch ends in a completion, and every
+//!   completion rings the waker, which retries parked connections.
+//! * **A dead client poisons nothing**: response writes are
+//!   non-blocking with partial-write carry; `EPIPE`/reset closes that
+//!   connection only, and batch completions to dropped receivers are
+//!   no-ops.
+//!
+//! Per wakeup the loop sweeps all live connections for reply/park
+//! progress — O(open conns), fine into the thousands this tier
+//! targets; a dirty-list is the known next step beyond that (see
+//! ROADMAP).
+
+use std::collections::VecDeque;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::registry::ModelRegistry;
+use crate::util::poll::{Event, Interest, Poller, Waker};
+
+use super::sched::{BatchQueue, Doorbell, Pending, ReplySink, TryPush};
+use super::{RequestHeader, ServerStats, MAGIC, MAX_REQ_IMAGES, PROTO_VERSION, V2_HEADER_LEN};
+
+/// Stop staging completed replies into a connection's write buffer past
+/// this many unflushed bytes; they wait in their channels instead (the
+/// data exists either way — this just caps the copy).
+const WRITE_BUF_SOFT_CAP: usize = 256 * 1024;
+
+/// Largest single read. Payload reads use it whole; header reads are
+/// exact-sized (≤ 12 bytes), so one read can never span a request
+/// boundary and parking needs no stash buffer.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Reads per connection per readiness event before yielding back to the
+/// loop (level-triggered polling re-reports leftover data), so one
+/// fire-hose sender cannot starve its neighbours.
+const READ_BUDGET: usize = 8;
+
+// ---------------------------------------------------------------------
+// Incremental request decoder (pure; fuzzed by proto_props.rs)
+// ---------------------------------------------------------------------
+
+/// What one [`RequestDecoder::feed`] produced.
+#[derive(Debug, PartialEq)]
+pub enum Decoded {
+    /// Everything consumed, nothing completed yet.
+    NeedMore,
+    /// A full header arrived. The caller must validate it and either
+    /// call [`RequestDecoder::begin_payload`] or abandon the stream —
+    /// until then [`RequestDecoder::want`] is 0 and `feed` is a no-op.
+    Header(RequestHeader),
+    /// The in-progress request's payload completed.
+    Request {
+        header: RequestHeader,
+        images: Vec<f32>,
+    },
+}
+
+enum DecodeState {
+    /// Accumulating header bytes. `need` is 4 for the sniff window and
+    /// grows to [`V2_HEADER_LEN`] once the magic word appears.
+    Header {
+        buf: [u8; V2_HEADER_LEN],
+        got: usize,
+        need: usize,
+    },
+    /// Header emitted; waiting for the caller's verdict.
+    Gate(RequestHeader),
+    /// Streaming payload bytes, decoding to f32 as they arrive. `carry`
+    /// holds a split f32 across short reads.
+    Payload {
+        header: RequestHeader,
+        images: Vec<f32>,
+        /// Raw payload bytes still expected.
+        remaining: usize,
+        carry: [u8; 4],
+        carry_len: usize,
+    },
+}
+
+/// Incremental decoder for the wire protocol: the streaming counterpart
+/// of [`super::read_request_header`] plus payload accumulation, driven
+/// by whatever byte slices the socket yields. Framing only — range
+/// checks on `n` / version / model id stay the server's job (their
+/// rejection stats differ), which is why a parsed header gates payload
+/// streaming on an explicit [`RequestDecoder::begin_payload`].
+///
+/// Panic-free and allocation-bounded for ARBITRARY input: garbage bytes
+/// parse as a (v1) header whose `n` the server then rejects; payload
+/// allocation happens only after the caller accepted the header. Pinned
+/// by the fuzz properties in `rust/tests/proto_props.rs`.
+pub struct RequestDecoder {
+    state: DecodeState,
+}
+
+impl Default for RequestDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestDecoder {
+    pub fn new() -> RequestDecoder {
+        RequestDecoder {
+            state: DecodeState::Header {
+                buf: [0; V2_HEADER_LEN],
+                got: 0,
+                need: 4,
+            },
+        }
+    }
+
+    /// Bytes the decoder can use right now (size reads to this; 0 means
+    /// a header is gated on [`RequestDecoder::begin_payload`]).
+    pub fn want(&self) -> usize {
+        match &self.state {
+            DecodeState::Header { got, need, .. } => need - got,
+            DecodeState::Gate(_) => 0,
+            DecodeState::Payload { remaining, .. } => *remaining,
+        }
+    }
+
+    /// Header bytes accumulated so far when mid-header (EOF semantics:
+    /// `Some(1..=3)` is still inside the sniff window and counts as a
+    /// clean close; `Some(4..)` is a truncated v2 frame). `None` when
+    /// not in the header state.
+    pub fn header_progress(&self) -> Option<usize> {
+        match &self.state {
+            DecodeState::Header { got, .. } => Some(*got),
+            _ => None,
+        }
+    }
+
+    /// The header awaiting a [`RequestDecoder::begin_payload`] / reject
+    /// decision, if any.
+    pub fn gated(&self) -> Option<RequestHeader> {
+        match &self.state {
+            DecodeState::Gate(h) => Some(*h),
+            _ => None,
+        }
+    }
+
+    /// Accept the gated header and start streaming its payload for a
+    /// model with `img_elems` f32s per image. Caller has validated
+    /// `n` (≤ [`MAX_REQ_IMAGES`]), so the allocation here is bounded.
+    pub fn begin_payload(&mut self, img_elems: usize) {
+        let header = match &self.state {
+            DecodeState::Gate(h) => *h,
+            _ => {
+                debug_assert!(false, "begin_payload outside the header gate");
+                return;
+            }
+        };
+        let n = header.n() as usize;
+        self.state = DecodeState::Payload {
+            header,
+            images: Vec::with_capacity(n * img_elems),
+            remaining: n * img_elems * 4,
+            carry: [0; 4],
+            carry_len: 0,
+        };
+    }
+
+    /// Feed bytes; consumes `min(bytes.len(), want())` and returns
+    /// `(consumed, event)`. At most one event per call when fed at most
+    /// `want()` bytes (exact-sized reads guarantee that); oversized
+    /// slices are partially consumed — loop on `consumed`.
+    pub fn feed(&mut self, bytes: &[u8]) -> (usize, Decoded) {
+        match &mut self.state {
+            DecodeState::Gate(_) => (0, Decoded::NeedMore),
+            DecodeState::Header { buf, got, need } => {
+                let take = bytes.len().min(*need - *got);
+                buf[*got..*got + take].copy_from_slice(&bytes[..take]);
+                *got += take;
+                if *got < *need {
+                    return (take, Decoded::NeedMore);
+                }
+                if *need == 4 && buf[..4] == MAGIC {
+                    *need = V2_HEADER_LEN; // sniffed v2: extend the header
+                    return (take, Decoded::NeedMore);
+                }
+                let header = if *need == 4 {
+                    RequestHeader::V1 {
+                        n: u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]),
+                    }
+                } else {
+                    RequestHeader::V2 {
+                        version: u16::from_le_bytes([buf[4], buf[5]]),
+                        model_id: u16::from_le_bytes([buf[6], buf[7]]),
+                        n: u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]),
+                    }
+                };
+                self.state = DecodeState::Gate(header);
+                (take, Decoded::Header(header))
+            }
+            DecodeState::Payload {
+                header,
+                images,
+                remaining,
+                carry,
+                carry_len,
+            } => {
+                let take = bytes.len().min(*remaining);
+                let mut src = &bytes[..take];
+                *remaining -= take;
+                // finish a split f32 first
+                if *carry_len > 0 {
+                    let fill = src.len().min(4 - *carry_len);
+                    carry[*carry_len..*carry_len + fill].copy_from_slice(&src[..fill]);
+                    *carry_len += fill;
+                    src = &src[fill..];
+                    if *carry_len == 4 {
+                        images.push(f32::from_le_bytes(*carry));
+                        *carry_len = 0;
+                    }
+                }
+                let whole = src.len() / 4 * 4;
+                images.extend(
+                    src[..whole]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+                );
+                let rest = &src[whole..];
+                carry[..rest.len()].copy_from_slice(rest);
+                *carry_len = rest.len();
+                if *remaining > 0 {
+                    return (take, Decoded::NeedMore);
+                }
+                debug_assert_eq!(*carry_len, 0, "payload is a multiple of 4 bytes");
+                let header = *header;
+                let images = std::mem::take(images);
+                self.state = DecodeState::Header {
+                    buf: [0; V2_HEADER_LEN],
+                    got: 0,
+                    need: 4,
+                };
+                (take, Decoded::Request { header, images })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Write buffer with partial-write carry
+// ---------------------------------------------------------------------
+
+/// Outcome of one [`WriteBuf::flush_to`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Flush {
+    /// Everything staged has hit the socket.
+    Done,
+    /// The socket stopped accepting bytes (`WouldBlock`); register
+    /// write interest and resume on writability.
+    Blocked,
+}
+
+/// Staged response bytes + how far the socket has taken them. The
+/// blocking server's `write_all` assumed a healthy socket; this is the
+/// explicit partial-write/EPIPE path (unit-tested below, exercised over
+/// real sockets by `rust/tests/conn_conformance.rs`).
+#[derive(Default)]
+struct WriteBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl WriteBuf {
+    /// Unflushed bytes.
+    fn len(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stage one response frame (`u32 n` + `n` class ids).
+    fn push_response(&mut self, preds: &[u32]) {
+        self.buf.reserve(4 + preds.len() * 4);
+        self.buf
+            .extend_from_slice(&(preds.len() as u32).to_le_bytes());
+        for p in preds {
+            self.buf.extend_from_slice(&p.to_le_bytes());
+        }
+    }
+
+    /// Write as much as the socket takes right now. `Err` is fatal for
+    /// the connection (EPIPE, reset, ...); `Interrupted` is retried
+    /// here, `WouldBlock` returns [`Flush::Blocked`].
+    fn flush_to(&mut self, w: &mut impl Write) -> io::Result<Flush> {
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ))
+                }
+                Ok(k) => self.pos += k,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    // keep flushed bytes from accumulating forever
+                    if self.pos >= WRITE_BUF_SOFT_CAP {
+                        self.buf.drain(..self.pos);
+                        self.pos = 0;
+                    }
+                    return Ok(Flush::Blocked);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.pos = 0;
+        Ok(Flush::Done)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-connection state
+// ---------------------------------------------------------------------
+
+/// One request in flight through queue/scheduler/pool, awaiting its
+/// reply. Per-connection replies are staged strictly in arrival order.
+struct InFlight {
+    model_id: u16,
+    rx: mpsc::Receiver<Result<Vec<u32>, String>>,
+}
+
+enum Phase {
+    /// Reading requests normally.
+    Open,
+    /// A fully-decoded request found its model queue full. Read
+    /// interest is off (TCP backpressure); retried on waker rings.
+    Parked {
+        model_id: u16,
+        pending: Pending,
+        rx: mpsc::Receiver<Result<Vec<u32>, String>>,
+    },
+    /// No more reads (clean half-close, or a counted protocol
+    /// rejection): answer everything already accepted, flush, close.
+    /// This preserves the blocking server's ordering guarantee that a
+    /// bad pipelined request never swallows its predecessors' replies.
+    Draining,
+}
+
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    decoder: RequestDecoder,
+    phase: Phase,
+    /// Replies owed, in request order (front is next on the wire).
+    inflight: VecDeque<InFlight>,
+    write: WriteBuf,
+    /// Interest currently registered with the poller.
+    interest: Interest,
+    /// Last byte actually moved (either direction) — the idle/read
+    /// timeout clock.
+    last_activity: Instant,
+}
+
+impl Conn {
+    /// Is the idle/read timeout armed for this connection? Never while
+    /// replies are owed, staged response bytes are unflushed, or a
+    /// request is parked: those waits are the *server's* obligations
+    /// and must not kill the client. (A reply sitting in the write
+    /// buffer is owed exactly as much as one still in its channel —
+    /// a congested-but-reading client keeps refreshing `last_activity`
+    /// through partial writes, so only truly stalled peers expire.)
+    fn timeout_eligible(&self) -> bool {
+        self.inflight.is_empty()
+            && self.write.is_empty()
+            && !matches!(self.phase, Phase::Parked { .. })
+    }
+}
+
+/// Why a connection was torn down (drives counters + logging).
+enum CloseReason {
+    /// Clean protocol end (EOF at a request boundary, drain finished —
+    /// including counted protocol rejections, which drain then close).
+    Done,
+    /// I/O failure or mid-frame truncation.
+    Error(anyhow::Error),
+    /// Idle/read deadline expired.
+    TimedOut,
+}
+
+// ---------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_BASE: u64 = 2;
+
+/// Everything [`run_event_loop`] multiplexes (built by `Server::run`).
+pub(crate) struct LoopCtx {
+    pub registry: Arc<ModelRegistry>,
+    /// One queue per model, indexed by model id (shared with the
+    /// scheduler).
+    pub queues: Vec<Arc<BatchQueue>>,
+    pub stats: Arc<ServerStats>,
+    /// The scheduler's doorbell (rung on became-admissible pushes).
+    pub doorbell: Arc<Doorbell>,
+    /// Concurrent-connection cap; beyond it accepts are rejected
+    /// (closed immediately, counted).
+    pub max_conns: Option<usize>,
+    /// Bounded-run knob: stop accepting after this many accepts and
+    /// return once the accepted connections finish.
+    pub max_accepts: Option<usize>,
+    /// Idle/read timeout (None = never).
+    pub conn_timeout: Option<Duration>,
+    /// Force the portable poll(2) backend.
+    pub poll_fallback: bool,
+}
+
+pub(crate) fn run_event_loop(listener: TcpListener, ctx: LoopCtx) -> Result<()> {
+    EventLoop::new(listener, ctx)?.run()
+}
+
+struct EventLoop {
+    ctx: LoopCtx,
+    poller: Poller,
+    waker: Arc<Waker>,
+    /// Accept source; dropped once `max_accepts` is reached.
+    listener: Option<TcpListener>,
+    /// Slot map: token = slot + TOKEN_BASE.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    open: usize,
+    accepted: usize,
+    accept_errs: u32,
+    /// Transient accept-error backoff: until this instant the listener
+    /// is masked in the poller and accepts are not retried. A deadline,
+    /// NOT a sleep — the loop thread keeps serving every open
+    /// connection while the listener cools down (fd exhaustion happens
+    /// exactly when thousands of connections need that service).
+    accept_retry_at: Option<Instant>,
+    listener_dead: bool,
+    /// Reusable read buffer (single-threaded loop: one is enough for
+    /// every connection).
+    chunk: Vec<u8>,
+}
+
+impl EventLoop {
+    fn new(listener: TcpListener, ctx: LoopCtx) -> Result<EventLoop> {
+        let mut poller = if ctx.poll_fallback {
+            Poller::with_poll_backend()
+        } else {
+            Poller::new()
+        }
+        .context("creating readiness poller")?;
+        let waker = Arc::new(Waker::new().context("creating loop waker")?);
+        poller
+            .register(waker.read_fd(), TOKEN_WAKER, Interest::READ)
+            .context("registering waker")?;
+        listener
+            .set_nonblocking(true)
+            .context("non-blocking listener")?;
+        let listener = if ctx.max_accepts == Some(0) {
+            None // "at most 0 connections" means accept none
+        } else {
+            use std::os::unix::io::AsRawFd;
+            poller
+                .register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+                .context("registering listener")?;
+            Some(listener)
+        };
+        Ok(EventLoop {
+            ctx,
+            poller,
+            waker,
+            listener,
+            conns: Vec::new(),
+            free: Vec::new(),
+            open: 0,
+            accepted: 0,
+            accept_errs: 0,
+            accept_retry_at: None,
+            listener_dead: false,
+            chunk: vec![0u8; READ_CHUNK],
+        })
+    }
+
+    fn run(mut self) -> Result<()> {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if self.listener.is_none() && self.open == 0 {
+                break; // bounded run complete (or listener abandoned)
+            }
+            let timeout = self.next_timeout();
+            self.poller
+                .wait(&mut events, timeout)
+                .context("poller wait")?;
+            let mut accept_ready = false;
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => accept_ready = true,
+                    TOKEN_WAKER => self.waker.drain(),
+                    _ => self.on_conn_event(*ev),
+                }
+            }
+            // Accept-backoff deadline reached: unmask the listener and
+            // retry (the masked fd emitted no event; the poller timeout
+            // brought us here).
+            if let Some(t) = self.accept_retry_at {
+                if Instant::now() >= t {
+                    self.accept_retry_at = None;
+                    if let Some(l) = &self.listener {
+                        use std::os::unix::io::AsRawFd;
+                        let _ =
+                            self.poller
+                                .modify(l.as_raw_fd(), TOKEN_LISTENER, Interest::READ);
+                    }
+                    accept_ready = true;
+                }
+            }
+            if accept_ready && self.accept_retry_at.is_none() {
+                self.accept_ready();
+            }
+            // Progress sweep: completions may have landed for any
+            // connection (the waker says "something finished", not
+            // which), and freed queue space un-parks in slot order.
+            self.sweep();
+            self.sweep_timeouts();
+        }
+        if self.listener_dead {
+            bail!("accept loop abandoned after repeated listener errors");
+        }
+        Ok(())
+    }
+
+    /// Earliest wake deadline: idle timeouts of eligible connections
+    /// and the accept-backoff retry (whichever comes first).
+    fn next_timeout(&self) -> Option<Duration> {
+        let now = Instant::now();
+        let retry = self
+            .accept_retry_at
+            .map(|t| t.checked_duration_since(now).unwrap_or(Duration::ZERO));
+        let idle = self.ctx.conn_timeout.and_then(|timeout| {
+            self.conns
+                .iter()
+                .flatten()
+                .filter(|c| c.timeout_eligible())
+                .map(|c| {
+                    (c.last_activity + timeout)
+                        .checked_duration_since(now)
+                        .unwrap_or(Duration::ZERO)
+                })
+                .min()
+        });
+        match (retry, idle) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn sweep_timeouts(&mut self) {
+        let Some(timeout) = self.ctx.conn_timeout else {
+            return;
+        };
+        let now = Instant::now();
+        for slot in 0..self.conns.len() {
+            let expired = matches!(
+                &self.conns[slot],
+                Some(c) if c.timeout_eligible() && now.duration_since(c.last_activity) >= timeout
+            );
+            if expired {
+                self.close(slot, CloseReason::TimedOut);
+            }
+        }
+    }
+
+    /// Retry parked pushes and stage/flush replies on every live
+    /// connection.
+    fn sweep(&mut self) {
+        for slot in 0..self.conns.len() {
+            if self.conns[slot].is_some() {
+                self.progress(slot);
+            }
+        }
+    }
+
+    // -- accept path --------------------------------------------------
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    self.accept_errs = 0;
+                    self.accepted += 1;
+                    self.ctx
+                        .stats
+                        .conns_accepted
+                        .fetch_add(1, Ordering::Relaxed);
+                    if self.ctx.max_conns.map(|m| self.open >= m).unwrap_or(false) {
+                        // Admission rejection: accepted (the kernel
+                        // already completed the handshake) and closed
+                        // straight back. Cheaper than a thread ever was.
+                        self.ctx
+                            .stats
+                            .conns_rejected
+                            .fetch_add(1, Ordering::Relaxed);
+                        drop(stream);
+                    } else if let Err(e) = self.install(stream) {
+                        eprintln!("aquant-serve: failed to install connection: {e:#}");
+                    }
+                    if self.ctx.max_accepts.map(|m| self.accepted >= m).unwrap_or(false) {
+                        self.drop_listener();
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    // Transient accept failures (fd exhaustion under
+                    // load) must not kill a long-lived server; a long
+                    // unbroken streak means the listener is gone.
+                    self.accept_errs += 1;
+                    eprintln!(
+                        "aquant-serve: accept error ({} in a row): {e}",
+                        self.accept_errs
+                    );
+                    if self.accept_errs >= 1000 {
+                        eprintln!("aquant-serve: giving up on accept loop");
+                        self.listener_dead = true;
+                        self.drop_listener();
+                    } else {
+                        // Cool down WITHOUT blocking the loop: mask the
+                        // listener (level-triggered readability would
+                        // otherwise spin the poller hot) and arm a
+                        // retry deadline that next_timeout honors.
+                        use std::os::unix::io::AsRawFd;
+                        let _ = self.poller.modify(
+                            listener.as_raw_fd(),
+                            TOKEN_LISTENER,
+                            Interest {
+                                readable: false,
+                                writable: false,
+                            },
+                        );
+                        self.accept_retry_at =
+                            Some(Instant::now() + Duration::from_millis(10));
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drop_listener(&mut self) {
+        if let Some(l) = self.listener.take() {
+            use std::os::unix::io::AsRawFd;
+            let _ = self.poller.deregister(l.as_raw_fd());
+        }
+    }
+
+    fn install(&mut self, stream: TcpStream) -> Result<()> {
+        stream.set_nonblocking(true).context("non-blocking conn")?;
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.conns.push(None);
+                self.conns.len() - 1
+            }
+        };
+        let token = slot as u64 + TOKEN_BASE;
+        {
+            use std::os::unix::io::AsRawFd;
+            if let Err(e) = self.poller.register(stream.as_raw_fd(), token, Interest::READ) {
+                self.free.push(slot);
+                return Err(e).context("registering conn");
+            }
+        }
+        self.conns[slot] = Some(Conn {
+            stream,
+            token,
+            decoder: RequestDecoder::new(),
+            phase: Phase::Open,
+            inflight: VecDeque::new(),
+            write: WriteBuf::default(),
+            interest: Interest::READ,
+            last_activity: Instant::now(),
+        });
+        self.open += 1;
+        self.ctx
+            .stats
+            .conns_open
+            .store(self.open as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    // -- connection events --------------------------------------------
+
+    fn on_conn_event(&mut self, ev: Event) {
+        let slot = (ev.token - TOKEN_BASE) as usize;
+        // Stale event for a closed slot (possible when one wait batch
+        // holds several events and an earlier one closed the conn).
+        let Some(conn) = self.conns.get(slot).and_then(Option::as_ref) else {
+            return;
+        };
+        // Full close / error while not reading (parked or draining):
+        // the peer can neither send more nor receive answers — reclaim
+        // now. An Open connection discovers the same thing through its
+        // read path below, with proper EOF semantics.
+        if (ev.hangup || ev.error) && !matches!(conn.phase, Phase::Open) {
+            self.close(
+                slot,
+                CloseReason::Error(anyhow::anyhow!("peer closed while awaiting service")),
+            );
+            return;
+        }
+        if ev.writable {
+            if let Err(reason) = self.try_flush(slot) {
+                self.close(slot, reason);
+                return;
+            }
+        }
+        if let Some(conn) = self.conns.get(slot).and_then(Option::as_ref) {
+            if matches!(conn.phase, Phase::Open) {
+                if let Err(reason) = self.do_read(slot) {
+                    self.close(slot, reason);
+                    return;
+                }
+            }
+        }
+        self.progress(slot);
+    }
+
+    /// Read up to [`READ_BUDGET`] exact-need chunks, running the
+    /// decoder + validation + queue push on each.
+    fn do_read(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        for _ in 0..READ_BUDGET {
+            let conn = self.conns[slot].as_mut().expect("live conn");
+            if !matches!(conn.phase, Phase::Open) {
+                return Ok(());
+            }
+            let want = conn.decoder.want().min(READ_CHUNK);
+            if want == 0 {
+                // gated header — resolved below, then loop again
+            } else {
+                match conn.stream.read(&mut self.chunk[..want]) {
+                    Ok(0) => return self.on_eof(slot),
+                    Ok(k) => {
+                        conn.last_activity = Instant::now();
+                        let (consumed, event) = conn.decoder.feed(&self.chunk[..k]);
+                        debug_assert_eq!(consumed, k, "exact-need reads always fit");
+                        match event {
+                            Decoded::NeedMore => continue,
+                            Decoded::Header(_) => {} // gate handled below
+                            Decoded::Request { header, images } => {
+                                self.queue_request(slot, header, images)?;
+                                continue;
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        return Err(CloseReason::Error(
+                            anyhow::Error::from(e).context("reading request"),
+                        ))
+                    }
+                }
+            }
+            self.resolve_header_gate(slot)?;
+        }
+        Ok(())
+    }
+
+    /// EOF from the peer: clean at a request boundary (or inside the
+    /// 4-byte sniff window — the blocking server's rule), truncated
+    /// anywhere else. Clean EOF with replies still owed is the graceful
+    /// half-close path: the client `shutdown(WR)` and still gets every
+    /// answer.
+    fn on_eof(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        match conn.decoder.header_progress() {
+            Some(got) if got < 4 => {
+                conn.phase = Phase::Draining;
+                Ok(())
+            }
+            _ => Err(CloseReason::Error(anyhow::anyhow!(
+                "connection truncated mid-request"
+            ))),
+        }
+    }
+
+    /// Validate a gated header exactly as the blocking server did —
+    /// same order, same stats — then start payload streaming or drain.
+    fn resolve_header_gate(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        let Some(hdr) = conn.decoder.gated() else {
+            return Ok(());
+        };
+        if let RequestHeader::V2 { version, .. } = hdr {
+            if version != PROTO_VERSION {
+                self.ctx.stats.bad_version.fetch_add(1, Ordering::Relaxed);
+                conn.phase = Phase::Draining;
+                return Ok(());
+            }
+        }
+        let model_id = hdr.model_id();
+        let Some(entry) = self.ctx.registry.get(model_id) else {
+            self.ctx.stats.unknown_model.fetch_add(1, Ordering::Relaxed);
+            conn.phase = Phase::Draining;
+            return Ok(());
+        };
+        let n = hdr.n() as usize;
+        if n == 0 || n > MAX_REQ_IMAGES {
+            let stats = self.ctx.stats.model(model_id).expect("stats per model");
+            stats.rejected.fetch_add(1, Ordering::Relaxed);
+            conn.phase = Phase::Draining;
+            return Ok(());
+        }
+        conn.decoder.begin_payload(entry.engine.img_elems());
+        Ok(())
+    }
+
+    /// A complete request: build the Pending and push (or park).
+    fn queue_request(
+        &mut self,
+        slot: usize,
+        header: RequestHeader,
+        images: Vec<f32>,
+    ) -> std::result::Result<(), CloseReason> {
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending {
+            images,
+            n: header.n() as usize,
+            reply: ReplySink::with_waker(tx, self.waker.clone()),
+            enqueued_at: Instant::now(),
+        };
+        self.push_or_park(slot, header.model_id(), pending, rx)
+    }
+
+    /// The single park/unpark seam: try the model's queue; on success
+    /// the request joins the connection's in-flight line (ringing the
+    /// scheduler when the push is a became-admissible transition), on
+    /// `Full` the connection parks with the request intact. Used by
+    /// both the initial push and every waker-driven retry so the two
+    /// paths cannot drift apart.
+    fn push_or_park(
+        &mut self,
+        slot: usize,
+        model_id: u16,
+        pending: Pending,
+        rx: mpsc::Receiver<Result<Vec<u32>, String>>,
+    ) -> std::result::Result<(), CloseReason> {
+        let stats = self.ctx.stats.model(model_id).expect("validated id");
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        match self.ctx.queues[model_id as usize].try_push(pending, stats) {
+            TryPush::Queued(ring) => {
+                conn.phase = Phase::Open;
+                conn.inflight.push_back(InFlight { model_id, rx });
+                if ring {
+                    self.ctx.doorbell.ring();
+                }
+                Ok(())
+            }
+            TryPush::Full(pending) => {
+                conn.phase = Phase::Parked {
+                    model_id,
+                    pending,
+                    rx,
+                };
+                Ok(())
+            }
+            TryPush::Shutdown => Err(CloseReason::Error(anyhow::anyhow!("server shutting down"))),
+        }
+    }
+
+    // -- reply / write / park progress --------------------------------
+
+    /// Drive one connection forward: retry a parked push, stage
+    /// completed replies (in order), flush, update interest, close when
+    /// drained. Any failure closes the connection.
+    fn progress(&mut self, slot: usize) {
+        if let Err(reason) = self.progress_inner(slot) {
+            self.close(slot, reason);
+            return;
+        }
+        // Close fully-drained connections.
+        let done = {
+            let Some(conn) = self.conns[slot].as_ref() else {
+                return;
+            };
+            matches!(conn.phase, Phase::Draining)
+                && conn.inflight.is_empty()
+                && conn.write.is_empty()
+        };
+        if done {
+            self.close(slot, CloseReason::Done);
+        } else {
+            self.update_interest(slot);
+        }
+    }
+
+    fn progress_inner(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        self.retry_park(slot)?;
+        self.stage_replies(slot)?;
+        self.try_flush(slot)
+    }
+
+    /// Parked request: try the queue again (a completion freed pool
+    /// capacity, so the scheduler may have popped this model's queue).
+    /// On success the connection returns to `Open` and read interest
+    /// comes back via `update_interest`.
+    fn retry_park(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        if !matches!(conn.phase, Phase::Parked { .. }) {
+            return Ok(());
+        }
+        let Phase::Parked {
+            model_id,
+            pending,
+            rx,
+        } = std::mem::replace(&mut conn.phase, Phase::Open)
+        else {
+            unreachable!()
+        };
+        self.push_or_park(slot, model_id, pending, rx)
+    }
+
+    /// Move completed replies (front-first — responses stay in request
+    /// order) into the write buffer, up to the soft cap.
+    fn stage_replies(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        while let Some(front) = conn.inflight.front() {
+            if conn.write.len() >= WRITE_BUF_SOFT_CAP {
+                break;
+            }
+            match front.rx.try_recv() {
+                Ok(Ok(preds)) => {
+                    let stats = self.ctx.stats.model(front.model_id).expect("validated id");
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    conn.write.push_response(&preds);
+                    conn.inflight.pop_front();
+                }
+                Ok(Err(e)) => {
+                    return Err(CloseReason::Error(anyhow::anyhow!("inference failed: {e}")))
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    return Err(CloseReason::Error(anyhow::anyhow!(
+                        "scheduler dropped the request"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn try_flush(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        if conn.write.is_empty() {
+            return Ok(());
+        }
+        let before = conn.write.len();
+        match conn.write.flush_to(&mut conn.stream) {
+            Ok(_) => {
+                if conn.write.len() != before {
+                    conn.last_activity = Instant::now();
+                }
+                Ok(())
+            }
+            // EPIPE / reset from a dead client: close THIS connection;
+            // the batch it rode in on is untouched.
+            Err(e) => Err(CloseReason::Error(
+                anyhow::Error::from(e).context("writing response"),
+            )),
+        }
+    }
+
+    /// Reconcile poller interest with connection state: read only while
+    /// Open (parking/drain = TCP backpressure), write only while bytes
+    /// are staged.
+    fn update_interest(&mut self, slot: usize) {
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        let want = Interest {
+            readable: matches!(conn.phase, Phase::Open),
+            writable: !conn.write.is_empty(),
+        };
+        if want != conn.interest {
+            use std::os::unix::io::AsRawFd;
+            if self
+                .poller
+                .modify(conn.stream.as_raw_fd(), conn.token, want)
+                .is_ok()
+            {
+                conn.interest = want;
+            }
+        }
+    }
+
+    fn close(&mut self, slot: usize, reason: CloseReason) {
+        let Some(conn) = self.conns[slot].take() else {
+            return;
+        };
+        {
+            use std::os::unix::io::AsRawFd;
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        }
+        self.free.push(slot);
+        self.open -= 1;
+        self.ctx
+            .stats
+            .conns_open
+            .store(self.open as u64, Ordering::Relaxed);
+        match reason {
+            CloseReason::Done => {}
+            CloseReason::TimedOut => {
+                self.ctx
+                    .stats
+                    .conns_timed_out
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+            CloseReason::Error(e) => {
+                eprintln!("aquant-serve: connection error: {e:#}");
+            }
+        }
+        // conn drops here: stream closes, parked/in-flight receivers
+        // drop (completions to them become no-ops).
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v2_bytes(model_id: u16, n: u32) -> [u8; V2_HEADER_LEN] {
+        super::super::encode_header_v2(model_id, n)
+    }
+
+    #[test]
+    fn decoder_v1_header_then_payload_byte_by_byte() {
+        let mut d = RequestDecoder::new();
+        assert_eq!(d.want(), 4);
+        let hdr = 2u32.to_le_bytes();
+        for (i, b) in hdr.iter().enumerate() {
+            assert_eq!(d.header_progress(), Some(i));
+            let (c, ev) = d.feed(&[*b]);
+            assert_eq!(c, 1);
+            if i < 3 {
+                assert_eq!(ev, Decoded::NeedMore);
+            } else {
+                assert_eq!(ev, Decoded::Header(RequestHeader::V1 { n: 2 }));
+            }
+        }
+        assert_eq!(d.want(), 0, "gated until begin_payload");
+        assert_eq!(d.feed(&[9]), (0, Decoded::NeedMore), "gate consumes nothing");
+        d.begin_payload(3); // 2 images x 3 f32 = 24 bytes
+        assert_eq!(d.want(), 24);
+        let floats: Vec<f32> = (0..6).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        // drip one byte at a time: exercises the f32 carry
+        for (i, b) in bytes.iter().enumerate() {
+            let (c, ev) = d.feed(&[*b]);
+            assert_eq!(c, 1);
+            if i < bytes.len() - 1 {
+                assert_eq!(ev, Decoded::NeedMore, "byte {i}");
+            } else {
+                match ev {
+                    Decoded::Request { header, images } => {
+                        assert_eq!(header, RequestHeader::V1 { n: 2 });
+                        assert_eq!(images, floats);
+                    }
+                    other => panic!("want Request, got {other:?}"),
+                }
+            }
+        }
+        assert_eq!(d.want(), 4, "decoder reset for the next request");
+    }
+
+    #[test]
+    fn decoder_v2_sniff_extends_header() {
+        let mut d = RequestDecoder::new();
+        let hdr = v2_bytes(3, 1);
+        let (c, ev) = d.feed(&hdr[..4]);
+        assert_eq!((c, ev), (4, Decoded::NeedMore), "magic alone is not a header");
+        assert_eq!(d.want(), V2_HEADER_LEN - 4);
+        let (c, ev) = d.feed(&hdr[4..]);
+        assert_eq!(c, V2_HEADER_LEN - 4);
+        assert_eq!(
+            ev,
+            Decoded::Header(RequestHeader::V2 {
+                version: PROTO_VERSION,
+                model_id: 3,
+                n: 1
+            })
+        );
+        assert_eq!(d.header_progress(), None);
+    }
+
+    #[test]
+    fn decoder_oversized_slice_partially_consumed() {
+        let mut d = RequestDecoder::new();
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&1u32.to_le_bytes());
+        stream.extend_from_slice(&1.5f32.to_le_bytes());
+        stream.extend_from_slice(&7u32.to_le_bytes()); // next request's header
+        let (c, ev) = d.feed(&stream);
+        assert_eq!(c, 4, "header only");
+        assert_eq!(ev, Decoded::Header(RequestHeader::V1 { n: 1 }));
+        d.begin_payload(1);
+        let (c, ev) = d.feed(&stream[4..]);
+        assert_eq!(c, 4, "payload only — trailing bytes left for the caller");
+        match ev {
+            Decoded::Request { images, .. } => assert_eq!(images, vec![1.5f32]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decoder_garbage_is_a_v1_header_not_a_panic() {
+        // arbitrary non-magic bytes always parse as a v1 header whose n
+        // the server then range-checks — no state for garbage to corrupt
+        let mut d = RequestDecoder::new();
+        let (_, ev) = d.feed(&[0xde, 0xad, 0xbe, 0xef]);
+        match ev {
+            Decoded::Header(RequestHeader::V1 { n }) => {
+                assert_eq!(n, u32::from_le_bytes([0xde, 0xad, 0xbe, 0xef]));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    struct Throttled {
+        taken: Vec<u8>,
+        budget: usize,
+        dead: bool,
+    }
+
+    impl Write for Throttled {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.dead {
+                return Err(io::Error::new(ErrorKind::BrokenPipe, "EPIPE"));
+            }
+            if self.budget == 0 {
+                return Err(io::Error::new(ErrorKind::WouldBlock, "full"));
+            }
+            let k = buf.len().min(self.budget);
+            self.taken.extend_from_slice(&buf[..k]);
+            self.budget -= k;
+            Ok(k)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_buf_partial_writes_resume_where_they_stopped() {
+        let mut wb = WriteBuf::default();
+        wb.push_response(&[1, 2, 3]);
+        wb.push_response(&[4]);
+        let total = wb.len();
+        assert_eq!(total, (4 + 12) + (4 + 4));
+        let mut sink = Throttled {
+            taken: Vec::new(),
+            budget: 5, // mid-frame cut
+            dead: false,
+        };
+        assert_eq!(wb.flush_to(&mut sink).unwrap(), Flush::Blocked);
+        assert_eq!(wb.len(), total - 5);
+        sink.budget = 7;
+        assert_eq!(wb.flush_to(&mut sink).unwrap(), Flush::Blocked);
+        sink.budget = usize::MAX;
+        assert_eq!(wb.flush_to(&mut sink).unwrap(), Flush::Done);
+        assert!(wb.is_empty());
+        // byte-exact reassembly across three partial flushes
+        let mut want = Vec::new();
+        want.extend_from_slice(&3u32.to_le_bytes());
+        for p in [1u32, 2, 3] {
+            want.extend_from_slice(&p.to_le_bytes());
+        }
+        want.extend_from_slice(&1u32.to_le_bytes());
+        want.extend_from_slice(&4u32.to_le_bytes());
+        assert_eq!(sink.taken, want);
+        // staging keeps working after a full flush
+        wb.push_response(&[9]);
+        assert_eq!(wb.len(), 8);
+    }
+
+    #[test]
+    fn write_buf_surfaces_epipe() {
+        let mut wb = WriteBuf::default();
+        wb.push_response(&[0; 4]);
+        let mut sink = Throttled {
+            taken: Vec::new(),
+            budget: 3,
+            dead: false,
+        };
+        assert_eq!(wb.flush_to(&mut sink).unwrap(), Flush::Blocked);
+        sink.dead = true;
+        let err = wb.flush_to(&mut sink).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::BrokenPipe);
+    }
+}

@@ -28,24 +28,43 @@
 //! # Architecture
 //!
 //! ```text
-//!   conns (1 thread each, blocking I/O; tokio unavailable offline)
-//!     └─ sniff v1/v2 header, resolve model id ──► per-model BatchQueue
-//!        push(Pending{images, reply})              (bounded, images-
-//!        blocks when full (backpressure)            counted, Mutex+Condvar)
-//!                                                    │ poll / try_pop
-//!                                                    ▼
-//!                               ONE fair-scheduler thread (sched.rs):
-//!              weighted deficit-round-robin over every model's queue —
-//!              each admission coalesces queued same-model requests into
-//!              one ≤ max_batch batch (per-model straggler deadlines),
-//!              admitted in weight proportion, throttled by an
-//!              in-flight-images cap
+//!   ONE event-loop thread (conn.rs over util::poll — epoll, or
+//!   poll(2) as the portable fallback): owns listener + every client
+//!   socket, all non-blocking
+//!     └─ per-conn state machine: sniff v1/v2 header, resolve model id,
+//!        stream payload → f32s ────────────────► per-model BatchQueue
+//!        try_push(Pending{images, reply});        (bounded, images-
+//!        a full queue PARKS the connection         counted, Mutex+Condvar)
+//!        (read interest off = TCP backpressure)     │ poll / try_pop
+//!        ◄── completions ring the loop's waker ──┐  ▼
+//!            (responses flush with partial-     ONE fair-scheduler
+//!             write carry; EPIPE drops only     thread (sched.rs):
+//!             that connection)                  weighted deficit-round-
+//!                                               robin over every model's
+//!                                               queue — each admission
+//!                                               coalesces queued same-
+//!                                               model requests into one
+//!                                               ≤ max_batch batch (per-
+//!                                               model straggler dead-
+//!                                               lines), admitted in
+//!                                               weight proportion,
+//!                                               throttled by an
+//!                                               in-flight-images cap
 //!                                                    │ submit(model_id, …)
 //!                                                    ▼
 //!                                       shared InferencePool (N workers,
 //!                                       model-agnostic per-worker scratch;
 //!                                       completions answer the requests)
 //! ```
+//!
+//! Connections cost state, not threads: the readiness loop holds
+//! thousands of mostly-idle sockets (slow writers, keep-alives,
+//! pipelined bursts) for a few hundred bytes each, with per-connection
+//! idle/read timeouts (`--conn-timeout-ms`) and a concurrent-connection
+//! cap (`--max-conns`, rejected conns counted) guarding the tail. See
+//! [`conn`] for the state machine and `rust/tests/conn_conformance.rs`
+//! for the adversarial-client suite (slow loris, mid-payload
+//! disconnects, half-open peers, >cap rejection).
 //!
 //! Queues, policies, and straggler deadlines are **per model** so one
 //! model's wait never delays another model's traffic; only the worker
@@ -66,27 +85,36 @@
 //! * `max_batch` — images per engine batch; larger amortizes dispatch,
 //!   smaller bounds latency
 //! * `batch_wait_us` — straggler deadline; 0 = dispatch immediately
-//! * `queue_images` — per-model queue bound; a full queue blocks that
-//!   model's connection pushes FIFO (TCP backpressure) instead of
+//! * `queue_images` — per-model queue bound; a full queue *parks* that
+//!   model's connections (the event loop drops their read interest, so
+//!   the kernel receive window backpressures the client) instead of
 //!   growing without limit. Payloads still being received are held
 //!   per-connection (streamed in, so allocation tracks bytes actually
 //!   read, capped by the 4096-image protocol limit).
 //! * `weight` (per model only, `--model ...;weight=N`) — fair share of
 //!   pool admission when several models are backlogged
+//! * `max_conns` — concurrent-connection cap; accepts beyond it are
+//!   closed immediately (counted in [`ServerStats::conns_rejected`])
+//! * `conn_timeout_ms` — idle/read deadline per connection (0 = never);
+//!   applies only while the server owes the client nothing, so slow
+//!   *clients* die and slow *batches* don't kill their clients
+//! * `max_accepts` — bounded runs (tests/examples): stop accepting
+//!   after N connections and return once they finish
 //!
 //! Every knob except `workers` can be overridden per model through the
 //! `--model NAME=SPEC;key=value...` grammar; the flags above set the
 //! server-level defaults.
 
+pub mod conn;
 pub mod sched;
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::{ModelSpec, ServeConfig};
 use crate::nn::engine::Engine;
@@ -95,7 +123,7 @@ use crate::nn::registry::ModelRegistry;
 
 pub use sched::{FairScheduler, Grant, Policy, MAX_WEIGHT};
 
-use sched::{BatchQueue, Doorbell, Pending, SchedCtx};
+use sched::{BatchQueue, Doorbell, SchedCtx};
 
 /// Hard protocol cap on images per request.
 pub const MAX_REQ_IMAGES: usize = 4096;
@@ -308,6 +336,17 @@ pub struct ServerStats {
     /// batch (starvation bounds are stated in rounds — see
     /// `rust/tests/multi_model.rs`).
     pub rounds: AtomicU64,
+    /// Client connections currently open in the event loop (gauge).
+    pub conns_open: AtomicU64,
+    /// Connections accepted since startup (including rejected ones —
+    /// the handshake completed either way).
+    pub conns_accepted: AtomicU64,
+    /// Connections closed straight after accept because `--max-conns`
+    /// concurrent connections were already open.
+    pub conns_rejected: AtomicU64,
+    /// Connections closed by the idle/read timeout
+    /// (`--conn-timeout-ms`); slow-loris and dead peers land here.
+    pub conns_timed_out: AtomicU64,
 }
 
 impl ServerStats {
@@ -318,6 +357,10 @@ impl ServerStats {
             unknown_model: AtomicU64::new(0),
             bad_version: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
+            conns_open: AtomicU64::new(0),
+            conns_accepted: AtomicU64::new(0),
+            conns_rejected: AtomicU64::new(0),
+            conns_timed_out: AtomicU64::new(0),
         }
     }
 
@@ -370,23 +413,18 @@ impl ServerStats {
             out.push_str(&format!("model {i} {name}: {}\n", s.report()));
         }
         out.push_str(&format!(
-            "server: unknown-model {}  bad-version {}  sched-rounds {}",
+            "server: unknown-model {}  bad-version {}  sched-rounds {}  \
+             conns open {} / accepted {} / rejected {} / timed-out {}",
             self.unknown_model.load(Ordering::Relaxed),
             self.bad_version.load(Ordering::Relaxed),
             self.rounds.load(Ordering::Relaxed),
+            self.conns_open.load(Ordering::Relaxed),
+            self.conns_accepted.load(Ordering::Relaxed),
+            self.conns_rejected.load(Ordering::Relaxed),
+            self.conns_timed_out.load(Ordering::Relaxed),
         ));
         out
     }
-}
-
-/// Everything a connection handler needs to route one request.
-struct Router {
-    registry: Arc<ModelRegistry>,
-    /// One queue per model, indexed by model id.
-    queues: Vec<Arc<BatchQueue>>,
-    stats: Arc<ServerStats>,
-    /// Rung after every push so the scheduler re-polls.
-    doorbell: Arc<Doorbell>,
 }
 
 /// A bound server: listener + model registry + knobs + resolved
@@ -458,9 +496,11 @@ impl Server {
         &self.policies
     }
 
-    /// Run the accept loop. Blocks until `cfg.max_conns` connections
-    /// have been accepted and completed (or forever when None). All
-    /// queued work is drained before returning.
+    /// Run the server: ONE readiness event loop (this thread) owning
+    /// every client socket, next to the scheduler thread and the worker
+    /// pool. Blocks until `cfg.max_accepts` connections have been
+    /// accepted and completed (or forever when None). All queued work
+    /// is drained before returning.
     pub fn run(self) -> Result<()> {
         let workers = self.cfg.resolved_workers();
         let pool = Arc::new(InferencePool::for_registry(workers, &self.registry));
@@ -477,10 +517,11 @@ impl Server {
             self.cfg.batch_wait_us,
             self.cfg.queue_images,
         );
-        // Per-model bounded queue; ONE scheduler thread replaces the
-        // per-model batchers. The scheduler is a plain (non-scoped)
-        // thread over Arc'd state: it must outlive the connection scope
-        // below, which joins all handlers before we signal shutdown.
+        // Per-model bounded queue; ONE scheduler thread next to ONE
+        // event-loop thread (this one). The scheduler is a plain
+        // (non-scoped) thread over Arc'd state: it must outlive the
+        // event loop, which drains all connections before we signal
+        // shutdown.
         let doorbell = Arc::new(Doorbell::new());
         let mut queues = Vec::with_capacity(self.registry.len());
         for (id, entry) in self.registry.iter() {
@@ -509,69 +550,31 @@ impl Server {
             in_flight: Arc::new(AtomicU64::new(0)),
         };
         let scheduler = std::thread::spawn(move || sched::run_scheduler(ctx));
-        let router = Router {
+        let loop_ctx = conn::LoopCtx {
             registry: self.registry.clone(),
-            queues,
+            queues: queues.clone(),
             stats: self.stats.clone(),
             doorbell: doorbell.clone(),
+            max_conns: self.cfg.max_conns,
+            max_accepts: self.cfg.max_accepts,
+            conn_timeout: (self.cfg.conn_timeout_ms > 0)
+                .then(|| Duration::from_millis(self.cfg.conn_timeout_ms)),
+            poll_fallback: self.cfg.poll_fallback,
         };
-        let listener_dead = std::thread::scope(|scope| {
-            let mut seen = 0usize;
-            let mut accept_errs = 0u32;
-            if self.cfg.max_conns == Some(0) {
-                return false; // "at most 0 connections" means accept none
-            }
-            for conn in self.listener.incoming() {
-                let stream = match conn {
-                    Ok(s) => s,
-                    Err(e) => {
-                        // Transient accept failures (e.g. fd exhaustion
-                        // under load) must not kill a long-lived server;
-                        // back off briefly and keep accepting. A long
-                        // unbroken error streak means the listener is
-                        // gone for good — stop (and report it) instead
-                        // of spinning.
-                        accept_errs += 1;
-                        eprintln!("aquant-serve: accept error ({accept_errs} in a row): {e}");
-                        if accept_errs >= 1000 {
-                            eprintln!("aquant-serve: giving up on accept loop");
-                            return true;
-                        }
-                        std::thread::sleep(Duration::from_millis(10));
-                        continue;
-                    }
-                };
-                accept_errs = 0;
-                let r = &router;
-                scope.spawn(move || {
-                    if let Err(e) = handle(stream, r) {
-                        eprintln!("aquant-serve: connection error: {e:#}");
-                    }
-                });
-                seen += 1;
-                if let Some(m) = self.cfg.max_conns {
-                    if seen >= m {
-                        break;
-                    }
-                }
-            }
-            false
-        });
-        // All handlers have returned (each already holds its reply);
-        // tell the scheduler to drain whatever is left and stop. The
-        // pool is dropped after the join, which completes any batches
-        // still in flight before its workers exit.
-        for q in &router.queues {
+        let served = conn::run_event_loop(self.listener, loop_ctx);
+        // Every connection is drained (each reply already staged and
+        // flushed or its connection gone); tell the scheduler to drain
+        // whatever is left and stop. The pool is dropped after the
+        // join, which completes any batches still in flight before its
+        // workers exit.
+        for q in &queues {
             q.shutdown();
         }
         doorbell.ring();
         scheduler
             .join()
             .map_err(|_| anyhow!("scheduler thread panicked"))?;
-        if listener_dead {
-            bail!("accept loop abandoned after repeated listener errors");
-        }
-        Ok(())
+        served
     }
 }
 
@@ -604,87 +607,6 @@ pub fn registry_from_specs(
 ) -> Result<ModelRegistry> {
     let mut fp = crate::nn::loader::FpManifestBuilder::new(artifacts_dir);
     ModelRegistry::from_specs(specs, |spec| fp.build(spec))
-}
-
-/// Per-connection loop: sniff + parse requests, route to the model's
-/// queue, ring the scheduler, await the completion reply, answer. Any
-/// protocol error closes just this connection.
-fn handle(mut stream: TcpStream, router: &Router) -> Result<()> {
-    loop {
-        let hdr = match read_request_header(&mut stream) {
-            Ok(None) => return Ok(()),
-            Ok(Some(h)) => h,
-            Err(e) => return Err(e.into()),
-        };
-        if let RequestHeader::V2 { version, .. } = hdr {
-            if version != PROTO_VERSION {
-                router.stats.bad_version.fetch_add(1, Ordering::Relaxed);
-                bail!("unsupported protocol version {version}");
-            }
-        }
-        let model_id = hdr.model_id();
-        let Some(entry) = router.registry.get(model_id) else {
-            router.stats.unknown_model.fetch_add(1, Ordering::Relaxed);
-            bail!("unknown model id {model_id}");
-        };
-        let stats = router.stats.model(model_id).expect("stats per model");
-        let queue = &router.queues[model_id as usize];
-        let n = hdr.n() as usize;
-        if n == 0 || n > MAX_REQ_IMAGES {
-            stats.rejected.fetch_add(1, Ordering::Relaxed);
-            bail!("bad batch size {n}");
-        }
-        let img_elems = entry.engine.img_elems();
-        // Stream the payload in, decoding each chunk straight to f32:
-        // allocation tracks bytes actually received (a bare header costs
-        // ~64KB here, not the full payload up front), and there is never
-        // a second full-size byte buffer alive alongside the floats.
-        let total = n * img_elems * 4;
-        let mut images: Vec<f32> = Vec::new();
-        // chunk size is a multiple of 4, so every slice below is too
-        let mut chunk = [0u8; 65536];
-        let mut remaining = total;
-        while remaining > 0 {
-            let want = remaining.min(chunk.len());
-            stream.read_exact(&mut chunk[..want])?; // mid-stream EOF lands here
-            images.extend(
-                chunk[..want]
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
-            );
-            remaining -= want;
-        }
-        let (rtx, rrx) = mpsc::channel();
-        let queued = queue.push(
-            Pending {
-                images,
-                n,
-                reply: rtx,
-                enqueued_at: Instant::now(),
-            },
-            stats,
-        );
-        let Some(ring) = queued else {
-            bail!("server shutting down");
-        };
-        if ring {
-            // only became-admissible transitions wake the scheduler;
-            // completions ring separately
-            router.doorbell.ring();
-        }
-        let preds = match rrx.recv() {
-            Ok(Ok(p)) => p,
-            Ok(Err(e)) => bail!("inference failed: {e}"),
-            Err(_) => bail!("scheduler dropped the request"),
-        };
-        stats.requests.fetch_add(1, Ordering::Relaxed);
-        let mut out = Vec::with_capacity(4 + n * 4);
-        out.extend_from_slice(&(n as u32).to_le_bytes());
-        for p in preds {
-            out.extend_from_slice(&p.to_le_bytes());
-        }
-        stream.write_all(&out)?;
-    }
 }
 
 /// Client helper (used by the serve example and tests): one v1 request

@@ -336,11 +336,64 @@ impl FairScheduler {
     }
 }
 
+/// Where a completed request's predictions go. The channel carries the
+/// payload; the optional waker interrupts the connection event loop's
+/// `Poller::wait` so the response is flushed promptly — without it a
+/// completion would sit in the channel until some unrelated socket
+/// event (the loop parks in the kernel, not on this channel). Blocking
+/// callers (tests, the pre-event-loop client helpers) just omit the
+/// waker and `recv()` as before.
+pub(crate) struct ReplySink {
+    tx: mpsc::Sender<Result<Vec<u32>, String>>,
+    waker: Option<Arc<crate::util::poll::Waker>>,
+}
+
+impl ReplySink {
+    /// Channel-only sink (blocking consumers).
+    pub fn new(tx: mpsc::Sender<Result<Vec<u32>, String>>) -> ReplySink {
+        ReplySink { tx, waker: None }
+    }
+
+    /// Sink that also rings an event loop's waker on every send.
+    pub fn with_waker(
+        tx: mpsc::Sender<Result<Vec<u32>, String>>,
+        waker: Arc<crate::util::poll::Waker>,
+    ) -> ReplySink {
+        ReplySink {
+            tx,
+            waker: Some(waker),
+        }
+    }
+
+    /// Deliver the result. A gone receiver means the connection already
+    /// died — fine either way; the waker still rings so the loop can
+    /// retry queue-parked requests (freed pool capacity means the
+    /// scheduler just popped, i.e. queue space may have opened up).
+    pub fn send(&self, r: Result<Vec<u32>, String>) {
+        let _ = self.tx.send(r);
+        if let Some(w) = &self.waker {
+            w.wake();
+        }
+    }
+}
+
+impl Drop for ReplySink {
+    /// A sink dropped without sending (queue shutdown, pool submit
+    /// failure) leaves its connection's receiver disconnected — ring
+    /// the loop anyway so it notices promptly instead of waiting for an
+    /// unrelated event. Answered requests ring twice; wakes coalesce.
+    fn drop(&mut self) {
+        if let Some(w) = &self.waker {
+            w.wake();
+        }
+    }
+}
+
 /// One parsed request waiting to be scheduled.
 pub(crate) struct Pending {
     pub images: Vec<f32>,
     pub n: usize,
-    pub reply: mpsc::Sender<Result<Vec<u32>, String>>,
+    pub reply: ReplySink,
     /// Arrival time — the straggler deadline is `enqueued_at + wait`.
     pub enqueued_at: Instant,
 }
@@ -356,6 +409,18 @@ struct QueueState {
     /// small ones that always win the condvar race.
     next_ticket: u64,
     serving: u64,
+}
+
+/// Outcome of a non-blocking [`BatchQueue::try_push`].
+pub(crate) enum TryPush {
+    /// Enqueued; the bool is the became-admissible doorbell hint (same
+    /// meaning as the blocking push's `Some(ring)`).
+    Queued(bool),
+    /// No room (or ticketed pushers are ahead); the request comes back
+    /// untouched so the caller can park it.
+    Full(Pending),
+    /// Server shutting down; the request is dropped.
+    Shutdown,
 }
 
 /// What a non-destructive queue poll saw (scheduler-side view).
@@ -412,6 +477,12 @@ impl BatchQueue {
     /// leaves the front request — and thus the scheduler's sleep
     /// deadline — unchanged, so under saturating arrival rates the
     /// scheduler isn't stampeded with a wakeup per request.
+    ///
+    /// The event-loop server pushes through the non-blocking
+    /// [`BatchQueue::try_push`] instead; this blocking form stays as
+    /// the reference semantics try_push must agree with (the unit
+    /// tests run both against the same queue states).
+    #[cfg_attr(not(test), allow(dead_code))]
     pub fn push(&self, p: Pending, stats: &Stats) -> Option<bool> {
         let mut st = self.state.lock().unwrap();
         let ticket = st.next_ticket;
@@ -441,6 +512,40 @@ impl BatchQueue {
         // wake the next ticket in line
         self.not_full.notify_all();
         Some(ring)
+    }
+
+    /// Non-blocking push for the connection event loop (ONE thread
+    /// feeding every queue must never sleep on one model's cap).
+    /// `Full` hands the request back — the caller parks it, drops the
+    /// connection's read interest (a full queue becomes plain TCP
+    /// backpressure), and retries on the next completion wakeup: every
+    /// admission's batch ends in a completion that rings the loop's
+    /// waker, and a full queue is by definition non-empty, so a retry
+    /// wakeup always arrives. Admission honors the same rules as the
+    /// blocking [`BatchQueue::push`]: FIFO behind any ticketed blocked
+    /// pushers, the image cap, and the empty-queue oversize exception.
+    pub fn try_push(&self, p: Pending, stats: &Stats) -> TryPush {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return TryPush::Shutdown;
+        }
+        if st.next_ticket != st.serving
+            || (!st.items.is_empty() && st.queued_images + p.n > self.cap_images)
+        {
+            return TryPush::Full(p);
+        }
+        st.next_ticket += 1;
+        st.serving += 1;
+        let was_empty = st.items.is_empty();
+        let old_images = st.queued_images;
+        st.queued_images += p.n;
+        let ring = was_empty
+            || (old_images < self.ready_images && st.queued_images >= self.ready_images);
+        let depth = st.queued_images as u64;
+        st.items.push_back(p);
+        stats.queue_depth.store(depth, Ordering::Relaxed);
+        stats.queue_peak.fetch_max(depth, Ordering::Relaxed);
+        TryPush::Queued(ring)
     }
 
     /// Is a batch admissible under (`max_images`, `wait`) at `now`?
@@ -708,13 +813,13 @@ fn admit_one(ctx: &SchedCtx, cap: u64, id: usize, max_images: usize) -> Grant {
                             preds[off..off + p.n].iter().map(|&c| c as u32).collect();
                         off += p.n;
                         // Receiver gone = connection already died; fine.
-                        let _ = p.reply.send(Ok(out));
+                        p.reply.send(Ok(out));
                     }
                 }
                 Err(e) => {
                     stats.failed_batches.fetch_add(1, Ordering::Relaxed);
                     for p in batch {
-                        let _ = p.reply.send(Err(e.clone()));
+                        p.reply.send(Err(e.clone()));
                     }
                 }
             }
@@ -1079,7 +1184,7 @@ mod tests {
             Pending {
                 images: vec![0.0; n],
                 n,
-                reply: tx,
+                reply: ReplySink::new(tx),
                 enqueued_at: Instant::now(),
             },
             rx,
@@ -1206,6 +1311,61 @@ mod tests {
             .unwrap();
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].n, 3);
+    }
+
+    #[test]
+    fn try_push_mirrors_blocking_push_without_blocking() {
+        let q = BatchQueue::new(4, 4);
+        let stats = Stats::default();
+        // empty queue: even an over-cap request is admitted alone
+        let (p, _r1) = pending(100);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Queued(true)));
+        // non-empty + over cap: handed back intact, not dropped
+        let (p, _r2) = pending(3);
+        let back = match q.try_push(p, &stats) {
+            TryPush::Full(p) => p,
+            _ => panic!("full queue must return the request"),
+        };
+        assert_eq!(back.n, 3);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 100);
+        // drain, then the same request goes in (ring: empty -> ready,
+        // 3 < ready_images 4 but the queue was empty)
+        let now = Instant::now();
+        assert!(q.try_pop(4, Duration::ZERO, now, &stats).is_some());
+        assert!(matches!(q.try_push(back, &stats), TryPush::Queued(true)));
+        // a second small push: Wait -> Ready crossing rings
+        let (p, _r3) = pending(1);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Queued(true)));
+        // shutdown refuses and drops
+        q.shutdown();
+        let (p, _r4) = pending(1);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Shutdown));
+    }
+
+    #[test]
+    fn try_push_yields_to_ticketed_blocked_pushers() {
+        // A blocked blocking-push holds a ticket; try_push must not cut
+        // the line even when the instantaneous image count has room.
+        let q = Arc::new(BatchQueue::new(4, 4));
+        let stats = Arc::new(Stats::default());
+        let (p, _r1) = pending(4);
+        assert!(q.push(p, &stats).is_some());
+        let (big, _r2) = pending(4);
+        let pusher = {
+            let (q, s) = (q.clone(), stats.clone());
+            std::thread::spawn(move || q.push(big, &s).is_some())
+        };
+        while q.state.lock().unwrap().next_ticket < 2 {
+            std::thread::yield_now(); // until the blocked push takes its ticket
+        }
+        let (p, _r3) = pending(1);
+        assert!(
+            matches!(q.try_push(p, &stats), TryPush::Full(_)),
+            "try_push must queue behind the ticketed pusher"
+        );
+        let now = Instant::now();
+        assert!(q.try_pop(4, Duration::ZERO, now, &stats).is_some());
+        assert!(pusher.join().unwrap());
     }
 
     #[test]

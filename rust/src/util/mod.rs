@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod poll;
 pub mod prop;
 pub mod rng;
 pub mod tensor_io;

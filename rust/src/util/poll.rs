@@ -1,0 +1,664 @@
+//! Minimal readiness-polling wrapper: epoll on Linux with a portable
+//! `poll(2)` fallback, plus a self-pipe [`Waker`] for cross-thread
+//! wakeups. mio is unavailable offline, so the syscalls are declared
+//! directly against the system C library (std already links it) —
+//! nothing here adds a dependency.
+//!
+//! Scope is exactly what the serving event loop
+//! ([`crate::server::conn`]) needs:
+//!
+//! * **level-triggered** readiness (both backends — epoll is used
+//!   without `EPOLLET`, and `poll(2)` is level-triggered by nature), so
+//!   the loop may do partial reads/writes and simply wait again;
+//! * per-fd read/write [`Interest`] that can be changed on the fly
+//!   (connections toggle write interest as their output buffer fills
+//!   and drains, and drop read interest while parked on a full queue —
+//!   that is what turns a full [`crate::server::sched::BatchQueue`]
+//!   into plain TCP backpressure);
+//! * a [`Waker`] other threads can ring to interrupt a blocked
+//!   [`Poller::wait`] (pool completions ring it so responses flush).
+//!
+//! On Linux [`Poller::new`] picks epoll; [`Poller::with_poll_backend`]
+//! forces the portable backend so the fallback is exercised by tests on
+//! the same host. Both backends present identical semantics, pinned by
+//! the unit tests below.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::os::fd::{FromRawFd, OwnedFd};
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::time::Duration;
+
+/// Which readiness a registered fd is watched for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const WRITE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+    pub const BOTH: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+/// One readiness event. `error`/`hangup` are reported even when not
+/// asked for (as the OS does); the loop treats them as "attend to this
+/// fd now" — the subsequent read/write surfaces the actual error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub error: bool,
+    pub hangup: bool,
+}
+
+// ---------------------------------------------------------------------
+// libc declarations (shared)
+// ---------------------------------------------------------------------
+
+extern "C" {
+    fn pipe(fds: *mut c_int) -> c_int;
+    fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+}
+
+const F_GETFL: c_int = 3;
+const F_SETFL: c_int = 4;
+#[cfg(target_os = "linux")]
+const O_NONBLOCK: c_int = 0o4000;
+#[cfg(not(target_os = "linux"))]
+const O_NONBLOCK: c_int = 0x4;
+
+fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    // SAFETY: plain fcntl on a valid fd; no memory is passed.
+    unsafe {
+        let flags = fcntl(fd, F_GETFL, 0);
+        if flags < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if fcntl(fd, F_SETFL, flags | O_NONBLOCK) < 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+fn duration_to_ms(timeout: Option<Duration>) -> c_int {
+    match timeout {
+        // -1 = block forever (both epoll_wait and poll)
+        None => -1,
+        // round UP so a 100µs deadline cannot spin at timeout 0; clamp
+        // into c_int range (~24 days — any longer blocks in slices)
+        Some(d) => {
+            let ms = d.as_millis().saturating_add(u128::from(d.subsec_nanos() % 1_000_000 != 0));
+            ms.min(c_int::MAX as u128) as c_int
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// epoll backend (Linux)
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::*;
+
+    // x86-64 is the one ABI where the kernel's epoll_event is packed.
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+    }
+
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0x80000;
+
+    pub struct Epoll {
+        epfd: OwnedFd,
+        /// Scratch reused across waits (epoll reports into it).
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            // SAFETY: epoll_create1 returns a fresh fd we then own.
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Epoll {
+                // SAFETY: fd is valid and owned by no one else.
+                epfd: unsafe { OwnedFd::from_raw_fd(fd) },
+                buf: vec![EpollEvent { events: 0, data: 0 }; 256],
+            })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: {
+                    let mut e = 0;
+                    if interest.readable {
+                        // RDHUP rides with read interest only: a parked
+                        // connection (read interest off) must not be
+                        // woken — and level-triggered, re-woken forever
+                        // — by a half-close it isn't ready to act on.
+                        e |= EPOLLIN | EPOLLRDHUP;
+                    }
+                    if interest.writable {
+                        e |= EPOLLOUT;
+                    }
+                    e
+                },
+                data: token,
+            };
+            // SAFETY: ev lives across the call; fds are caller-valid.
+            if unsafe { epoll_ctl(self.epfd.as_raw_fd(), op, fd, &mut ev) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            // SAFETY: pre-2.6.9 kernels want a non-null event even for DEL.
+            if unsafe { epoll_ctl(self.epfd.as_raw_fd(), EPOLL_CTL_DEL, fd, &mut ev) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let n = loop {
+                // SAFETY: buf is a live, writable array of buf.len() events.
+                let r = unsafe {
+                    epoll_wait(
+                        self.epfd.as_raw_fd(),
+                        self.buf.as_mut_ptr(),
+                        self.buf.len() as c_int,
+                        duration_to_ms(timeout),
+                    )
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+                // EINTR: retry. (A signal may shorten the effective
+                // timeout; the event loop re-derives deadlines anyway.)
+            };
+            for ev in &self.buf[..n] {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    error: bits & EPOLLERR != 0,
+                    // full close only; a read-side half-close shows up
+                    // as readable (EOF), same as the poll(2) backend
+                    hangup: bits & EPOLLHUP != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// poll(2) backend (portable fallback; also compiled on Linux for tests)
+// ---------------------------------------------------------------------
+
+mod pollfb {
+    use super::*;
+
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    #[cfg(target_os = "linux")]
+    type Nfds = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type Nfds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout_ms: c_int) -> c_int;
+    }
+
+    pub const POLLIN: i16 = 0x1;
+    pub const POLLOUT: i16 = 0x4;
+    pub const POLLERR: i16 = 0x8;
+    pub const POLLHUP: i16 = 0x10;
+    const POLLNVAL: i16 = 0x20;
+
+    /// Registration table + a pollfd array rebuilt per wait. O(n) per
+    /// call — the portability floor, fine at fallback scale.
+    pub struct PollVec {
+        regs: BTreeMap<RawFd, (u64, Interest)>,
+        fds: Vec<PollFd>,
+    }
+
+    impl PollVec {
+        pub fn new() -> PollVec {
+            PollVec {
+                regs: BTreeMap::new(),
+                fds: Vec::new(),
+            }
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            if self.regs.insert(fd, (token, interest)).is_some() {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    "fd already registered",
+                ));
+            }
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            match self.regs.get_mut(&fd) {
+                Some(slot) => {
+                    *slot = (token, interest);
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            match self.regs.remove(&fd) {
+                Some(_) => Ok(()),
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            self.fds.clear();
+            for (&fd, &(_, interest)) in &self.regs {
+                let mut events = 0i16;
+                if interest.readable {
+                    events |= POLLIN;
+                }
+                if interest.writable {
+                    events |= POLLOUT;
+                }
+                self.fds.push(PollFd {
+                    fd,
+                    events,
+                    revents: 0,
+                });
+            }
+            let n = loop {
+                // SAFETY: fds is a live, writable array of fds.len() entries.
+                let r = unsafe {
+                    poll(
+                        self.fds.as_mut_ptr(),
+                        self.fds.len() as Nfds,
+                        duration_to_ms(timeout),
+                    )
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            if n == 0 {
+                return Ok(()); // timeout
+            }
+            for pfd in &self.fds {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                let (token, _) = self.regs[&pfd.fd];
+                out.push(Event {
+                    token,
+                    readable: pfd.revents & (POLLIN | POLLHUP) != 0,
+                    writable: pfd.revents & POLLOUT != 0,
+                    error: pfd.revents & (POLLERR | POLLNVAL) != 0,
+                    hangup: pfd.revents & POLLHUP != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Poller facade
+// ---------------------------------------------------------------------
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::Epoll),
+    Poll(pollfb::PollVec),
+}
+
+/// Readiness poller over one of the OS backends. All methods take
+/// `&mut self`: the event loop is single-threaded by design and other
+/// threads interact only through a [`Waker`].
+pub struct Poller {
+    backend: Backend,
+}
+
+impl Poller {
+    /// Platform-best backend: epoll on Linux, `poll(2)` elsewhere.
+    pub fn new() -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            Ok(Poller {
+                backend: Backend::Epoll(epoll::Epoll::new()?),
+            })
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            Self::with_poll_backend()
+        }
+    }
+
+    /// Force the portable `poll(2)` backend (lets Linux tests exercise
+    /// the fallback the other platforms run on).
+    pub fn with_poll_backend() -> io::Result<Poller> {
+        Ok(Poller {
+            backend: Backend::Poll(pollfb::PollVec::new()),
+        })
+    }
+
+    /// Backend name, for startup logging.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(_) => "epoll",
+            Backend::Poll(_) => "poll",
+        }
+    }
+
+    /// Watch `fd` (must already be non-blocking) under `token`. The fd
+    /// must stay open until [`Poller::deregister`].
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.register(fd, token, interest),
+            Backend::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    /// Change an existing registration's token/interest.
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.modify(fd, token, interest),
+            Backend::Poll(p) => p.modify(fd, token, interest),
+        }
+    }
+
+    /// Stop watching `fd`. Call BEFORE closing the fd (a closed fd is
+    /// auto-removed by epoll but turns into POLLNVAL under poll).
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.deregister(fd),
+            Backend::Poll(p) => p.deregister(fd),
+        }
+    }
+
+    /// Block until at least one registered fd is ready or `timeout`
+    /// expires (None = forever), appending readiness to `out` (which is
+    /// cleared first). A timeout leaves `out` empty.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(e) => e.wait(out, timeout),
+            Backend::Poll(p) => p.wait(out, timeout),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Waker (self-pipe)
+// ---------------------------------------------------------------------
+
+/// Cross-thread wakeup for a [`Poller`]: a non-blocking self-pipe. The
+/// owning loop registers [`Waker::read_fd`] and calls [`Waker::drain`]
+/// when it fires; any thread calls [`Waker::wake`]. Wakes coalesce: a
+/// full pipe means a wake is already pending, which is all the loop
+/// needs to know (same contract as the scheduler's epoch doorbell).
+pub struct Waker {
+    read: OwnedFd,
+    write: OwnedFd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let mut fds = [0 as c_int; 2];
+        // SAFETY: pipe fills the two-element array on success.
+        if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        // SAFETY: both fds are fresh and owned here on out.
+        let (read, write) =
+            unsafe { (OwnedFd::from_raw_fd(fds[0]), OwnedFd::from_raw_fd(fds[1])) };
+        set_nonblocking(read.as_raw_fd())?;
+        set_nonblocking(write.as_raw_fd())?;
+        Ok(Waker { read, write })
+    }
+
+    /// The fd the event loop registers for read interest.
+    pub fn read_fd(&self) -> RawFd {
+        self.read.as_raw_fd()
+    }
+
+    /// Ring the loop. Never blocks: EAGAIN (pipe already full) means a
+    /// wake is already pending — success either way. Safe from any
+    /// thread and from completion callbacks.
+    pub fn wake(&self) {
+        let b = [1u8];
+        // SAFETY: one byte from a live buffer into an owned fd; short
+        // writes and EAGAIN/EINTR are all acceptable outcomes.
+        unsafe {
+            let _ = write(self.write.as_raw_fd(), b.as_ptr() as *const c_void, 1);
+        }
+    }
+
+    /// Swallow all pending wake bytes (loop-side, after the fd fires).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // SAFETY: reads into a live local buffer from an owned fd.
+            let n = unsafe {
+                read(
+                    self.read.as_raw_fd(),
+                    buf.as_mut_ptr() as *mut c_void,
+                    buf.len(),
+                )
+            };
+            if n <= 0 {
+                return; // EAGAIN (drained), EOF, or EINTR — all fine here
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Instant;
+
+    fn pollers() -> Vec<Poller> {
+        let mut v = vec![Poller::with_poll_backend().unwrap()];
+        if cfg!(target_os = "linux") {
+            v.push(Poller::new().unwrap());
+        }
+        v
+    }
+
+    #[test]
+    fn timeout_expires_with_no_events() {
+        for mut p in pollers() {
+            let name = p.backend_name();
+            let w = Waker::new().unwrap();
+            p.register(w.read_fd(), 1, Interest::READ).unwrap();
+            let mut out = Vec::new();
+            let t0 = Instant::now();
+            p.wait(&mut out, Some(Duration::from_millis(30))).unwrap();
+            assert!(out.is_empty(), "{name}: {out:?}");
+            assert!(t0.elapsed() >= Duration::from_millis(25), "{name}");
+        }
+    }
+
+    #[test]
+    fn waker_wakes_and_coalesces() {
+        for mut p in pollers() {
+            let name = p.backend_name();
+            let w = std::sync::Arc::new(Waker::new().unwrap());
+            p.register(w.read_fd(), 7, Interest::READ).unwrap();
+            // many wakes, from another thread, before the wait
+            let w2 = w.clone();
+            std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    w2.wake();
+                }
+            })
+            .join()
+            .unwrap();
+            let mut out = Vec::new();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(out.len(), 1, "{name}");
+            assert_eq!(out[0].token, 7, "{name}");
+            assert!(out[0].readable, "{name}");
+            w.drain();
+            // drained: the next wait times out
+            p.wait(&mut out, Some(Duration::from_millis(20))).unwrap();
+            assert!(out.is_empty(), "{name}: wake bytes survived drain");
+            // and a post-drain wake still fires
+            w.wake();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(out.len(), 1, "{name}");
+        }
+    }
+
+    #[test]
+    fn socket_readable_writable_and_interest_changes() {
+        for mut p in pollers() {
+            let name = p.backend_name();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            server.set_nonblocking(true).unwrap();
+            let fd = server.as_raw_fd();
+
+            // write-interest on a fresh socket: instantly writable
+            p.register(fd, 3, Interest::BOTH).unwrap();
+            let mut out = Vec::new();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert!(out.iter().any(|e| e.token == 3 && e.writable), "{name}: {out:?}");
+            assert!(!out.iter().any(|e| e.readable), "{name}: nothing sent yet");
+
+            // read interest only: no spurious writable, readable on data
+            p.modify(fd, 3, Interest::READ).unwrap();
+            client.write_all(b"hi").unwrap();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert!(out.iter().any(|e| e.token == 3 && e.readable), "{name}: {out:?}");
+            assert!(!out.iter().any(|e| e.writable), "{name}: {out:?}");
+            // level-triggered: unread data keeps reporting
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert!(out.iter().any(|e| e.token == 3 && e.readable), "{name}");
+            let mut buf = [0u8; 8];
+            let mut sref = &server;
+            assert_eq!(sref.read(&mut buf).unwrap(), 2);
+
+            // peer close: readable (EOF) and hangup-ish
+            drop(client);
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            let ev = out.iter().find(|e| e.token == 3).expect("close event");
+            assert!(ev.readable || ev.hangup, "{name}: {ev:?}");
+            assert_eq!(sref.read(&mut buf).unwrap(), 0, "{name}: EOF");
+
+            p.deregister(fd).unwrap();
+            p.register(fd, 9, Interest::READ).unwrap(); // re-register works
+            p.deregister(fd).unwrap();
+        }
+    }
+
+    #[test]
+    fn listener_accept_readiness() {
+        for mut p in pollers() {
+            let name = p.backend_name();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            p.register(listener.as_raw_fd(), 0, Interest::READ).unwrap();
+            let mut out = Vec::new();
+            p.wait(&mut out, Some(Duration::from_millis(20))).unwrap();
+            assert!(out.is_empty(), "{name}: no pending connection yet");
+            let _c = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert!(
+                out.iter().any(|e| e.token == 0 && e.readable),
+                "{name}: {out:?}"
+            );
+            let (s, _) = listener.accept().unwrap();
+            drop(s);
+        }
+    }
+
+    #[test]
+    fn duration_rounds_up_not_to_zero() {
+        assert_eq!(duration_to_ms(None), -1);
+        assert_eq!(duration_to_ms(Some(Duration::from_millis(5))), 5);
+        // sub-millisecond deadlines must not become a busy-spin 0
+        assert_eq!(duration_to_ms(Some(Duration::from_micros(100))), 1);
+        assert_eq!(duration_to_ms(Some(Duration::ZERO)), 0);
+    }
+}

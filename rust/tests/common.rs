@@ -1,21 +1,24 @@
 //! Shared scaffolding for the serving integration suites
-//! (`serve_roundtrip.rs`, `multi_model.rs`): server startup on an
-//! ephemeral port, random payloads, sequential-engine expectations, and
-//! the closed-connection assertion. Included via `mod common;` from
-//! each suite (not a test target itself — Cargo.toml declares targets
-//! explicitly with autotests off).
+//! (`serve_roundtrip.rs`, `multi_model.rs`, `conn_conformance.rs`):
+//! server startup on an ephemeral port, random payloads,
+//! sequential-engine expectations, raw v1/v2 request builders, a
+//! chunked (slow-loris) writer, the response reader, the
+//! closed-connection assertion, and a per-test watchdog. Included via
+//! `mod common;` from each suite (not a test target itself —
+//! Cargo.toml declares targets explicitly with autotests off).
 #![allow(dead_code)] // each suite uses its own subset
 
-use std::io::Read;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use aquant::config::ServeConfig;
 use aquant::nn::engine::Engine;
 use aquant::nn::registry::ModelRegistry;
 use aquant::nn::synth;
-use aquant::server::{Server, ServerStats};
+use aquant::server::{encode_header_v2, Server, ServerStats};
 use aquant::util::rng::Rng;
 
 /// Tiny synthetic model with learned borders on every layer, so the
@@ -30,7 +33,7 @@ pub fn synth_engine(seed: u64) -> Arc<Engine> {
 
 /// Bind an ephemeral-port server over `registry` and run it on its own
 /// thread; returns the address, the live stats handle, and the join
-/// handle (resolves once `cfg.max_conns` connections have completed).
+/// handle (resolves once `cfg.max_accepts` connections have completed).
 pub fn start(
     registry: Arc<ModelRegistry>,
     cfg: ServeConfig,
@@ -77,5 +80,91 @@ pub fn expect_closed(mut s: TcpStream) {
     match s.read(&mut b) {
         Ok(0) | Err(_) => {} // server closed the connection
         Ok(_) => panic!("server answered a bad request"),
+    }
+}
+
+/// Raw wire bytes of one v1 request (`u32 n` + payload).
+pub fn v1_request_bytes(images: &[f32], n: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + images.len() * 4);
+    out.extend_from_slice(&n.to_le_bytes());
+    for v in images {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Raw wire bytes of one v2 request at the current protocol version.
+pub fn v2_request_bytes(model_id: u16, images: &[f32], n: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + images.len() * 4);
+    out.extend_from_slice(&encode_header_v2(model_id, n));
+    for v in images {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Slow-loris writer: dribble `bytes` onto the stream `chunk` bytes at
+/// a time, sleeping `pause` between writes.
+pub fn chunked_write(
+    s: &mut TcpStream,
+    bytes: &[u8],
+    chunk: usize,
+    pause: Duration,
+) -> std::io::Result<()> {
+    for piece in bytes.chunks(chunk.max(1)) {
+        s.write_all(piece)?;
+        s.flush()?;
+        if !pause.is_zero() {
+            std::thread::sleep(pause);
+        }
+    }
+    Ok(())
+}
+
+/// Read one response frame (`u32 n` + `n` class ids) off the stream.
+pub fn read_response(s: &mut TcpStream) -> anyhow::Result<Vec<u32>> {
+    let mut hdr = [0u8; 4];
+    s.read_exact(&mut hdr)?;
+    let m = u32::from_le_bytes(hdr) as usize;
+    let mut buf = vec![0u8; m * 4];
+    s.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Per-test timeout guard: aborts the whole process (with a message)
+/// if the test hasn't finished within `limit` — a wedged event loop
+/// must fail CI loudly, not hang it. Drop disarms.
+pub struct Watchdog {
+    armed: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Watchdog {
+    pub fn arm(name: &'static str, limit: Duration) -> Watchdog {
+        let armed = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let flag = armed.clone();
+        std::thread::spawn(move || {
+            let step = Duration::from_millis(50);
+            let mut left = limit;
+            while flag.load(std::sync::atomic::Ordering::Relaxed) {
+                if left.is_zero() {
+                    eprintln!("watchdog: test {name} exceeded {limit:?}; aborting");
+                    std::process::abort();
+                }
+                let s = step.min(left);
+                std::thread::sleep(s);
+                left -= s;
+            }
+        });
+        Watchdog { armed }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.armed
+            .store(false, std::sync::atomic::Ordering::Relaxed);
     }
 }

@@ -1,0 +1,489 @@
+//! Connection-conformance harness for the event-loop server: hostile
+//! and degenerate clients that a thread-per-connection design tolerates
+//! by accident and a readiness loop must tolerate by construction.
+//!
+//! Scenarios: slow-loris dribble across ≥256 *concurrent* connections
+//! (served without a thread per connection — asserted via the process
+//! thread count), mid-payload disconnects, half-open (shutdown-write)
+//! peers, pipelined bursts on one connection, >`--max-conns` admission
+//! rejection, idle/read timeouts, EPIPE'd dead clients sharing a batch
+//! with live ones, and pure garbage streams. Every scenario asserts
+//! the server stays live and later/concurrent clients get answers
+//! bit-identical to the sequential engine.
+//!
+//! Each test arms a [`common::Watchdog`] — a wedged loop aborts the
+//! process rather than hanging CI (scripts/check.sh adds an outer
+//! `timeout` belt on top).
+
+mod common;
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use aquant::config::ServeConfig;
+use aquant::server::{classify_on_v2, classify_remote};
+use aquant::util::rng::Rng;
+
+use common::{
+    chunked_write, expect_closed, expected, random_images, read_response, start_single,
+    synth_engine, v1_request_bytes, v2_request_bytes, Watchdog,
+};
+
+/// OS threads in this process (Linux; None elsewhere).
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+#[test]
+fn slow_loris_256_connections_served_by_one_loop() {
+    let _wd = Watchdog::arm("slow_loris_256", Duration::from_secs(120));
+    const CONNS: usize = 256;
+    let engine = synth_engine(71);
+    let elems = engine.img_elems();
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 64,
+        batch_wait_us: 200,
+        max_accepts: Some(CONNS),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+    // One driver thread opens every connection, then dribbles each
+    // request a few bytes per turn round-robin: all 256 requests are
+    // partially received *simultaneously*, which is exactly the state
+    // a thread-per-connection server would spend 256 blocked threads
+    // on. Even connections speak v1, odd ones v2 — one loop, mixed
+    // framings.
+    let mut rng = Rng::new(72);
+    let mut conns: Vec<(TcpStream, Vec<f32>, Vec<u8>)> = (0..CONNS)
+        .map(|c| {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let images = random_images(&mut rng, 1, elems);
+            let bytes = if c % 2 == 0 {
+                v1_request_bytes(&images, 1)
+            } else {
+                v2_request_bytes(0, &images, 1)
+            };
+            (stream, images, bytes)
+        })
+        .collect();
+
+    let chunk = 7usize;
+    let rounds = conns.iter().map(|(_, _, b)| b.len()).max().unwrap() / chunk + 1;
+    for r in 0..rounds {
+        for (stream, _, bytes) in conns.iter_mut() {
+            let start = r * chunk;
+            if start < bytes.len() {
+                let end = (start + chunk).min(bytes.len());
+                stream.write_all(&bytes[start..end]).expect("dribble");
+            }
+        }
+        if r == rounds / 2 {
+            // hold every request mid-flight for a beat, then check the
+            // server is doing this with state, not threads
+            std::thread::sleep(Duration::from_millis(50));
+            if let Some(threads) = process_threads() {
+                assert!(
+                    threads < CONNS / 2,
+                    "{threads} process threads while {CONNS} connections are \
+                     mid-request — that smells like a thread per connection"
+                );
+            }
+            assert_eq!(stats.conns_open.load(Ordering::Relaxed), CONNS as u64);
+        }
+    }
+
+    for (c, (stream, images, _)) in conns.iter_mut().enumerate() {
+        let got = read_response(stream).expect("response");
+        assert_eq!(got, expected(&engine, images, 1), "conn {c}");
+    }
+    drop(conns);
+    server.join().unwrap().unwrap();
+    let m = stats.default_model();
+    assert_eq!(m.requests.load(Ordering::Relaxed), CONNS as u64);
+    assert_eq!(stats.conns_accepted.load(Ordering::Relaxed), CONNS as u64);
+    assert_eq!(stats.conns_rejected.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.total_rejected(), 0);
+}
+
+#[test]
+fn mid_payload_disconnects_leave_the_server_live() {
+    let _wd = Watchdog::arm("mid_payload_disconnects", Duration::from_secs(60));
+    let engine = synth_engine(73);
+    let elems = engine.img_elems();
+    let killers = 20usize;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_wait_us: 0,
+        max_accepts: Some(killers + 2),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+    let a = addr.to_string();
+
+    let mut rng = Rng::new(74);
+    for k in 0..killers {
+        let images = random_images(&mut rng, 2, elems);
+        let bytes = if k % 2 == 0 {
+            v1_request_bytes(&images, 2)
+        } else {
+            v2_request_bytes(0, &images, 2)
+        };
+        let cut = 4 + 1 + (k * 97) % (bytes.len() - 6); // always mid-frame
+        let mut s = TcpStream::connect(&a).unwrap();
+        s.write_all(&bytes[..cut]).unwrap();
+        drop(s); // vanish mid-payload (or mid-v2-header)
+    }
+
+    // bit-identical service continues on fresh connections
+    for seed in [75u64, 76] {
+        let mut rng = Rng::new(seed);
+        let images = random_images(&mut rng, 3, elems);
+        let got = classify_remote(&a, &images, 3).unwrap();
+        assert_eq!(got, expected(&engine, &images, 3));
+    }
+    server.join().unwrap().unwrap();
+    let m = stats.default_model();
+    assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.conns_open.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn half_open_client_still_gets_every_answer() {
+    let _wd = Watchdog::arm("half_open_client", Duration::from_secs(60));
+    let engine = synth_engine(77);
+    let elems = engine.img_elems();
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_wait_us: 100,
+        max_accepts: Some(1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+    // two pipelined requests, then shutdown(WR): the read side of the
+    // socket is gone from the server's perspective, but both answers
+    // must still arrive (graceful half-close), in order.
+    let mut rng = Rng::new(78);
+    let img_a = random_images(&mut rng, 2, elems);
+    let img_b = random_images(&mut rng, 1, elems);
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut burst = v1_request_bytes(&img_a, 2);
+    burst.extend_from_slice(&v2_request_bytes(0, &img_b, 1));
+    s.write_all(&burst).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    assert_eq!(read_response(&mut s).unwrap(), expected(&engine, &img_a, 2));
+    assert_eq!(read_response(&mut s).unwrap(), expected(&engine, &img_b, 1));
+    // and then the server closes cleanly
+    expect_closed(s);
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.default_model().requests.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn pipelined_burst_is_answered_in_request_order() {
+    let _wd = Watchdog::arm("pipelined_burst", Duration::from_secs(60));
+    let engine = synth_engine(79);
+    let elems = engine.img_elems();
+    let cfg = ServeConfig {
+        workers: 3,
+        max_batch: 4, // smaller than the burst: several engine batches in flight
+        batch_wait_us: 0,
+        max_accepts: Some(1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+    // 16 requests written back-to-back with no reads in between: the
+    // event loop reads ahead while earlier requests are still in the
+    // pool (the blocking server never had requests from one connection
+    // in flight concurrently). Responses must come back in request
+    // order and bit-identical despite out-of-order completion being
+    // possible.
+    let mut rng = Rng::new(80);
+    let reqs: Vec<(Vec<f32>, usize)> = (0..16)
+        .map(|i| {
+            let n = 1 + i % 3;
+            (random_images(&mut rng, n, elems), n)
+        })
+        .collect();
+    let mut burst = Vec::new();
+    for (i, (images, n)) in reqs.iter().enumerate() {
+        if i % 2 == 0 {
+            burst.extend_from_slice(&v1_request_bytes(images, *n as u32));
+        } else {
+            burst.extend_from_slice(&v2_request_bytes(0, images, *n as u32));
+        }
+    }
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&burst).unwrap();
+    for (i, (images, n)) in reqs.iter().enumerate() {
+        let got = read_response(&mut s).unwrap();
+        assert_eq!(got, expected(&engine, images, *n), "pipelined request {i}");
+    }
+    drop(s);
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.default_model().requests.load(Ordering::Relaxed), 16);
+}
+
+#[test]
+fn connections_over_max_conns_are_rejected_until_capacity_frees() {
+    let _wd = Watchdog::arm("max_conns_rejection", Duration::from_secs(60));
+    let engine = synth_engine(81);
+    let elems = engine.img_elems();
+    let cap = 4usize;
+    let rejected = 4usize;
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_conns: Some(cap),
+        max_accepts: Some(cap + rejected + 1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+    // fill the cap with idle holders and wait until they're installed
+    let mut holders: Vec<TcpStream> =
+        (0..cap).map(|_| TcpStream::connect(addr).unwrap()).collect();
+    while stats.conns_open.load(Ordering::Relaxed) < cap as u64 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // everything beyond the cap is accepted and closed straight back
+    for _ in 0..rejected {
+        let s = TcpStream::connect(addr).unwrap();
+        expect_closed(s);
+    }
+    assert_eq!(stats.conns_rejected.load(Ordering::Relaxed), rejected as u64);
+    // freeing one slot lets the next client in — and it gets a
+    // bit-identical answer, so rejection never corrupted the loop
+    drop(holders.remove(0));
+    while stats.conns_open.load(Ordering::Relaxed) >= cap as u64 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut rng = Rng::new(82);
+    let images = random_images(&mut rng, 2, elems);
+    let got = classify_remote(&addr.to_string(), &images, 2).unwrap();
+    assert_eq!(got, expected(&engine, &images, 2));
+
+    drop(holders); // let the bounded run drain
+    server.join().unwrap().unwrap();
+    assert_eq!(
+        stats.conns_accepted.load(Ordering::Relaxed),
+        (cap + rejected + 1) as u64
+    );
+    assert_eq!(stats.default_model().requests.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn idle_and_loris_connections_time_out_on_both_backends() {
+    let _wd = Watchdog::arm("conn_timeouts", Duration::from_secs(120));
+    for poll_fallback in [false, true] {
+        let engine = synth_engine(83);
+        let elems = engine.img_elems();
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_wait_us: 0,
+            conn_timeout_ms: 200,
+            max_accepts: Some(3),
+            poll_fallback,
+            ..ServeConfig::default()
+        };
+        let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+        // a fully idle connection and an abandoned mid-header loris:
+        // both are reclaimed by the deadline, not held forever
+        let idle = TcpStream::connect(addr).unwrap();
+        let mut loris = TcpStream::connect(addr).unwrap();
+        loris.write_all(&[0x01]).unwrap(); // 1 of 4 header bytes, then silence
+        expect_closed(idle);
+        expect_closed(loris);
+        assert_eq!(stats.conns_timed_out.load(Ordering::Relaxed), 2);
+
+        // an active client is never timed out while the server owes it
+        // a response, and still gets the right answer
+        let mut rng = Rng::new(84);
+        let images = random_images(&mut rng, 2, elems);
+        let mut s = TcpStream::connect(addr).unwrap();
+        let got = classify_on_v2(&mut s, 0, &images, 2).unwrap();
+        assert_eq!(got, expected(&engine, &images, 2));
+        drop(s);
+        server.join().unwrap().unwrap();
+        assert_eq!(
+            stats.conns_timed_out.load(Ordering::Relaxed),
+            2,
+            "poll_fallback={poll_fallback}: the live client must not time out"
+        );
+    }
+}
+
+#[test]
+fn dead_client_in_a_shared_batch_does_not_poison_the_living() {
+    let _wd = Watchdog::arm("epipe_shared_batch", Duration::from_secs(60));
+    let engine = synth_engine(85);
+    let elems = engine.img_elems();
+    let rounds = 5usize;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        // a straggler window so the dead and living clients' requests
+        // genuinely coalesce into one engine batch
+        batch_wait_us: 50_000,
+        max_accepts: Some(rounds * 2),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+    let mut rng = Rng::new(86);
+    for round in 0..rounds {
+        // the doomed client: full request, then gone before any reply
+        // can be written — the response write hits EPIPE/reset
+        let dead_images = random_images(&mut rng, 2, elems);
+        let mut dead = TcpStream::connect(addr).unwrap();
+        dead.write_all(&v1_request_bytes(&dead_images, 2)).unwrap();
+        drop(dead);
+        // the living client shares the batch and must be untouched
+        let images = random_images(&mut rng, 3, elems);
+        let got = classify_remote(&addr.to_string(), &images, 3).unwrap();
+        assert_eq!(got, expected(&engine, &images, 3), "round {round}");
+    }
+    server.join().unwrap().unwrap();
+    // every image executed, including the dead clients' (their requests
+    // were already admitted; only the response delivery failed)
+    assert_eq!(
+        stats.default_model().images.load(Ordering::Relaxed),
+        (rounds * 5) as u64
+    );
+    assert_eq!(stats.total_rejected(), 0);
+}
+
+#[test]
+fn garbage_streams_close_cleanly_and_never_wedge() {
+    let _wd = Watchdog::arm("garbage_streams", Duration::from_secs(60));
+    let engine = synth_engine(87);
+    let elems = engine.img_elems();
+    let garbage_conns = 24usize;
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_accepts: Some(garbage_conns + 1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+    let mut rng = Rng::new(88);
+    for g in 0..garbage_conns {
+        let len = 1 + rng.below(512);
+        let junk: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let mut s = TcpStream::connect(addr).unwrap();
+        // dribble some of them to mix loris with garbage
+        if g % 3 == 0 {
+            chunked_write(&mut s, &junk, 11, Duration::from_millis(1)).unwrap();
+        } else {
+            s.write_all(&junk).unwrap();
+        }
+        s.shutdown(Shutdown::Write).ok();
+        // server must terminate the connection (a random u32 ≤ 4096
+        // would start a payload wait, but our write side is shut, so
+        // EOF lands mid-payload and closes it)
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        expect_closed(s);
+    }
+
+    let mut rng2 = Rng::new(89);
+    let images = random_images(&mut rng2, 2, elems);
+    let got = classify_remote(&addr.to_string(), &images, 2).unwrap();
+    assert_eq!(got, expected(&engine, &images, 2));
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.default_model().requests.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.conns_open.load(Ordering::Relaxed), 0);
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn setsockopt(
+        fd: std::os::raw::c_int,
+        level: std::os::raw::c_int,
+        name: std::os::raw::c_int,
+        value: *const std::os::raw::c_void,
+        len: u32,
+    ) -> std::os::raw::c_int;
+}
+
+/// Shrink a socket's receive buffer (Linux; no-op elsewhere) so the
+/// server hits genuine short writes while this client reads slowly.
+fn shrink_rcvbuf(s: &TcpStream, bytes: i32) {
+    #[cfg(target_os = "linux")]
+    {
+        use std::os::unix::io::AsRawFd;
+        const SOL_SOCKET: std::os::raw::c_int = 1;
+        const SO_RCVBUF: std::os::raw::c_int = 8;
+        // SAFETY: plain setsockopt on a live fd with a stack i32.
+        unsafe {
+            setsockopt(
+                s.as_raw_fd(),
+                SOL_SOCKET,
+                SO_RCVBUF,
+                &bytes as *const _ as *const std::os::raw::c_void,
+                std::mem::size_of::<i32>() as u32,
+            );
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    let _ = (s, bytes);
+}
+
+#[test]
+fn partial_response_writes_reassemble_for_a_slow_reader() {
+    let _wd = Watchdog::arm("partial_writes", Duration::from_secs(120));
+    let engine = synth_engine(90);
+    let elems = engine.img_elems();
+    // protocol-max responses (4 + 4*4096 bytes each), pipelined past
+    // any socket buffer while the client reads nothing: the server's
+    // write path must block, park the remainder, and resume cleanly —
+    // byte-exact — once the client drains.
+    let reqs = 16usize;
+    let n = 4096usize;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 4096,
+        batch_wait_us: 0,
+        queue_images: 2 * 4096,
+        max_accepts: Some(1),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start_single(engine.clone(), cfg);
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    shrink_rcvbuf(&s, 4096);
+    let mut rng = Rng::new(91);
+    let mut wants: Vec<Vec<u32>> = Vec::new();
+    for _ in 0..reqs {
+        let images = random_images(&mut rng, n, elems);
+        s.write_all(&v1_request_bytes(&images, n as u32)).unwrap();
+        wants.push(expected(&engine, &images, n));
+    }
+    // let responses pile up against the tiny receive window
+    std::thread::sleep(Duration::from_millis(300));
+    for (i, want) in wants.iter().enumerate() {
+        let got = read_response(&mut s).unwrap();
+        assert_eq!(&got, want, "response {i} after partial writes");
+    }
+    drop(s);
+    server.join().unwrap().unwrap();
+    assert_eq!(
+        stats.default_model().requests.load(Ordering::Relaxed),
+        reqs as u64
+    );
+}

@@ -19,7 +19,8 @@ use aquant::nn::engine::Engine;
 use aquant::nn::registry::ModelRegistry;
 use aquant::nn::synth;
 use aquant::server::{
-    classify_on, classify_on_v2, classify_remote, classify_remote_v2, encode_header_v2, MAGIC,
+    classify_on, classify_on_v2, classify_remote, classify_remote_v2, encode_header_v2,
+    RequestHeader,
 };
 use aquant::util::rng::Rng;
 
@@ -45,7 +46,7 @@ fn interleaved_mixed_model_traffic_is_bit_identical() {
         workers: 3,
         max_batch: 8,
         batch_wait_us: 300,
-        max_conns: Some(n_clients),
+        max_accepts: Some(n_clients),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start(registry, cfg);
@@ -108,7 +109,7 @@ fn v1_clients_get_the_default_model() {
         workers: 2,
         max_batch: 4,
         batch_wait_us: 0,
-        max_conns: Some(2),
+        max_accepts: Some(2),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start(registry, cfg);
@@ -136,7 +137,7 @@ fn unknown_model_and_bad_version_close_only_that_connection() {
         workers: 1,
         max_batch: 4,
         batch_wait_us: 0,
-        max_conns: Some(5),
+        max_accepts: Some(5),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start(registry, cfg);
@@ -147,13 +148,14 @@ fn unknown_model_and_bad_version_close_only_that_connection() {
     s.write_all(&encode_header_v2(9, 1)).unwrap();
     expect_closed(s);
 
-    // unsupported version: hand-build magic + version 1
+    // unsupported version: a well-formed v2 frame claiming version 1
     let mut s = TcpStream::connect(&a).unwrap();
-    let mut hdr = Vec::new();
-    hdr.extend_from_slice(&MAGIC);
-    hdr.extend_from_slice(&1u16.to_le_bytes());
-    hdr.extend_from_slice(&0u16.to_le_bytes());
-    hdr.extend_from_slice(&1u32.to_le_bytes());
+    let hdr = RequestHeader::V2 {
+        version: 1,
+        model_id: 0,
+        n: 1,
+    }
+    .encode();
     s.write_all(&hdr).unwrap();
     expect_closed(s);
 
@@ -198,7 +200,7 @@ fn many_models_shared_pool_round_robin() {
         workers: 2,
         max_batch: 16,
         batch_wait_us: 100,
-        max_conns: Some(1),
+        max_accepts: Some(1),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start(registry, cfg);
@@ -266,7 +268,7 @@ fn trickle_model_is_not_starved_by_saturating_model() {
         // per-model queue backpressure genuinely engages during the run
         // and the fairness assertions hold with pushes blocking too
         queue_images: 16,
-        max_conns: Some(hog_clients + 1),
+        max_accepts: Some(hog_clients + 1),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start(Arc::new(registry), cfg);
@@ -341,7 +343,7 @@ fn policy_tails_thread_from_cli_specs_to_bound_server() {
         max_batch: 16,
         batch_wait_us: 300,
         queue_images: 128,
-        max_conns: Some(0),
+        max_accepts: Some(0),
         ..ServeConfig::default()
     };
     let srv = Server::bind(registry.clone(), "127.0.0.1:0", cfg.clone()).unwrap();
@@ -352,7 +354,7 @@ fn policy_tails_thread_from_cli_specs_to_bound_server() {
     assert_eq!(p[0].queue_images, 128);
     assert_eq!((p[1].weight, p[1].max_batch), (1, 16));
     assert_eq!(p[1].batch_wait_us, 0);
-    srv.run().unwrap(); // max_conns 0: binds, drains, exits cleanly
+    srv.run().unwrap(); // max_accepts 0: binds, drains, exits cleanly
 
     // a per-model policy that violates the bounds fails at bind
     let bad = ModelRegistry::with_policies(vec![(

@@ -2,16 +2,22 @@
 //! encode → decode round trip for arbitrary model ids, versions, and
 //! image counts; truncation at every byte boundary behaves as specified
 //! (clean EOF inside the 4-byte sniff window, `UnexpectedEof` inside a
-//! started v2 frame); and byte-sniffing can never misroute a valid v1
-//! request.
+//! started v2 frame); byte-sniffing can never misroute a valid v1
+//! request; and the event loop's incremental [`RequestDecoder`] (a)
+//! never panics on arbitrary byte streams — random prefixes of valid
+//! frames, pure garbage, any chunking — (b) always terminates each
+//! stream in a clean close decision or a complete request, and (c)
+//! agrees byte-for-byte with the blocking reader on valid frames.
 
 use std::io::ErrorKind;
 
+use aquant::server::conn::{Decoded, RequestDecoder};
 use aquant::server::{
     encode_header_v2, read_request_header, RequestHeader, MAGIC, MAX_REQ_IMAGES, PROTO_VERSION,
     V2_HEADER_LEN,
 };
 use aquant::util::prop;
+use aquant::util::rng::Rng;
 
 #[test]
 fn v1_header_roundtrips_for_any_n() {
@@ -112,6 +118,165 @@ fn truncation_at_every_boundary_is_well_defined() {
                 Ok(Some(got)) => panic!("cut={cut} decoded {got:?} from a truncated frame"),
             }
         }
+    });
+}
+
+/// Drive the incremental decoder over `stream` exactly the way the
+/// event loop does (arbitrary chunk sizes, server-side n/version/model
+/// validation at the header gate), collecting completed requests.
+/// Returns `(requests, rejected)` where `rejected` means the emulated
+/// server decided to drop the connection. Every call must terminate —
+/// the loop is bounded by the stream length — and must never panic,
+/// whatever the bytes are.
+fn drive_decoder(
+    stream: &[u8],
+    rng: &mut Rng,
+    img_elems: usize,
+) -> (Vec<(RequestHeader, Vec<f32>)>, bool) {
+    let mut dec = RequestDecoder::new();
+    let mut requests = Vec::new();
+    let mut off = 0usize;
+    while off < stream.len() {
+        if let Some(hdr) = dec.gated() {
+            // the server's validation order: version, model id, n
+            let bad_version = matches!(hdr, RequestHeader::V2 { version, .. }
+                if version != PROTO_VERSION);
+            let n = hdr.n() as usize;
+            if bad_version || hdr.model_id() != 0 || n == 0 || n > MAX_REQ_IMAGES {
+                return (requests, true);
+            }
+            dec.begin_payload(img_elems);
+            continue;
+        }
+        // feed an arbitrary-sized slice; the decoder consumes at most
+        // want() bytes and must report the consumption honestly
+        let chunk = 1 + rng.below(16);
+        let end = (off + chunk).min(stream.len());
+        let want_before = dec.want();
+        let (consumed, event) = dec.feed(&stream[off..end]);
+        assert!(consumed <= end - off, "decoder over-consumed");
+        assert!(consumed <= want_before, "decoder consumed past want()");
+        assert!(
+            consumed > 0 || want_before == 0,
+            "decoder stalled with bytes available"
+        );
+        off += consumed;
+        if let Decoded::Request { header, images } = event {
+            assert_eq!(images.len(), header.n() as usize * img_elems);
+            requests.push((header, images));
+        }
+    }
+    (requests, false)
+}
+
+#[test]
+fn decoder_never_panics_on_valid_frame_prefixes() {
+    // Random prefixes of pipelined valid v1/v2 frames, fed in random
+    // chunks: whatever survives the cut decodes to exactly the frames
+    // that fit, and the tail is silently incomplete (the event loop's
+    // EOF handling decides clean-vs-truncated; the decoder just must
+    // not lie, loop, or panic).
+    prop::check_default("decoder on valid prefixes", |rng| {
+        let img_elems = 1 + rng.below(8);
+        let mut stream = Vec::new();
+        let mut frames = Vec::new();
+        for _ in 0..1 + rng.below(4) {
+            let n = 1 + rng.below(5) as u32;
+            let images: Vec<f32> = (0..n as usize * img_elems)
+                .map(|_| rng.normal())
+                .collect();
+            let header = if rng.bernoulli(0.5) {
+                RequestHeader::V1 { n }
+            } else {
+                RequestHeader::V2 {
+                    version: PROTO_VERSION,
+                    model_id: 0,
+                    n,
+                }
+            };
+            stream.extend_from_slice(&header.encode());
+            for v in &images {
+                stream.extend_from_slice(&v.to_le_bytes());
+            }
+            frames.push((header, images, stream.len()));
+        }
+        let cut = rng.below(stream.len() + 1);
+        let (requests, rejected) = drive_decoder(&stream[..cut], rng, img_elems);
+        assert!(!rejected, "valid frames must not be rejected");
+        let complete = frames.iter().take_while(|(_, _, end)| *end <= cut).count();
+        assert_eq!(requests.len(), complete, "cut={cut}");
+        for ((h, imgs, _), (gh, gimgs)) in frames.iter().zip(&requests) {
+            assert_eq!(h, gh);
+            assert_eq!(imgs, gimgs);
+        }
+    });
+}
+
+#[test]
+fn decoder_never_panics_on_garbage_and_always_terminates() {
+    // Pure garbage (and garbage spliced after a valid frame): the
+    // decoder either parses a header the server rejects — terminating
+    // the connection — or keeps waiting for bytes that will never make
+    // a full frame. No panic, no infinite loop, no over-consumption,
+    // and bounded allocation (payload space only ever follows an
+    // accepted header).
+    prop::check_default("decoder on garbage", |rng| {
+        let img_elems = 1 + rng.below(8);
+        let mut stream: Vec<u8> = Vec::new();
+        if rng.bernoulli(0.3) {
+            // valid frame first: garbage after a request must not
+            // corrupt the requests decoded before it
+            let n = 1 + rng.below(3) as u32;
+            stream.extend_from_slice(&RequestHeader::V1 { n }.encode());
+            for _ in 0..n as usize * img_elems {
+                stream.extend_from_slice(&rng.normal().to_le_bytes());
+            }
+        }
+        let valid_len = stream.len();
+        let junk = 1 + rng.below(256);
+        stream.extend((0..junk).map(|_| rng.next_u64() as u8));
+        let (requests, _rejected) = drive_decoder(&stream, rng, img_elems);
+        // every request decoded before the garbage is intact
+        for (h, imgs) in &requests {
+            assert_eq!(imgs.len(), h.n() as usize * img_elems);
+        }
+        if valid_len > 0 {
+            assert!(!requests.is_empty(), "valid frame lost to trailing garbage");
+        }
+    });
+}
+
+#[test]
+fn incremental_decoder_agrees_with_blocking_reader_on_headers() {
+    prop::check_default("incremental vs blocking header decode", |rng| {
+        let h = if rng.bernoulli(0.5) {
+            RequestHeader::V1 {
+                n: rng.next_u64() as u32,
+            }
+        } else {
+            RequestHeader::V2 {
+                version: rng.next_u64() as u16,
+                model_id: rng.next_u64() as u16,
+                n: rng.next_u64() as u32,
+            }
+        };
+        let bytes = h.encode();
+        if bytes[..4] == MAGIC && matches!(h, RequestHeader::V1 { .. }) {
+            return; // the one ambiguous v1 value; rejected either way
+        }
+        let blocking = read_request_header(&mut &bytes[..]).unwrap().unwrap();
+        let mut dec = RequestDecoder::new();
+        let mut gated = None;
+        let mut off = 0;
+        while off < bytes.len() && gated.is_none() {
+            let (c, ev) = dec.feed(&bytes[off..off + 1]);
+            off += c;
+            if let Decoded::Header(g) = ev {
+                gated = Some(g);
+            }
+        }
+        assert_eq!(gated, Some(blocking));
+        assert_eq!(dec.gated(), Some(blocking));
     });
 }
 

@@ -17,7 +17,7 @@ use aquant::config::ServeConfig;
 use aquant::server::{classify_on, classify_remote};
 use aquant::util::rng::Rng;
 
-use common::{expect_closed, expected, random_images, start_single, synth_engine};
+use common::{expect_closed, expected, random_images, start_single, synth_engine, v1_request_bytes};
 
 #[test]
 fn concurrent_clients_match_sequential_engine() {
@@ -27,7 +27,7 @@ fn concurrent_clients_match_sequential_engine() {
         workers: 3,
         max_batch: 8,
         batch_wait_us: 500,
-        max_conns: Some(n_clients + 1),
+        max_accepts: Some(n_clients + 1),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start_single(engine.clone(), cfg);
@@ -77,7 +77,7 @@ fn single_image_zero_wait_roundtrip() {
         workers: 1,
         max_batch: 1,
         batch_wait_us: 0,
-        max_conns: Some(1),
+        max_accepts: Some(1),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start_single(engine.clone(), cfg);
@@ -103,7 +103,7 @@ fn oversized_pipelined_requests_never_wedge_the_scheduler() {
         workers: 2,
         max_batch: 2,
         batch_wait_us: 0,
-        max_conns: Some(1),
+        max_accepts: Some(1),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start_single(engine.clone(), cfg);
@@ -133,7 +133,7 @@ fn nan_payload_is_answered_and_does_not_kill_workers() {
         workers: 2,
         max_batch: 4,
         batch_wait_us: 0,
-        max_conns: Some(3),
+        max_accepts: Some(3),
         ..ServeConfig::default()
     };
     let (addr, _stats, server) = start_single(engine.clone(), cfg);
@@ -164,7 +164,7 @@ fn malformed_requests_do_not_wedge_server() {
         workers: 1,
         max_batch: 4,
         batch_wait_us: 0,
-        max_conns: Some(5),
+        max_accepts: Some(5),
         ..ServeConfig::default()
     };
     let (addr, stats, server) = start_single(engine.clone(), cfg);
@@ -173,18 +173,18 @@ fn malformed_requests_do_not_wedge_server() {
 
     // n = 0
     let mut s = TcpStream::connect(&a).unwrap();
-    s.write_all(&0u32.to_le_bytes()).unwrap();
+    s.write_all(&v1_request_bytes(&[], 0)).unwrap();
     expect_closed(s);
 
     // n > 4096
     let mut s = TcpStream::connect(&a).unwrap();
-    s.write_all(&5000u32.to_le_bytes()).unwrap();
+    s.write_all(&v1_request_bytes(&[], 5000)).unwrap();
     expect_closed(s);
 
-    // mid-stream EOF: header promises 2 images, body cut short
+    // mid-stream EOF: header promises 2 images, body cut short (1/8)
     let mut s = TcpStream::connect(&a).unwrap();
-    s.write_all(&2u32.to_le_bytes()).unwrap();
-    s.write_all(&vec![0u8; img_elems]).unwrap(); // 1/8 of the payload
+    s.write_all(&v1_request_bytes(&vec![0.0; img_elems / 4], 2))
+        .unwrap();
     drop(s);
 
     // the server must still answer good requests on fresh connections

@@ -9,7 +9,11 @@
 #   (c) the mixed-model row (tiny+bench interleaved through one shared
 #       pool, "mixed_w4_b32x2_images_per_sec") regresses more than the
 #       same fraction below the best prior entry that has it (older
-#       history entries without the key are skipped, not failed).
+#       history entries without the key are skipped, not failed), or
+#   (d) the high-connection-count row (256 concurrent pipelined TCP
+#       clients through the readiness event loop,
+#       "conns256_images_per_sec") regresses the same way — same
+#       skip-older-entries rule.
 # Each passing run is appended to bench_history/ as serve_NNN.json, so
 # the directory is the PR-over-PR perf trajectory.
 set -euo pipefail
@@ -59,16 +63,21 @@ if cur is None:
 # still catching a real serving-path regression). One pass over the
 # history files feeds both metrics.
 MIXED = "mixed_w4_b32x2_images_per_sec"
+CONNS = "conns256_images_per_sec"
 mixed = blob.get(MIXED)
 if mixed is None:
     sys.exit(f"bench_check: FAIL - no {MIXED} in the blob")
+conns = blob.get(CONNS)
+if conns is None:
+    sys.exit(f"bench_check: FAIL - no {CONNS} in the blob")
 
-prior, mixed_prior = [], []
+prior, mixed_prior, conns_prior = [], [], []
 for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
     try:
         entry = json.load(open(path))
         v = ips(entry)          # KeyError/TypeError on an off-schema row
         m = entry.get(MIXED)
+        c = entry.get(CONNS)
     except (ValueError, KeyError, TypeError, AttributeError):
         print(f"bench_check: warning - unreadable history entry {path}", file=sys.stderr)
         continue
@@ -76,6 +85,8 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         prior.append((v, path))
     if m is not None:
         mixed_prior.append((m, path))
+    if c is not None:
+        conns_prior.append((c, path))
 
 def gate(label, value, history, no_prior_msg):
     if not history:
@@ -98,6 +109,10 @@ gate("w4/b64 throughput", cur, prior,
 # (entries predating the row simply lack the key and are skipped).
 gate("mixed 2-model throughput", mixed, mixed_prior,
      f"bench_check: no prior {MIXED} entries; starting the mixed trajectory")
+# Event-loop trajectory: 256 concurrent pipelined connections end to
+# end; same skip rule for entries predating the row.
+gate("256-connection throughput", conns, conns_prior,
+     f"bench_check: no prior {CONNS} entries; starting the conns trajectory")
 
 os.makedirs(hist_dir, exist_ok=True)
 # next index = max existing + 1 (a plain count would re-use an index —

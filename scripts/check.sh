@@ -29,6 +29,20 @@ if command -v cargo >/dev/null 2>&1; then
     ran=1
     (cargo build --release --offline && cargo test -q --offline) || failed=1
 
+    # Connection-conformance suite under an explicit wall-clock guard
+    # (in addition to the in-process Watchdog each of its tests arms):
+    # these tests drive adversarial sockets against the readiness loop,
+    # and a wedged loop must FAIL CI loudly, never hang it. The suite
+    # also ran in the plain `cargo test` above; this second, guarded run
+    # re-executes only the already-built test binary, so it costs suite
+    # runtime, not a rebuild.
+    if command -v timeout >/dev/null 2>&1; then
+        echo "check: re-running conn_conformance under a 600s timeout guard"
+        timeout -k 30 600 cargo test -q --offline --test conn_conformance || failed=1
+    else
+        echo "check: timeout(1) unavailable; relying on the suite's in-process watchdogs" >&2
+    fi
+
     # Style gates, only where the toolchain ships the components
     # (rustup minimal profiles and some containers do not): silently
     # skipped when absent so a bare cargo still gets a green check.
