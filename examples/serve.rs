@@ -54,8 +54,11 @@ fn main() -> Result<()> {
         max_batch: arg_n(6, 64),
         batch_wait_us: arg_n(7, 200) as u64,
         // bounded run: the event loop accepts one connection per client
-        // thread, then drains and returns
-        max_accepts: Some(clients),
+        // thread plus a final nudge connection (opened after the live
+        // stats scrape below), then drains and returns
+        max_accepts: Some(clients + 1),
+        // live observability on an ephemeral port, same event loop
+        stats_addr: Some("127.0.0.1:0".into()),
         ..ServeConfig::default()
     };
 
@@ -72,6 +75,8 @@ fn main() -> Result<()> {
 
     let srv = Server::bind(registry, "127.0.0.1:0", cfg)?;
     let addr = srv.local_addr()?;
+    let stats_addr = srv.stats_local_addr().expect("stats endpoint configured");
+    println!("stats endpoint: http://{stats_addr}/stats (?fmt=text for plaintext)");
     let stats = srv.stats(); // live handle, before the accept loop starts
     for (spec, policy) in specs.iter().zip(srv.policies()) {
         println!("policy {}: {}", spec.name, policy.describe());
@@ -128,6 +133,14 @@ fn main() -> Result<()> {
         mismatches += m;
     }
     let wall = t_start.elapsed();
+
+    // Scrape the live endpoint exactly the way an external collector
+    // would (the server is still running: the load connections are
+    // gone but the accept budget has one connection left).
+    let scraped = scrape_text(stats_addr)?;
+    // One empty connection spends the final accept so the bounded
+    // event loop drains and returns; closing it is a clean EOF.
+    drop(std::net::TcpStream::connect(addr)?);
     server.join().expect("server thread")?;
 
     lat.sort();
@@ -147,9 +160,25 @@ fn main() -> Result<()> {
         (clients * n_req * batch) as f64 / wall.as_secs_f64()
     );
     println!("{}", stats.report());
+    println!("\n== live /stats?fmt=text scrape ==\n{scraped}");
     if mismatches > 0 {
         bail!("{mismatches} served predictions diverged from the sequential engine");
     }
     println!("bit-identity: every served prediction matches the sequential engine");
     Ok(())
+}
+
+/// Fetch `GET /stats?fmt=text` like any external scraper: one request,
+/// read to EOF, strip the HTTP head.
+fn scrape_text(addr: std::net::SocketAddr) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.write_all(b"GET /stats?fmt=text HTTP/1.0\r\n\r\n")?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw)?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or(raw);
+    Ok(body)
 }

@@ -125,7 +125,7 @@ fn main() {
     // all 256 connections are genuinely concurrent while the server
     // side runs them on ONE readiness loop. Wall clock over the whole
     // burst → images/sec.
-    let conns_ips = {
+    let (conns_ips, p99_service_us) = {
         let conns = 256usize;
         let driver_threads = 8usize;
         let reqs = 4usize;
@@ -142,6 +142,7 @@ fn main() {
         let srv = aquant::server::Server::bind_single(tiny_srv, "127.0.0.1:0", cfg)
             .expect("bind bench server");
         let addr = srv.local_addr().expect("addr");
+        let stats = srv.stats(); // outlives run(): read p99 after the join
         let server = std::thread::spawn(move || srv.run());
         let payload: Vec<u8> = {
             let imgs: Vec<f32> = (0..batch * elems).map(|_| rng.range_f32(-1.0, 3.0)).collect();
@@ -186,13 +187,23 @@ fn main() {
         server.join().expect("server thread").expect("serve ok");
         let total = (conns * reqs * batch) as f64;
         let ips = total / wall.as_secs_f64();
+        // tail latency of the engine batches this burst produced, from
+        // the same histogram /stats serves (log2 buckets, so ~2x
+        // resolution — regression gating wants the trend, not the digit)
+        let p99 = stats
+            .model(0)
+            .expect("default model")
+            .service_hist
+            .quantile(0.99)
+            .unwrap_or(0.0);
         println!(
             "serve/conns256/pipelined {:>10.1}ms {:>12.0} images/s \
-             (256 conns, one event loop)",
+             (256 conns, one event loop, batch-service p99 {:.0}us)",
             wall.as_secs_f64() * 1e3,
-            ips
+            ips,
+            p99
         );
-        ips
+        (ips, p99)
     };
 
     let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"rows\": [\n");
@@ -206,6 +217,7 @@ fn main() {
     json.push_str(&format!(
         "  ],\n  \"mixed_w4_b32x2_images_per_sec\": {mixed_ips:.1},\n  \
          \"conns256_images_per_sec\": {conns_ips:.1},\n  \
+         \"p99_service_us\": {p99_service_us:.1},\n  \
          \"speedup_w4_vs_w1_b64\": {speedup:.3}\n}}\n"
     ));
     match std::env::var("BENCH_JSON") {

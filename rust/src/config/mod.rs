@@ -224,13 +224,18 @@ pub struct PolicyOverrides {
     pub batch_wait_us: Option<u64>,
     pub queue_images: Option<usize>,
     pub weight: Option<u32>,
+    /// End-to-end p99 latency target in µs: when set, the scheduler
+    /// nudges this model's effective weight up (never below `weight`,
+    /// bounded) while its observed p99 misses the target. None = no
+    /// SLO, weight stays static.
+    pub slo_us: Option<u64>,
 }
 
 impl PolicyOverrides {
     /// Parse the `;key=value` pairs trailing a model spec. Known keys:
-    /// `max_batch`, `batch_wait_us`, `queue_images`, `weight`.
-    /// Unknown keys, duplicates, bad numbers, and `weight=0` are
-    /// errors (`spec` is quoted in messages).
+    /// `max_batch`, `batch_wait_us`, `queue_images`, `weight`,
+    /// `slo_us`. Unknown keys, duplicates, bad numbers, `weight=0`,
+    /// and `slo_us=0` are errors (`spec` is quoted in messages).
     pub fn parse_pairs<'a>(
         pairs: impl Iterator<Item = &'a str>,
         spec: &str,
@@ -254,9 +259,19 @@ impl PolicyOverrides {
                     }
                     out.weight.replace(w).is_some()
                 }
+                "slo_us" => {
+                    let us: u64 = num(spec, k, v)?;
+                    if us == 0 {
+                        bail!(
+                            "model spec {spec:?}: slo_us=0 is unmeetable \
+                             (omit the key for no SLO)"
+                        );
+                    }
+                    out.slo_us.replace(us).is_some()
+                }
                 other => bail!(
                     "model spec {spec:?}: unknown policy key {other:?} \
-                     (known: max_batch, batch_wait_us, queue_images, weight)"
+                     (known: max_batch, batch_wait_us, queue_images, weight, slo_us)"
                 ),
             };
             if dup {
@@ -313,8 +328,8 @@ impl ModelSpec {
     /// `synth:` prefix is reserved (a manifest model cannot be named
     /// "synth"). The `;key=value` tail sets this model's serving
     /// policy ([`PolicyOverrides`]): `;max_batch=`, `;batch_wait_us=`,
-    /// `;queue_images=`, `;weight=` — anything unset inherits the
-    /// server-level knobs.
+    /// `;queue_images=`, `;weight=`, `;slo_us=` — anything unset
+    /// inherits the server-level knobs.
     pub fn parse(
         spec: &str,
         default_method: Option<Method>,
@@ -413,7 +428,8 @@ impl ModelSpec {
 /// Serving-runtime knobs, threaded from the CLI (`aquant serve` /
 /// `examples/serve.rs`) into the event-loop server: `--workers`,
 /// `--max-batch`, `--batch-wait-us`, `--queue-images`, `--max-conns`,
-/// `--conn-timeout-ms`, `--max-accepts`, `--io-poll`.
+/// `--conn-timeout-ms`, `--max-accepts`, `--io-poll`, `--stats-addr`,
+/// `--stats-history`, `--stats-history-every-s`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServeConfig {
     /// Inference worker threads. 0 = auto (cores − 1).
@@ -441,6 +457,15 @@ pub struct ServeConfig {
     /// Force the portable `poll(2)` readiness backend (`--io-poll`)
     /// instead of the platform default (epoll on Linux).
     pub poll_fallback: bool,
+    /// Bind a read-only stats endpoint here (`--stats-addr`, e.g.
+    /// `127.0.0.1:9100`): `GET /stats` returns a JSON snapshot,
+    /// `GET /stats?fmt=text` plaintext. None = no endpoint.
+    pub stats_addr: Option<String>,
+    /// Append periodic stats snapshots to this file as JSON lines
+    /// (`--stats-history`); None = no history.
+    pub stats_history: Option<String>,
+    /// Seconds between history snapshots (`--stats-history-every-s`).
+    pub stats_history_every_s: u64,
 }
 
 impl Default for ServeConfig {
@@ -454,6 +479,9 @@ impl Default for ServeConfig {
             conn_timeout_ms: 0,
             max_accepts: None,
             poll_fallback: false,
+            stats_addr: None,
+            stats_history: None,
+            stats_history_every_s: 5,
         }
     }
 }
@@ -487,6 +515,10 @@ impl ServeConfig {
             conn_timeout_ms: args.num_flag("conn-timeout-ms", d.conn_timeout_ms)?,
             max_accepts: opt_count("max-accepts")?,
             poll_fallback: args.bool_flag("io-poll"),
+            stats_addr: args.str_flag_opt("stats-addr").map(str::to_string),
+            stats_history: args.str_flag_opt("stats-history").map(str::to_string),
+            stats_history_every_s: args
+                .num_flag("stats-history-every-s", d.stats_history_every_s)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -511,6 +543,10 @@ impl ServeConfig {
     /// Upper bound on the per-connection idle/read timeout (1 hour):
     /// beyond that "never" (`0`) is what the operator means.
     pub const MAX_CONN_TIMEOUT_MS: u64 = 3_600_000;
+
+    /// Upper bound on the stats-history snapshot interval (1 day):
+    /// beyond that the operator almost certainly typo'd the unit.
+    pub const MAX_STATS_HISTORY_EVERY_S: u64 = 86_400;
 
     pub fn validate(&self) -> Result<()> {
         if self.max_batch == 0 {
@@ -556,6 +592,16 @@ impl ServeConfig {
                 "--conn-timeout-ms ({}) must be <= {} (1h); use 0 for no timeout",
                 self.conn_timeout_ms,
                 Self::MAX_CONN_TIMEOUT_MS
+            );
+        }
+        if self.stats_history_every_s == 0 {
+            bail!("--stats-history-every-s must be >= 1 (omit --stats-history for none)");
+        }
+        if self.stats_history_every_s > Self::MAX_STATS_HISTORY_EVERY_S {
+            bail!(
+                "--stats-history-every-s ({}) must be <= {} (1 day)",
+                self.stats_history_every_s,
+                Self::MAX_STATS_HISTORY_EVERY_S
             );
         }
         Ok(())
@@ -680,6 +726,37 @@ mod tests {
         assert_eq!(cfg.max_accepts, None);
         assert_eq!(cfg.conn_timeout_ms, 0);
         assert!(!cfg.poll_fallback);
+        assert_eq!(cfg.stats_addr, None);
+        assert_eq!(cfg.stats_history, None);
+        assert_eq!(cfg.stats_history_every_s, 5);
+
+        // stats endpoint + history flags
+        let cfg = ServeConfig::from_args(&a(&[
+            "serve",
+            "--stats-addr",
+            "127.0.0.1:9100",
+            "--stats-history",
+            "/tmp/aquant-stats.jsonl",
+            "--stats-history-every-s",
+            "30",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.stats_addr.as_deref(), Some("127.0.0.1:9100"));
+        assert_eq!(cfg.stats_history.as_deref(), Some("/tmp/aquant-stats.jsonl"));
+        assert_eq!(cfg.stats_history_every_s, 30);
+        // interval is bounded away from 0 (busy-loop) and absurd values
+        assert!(ServeConfig::from_args(&a(&[
+            "serve",
+            "--stats-history-every-s",
+            "0"
+        ]))
+        .is_err());
+        assert!(ServeConfig::from_args(&a(&[
+            "serve",
+            "--stats-history-every-s",
+            "86401"
+        ]))
+        .is_err());
 
         let cfg = ServeConfig::from_args(&a(&["serve", "--max-conns", "12"])).unwrap();
         assert_eq!(cfg.max_conns, Some(12));
@@ -820,7 +897,7 @@ mod tests {
 
         // full tail, any order, on a renamed synth spec with a seed
         let s = ModelSpec::parse(
-            "hot=synth:bench:7;weight=3;max_batch=32;batch_wait_us=50;queue_images=256",
+            "hot=synth:bench:7;weight=3;max_batch=32;batch_wait_us=50;queue_images=256;slo_us=5000",
             None,
             None,
         )
@@ -840,6 +917,7 @@ mod tests {
                 batch_wait_us: Some(50),
                 queue_images: Some(256),
                 weight: Some(3),
+                slo_us: Some(5000),
             }
         );
         assert!(!s.policy.is_empty());
@@ -848,13 +926,21 @@ mod tests {
         let s = ModelSpec::parse("prod=resnet10s:qdrop:W2A2;weight=4", None, None).unwrap();
         assert_eq!(s.policy.weight, Some(4));
         assert_eq!(s.policy.max_batch, None);
+        assert_eq!(s.policy.slo_us, None);
+
+        // an SLO without a weight override rides on the default weight
+        let s = ModelSpec::parse("synth:tiny;slo_us=2000", None, None).unwrap();
+        assert_eq!(s.policy.slo_us, Some(2000));
+        assert_eq!(s.policy.weight, None);
 
         // rejections: unknown key, duplicate key, bad number, weight=0,
-        // malformed pair, empty pair
+        // slo_us=0, malformed pair, empty pair
         assert!(ModelSpec::parse("synth:tiny;turbo=1", None, None).is_err());
         assert!(ModelSpec::parse("synth:tiny;weight=1;weight=2", None, None).is_err());
         assert!(ModelSpec::parse("synth:tiny;max_batch=lots", None, None).is_err());
         assert!(ModelSpec::parse("synth:tiny;weight=0", None, None).is_err());
+        assert!(ModelSpec::parse("synth:tiny;slo_us=0", None, None).is_err());
+        assert!(ModelSpec::parse("synth:tiny;slo_us=fast", None, None).is_err());
         assert!(ModelSpec::parse("synth:tiny;weight", None, None).is_err());
         assert!(ModelSpec::parse("synth:tiny;", None, None).is_err());
 

@@ -58,7 +58,8 @@ USAGE: aquant <subcommand> [flags]
             [--addr H:P] [--iters N] [--workers N|auto] [--max-batch N]
             [--batch-wait-us N] [--queue-images N] [--max-conns N]
             [--conn-timeout-ms N] [--max-accepts N] [--io-poll]
-            [--stats-every-s N]
+            [--stats-every-s N] [--stats-addr H:P]
+            [--stats-history PATH] [--stats-history-every-s N]
 
 methods: nearest adaround brecq qdrop aquant aquant-linear aquant-nofusion
 bits:    e.g. W4A4, W2A2, W32A2 (32 = full precision)
@@ -70,12 +71,17 @@ serve hosts every --model SPEC behind one port and one worker pool
        | [NAME=]MODEL[:METHOD:BITS]   calibrated manifest model; METHOD/
                                       BITS default to --method/--bits
   Either form takes a per-model serving-policy tail `;key=value...`
-  (keys: max_batch, batch_wait_us, queue_images, weight); anything not
-  set inherits the server-level knobs below. weight (default 1) is the
-  model's fair share of worker-pool admission when several models are
-  backlogged (weighted deficit-round-robin — a weight-3 model gets 3
-  images admitted per 1 of a weight-1 model, so a hot model can no
-  longer starve a latency-sensitive one).
+  (keys: max_batch, batch_wait_us, queue_images, weight, slo_us);
+  anything not set inherits the server-level knobs below. weight
+  (default 1) is the model's fair share of worker-pool admission when
+  several models are backlogged (weighted deficit-round-robin — a
+  weight-3 model gets 3 images admitted per 1 of a weight-1 model, so
+  a hot model can no longer starve a latency-sensitive one). slo_us
+  (default: none) is a p99 end-to-end latency target: while the
+  model's observed p99 misses it, the scheduler boosts the model's
+  effective weight (never below the static weight, at most 8x, never
+  past the weight cap) and decays back once the target is met —
+  predictions are bit-identical either way, only admission order moves.
   Quote specs with a policy tail — ';' is a shell separator.
   e.g.  --model 'prod=mobiles:aquant:W4A4;weight=3' \
         --model 'canary=mobiles:qdrop:W4A4;max_batch=8;batch_wait_us=0'
@@ -96,6 +102,15 @@ server owes nothing — slow-loris & dead-peer reclamation; default 0 =
 never), --max-accepts (accept N connections then drain and exit;
 bounded runs for tests/benches; default: run forever), --io-poll
 (force the portable poll(2) backend instead of epoll)
+
+observability: --stats-addr H:P binds a read-only stats endpoint on
+the same event loop (per-model request/image counters, queue depth,
+deficit, and p50/p90/p99 for queue-wait, batch service, and
+end-to-end latency); --stats-history PATH appends a JSON-line
+snapshot every --stats-history-every-s seconds (default 5) plus one
+at shutdown, so perf history survives restarts.
+  curl -s http://HOST:PORT/stats | python3 -m json.tool
+  curl -s 'http://HOST:PORT/stats?fmt=text'
 ";
 
 #[cfg(feature = "pjrt")]

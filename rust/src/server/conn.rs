@@ -17,6 +17,9 @@
 //!                           → try_push to the model's BatchQueue
 //!                           → (in-order) reply staging → partial-write
 //!                           flush
+//!     token u64::MAX: stats listener (--stats-addr, optional)
+//!     token 2^48+n:   stats connection → read HTTP head → snapshot →
+//!                           one-shot response → close
 //! ```
 //!
 //! The BatchQueue / FairScheduler / InferencePool seam is untouched:
@@ -49,6 +52,15 @@
 //!   non-blocking with partial-write carry; `EPIPE`/reset closes that
 //!   connection only, and batch completions to dropped receivers are
 //!   no-ops.
+//! * **Observability never blocks serving**: stats connections live in
+//!   their own token space and slab, are capped at
+//!   [`MAX_STATS_CONNS`], expire on a fixed deadline, and do not count
+//!   toward `--max-conns` / `--max-accepts` or the bounded-run exit
+//!   condition. A stats request is answered from a point-in-time
+//!   [`Snapshot`] of the same atomics the serving path already
+//!   updates — no lock is shared with request handling, and a wedged
+//!   or malicious stats client costs one slab slot for ten seconds,
+//!   nothing more.
 //!
 //! Per wakeup the loop sweeps all live connections for reply/park
 //! progress — O(open conns), fine into the thousands this tier
@@ -67,6 +79,7 @@ use anyhow::{bail, Context, Result};
 use crate::nn::registry::ModelRegistry;
 use crate::util::poll::{Event, Interest, Poller, Waker};
 
+use super::metrics::{self, Snapshot, StatsParse, MAX_STATS_REQUEST};
 use super::sched::{BatchQueue, Doorbell, Pending, ReplySink, TryPush};
 use super::{RequestHeader, ServerStats, MAGIC, MAX_REQ_IMAGES, PROTO_VERSION, V2_HEADER_LEN};
 
@@ -84,6 +97,17 @@ const READ_CHUNK: usize = 64 * 1024;
 /// loop (level-triggered polling re-reports leftover data), so one
 /// fire-hose sender cannot starve its neighbours.
 const READ_BUDGET: usize = 8;
+
+/// Concurrent stats connections. Observability is strictly
+/// best-effort: past the cap new stats clients are accepted and
+/// dropped rather than queued, so a scrape storm cannot grow loop
+/// state. Serving connections have their own (configurable) cap.
+const MAX_STATS_CONNS: usize = 32;
+
+/// Hard wall-clock lifetime of one stats connection, request to close.
+/// Stats requests are one tiny read + one bounded write; anything
+/// still open after this long is a stuck scraper and gets reclaimed.
+const STATS_CONN_TIMEOUT: Duration = Duration::from_secs(10);
 
 // ---------------------------------------------------------------------
 // Incremental request decoder (pure; fuzzed by proto_props.rs)
@@ -333,6 +357,11 @@ impl WriteBuf {
         }
     }
 
+    /// Stage pre-encoded bytes (the stats endpoint's HTTP responses).
+    fn push_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
     /// Write as much as the socket takes right now. `Err` is fatal for
     /// the connection (EPIPE, reset, ...); `Interrupted` is retried
     /// here, `WouldBlock` returns [`Flush::Blocked`].
@@ -373,6 +402,11 @@ impl WriteBuf {
 struct InFlight {
     model_id: u16,
     rx: mpsc::Receiver<Result<Vec<u32>, String>>,
+    /// When the request finished decoding (the `Pending`'s
+    /// `enqueued_at`, surviving queue-full parking): the start of the
+    /// end-to-end latency observed into the model's `e2e_hist` when
+    /// the reply is staged.
+    t0: Instant,
 }
 
 enum Phase {
@@ -441,6 +475,26 @@ const TOKEN_LISTENER: u64 = 0;
 const TOKEN_WAKER: u64 = 1;
 const TOKEN_BASE: u64 = 2;
 
+/// Stats-endpoint tokens live far above any serving slot (slot counts
+/// are bounded by fd limits, orders of magnitude below 2^48), so one
+/// `match` on the token routes an event to the right slab.
+const TOKEN_STATS_LISTENER: u64 = u64::MAX;
+const STATS_TOKEN_BASE: u64 = 1 << 48;
+
+/// One in-flight stats scrape: accumulate the request head, answer
+/// once, flush, close. No protocol state machine — a stats connection
+/// is either still reading or still flushing its single response.
+struct StatsConn {
+    stream: TcpStream,
+    /// Request-head bytes read so far (bounded: parsing rejects heads
+    /// past [`MAX_STATS_REQUEST`] bytes).
+    buf: Vec<u8>,
+    write: WriteBuf,
+    /// Response staged; stop reading, close once the flush completes.
+    responded: bool,
+    opened: Instant,
+}
+
 /// Everything [`run_event_loop`] multiplexes (built by `Server::run`).
 pub(crate) struct LoopCtx {
     pub registry: Arc<ModelRegistry>,
@@ -460,6 +514,8 @@ pub(crate) struct LoopCtx {
     pub conn_timeout: Option<Duration>,
     /// Force the portable poll(2) backend.
     pub poll_fallback: bool,
+    /// Already-bound `--stats-addr` listener (None = no endpoint).
+    pub stats_listener: Option<TcpListener>,
 }
 
 pub(crate) fn run_event_loop(listener: TcpListener, ctx: LoopCtx) -> Result<()> {
@@ -488,10 +544,18 @@ struct EventLoop {
     /// Reusable read buffer (single-threaded loop: one is enough for
     /// every connection).
     chunk: Vec<u8>,
+    /// Optional `--stats-addr` listener; dropped (serving untouched)
+    /// after a long unbroken accept-error streak.
+    stats_listener: Option<TcpListener>,
+    /// Stats-connection slab: token = slot + STATS_TOKEN_BASE.
+    stats_conns: Vec<Option<StatsConn>>,
+    stats_free: Vec<usize>,
+    stats_open: usize,
+    stats_accept_errs: u32,
 }
 
 impl EventLoop {
-    fn new(listener: TcpListener, ctx: LoopCtx) -> Result<EventLoop> {
+    fn new(listener: TcpListener, mut ctx: LoopCtx) -> Result<EventLoop> {
         let mut poller = if ctx.poll_fallback {
             Poller::with_poll_backend()
         } else {
@@ -514,6 +578,18 @@ impl EventLoop {
                 .context("registering listener")?;
             Some(listener)
         };
+        let stats_listener = match ctx.stats_listener.take() {
+            Some(l) => {
+                l.set_nonblocking(true)
+                    .context("non-blocking stats listener")?;
+                use std::os::unix::io::AsRawFd;
+                poller
+                    .register(l.as_raw_fd(), TOKEN_STATS_LISTENER, Interest::READ)
+                    .context("registering stats listener")?;
+                Some(l)
+            }
+            None => None,
+        };
         Ok(EventLoop {
             ctx,
             poller,
@@ -527,6 +603,11 @@ impl EventLoop {
             accept_retry_at: None,
             listener_dead: false,
             chunk: vec![0u8; READ_CHUNK],
+            stats_listener,
+            stats_conns: Vec::new(),
+            stats_free: Vec::new(),
+            stats_open: 0,
+            stats_accept_errs: 0,
         })
     }
 
@@ -541,10 +622,13 @@ impl EventLoop {
                 .wait(&mut events, timeout)
                 .context("poller wait")?;
             let mut accept_ready = false;
+            let mut stats_accept_ready = false;
             for ev in &events {
                 match ev.token {
                     TOKEN_LISTENER => accept_ready = true,
                     TOKEN_WAKER => self.waker.drain(),
+                    TOKEN_STATS_LISTENER => stats_accept_ready = true,
+                    t if t >= STATS_TOKEN_BASE => self.on_stats_event(*ev),
                     _ => self.on_conn_event(*ev),
                 }
             }
@@ -566,11 +650,15 @@ impl EventLoop {
             if accept_ready && self.accept_retry_at.is_none() {
                 self.accept_ready();
             }
+            if stats_accept_ready {
+                self.stats_accept_ready();
+            }
             // Progress sweep: completions may have landed for any
             // connection (the waker says "something finished", not
             // which), and freed queue space un-parks in slot order.
             self.sweep();
             self.sweep_timeouts();
+            self.sweep_stats_timeouts();
         }
         if self.listener_dead {
             bail!("accept loop abandoned after repeated listener errors");
@@ -578,8 +666,9 @@ impl EventLoop {
         Ok(())
     }
 
-    /// Earliest wake deadline: idle timeouts of eligible connections
-    /// and the accept-backoff retry (whichever comes first).
+    /// Earliest wake deadline: idle timeouts of eligible connections,
+    /// the accept-backoff retry, and stats-connection expiry
+    /// (whichever comes first).
     fn next_timeout(&self) -> Option<Duration> {
         let now = Instant::now();
         let retry = self
@@ -597,10 +686,17 @@ impl EventLoop {
                 })
                 .min()
         });
-        match (retry, idle) {
-            (Some(a), Some(b)) => Some(a.min(b)),
-            (a, b) => a.or(b),
-        }
+        let stats_idle = self
+            .stats_conns
+            .iter()
+            .flatten()
+            .map(|c| {
+                (c.opened + STATS_CONN_TIMEOUT)
+                    .checked_duration_since(now)
+                    .unwrap_or(Duration::ZERO)
+            })
+            .min();
+        [retry, idle, stats_idle].into_iter().flatten().min()
     }
 
     fn sweep_timeouts(&mut self) {
@@ -615,6 +711,25 @@ impl EventLoop {
             );
             if expired {
                 self.close(slot, CloseReason::TimedOut);
+            }
+        }
+    }
+
+    /// Reclaim stats connections past their fixed lifetime. Always on
+    /// (independent of `--conn-timeout`): a scrape either finishes in
+    /// milliseconds or is stuck.
+    fn sweep_stats_timeouts(&mut self) {
+        if self.stats_open == 0 {
+            return;
+        }
+        let now = Instant::now();
+        for slot in 0..self.stats_conns.len() {
+            let expired = matches!(
+                &self.stats_conns[slot],
+                Some(c) if now.duration_since(c.opened) >= STATS_CONN_TIMEOUT
+            );
+            if expired {
+                self.close_stats(slot);
             }
         }
     }
@@ -701,6 +816,185 @@ impl EventLoop {
             use std::os::unix::io::AsRawFd;
             let _ = self.poller.deregister(l.as_raw_fd());
         }
+    }
+
+    // -- stats endpoint -----------------------------------------------
+    //
+    // A strictly read-only sidecar on the same loop: nothing below
+    // touches queues, the scheduler, or serving-connection state. All
+    // it shares with the serving path is `ctx.stats` (relaxed atomics).
+
+    fn stats_accept_ready(&mut self) {
+        loop {
+            let Some(listener) = &self.stats_listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    self.stats_accept_errs = 0;
+                    if self.stats_open >= MAX_STATS_CONNS {
+                        // Shed, don't queue: a scrape storm gets reset
+                        // connections while serving stays untouched.
+                        drop(stream);
+                        continue;
+                    }
+                    if let Err(e) = self.install_stats(stream) {
+                        eprintln!("aquant-serve: failed to install stats connection: {e:#}");
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    self.stats_accept_errs += 1;
+                    eprintln!(
+                        "aquant-serve: stats accept error ({} in a row): {e}",
+                        self.stats_accept_errs
+                    );
+                    // Observability is optional: after a long unbroken
+                    // streak drop the endpoint rather than backing off
+                    // forever. Serving keeps its own listener.
+                    if self.stats_accept_errs >= 100 {
+                        eprintln!("aquant-serve: disabling stats endpoint (serving unaffected)");
+                        self.drop_stats_listener();
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drop_stats_listener(&mut self) {
+        if let Some(l) = self.stats_listener.take() {
+            use std::os::unix::io::AsRawFd;
+            let _ = self.poller.deregister(l.as_raw_fd());
+        }
+    }
+
+    fn install_stats(&mut self, stream: TcpStream) -> Result<()> {
+        stream
+            .set_nonblocking(true)
+            .context("non-blocking stats conn")?;
+        let slot = match self.stats_free.pop() {
+            Some(s) => s,
+            None => {
+                self.stats_conns.push(None);
+                self.stats_conns.len() - 1
+            }
+        };
+        let token = STATS_TOKEN_BASE + slot as u64;
+        {
+            use std::os::unix::io::AsRawFd;
+            if let Err(e) = self.poller.register(stream.as_raw_fd(), token, Interest::READ) {
+                self.stats_free.push(slot);
+                return Err(e).context("registering stats conn");
+            }
+        }
+        self.stats_conns[slot] = Some(StatsConn {
+            stream,
+            buf: Vec::new(),
+            write: WriteBuf::default(),
+            responded: false,
+            opened: Instant::now(),
+        });
+        self.stats_open += 1;
+        Ok(())
+    }
+
+    fn on_stats_event(&mut self, ev: Event) {
+        let slot = (ev.token - STATS_TOKEN_BASE) as usize;
+        // Stale event for an already-closed stats slot.
+        if self.stats_conns.get(slot).and_then(Option::as_ref).is_none() {
+            return;
+        }
+        if ev.hangup || ev.error {
+            self.close_stats(slot);
+            return;
+        }
+        if self.stats_read(slot).is_err() {
+            self.close_stats(slot);
+            return;
+        }
+        self.stats_flush(slot);
+    }
+
+    /// Accumulate request-head bytes until [`metrics::parse_stats_request`]
+    /// reaches a verdict, then stage the one-shot response (a fresh
+    /// [`Snapshot`] on success, a plaintext error otherwise). `Err`
+    /// means the connection is unsalvageable (EOF mid-head, I/O error).
+    fn stats_read(&mut self, slot: usize) -> std::result::Result<(), ()> {
+        loop {
+            let conn = self.stats_conns[slot].as_mut().expect("live stats conn");
+            if conn.responded {
+                return Ok(());
+            }
+            // Cap each read so the accumulated head stays within one
+            // read of the parser's reject threshold.
+            match conn.stream.read(&mut self.chunk[..MAX_STATS_REQUEST]) {
+                Ok(0) => return Err(()), // EOF before a full request head
+                Ok(k) => {
+                    conn.buf.extend_from_slice(&self.chunk[..k]);
+                    match metrics::parse_stats_request(&conn.buf) {
+                        StatsParse::Incomplete => continue,
+                        StatsParse::Ok(fmt) => {
+                            let snap = Snapshot::collect(&self.ctx.stats);
+                            conn.write.push_bytes(&metrics::stats_response(&snap, fmt));
+                            conn.responded = true;
+                            return Ok(());
+                        }
+                        StatsParse::Reject(status, msg) => {
+                            conn.write.push_bytes(&metrics::http_response(
+                                status,
+                                "text/plain; charset=utf-8",
+                                msg,
+                            ));
+                            conn.responded = true;
+                            return Ok(());
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+    }
+
+    /// Flush the staged response; close once it is fully delivered.
+    /// On `WouldBlock` switch the poller to write interest (reads are
+    /// over — any extra bytes the client pipelines are ignored).
+    fn stats_flush(&mut self, slot: usize) {
+        let conn = self.stats_conns[slot].as_mut().expect("live stats conn");
+        if !conn.write.is_empty() {
+            match conn.write.flush_to(&mut conn.stream) {
+                Ok(Flush::Done) => {}
+                Ok(Flush::Blocked) => {
+                    let want = Interest {
+                        readable: !conn.responded,
+                        writable: true,
+                    };
+                    use std::os::unix::io::AsRawFd;
+                    let fd = conn.stream.as_raw_fd();
+                    let _ = self.poller.modify(fd, STATS_TOKEN_BASE + slot as u64, want);
+                    return;
+                }
+                Err(_) => {
+                    self.close_stats(slot);
+                    return;
+                }
+            }
+        }
+        if conn.responded {
+            self.close_stats(slot); // answered and drained: done
+        }
+    }
+
+    fn close_stats(&mut self, slot: usize) {
+        let Some(conn) = self.stats_conns[slot].take() else {
+            return;
+        };
+        {
+            use std::os::unix::io::AsRawFd;
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        }
+        self.stats_free.push(slot);
+        self.stats_open -= 1;
     }
 
     fn install(&mut self, stream: TcpStream) -> Result<()> {
@@ -897,10 +1191,11 @@ impl EventLoop {
     ) -> std::result::Result<(), CloseReason> {
         let stats = self.ctx.stats.model(model_id).expect("validated id");
         let conn = self.conns[slot].as_mut().expect("live conn");
+        let t0 = pending.enqueued_at;
         match self.ctx.queues[model_id as usize].try_push(pending, stats) {
             TryPush::Queued(ring) => {
                 conn.phase = Phase::Open;
-                conn.inflight.push_back(InFlight { model_id, rx });
+                conn.inflight.push_back(InFlight { model_id, rx, t0 });
                 if ring {
                     self.ctx.doorbell.ring();
                 }
@@ -982,6 +1277,13 @@ impl EventLoop {
                 Ok(Ok(preds)) => {
                     let stats = self.ctx.stats.model(front.model_id).expect("validated id");
                     stats.requests.fetch_add(1, Ordering::Relaxed);
+                    // End-to-end latency: decode-complete to reply
+                    // staged (includes queue wait, batching, inference,
+                    // and loop turnaround — what the client feels minus
+                    // its own socket).
+                    stats
+                        .e2e_hist
+                        .observe(front.t0.elapsed().as_micros() as u64);
                     conn.write.push_response(&preds);
                     conn.inflight.pop_front();
                 }
@@ -1228,6 +1530,33 @@ mod tests {
         // staging keeps working after a full flush
         wb.push_response(&[9]);
         assert_eq!(wb.len(), 8);
+    }
+
+    #[test]
+    fn write_buf_push_bytes_interleaves_with_frames() {
+        // stats responses use the same partial-write carry as serving
+        // frames; raw bytes and framed responses must coexist byte-exact
+        let mut wb = WriteBuf::default();
+        wb.push_bytes(b"HTTP/1.0 200 OK\r\n\r\n");
+        wb.push_response(&[7]);
+        let mut sink = Throttled {
+            taken: Vec::new(),
+            budget: usize::MAX,
+            dead: false,
+        };
+        assert_eq!(wb.flush_to(&mut sink).unwrap(), Flush::Done);
+        let mut want = b"HTTP/1.0 200 OK\r\n\r\n".to_vec();
+        want.extend_from_slice(&1u32.to_le_bytes());
+        want.extend_from_slice(&7u32.to_le_bytes());
+        assert_eq!(sink.taken, want);
+    }
+
+    #[test]
+    fn stats_token_space_is_disjoint() {
+        // serving tokens are slot + 2 with slots bounded by fd limits;
+        // pin the constants so the dispatch match stays unambiguous
+        assert!(STATS_TOKEN_BASE > TOKEN_BASE + (1u64 << 32));
+        assert!(TOKEN_STATS_LISTENER > STATS_TOKEN_BASE + MAX_STATS_CONNS as u64);
     }
 
     #[test]

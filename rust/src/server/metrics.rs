@@ -1,0 +1,715 @@
+//! Serving-observability tier: lock-free latency histograms, the
+//! point-in-time [`Snapshot`] the stats endpoint serves, the tiny
+//! HTTP-subset request/response codec that endpoint speaks, and the
+//! JSON-lines history writer.
+//!
+//! # Latency recording
+//!
+//! Three distributions are recorded per model, all in microseconds and
+//! all on hot paths, so [`LatencyHist`] is a fixed array of atomic
+//! log2 buckets — `observe` is two relaxed `fetch_add`s plus a
+//! `fetch_max`, no locks, no allocation:
+//!
+//! * **e2e** — per *request*, from the moment its payload finished
+//!   decoding (enqueue into the model's batch queue) until its reply is
+//!   staged into the connection's write buffer. This is what a client
+//!   experiences net of socket I/O, and what the `slo_us=` policy key
+//!   targets.
+//! * **queue_wait** — per request, enqueue → scheduler pop: time spent
+//!   waiting for fair-share admission. High queue_wait with low
+//!   service time means the model is weight-starved, not slow.
+//! * **service** — per *batch*, scheduler admission → pool completion
+//!   (the pre-existing `total_us` measurement, now also bucketed).
+//!
+//! Quantiles come from `util::quantile::bucket_quantile`: log2 buckets
+//! bound the relative error below 2x, which is the right trade for a
+//! wait-free recording path (exact quantiles would need a mutex or a
+//! sampling reservoir on every request).
+//!
+//! # The endpoint codec
+//!
+//! `GET /stats` answers a JSON [`Snapshot`]; `GET /stats?fmt=text` the
+//! plaintext rendering. The parser here is deliberately *not* an HTTP
+//! implementation: it accepts exactly one GET request head (≤
+//! [`MAX_STATS_REQUEST`] bytes), ignores every header, and always
+//! answers `Connection: close`. Anything else — other methods, other
+//! paths, an oversized or malformed head — produces a one-shot error
+//! response and a close, without ever touching the serving path (the
+//! event loop serves both listeners, but stats connections have their
+//! own token space, their own slab, and never count against
+//! `--max-conns` or `--max-accepts`).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::{self, Json};
+use crate::util::quantile::bucket_quantile;
+
+use super::ServerStats;
+
+/// Log2-µs histogram buckets: bucket i counts observations in
+/// [2^i, 2^(i+1)) µs, i.e. sub-µs .. ~35 minutes in the second-to-last
+/// bucket; the last is open-ended. 32 buckets exactly, so the array
+/// still derives `Default` (std stops at 32) and `Stats` stays
+/// `#[derive(Default)]`.
+pub const LAT_BUCKETS: usize = 32;
+
+/// Lock-free latency histogram: fixed log2-µs buckets plus
+/// count/sum/max, all relaxed atomics. Good for concurrent recording
+/// from the event loop and scheduler threads while readers snapshot.
+#[derive(Debug, Default)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; LAT_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHist {
+    /// Bucket index for a latency of `us` microseconds: floor(log2 us),
+    /// clamped to the last bucket (0 lands in bucket 0).
+    pub fn bucket(us: u64) -> usize {
+        let us = us.max(1);
+        ((63 - us.leading_zeros()) as usize).min(LAT_BUCKETS - 1)
+    }
+
+    /// Record one observation. Wait-free; safe from any thread.
+    pub fn observe(&self, us: u64) {
+        self.buckets[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation, or 0 when empty.
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count.load(Ordering::Relaxed);
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Point-in-time copy of the bucket counts (for delta-based
+    /// interval quantiles — the SLO adapter diffs two of these).
+    pub fn counts(&self) -> [u64; LAT_BUCKETS] {
+        let mut out = [0u64; LAT_BUCKETS];
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Estimated `q`-quantile in µs (`None` when no observations).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        bucket_quantile(&self.counts(), q)
+    }
+
+    /// Freeze count/mean/max + p50/p90/p99 for a snapshot.
+    pub fn summary(&self) -> HistSummary {
+        let counts = self.counts();
+        HistSummary {
+            count: counts.iter().sum(),
+            mean_us: self.mean_us(),
+            max_us: self.max_us(),
+            p50_us: bucket_quantile(&counts, 0.50),
+            p90_us: bucket_quantile(&counts, 0.90),
+            p99_us: bucket_quantile(&counts, 0.99),
+        }
+    }
+}
+
+/// Frozen summary of one [`LatencyHist`]. Quantiles are `None` (JSON
+/// `null`, text "-") when nothing was observed — never a fake 0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+    pub p50_us: Option<f64>,
+    pub p90_us: Option<f64>,
+    pub p99_us: Option<f64>,
+}
+
+impl HistSummary {
+    fn to_json(&self) -> Json {
+        let q = |v: Option<f64>| v.map(json::num).unwrap_or(Json::Null);
+        json::obj(vec![
+            ("count", json::num(self.count as f64)),
+            ("mean_us", json::num(self.mean_us)),
+            ("max_us", json::num(self.max_us as f64)),
+            ("p50_us", q(self.p50_us)),
+            ("p90_us", q(self.p90_us)),
+            ("p99_us", q(self.p99_us)),
+        ])
+    }
+
+    /// "p50/p90/p99 120/450/900us" (or "-" for empty histograms).
+    fn quantile_line(&self) -> String {
+        let f = |v: Option<f64>| match v {
+            Some(v) => format!("{v:.0}"),
+            None => "-".into(),
+        };
+        format!(
+            "p50/p90/p99 {}/{}/{}us",
+            f(self.p50_us),
+            f(self.p90_us),
+            f(self.p99_us)
+        )
+    }
+}
+
+/// One model's slice of a [`Snapshot`].
+#[derive(Debug, Clone)]
+pub struct ModelSnapshot {
+    pub id: usize,
+    pub name: String,
+    pub requests: u64,
+    pub images: u64,
+    pub batches: u64,
+    pub failed_batches: u64,
+    pub rejected: u64,
+    pub queue_depth: u64,
+    pub queue_peak: u64,
+    pub admitted: u64,
+    pub deferred: u64,
+    pub deficit: i64,
+    pub mean_batch: f64,
+    /// Static configured fair-share weight.
+    pub weight: u64,
+    /// Configured p99 e2e SLO in µs (0 = no SLO on this model).
+    pub slo_us: u64,
+    /// Current adaptive weight ×1000 (== weight×1000 when no SLO or no
+    /// pressure; boosted while the SLO is being missed).
+    pub effective_weight_milli: u64,
+    pub e2e: HistSummary,
+    pub queue_wait: HistSummary,
+    pub service: HistSummary,
+}
+
+impl ModelSnapshot {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("id", json::num(self.id as f64)),
+            ("name", json::s(&self.name)),
+            ("requests", json::num(self.requests as f64)),
+            ("images", json::num(self.images as f64)),
+            ("batches", json::num(self.batches as f64)),
+            ("failed_batches", json::num(self.failed_batches as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("queue_depth", json::num(self.queue_depth as f64)),
+            ("queue_peak", json::num(self.queue_peak as f64)),
+            ("admitted", json::num(self.admitted as f64)),
+            ("deferred", json::num(self.deferred as f64)),
+            ("deficit", json::num(self.deficit as f64)),
+            ("mean_batch", json::num(self.mean_batch)),
+            ("weight", json::num(self.weight as f64)),
+            ("slo_us", json::num(self.slo_us as f64)),
+            (
+                "effective_weight_milli",
+                json::num(self.effective_weight_milli as f64),
+            ),
+            ("e2e", self.e2e.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("service", self.service.to_json()),
+        ])
+    }
+}
+
+/// Point-in-time view of a whole [`ServerStats`]: what `GET /stats`
+/// serves and what each history line persists. Collected with relaxed
+/// loads while the server runs, so counters may be mutually a few
+/// events apart — each value is individually exact.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub uptime_s: f64,
+    pub models: Vec<ModelSnapshot>,
+    pub unknown_model: u64,
+    pub bad_version: u64,
+    pub rounds: u64,
+    pub conns_open: u64,
+    pub conns_accepted: u64,
+    pub conns_rejected: u64,
+    pub conns_timed_out: u64,
+}
+
+impl Snapshot {
+    /// Freeze the current counters. Read-only: safe to call from any
+    /// thread, any number of times, while serving continues.
+    pub fn collect(stats: &ServerStats) -> Snapshot {
+        let models = stats
+            .names
+            .iter()
+            .zip(&stats.models)
+            .enumerate()
+            .map(|(id, (name, s))| ModelSnapshot {
+                id,
+                name: name.clone(),
+                requests: s.requests.load(Ordering::Relaxed),
+                images: s.images.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                failed_batches: s.failed_batches.load(Ordering::Relaxed),
+                rejected: s.rejected.load(Ordering::Relaxed),
+                queue_depth: s.queue_depth.load(Ordering::Relaxed),
+                queue_peak: s.queue_peak.load(Ordering::Relaxed),
+                admitted: s.admitted.load(Ordering::Relaxed),
+                deferred: s.deferred.load(Ordering::Relaxed),
+                deficit: s.deficit.load(Ordering::Relaxed),
+                mean_batch: s.mean_batch(),
+                weight: s.weight.load(Ordering::Relaxed),
+                slo_us: s.slo_us.load(Ordering::Relaxed),
+                effective_weight_milli: s.effective_weight_milli.load(Ordering::Relaxed),
+                e2e: s.e2e_hist.summary(),
+                queue_wait: s.queue_wait_hist.summary(),
+                service: s.service_hist.summary(),
+            })
+            .collect();
+        Snapshot {
+            uptime_s: stats.uptime().as_secs_f64(),
+            models,
+            unknown_model: stats.unknown_model.load(Ordering::Relaxed),
+            bad_version: stats.bad_version.load(Ordering::Relaxed),
+            rounds: stats.rounds.load(Ordering::Relaxed),
+            conns_open: stats.conns_open.load(Ordering::Relaxed),
+            conns_accepted: stats.conns_accepted.load(Ordering::Relaxed),
+            conns_rejected: stats.conns_rejected.load(Ordering::Relaxed),
+            conns_timed_out: stats.conns_timed_out.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The JSON document `GET /stats` returns (field glossary in
+    /// README "Observability").
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("uptime_s", json::num(self.uptime_s)),
+            (
+                "models",
+                json::arr(self.models.iter().map(|m| m.to_json())),
+            ),
+            (
+                "server",
+                json::obj(vec![
+                    ("unknown_model", json::num(self.unknown_model as f64)),
+                    ("bad_version", json::num(self.bad_version as f64)),
+                    ("rounds", json::num(self.rounds as f64)),
+                    ("conns_open", json::num(self.conns_open as f64)),
+                    ("conns_accepted", json::num(self.conns_accepted as f64)),
+                    ("conns_rejected", json::num(self.conns_rejected as f64)),
+                    ("conns_timed_out", json::num(self.conns_timed_out as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The plaintext rendering `GET /stats?fmt=text` returns: one line
+    /// per model plus a server line, grep-friendly.
+    pub fn to_text(&self) -> String {
+        let mut out = format!(
+            "aquant stats: uptime {:.1}s, {} model(s)\n",
+            self.uptime_s,
+            self.models.len()
+        );
+        for m in &self.models {
+            out.push_str(&format!(
+                "model {} {}: requests {}  images {}  batches {} (mean {:.1} img/batch)  \
+                 queue depth {} (peak {})  admitted {}  deferred {}  deficit {}  \
+                 e2e {}  queue-wait {}  service {}  weight {}{}  eff-weight {:.3}x\n",
+                m.id,
+                m.name,
+                m.requests,
+                m.images,
+                m.batches,
+                m.mean_batch,
+                m.queue_depth,
+                m.queue_peak,
+                m.admitted,
+                m.deferred,
+                m.deficit,
+                m.e2e.quantile_line(),
+                m.queue_wait.quantile_line(),
+                m.service.quantile_line(),
+                m.weight,
+                if m.slo_us > 0 {
+                    format!(" (slo p99 {}us)", m.slo_us)
+                } else {
+                    String::new()
+                },
+                m.effective_weight_milli as f64 / 1000.0,
+            ));
+        }
+        out.push_str(&format!(
+            "server: unknown-model {}  bad-version {}  sched-rounds {}  \
+             conns open {} / accepted {} / rejected {} / timed-out {}\n",
+            self.unknown_model,
+            self.bad_version,
+            self.rounds,
+            self.conns_open,
+            self.conns_accepted,
+            self.conns_rejected,
+            self.conns_timed_out,
+        ));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Endpoint codec (pure functions; the event loop owns the sockets)
+// ---------------------------------------------------------------------------
+
+/// Cap on a stats request head. A real `GET /stats` head is < 100
+/// bytes; anything still incomplete past this is hostile or lost and
+/// gets rejected without buffering more.
+pub const MAX_STATS_REQUEST: usize = 4096;
+
+/// Response format a parsed stats request asked for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsFormat {
+    Json,
+    Text,
+}
+
+/// Outcome of parsing the bytes read so far from a stats connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsParse {
+    /// Head not terminated yet — keep reading (caller enforces the
+    /// size cap by passing at most [`MAX_STATS_REQUEST`] bytes).
+    Incomplete,
+    /// A well-formed `GET /stats` head: answer in this format.
+    Ok(StatsFormat),
+    /// Reject: respond with this status line + message, then close.
+    Reject(&'static str, &'static str),
+}
+
+/// Parse a stats-endpoint request head. The head ends at the first
+/// blank line (`\r\n\r\n` or `\n\n`); headers are ignored. Oversized
+/// (no terminator within [`MAX_STATS_REQUEST`] bytes) and malformed
+/// heads reject immediately.
+pub fn parse_stats_request(buf: &[u8]) -> StatsParse {
+    let head_end = find_head_end(buf);
+    let head = match head_end {
+        Some(n) => &buf[..n],
+        None if buf.len() >= MAX_STATS_REQUEST => {
+            return StatsParse::Reject(
+                "431 Request Header Fields Too Large",
+                "request head exceeds 4096 bytes\n",
+            )
+        }
+        None => return StatsParse::Incomplete,
+    };
+    let head = match std::str::from_utf8(head) {
+        Ok(h) => h,
+        Err(_) => return StatsParse::Reject("400 Bad Request", "non-UTF8 request\n"),
+    };
+    let line = head.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m, t),
+        _ => return StatsParse::Reject("400 Bad Request", "malformed request line\n"),
+    };
+    if method != "GET" {
+        return StatsParse::Reject("405 Method Not Allowed", "only GET is supported\n");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    if path != "/stats" {
+        return StatsParse::Reject("404 Not Found", "only /stats is served\n");
+    }
+    match query {
+        None | Some("") => StatsParse::Ok(StatsFormat::Json),
+        Some("fmt=json") => StatsParse::Ok(StatsFormat::Json),
+        Some("fmt=text") => StatsParse::Ok(StatsFormat::Text),
+        Some(_) => StatsParse::Reject(
+            "400 Bad Request",
+            "unknown query (supported: fmt=json, fmt=text)\n",
+        ),
+    }
+}
+
+/// First index *past* the head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|i| i + 4)
+        .or_else(|| buf.windows(2).position(|w| w == b"\n\n").map(|i| i + 2))
+}
+
+/// Build a complete one-shot HTTP response (the endpoint always
+/// closes after answering, so HTTP/1.0 + Connection: close).
+pub fn http_response(status: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Render the response for a successfully parsed stats request.
+pub fn stats_response(snapshot: &Snapshot, fmt: StatsFormat) -> Vec<u8> {
+    match fmt {
+        StatsFormat::Json => http_response(
+            "200 OK",
+            "application/json",
+            &snapshot.to_json().dump(),
+        ),
+        StatsFormat::Text => {
+            http_response("200 OK", "text/plain; charset=utf-8", &snapshot.to_text())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent history (JSON-lines appender)
+// ---------------------------------------------------------------------------
+
+/// Background snapshot persister: appends one JSON line (a
+/// [`Snapshot::to_json`] object plus a `"t"` unix-seconds stamp) to a
+/// history file every `every`, plus a final line at [`stop`] so even
+/// the shortest bounded run leaves its terminal counters on disk.
+/// Write failures are reported once on stderr and then ignored — the
+/// history file must never take the server down.
+///
+/// [`stop`]: HistoryWriter::stop
+pub struct HistoryWriter {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HistoryWriter {
+    pub fn spawn(path: String, every: Duration, stats: Arc<ServerStats>) -> HistoryWriter {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("aquant-stats-history".into())
+            .spawn(move || {
+                let mut warned = false;
+                loop {
+                    append_snapshot(&path, &stats, &mut warned);
+                    let (lock, cvar) = &*flag;
+                    let mut stopped = lock.lock().unwrap();
+                    while !*stopped {
+                        let (g, timeout) = cvar.wait_timeout(stopped, every).unwrap();
+                        stopped = g;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    if *stopped {
+                        drop(stopped);
+                        // final flush: persist the terminal counters
+                        append_snapshot(&path, &stats, &mut warned);
+                        return;
+                    }
+                }
+            })
+            .expect("spawning the stats-history thread");
+        HistoryWriter {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Signal the writer, wait for its final flush.
+    pub fn stop(mut self) {
+        let (lock, cvar) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn append_snapshot(path: &str, stats: &ServerStats, warned: &mut bool) {
+    let mut j = Snapshot::collect(stats).to_json();
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    if let Json::Obj(m) = &mut j {
+        m.insert("t".into(), json::num(t));
+    }
+    let line = j.dump();
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = res {
+        if !*warned {
+            eprintln!("aquant-serve: stats history write to {path:?} failed: {e} (suppressing further warnings)");
+            *warned = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::registry::ModelRegistry;
+    use crate::nn::synth;
+    use crate::util::rng::Rng;
+
+    fn test_stats() -> ServerStats {
+        let mut rng = Rng::new(5);
+        let (topo, weights) = synth::tiny_model(&mut rng);
+        let eng = Arc::new(synth::engine_with_random_borders(
+            &topo, &weights, &mut rng, true, true,
+        ));
+        let reg = ModelRegistry::new(vec![("a".into(), eng.clone()), ("b".into(), eng)])
+            .unwrap();
+        ServerStats::new(&reg)
+    }
+
+    #[test]
+    fn hist_buckets_and_quantiles() {
+        let h = LatencyHist::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), None);
+        for us in [0, 1, 3, 100, 1000, 1_000_000, u64::MAX] {
+            h.observe(us);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.max_us(), u64::MAX);
+        let s = h.summary();
+        let (p50, p90, p99) = (
+            s.p50_us.unwrap(),
+            s.p90_us.unwrap(),
+            s.p99_us.unwrap(),
+        );
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert_eq!(LatencyHist::bucket(0), 0);
+        assert_eq!(LatencyHist::bucket(1), 0);
+        assert_eq!(LatencyHist::bucket(2), 1);
+        assert_eq!(LatencyHist::bucket(1023), 9);
+        assert_eq!(LatencyHist::bucket(1024), 10);
+        assert_eq!(LatencyHist::bucket(u64::MAX), LAT_BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let stats = test_stats();
+        let m0 = stats.model(0).unwrap();
+        m0.observe_batch(8, 500);
+        m0.requests.fetch_add(3, Ordering::Relaxed);
+        m0.e2e_hist.observe(700);
+        m0.e2e_hist.observe(1500);
+        m0.queue_wait_hist.observe(90);
+        let snap = Snapshot::collect(&stats);
+        assert_eq!(snap.models.len(), 2);
+        assert_eq!(snap.models[0].requests, 3);
+        assert_eq!(snap.models[0].images, 8);
+        assert_eq!(snap.models[0].e2e.count, 2);
+        assert_eq!(snap.models[1].requests, 0);
+        // serialized form parses back and carries the same numbers
+        let j = Json::parse(&snap.to_json().dump()).unwrap();
+        let models = j.req("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].req("requests").unwrap().as_i64(), Some(3));
+        assert_eq!(models[0].req("name").unwrap().as_str(), Some("a"));
+        // empty histogram quantiles serialize as null, not 0
+        assert_eq!(
+            models[1].req("e2e").unwrap().req("p99_us").unwrap(),
+            &Json::Null
+        );
+        assert!(j.req("server").unwrap().get("rounds").is_some());
+        // the text rendering mentions every model
+        let text = snap.to_text();
+        assert!(text.contains("model 0 a:"), "{text}");
+        assert!(text.contains("model 1 b:"), "{text}");
+    }
+
+    #[test]
+    fn parse_accepts_stats_gets() {
+        for (req, fmt) in [
+            ("GET /stats HTTP/1.1\r\nHost: x\r\n\r\n", StatsFormat::Json),
+            ("GET /stats HTTP/1.0\r\n\r\n", StatsFormat::Json),
+            ("GET /stats?fmt=json HTTP/1.1\r\n\r\n", StatsFormat::Json),
+            ("GET /stats?fmt=text HTTP/1.1\r\n\r\n", StatsFormat::Text),
+            ("GET /stats HTTP/1.1\n\n", StatsFormat::Json),
+        ] {
+            assert_eq!(
+                parse_stats_request(req.as_bytes()),
+                StatsParse::Ok(fmt),
+                "{req:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_rejects_everything_else() {
+        // incomplete: no verdict yet
+        assert_eq!(
+            parse_stats_request(b"GET /stats HTTP/1.1\r\n"),
+            StatsParse::Incomplete
+        );
+        let reject = |req: &str| match parse_stats_request(req.as_bytes()) {
+            StatsParse::Reject(status, _) => status.to_string(),
+            other => panic!("{req:?} -> {other:?}"),
+        };
+        assert!(reject("POST /stats HTTP/1.1\r\n\r\n").starts_with("405"));
+        assert!(reject("GET /other HTTP/1.1\r\n\r\n").starts_with("404"));
+        assert!(reject("GET /stats?fmt=xml HTTP/1.1\r\n\r\n").starts_with("400"));
+        assert!(reject("garbage\r\n\r\n").starts_with("400"));
+        assert!(reject("\r\n\r\n").starts_with("400"));
+        // oversized head without a terminator
+        let big = vec![b'A'; MAX_STATS_REQUEST];
+        assert!(matches!(
+            parse_stats_request(&big),
+            StatsParse::Reject(s, _) if s.starts_with("431")
+        ));
+    }
+
+    #[test]
+    fn http_responses_are_framed() {
+        let r = http_response("200 OK", "application/json", "{}");
+        let text = String::from_utf8(r).unwrap();
+        assert!(text.starts_with("HTTP/1.0 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+    }
+
+    #[test]
+    fn history_writer_appends_and_final_flushes() {
+        let stats = Arc::new(test_stats());
+        stats
+            .model(0)
+            .unwrap()
+            .requests
+            .fetch_add(7, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "aquant_hist_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path_s = path.to_string_lossy().to_string();
+        let _ = std::fs::remove_file(&path);
+        // long interval: the lines present must be the startup write +
+        // the final stop() flush, not timer ticks
+        let w = HistoryWriter::spawn(path_s.clone(), Duration::from_secs(3600), stats);
+        w.stop();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2, "{body}");
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("t").is_some());
+            let models = j.req("models").unwrap().as_arr().unwrap();
+            assert_eq!(models[0].req("requests").unwrap().as_i64(), Some(7));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

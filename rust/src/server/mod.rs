@@ -100,19 +100,32 @@
 //!   *clients* die and slow *batches* don't kill their clients
 //! * `max_accepts` — bounded runs (tests/examples): stop accepting
 //!   after N connections and return once they finish
+//! * `stats_addr` (`--stats-addr`) — optional second listener on the
+//!   SAME event loop serving `GET /stats` (JSON snapshot) and
+//!   `GET /stats?fmt=text`; read-only, own token space and slab, never
+//!   counts against `max_conns`/`max_accepts` (see [`metrics`])
+//! * `stats_history` (`--stats-history PATH`) — append a JSON-line
+//!   snapshot every `stats_history_every_s` seconds (default 5) plus a
+//!   final one at shutdown
+//! * `slo_us` (per model only, `--model ...;slo_us=N`) — p99
+//!   end-to-end latency target in µs; a slow EWMA of observed p99
+//!   boosts the model's fair-share weight (bounded, up to
+//!   [`sched::SLO_FACTOR_MAX`]×) while the target is missed and decays
+//!   back once met — scheduling order only, predictions bit-identical
 //!
 //! Every knob except `workers` can be overridden per model through the
 //! `--model NAME=SPEC;key=value...` grammar; the flags above set the
 //! server-level defaults.
 
 pub mod conn;
+pub mod metrics;
 pub mod sched;
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -121,7 +134,8 @@ use crate::nn::engine::Engine;
 use crate::nn::pool::InferencePool;
 use crate::nn::registry::ModelRegistry;
 
-pub use sched::{FairScheduler, Grant, Policy, MAX_WEIGHT};
+pub use metrics::{HistSummary, LatencyHist, Snapshot};
+pub use sched::{FairScheduler, Grant, Policy, SloAdapter, MAX_WEIGHT, SLO_FACTOR_MAX};
 
 use sched::{BatchQueue, Doorbell, SchedCtx};
 
@@ -263,6 +277,22 @@ pub struct Stats {
     pub deficit: AtomicI64,
     /// Histogram of executed batch sizes (log2 buckets).
     pub batch_hist: [AtomicU64; BATCH_BUCKETS],
+    /// Per-request end-to-end latency (payload decoded → reply staged
+    /// into the connection's write buffer), µs. What `slo_us=` targets.
+    pub e2e_hist: LatencyHist,
+    /// Per-request queue wait (enqueue → scheduler pop), µs. High here
+    /// with a low service time means weight-starved, not slow.
+    pub queue_wait_hist: LatencyHist,
+    /// Per-batch service time (admission → pool completion), µs — the
+    /// distribution behind `total_us`.
+    pub service_hist: LatencyHist,
+    /// Static configured fair-share weight (gauge, set at bind).
+    pub weight: AtomicU64,
+    /// Configured p99 end-to-end SLO in µs (gauge; 0 = no SLO).
+    pub slo_us: AtomicU64,
+    /// Adaptive effective weight ×1000 (gauge, written by the
+    /// scheduler's SLO adapter; == weight×1000 without SLO pressure).
+    pub effective_weight_milli: AtomicU64,
 }
 
 impl Stats {
@@ -279,6 +309,16 @@ impl Stats {
         self.images.fetch_add(n as u64, Ordering::Relaxed);
         self.total_us.fetch_add(us, Ordering::Relaxed);
         self.batch_hist[Self::batch_bucket(n)].fetch_add(1, Ordering::Relaxed);
+        self.service_hist.observe(us);
+    }
+
+    /// Mean batch service time in µs (0 when nothing ran yet).
+    pub fn mean_service_us(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.total_us.load(Ordering::Relaxed) as f64 / b as f64
     }
 
     /// Mean images per executed batch (coalescing effectiveness).
@@ -301,15 +341,26 @@ impl Stats {
                 (c > 0).then(|| format!("{}:{c}", 1usize << i))
             })
             .collect();
+        // quantile rendering: "-" while a histogram is empty, never a
+        // fake 0 (a raw summed service total was unreadable at a glance)
+        let q = |h: &LatencyHist, q: f64| match h.quantile(q) {
+            Some(v) => format!("{v:.0}"),
+            None => "-".into(),
+        };
         format!(
-            "requests {}  images {}  batches {} (mean {:.1} img/batch)  service {}us  \
+            "requests {}  images {}  batches {} (mean {:.1} img/batch)  \
+             service mean {:.0}us p50/p99 {}/{}us  e2e p50/p99 {}/{}us  \
              failed {}  rejected {}  queue peak {}  admitted {}  deferred {}  \
              deficit {}  batch-size hist [{}]",
             self.requests.load(Ordering::Relaxed),
             self.images.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch(),
-            self.total_us.load(Ordering::Relaxed),
+            self.mean_service_us(),
+            q(&self.service_hist, 0.50),
+            q(&self.service_hist, 0.99),
+            q(&self.e2e_hist, 0.50),
+            q(&self.e2e_hist, 0.99),
             self.failed_batches.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.queue_peak.load(Ordering::Relaxed),
@@ -347,6 +398,8 @@ pub struct ServerStats {
     /// Connections closed by the idle/read timeout
     /// (`--conn-timeout-ms`); slow-loris and dead peers land here.
     pub conns_timed_out: AtomicU64,
+    /// When these stats were created (≈ bind time), for uptime.
+    started: Instant,
 }
 
 impl ServerStats {
@@ -354,6 +407,7 @@ impl ServerStats {
         ServerStats {
             names: registry.iter().map(|(_, e)| e.name.clone()).collect(),
             models: registry.iter().map(|_| Arc::new(Stats::default())).collect(),
+            started: Instant::now(),
             unknown_model: AtomicU64::new(0),
             bad_version: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
@@ -377,6 +431,22 @@ impl ServerStats {
     /// Hosted model count.
     pub fn n_models(&self) -> usize {
         self.models.len()
+    }
+
+    /// Model name for a wire id (snapshots and reports use it).
+    pub fn model_name(&self, id: u16) -> Option<&str> {
+        self.names.get(id as usize).map(String::as_str)
+    }
+
+    /// Time since these stats were created (≈ process serving uptime).
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Freeze every counter/histogram into a point-in-time
+    /// [`Snapshot`] (what `GET /stats` and the history file serve).
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot::collect(self)
     }
 
     /// Sum of answered requests across models.
@@ -414,7 +484,7 @@ impl ServerStats {
         }
         out.push_str(&format!(
             "server: unknown-model {}  bad-version {}  sched-rounds {}  \
-             conns open {} / accepted {} / rejected {} / timed-out {}",
+             conns open {} / accepted {} / rejected {} / timed-out {}  uptime {:.1}s",
             self.unknown_model.load(Ordering::Relaxed),
             self.bad_version.load(Ordering::Relaxed),
             self.rounds.load(Ordering::Relaxed),
@@ -422,6 +492,7 @@ impl ServerStats {
             self.conns_accepted.load(Ordering::Relaxed),
             self.conns_rejected.load(Ordering::Relaxed),
             self.conns_timed_out.load(Ordering::Relaxed),
+            self.uptime().as_secs_f64(),
         ));
         out
     }
@@ -433,6 +504,10 @@ impl ServerStats {
 /// accept loop starts.
 pub struct Server {
     listener: TcpListener,
+    /// Optional `--stats-addr` listener, bound up front so callers can
+    /// learn its ephemeral port before `run` (mirrors `local_addr`).
+    /// Served by the same event loop as client traffic.
+    stats_listener: Option<TcpListener>,
     registry: Arc<ModelRegistry>,
     cfg: ServeConfig,
     stats: Arc<ServerStats>,
@@ -460,9 +535,27 @@ impl Server {
         // an empty registry — already impossible, but cheap to pin).
         FairScheduler::new(&policies)?;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let stats_listener = match cfg.stats_addr.as_deref() {
+            Some(a) => Some(
+                TcpListener::bind(a).with_context(|| format!("binding stats endpoint {a}"))?,
+            ),
+            None => None,
+        };
         let stats = Arc::new(ServerStats::new(&registry));
+        // Policy gauges: static weight / SLO are fixed from here on;
+        // the effective weight starts at the static value and is only
+        // rewritten by the scheduler's SLO adapter.
+        for (id, _) in registry.iter() {
+            let p = &policies[id as usize];
+            let s = stats.model(id).expect("stats per model");
+            s.weight.store(p.weight as u64, Ordering::Relaxed);
+            s.slo_us.store(p.slo_us.unwrap_or(0), Ordering::Relaxed);
+            s.effective_weight_milli
+                .store(p.weight as u64 * 1000, Ordering::Relaxed);
+        }
         Ok(Server {
             listener,
+            stats_listener,
             registry,
             cfg,
             stats,
@@ -479,6 +572,12 @@ impl Server {
     /// Actual bound address (use after binding port 0).
     pub fn local_addr(&self) -> Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
+    }
+
+    /// Bound stats-endpoint address when `--stats-addr` is configured
+    /// (use after binding port 0).
+    pub fn stats_local_addr(&self) -> Option<SocketAddr> {
+        self.stats_listener.as_ref().and_then(|l| l.local_addr().ok())
     }
 
     /// Live statistics handle, valid before/during/after `run`.
@@ -517,6 +616,22 @@ impl Server {
             self.cfg.batch_wait_us,
             self.cfg.queue_images,
         );
+        if let Some(a) = self.stats_local_addr() {
+            println!(
+                "aquant-serve: stats endpoint on http://{a}/stats (?fmt=text for plaintext)"
+            );
+        }
+        let history = self.cfg.stats_history.clone().map(|path| {
+            println!(
+                "aquant-serve: appending stats history to {path} every {}s",
+                self.cfg.stats_history_every_s
+            );
+            metrics::HistoryWriter::spawn(
+                path,
+                Duration::from_secs(self.cfg.stats_history_every_s.max(1)),
+                self.stats.clone(),
+            )
+        });
         // Per-model bounded queue; ONE scheduler thread next to ONE
         // event-loop thread (this one). The scheduler is a plain
         // (non-scoped) thread over Arc'd state: it must outlive the
@@ -560,6 +675,7 @@ impl Server {
             conn_timeout: (self.cfg.conn_timeout_ms > 0)
                 .then(|| Duration::from_millis(self.cfg.conn_timeout_ms)),
             poll_fallback: self.cfg.poll_fallback,
+            stats_listener: self.stats_listener,
         };
         let served = conn::run_event_loop(self.listener, loop_ctx);
         // Every connection is drained (each reply already staged and
@@ -574,6 +690,11 @@ impl Server {
         scheduler
             .join()
             .map_err(|_| anyhow!("scheduler thread panicked"))?;
+        // Final history flush after the scheduler drained: the last
+        // line on disk carries the run's terminal counters.
+        if let Some(w) = history {
+            w.stop();
+        }
         served
     }
 }
@@ -686,10 +807,16 @@ mod tests {
         assert_eq!(s.batch_hist[3].load(Ordering::Relaxed), 1);
         assert_eq!(s.batch_hist[4].load(Ordering::Relaxed), 1);
         assert_eq!(s.mean_batch(), 12.0);
+        assert_eq!(s.mean_service_us(), 200.0);
+        assert_eq!(s.service_hist.count(), 2);
         let r = s.report();
         assert!(r.contains("batches 2"), "{r}");
         assert!(r.contains("8:1"), "{r}");
         assert!(r.contains("16:1"), "{r}");
+        // the satellite fix: mean service time, not a raw sum
+        assert!(r.contains("service mean 200us"), "{r}");
+        // e2e histogram is untouched here -> quantiles render as "-"
+        assert!(r.contains("e2e p50/p99 -/-us"), "{r}");
     }
 
     #[test]

@@ -113,6 +113,13 @@ pub struct Policy {
     /// model is admitted three images for every one of a weight-1 model
     /// when both are backlogged.
     pub weight: u32,
+    /// Optional p99 end-to-end latency target (µs). When set, the
+    /// scheduler's [`SloAdapter`] boosts this model's effective weight
+    /// (up to [`SLO_FACTOR_MAX`]× the static value, never above
+    /// [`MAX_WEIGHT`]) while the observed p99 misses the target, and
+    /// decays it back once met. Scheduling order only — predictions
+    /// stay bit-identical.
+    pub slo_us: Option<u64>,
 }
 
 impl Policy {
@@ -125,6 +132,7 @@ impl Policy {
             batch_wait_us: cfg.batch_wait_us,
             queue_images: cfg.queue_images,
             weight: 1,
+            slo_us: None,
         }
     }
 
@@ -135,6 +143,7 @@ impl Policy {
             batch_wait_us: over.batch_wait_us.unwrap_or(defaults.batch_wait_us),
             queue_images: over.queue_images.unwrap_or(defaults.queue_images),
             weight: over.weight.unwrap_or(defaults.weight),
+            slo_us: over.slo_us.or(defaults.slo_us),
         };
         p.validate()?;
         Ok(p)
@@ -171,6 +180,17 @@ impl Policy {
         if self.weight == 0 || self.weight > MAX_WEIGHT {
             bail!("policy weight ({}) must be in 1..={MAX_WEIGHT}", self.weight);
         }
+        if let Some(slo) = self.slo_us {
+            if slo == 0 {
+                bail!("policy slo_us must be >= 1 (omit the key for no SLO)");
+            }
+            if slo > ServeConfig::MAX_BATCH_WAIT_US {
+                bail!(
+                    "policy slo_us ({slo}) must be <= {} (60s)",
+                    ServeConfig::MAX_BATCH_WAIT_US
+                );
+            }
+        }
         Ok(())
     }
 
@@ -181,8 +201,12 @@ impl Policy {
 
     /// Human one-liner for startup logging.
     pub fn describe(&self) -> String {
+        let slo = match self.slo_us {
+            Some(us) => format!(", slo p99 {us}us"),
+            None => String::new(),
+        };
         format!(
-            "max-batch {}, wait {}us, queue {}, weight {}",
+            "max-batch {}, wait {}us, queue {}, weight {}{slo}",
             self.max_batch, self.batch_wait_us, self.queue_images, self.weight
         )
     }
@@ -273,6 +297,21 @@ impl FairScheduler {
         self.deficits[id] = (self.deficits[id] - images as i64).max(DEBT_FLOOR);
     }
 
+    /// Replace one model's weight mid-run — the [`SloAdapter`]'s lever.
+    /// Clamped to 1..=[`MAX_WEIGHT`] (never 0: starvation freedom is a
+    /// structural invariant, not a policy choice). Deficits are left
+    /// untouched, so the new weight simply applies from the model's
+    /// next credit onward.
+    pub fn set_weight(&mut self, id: usize, weight: u32) {
+        self.weights[id] = weight.clamp(1, MAX_WEIGHT) as u64;
+    }
+
+    /// Current weight for a model (the static policy weight until
+    /// [`FairScheduler::set_weight`] changes it).
+    pub fn weight(&self, id: usize) -> u32 {
+        self.weights[id] as u32
+    }
+
     fn advance(&mut self) {
         self.cursor = (self.cursor + 1) % self.weights.len();
         self.credited = false;
@@ -333,6 +372,127 @@ impl FairScheduler {
             self.advance();
         }
         total
+    }
+}
+
+/// Hard cap on the SLO weight boost: an adaptive weight never exceeds
+/// `SLO_FACTOR_MAX ×` the static policy weight (and never [`MAX_WEIGHT`]).
+/// Bounded by design so one missed SLO cannot monopolize the pool.
+pub const SLO_FACTOR_MAX: f64 = 8.0;
+
+/// Multiplicative boost per adaptation tick while the SLO is missed
+/// (scaled by how far past the target the EWMA sits, capped at 2x the
+/// overshoot). Small on purpose: ~7 ticks (≈2s) to double a weight.
+const SLO_STEP: f64 = 0.1;
+
+/// Fraction of the remaining distance back to the static weight
+/// recovered per tick once the SLO is met (or no signal arrives).
+const SLO_RETURN_RATE: f64 = 0.1;
+
+/// Relative deadband around the SLO: within ±5% the factor only
+/// decays, so p99 ≈ SLO converges to the static weight instead of
+/// oscillating around it.
+const SLO_DEADBAND: f64 = 0.05;
+
+/// EWMA smoothing applied to per-interval observed p99s.
+const SLO_EWMA_ALPHA: f64 = 0.2;
+
+/// Minimum requests completed in an adaptation interval for its p99 to
+/// update the EWMA — a 3-request interval's "p99" is noise.
+pub const SLO_MIN_SAMPLES: u64 = 16;
+
+/// How often the scheduler loop runs an adaptation tick (only when at
+/// least one model sets `slo_us`; otherwise the loop never wakes for it).
+pub(crate) const SLO_ADAPT_INTERVAL: Duration = Duration::from_millis(250);
+
+/// SLO-driven weight adaptation: turns PR 4's static fair-share
+/// weights adaptive, bounded, and self-reverting. Pure state machine —
+/// observed p99s come in through [`SloAdapter::tick`], effective
+/// weights come out — so the control law is unit- and property-
+/// testable without threads or clocks (`rust/tests/sched_props.rs`).
+///
+/// Dynamics per tick, per model with an SLO:
+/// 1. A fresh interval p99 (if the interval had ≥ [`SLO_MIN_SAMPLES`]
+///    requests) folds into a slow EWMA.
+/// 2. EWMA above `slo × (1 + deadband)` → multiply the boost factor up
+///    (proportional to the overshoot); otherwise decay it toward 1.
+/// 3. Factor clamps to `[1, SLO_FACTOR_MAX]`; the effective weight is
+///    `round(static × factor)` clamped to `[static, MAX_WEIGHT]`.
+///
+/// Boost-only by construction: weights never drop below the static
+/// policy value, so no model can be *penalized* by another model's SLO
+/// and the PR 4 starvation bound (every ready model served every
+/// round) is preserved verbatim.
+pub struct SloAdapter {
+    static_weights: Vec<u32>,
+    slo_us: Vec<Option<u64>>,
+    ewma_p99_us: Vec<Option<f64>>,
+    factors: Vec<f64>,
+}
+
+impl SloAdapter {
+    pub fn new(policies: &[Policy]) -> SloAdapter {
+        SloAdapter {
+            static_weights: policies.iter().map(|p| p.weight).collect(),
+            slo_us: policies.iter().map(|p| p.slo_us).collect(),
+            ewma_p99_us: vec![None; policies.len()],
+            factors: vec![1.0; policies.len()],
+        }
+    }
+
+    /// Does any model carry an SLO? When false the scheduler skips
+    /// adaptation entirely (no periodic wakeups, no overhead).
+    pub fn enabled(&self) -> bool {
+        self.slo_us.iter().any(|s| s.is_some())
+    }
+
+    /// Current boost factor (1.0 = static weight).
+    pub fn factor(&self, id: usize) -> f64 {
+        self.factors[id]
+    }
+
+    /// Smoothed observed p99, once enough samples arrived.
+    pub fn ewma_p99_us(&self, id: usize) -> Option<f64> {
+        self.ewma_p99_us[id]
+    }
+
+    /// Effective weight for one model under the current factors.
+    pub fn effective_weight(&self, id: usize) -> u32 {
+        let w = (self.static_weights[id] as f64 * self.factors[id]).round() as u32;
+        w.clamp(self.static_weights[id], MAX_WEIGHT)
+    }
+
+    /// One adaptation step: fold this interval's observed p99s
+    /// (`None` = too few samples) into the EWMAs, move the boost
+    /// factors, and return the effective weight per model (models
+    /// without an SLO always return their static weight).
+    pub fn tick(&mut self, interval_p99_us: &[Option<f64>]) -> Vec<u32> {
+        for id in 0..self.factors.len() {
+            let Some(slo) = self.slo_us[id] else { continue };
+            let fresh = interval_p99_us.get(id).copied().flatten();
+            if let Some(p99) = fresh {
+                self.ewma_p99_us[id] = Some(match self.ewma_p99_us[id] {
+                    Some(prev) => prev + SLO_EWMA_ALPHA * (p99 - prev),
+                    None => p99,
+                });
+            }
+            let f = &mut self.factors[id];
+            match (fresh, self.ewma_p99_us[id]) {
+                // boost only on live evidence: a stale miss EWMA with
+                // no fresh samples means the traffic stopped, and an
+                // idle model needs no boost
+                (Some(_), Some(e)) if e > slo as f64 * (1.0 + SLO_DEADBAND) => {
+                    let over = (e / slo as f64 - 1.0).min(1.0);
+                    *f *= 1.0 + SLO_STEP * over;
+                }
+                // met, inside the deadband, or no signal: drift home
+                _ => *f += (1.0 - *f) * SLO_RETURN_RATE,
+            }
+            *f = f.clamp(1.0, SLO_FACTOR_MAX);
+        }
+        (0..self.factors.len())
+            .map(|id| self.effective_weight(id))
+            .collect()
     }
 }
 
@@ -691,9 +851,24 @@ pub(crate) fn run_scheduler(ctx: SchedCtx) {
     let mut fs = FairScheduler::new(&ctx.policies).expect("policies validated at bind");
     let cap = inflight_cap(fs.quantum(), ctx.pool.workers());
     let mut polls = vec![Poll::Empty; n];
+    // SLO adaptation state: e2e-histogram snapshots to diff per
+    // interval. All of it is dead weight (no wakeups, no work) unless
+    // some policy actually sets `slo_us`.
+    let mut slo = SloAdapter::new(&ctx.policies);
+    let slo_on = slo.enabled();
+    let mut last_e2e: Vec<_> = ctx
+        .model_stats
+        .iter()
+        .map(|s| s.e2e_hist.counts())
+        .collect();
+    let mut next_adapt = Instant::now() + SLO_ADAPT_INTERVAL;
     loop {
         let tick = ctx.doorbell.epoch();
         let now = Instant::now();
+        if slo_on && now >= next_adapt {
+            adapt_slo_weights(&ctx, &mut fs, &mut slo, &mut last_e2e);
+            next_adapt = now + SLO_ADAPT_INTERVAL;
+        }
         for id in 0..n {
             polls[id] = ctx.queues[id].poll(ctx.policies[id].max_batch, ctx.policies[id].wait(), now);
         }
@@ -757,7 +932,51 @@ pub(crate) fn run_scheduler(ctx: SchedCtx) {
                 _ => None,
             })
             .min();
+        // With SLO adaptation live, parking also bounds at the next
+        // adaptation tick so a long idle stretch still decays boosts.
+        let deadline = if slo_on {
+            Some(deadline.map_or(next_adapt, |d| d.min(next_adapt)))
+        } else {
+            deadline
+        };
         ctx.doorbell.wait_past(tick, deadline);
+    }
+}
+
+/// One SLO adaptation tick: diff each model's e2e histogram against
+/// the last tick's snapshot, estimate the interval p99 (when the
+/// interval saw ≥ [`SLO_MIN_SAMPLES`] requests), feed the adapter, and
+/// install the resulting weights + gauges. Runs on the scheduler
+/// thread between passes — never on the serving path.
+fn adapt_slo_weights(
+    ctx: &SchedCtx,
+    fs: &mut FairScheduler,
+    slo: &mut SloAdapter,
+    last_e2e: &mut [[u64; super::metrics::LAT_BUCKETS]],
+) {
+    let n = ctx.model_stats.len();
+    let mut p99s = vec![None; n];
+    for id in 0..n {
+        let cur = ctx.model_stats[id].e2e_hist.counts();
+        let mut delta = [0u64; super::metrics::LAT_BUCKETS];
+        let mut total = 0u64;
+        for b in 0..super::metrics::LAT_BUCKETS {
+            // counters are monotone; saturate anyway (relaxed loads)
+            delta[b] = cur[b].saturating_sub(last_e2e[id][b]);
+            total += delta[b];
+        }
+        last_e2e[id] = cur;
+        if total >= SLO_MIN_SAMPLES {
+            p99s[id] = crate::util::quantile::bucket_quantile(&delta, 0.99);
+        }
+    }
+    let weights = slo.tick(&p99s);
+    for id in 0..n {
+        fs.set_weight(id, weights[id]);
+        ctx.model_stats[id].effective_weight_milli.store(
+            (ctx.policies[id].weight as f64 * slo.factor(id) * 1000.0).round() as u64,
+            Ordering::Relaxed,
+        );
     }
 }
 
@@ -779,6 +998,15 @@ fn admit_one(ctx: &SchedCtx, cap: u64, id: usize, max_images: usize) -> Grant {
     ) else {
         return Grant::Skip;
     };
+    // Queue wait per popped request: enqueue (payload decoded) → here.
+    let popped_at = Instant::now();
+    for p in &batch {
+        stats.queue_wait_hist.observe(
+            popped_at
+                .saturating_duration_since(p.enqueued_at)
+                .as_micros() as u64,
+        );
+    }
     let n: usize = batch.iter().map(|p| p.n).sum();
     let flat = if batch.len() == 1 {
         // Common un-coalesced case: the request's buffer is already
@@ -856,6 +1084,7 @@ mod tests {
             batch_wait_us: 0,
             queue_images: 8192,
             weight,
+            slo_us: None,
         }
     }
 
@@ -1415,5 +1644,99 @@ mod tests {
         assert_eq!(inflight_cap(64, 2), 128);
         assert_eq!(inflight_cap(1, 8), 16);
         assert!(inflight_cap(4096, 4) >= 8192);
+    }
+
+    fn slo_policy(weight: u32, slo_us: Option<u64>) -> Policy {
+        Policy {
+            slo_us,
+            ..policy(16, weight)
+        }
+    }
+
+    #[test]
+    fn slo_policy_validation() {
+        assert!(slo_policy(1, Some(0)).validate().is_err());
+        assert!(slo_policy(1, Some(1)).validate().is_ok());
+        assert!(slo_policy(1, Some(ServeConfig::MAX_BATCH_WAIT_US))
+            .validate()
+            .is_ok());
+        assert!(slo_policy(1, Some(ServeConfig::MAX_BATCH_WAIT_US + 1))
+            .validate()
+            .is_err());
+        assert!(slo_policy(1, Some(5000)).describe().contains("slo p99 5000us"));
+        assert!(!slo_policy(1, None).describe().contains("slo"));
+    }
+
+    #[test]
+    fn slo_adapter_boosts_on_miss_and_reverts_on_meet() {
+        // model 0: weight 2 with a 1ms SLO; model 1: no SLO, weight 5
+        let policies = [slo_policy(2, Some(1000)), slo_policy(5, None)];
+        let mut a = SloAdapter::new(&policies);
+        assert!(a.enabled());
+        assert_eq!(a.effective_weight(0), 2);
+        assert_eq!(a.effective_weight(1), 5);
+
+        // sustained 4x miss: the factor must climb well above 1 but
+        // never past SLO_FACTOR_MAX, and the no-SLO model never moves
+        for _ in 0..200 {
+            let w = a.tick(&[Some(4000.0), Some(1_000_000.0)]);
+            assert!(w[0] >= 2 && w[0] <= (2.0 * SLO_FACTOR_MAX) as u32, "{w:?}");
+            assert_eq!(w[1], 5, "no-SLO model must keep its static weight");
+        }
+        assert!(a.factor(0) > 2.0, "sustained miss barely moved: {}", a.factor(0));
+        assert!(a.factor(0) <= SLO_FACTOR_MAX);
+        let boosted = a.effective_weight(0);
+        assert!(boosted > 2, "{boosted}");
+
+        // p99 settling exactly on the SLO (inside the deadband): the
+        // factor decays home and the weight converges to static
+        for _ in 0..400 {
+            a.tick(&[Some(1000.0), None]);
+        }
+        assert!(
+            (a.factor(0) - 1.0).abs() < 0.02,
+            "factor failed to converge: {}",
+            a.factor(0)
+        );
+        assert_eq!(a.effective_weight(0), 2);
+    }
+
+    #[test]
+    fn slo_adapter_silent_intervals_decay_home() {
+        let policies = [slo_policy(1, Some(500))];
+        let mut a = SloAdapter::new(&policies);
+        for _ in 0..50 {
+            a.tick(&[Some(50_000.0)]); // hard miss
+        }
+        let peak = a.factor(0);
+        assert!(peak > 1.5, "{peak}");
+        // traffic stops: no intervals reach SLO_MIN_SAMPLES -> None.
+        // An idle model needs no boost, so the factor must drain.
+        for _ in 0..400 {
+            a.tick(&[None]);
+        }
+        assert!(a.factor(0) < 1.05, "idle decay failed: {}", a.factor(0));
+    }
+
+    #[test]
+    fn slo_effective_weight_clamps_at_max_weight() {
+        let policies = [slo_policy(MAX_WEIGHT, Some(1))];
+        let mut a = SloAdapter::new(&policies);
+        for _ in 0..500 {
+            let w = a.tick(&[Some(1e9)]);
+            assert_eq!(w[0], MAX_WEIGHT, "boost may never exceed MAX_WEIGHT");
+        }
+    }
+
+    #[test]
+    fn set_weight_is_clamped_and_visible() {
+        let mut fs = FairScheduler::new(&[policy(8, 1), policy(8, 3)]).unwrap();
+        assert_eq!(fs.weight(0), 1);
+        fs.set_weight(0, 7);
+        assert_eq!(fs.weight(0), 7);
+        fs.set_weight(0, 0); // clamped up: starvation freedom is structural
+        assert_eq!(fs.weight(0), 1);
+        fs.set_weight(1, MAX_WEIGHT + 100);
+        assert_eq!(fs.weight(1), MAX_WEIGHT);
     }
 }

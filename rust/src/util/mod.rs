@@ -10,6 +10,7 @@ pub mod cli;
 pub mod json;
 pub mod poll;
 pub mod prop;
+pub mod quantile;
 pub mod rng;
 pub mod tensor_io;
 pub mod threadpool;

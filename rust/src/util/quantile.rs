@@ -1,0 +1,145 @@
+//! Quantile estimation helpers for the serving-metrics tier.
+//!
+//! Two estimators live here, both dependency-free:
+//!
+//! - [`bucket_quantile`] reads the log2-bucketed histograms the server
+//!   records per model (`server::metrics::LatencyHist`): bucket `i`
+//!   counts observations in `[2^i, 2^(i+1))` microseconds (bucket 0
+//!   additionally absorbs 0), and the estimator interpolates linearly
+//!   *within* the winning bucket. Relative error is therefore bounded
+//!   by the bucket width (< 2x, typically much tighter after
+//!   interpolation) — the right trade for lock-free atomic recording
+//!   on the serving path.
+//! - [`quantile_sorted`] is the exact linear-interpolation quantile
+//!   over an already-sorted sample slice, for offline tooling and for
+//!   cross-checking the bucket estimator in tests.
+//!
+//! Both return `None` on empty input rather than inventing a number;
+//! callers render that as an explicit gap ("-") instead of a fake 0.
+
+/// Estimate the `q`-quantile (0.0..=1.0) from log2 bucket counts:
+/// `counts[i]` is the number of observations in `[2^i, 2^(i+1))`
+/// (with bucket 0 covering `[0, 2)`). Linear interpolation inside the
+/// winning bucket; the result is monotone non-decreasing in `q`, so
+/// p50 <= p90 <= p99 holds by construction.
+pub fn bucket_quantile(counts: &[u64], q: f64) -> Option<f64> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let q = q.clamp(0.0, 1.0);
+    // rank in 1..=total: the observation index the quantile names
+    let rank = (q * total as f64).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if cum + c >= rank {
+            let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+            let hi = (1u64 << (i + 1).min(63)) as f64;
+            // fraction of the way through this bucket's observations
+            let frac = (rank - cum) as f64 / c as f64;
+            return Some(lo + frac * (hi - lo));
+        }
+        cum += c;
+    }
+    // unreachable while total > 0, but stay total-panic-free
+    None
+}
+
+/// Exact `q`-quantile of a sorted slice via linear interpolation
+/// between the two straddling order statistics (the "R-7" definition
+/// numpy defaults to). `None` on an empty slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        return Some(sorted[lo]);
+    }
+    let frac = pos - lo as f64;
+    Some(sorted[lo] + frac * (sorted[hi] - sorted[lo]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_inputs_yield_none() {
+        assert_eq!(bucket_quantile(&[], 0.5), None);
+        assert_eq!(bucket_quantile(&[0, 0, 0], 0.99), None);
+        assert_eq!(quantile_sorted(&[], 0.5), None);
+    }
+
+    #[test]
+    fn single_observation_is_every_quantile() {
+        // one observation in bucket 3 -> every quantile lands in [8, 16)
+        let mut counts = [0u64; 8];
+        counts[3] = 1;
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let v = bucket_quantile(&counts, q).unwrap();
+            assert!((8.0..=16.0).contains(&v), "q={q} -> {v}");
+        }
+        assert_eq!(quantile_sorted(&[42.0], 0.99), Some(42.0));
+    }
+
+    #[test]
+    fn bucket_quantiles_are_monotone_in_q() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let counts: Vec<u64> = (0..20).map(|_| rng.next_u64() % 100).collect();
+            if counts.iter().all(|&c| c == 0) {
+                continue;
+            }
+            let mut prev = f64::MIN;
+            for pct in 0..=100 {
+                let v = bucket_quantile(&counts, pct as f64 / 100.0).unwrap();
+                assert!(v >= prev, "quantile dipped at p{pct}: {v} < {prev}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_estimate_brackets_the_exact_quantile() {
+        // bucket the samples, then check the estimator stays within the
+        // winning bucket's bounds of the exact sample quantile
+        let mut rng = Rng::new(11);
+        let mut samples: Vec<f64> = (0..500)
+            .map(|_| (1 + rng.next_u64() % 100_000) as f64)
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut counts = [0u64; 32];
+        for &s in &samples {
+            let b = (63 - (s as u64).max(1).leading_zeros()).min(31) as usize;
+            counts[b] += 1;
+        }
+        for q in [0.5, 0.9, 0.99] {
+            let est = bucket_quantile(&counts, q).unwrap();
+            let exact = quantile_sorted(&samples, q).unwrap();
+            // same bucket => within one power of two of each other
+            assert!(
+                est <= exact * 2.0 + 2.0 && exact <= est * 2.0 + 2.0,
+                "q={q}: estimate {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn sorted_quantile_interpolates() {
+        let v = [0.0, 10.0, 20.0, 30.0, 40.0];
+        assert_eq!(quantile_sorted(&v, 0.0), Some(0.0));
+        assert_eq!(quantile_sorted(&v, 1.0), Some(40.0));
+        assert_eq!(quantile_sorted(&v, 0.5), Some(20.0));
+        assert_eq!(quantile_sorted(&v, 0.25), Some(10.0));
+        // between order statistics: 0.6 * 4 = 2.4 -> 20 + 0.4 * 10
+        assert!((quantile_sorted(&v, 0.6).unwrap() - 24.0).abs() < 1e-9);
+    }
+}

@@ -45,6 +45,27 @@ pub fn start(
     (addr, stats, handle)
 }
 
+/// [`start`] with a stats endpoint on an ephemeral port: also returns
+/// the bound stats address. `cfg.stats_addr` must be set (the caller
+/// decides the address; tests use `127.0.0.1:0`).
+pub fn start_with_stats(
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+) -> (
+    SocketAddr,
+    SocketAddr,
+    Arc<ServerStats>,
+    JoinHandle<anyhow::Result<()>>,
+) {
+    assert!(cfg.stats_addr.is_some(), "caller must set cfg.stats_addr");
+    let srv = Server::bind(registry, "127.0.0.1:0", cfg).expect("bind ephemeral");
+    let addr = srv.local_addr().expect("local addr");
+    let stats_addr = srv.stats_local_addr().expect("stats addr");
+    let stats = srv.stats();
+    let handle = std::thread::spawn(move || srv.run());
+    (addr, stats_addr, stats, handle)
+}
+
 /// [`start`] for the single-model (pre-v2) server shape.
 pub fn start_single(
     engine: Arc<Engine>,

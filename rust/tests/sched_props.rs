@@ -1,10 +1,14 @@
 //! Property tests for the fair scheduler's deficit-round-robin core
 //! (`server::sched::FairScheduler`): weighted-share accounting, bounded
-//! per-round deviation, starvation freedom, and the single-model
-//! degenerate case — all driven deterministically through the
-//! `ready`/`admit` callbacks (no threads, sockets, or clocks).
+//! per-round deviation, starvation freedom, the single-model
+//! degenerate case, and the SLO weight adapter (bounds, convergence,
+//! starvation freedom under boosted weights) — all driven
+//! deterministically through the `ready`/`admit` callbacks and
+//! synthetic p99 streams (no threads, sockets, or clocks).
 
-use aquant::server::{FairScheduler, Grant, Policy};
+use aquant::server::{
+    FairScheduler, Grant, Policy, SloAdapter, MAX_WEIGHT, SLO_FACTOR_MAX,
+};
 use aquant::util::prop;
 use aquant::util::rng::Rng;
 
@@ -14,6 +18,7 @@ fn policy(max_batch: usize, weight: u32) -> Policy {
         batch_wait_us: 0,
         queue_images: 1 << 20,
         weight,
+        slo_us: None,
     }
 }
 
@@ -211,6 +216,127 @@ fn prop_backpressure_preserves_weighted_shares() {
             "weighted shares lost under backpressure: served {served:?}, \
              per-weight {per_w:?}, quantum {q}"
         );
+    });
+}
+
+#[test]
+fn prop_slo_weights_stay_within_bounds() {
+    // Whatever p99 stream the adapter sees — misses, recoveries, noise,
+    // missing intervals — every returned weight stays in
+    // [static, min(round(static * SLO_FACTOR_MAX), MAX_WEIGHT)] and the
+    // boost factor itself stays in [1, SLO_FACTOR_MAX]. Models without
+    // an SLO always get exactly their static weight.
+    prop::check_default("slo-weights-bounded", |rng| {
+        let (mut policies, _req) = random_setup(rng);
+        let n = policies.len();
+        for p in policies.iter_mut() {
+            // roughly half the models carry an SLO
+            if rng.next_u64() % 2 == 0 {
+                p.slo_us = Some(100 + rng.next_u64() % 10_000);
+            }
+        }
+        let mut slo = SloAdapter::new(&policies);
+        for _ in 0..400 {
+            let p99s: Vec<Option<f64>> = (0..n)
+                .map(|_| match rng.next_u64() % 4 {
+                    // quiet interval: too few samples, no signal
+                    0 => None,
+                    // anything from "way under" to "way over" the SLO
+                    _ => Some(rng.range_f32(1.0, 200_000.0) as f64),
+                })
+                .collect();
+            let weights = slo.tick(&p99s);
+            for (id, p) in policies.iter().enumerate() {
+                let hi = ((p.weight as f64 * SLO_FACTOR_MAX).round() as u32).min(MAX_WEIGHT);
+                assert!(
+                    weights[id] >= p.weight && weights[id] <= hi,
+                    "model {id}: weight {} outside [{}, {hi}]",
+                    weights[id],
+                    p.weight
+                );
+                let f = slo.factor(id);
+                assert!(
+                    (1.0..=SLO_FACTOR_MAX).contains(&f),
+                    "model {id}: factor {f} escaped [1, {SLO_FACTOR_MAX}]"
+                );
+                if p.slo_us.is_none() {
+                    assert_eq!(weights[id], p.weight, "SLO-free model {id} adapted");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_slo_factor_converges_when_met() {
+    // Convergence: sustained misses drive the factor up; once the
+    // observed p99 sits at/inside the SLO (deadband included), the
+    // factor decays geometrically back to 1 and the weight returns to
+    // the static value — no permanent boost, no oscillation.
+    prop::check_default("slo-converges", |rng| {
+        let weight = 1 + (rng.next_u64() % 8) as u32;
+        let slo_us = 1_000 + rng.next_u64() % 50_000;
+        let mut pol = policy(1 + (rng.next_u64() % 32) as usize, weight);
+        pol.slo_us = Some(slo_us);
+        let mut slo = SloAdapter::new(&[pol]);
+        // phase 1: miss hard (2-10x over target) until boosted
+        let over = slo_us as f64 * (2.0 + (rng.next_u64() % 9) as f64);
+        let mut boosted = false;
+        for _ in 0..200 {
+            slo.tick(&[Some(over)]);
+            if slo.factor(0) > 1.5 {
+                boosted = true;
+                break;
+            }
+        }
+        assert!(boosted, "factor never rose past 1.5 under sustained misses");
+        // phase 2: p99 lands exactly on (or just under) the SLO — the
+        // deadband means decay-only, so the factor must drift home
+        let met = slo_us as f64 * (0.90 + 0.10 * (rng.next_u64() % 2) as f64);
+        for _ in 0..600 {
+            slo.tick(&[Some(met)]);
+        }
+        let f = slo.factor(0);
+        assert!(f < 1.01, "factor {f} did not converge to 1 once the SLO was met");
+        assert_eq!(slo.effective_weight(0), weight, "weight did not return to static");
+    });
+}
+
+#[test]
+fn prop_slo_boost_never_starves_other_models() {
+    // Close the loop against the DRR core: run one model's weight all
+    // the way to its SLO ceiling and feed the boosted weights into a
+    // live FairScheduler via set_weight. Every OTHER backlogged model
+    // must still be served every round (boost-only adaptation can
+    // shrink their relative share but never their round guarantee).
+    prop::check("slo-no-starvation", 64, |rng| {
+        let (mut policies, req_sizes) = random_setup(rng);
+        let n = policies.len();
+        let victim = (rng.next_u64() % n as u64) as usize;
+        policies[victim].slo_us = Some(100);
+        let mut fs = FairScheduler::new(&policies).unwrap();
+        let mut slo = SloAdapter::new(&policies);
+        let mut backlog = vec![u64::MAX / 2; n];
+        for round in 0..60 {
+            // the SLO'd model misses by 100x every interval
+            let p99s: Vec<Option<f64>> = (0..n)
+                .map(|id| if id == victim { Some(10_000.0) } else { None })
+                .collect();
+            let weights = slo.tick(&p99s);
+            for id in 0..n {
+                fs.set_weight(id, weights[id]);
+            }
+            let adm = sim_round(&mut fs, &mut backlog, &req_sizes);
+            for id in 0..n {
+                assert!(
+                    adm[id] > 0,
+                    "round {round}: model {id} starved while {victim} was boosted \
+                     (weights {weights:?}, admitted {adm:?})"
+                );
+            }
+        }
+        // sanity: the pressure actually drove the factor up
+        assert!(slo.factor(victim) > 1.0, "victim never boosted");
     });
 }
 

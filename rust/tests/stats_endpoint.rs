@@ -1,0 +1,342 @@
+//! Stats-endpoint integration suite: scrape `GET /stats` while mixed
+//! v1/v2 traffic is in flight, then assert the frozen counters cohere
+//! with what the clients actually sent; reject malformed/oversized
+//! stats requests without perturbing serving; persist history lines
+//! across a server restart; and pin that enabling an `slo_us` policy
+//! changes scheduling only — every served prediction stays
+//! bit-identical to the sequential engine.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use aquant::config::{PolicyOverrides, ServeConfig};
+use aquant::nn::registry::ModelRegistry;
+use aquant::util::json::Json;
+use aquant::util::rng::Rng;
+
+use common::{
+    expected, random_images, read_response, start, start_with_stats, synth_engine,
+    v1_request_bytes, v2_request_bytes, Watchdog,
+};
+
+/// One scrape: send `GET <target>`, read to EOF, split head and body.
+fn http_get(addr: SocketAddr, target: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect stats");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(format!("GET {target} HTTP/1.0\r\n\r\n").as_bytes())
+        .expect("send stats request");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read stats response");
+    let raw = String::from_utf8(raw).expect("utf8 response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("head/body split");
+    (head.to_string(), body.to_string())
+}
+
+/// Send raw bytes to the stats endpoint and return the status head.
+fn http_raw(addr: SocketAddr, bytes: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect stats");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(bytes).expect("send raw");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read raw response");
+    let raw = String::from_utf8_lossy(&raw);
+    raw.split_once("\r\n\r\n")
+        .map(|(h, _)| h.to_string())
+        .unwrap_or_else(|| raw.into_owned())
+}
+
+fn quantiles_monotone(h: &Json) {
+    let q = |k: &str| h.get(k).and_then(Json::as_f64);
+    if let (Some(p50), Some(p90), Some(p99)) = (q("p50_us"), q("p90_us"), q("p99_us")) {
+        assert!(p50 <= p90 && p90 <= p99, "quantiles dip: {p50} {p90} {p99}");
+    }
+}
+
+#[test]
+fn stats_scrape_live_under_mixed_load() {
+    let _wd = Watchdog::arm("stats_scrape_live_under_mixed_load", Duration::from_secs(60));
+    let engines = [synth_engine(1), synth_engine(2)];
+    let registry = Arc::new(
+        ModelRegistry::new(vec![
+            ("a".into(), engines[0].clone()),
+            ("b".into(), engines[1].clone()),
+        ])
+        .unwrap(),
+    );
+    let n_clients = 6usize;
+    let n_req = 5usize;
+    let n = 3usize; // images per request
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_wait_us: 200,
+        max_accepts: Some(n_clients + 1),
+        stats_addr: Some("127.0.0.1:0".into()),
+        ..ServeConfig::default()
+    };
+    let (addr, stats_addr, _stats, server) = start_with_stats(registry, cfg);
+
+    // Clients: even -> model 0 (client 0 over bare v1), odd -> model 1.
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let model_id = (c % 2) as u16;
+        let engine = engines[model_id as usize].clone();
+        clients.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut rng = Rng::new(0x57A75 + c as u64);
+            for _ in 0..n_req {
+                let images = random_images(&mut rng, n, engine.img_elems());
+                let req = if c == 0 {
+                    v1_request_bytes(&images, n as u32)
+                } else {
+                    v2_request_bytes(model_id, &images, n as u32)
+                };
+                s.write_all(&req).unwrap();
+                let got = read_response(&mut s).unwrap();
+                assert_eq!(got, expected(&engine, &images, n), "served answer diverged");
+            }
+        }));
+    }
+
+    // Concurrent scrapes while the load is (likely) in flight: every
+    // response must be valid JSON with both models and sane counters,
+    // whatever instant it lands on.
+    let scraper = std::thread::spawn(move || {
+        for _ in 0..10 {
+            let (head, body) = http_get(stats_addr, "/stats");
+            assert!(head.starts_with("HTTP/1.0 200 OK"), "head: {head}");
+            let j = Json::parse(&body).expect("stats body parses");
+            assert!(j.get("uptime_s").and_then(Json::as_f64).unwrap() >= 0.0);
+            let models = j.get("models").and_then(Json::as_arr).unwrap();
+            assert_eq!(models.len(), 2);
+            for m in models {
+                for hist in ["e2e", "queue_wait", "service"] {
+                    quantiles_monotone(m.get(hist).unwrap());
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    });
+    for c in clients {
+        c.join().unwrap();
+    }
+    scraper.join().unwrap();
+
+    // Every reply has been read, so the final scrape sees settled
+    // counters: requests/images must equal exactly what was sent.
+    let (_, body) = http_get(stats_addr, "/stats");
+    let j = Json::parse(&body).unwrap();
+    let models = j.get("models").and_then(Json::as_arr).unwrap();
+    let per_model_reqs = (n_clients / 2 * n_req) as i64;
+    for m in models {
+        let g = |k: &str| m.get(k).and_then(Json::as_i64).unwrap();
+        assert_eq!(g("requests"), per_model_reqs);
+        assert_eq!(g("images"), per_model_reqs * n as i64);
+        assert!(g("batches") >= 1);
+        // one e2e + one queue-wait observation per request, one
+        // service observation per engine batch
+        let count = |h: &str| m.get(h).unwrap().get("count").and_then(Json::as_i64).unwrap();
+        assert_eq!(count("e2e"), per_model_reqs);
+        assert_eq!(count("queue_wait"), per_model_reqs);
+        assert_eq!(count("service"), g("batches"));
+        assert_eq!(g("queue_depth"), 0, "drained after the load");
+        assert!(g("queue_peak") >= 0);
+    }
+    let srv = j.get("server").unwrap();
+    assert_eq!(
+        srv.get("conns_accepted").and_then(Json::as_i64).unwrap(),
+        n_clients as i64,
+        "stats connections must not count as serving accepts"
+    );
+
+    // Plaintext rendering of the same snapshot.
+    let (head, text) = http_get(stats_addr, "/stats?fmt=text");
+    assert!(head.contains("text/plain"), "head: {head}");
+    assert!(text.starts_with("aquant stats:"), "text: {text}");
+    assert!(text.contains("model 0 a:") && text.contains("model 1 b:"));
+
+    // Burn the final serving accept so the bounded loop drains.
+    drop(TcpStream::connect(addr).unwrap());
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn bad_stats_requests_rejected_without_touching_serving() {
+    let _wd = Watchdog::arm(
+        "bad_stats_requests_rejected_without_touching_serving",
+        Duration::from_secs(60),
+    );
+    let engine = synth_engine(3);
+    let registry = Arc::new(ModelRegistry::single(engine.clone()).unwrap());
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_accepts: Some(1),
+        stats_addr: Some("127.0.0.1:0".into()),
+        ..ServeConfig::default()
+    };
+    let (addr, stats_addr, stats, server) = start_with_stats(registry, cfg);
+
+    assert!(http_raw(stats_addr, b"POST /stats HTTP/1.0\r\n\r\n").contains("405"));
+    assert!(http_raw(stats_addr, b"GET /nope HTTP/1.0\r\n\r\n").contains("404"));
+    assert!(http_raw(stats_addr, b"GET /stats?fmt=xml HTTP/1.0\r\n\r\n").contains("400"));
+    assert!(http_raw(stats_addr, b"GET\r\n\r\n").contains("400"), "no target");
+    assert!(
+        http_raw(stats_addr, &[0xff, 0xfe, 0x0d, 0x0a, 0x0d, 0x0a]).contains("400"),
+        "non-UTF8"
+    );
+    // head at the cap with no terminator: rejected, not buffered
+    // forever (exactly the cap, so no unread bytes remain to turn the
+    // server's close into an RST that could eat the response)
+    assert!(http_raw(stats_addr, &[b'A'; 4096]).contains("431"));
+
+    // Serving is untouched: the one real connection round-trips
+    // bit-identically and the reject storm shows up nowhere in the
+    // serving counters.
+    let mut rng = Rng::new(9);
+    let images = random_images(&mut rng, 2, engine.img_elems());
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&v1_request_bytes(&images, 2)).unwrap();
+    assert_eq!(read_response(&mut s).unwrap(), expected(&engine, &images, 2));
+    drop(s);
+    server.join().unwrap().unwrap();
+    let snap = stats.snapshot();
+    assert_eq!(snap.conns_accepted, 1);
+    assert_eq!(snap.conns_rejected, 0);
+    assert_eq!(snap.models[0].requests, 1);
+}
+
+#[test]
+fn history_lines_persist_across_restart() {
+    let _wd = Watchdog::arm("history_lines_persist_across_restart", Duration::from_secs(60));
+    let path = std::env::temp_dir().join(format!(
+        "aquant-stats-history-{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let engine = synth_engine(4);
+
+    // Two bounded runs against the same history path: each appends a
+    // startup snapshot and a shutdown flush. Restarting must append,
+    // not truncate.
+    for run in 0..2 {
+        let registry = Arc::new(ModelRegistry::single(engine.clone()).unwrap());
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_wait_us: 0,
+            max_accepts: Some(1),
+            stats_history: Some(path.to_str().unwrap().to_string()),
+            stats_history_every_s: 3600, // only startup + final flush
+            ..ServeConfig::default()
+        };
+        let (addr, _stats, server) = start(registry, cfg);
+        let mut rng = Rng::new(10 + run);
+        let images = random_images(&mut rng, 1, engine.img_elems());
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&v1_request_bytes(&images, 1)).unwrap();
+        assert_eq!(read_response(&mut s).unwrap(), expected(&engine, &images, 1));
+        drop(s);
+        server.join().unwrap().unwrap();
+    }
+
+    let text = std::fs::read_to_string(&path).expect("history file exists");
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(
+        lines.len() >= 4,
+        "two runs x (startup + final flush), got {} lines",
+        lines.len()
+    );
+    let mut final_requests = Vec::new();
+    for line in &lines {
+        let j = Json::parse(line).expect("history line parses");
+        assert!(j.get("t").and_then(Json::as_f64).unwrap() > 0.0, "unix stamp");
+        assert!(j.get("uptime_s").and_then(Json::as_f64).unwrap() >= 0.0);
+        let models = j.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(models.len(), 1);
+        final_requests.push(models[0].get("requests").and_then(Json::as_i64).unwrap());
+    }
+    // the last line of each run recorded that run's one request
+    assert_eq!(*final_requests.last().unwrap(), 1);
+    assert!(final_requests.contains(&1));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn slo_policy_changes_scheduling_only() {
+    let _wd = Watchdog::arm("slo_policy_changes_scheduling_only", Duration::from_secs(60));
+    let engines = [synth_engine(5), synth_engine(6)];
+    // Model 0 carries an unmeetable 1us p99 SLO: the adapter will push
+    // its effective weight toward the bound as soon as it has samples.
+    // Predictions must not care.
+    let registry = Arc::new(
+        ModelRegistry::with_policies(vec![
+            (
+                "slo".into(),
+                engines[0].clone(),
+                PolicyOverrides {
+                    weight: Some(2),
+                    slo_us: Some(1),
+                    ..PolicyOverrides::default()
+                },
+            ),
+            ("plain".into(), engines[1].clone(), PolicyOverrides::default()),
+        ])
+        .unwrap(),
+    );
+    let n_clients = 4usize;
+    let n_req = 10usize;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_wait_us: 100,
+        max_accepts: Some(n_clients),
+        ..ServeConfig::default()
+    };
+    let (addr, stats, server) = start(registry, cfg);
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let model_id = (c % 2) as u16;
+        let engine = engines[model_id as usize].clone();
+        clients.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut rng = Rng::new(0x510 + c as u64);
+            for _ in 0..n_req {
+                let images = random_images(&mut rng, 2, engine.img_elems());
+                s.write_all(&v2_request_bytes(model_id, &images, 2)).unwrap();
+                let got = read_response(&mut s).unwrap();
+                assert_eq!(
+                    got,
+                    expected(&engine, &images, 2),
+                    "slo_us must never change predictions"
+                );
+                // spread the load across adaptation intervals
+                std::thread::sleep(Duration::from_millis(15));
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    server.join().unwrap().unwrap();
+    let snap = stats.snapshot();
+    assert_eq!(snap.models[0].slo_us, 1);
+    assert_eq!(snap.models[1].slo_us, 0);
+    assert_eq!(snap.models[0].weight, 2);
+    // boost-only adaptation: effective weight never drops below static
+    assert!(
+        snap.models[0].effective_weight_milli >= 2000,
+        "effective weight {} fell below static",
+        snap.models[0].effective_weight_milli
+    );
+    assert_eq!(snap.models[1].effective_weight_milli, 1000);
+    for m in &snap.models {
+        assert_eq!(m.requests, (n_clients / 2 * n_req) as u64);
+        assert_eq!(m.e2e.count, m.requests);
+    }
+}

@@ -13,7 +13,12 @@
 #   (d) the high-connection-count row (256 concurrent pipelined TCP
 #       clients through the readiness event loop,
 #       "conns256_images_per_sec") regresses the same way — same
-#       skip-older-entries rule.
+#       skip-older-entries rule, or
+#   (e) the batch-service p99 of that 256-connection burst
+#       ("p99_service_us", from the same histograms /stats serves)
+#       climbs more than the fraction ABOVE the best (lowest) prior
+#       entry — latency gates in the opposite direction of throughput;
+#       entries predating the key are skipped.
 # Each passing run is appended to bench_history/ as serve_NNN.json, so
 # the directory is the PR-over-PR perf trajectory.
 set -euo pipefail
@@ -64,20 +69,25 @@ if cur is None:
 # history files feeds both metrics.
 MIXED = "mixed_w4_b32x2_images_per_sec"
 CONNS = "conns256_images_per_sec"
+P99 = "p99_service_us"
 mixed = blob.get(MIXED)
 if mixed is None:
     sys.exit(f"bench_check: FAIL - no {MIXED} in the blob")
 conns = blob.get(CONNS)
 if conns is None:
     sys.exit(f"bench_check: FAIL - no {CONNS} in the blob")
+p99 = blob.get(P99)
+if p99 is None:
+    sys.exit(f"bench_check: FAIL - no {P99} in the blob")
 
-prior, mixed_prior, conns_prior = [], [], []
+prior, mixed_prior, conns_prior, p99_prior = [], [], [], []
 for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
     try:
         entry = json.load(open(path))
         v = ips(entry)          # KeyError/TypeError on an off-schema row
         m = entry.get(MIXED)
         c = entry.get(CONNS)
+        p = entry.get(P99)
     except (ValueError, KeyError, TypeError, AttributeError):
         print(f"bench_check: warning - unreadable history entry {path}", file=sys.stderr)
         continue
@@ -87,6 +97,8 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         mixed_prior.append((m, path))
     if c is not None:
         conns_prior.append((c, path))
+    if p is not None and p > 0:
+        p99_prior.append((p, path))
 
 def gate(label, value, history, no_prior_msg):
     if not history:
@@ -113,6 +125,25 @@ gate("mixed 2-model throughput", mixed, mixed_prior,
 # end; same skip rule for entries predating the row.
 gate("256-connection throughput", conns, conns_prior,
      f"bench_check: no prior {CONNS} entries; starting the conns trajectory")
+
+# Tail-latency trajectory: lower is better, so this gate points the
+# other way — fail when the burst's batch-service p99 climbs more than
+# the window ABOVE the best (lowest) prior entry. The log2 histogram
+# buckets quantize to ~2x steps, so the default 20% window effectively
+# fires on a bucket jump — exactly the granularity the trend needs.
+if p99_prior:
+    best, best_path = min(p99_prior)
+    print(
+        f"bench_check: batch-service p99 {p99:.0f}us vs best prior "
+        f"{best:.0f}us ({os.path.basename(best_path)}, {len(p99_prior)} entries)"
+    )
+    if p99 > best * (1.0 + regression):
+        sys.exit(
+            f"bench_check: FAIL - {P99} regressed >{regression:.0%} "
+            f"vs {best_path} ({p99:.0f} > {best * (1.0 + regression):.0f}us)"
+        )
+else:
+    print(f"bench_check: no prior {P99} entries; starting the latency trajectory")
 
 os.makedirs(hist_dir, exist_ok=True)
 # next index = max existing + 1 (a plain count would re-use an index —
