@@ -37,7 +37,7 @@ fn main() {
                     eng.set_act_quant(
                         &l.name,
                         ActQuant::Border {
-                            border: BorderFn::from_params(params, l.k2(), true, true),
+                            border: BorderFn::from_params(params, l.k2(), true, true).unwrap(),
                             s: 0.05,
                             qmin: row.qmin_a,
                             qmax: row.qmax_a,

@@ -32,7 +32,7 @@ fn main() {
         ("border-elem-quadratic", false, true),
         ("border-fused-quadratic", true, true),
     ] {
-        let b = BorderFn::from_params(params.clone(), k2, fuse, b2);
+        let b = BorderFn::from_params(params.clone(), k2, fuse, b2).unwrap();
         let r = bench(&format!("{label}/column"), budget, || {
             buf.copy_from_slice(&col);
             b.quant_column(&mut buf, 0.1, 0.0, 15.0, &mut scratch);

@@ -18,7 +18,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use aquant::config::ServeConfig;
-use aquant::nn::pool::InferencePool;
+use aquant::nn::kernels;
+use aquant::nn::pool::{InferencePool, IntraCfg};
 use aquant::nn::registry::ModelRegistry;
 use aquant::nn::synth;
 use aquant::util::bench::{bench, default_budget};
@@ -206,7 +207,63 @@ fn main() {
         (ips, p99)
     };
 
-    let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"rows\": [\n");
+    // Kernel microbenches, tagged with the active SIMD backend: the
+    // border quantize-dequantize column pass (ns per 4096-row column)
+    // and the GEMM inner product (GFLOP/s on a 4096-elem dot).
+    let kernel_backend = kernels::active().name();
+    let (border_quant_col_ns, gemm_gflops) = {
+        let n = 4096usize;
+        let col: Vec<f32> = (0..n).map(|_| rng.range_f32(-4.0, 4.0)).collect();
+        let b0: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b1: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b2: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut buf = col.clone();
+        let r = bench(&format!("kernels/{kernel_backend}/quant_col_quad4096"), budget, || {
+            buf.copy_from_slice(&col);
+            kernels::quant_col_quad(&mut buf, &b0, &b1, &b2, 0.1, 10.0, 0.0, 15.0);
+            std::hint::black_box(&buf);
+        });
+        let border_ns = r.median.as_secs_f64() * 1e9;
+        println!("{}  {:>12.1} ns/column", r.row(), border_ns);
+        let w: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let r = bench(&format!("kernels/{kernel_backend}/dot4096"), budget, || {
+            std::hint::black_box(kernels::dot(&w, &x));
+        });
+        let gflops = 2.0 * n as f64 / r.median.as_secs_f64() / 1e9;
+        println!("{}  {:>12.2} GFLOP/s", r.row(), gflops);
+        (border_ns, gflops)
+    };
+
+    // Single-image p99 is the latency intra-image sharding exists for:
+    // the same 4-worker pool, batch 1, with conv-phase chunking off and
+    // forced on (threshold 0 so every layer shards).
+    let (single_img_serial_us, single_img_intra_us) = {
+        let flat = Arc::new(images[..img_elems].to_vec());
+        let mut med = [0.0f64; 2];
+        for (i, intra) in [None, Some(IntraCfg { split: 0, min_elems: 0 })]
+            .into_iter()
+            .enumerate()
+        {
+            let label = if intra.is_some() { "intra" } else { "serial" };
+            let pool = InferencePool::with_intra(4, engine.scratch_dims(), 1, intra);
+            let r = bench(&format!("pool/single-image/{label}"), budget, || {
+                let preds = pool.classify_flat(&engine, flat.clone(), 1).unwrap();
+                std::hint::black_box(preds);
+            });
+            med[i] = r.median.as_secs_f64() * 1e6;
+            println!("{}", r.row());
+        }
+        println!(
+            "single-image speedup intra vs serial: {:.2}x",
+            med[0] / med[1].max(1e-9)
+        );
+        (med[0], med[1])
+    };
+
+    let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"backend\": \"rust\",\n");
+    json.push_str(&format!("  \"kernel_backend\": \"{kernel_backend}\",\n"));
+    json.push_str("  \"rows\": [\n");
     for (i, (w, b, v, us)) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"workers\": {w}, \"batch\": {b}, \"images_per_sec\": {v:.1}, \
@@ -218,6 +275,10 @@ fn main() {
         "  ],\n  \"mixed_w4_b32x2_images_per_sec\": {mixed_ips:.1},\n  \
          \"conns256_images_per_sec\": {conns_ips:.1},\n  \
          \"p99_service_us\": {p99_service_us:.1},\n  \
+         \"border_quant_col_ns\": {border_quant_col_ns:.1},\n  \
+         \"gemm_gflops\": {gemm_gflops:.3},\n  \
+         \"single_img_serial_us\": {single_img_serial_us:.1},\n  \
+         \"single_img_intra_us\": {single_img_intra_us:.1},\n  \
          \"speedup_w4_vs_w1_b64\": {speedup:.3}\n}}\n"
     ));
     match std::env::var("BENCH_JSON") {

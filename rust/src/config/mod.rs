@@ -429,11 +429,16 @@ impl ModelSpec {
 /// `examples/serve.rs`) into the event-loop server: `--workers`,
 /// `--max-batch`, `--batch-wait-us`, `--queue-images`, `--max-conns`,
 /// `--conn-timeout-ms`, `--max-accepts`, `--io-poll`, `--stats-addr`,
-/// `--stats-history`, `--stats-history-every-s`.
+/// `--stats-history`, `--stats-history-every-s`, `--intra-split`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServeConfig {
     /// Inference worker threads. 0 = auto (cores − 1).
     pub workers: usize,
+    /// Intra-image parallelism (`--intra-split`): chunks a large conv
+    /// layer's gather/GEMM phases are split into so idle workers can
+    /// help with a single image (bounds single-image latency by more
+    /// than one core). 0 = auto (one chunk per worker), 1 = off.
+    pub intra_split: usize,
     /// Max images coalesced into one engine batch.
     pub max_batch: usize,
     /// How long the batcher waits for more images once one request is
@@ -472,6 +477,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             workers: 0,
+            intra_split: 0,
             max_batch: 64,
             batch_wait_us: 200,
             queue_images: 8192,
@@ -498,6 +504,14 @@ impl ServeConfig {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("--workers={v} is not a number (or 'auto')"))?,
         };
+        let intra_split = match args.str_flag_opt("intra-split") {
+            None => d.intra_split,
+            Some("auto") => 0,
+            Some("off") => 1,
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--intra-split={v} is not a number (or 'auto'/'off')")
+            })?,
+        };
         let opt_count = |flag: &str| -> Result<Option<usize>> {
             match args.str_flag_opt(flag) {
                 None => Ok(None),
@@ -508,6 +522,7 @@ impl ServeConfig {
         };
         let cfg = ServeConfig {
             workers,
+            intra_split,
             max_batch: args.num_flag("max-batch", d.max_batch)?,
             batch_wait_us: args.num_flag("batch-wait-us", d.batch_wait_us)?,
             queue_images: args.num_flag("queue-images", d.queue_images)?,
@@ -578,6 +593,14 @@ impl ServeConfig {
                 "--workers ({}) must be <= {} (a clean config error beats \
                  panicking mid-way through thread spawning)",
                 self.workers,
+                Self::MAX_WORKERS
+            );
+        }
+        if self.intra_split > Self::MAX_WORKERS {
+            bail!(
+                "--intra-split ({}) must be <= {} (chunks beyond the worker \
+                 cap only add claim-cursor overhead)",
+                self.intra_split,
                 Self::MAX_WORKERS
             );
         }
@@ -802,6 +825,18 @@ mod tests {
         );
         assert!(ServeConfig::from_args(&a(&["serve", "--workers", "1000000"])).is_err());
         assert!(ServeConfig::from_args(&a(&["serve", "--workers", "1024"])).is_ok());
+
+        // intra-image sharding knob: auto (0) by default, "off" = 1,
+        // bounded like --workers
+        assert_eq!(ServeConfig::default().intra_split, 0);
+        let cfg = ServeConfig::from_args(&a(&["serve", "--intra-split", "4"])).unwrap();
+        assert_eq!(cfg.intra_split, 4);
+        let cfg = ServeConfig::from_args(&a(&["serve", "--intra-split", "auto"])).unwrap();
+        assert_eq!(cfg.intra_split, 0);
+        let cfg = ServeConfig::from_args(&a(&["serve", "--intra-split", "off"])).unwrap();
+        assert_eq!(cfg.intra_split, 1);
+        assert!(ServeConfig::from_args(&a(&["serve", "--intra-split", "some"])).is_err());
+        assert!(ServeConfig::from_args(&a(&["serve", "--intra-split", "1000000"])).is_err());
         // max-batch is bounded so quantum*weight arithmetic can't overflow
         assert!(ServeConfig::from_args(&a(&[
             "serve",

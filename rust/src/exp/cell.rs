@@ -189,7 +189,7 @@ pub fn build_quantized_engine(
             let s_a = st.get(&format!("state:{}.s_a", l.name))?.data[0];
             let bp = st.get(&format!("state:{}.bp", l.name))?;
             let border = if knobs.border_en {
-                BorderFn::from_params(bp.data.clone(), l.k2(), knobs.fuse_en, knobs.b2_en)
+                BorderFn::from_params(bp.data.clone(), l.k2(), knobs.fuse_en, knobs.b2_en)?
             } else {
                 BorderFn::nearest(l.rows, l.k2())
             };

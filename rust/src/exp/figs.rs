@@ -108,7 +108,8 @@ pub fn fig3(ctx: &Ctx, model: &str, abits: u32, reps: usize) -> Result<String> {
                 // §5.3: the paper's latency experiment "adopts the
                 // element-wise border function B(x) since its improvement
                 // is enough in most cases" — fusion off, quadratic on.
-                let border = BorderFn::from_params(params, l.k2(), false, true);
+                let border = BorderFn::from_params(params, l.k2(), false, true)
+                    .expect("figure border table is well-formed by construction");
                 eng.set_act_quant(
                     &l.name,
                     ActQuant::Border {

@@ -12,10 +12,17 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::im2col;
+use super::kernels;
+use super::pool::{IntraCtx, IntraWait};
 use super::topology::{LayerTopo, ModelTopo};
 use crate::quant::arounding::around_column;
 use crate::quant::border::BorderFn;
 use crate::quant::tensor::Tensor;
+
+/// `unwrap_or(&ActQuant::None)` can't borrow a temporary (`ActQuant`
+/// has drop glue, so the unit variant is not const-promotable); this
+/// static is the layer default.
+static ACT_NONE: ActQuant = ActQuant::None;
 
 /// Activation quantization applied to each im2col column of a layer.
 #[derive(Debug, Clone)]
@@ -96,7 +103,14 @@ pub struct EngineScratch {
     /// im2col patch buffer (grow-only; sized to the largest layer seen).
     patches: Vec<f32>,
     /// Border-function scratch (grow-only; 2·R for the fused-border pass).
-    quant: Vec<f32>,
+    /// `pub(crate)` so pool workers can lend it to intra-image helper
+    /// chunks without a fresh allocation.
+    pub(crate) quant: Vec<f32>,
+    /// When set (pool workers with intra-image parallelism enabled),
+    /// conv layers big enough to clear the threshold shard their gather
+    /// and GEMM phases across idle pool workers. `None` (the default)
+    /// keeps the forward pass single-threaded.
+    pub(crate) intra: Option<IntraCtx>,
 }
 
 impl EngineScratch {
@@ -116,6 +130,123 @@ impl EngineScratch {
             skip: Vec::with_capacity(dims.acts),
             patches: Vec::with_capacity(dims.patches),
             quant: Vec::with_capacity(dims.quant),
+            intra: None,
+        }
+    }
+}
+
+/// One parallel phase of a conv layer, executed chunk-wise by the
+/// submitting pool worker plus any idle helpers (see
+/// [`crate::nn::pool::IntraTask`]). Chunks are disjoint ranges of
+/// output pixels (gather) or output channels (GEMM), so each executor
+/// reconstructs a non-aliasing slice from the raw base pointers.
+///
+/// Safety contract: the pointers reference the submitting worker's
+/// scratch and the engine it is running; the submitter blocks
+/// ([`IntraWait`]) until every *claimed* chunk completes before those
+/// borrows end, and a late helper that finds the chunk cursor exhausted
+/// never dereferences the pointers at all.
+pub(crate) enum IntraOp {
+    /// im2col gather over output-pixel chunks, with the column
+    /// activation quant applied fused (inside the gather hook) or as a
+    /// per-chunk second pass.
+    Gather {
+        layer: *const LayerTopo,
+        aq: *const ActQuant,
+        fused: bool,
+        x: *const f32,
+        x_len: usize,
+        /// Base of the FULL (P·R) patch buffer; chunk c takes
+        /// `[p0·R, p1·R)`.
+        patches: *mut f32,
+        np: usize,
+    },
+    /// Grouped GEMM over output-channel chunks.
+    Gemm {
+        layer: *const LayerTopo,
+        wts: *const f32,
+        wts_len: usize,
+        bias: *const f32,
+        bias_len: usize,
+        patches: *const f32,
+        patches_len: usize,
+        /// Base of the FULL (oc·P) output buffer; chunk c takes
+        /// `[o0·P, o1·P)`.
+        out: *mut f32,
+    },
+}
+
+// The raw pointers are only dereferenced while the submitting worker
+// blocks on task completion (see the safety contract above).
+unsafe impl Send for IntraOp {}
+unsafe impl Sync for IntraOp {}
+
+/// Even split of `n` items into `chunks` ranges: chunk `ci` covers
+/// `[ci·n/chunks, (ci+1)·n/chunks)`.
+#[inline]
+fn chunk_range(ci: usize, chunks: usize, n: usize) -> (usize, usize) {
+    (ci * n / chunks, (ci + 1) * n / chunks)
+}
+
+impl IntraOp {
+    /// Run chunk `ci` of `chunks`. `quant` is the *executor's* border
+    /// scratch (caller and helpers each bring their own), so the fused
+    /// quant hook stays allocation-free on every thread.
+    pub(crate) fn run_chunk(&self, ci: usize, chunks: usize, quant: &mut Vec<f32>) {
+        match self {
+            IntraOp::Gather {
+                layer,
+                aq,
+                fused,
+                x,
+                x_len,
+                patches,
+                np,
+            } => unsafe {
+                let l = &**layer;
+                let aq = &**aq;
+                let x = std::slice::from_raw_parts(*x, *x_len);
+                let (p0, p1) = chunk_range(ci, chunks, *np);
+                if p0 == p1 {
+                    return;
+                }
+                let r = l.rows;
+                let out = std::slice::from_raw_parts_mut(patches.add(p0 * r), (p1 - p0) * r);
+                let k2 = l.k2();
+                if matches!(aq, ActQuant::None) {
+                    im2col::extract_range(l, x, out, p0, p1, |_col| {});
+                } else if *fused {
+                    im2col::extract_range(l, x, out, p0, p1, |col| aq.apply(col, k2, quant));
+                } else {
+                    im2col::extract_range(l, x, out, p0, p1, |_col| {});
+                    for p in 0..p1 - p0 {
+                        aq.apply(&mut out[p * r..(p + 1) * r], k2, quant);
+                    }
+                }
+            },
+            IntraOp::Gemm {
+                layer,
+                wts,
+                wts_len,
+                bias,
+                bias_len,
+                patches,
+                patches_len,
+                out,
+            } => unsafe {
+                let l = &**layer;
+                let wts = std::slice::from_raw_parts(*wts, *wts_len);
+                let bias = std::slice::from_raw_parts(*bias, *bias_len);
+                let patches = std::slice::from_raw_parts(*patches, *patches_len);
+                let (_, ho, wo) = l.out_chw;
+                let np = ho * wo;
+                let (o0, o1) = chunk_range(ci, chunks, l.oc);
+                if o0 == o1 {
+                    return;
+                }
+                let orows = std::slice::from_raw_parts_mut(out.add(o0 * np), (o1 - o0) * np);
+                im2col::gemm_rows(l, wts, bias, patches, orows, o0, o1);
+            },
         }
     }
 }
@@ -195,7 +326,7 @@ impl Engine {
         timing: Option<&mut LayerTiming>,
     ) -> Result<Vec<f32>> {
         let (mut out, mut patches, mut scratch) = (Vec::new(), Vec::new(), Vec::new());
-        self.run_layer_into(l, x, &mut out, &mut patches, &mut scratch, timing)?;
+        self.run_layer_into(l, x, &mut out, &mut patches, &mut scratch, timing, None)?;
         Ok(out)
     }
 
@@ -204,6 +335,14 @@ impl Engine {
     /// (and of the reused `patches` region) is overwritten, so buffers
     /// carry no state between calls. Timing clock reads only happen when
     /// `timing` is given, keeping the hot loop clean.
+    ///
+    /// When `intra` is set and the layer clears the work threshold, the
+    /// gather and GEMM phases are split into chunks claimed by this
+    /// thread plus any idle pool workers; the phases are still barriers
+    /// (GEMM starts only after every gather chunk completed), so the
+    /// result is bit-identical to the sequential path for any chunk
+    /// count — pinned by the pool property tests.
+    #[allow(clippy::too_many_arguments)]
     fn run_layer_into(
         &self,
         l: &LayerTopo,
@@ -212,9 +351,10 @@ impl Engine {
         patches: &mut Vec<f32>,
         quant_scratch: &mut Vec<f32>,
         timing: Option<&mut LayerTiming>,
+        intra: Option<&IntraCtx>,
     ) -> Result<()> {
         let lw = self.layer_weights(&l.name)?;
-        let aq = self.act_quant.get(&l.name).unwrap_or(&ActQuant::None);
+        let aq = self.act_quant.get(&l.name).unwrap_or(&ACT_NONE);
         if l.kind == "fc" {
             // GAP + matmul; `patches` doubles as the pooled C-vector.
             let (c, h, w) = l.in_chw;
@@ -231,7 +371,7 @@ impl Engine {
             out.resize(l.oc, 0.0);
             for o in 0..l.oc {
                 let wrow = &lw.w[o * c..(o + 1) * c];
-                out[o] = wrow.iter().zip(v.iter()).map(|(a, b)| a * b).sum::<f32>() + lw.b[o];
+                out[o] = kernels::dot(wrow, v) + lw.b[o];
             }
             return Ok(());
         }
@@ -239,23 +379,74 @@ impl Engine {
         let np = ho * wo;
         let patches = grow(patches, np * l.rows);
         let k2 = l.k2();
+        // Shard only when the layer is big enough for the fan-out to
+        // pay for itself (helper wake-ups + the two phase barriers).
+        let intra = intra.filter(|c| c.split > 1 && np * l.rows >= c.min_elems);
         let t0 = timing.is_some().then(Instant::now);
-        match (self.fusion, matches!(aq, ActQuant::None)) {
-            (_, true) => im2col::extract(l, x, patches),
-            (FusionMode::Fused, false) => {
-                im2col::extract_fused(l, x, patches, |col| aq.apply(col, k2, quant_scratch))
-            }
-            (FusionMode::Unfused, false) => {
-                im2col::extract(l, x, patches);
-                for p in 0..np {
-                    aq.apply(&mut patches[p * l.rows..(p + 1) * l.rows], k2, quant_scratch);
+        match intra {
+            None => match (self.fusion, matches!(aq, ActQuant::None)) {
+                (_, true) => im2col::extract(l, x, patches),
+                (FusionMode::Fused, false) => {
+                    im2col::extract_fused(l, x, patches, |col| aq.apply(col, k2, quant_scratch))
+                }
+                (FusionMode::Unfused, false) => {
+                    im2col::extract(l, x, patches);
+                    for p in 0..np {
+                        aq.apply(&mut patches[p * l.rows..(p + 1) * l.rows], k2, quant_scratch);
+                    }
+                }
+            },
+            Some(ctx) => {
+                let chunks = ctx.split.min(np);
+                let task = ctx.spawn(
+                    IntraOp::Gather {
+                        layer: l,
+                        aq,
+                        fused: self.fusion == FusionMode::Fused,
+                        x: x.as_ptr(),
+                        x_len: x.len(),
+                        patches: patches.as_mut_ptr(),
+                        np,
+                    },
+                    chunks,
+                );
+                // The wait guard quiesces helpers even if a chunk
+                // panics on this thread (the borrows behind the raw
+                // pointers must outlive every claimed chunk).
+                let wait = IntraWait::new(&task);
+                task.execute(quant_scratch);
+                if wait.finish() {
+                    return Err(anyhow!("intra-image gather helper panicked"));
                 }
             }
         }
         let t_im2col = t0.map(|t| t.elapsed());
         out.resize(l.oc * np, 0.0);
         let t1 = timing.is_some().then(Instant::now);
-        im2col::gemm(l, &lw.w, &lw.b, patches, out);
+        match intra {
+            None => im2col::gemm(l, &lw.w, &lw.b, patches, out),
+            Some(ctx) => {
+                let chunks = ctx.split.min(l.oc);
+                let task = ctx.spawn(
+                    IntraOp::Gemm {
+                        layer: l,
+                        wts: lw.w.as_ptr(),
+                        wts_len: lw.w.len(),
+                        bias: lw.b.as_ptr(),
+                        bias_len: lw.b.len(),
+                        patches: patches.as_ptr(),
+                        patches_len: patches.len(),
+                        out: out.as_mut_ptr(),
+                    },
+                    chunks,
+                );
+                let wait = IntraWait::new(&task);
+                task.execute(quant_scratch);
+                if wait.finish() {
+                    return Err(anyhow!("intra-image gemm helper panicked"));
+                }
+            }
+        }
         if let Some(t) = timing {
             t.layer = l.name.clone();
             t.im2col_quant_us = t_im2col.unwrap().as_secs_f64() * 1e6;
@@ -291,7 +482,15 @@ impl Engine {
             }
             let main: Vec<&LayerTopo> = blk.main_layers().collect();
             for (i, l) in main.iter().enumerate() {
-                self.run_layer_into(l, &s.h, &mut s.out, &mut s.patches, &mut s.quant, None)?;
+                self.run_layer_into(
+                    l,
+                    &s.h,
+                    &mut s.out,
+                    &mut s.patches,
+                    &mut s.quant,
+                    None,
+                    s.intra.as_ref(),
+                )?;
                 let is_last = i == main.len() - 1;
                 let defer_relu = is_last && blk.residual;
                 if l.relu && !defer_relu {
@@ -312,6 +511,7 @@ impl Engine {
                         &mut s.patches,
                         &mut s.quant,
                         None,
+                        s.intra.as_ref(),
                     )?;
                     for (a, b) in s.h.iter_mut().zip(&s.skip) {
                         *a += b;

@@ -11,33 +11,73 @@
 //! `extract_fused` applies a column-quantization hook while the gathered
 //! column is still hot in cache — the Figure 3 "fused" configuration; the
 //! unfused path does a second pass over the full patch buffer.
+//!
+//! Both the gather and the GEMM come in `_range`/`_rows` forms that
+//! operate on a sub-range of output pixels / output channels, so the
+//! pool can shard ONE image's work across workers (intra-image
+//! parallelism); the plain entry points cover the full range. Interior
+//! pixels (every tap in-bounds) skip the per-element bounds checks and
+//! copy whole k-wide rows (`kernels::gather_row`); the GEMM inner
+//! product goes through the SIMD-dispatched `kernels::dot`.
 
+use super::kernels;
 use super::topology::LayerTopo;
 
 /// Plain im2col: gather patches of `x` (C,H,W) into `out` (P·R).
 pub fn extract(l: &LayerTopo, x: &[f32], out: &mut [f32]) {
-    extract_impl(l, x, out, |_col| {});
+    let (_, ho, wo) = l.out_chw;
+    extract_range(l, x, out, 0, ho * wo, |_col| {});
 }
 
 /// im2col with a per-column hook applied while the column is hot.
 pub fn extract_fused<F: FnMut(&mut [f32])>(l: &LayerTopo, x: &[f32], out: &mut [f32], hook: F) {
-    extract_impl(l, x, out, hook);
+    let (_, ho, wo) = l.out_chw;
+    extract_range(l, x, out, 0, ho * wo, hook);
 }
 
-#[inline(always)]
-fn extract_impl<F: FnMut(&mut [f32])>(l: &LayerTopo, x: &[f32], out: &mut [f32], mut hook: F) {
+/// Gather output pixels `[p0, p1)` (row-major over ho×wo), applying
+/// `hook` to each finished column. `out` is ONLY this range's columns —
+/// `(p1-p0)·R` f32s, i.e. `full[p0*R..p1*R]` — so parallel executors
+/// hold genuinely disjoint `&mut` slices instead of aliasing views of
+/// the whole buffer.
+pub fn extract_range<F: FnMut(&mut [f32])>(
+    l: &LayerTopo,
+    x: &[f32],
+    out: &mut [f32],
+    p0: usize,
+    p1: usize,
+    mut hook: F,
+) {
     let (c_in, h, w) = l.in_chw;
     let (_, ho, wo) = l.out_chw;
     let (k, s, p) = (l.k, l.stride, l.pad);
     let r = l.rows;
     debug_assert_eq!(x.len(), c_in * h * w);
-    debug_assert_eq!(out.len(), ho * wo * r);
+    debug_assert_eq!(out.len(), (p1 - p0) * r);
+    debug_assert!(p0 <= p1 && p1 <= ho * wo);
     let k2 = k * k;
-    for oy in 0..ho {
-        for ox in 0..wo {
-            let col = &mut out[(oy * wo + ox) * r..(oy * wo + ox + 1) * r];
-            let base_y = (oy * s) as isize - p as isize;
-            let base_x = (ox * s) as isize - p as isize;
+    for pix in p0..p1 {
+        let (oy, ox) = (pix / wo, pix % wo);
+        let col = &mut out[(pix - p0) * r..(pix - p0 + 1) * r];
+        let base_y = (oy * s) as isize - p as isize;
+        let base_x = (ox * s) as isize - p as isize;
+        // Interior fast path: every tap of the k×k window lands in
+        // bounds, so each (c, ky) row is one contiguous k-wide copy.
+        let interior = base_y >= 0
+            && base_x >= 0
+            && base_y as usize + k <= h
+            && base_x as usize + k <= w;
+        if interior {
+            let (y0, x0) = (base_y as usize, base_x as usize);
+            for c in 0..c_in {
+                let plane = &x[c * h * w..(c + 1) * h * w];
+                let dst = &mut col[c * k2..(c + 1) * k2];
+                for ky in 0..k {
+                    let src = &plane[(y0 + ky) * w + x0..(y0 + ky) * w + x0 + k];
+                    kernels::gather_row(&mut dst[ky * k..(ky + 1) * k], src);
+                }
+            }
+        } else {
             for c in 0..c_in {
                 let plane = &x[c * h * w..(c + 1) * h * w];
                 let dst = &mut col[c * k2..(c + 1) * k2];
@@ -63,33 +103,48 @@ fn extract_impl<F: FnMut(&mut [f32])>(l: &LayerTopo, x: &[f32], out: &mut [f32],
                     }
                 }
             }
-            hook(col);
         }
+        hook(col);
     }
 }
 
 /// GEMM over extracted patches: `out[o][p] = Σ_r w[o][r_g] · patches[p][r]`
 /// with grouped row ranges, plus bias. `out` is (oc, P) row-major.
 pub fn gemm(l: &LayerTopo, wts: &[f32], bias: &[f32], patches: &[f32], out: &mut [f32]) {
+    gemm_rows(l, wts, bias, patches, out, 0, l.oc);
+}
+
+/// GEMM restricted to output channels `[o0, o1)`. `out` is ONLY this
+/// range's rows — `(o1-o0)·P` f32s, i.e. `full[o0*P..o1*P]` — so
+/// workers splitting one image's GEMM hold disjoint `&mut` slices
+/// (`patches` is shared read-only). The inner product is the
+/// SIMD-dispatched lane-blocked `kernels::dot` (every backend
+/// bit-identical).
+pub fn gemm_rows(
+    l: &LayerTopo,
+    wts: &[f32],
+    bias: &[f32],
+    patches: &[f32],
+    out: &mut [f32],
+    o0: usize,
+    o1: usize,
+) {
     let (_, ho, wo) = l.out_chw;
     let np = ho * wo;
     let r = l.rows;
     let rg = l.rows_per_group();
     let ocg = l.oc / l.groups;
     debug_assert_eq!(wts.len(), l.oc * rg);
-    debug_assert_eq!(out.len(), l.oc * np);
-    for o in 0..l.oc {
+    debug_assert_eq!(out.len(), (o1 - o0) * np);
+    debug_assert!(o0 <= o1 && o1 <= l.oc);
+    for o in o0..o1 {
         let g = o / ocg;
         let wrow = &wts[o * rg..(o + 1) * rg];
         let b = bias[o];
-        let orow = &mut out[o * np..(o + 1) * np];
-        for p in 0..np {
+        let orow = &mut out[(o - o0) * np..(o - o0 + 1) * np];
+        for (p, ov) in orow.iter_mut().enumerate() {
             let col = &patches[p * r + g * rg..p * r + (g + 1) * rg];
-            let mut acc = 0.0f32;
-            for (a, b_) in wrow.iter().zip(col) {
-                acc += a * b_;
-            }
-            orow[p] = acc + b;
+            *ov = kernels::dot(wrow, col) + b;
         }
     }
 }
@@ -168,6 +223,20 @@ mod tests {
         for (a, b) in out.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+        // range-sharded forms tile to exactly the full-range results
+        let np = ho * wo;
+        let mut patches2 = vec![0.0f32; np * l.rows];
+        let mid = np / 3;
+        let (pa, pb) = patches2.split_at_mut(mid * l.rows);
+        extract_range(&l, &x, pa, 0, mid, |_| {});
+        extract_range(&l, &x, pb, mid, np, |_| {});
+        assert_eq!(patches, patches2, "extract_range tiles != extract");
+        let mut out2 = vec![0.0f32; l.oc * np];
+        let omid = l.oc / 2;
+        let (oa, ob) = out2.split_at_mut(omid * np);
+        gemm_rows(&l, &wts, &bias, &patches2, oa, 0, omid);
+        gemm_rows(&l, &wts, &bias, &patches2, ob, omid, l.oc);
+        assert_eq!(out, out2, "gemm_rows tiles != gemm");
     }
 
     #[test]
@@ -206,5 +275,37 @@ mod tests {
             count += 1;
         });
         assert_eq!(count, 16);
+    }
+
+    #[test]
+    fn interior_fast_path_matches_bounds_checked_gather() {
+        // pad large enough that border pixels exercise the slow path and
+        // central pixels the contiguous-copy path, on an asymmetric image
+        let l = layer(3, 2, 3, 1, 2, 1, 6, 9);
+        let (ic, h, w) = l.in_chw;
+        let x: Vec<f32> = (0..ic * h * w).map(|i| (i as f32) * 0.37 - 11.0).collect();
+        let (_, ho, wo) = l.out_chw;
+        let mut got = vec![0.0f32; ho * wo * l.rows];
+        extract(&l, &x, &mut got);
+        // reference: force the bounds-checked path by re-deriving each
+        // element independently
+        for pix in 0..ho * wo {
+            let (oy, ox) = (pix / wo, pix % wo);
+            for c in 0..ic {
+                for ky in 0..l.k {
+                    for kx in 0..l.k {
+                        let yy = (oy * l.stride + ky) as isize - l.pad as isize;
+                        let xx = (ox * l.stride + kx) as isize - l.pad as isize;
+                        let want = if yy < 0 || yy >= h as isize || xx < 0 || xx >= w as isize {
+                            0.0
+                        } else {
+                            x[c * h * w + yy as usize * w + xx as usize]
+                        };
+                        let r = c * l.k * l.k + ky * l.k + kx;
+                        assert_eq!(got[pix * l.rows + r], want, "pix {pix} row {r}");
+                    }
+                }
+            }
+        }
     }
 }

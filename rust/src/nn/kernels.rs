@@ -1,0 +1,962 @@
+//! Runtime-dispatched SIMD microkernels for the serving hot loops.
+//!
+//! Three loop families live here: the border quantize-dequantize column
+//! pass (`quant/border.rs`), the im2col interior-row gather, and the
+//! grouped-GEMM dot product (`nn/im2col.rs`). Each has an AVX2 path
+//! (x86_64), a NEON path (aarch64), and a scalar reference that is
+//! always compiled; `active()` picks the best available backend at
+//! first use (override with `AQUANT_KERNELS=scalar|avx2|neon|auto`).
+//!
+//! **Bit-identity contract.** Every backend produces bit-identical f32
+//! results for the same inputs — serving bit-identity is the invariant
+//! every prior PR preserved, and the differential property suite
+//! (`rust/tests/kernel_props.rs`) pins it. Three rules make that hold:
+//!
+//! 1. min/max use *compare-select* semantics — `sel_max(a,b) = if a > b
+//!    {a} else {b}` — exactly what `_mm256_max_ps`/`_mm256_min_ps`
+//!    compute, and what NEON reproduces via `vbslq_f32(vcgtq_f32(a,b),
+//!    a, b)` (NOT `vmaxq_f32`, whose NaN/±0 handling differs). For
+//!    non-NaN inputs this matches the old `f32::clamp`; a NaN input now
+//!    clamps to the lower bound instead of propagating, which is
+//!    acceptable for this pipeline (NaN activations were already
+//!    undefined behavior upstream).
+//! 2. no FMA anywhere — separate mul/add keep the double rounding the
+//!    scalar code performs, so every element-wise op (mul, add, div,
+//!    ceil) is IEEE correctly rounded and therefore identical per lane
+//!    across backends.
+//! 3. reductions (`dot`) use a lane-blocked accumulator with a fixed
+//!    halving fold that matches the SIMD horizontal-reduce tree: LANES
+//!    partial sums, fold by halves to 2, final `acc[0] + acc[1]`,
+//!    sequential tail. The scalar fallback uses the same tree, so a
+//!    scalar machine and an AVX2 machine of the same LANES width agree
+//!    bitwise with each other and with the vector path.
+
+use std::sync::OnceLock;
+
+/// Accumulator block width for `dot` (8 f32 = one AVX2 register on
+/// x86_64, 4 = one NEON register elsewhere). The scalar fallback uses
+/// the same width so its reduction tree matches the vector path.
+pub const LANES: usize = if cfg!(target_arch = "x86_64") { 8 } else { 4 };
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Whether this backend can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Best backend the current CPU supports.
+    pub fn best() -> Backend {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Backend::Neon;
+        }
+        Backend::Scalar
+    }
+
+    /// All variants, for differential tests to iterate (filter with
+    /// `available()`).
+    pub fn all() -> [Backend; 3] {
+        [Backend::Scalar, Backend::Avx2, Backend::Neon]
+    }
+}
+
+static ACTIVE: OnceLock<Backend> = OnceLock::new();
+
+/// The process-wide backend, resolved once: `AQUANT_KERNELS` env if set
+/// and available (with a stderr warning on fallback), else `best()`.
+pub fn active() -> Backend {
+    *ACTIVE.get_or_init(|| {
+        let req = std::env::var("AQUANT_KERNELS").unwrap_or_default();
+        let pick = match req.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => None,
+            "scalar" => Some(Backend::Scalar),
+            "avx2" => Some(Backend::Avx2),
+            "neon" => Some(Backend::Neon),
+            other => {
+                eprintln!("aquant: unknown AQUANT_KERNELS={other:?}; using auto");
+                None
+            }
+        };
+        match pick {
+            Some(b) if b.available() => b,
+            Some(b) => {
+                let best = Backend::best();
+                eprintln!(
+                    "aquant: AQUANT_KERNELS={} unavailable on this CPU; using {}",
+                    b.name(),
+                    best.name()
+                );
+                best
+            }
+            None => Backend::best(),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shared element-wise helpers (the scalar *definition* of every op; the
+// vector paths are transcriptions of exactly these expression trees).
+// ---------------------------------------------------------------------------
+
+/// `_mm256_max_ps` semantics: second operand wins on NaN or equality.
+#[inline(always)]
+fn sel_max(a: f32, b: f32) -> f32 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+/// `_mm256_min_ps` semantics: second operand wins on NaN or equality.
+#[inline(always)]
+fn sel_min(a: f32, b: f32) -> f32 {
+    if a < b {
+        a
+    } else {
+        b
+    }
+}
+
+/// Fast `sigmoid(2.5u) − 0.5 = 0.5·tanh(1.25u)` (clamped 7th-order
+/// Lambert rational; max abs error vs the exact offset < 2e-3). The op
+/// order here is the bit-identity contract — every backend evaluates
+/// this exact expression tree, term by term.
+#[inline(always)]
+pub fn fast_offset(u: f32) -> f32 {
+    let x = sel_min(sel_max(1.25 * u, -4.0), 4.0);
+    let x2 = x * x;
+    let p = x * (10395.0 + x2 * (1260.0 + x2 * 21.0));
+    let q = 10395.0 + x2 * (4725.0 + x2 * (210.0 + x2));
+    0.5 * (p / q)
+}
+
+/// Quantize-dequantize one normalized activation against its border.
+#[inline(always)]
+fn quantize(xs: f32, border: f32, s: f32, qmin: f32, qmax: f32) -> f32 {
+    s * sel_min(sel_max((xs - border).ceil(), qmin), qmax)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference backend
+// ---------------------------------------------------------------------------
+
+pub(crate) mod scalar {
+    use super::*;
+
+    pub fn nearest_col(col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
+        for v in col.iter_mut() {
+            *v = quantize(*v * inv_s, 0.5, s, qmin, qmax);
+        }
+    }
+
+    pub fn quant_col_lin(
+        col: &mut [f32],
+        b0: &[f32],
+        b1: &[f32],
+        s: f32,
+        inv_s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        for (r, v) in col.iter_mut().enumerate() {
+            let xs = *v * inv_s;
+            let u = b1[r] * xs + b0[r];
+            *v = quantize(xs, 0.5 + fast_offset(u), s, qmin, qmax);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn quant_col_quad(
+        col: &mut [f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        s: f32,
+        inv_s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        for (r, v) in col.iter_mut().enumerate() {
+            let xs = *v * inv_s;
+            let u = (b2[r] * xs + b1[r]) * xs + b0[r];
+            *v = quantize(xs, 0.5 + fast_offset(u), s, qmin, qmax);
+        }
+    }
+
+    pub fn borders_col_lin(xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
+        for r in 0..xs.len() {
+            let u = b1[r] * xs[r] + b0[r];
+            out[r] = 0.5 + fast_offset(u);
+        }
+    }
+
+    pub fn borders_col_quad(xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
+        for r in 0..xs.len() {
+            let u = (b2[r] * xs[r] + b1[r]) * xs[r] + b0[r];
+            out[r] = 0.5 + fast_offset(u);
+        }
+    }
+
+    pub fn scale_col(src: &[f32], inv_s: f32, dst: &mut [f32]) {
+        for (d, v) in dst.iter_mut().zip(src) {
+            *d = v * inv_s;
+        }
+    }
+
+    pub fn round_col(col: &mut [f32], xs: &[f32], borders: &[f32], s: f32, qmin: f32, qmax: f32) {
+        for r in 0..col.len() {
+            col[r] = quantize(xs[r], borders[r], s, qmin, qmax);
+        }
+    }
+
+    /// Lane-blocked dot product whose reduction tree matches the SIMD
+    /// horizontal reduce bit for bit (see the module contract).
+    pub fn dot(w: &[f32], x: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), x.len());
+        let n = w.len();
+        let mut acc = [0.0f32; LANES];
+        let blocks = n / LANES * LANES;
+        let mut i = 0;
+        while i < blocks {
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a += w[i + j] * x[i + j];
+            }
+            i += LANES;
+        }
+        let mut width = LANES / 2;
+        while width > 1 {
+            for j in 0..width {
+                acc[j] += acc[j + width];
+            }
+            width /= 2;
+        }
+        let mut sum = acc[0] + acc[1];
+        while i < n {
+            sum += w[i] * x[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    const W: usize = 8;
+
+    /// `fast_offset` on 8 lanes: a literal transcription of the scalar
+    /// expression tree (no FMA; mul/add/div are correctly rounded, so
+    /// each lane matches the scalar result bitwise).
+    #[target_feature(enable = "avx2")]
+    unsafe fn fast_offset_v(u: __m256) -> __m256 {
+        let x = _mm256_min_ps(
+            _mm256_max_ps(_mm256_mul_ps(_mm256_set1_ps(1.25), u), _mm256_set1_ps(-4.0)),
+            _mm256_set1_ps(4.0),
+        );
+        let x2 = _mm256_mul_ps(x, x);
+        let t1 = _mm256_mul_ps(x2, _mm256_set1_ps(21.0));
+        let t2 = _mm256_add_ps(_mm256_set1_ps(1260.0), t1);
+        let t3 = _mm256_mul_ps(x2, t2);
+        let t4 = _mm256_add_ps(_mm256_set1_ps(10395.0), t3);
+        let p = _mm256_mul_ps(x, t4);
+        let i1 = _mm256_add_ps(_mm256_set1_ps(210.0), x2);
+        let i2 = _mm256_mul_ps(x2, i1);
+        let i3 = _mm256_add_ps(_mm256_set1_ps(4725.0), i2);
+        let i4 = _mm256_mul_ps(x2, i3);
+        let q = _mm256_add_ps(_mm256_set1_ps(10395.0), i4);
+        _mm256_mul_ps(_mm256_set1_ps(0.5), _mm256_div_ps(p, q))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn quantize_v(xs: __m256, border: __m256, s: __m256, qmin: __m256, qmax: __m256) -> __m256 {
+        let q = _mm256_ceil_ps(_mm256_sub_ps(xs, border));
+        _mm256_mul_ps(s, _mm256_min_ps(_mm256_max_ps(q, qmin), qmax))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nearest_col(col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
+        let (sv, iv) = (_mm256_set1_ps(s), _mm256_set1_ps(inv_s));
+        let (lo, hi) = (_mm256_set1_ps(qmin), _mm256_set1_ps(qmax));
+        let half = _mm256_set1_ps(0.5);
+        let n = col.len();
+        let blocks = n / W * W;
+        let p = col.as_mut_ptr();
+        let mut i = 0;
+        while i < blocks {
+            let xs = _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), iv);
+            _mm256_storeu_ps(p.add(i), quantize_v(xs, half, sv, lo, hi));
+            i += W;
+        }
+        scalar::nearest_col(&mut col[blocks..], s, inv_s, qmin, qmax);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quant_col_lin(
+        col: &mut [f32],
+        b0: &[f32],
+        b1: &[f32],
+        s: f32,
+        inv_s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        let (sv, iv) = (_mm256_set1_ps(s), _mm256_set1_ps(inv_s));
+        let (lo, hi) = (_mm256_set1_ps(qmin), _mm256_set1_ps(qmax));
+        let half = _mm256_set1_ps(0.5);
+        let n = col.len();
+        let blocks = n / W * W;
+        let p = col.as_mut_ptr();
+        let mut i = 0;
+        while i < blocks {
+            let xs = _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), iv);
+            let u = _mm256_add_ps(
+                _mm256_mul_ps(_mm256_loadu_ps(b1.as_ptr().add(i)), xs),
+                _mm256_loadu_ps(b0.as_ptr().add(i)),
+            );
+            let border = _mm256_add_ps(half, fast_offset_v(u));
+            _mm256_storeu_ps(p.add(i), quantize_v(xs, border, sv, lo, hi));
+            i += W;
+        }
+        scalar::quant_col_lin(&mut col[blocks..], &b0[blocks..], &b1[blocks..], s, inv_s, qmin, qmax);
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn quant_col_quad(
+        col: &mut [f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        s: f32,
+        inv_s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        let (sv, iv) = (_mm256_set1_ps(s), _mm256_set1_ps(inv_s));
+        let (lo, hi) = (_mm256_set1_ps(qmin), _mm256_set1_ps(qmax));
+        let half = _mm256_set1_ps(0.5);
+        let n = col.len();
+        let blocks = n / W * W;
+        let p = col.as_mut_ptr();
+        let mut i = 0;
+        while i < blocks {
+            let xs = _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), iv);
+            let t = _mm256_add_ps(
+                _mm256_mul_ps(_mm256_loadu_ps(b2.as_ptr().add(i)), xs),
+                _mm256_loadu_ps(b1.as_ptr().add(i)),
+            );
+            let u = _mm256_add_ps(_mm256_mul_ps(t, xs), _mm256_loadu_ps(b0.as_ptr().add(i)));
+            let border = _mm256_add_ps(half, fast_offset_v(u));
+            _mm256_storeu_ps(p.add(i), quantize_v(xs, border, sv, lo, hi));
+            i += W;
+        }
+        scalar::quant_col_quad(
+            &mut col[blocks..],
+            &b0[blocks..],
+            &b1[blocks..],
+            &b2[blocks..],
+            s,
+            inv_s,
+            qmin,
+            qmax,
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn borders_col_lin(xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
+        let half = _mm256_set1_ps(0.5);
+        let n = xs.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let u = _mm256_add_ps(
+                _mm256_mul_ps(_mm256_loadu_ps(b1.as_ptr().add(i)), x),
+                _mm256_loadu_ps(b0.as_ptr().add(i)),
+            );
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(half, fast_offset_v(u)));
+            i += W;
+        }
+        scalar::borders_col_lin(&xs[blocks..], &b0[blocks..], &b1[blocks..], &mut out[blocks..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn borders_col_quad(xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
+        let half = _mm256_set1_ps(0.5);
+        let n = xs.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let t = _mm256_add_ps(
+                _mm256_mul_ps(_mm256_loadu_ps(b2.as_ptr().add(i)), x),
+                _mm256_loadu_ps(b1.as_ptr().add(i)),
+            );
+            let u = _mm256_add_ps(_mm256_mul_ps(t, x), _mm256_loadu_ps(b0.as_ptr().add(i)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(half, fast_offset_v(u)));
+            i += W;
+        }
+        scalar::borders_col_quad(
+            &xs[blocks..],
+            &b0[blocks..],
+            &b1[blocks..],
+            &b2[blocks..],
+            &mut out[blocks..],
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_col(src: &[f32], inv_s: f32, dst: &mut [f32]) {
+        let iv = _mm256_set1_ps(inv_s);
+        let n = src.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            _mm256_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm256_mul_ps(_mm256_loadu_ps(src.as_ptr().add(i)), iv),
+            );
+            i += W;
+        }
+        scalar::scale_col(&src[blocks..], inv_s, &mut dst[blocks..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn round_col(
+        col: &mut [f32],
+        xs: &[f32],
+        borders: &[f32],
+        s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        let sv = _mm256_set1_ps(s);
+        let (lo, hi) = (_mm256_set1_ps(qmin), _mm256_set1_ps(qmax));
+        let n = col.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let b = _mm256_loadu_ps(borders.as_ptr().add(i));
+            _mm256_storeu_ps(col.as_mut_ptr().add(i), quantize_v(x, b, sv, lo, hi));
+            i += W;
+        }
+        scalar::round_col(&mut col[blocks..], &xs[blocks..], &borders[blocks..], s, qmin, qmax);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(w: &[f32], x: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), x.len());
+        let n = w.len();
+        let mut acc = _mm256_setzero_ps();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+            i += W;
+        }
+        // Horizontal reduce tree matched by the scalar fold: [0..4)+[4..8),
+        // then pairs, then lanes 0+1.
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let t = _mm_add_ps(lo, hi);
+        let t2 = _mm_add_ps(t, _mm_movehl_ps(t, t));
+        let t3 = _mm_add_ss(t2, _mm_shuffle_ps::<1>(t2, t2));
+        let mut sum = _mm_cvtss_f32(t3);
+        while i < n {
+            sum += w[i] * x[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::*;
+    use std::arch::aarch64::*;
+
+    const W: usize = 4;
+
+    /// `_mm256_max_ps` semantics on NEON: compare-then-select, NOT
+    /// `vmaxq_f32` (FMAX's NaN/±0 handling differs from SSE/AVX max).
+    #[target_feature(enable = "neon")]
+    unsafe fn sel_max_v(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vbslq_f32(vcgtq_f32(a, b), a, b)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sel_min_v(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vbslq_f32(vcltq_f32(a, b), a, b)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn fast_offset_v(u: float32x4_t) -> float32x4_t {
+        let x = sel_min_v(
+            sel_max_v(vmulq_f32(vdupq_n_f32(1.25), u), vdupq_n_f32(-4.0)),
+            vdupq_n_f32(4.0),
+        );
+        let x2 = vmulq_f32(x, x);
+        let t1 = vmulq_f32(x2, vdupq_n_f32(21.0));
+        let t2 = vaddq_f32(vdupq_n_f32(1260.0), t1);
+        let t3 = vmulq_f32(x2, t2);
+        let t4 = vaddq_f32(vdupq_n_f32(10395.0), t3);
+        let p = vmulq_f32(x, t4);
+        let i1 = vaddq_f32(vdupq_n_f32(210.0), x2);
+        let i2 = vmulq_f32(x2, i1);
+        let i3 = vaddq_f32(vdupq_n_f32(4725.0), i2);
+        let i4 = vmulq_f32(x2, i3);
+        let q = vaddq_f32(vdupq_n_f32(10395.0), i4);
+        vmulq_f32(vdupq_n_f32(0.5), vdivq_f32(p, q))
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn quantize_v(
+        xs: float32x4_t,
+        border: float32x4_t,
+        s: float32x4_t,
+        qmin: float32x4_t,
+        qmax: float32x4_t,
+    ) -> float32x4_t {
+        let q = vrndpq_f32(vsubq_f32(xs, border));
+        vmulq_f32(s, sel_min_v(sel_max_v(q, qmin), qmax))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn nearest_col(col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
+        let (sv, iv) = (vdupq_n_f32(s), vdupq_n_f32(inv_s));
+        let (lo, hi) = (vdupq_n_f32(qmin), vdupq_n_f32(qmax));
+        let half = vdupq_n_f32(0.5);
+        let n = col.len();
+        let blocks = n / W * W;
+        let p = col.as_mut_ptr();
+        let mut i = 0;
+        while i < blocks {
+            let xs = vmulq_f32(vld1q_f32(p.add(i)), iv);
+            vst1q_f32(p.add(i), quantize_v(xs, half, sv, lo, hi));
+            i += W;
+        }
+        scalar::nearest_col(&mut col[blocks..], s, inv_s, qmin, qmax);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn quant_col_lin(
+        col: &mut [f32],
+        b0: &[f32],
+        b1: &[f32],
+        s: f32,
+        inv_s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        let (sv, iv) = (vdupq_n_f32(s), vdupq_n_f32(inv_s));
+        let (lo, hi) = (vdupq_n_f32(qmin), vdupq_n_f32(qmax));
+        let half = vdupq_n_f32(0.5);
+        let n = col.len();
+        let blocks = n / W * W;
+        let p = col.as_mut_ptr();
+        let mut i = 0;
+        while i < blocks {
+            let xs = vmulq_f32(vld1q_f32(p.add(i)), iv);
+            let u = vaddq_f32(
+                vmulq_f32(vld1q_f32(b1.as_ptr().add(i)), xs),
+                vld1q_f32(b0.as_ptr().add(i)),
+            );
+            let border = vaddq_f32(half, fast_offset_v(u));
+            vst1q_f32(p.add(i), quantize_v(xs, border, sv, lo, hi));
+            i += W;
+        }
+        scalar::quant_col_lin(&mut col[blocks..], &b0[blocks..], &b1[blocks..], s, inv_s, qmin, qmax);
+    }
+
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn quant_col_quad(
+        col: &mut [f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        s: f32,
+        inv_s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        let (sv, iv) = (vdupq_n_f32(s), vdupq_n_f32(inv_s));
+        let (lo, hi) = (vdupq_n_f32(qmin), vdupq_n_f32(qmax));
+        let half = vdupq_n_f32(0.5);
+        let n = col.len();
+        let blocks = n / W * W;
+        let p = col.as_mut_ptr();
+        let mut i = 0;
+        while i < blocks {
+            let xs = vmulq_f32(vld1q_f32(p.add(i)), iv);
+            let t = vaddq_f32(
+                vmulq_f32(vld1q_f32(b2.as_ptr().add(i)), xs),
+                vld1q_f32(b1.as_ptr().add(i)),
+            );
+            let u = vaddq_f32(vmulq_f32(t, xs), vld1q_f32(b0.as_ptr().add(i)));
+            let border = vaddq_f32(half, fast_offset_v(u));
+            vst1q_f32(p.add(i), quantize_v(xs, border, sv, lo, hi));
+            i += W;
+        }
+        scalar::quant_col_quad(
+            &mut col[blocks..],
+            &b0[blocks..],
+            &b1[blocks..],
+            &b2[blocks..],
+            s,
+            inv_s,
+            qmin,
+            qmax,
+        );
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn borders_col_lin(xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
+        let half = vdupq_n_f32(0.5);
+        let n = xs.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let x = vld1q_f32(xs.as_ptr().add(i));
+            let u = vaddq_f32(
+                vmulq_f32(vld1q_f32(b1.as_ptr().add(i)), x),
+                vld1q_f32(b0.as_ptr().add(i)),
+            );
+            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(half, fast_offset_v(u)));
+            i += W;
+        }
+        scalar::borders_col_lin(&xs[blocks..], &b0[blocks..], &b1[blocks..], &mut out[blocks..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn borders_col_quad(xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
+        let half = vdupq_n_f32(0.5);
+        let n = xs.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let x = vld1q_f32(xs.as_ptr().add(i));
+            let t = vaddq_f32(
+                vmulq_f32(vld1q_f32(b2.as_ptr().add(i)), x),
+                vld1q_f32(b1.as_ptr().add(i)),
+            );
+            let u = vaddq_f32(vmulq_f32(t, x), vld1q_f32(b0.as_ptr().add(i)));
+            vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(half, fast_offset_v(u)));
+            i += W;
+        }
+        scalar::borders_col_quad(
+            &xs[blocks..],
+            &b0[blocks..],
+            &b1[blocks..],
+            &b2[blocks..],
+            &mut out[blocks..],
+        );
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_col(src: &[f32], inv_s: f32, dst: &mut [f32]) {
+        let iv = vdupq_n_f32(inv_s);
+        let n = src.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            vst1q_f32(dst.as_mut_ptr().add(i), vmulq_f32(vld1q_f32(src.as_ptr().add(i)), iv));
+            i += W;
+        }
+        scalar::scale_col(&src[blocks..], inv_s, &mut dst[blocks..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn round_col(
+        col: &mut [f32],
+        xs: &[f32],
+        borders: &[f32],
+        s: f32,
+        qmin: f32,
+        qmax: f32,
+    ) {
+        let sv = vdupq_n_f32(s);
+        let (lo, hi) = (vdupq_n_f32(qmin), vdupq_n_f32(qmax));
+        let n = col.len();
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let x = vld1q_f32(xs.as_ptr().add(i));
+            let b = vld1q_f32(borders.as_ptr().add(i));
+            vst1q_f32(col.as_mut_ptr().add(i), quantize_v(x, b, sv, lo, hi));
+            i += W;
+        }
+        scalar::round_col(&mut col[blocks..], &xs[blocks..], &borders[blocks..], s, qmin, qmax);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(w: &[f32], x: &[f32]) -> f32 {
+        debug_assert_eq!(w.len(), x.len());
+        let n = w.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let blocks = n / W * W;
+        let mut i = 0;
+        while i < blocks {
+            let wv = vld1q_f32(w.as_ptr().add(i));
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(wv, xv));
+            i += W;
+        }
+        // [a0+a2, a1+a3] then pairwise add — same tree as the scalar fold.
+        let t = vadd_f32(vget_low_f32(acc), vget_high_f32(acc));
+        let t2 = vpadd_f32(t, t);
+        let mut sum = vget_lane_f32::<0>(t2);
+        while i < n {
+            sum += w[i] * x[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatchers. `*_on` takes an explicit backend (differential
+// tests iterate `Backend::all()`); the plain names use `active()`.
+// Safety: the SIMD arms are only sound when the backend's ISA is
+// present — callers must pass a backend for which `available()` holds
+// (debug-asserted here; `active()` guarantees it).
+// ---------------------------------------------------------------------------
+
+pub fn nearest_col_on(b: Backend, col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::nearest_col(col, s, inv_s, qmin, qmax) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::nearest_col(col, s, inv_s, qmin, qmax) },
+        _ => scalar::nearest_col(col, s, inv_s, qmin, qmax),
+    }
+}
+
+pub fn nearest_col(col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
+    nearest_col_on(active(), col, s, inv_s, qmin, qmax)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn quant_col_lin_on(
+    b: Backend,
+    col: &mut [f32],
+    b0: &[f32],
+    b1: &[f32],
+    s: f32,
+    inv_s: f32,
+    qmin: f32,
+    qmax: f32,
+) {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::quant_col_lin(col, b0, b1, s, inv_s, qmin, qmax) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::quant_col_lin(col, b0, b1, s, inv_s, qmin, qmax) },
+        _ => scalar::quant_col_lin(col, b0, b1, s, inv_s, qmin, qmax),
+    }
+}
+
+pub fn quant_col_lin(col: &mut [f32], b0: &[f32], b1: &[f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
+    quant_col_lin_on(active(), col, b0, b1, s, inv_s, qmin, qmax)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn quant_col_quad_on(
+    b: Backend,
+    col: &mut [f32],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    s: f32,
+    inv_s: f32,
+    qmin: f32,
+    qmax: f32,
+) {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::quant_col_quad(col, b0, b1, b2, s, inv_s, qmin, qmax) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::quant_col_quad(col, b0, b1, b2, s, inv_s, qmin, qmax) },
+        _ => scalar::quant_col_quad(col, b0, b1, b2, s, inv_s, qmin, qmax),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn quant_col_quad(
+    col: &mut [f32],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    s: f32,
+    inv_s: f32,
+    qmin: f32,
+    qmax: f32,
+) {
+    quant_col_quad_on(active(), col, b0, b1, b2, s, inv_s, qmin, qmax)
+}
+
+pub fn borders_col_lin_on(b: Backend, xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::borders_col_lin(xs, b0, b1, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::borders_col_lin(xs, b0, b1, out) },
+        _ => scalar::borders_col_lin(xs, b0, b1, out),
+    }
+}
+
+pub fn borders_col_lin(xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
+    borders_col_lin_on(active(), xs, b0, b1, out)
+}
+
+pub fn borders_col_quad_on(b: Backend, xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::borders_col_quad(xs, b0, b1, b2, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::borders_col_quad(xs, b0, b1, b2, out) },
+        _ => scalar::borders_col_quad(xs, b0, b1, b2, out),
+    }
+}
+
+pub fn borders_col_quad(xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
+    borders_col_quad_on(active(), xs, b0, b1, b2, out)
+}
+
+pub fn scale_col_on(b: Backend, src: &[f32], inv_s: f32, dst: &mut [f32]) {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::scale_col(src, inv_s, dst) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::scale_col(src, inv_s, dst) },
+        _ => scalar::scale_col(src, inv_s, dst),
+    }
+}
+
+pub fn scale_col(src: &[f32], inv_s: f32, dst: &mut [f32]) {
+    scale_col_on(active(), src, inv_s, dst)
+}
+
+pub fn round_col_on(
+    b: Backend,
+    col: &mut [f32],
+    xs: &[f32],
+    borders: &[f32],
+    s: f32,
+    qmin: f32,
+    qmax: f32,
+) {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::round_col(col, xs, borders, s, qmin, qmax) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::round_col(col, xs, borders, s, qmin, qmax) },
+        _ => scalar::round_col(col, xs, borders, s, qmin, qmax),
+    }
+}
+
+pub fn round_col(col: &mut [f32], xs: &[f32], borders: &[f32], s: f32, qmin: f32, qmax: f32) {
+    round_col_on(active(), col, xs, borders, s, qmin, qmax)
+}
+
+pub fn dot_on(b: Backend, w: &[f32], x: &[f32]) -> f32 {
+    debug_assert!(b.available());
+    match b {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot(w, x) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot(w, x) },
+        _ => scalar::dot(w, x),
+    }
+}
+
+pub fn dot(w: &[f32], x: &[f32]) -> f32 {
+    dot_on(active(), w, x)
+}
+
+/// Contiguous im2col row gather (the interior fast path copies whole
+/// k-wide rows instead of testing bounds per element). `copy_from_slice`
+/// lowers to memcpy, which every libc vectorizes — no per-ISA variant.
+#[inline(always)]
+pub fn gather_row(dst: &mut [f32], src: &[f32]) {
+    dst.copy_from_slice(src);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_backend_always_available() {
+        assert!(Backend::Scalar.available());
+        assert!(Backend::best().available());
+        assert!(active().available());
+    }
+
+    #[test]
+    fn dot_matches_sequential_for_short_inputs() {
+        // below one lane block the fold is a plain sequential sum
+        let w = [1.5f32, -2.0, 0.25];
+        let x = [2.0f32, 0.5, 4.0];
+        let want = 1.5 * 2.0 + -2.0 * 0.5 + 0.25 * 4.0;
+        assert_eq!(scalar::dot(&w, &x), want);
+    }
+
+    #[test]
+    fn fast_offset_is_odd_and_bounded() {
+        for i in 0..1000 {
+            let u = (i as f32 - 500.0) * 0.02;
+            let v = fast_offset(u);
+            assert!(v.abs() <= 0.5, "offset {v} out of range at u={u}");
+            assert_eq!(v, -fast_offset(-u));
+        }
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod engine;
 pub mod im2col;
+pub mod kernels;
 pub mod loader;
 pub mod pool;
 pub mod registry;

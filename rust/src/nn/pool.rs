@@ -33,14 +33,14 @@
 //! order workers start them in — the fair scheduler's weighted
 //! interleaving survives all the way to the CPUs.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, ensure, Result};
 
-use super::engine::{Engine, EngineScratch, ScratchDims};
+use super::engine::{Engine, EngineScratch, IntraOp, ScratchDims};
 use super::registry::ModelRegistry;
 
 /// Completion callback for one submitted batch: predicted classes in
@@ -86,6 +86,176 @@ impl BatchState {
     }
 }
 
+/// Intra-image parallelism configuration for a pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntraCfg {
+    /// Chunks a big conv layer's gather/GEMM phases split into.
+    /// 0 = auto (one chunk per worker); 1 effectively disables sharding.
+    pub split: usize,
+    /// Minimum patch-buffer size (P·R f32 elements) before a layer is
+    /// sharded — below this the fan-out costs more than it buys.
+    pub min_elems: usize,
+}
+
+/// Default work threshold for intra-image sharding (P·R elements).
+pub const INTRA_MIN_ELEMS: usize = 32 * 1024;
+
+impl Default for IntraCfg {
+    fn default() -> Self {
+        IntraCfg {
+            split: 0,
+            min_elems: INTRA_MIN_ELEMS,
+        }
+    }
+}
+
+/// Handle pool workers carry (via their [`EngineScratch`]) for
+/// publishing intra-image helper jobs back onto the shared job channel.
+#[derive(Debug, Clone)]
+pub(crate) struct IntraCtx {
+    tx: Sender<Job>,
+    /// Chunk count per parallel phase (resolved: never 0).
+    pub(crate) split: usize,
+    /// Work threshold (P·R elements) below which layers stay serial.
+    pub(crate) min_elems: usize,
+}
+
+impl IntraCtx {
+    /// Publish a task for `chunks` chunks: `chunks - 1` helper jobs go
+    /// onto the channel (idle workers steal them; busy pools simply
+    /// leave them for the submitter), and the returned task is what the
+    /// submitter drives to completion via `execute` + [`IntraWait`].
+    pub(crate) fn spawn(&self, op: IntraOp, chunks: usize) -> Arc<IntraTask> {
+        let task = Arc::new(IntraTask {
+            op,
+            chunks,
+            cursor: AtomicUsize::new(0),
+            completed: Mutex::new(0),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for _ in 1..chunks {
+            // A closed channel (pool dropping) just means no helpers;
+            // the submitter still runs every chunk itself.
+            if self.tx.send(Job::Intra(task.clone())).is_err() {
+                break;
+            }
+        }
+        task
+    }
+}
+
+/// One intra-image parallel phase: a chunked op plus claim/complete
+/// bookkeeping. The claim cursor only moves forward, so the submitter
+/// and any number of helpers (even ones arriving after the phase ended)
+/// coordinate without ever blocking each other: late helpers see an
+/// exhausted cursor and return without touching the op.
+pub(crate) struct IntraTask {
+    op: IntraOp,
+    chunks: usize,
+    /// Next unclaimed chunk index (monotonic; >= chunks means done).
+    cursor: AtomicUsize,
+    /// Chunks fully executed (guarded for the completion condvar).
+    completed: Mutex<usize>,
+    cv: Condvar,
+    /// Set when any executor panicked mid-chunk (its output range is
+    /// garbage, so the submitter must fail the image).
+    panicked: AtomicBool,
+}
+
+impl IntraTask {
+    /// Claim and run chunks until none remain. Both the submitter and
+    /// helpers call this; `quant` is the executor's own border scratch.
+    /// A panicking chunk still counts as completed (via the drop guard)
+    /// and flags the task, so the submitter can never deadlock on it.
+    pub(crate) fn execute(&self, quant: &mut Vec<f32>) {
+        loop {
+            let ci = self.cursor.fetch_add(1, Ordering::AcqRel);
+            if ci >= self.chunks {
+                return;
+            }
+            let guard = ChunkGuard { task: self };
+            self.op.run_chunk(ci, self.chunks, quant);
+            drop(guard);
+        }
+    }
+
+    /// Quiesce: stop further claims and wait until every chunk that WAS
+    /// claimed has completed. Returns whether any executor panicked.
+    /// After this returns, no helper will ever dereference the op's
+    /// pointers again (unclaimed chunks are abandoned, which only
+    /// happens when the submitter is already failing the image).
+    fn finish(&self) -> bool {
+        let claimed = self.cursor.swap(self.chunks, Ordering::AcqRel).min(self.chunks);
+        let mut done = self.completed.lock().unwrap();
+        while *done < claimed {
+            done = self.cv.wait(done).unwrap();
+        }
+        self.panicked.load(Ordering::Acquire)
+    }
+}
+
+/// Marks a claimed chunk completed even if `run_chunk` unwinds, so
+/// `finish` never waits forever; a panicking executor also poisons the
+/// task.
+struct ChunkGuard<'a> {
+    task: &'a IntraTask,
+}
+
+impl Drop for ChunkGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.task.panicked.store(true, Ordering::Release);
+        }
+        let mut done = self.task.completed.lock().unwrap();
+        *done += 1;
+        self.task.cv.notify_all();
+    }
+}
+
+/// Submitter-side guard around a phase: guarantees `finish` runs even
+/// when the submitting thread itself unwinds mid-phase (helpers must be
+/// quiesced before the buffers behind the op's pointers are reused).
+pub(crate) struct IntraWait<'a> {
+    task: &'a IntraTask,
+    finished: bool,
+}
+
+impl<'a> IntraWait<'a> {
+    pub(crate) fn new(task: &'a IntraTask) -> Self {
+        IntraWait {
+            task,
+            finished: false,
+        }
+    }
+
+    /// Normal-path completion; returns whether any executor panicked.
+    pub(crate) fn finish(mut self) -> bool {
+        self.finished = true;
+        self.task.finish()
+    }
+}
+
+impl Drop for IntraWait<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.task.finish();
+        }
+    }
+}
+
+/// A unit of work on the shared channel.
+enum Job {
+    /// A contiguous image range of a batch.
+    Shard(Shard),
+    /// Helper work for one image's current conv phase.
+    Intra(Arc<IntraTask>),
+    /// Shutdown sentinel: workers hold `IntraCtx` sender clones, so the
+    /// channel never disconnects by itself — Drop sends one `Exit` per
+    /// worker instead (FIFO: queued shards drain first).
+    Exit,
+}
+
 /// One contiguous shard of a batch, dispatched to a single worker.
 struct Shard {
     /// The engine this shard runs against (jobs carry their model; the
@@ -106,7 +276,7 @@ struct Shard {
 pub struct InferencePool {
     workers: usize,
     /// Job channel; `None` once shutdown has begun (Drop).
-    tx: Option<Sender<Shard>>,
+    tx: Option<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     /// Images successfully executed, by model id. Ids outside the
     /// accounting range are counted nowhere (reads return 0 for them
@@ -116,6 +286,8 @@ pub struct InferencePool {
 
 impl InferencePool {
     /// Spawn `workers` (min 1) threads, each with its own scratch.
+    /// Intra-image sharding is on by default (auto split, default
+    /// threshold); use [`InferencePool::with_intra`] to tune or disable.
     pub fn new(workers: usize) -> Self {
         Self::with_scratch_dims(workers, ScratchDims::default())
     }
@@ -125,26 +297,59 @@ impl InferencePool {
     /// doesn't pay reallocation). Accounting has a single model slot;
     /// use [`InferencePool::for_registry`] for multi-model serving.
     pub fn with_scratch_dims(workers: usize, dims: ScratchDims) -> Self {
-        Self::build(workers, dims, 1)
+        Self::build(workers, dims, 1, Some(IntraCfg::default()))
+    }
+
+    /// Full-control constructor: `intra = None` disables intra-image
+    /// sharding entirely; `Some(cfg)` tunes split and threshold.
+    pub fn with_intra(
+        workers: usize,
+        dims: ScratchDims,
+        n_models: usize,
+        intra: Option<IntraCfg>,
+    ) -> Self {
+        Self::build(workers, dims, n_models, intra)
     }
 
     /// Pool sized for a registry: scratch pre-reserved for the max-dims
     /// union and one executed-images accounting slot per hosted model.
     pub fn for_registry(workers: usize, registry: &ModelRegistry) -> Self {
-        Self::build(workers, registry.scratch_dims(), registry.len())
+        Self::build(workers, registry.scratch_dims(), registry.len(), Some(IntraCfg::default()))
     }
 
-    fn build(workers: usize, dims: ScratchDims, n_models: usize) -> Self {
+    /// [`InferencePool::for_registry`] with explicit intra-image config
+    /// (the `--intra-split` serving knob lands here).
+    pub fn for_registry_intra(
+        workers: usize,
+        registry: &ModelRegistry,
+        intra: Option<IntraCfg>,
+    ) -> Self {
+        Self::build(workers, registry.scratch_dims(), registry.len(), intra)
+    }
+
+    fn build(workers: usize, dims: ScratchDims, n_models: usize, intra: Option<IntraCfg>) -> Self {
         let workers = workers.max(1);
         let executed: Arc<Vec<AtomicU64>> =
             Arc::new((0..n_models.max(1)).map(|_| AtomicU64::new(0)).collect());
-        let (tx, rx) = channel::<Shard>();
+        let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        // Intra sharding needs at least 2 chunks AND a second worker to
+        // steal them — on a 1-worker pool the submitter would shoulder
+        // every chunk anyway and only pay the bookkeeping.
+        let ctx = intra.and_then(|cfg| {
+            let split = if cfg.split == 0 { workers } else { cfg.split };
+            (workers > 1 && split > 1).then(|| IntraCtx {
+                tx: tx.clone(),
+                split,
+                min_elems: cfg.min_elems,
+            })
+        });
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let rx = rx.clone();
             let executed = executed.clone();
-            handles.push(std::thread::spawn(move || worker_loop(&rx, dims, &executed)));
+            let ctx = ctx.clone();
+            handles.push(std::thread::spawn(move || worker_loop(&rx, dims, &executed, ctx)));
         }
         InferencePool {
             workers,
@@ -207,7 +412,7 @@ impl InferencePool {
         let mut start = 0usize;
         while start < n {
             let end = (start + chunk).min(n);
-            tx.send(Shard {
+            tx.send(Job::Shard(Shard {
                 engine: engine.clone(),
                 model_id,
                 images: images.clone(),
@@ -215,7 +420,7 @@ impl InferencePool {
                 start,
                 end,
                 batch: batch.clone(),
-            })
+            }))
             .map_err(|_| anyhow!("inference pool workers gone"))?;
             start = end;
         }
@@ -261,26 +466,52 @@ impl InferencePool {
 
 impl Drop for InferencePool {
     fn drop(&mut self) {
-        // Closing the channel unblocks every worker's recv with Err
-        // once the queued shards drain, so in-flight batches still
-        // complete (and their `done` callbacks run) before the join.
-        self.tx.take();
+        // Workers hold IntraCtx sender clones, so dropping our Sender
+        // alone would never disconnect the channel — instead send one
+        // Exit sentinel per worker. The channel is FIFO, so queued
+        // shards drain (and their `done` callbacks run) before each
+        // worker meets its Exit and returns.
+        if let Some(tx) = self.tx.take() {
+            for _ in 0..self.workers {
+                let _ = tx.send(Job::Exit);
+            }
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker_loop(rx: &Mutex<Receiver<Shard>>, dims: ScratchDims, executed: &[AtomicU64]) {
+fn worker_loop(
+    rx: &Mutex<Receiver<Job>>,
+    dims: ScratchDims,
+    executed: &[AtomicU64],
+    intra: Option<IntraCtx>,
+) {
     let mut scratch = EngineScratch::with_dims(dims);
+    scratch.intra = intra;
     loop {
         // Hold the lock only for the blocking recv, not while running
         // inference, so idle workers can pick up the next shard.
-        let shard = match rx.lock() {
+        let job = match rx.lock() {
             Ok(guard) => guard.recv(),
             Err(_) => return, // another worker panicked holding the lock
         };
-        let Ok(shard) = shard else { return }; // pool dropped
+        let shard = match job {
+            Err(_) => return, // every sender (incl. worker clones) gone
+            Ok(Job::Exit) => return,
+            Ok(Job::Intra(task)) => {
+                // Helper path: steal chunks of another worker's image.
+                // A panicking chunk poisons the task (the submitter
+                // fails the image); the helper itself stays alive.
+                let quant = &mut scratch.quant;
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    task.execute(quant);
+                }));
+                continue;
+            }
+            Ok(Job::Shard(shard)) => shard,
+        };
         // Contain any engine panic: a dead worker would permanently
         // shrink the pool, so a panicking image becomes a shard error
         // instead. The scratch carries no invariants across calls

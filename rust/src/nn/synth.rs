@@ -252,7 +252,8 @@ pub fn engine_with_random_borders(
         eng.set_act_quant(
             &l.name,
             ActQuant::Border {
-                border: BorderFn::from_params(params, l.k2(), fuse_en, b2_en),
+                border: BorderFn::from_params(params, l.k2(), fuse_en, b2_en)
+                    .expect("synth border table is well-formed by construction"),
                 s: 0.1,
                 qmin: 0.0,
                 qmax: 15.0,

@@ -6,6 +6,14 @@
 //!   Bᴱ = 0.5 + (sigmoid(2.5·u) − 0.5)        (bounded, Appendix B)
 //!   Bᴵ = segment mean of α·Bᴱ over each input channel's k² taps (fusion)
 //!   x̂  = s·clip(⌈xs − B⌉, qmin, qmax)
+//!
+//! The per-column hot loops live in `nn/kernels.rs` (runtime-dispatched
+//! AVX2/NEON with a bit-identical scalar reference); this module owns
+//! the parameter layout, fusion, and the exact-sigmoid reference.
+
+use anyhow::{ensure, Result};
+
+use crate::nn::kernels;
 
 #[inline]
 fn sigmoid(x: f32) -> f32 {
@@ -13,19 +21,14 @@ fn sigmoid(x: f32) -> f32 {
 }
 
 /// Fast `sigmoid(2.5u) − 0.5 = 0.5·tanh(1.25u)` for the inference hot
-/// path. Uses a clamped rational tanh approximation (max abs error vs
-/// the exact offset < 2e-3 — a rounding decision flips only when an
-/// activation sits within that distance of the border; the accuracy
-/// effect is below eval noise, see EXPERIMENTS.md §Perf).
+/// path (clamped rational tanh, max abs error vs the exact offset
+/// < 2e-3 — a rounding decision flips only when an activation sits
+/// within that distance of the border; the accuracy effect is below
+/// eval noise, see EXPERIMENTS.md §Perf). Shared with the SIMD kernels
+/// so `be` agrees with the column paths on every backend.
 #[inline(always)]
 fn fast_offset(u: f32) -> f32 {
-    // tanh(x) via the 7th-order Lambert continued fraction, clamped where
-    // tanh has saturated anyway (|tanh(4)| > 0.9993).
-    let x = (1.25 * u).clamp(-4.0, 4.0);
-    let x2 = x * x;
-    let p = x * (10395.0 + x2 * (1260.0 + x2 * 21.0));
-    let q = 10395.0 + x2 * (4725.0 + x2 * (210.0 + x2));
-    0.5 * (p / q)
+    kernels::fast_offset(u)
 }
 
 /// Border parameters for one layer: rows = i_c·k² im2col rows, columns
@@ -48,18 +51,43 @@ pub struct BorderFn {
 }
 
 impl BorderFn {
-    /// Identity border (nearest rounding): all params zero.
+    /// Identity border (nearest rounding): all params zero. Built
+    /// directly (not via `from_params`) so it stays infallible; the
+    /// shape invariants hold trivially for an all-zero table.
     pub fn nearest(rows: usize, k2: usize) -> Self {
-        let mut b = BorderFn::from_params(vec![0.0; rows * 4], k2, false, false);
-        b.border_en = false;
-        b
+        BorderFn {
+            params: vec![0.0; rows * 4],
+            b0: vec![0.0; rows],
+            b1: vec![0.0; rows],
+            b2: vec![0.0; rows],
+            alpha: vec![0.0; rows],
+            rows,
+            k2: k2.max(1),
+            border_en: false,
+            fuse_en: false,
+            b2_en: false,
+        }
     }
 
-    /// From a learned (R,4) table.
-    pub fn from_params(params: Vec<f32>, k2: usize, fuse_en: bool, b2_en: bool) -> Self {
+    /// From a learned (R,4) table. Rejects malformed tables instead of
+    /// silently truncating: a `params` length not divisible by 4 used to
+    /// yield unequal-length SoA columns (the tail was dropped), and
+    /// `rows % k2 != 0` made the fusion loop skip the tail rows of the
+    /// last partial channel segment.
+    pub fn from_params(params: Vec<f32>, k2: usize, fuse_en: bool, b2_en: bool) -> Result<Self> {
+        ensure!(
+            params.len() % 4 == 0,
+            "border table length {} is not a multiple of 4 (expected (R,4) row-major)",
+            params.len()
+        );
         let rows = params.len() / 4;
+        ensure!(k2 > 0, "border fusion segment k2 must be >= 1");
+        ensure!(
+            rows % k2 == 0,
+            "border table rows {rows} not divisible by k2={k2} (rows must cover whole channel segments)"
+        );
         let col = |i: usize| params.iter().skip(i).step_by(4).copied().collect::<Vec<f32>>();
-        BorderFn {
+        Ok(BorderFn {
             b0: col(0),
             b1: col(1),
             b2: col(2),
@@ -70,7 +98,7 @@ impl BorderFn {
             border_en: true,
             fuse_en,
             b2_en,
-        }
+        })
     }
 
     #[inline]
@@ -115,18 +143,15 @@ impl BorderFn {
             return;
         }
         if self.b2_en {
-            for r in 0..self.rows {
-                let u = (self.b2[r] * xs[r] + self.b1[r]) * xs[r] + self.b0[r];
-                out[r] = 0.5 + fast_offset(u);
-            }
+            kernels::borders_col_quad(xs, &self.b0, &self.b1, &self.b2, out);
         } else {
-            for r in 0..self.rows {
-                let u = self.b1[r] * xs[r] + self.b0[r];
-                out[r] = 0.5 + fast_offset(u);
-            }
+            kernels::borders_col_lin(xs, &self.b0, &self.b1, out);
         }
         if self.fuse_en {
-            // per-channel weighted mean of α·Bᴱ over k² taps (Eq. 9)
+            // per-channel weighted mean of α·Bᴱ over k² taps (Eq. 9).
+            // Segment means are a short sequential reduction per channel;
+            // the construction invariant rows % k2 == 0 guarantees the
+            // segments tile all R rows.
             let k2 = self.k2;
             for seg in 0..self.rows / k2 {
                 let mut acc = 0.0f32;
@@ -142,33 +167,20 @@ impl BorderFn {
 
     /// Quantize-dequantize one im2col column in place. Allocation-free
     /// after the first call (`scratch` is reused); single-pass when no
-    /// fusion is involved — this is the engine's per-column hot loop.
+    /// fusion is involved — this is the engine's per-column hot loop,
+    /// dispatched to the active SIMD backend (`nn/kernels.rs`).
     pub fn quant_column(&self, col: &mut [f32], s: f32, qmin: f32, qmax: f32, scratch: &mut Vec<f32>) {
         let inv_s = 1.0 / s;
         if !self.border_en {
-            for v in col.iter_mut() {
-                *v = s * (*v * inv_s - 0.5).ceil().clamp(qmin, qmax);
-            }
+            kernels::nearest_col(col, s, inv_s, qmin, qmax);
             return;
         }
         if !self.fuse_en {
-            // one fused pass: normalize, border, round, dequantize —
-            // structure-of-arrays parameter layout keeps this loop
-            // auto-vectorizable
+            // one fused pass: normalize, border, round, dequantize
             if self.b2_en {
-                for r in 0..self.rows {
-                    let xs = col[r] * inv_s;
-                    let u = (self.b2[r] * xs + self.b1[r]) * xs + self.b0[r];
-                    let border = 0.5 + fast_offset(u);
-                    col[r] = s * (xs - border).ceil().clamp(qmin, qmax);
-                }
+                kernels::quant_col_quad(col, &self.b0, &self.b1, &self.b2, s, inv_s, qmin, qmax);
             } else {
-                for r in 0..self.rows {
-                    let xs = col[r] * inv_s;
-                    let u = self.b1[r] * xs + self.b0[r];
-                    let border = 0.5 + fast_offset(u);
-                    col[r] = s * (xs - border).ceil().clamp(qmin, qmax);
-                }
+                kernels::quant_col_lin(col, &self.b0, &self.b1, s, inv_s, qmin, qmax);
             }
             return;
         }
@@ -181,13 +193,9 @@ impl BorderFn {
         }
         let (xs, rest) = scratch.split_at_mut(self.rows);
         let borders = &mut rest[..self.rows];
-        for (x, v) in xs.iter_mut().zip(col.iter()) {
-            *x = v * inv_s;
-        }
+        kernels::scale_col(col, inv_s, xs);
         self.borders_column(xs, borders);
-        for r in 0..self.rows {
-            col[r] = s * (xs[r] - borders[r]).ceil().clamp(qmin, qmax);
-        }
+        kernels::round_col(col, xs, borders, s, qmin, qmax);
     }
 }
 
@@ -199,10 +207,24 @@ mod tests {
 
     #[test]
     fn zero_params_is_nearest() {
-        let b = BorderFn::from_params(vec![0.0; 9 * 4], 9, true, true);
+        let b = BorderFn::from_params(vec![0.0; 9 * 4], 9, true, true).unwrap();
         for xs in [-3.0f32, -0.4, 0.0, 0.49, 0.51, 7.3] {
             assert_eq!(b.be(0, xs), 0.5, "xs={xs}");
         }
+    }
+
+    #[test]
+    fn from_params_rejects_ragged_tables() {
+        // length not a multiple of 4: used to silently truncate the SoA
+        // columns (rows = len/4 dropped the tail elements)
+        assert!(BorderFn::from_params(vec![0.0; 9], 1, false, false).is_err());
+        // rows not divisible by k2: the fusion loop used to skip the
+        // tail rows of the last partial segment
+        assert!(BorderFn::from_params(vec![0.0; 10 * 4], 4, true, false).is_err());
+        // k2 = 0 would divide by zero in the fusion mean
+        assert!(BorderFn::from_params(vec![0.0; 4 * 4], 0, false, false).is_err());
+        // well-formed table still accepted
+        assert!(BorderFn::from_params(vec![0.0; 8 * 4], 4, true, true).is_ok());
     }
 
     #[test]
@@ -210,7 +232,7 @@ mod tests {
         prop::check_default("border in (0,1)", |rng| {
             let rows = 9;
             let params = prop::vec_f32(rng, rows * 4, -3.0, 3.0);
-            let b = BorderFn::from_params(params, 9, false, true);
+            let b = BorderFn::from_params(params, 9, false, true).unwrap();
             let xs = rng.range_f32(-10.0, 10.0);
             let v = b.be(rng.below(rows), xs);
             assert!((0.0..=1.0).contains(&v), "border {v}");
@@ -226,7 +248,7 @@ mod tests {
         for r in 0..rows {
             params[r * 4 + 3] = 1.0;
         }
-        let b = BorderFn::from_params(params, 4, true, true);
+        let b = BorderFn::from_params(params, 4, true, true).unwrap();
         let xs = prop::vec_f32(&mut rng, rows, -2.0, 2.0);
         let mut out = vec![0.0; rows];
         b.borders_column(&xs, &mut out);
@@ -251,7 +273,7 @@ mod tests {
         prop::check_default("fast border within 2e-3 of exact", |rng| {
             let rows = 8;
             let params = prop::vec_f32(rng, rows * 4, -2.0, 2.0);
-            let b = BorderFn::from_params(params, 4, false, true);
+            let b = BorderFn::from_params(params, 4, false, true).unwrap();
             let r = rng.below(rows);
             let xs = rng.range_f32(-8.0, 8.0);
             let fast = b.be(r, xs);
@@ -270,13 +292,13 @@ mod tests {
         let mut rng = Rng::new(9);
         let rows = 18;
         let params = prop::vec_f32(&mut rng, rows * 4, -1.0, 1.0);
-        let b = BorderFn::from_params(params, 9, false, true);
+        let b = BorderFn::from_params(params, 9, false, true).unwrap();
         let col0 = prop::vec_f32(&mut rng, rows, -0.5, 3.0);
         let mut fast = col0.clone();
         let mut scratch = Vec::new();
         b.quant_column(&mut fast, 0.2, 0.0, 15.0, &mut scratch);
         // reference: explicit borders_column + round
-        let xs: Vec<f32> = col0.iter().map(|v| v / 0.2).collect();
+        let xs: Vec<f32> = col0.iter().map(|v| v * (1.0 / 0.2)).collect();
         let mut borders = vec![0.0; rows];
         b.borders_column(&xs, &mut borders);
         for r in 0..rows {
@@ -305,7 +327,7 @@ mod tests {
         prop::check_default("border rounding direction", |rng| {
             let rows = 4;
             let params = prop::vec_f32(rng, rows * 4, -1.0, 1.0);
-            let b = BorderFn::from_params(params, 1, false, true);
+            let b = BorderFn::from_params(params, 1, false, true).unwrap();
             let r = rng.below(rows);
             let xs = rng.range_f32(0.0, 6.0);
             let border = b.be(r, xs);

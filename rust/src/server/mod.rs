@@ -131,7 +131,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::{ModelSpec, ServeConfig};
 use crate::nn::engine::Engine;
-use crate::nn::pool::InferencePool;
+use crate::nn::pool::{InferencePool, IntraCfg};
 use crate::nn::registry::ModelRegistry;
 
 pub use metrics::{HistSummary, LatencyHist, Snapshot};
@@ -602,14 +602,29 @@ impl Server {
     /// is drained before returning.
     pub fn run(self) -> Result<()> {
         let workers = self.cfg.resolved_workers();
-        let pool = Arc::new(InferencePool::for_registry(workers, &self.registry));
+        // --intra-split 1 (or "off") disables intra-image sharding; 0
+        // ("auto") lets the pool pick one chunk per worker.
+        let intra = (self.cfg.intra_split != 1).then(|| IntraCfg {
+            split: self.cfg.intra_split,
+            min_elems: crate::nn::pool::INTRA_MIN_ELEMS,
+        });
+        let pool = Arc::new(InferencePool::for_registry_intra(
+            workers,
+            &self.registry,
+            intra,
+        ));
         let addr = self
             .local_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "?".into());
+        let intra_desc = match intra {
+            None => "off".to_string(),
+            Some(c) if c.split == 0 => format!("auto ({workers})"),
+            Some(c) => c.split.to_string(),
+        };
         println!(
-            "aquant-serve: {} model(s) on {addr} ({} workers; defaults: max-batch {}, \
-             wait {}us, queue {})",
+            "aquant-serve: {} model(s) on {addr} ({} workers, intra-split {intra_desc}; \
+             defaults: max-batch {}, wait {}us, queue {})",
             self.registry.len(),
             workers,
             self.cfg.max_batch,

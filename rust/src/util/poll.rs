@@ -126,6 +126,20 @@ mod epoll {
         pub data: u64,
     }
 
+    // Pin the kernel ABI at compile time: packed 12/1 on x86-64,
+    // natural 16/8 everywhere else (incl. aarch64, where the u64 pads
+    // `events` to an 8-byte boundary). A layout drift here corrupts
+    // every readiness token the kernel hands back.
+    const _: () = {
+        let (size, align) = if cfg!(target_arch = "x86_64") {
+            (12, 1)
+        } else {
+            (16, 8)
+        };
+        assert!(std::mem::size_of::<EpollEvent>() == size);
+        assert!(std::mem::align_of::<EpollEvent>() == align);
+    };
+
     extern "C" {
         fn epoll_create1(flags: c_int) -> c_int;
         fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;

@@ -31,7 +31,8 @@ fn fused_and_unfused_border_agree_with_same_params() {
                         l.k2(),
                         true,
                         true,
-                    ),
+                    )
+                    .unwrap(),
                     s: 0.1,
                     qmin: 0.0,
                     qmax: 15.0,

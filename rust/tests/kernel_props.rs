@@ -1,0 +1,196 @@
+//! Differential properties of the SIMD microkernels: every available
+//! backend (AVX2 / NEON) is **bit-identical** to the always-compiled
+//! scalar reference, over random shapes including ragged tails that
+//! exercise the scalar-tail delegation inside each vector loop. This is
+//! the enforcement half of the bit-identity contract documented in
+//! `rust/src/nn/kernels.rs` — serving results must not depend on which
+//! ISA the host happens to have.
+
+use aquant::nn::kernels::{self, Backend, LANES};
+use aquant::util::prop;
+use aquant::util::rng::Rng;
+
+/// Backends the host CPU can actually run (scalar always; AVX2/NEON
+/// when detected). Differential assertions loop over these.
+fn available() -> Vec<Backend> {
+    Backend::all().into_iter().filter(|b| b.available()).collect()
+}
+
+/// Random column length biased toward interesting shapes: lane-exact,
+/// ragged by 1..LANES, shorter than one lane block, and empty.
+fn random_len(rng: &mut Rng) -> usize {
+    match rng.below(4) {
+        0 => LANES * (1 + rng.below(8)),              // exact blocks
+        1 => LANES * (1 + rng.below(8)) + 1 + rng.below(LANES - 1), // ragged
+        2 => rng.below(LANES),                        // tail-only (incl. 0)
+        _ => 1 + rng.below(257),                      // arbitrary
+    }
+}
+
+fn assert_cols_eq(b: Backend, got: &[f32], want: &[f32], what: &str) {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: backend {} differs from scalar at [{i}]: {g:?} ({:#010x}) vs {w:?} ({:#010x}) (len {})",
+            b.name(),
+            g.to_bits(),
+            w.to_bits(),
+            got.len()
+        );
+    }
+}
+
+#[test]
+fn quantize_kernels_bit_identical_across_backends() {
+    let backends = available();
+    prop::check_default("quant col kernels == scalar", |rng| {
+        let n = random_len(rng);
+        let col = prop::vec_f32(rng, n, -6.0, 6.0);
+        let b0 = prop::vec_f32(rng, n, -2.0, 2.0);
+        let b1 = prop::vec_f32(rng, n, -2.0, 2.0);
+        let b2 = prop::vec_f32(rng, n, -2.0, 2.0);
+        let s = rng.range_f32(0.01, 0.5);
+        let inv_s = 1.0 / s;
+        let (qmin, qmax) = (0.0f32, 15.0f32);
+
+        let mut want = col.clone();
+        kernels::nearest_col_on(Backend::Scalar, &mut want, s, inv_s, qmin, qmax);
+        for &b in &backends {
+            let mut got = col.clone();
+            kernels::nearest_col_on(b, &mut got, s, inv_s, qmin, qmax);
+            assert_cols_eq(b, &got, &want, "nearest_col");
+        }
+
+        let mut want = col.clone();
+        kernels::quant_col_lin_on(Backend::Scalar, &mut want, &b0, &b1, s, inv_s, qmin, qmax);
+        for &b in &backends {
+            let mut got = col.clone();
+            kernels::quant_col_lin_on(b, &mut got, &b0, &b1, s, inv_s, qmin, qmax);
+            assert_cols_eq(b, &got, &want, "quant_col_lin");
+        }
+
+        let mut want = col.clone();
+        kernels::quant_col_quad_on(
+            Backend::Scalar,
+            &mut want,
+            &b0,
+            &b1,
+            &b2,
+            s,
+            inv_s,
+            qmin,
+            qmax,
+        );
+        for &b in &backends {
+            let mut got = col.clone();
+            kernels::quant_col_quad_on(b, &mut got, &b0, &b1, &b2, s, inv_s, qmin, qmax);
+            assert_cols_eq(b, &got, &want, "quant_col_quad");
+        }
+    });
+}
+
+#[test]
+fn border_table_kernels_bit_identical_across_backends() {
+    let backends = available();
+    prop::check_default("border/scale/round kernels == scalar", |rng| {
+        let n = random_len(rng);
+        let xs = prop::vec_f32(rng, n, -8.0, 8.0);
+        let b0 = prop::vec_f32(rng, n, -2.0, 2.0);
+        let b1 = prop::vec_f32(rng, n, -2.0, 2.0);
+        let b2 = prop::vec_f32(rng, n, -2.0, 2.0);
+        let s = rng.range_f32(0.01, 0.5);
+        let (qmin, qmax) = (-8.0f32, 7.0f32);
+
+        let mut want = vec![0.0; n];
+        kernels::borders_col_lin_on(Backend::Scalar, &xs, &b0, &b1, &mut want);
+        for &b in &backends {
+            let mut got = vec![0.0; n];
+            kernels::borders_col_lin_on(b, &xs, &b0, &b1, &mut got);
+            assert_cols_eq(b, &got, &want, "borders_col_lin");
+        }
+
+        let mut want = vec![0.0; n];
+        kernels::borders_col_quad_on(Backend::Scalar, &xs, &b0, &b1, &b2, &mut want);
+        let borders = want.clone();
+        for &b in &backends {
+            let mut got = vec![0.0; n];
+            kernels::borders_col_quad_on(b, &xs, &b0, &b1, &b2, &mut got);
+            assert_cols_eq(b, &got, &want, "borders_col_quad");
+        }
+
+        let src = prop::vec_f32(rng, n, -5.0, 5.0);
+        let mut want = vec![0.0; n];
+        kernels::scale_col_on(Backend::Scalar, &src, 1.0 / s, &mut want);
+        for &b in &backends {
+            let mut got = vec![0.0; n];
+            kernels::scale_col_on(b, &src, 1.0 / s, &mut got);
+            assert_cols_eq(b, &got, &want, "scale_col");
+        }
+
+        let mut want = vec![0.0; n];
+        kernels::round_col_on(Backend::Scalar, &mut want, &xs, &borders, s, qmin, qmax);
+        for &b in &backends {
+            let mut got = vec![0.0; n];
+            kernels::round_col_on(b, &mut got, &xs, &borders, s, qmin, qmax);
+            assert_cols_eq(b, &got, &want, "round_col");
+        }
+    });
+}
+
+#[test]
+fn dot_bit_identical_across_backends() {
+    let backends = available();
+    prop::check_default("dot == scalar dot", |rng| {
+        let n = random_len(rng);
+        let w = prop::vec_f32(rng, n, -2.0, 2.0);
+        let x = prop::vec_f32(rng, n, -2.0, 2.0);
+        let want = kernels::dot_on(Backend::Scalar, &w, &x);
+        for &b in &backends {
+            let got = kernels::dot_on(b, &w, &x);
+            assert!(
+                got.to_bits() == want.to_bits(),
+                "dot: backend {} {got:?} vs scalar {want:?} (len {n})",
+                b.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn active_dispatch_matches_explicit_backend() {
+    // The plain entry points must route to exactly the active() backend
+    // (the env-forced path is covered operationally: AQUANT_KERNELS is a
+    // process-wide OnceLock, so within one test process we check the
+    // resolved backend agrees with its explicit `_on` twin).
+    let active = kernels::active();
+    assert!(active.available());
+    let mut rng = Rng::new(7);
+    let n = LANES * 5 + 3;
+    let col = prop::vec_f32(&mut rng, n, -4.0, 4.0);
+    let b0 = prop::vec_f32(&mut rng, n, -1.0, 1.0);
+    let b1 = prop::vec_f32(&mut rng, n, -1.0, 1.0);
+    let (s, inv_s) = (0.1f32, 10.0f32);
+    let mut via_plain = col.clone();
+    kernels::quant_col_lin(&mut via_plain, &b0, &b1, s, inv_s, 0.0, 15.0);
+    let mut via_on = col.clone();
+    kernels::quant_col_lin_on(active, &mut via_on, &b0, &b1, s, inv_s, 0.0, 15.0);
+    assert_eq!(via_plain, via_on);
+}
+
+#[test]
+fn fast_offset_within_2e3_of_exact_sigmoid() {
+    // The paper's fast border approximation: B(x) = sigmoid(2.5u) with
+    // the 0.5 offset folded out. The rational approximation must stay
+    // within 2e-3 of the exact transcendental over a wide input range —
+    // the bound the border-flip analysis in quant/border.rs relies on.
+    for i in 0..=4000 {
+        let u = (i as f32 - 2000.0) * 0.01; // [-20, 20]
+        let exact = 1.0 / (1.0 + (-2.5f64 * u as f64).exp()) - 0.5;
+        let fast = kernels::fast_offset(u) as f64;
+        assert!(
+            (fast - exact).abs() < 2e-3,
+            "fast_offset({u}) = {fast}, exact {exact}, err {}",
+            (fast - exact).abs()
+        );
+    }
+}

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use aquant::nn::engine::{EngineScratch, FusionMode};
-use aquant::nn::pool::InferencePool;
+use aquant::nn::pool::{InferencePool, IntraCfg};
 use aquant::nn::synth;
 use aquant::util::prop;
 
@@ -115,6 +115,69 @@ fn pool_shard_split_never_changes_results() {
                 "workers={workers}"
             );
         }
+    });
+}
+
+#[test]
+fn intra_image_sharding_is_bit_identical() {
+    // Intra-image parallelism forced ON for every conv layer
+    // (min_elems 0): chunked gather/GEMM with helper stealing must be
+    // bit-identical to the sequential engine for every split count —
+    // including the single-image batch it exists to accelerate, where
+    // the whole forward runs through the chunk protocol.
+    prop::check("intra-image sharding invisible", 48, |rng| {
+        let (topo, weights) = synth::random_model(rng);
+        let mut engine = synth::engine_with_random_borders(
+            &topo,
+            &weights,
+            rng,
+            rng.bernoulli(0.5),
+            rng.bernoulli(0.5),
+        );
+        if rng.bernoulli(0.5) {
+            engine.fusion = FusionMode::Unfused;
+        }
+        let engine = Arc::new(engine);
+        let img_elems = engine.img_elems();
+        let n = 1 + rng.below(4);
+        let images = prop::vec_f32(rng, n * img_elems, -1.0, 3.0);
+        let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
+        let want = engine.classify_batch(&refs).unwrap();
+        for (workers, split) in [(2usize, 2usize), (3, 7), (4, 0)] {
+            let pool = InferencePool::with_intra(
+                workers,
+                engine.scratch_dims(),
+                1,
+                Some(IntraCfg { split, min_elems: 0 }),
+            );
+            // run the same batch twice through one pool: chunk claim
+            // interleavings differ per run, results must not
+            for rep in 0..2 {
+                assert_eq!(
+                    pool.classify_batch(&engine, &refs).unwrap(),
+                    want,
+                    "workers={workers} split={split} n={n} rep={rep}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn intra_disabled_pool_matches_sequential() {
+    // `intra = None` must behave exactly like the pre-intra pool.
+    prop::check("intra off == sequential", 32, |rng| {
+        let (topo, weights) = synth::random_model(rng);
+        let engine = Arc::new(synth::engine_with_random_borders(
+            &topo, &weights, rng, true, true,
+        ));
+        let img_elems = engine.img_elems();
+        let n = 1 + rng.below(5);
+        let images = prop::vec_f32(rng, n * img_elems, -1.0, 3.0);
+        let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
+        let want = engine.classify_batch(&refs).unwrap();
+        let pool = InferencePool::with_intra(3, engine.scratch_dims(), 1, None);
+        assert_eq!(pool.classify_batch(&engine, &refs).unwrap(), want);
     });
 }
 

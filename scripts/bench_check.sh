@@ -30,7 +30,11 @@ REGRESSION="${BENCH_REGRESSION_FRAC:-0.2}"
 HIST_DIR="bench_history"
 
 if ! command -v cargo >/dev/null 2>&1; then
-    echo "bench_check: cargo not on PATH; skipping ($OUT not written)" >&2
+    # No Rust toolchain: still grow the perf trajectory with the Python
+    # reference variants (tagged backend "python-ref", so the gates
+    # below never compare them against real cargo-bench entries).
+    echo "bench_check: cargo not on PATH; running python reference fallback" >&2
+    python3 "$(dirname "$0")/bench_ref.py"
     exit 0
 fi
 if [ ! -f Cargo.toml ]; then
@@ -47,6 +51,11 @@ out, floor, regression, hist_dir = (
     sys.argv[1], float(sys.argv[2]), float(sys.argv[3]), sys.argv[4]
 )
 blob = json.load(open(out))
+# History is partitioned by implementation backend: entries written by
+# the python reference fallback (backend "python-ref") must never gate
+# real cargo-bench numbers, and vice versa. Entries predating the key
+# are all rust runs.
+backend = blob.get("backend", "rust")
 
 def ips(blob, workers=4, batch=64):
     for row in blob.get("rows", []):
@@ -84,6 +93,8 @@ prior, mixed_prior, conns_prior, p99_prior = [], [], [], []
 for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
     try:
         entry = json.load(open(path))
+        if entry.get("backend", "rust") != backend:
+            continue            # other-backend trajectory; not comparable
         v = ips(entry)          # KeyError/TypeError on an off-schema row
         m = entry.get(MIXED)
         c = entry.get(CONNS)

@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Python reference fallback for the serving kernel microbenches.
+
+When the container has no Rust toolchain (`scripts/bench_check.sh`
+cannot run `cargo bench`), this script seeds/extends `bench_history/`
+with *reference* entries so the perf trajectory still exists: the same
+border quantize-dequantize column math as `rust/src/nn/kernels.rs`, in
+two variants —
+
+  * ``scalar``: a pure-Python element loop (the floor any compiled
+    implementation must beat), and
+  * ``numpy``: the vectorized equivalent (a realistic portable target).
+
+Each variant appends one history entry tagged ``"backend":
+"python-ref"`` with ``kernel_backend`` naming the variant.
+`bench_check.sh` partitions its regression gates by the ``backend`` key,
+so these entries are never compared against real `cargo bench` numbers
+(and vice versa) — they only document what the hardware does for the
+same math without SIMD.
+"""
+
+import glob
+import json
+import math
+import os
+import sys
+import time
+
+import numpy as np
+
+N = 4096
+REPS_SCALAR = 30
+REPS_NUMPY = 300
+
+
+def fast_offset(u):
+    """The kernels.rs rational approximation of sigmoid(2.5u) - 0.5."""
+    x = min(max(1.25 * u, -4.0), 4.0)
+    x2 = x * x
+    p = x * (10395.0 + x2 * (1260.0 + x2 * 21.0))
+    q = 10395.0 + x2 * (4725.0 + x2 * (210.0 + x2))
+    return 0.5 * (p / q)
+
+
+def quant_col_scalar(col, b0, b1, b2, s, inv_s, qmin, qmax):
+    out = [0.0] * len(col)
+    for r, v in enumerate(col):
+        xs = v * inv_s
+        u = (b2[r] * xs + b1[r]) * xs + b0[r]
+        border = 0.5 + fast_offset(u)
+        out[r] = s * min(max(math.ceil(xs - border), qmin), qmax)
+    return out
+
+
+def quant_col_numpy(col, b0, b1, b2, s, inv_s, qmin, qmax):
+    xs = col * inv_s
+    u = (b2 * xs + b1) * xs + b0
+    x = np.clip(1.25 * u, -4.0, 4.0)
+    x2 = x * x
+    p = x * (10395.0 + x2 * (1260.0 + x2 * 21.0))
+    q = 10395.0 + x2 * (4725.0 + x2 * (210.0 + x2))
+    border = 0.5 + 0.5 * (p / q)
+    return s * np.clip(np.ceil(xs - border), qmin, qmax)
+
+
+def dot_scalar(w, x):
+    acc = 0.0
+    for a, b in zip(w, x):
+        acc += a * b
+    return acc
+
+
+def median_ns(fn, reps):
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        fn()
+        samples.append(time.perf_counter_ns() - t0)
+    samples.sort()
+    return float(samples[len(samples) // 2])
+
+
+def next_slot(hist_dir):
+    taken = []
+    for path in glob.glob(os.path.join(hist_dir, "serve_*.json")):
+        stem = os.path.basename(path)[len("serve_"):-len(".json")]
+        if stem.isdigit():
+            taken.append(int(stem))
+    return max(taken) + 1 if taken else 0
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    hist_dir = os.path.join(root, "bench_history")
+
+    rng = np.random.default_rng(42)
+    col = rng.uniform(-4.0, 4.0, N)
+    b0 = rng.uniform(-1.0, 1.0, N)
+    b1 = rng.uniform(-1.0, 1.0, N)
+    b2 = rng.uniform(-1.0, 1.0, N)
+    w = rng.uniform(-1.0, 1.0, N)
+    x = rng.uniform(-1.0, 1.0, N)
+    s, inv_s, qmin, qmax = 0.1, 10.0, 0.0, 15.0
+
+    col_l, b0_l, b1_l, b2_l = col.tolist(), b0.tolist(), b1.tolist(), b2.tolist()
+    w_l, x_l = w.tolist(), x.tolist()
+
+    # the two variants must agree on the math before we time them
+    ref = np.array(quant_col_scalar(col_l, b0_l, b1_l, b2_l, s, inv_s, qmin, qmax))
+    vec = quant_col_numpy(col, b0, b1, b2, s, inv_s, qmin, qmax)
+    if not np.allclose(ref, vec, atol=1e-9):
+        sys.exit("bench_ref: scalar and numpy border variants disagree")
+
+    variants = [
+        (
+            "scalar",
+            median_ns(
+                lambda: quant_col_scalar(col_l, b0_l, b1_l, b2_l, s, inv_s, qmin, qmax),
+                REPS_SCALAR,
+            ),
+            median_ns(lambda: dot_scalar(w_l, x_l), REPS_SCALAR),
+        ),
+        (
+            "numpy",
+            median_ns(
+                lambda: quant_col_numpy(col, b0, b1, b2, s, inv_s, qmin, qmax),
+                REPS_NUMPY,
+            ),
+            median_ns(lambda: np.dot(w, x), REPS_NUMPY),
+        ),
+    ]
+
+    os.makedirs(hist_dir, exist_ok=True)
+    for name, border_ns, dot_ns in variants:
+        gflops = 2.0 * N / max(dot_ns, 1.0)  # flops/ns == GFLOP/s
+        blob = {
+            "bench": "serve_throughput",
+            "backend": "python-ref",
+            "kernel_backend": name,
+            "border_quant_col_ns": round(border_ns, 1),
+            "gemm_gflops": round(gflops, 4),
+        }
+        slot = next_slot(hist_dir)
+        dst = os.path.join(hist_dir, f"serve_{slot:03d}.json")
+        with open(dst, "w") as f:
+            json.dump(blob, f, indent=2)
+            f.write("\n")
+        print(
+            f"bench_ref: {name}: border column {border_ns:.0f}ns, "
+            f"dot {gflops:.3f} GFLOP/s -> {dst}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""First-build triage for environments without a Rust toolchain.
+
+`cargo build` has never run in-container (no cargo on PATH since the
+seed), so this script performs the static consistency checks a compiler
+would do first, catching the class of cross-file drift that accumulates
+in review-only development:
+
+  1. delimiter balance per .rs file ((), [], {}), tokenizing away line
+     comments, nested block comments, strings (incl. raw strings), and
+     char literals (lifetime-aware);
+  2. every `mod foo;` declaration resolves to foo.rs or foo/mod.rs;
+  3. every source file is reachable from lib.rs/main.rs via mod decls
+     (orphan files are listed as warnings, not errors);
+  4. every explicit Cargo.toml target path exists;
+  5. external crates referenced by `use`/`extern crate` are limited to
+     the declared dependency set (std/core/alloc + anyhow + the
+     pjrt-gated xla), so an offline build cannot hit a missing crate;
+  6. `#[test]` fn names are unique within each file.
+
+Exit code 1 if any hard check fails. Run: python3 scripts/static_triage.py
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUST_DIRS = [os.path.join(ROOT, "rust"), os.path.join(ROOT, "examples")]
+ALLOWED_CRATES = {"std", "core", "alloc", "crate", "super", "self", "anyhow", "aquant", "xla"}
+
+errors = []
+warnings = []
+
+
+def strip_tokens(src: str) -> str:
+    """Replace comments/strings/chars with spaces, preserving newlines."""
+    out = []
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            out.append(" " * (j - i))
+            i = j
+        elif c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            out.append("".join(ch if ch == "\n" else " " for ch in src[i:j]))
+            i = j
+        elif c == "r" and re.match(r'r#*"', src[i:]):
+            m = re.match(r'r(#*)"', src[i:])
+            close = '"' + m.group(1)
+            j = src.find(close, i + len(m.group(0)))
+            j = n if j < 0 else j + len(close)
+            out.append("".join(ch if ch == "\n" else " " for ch in src[i:j]))
+            i = j
+        elif c == "b" and nxt == '"' or c == '"':
+            j = i + (2 if c == "b" else 1)
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            out.append("".join(ch if ch == "\n" else " " for ch in src[i:j]))
+            i = j
+        elif c == "'":
+            # char literal ('x', '\n', '\u{..}') vs lifetime ('a, 'static)
+            m = re.match(r"'(\\u\{[0-9a-fA-F_]+\}|\\.|[^\\'])'", src[i:])
+            if m:
+                out.append(" " * len(m.group(0)))
+                i += len(m.group(0))
+            else:
+                out.append(" ")  # lifetime tick
+                i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def check_balance(path: str, src: str):
+    code = strip_tokens(src)
+    stack = []
+    pairs = {")": "(", "]": "[", "}": "{"}
+    for ln, line in enumerate(code.split("\n"), 1):
+        for ch in line:
+            if ch in "([{":
+                stack.append((ch, ln))
+            elif ch in ")]}":
+                if not stack or stack[-1][0] != pairs[ch]:
+                    errors.append(f"{path}:{ln}: unbalanced {ch!r}")
+                    return code
+                stack.pop()
+    if stack:
+        ch, ln = stack[-1]
+        errors.append(f"{path}:{ln}: unclosed {ch!r}")
+    return code
+
+
+def rust_files():
+    for d in RUST_DIRS:
+        for base, _, files in os.walk(d):
+            for f in sorted(files):
+                if f.endswith(".rs"):
+                    yield os.path.join(base, f)
+
+
+def main():
+    reachable = set()
+    stripped = {}
+    for path in rust_files():
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        rel = os.path.relpath(path, ROOT)
+        code = check_balance(rel, src)
+        stripped[rel] = code
+
+        # mod declarations -> files (only for files under rust/src)
+        if rel.startswith("rust/src"):
+            base = os.path.dirname(path)
+            is_root = os.path.basename(path) in ("lib.rs", "main.rs", "mod.rs")
+            for m in re.finditer(r"^\s*(?:pub(?:\([^)]*\))?\s+)?mod\s+(\w+)\s*;", code, re.M):
+                name = m.group(1)
+                here = base if is_root else os.path.join(base, os.path.splitext(os.path.basename(path))[0])
+                cands = [os.path.join(here, name + ".rs"), os.path.join(here, name, "mod.rs")]
+                hit = next((c for c in cands if os.path.exists(c)), None)
+                if hit is None:
+                    errors.append(f"{rel}: `mod {name};` has no file ({' or '.join(os.path.relpath(c, ROOT) for c in cands)})")
+                else:
+                    reachable.add(os.path.relpath(hit, ROOT))
+
+        # external crate allowlist (2018+ uniform paths: a sibling
+        # `mod foo;`/`mod foo {}` in the same file legitimizes `use foo::`)
+        local_mods = set(re.findall(r"\bmod\s+(\w+)\s*[;{]", code))
+        for m in re.finditer(r"^\s*(?:pub(?:\([^)]*\))?\s+)?use\s+([A-Za-z_][A-Za-z0-9_]*)\s*(?:::|;)", code, re.M):
+            if m.group(1) not in ALLOWED_CRATES and m.group(1) not in local_mods:
+                errors.append(f"{rel}: use of undeclared crate/root `{m.group(1)}`")
+        for m in re.finditer(r"^\s*extern\s+crate\s+(\w+)", code, re.M):
+            if m.group(1) not in ALLOWED_CRATES:
+                errors.append(f"{rel}: extern crate `{m.group(1)}` not in dependency set")
+
+        # duplicate #[test] fn names within one file
+        seen = {}
+        for m in re.finditer(r"#\[test\]\s*(?:#\[[^\]]*\]\s*)*fn\s+(\w+)", code):
+            name = m.group(1)
+            if name in seen:
+                errors.append(f"{rel}: duplicate #[test] fn {name}")
+            seen[name] = True
+
+    # orphan files under rust/src (never mod-declared)
+    # lib/main are crate roots; files under rust/src/bin are standalone
+    # [[bin]] targets reached via Cargo.toml, not `mod` declarations
+    roots = {"rust/src/lib.rs", "rust/src/main.rs"}
+    reachable |= {r for r in stripped if r.startswith("rust/src/bin/")}
+    for rel in stripped:
+        if not rel.startswith("rust/src"):
+            continue
+        if rel in roots or os.path.basename(rel) == "mod.rs" and os.path.dirname(rel) == "rust/src":
+            continue
+        if rel not in reachable and rel not in roots:
+            if os.path.basename(rel) not in ("mod.rs",):
+                # mod.rs of a dir is reachable iff the dir's mod decl exists
+                if rel not in reachable:
+                    warnings.append(f"{rel}: not reachable via any `mod` declaration")
+
+    # Cargo.toml target paths
+    cargo = os.path.join(ROOT, "Cargo.toml")
+    with open(cargo, encoding="utf-8") as fh:
+        for ln, line in enumerate(fh, 1):
+            m = re.match(r'\s*path\s*=\s*"([^"]+)"', line)
+            if m and not os.path.exists(os.path.join(ROOT, m.group(1))):
+                errors.append(f"Cargo.toml:{ln}: target path {m.group(1)} does not exist")
+
+    for w in warnings:
+        print(f"triage: WARN {w}")
+    for e in errors:
+        print(f"triage: FAIL {e}")
+    print(f"triage: {len(list(stripped))} files checked, {len(errors)} errors, {len(warnings)} warnings")
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()
