@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use aquant::config::ServeConfig;
+use aquant::nn::im2col;
 use aquant::nn::kernels;
 use aquant::nn::pool::{InferencePool, IntraCfg};
 use aquant::nn::registry::ModelRegistry;
@@ -209,9 +210,17 @@ fn main() {
 
     // Kernel microbenches, tagged with the active SIMD backend: the
     // border quantize-dequantize column pass (ns per 4096-row column)
-    // and the GEMM inner product (GFLOP/s on a 4096-elem dot).
+    // and the packed-panel tiled GEMM (GFLOP/s on a conv-shaped
+    // 196x32x288 problem) in both accuracy modes — exact (the
+    // bit-identity default) and the opt-in relaxed FMA kernels.
     let kernel_backend = kernels::active().name();
-    let (border_quant_col_ns, gemm_gflops) = {
+    let gemm_tile = format!(
+        "mr{}xnr{}xkc{}",
+        kernels::MR,
+        kernels::NR,
+        kernels::KC
+    );
+    let (border_quant_col_ns, gemm_gflops, gemm_gflops_fma) = {
         let n = 4096usize;
         let col: Vec<f32> = (0..n).map(|_| rng.range_f32(-4.0, 4.0)).collect();
         let b0: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
@@ -225,14 +234,62 @@ fn main() {
         });
         let border_ns = r.median.as_secs_f64() * 1e9;
         println!("{}  {:>12.1} ns/column", r.row(), border_ns);
-        let w: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
-        let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
-        let r = bench(&format!("kernels/{kernel_backend}/dot4096"), budget, || {
-            std::hint::black_box(kernels::dot(&w, &x));
-        });
-        let gflops = 2.0 * n as f64 / r.median.as_secs_f64() / 1e9;
-        println!("{}  {:>12.2} GFLOP/s", r.row(), gflops);
-        (border_ns, gflops)
+        // A mid-network conv shape: 32->32 channels, 3x3, 14x14 output
+        // (np = 196 pixels, rows = 288), the tile sizes' home turf.
+        use aquant::nn::topology::LayerTopo;
+        let (ic, oc, k, hw) = (32usize, 32usize, 3usize, 14usize);
+        let l = LayerTopo {
+            name: "gemm-bench".into(),
+            kind: "conv".into(),
+            ic,
+            oc,
+            k,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            relu: false,
+            gap_input: false,
+            rows: ic * k * k,
+            in_chw: (ic, hw, hw),
+            out_chw: (oc, hw, hw),
+        };
+        let np = hw * hw;
+        let wts: Vec<f32> = (0..oc * l.rows).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let bias = vec![0.0f32; oc];
+        let patches: Vec<f32> = (0..np * l.rows).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let pg = im2col::pack_weights(&l, &wts);
+        let mut apanel = vec![0.0f32; np * l.rows];
+        im2col::pack_patches(&l, &patches, &mut apanel);
+        let nt = im2col::n_panels(&l);
+        let flops = 2.0 * (oc * np * l.rows) as f64;
+        let mut out = vec![0.0f32; oc * np];
+        let mut gf = [0.0f64; 2];
+        for (i, fast) in [kernels::FastMode::Exact, kernels::FastMode::Fma]
+            .into_iter()
+            .enumerate()
+        {
+            let r = bench(
+                &format!("kernels/{kernel_backend}/gemm_{gemm_tile}/{}", fast.name()),
+                budget,
+                || {
+                    im2col::gemm_panels_on(
+                        kernels::active(),
+                        fast,
+                        &l,
+                        &pg,
+                        &bias,
+                        &apanel,
+                        &mut out,
+                        0,
+                        nt,
+                    );
+                    std::hint::black_box(&out);
+                },
+            );
+            gf[i] = flops / r.median.as_secs_f64() / 1e9;
+            println!("{}  {:>12.2} GFLOP/s", r.row(), gf[i]);
+        }
+        (border_ns, gf[0], gf[1])
     };
 
     // Single-image p99 is the latency intra-image sharding exists for:
@@ -263,6 +320,7 @@ fn main() {
 
     let mut json = String::from("{\n  \"bench\": \"serve_throughput\",\n  \"backend\": \"rust\",\n");
     json.push_str(&format!("  \"kernel_backend\": \"{kernel_backend}\",\n"));
+    json.push_str(&format!("  \"gemm_tile\": \"{gemm_tile}\",\n"));
     json.push_str("  \"rows\": [\n");
     for (i, (w, b, v, us)) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -277,6 +335,7 @@ fn main() {
          \"p99_service_us\": {p99_service_us:.1},\n  \
          \"border_quant_col_ns\": {border_quant_col_ns:.1},\n  \
          \"gemm_gflops\": {gemm_gflops:.3},\n  \
+         \"gemm_gflops_fma\": {gemm_gflops_fma:.3},\n  \
          \"single_img_serial_us\": {single_img_serial_us:.1},\n  \
          \"single_img_intra_us\": {single_img_intra_us:.1},\n  \
          \"speedup_w4_vs_w1_b64\": {speedup:.3}\n}}\n"

@@ -429,7 +429,8 @@ impl ModelSpec {
 /// `examples/serve.rs`) into the event-loop server: `--workers`,
 /// `--max-batch`, `--batch-wait-us`, `--queue-images`, `--max-conns`,
 /// `--conn-timeout-ms`, `--max-accepts`, `--io-poll`, `--stats-addr`,
-/// `--stats-history`, `--stats-history-every-s`, `--intra-split`.
+/// `--stats-history`, `--stats-history-every-s`, `--intra-split`,
+/// `--fast-kernels`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServeConfig {
     /// Inference worker threads. 0 = auto (cores − 1).
@@ -462,6 +463,10 @@ pub struct ServeConfig {
     /// Force the portable `poll(2)` readiness backend (`--io-poll`)
     /// instead of the platform default (epoll on Linux).
     pub poll_fallback: bool,
+    /// Opt into the relaxed FMA GEMM kernels (`--fast-kernels`, same as
+    /// `AQUANT_FAST=fma`): faster, but results are only allclose to —
+    /// not bit-identical with — the exact default. Off by default.
+    pub fast_kernels: bool,
     /// Bind a read-only stats endpoint here (`--stats-addr`, e.g.
     /// `127.0.0.1:9100`): `GET /stats` returns a JSON snapshot,
     /// `GET /stats?fmt=text` plaintext. None = no endpoint.
@@ -485,6 +490,7 @@ impl Default for ServeConfig {
             conn_timeout_ms: 0,
             max_accepts: None,
             poll_fallback: false,
+            fast_kernels: false,
             stats_addr: None,
             stats_history: None,
             stats_history_every_s: 5,
@@ -530,6 +536,7 @@ impl ServeConfig {
             conn_timeout_ms: args.num_flag("conn-timeout-ms", d.conn_timeout_ms)?,
             max_accepts: opt_count("max-accepts")?,
             poll_fallback: args.bool_flag("io-poll"),
+            fast_kernels: args.bool_flag("fast-kernels"),
             stats_addr: args.str_flag_opt("stats-addr").map(str::to_string),
             stats_history: args.str_flag_opt("stats-history").map(str::to_string),
             stats_history_every_s: args
@@ -749,6 +756,7 @@ mod tests {
         assert_eq!(cfg.max_accepts, None);
         assert_eq!(cfg.conn_timeout_ms, 0);
         assert!(!cfg.poll_fallback);
+        assert!(!cfg.fast_kernels, "fast kernels must be opt-in");
         assert_eq!(cfg.stats_addr, None);
         assert_eq!(cfg.stats_history, None);
         assert_eq!(cfg.stats_history_every_s, 5);
@@ -794,11 +802,13 @@ mod tests {
             "--conn-timeout-ms",
             "250",
             "--io-poll",
+            "--fast-kernels",
         ]))
         .unwrap();
         assert_eq!(cfg.max_accepts, Some(3));
         assert_eq!(cfg.conn_timeout_ms, 250);
         assert!(cfg.poll_fallback);
+        assert!(cfg.fast_kernels);
         // --max-accepts 0 is the bind-only run used by tests
         let cfg = ServeConfig::from_args(&a(&["serve", "--max-accepts", "0"])).unwrap();
         assert_eq!(cfg.max_accepts, Some(0));

@@ -60,6 +60,7 @@ USAGE: aquant <subcommand> [flags]
             [--conn-timeout-ms N] [--max-accepts N] [--io-poll]
             [--stats-every-s N] [--stats-addr H:P]
             [--stats-history PATH] [--stats-history-every-s N]
+            [--fast-kernels]
 
 methods: nearest adaround brecq qdrop aquant aquant-linear aquant-nofusion
 bits:    e.g. W4A4, W2A2, W32A2 (32 = full precision)
@@ -92,7 +93,10 @@ serve knobs: --workers (inference threads shared by all models; auto =
   --batch-wait-us (per-model straggler deadline once a request is
   pending, default 200), --queue-images (per-model queue bound before
   connections backpressure, default 8192), --stats-every-s (periodic
-  stats, default 30, 0 = off)
+  stats, default 30, 0 = off), --fast-kernels (opt into the relaxed
+  FMA GEMM kernels, same as AQUANT_FAST=fma; faster but outside the
+  cross-backend bit-identity contract — results are allclose, not
+  bit-identical; off by default)
 
 connection I/O (one epoll event loop owns every socket — connections
 cost state, not threads): --max-conns (concurrent-connection cap;

@@ -7,6 +7,7 @@
 //!   * the serving example (quantized inference without PJRT).
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -78,6 +79,12 @@ pub struct Engine {
     pub weights: HashMap<String, LayerWeights>,
     pub act_quant: HashMap<String, ActQuant>,
     pub fusion: FusionMode,
+    /// Per-conv-layer B-panel weight packs for the tiled GEMM, built
+    /// once (`ensure_packed` — `ModelRegistry` calls it at registration
+    /// so the pack cost is off the serving path; bare `forward` users
+    /// get it lazily on first use). Packed from the weights as they
+    /// were at that moment — mutate `weights` only before first use.
+    packed: OnceLock<HashMap<String, im2col::PackedGemm>>,
 }
 
 /// Reusable buffers for the allocation-free forward path. One scratch per
@@ -102,6 +109,9 @@ pub struct EngineScratch {
     skip: Vec<f32>,
     /// im2col patch buffer (grow-only; sized to the largest layer seen).
     patches: Vec<f32>,
+    /// Packed-A scratch for the tiled GEMM (grow-only; the patch buffer
+    /// re-laid out in KC strips per conv group by `im2col::pack_patches`).
+    apanel: Vec<f32>,
     /// Border-function scratch (grow-only; 2·R for the fused-border pass).
     /// `pub(crate)` so pool workers can lend it to intra-image helper
     /// chunks without a fresh allocation.
@@ -129,6 +139,7 @@ impl EngineScratch {
             block_in: Vec::with_capacity(dims.acts),
             skip: Vec::with_capacity(dims.acts),
             patches: Vec::with_capacity(dims.patches),
+            apanel: Vec::with_capacity(dims.apanel),
             quant: Vec::with_capacity(dims.quant),
             intra: None,
         }
@@ -138,7 +149,8 @@ impl EngineScratch {
 /// One parallel phase of a conv layer, executed chunk-wise by the
 /// submitting pool worker plus any idle helpers (see
 /// [`crate::nn::pool::IntraTask`]). Chunks are disjoint ranges of
-/// output pixels (gather) or output channels (GEMM), so each executor
+/// output pixels (gather) or B-panel tile strips (GEMM — whole panels,
+/// which map to disjoint output-channel ranges), so each executor
 /// reconstructs a non-aliasing slice from the raw base pointers.
 ///
 /// Safety contract: the pointers reference the submitting worker's
@@ -161,15 +173,21 @@ pub(crate) enum IntraOp {
         patches: *mut f32,
         np: usize,
     },
-    /// Grouped GEMM over output-channel chunks.
+    /// Tiled GEMM over B-panel chunks: chunk c covers panel range
+    /// `[t0, t1)`, i.e. output channels `[panel_channel(t0),
+    /// panel_channel(t1))` — helpers always operate on whole panels, so
+    /// no register tile is ever split across executors.
     Gemm {
         layer: *const LayerTopo,
-        wts: *const f32,
-        wts_len: usize,
+        /// The engine's cached B-panel pack (address stable: it lives in
+        /// the engine's `OnceLock`, and the submitter holds `&Engine`).
+        packed: *const im2col::PackedGemm,
         bias: *const f32,
         bias_len: usize,
-        patches: *const f32,
-        patches_len: usize,
+        /// Packed-A scratch, fully written by the submitter *before*
+        /// spawning, then shared read-only by every chunk executor.
+        apanel: *const f32,
+        apanel_len: usize,
         /// Base of the FULL (oc·P) output buffer; chunk c takes
         /// `[o0·P, o1·P)`.
         out: *mut f32,
@@ -194,6 +212,11 @@ impl IntraOp {
     /// quant hook stays allocation-free on every thread.
     pub(crate) fn run_chunk(&self, ci: usize, chunks: usize, quant: &mut Vec<f32>) {
         match self {
+            // SAFETY: the raw pointers reference the submitting worker's
+            // borrows, which outlive every claimed chunk (the submitter
+            // blocks on IntraWait); chunk ranges are disjoint, so the
+            // `&mut` patch slice reconstructed here never aliases
+            // another executor's.
             IntraOp::Gather {
                 layer,
                 aq,
@@ -213,9 +236,9 @@ impl IntraOp {
                 let r = l.rows;
                 let out = std::slice::from_raw_parts_mut(patches.add(p0 * r), (p1 - p0) * r);
                 let k2 = l.k2();
-                if matches!(aq, ActQuant::None) {
-                    im2col::extract_range(l, x, out, p0, p1, |_col| {});
-                } else if *fused {
+                // `ActQuant::None.apply` is a no-op, so the unfused arm
+                // covers it — only a real quant wants the fused hook.
+                if *fused && !matches!(aq, ActQuant::None) {
                     im2col::extract_range(l, x, out, p0, p1, |col| aq.apply(col, k2, quant));
                 } else {
                     im2col::extract_range(l, x, out, p0, p1, |_col| {});
@@ -224,28 +247,34 @@ impl IntraOp {
                     }
                 }
             },
+            // SAFETY: same pointer contract as Gather; `packed` points
+            // into the engine's OnceLock (stable while the submitter's
+            // `&Engine` borrow lives), `apanel` is read-only here, and
+            // panel ranges map to disjoint output-channel row slices.
             IntraOp::Gemm {
                 layer,
-                wts,
-                wts_len,
+                packed,
                 bias,
                 bias_len,
-                patches,
-                patches_len,
+                apanel,
+                apanel_len,
                 out,
             } => unsafe {
                 let l = &**layer;
-                let wts = std::slice::from_raw_parts(*wts, *wts_len);
+                let pg = &**packed;
                 let bias = std::slice::from_raw_parts(*bias, *bias_len);
-                let patches = std::slice::from_raw_parts(*patches, *patches_len);
+                let ap = std::slice::from_raw_parts(*apanel, *apanel_len);
                 let (_, ho, wo) = l.out_chw;
                 let np = ho * wo;
-                let (o0, o1) = chunk_range(ci, chunks, l.oc);
-                if o0 == o1 {
+                let nt = im2col::n_panels(l);
+                let (t0, t1) = chunk_range(ci, chunks, nt);
+                if t0 == t1 {
                     return;
                 }
+                let o0 = im2col::panel_channel(l, t0);
+                let o1 = im2col::panel_channel(l, t1);
                 let orows = std::slice::from_raw_parts_mut(out.add(o0 * np), (o1 - o0) * np);
-                im2col::gemm_rows(l, wts, bias, patches, orows, o0, o1);
+                im2col::gemm_panels(l, pg, bias, ap, orows, t0, t1);
             },
         }
     }
@@ -260,6 +289,8 @@ pub struct ScratchDims {
     pub acts: usize,
     /// Largest im2col patch buffer (conv: P·R; fc: pooled C).
     pub patches: usize,
+    /// Largest packed-A GEMM scratch (conv layers only: P·R).
+    pub apanel: usize,
     /// Largest border scratch (2·R for the fused segment pass).
     pub quant: usize,
 }
@@ -270,6 +301,7 @@ impl ScratchDims {
         ScratchDims {
             acts: self.acts.max(other.acts),
             patches: self.patches.max(other.patches),
+            apanel: self.apanel.max(other.apanel),
             quant: self.quant.max(other.quant),
         }
     }
@@ -301,7 +333,35 @@ impl Engine {
             weights,
             act_quant: HashMap::new(),
             fusion: FusionMode::Fused,
+            packed: OnceLock::new(),
         }
+    }
+
+    /// Build the per-conv-layer B-panel weight packs (idempotent).
+    /// `ModelRegistry` calls this at registration so the one-time
+    /// O(oc·rg) pack never runs on the serving path; `packed_for` calls
+    /// it lazily for bare `forward` users.
+    pub fn ensure_packed(&self) {
+        self.packed.get_or_init(|| {
+            let mut map = HashMap::new();
+            for l in self.topo.all_layers() {
+                if l.kind != "conv" {
+                    continue;
+                }
+                if let Some(lw) = self.weights.get(&l.name) {
+                    map.insert(l.name.clone(), im2col::pack_weights(l, &lw.w));
+                }
+            }
+            map
+        });
+    }
+
+    fn packed_for(&self, l: &LayerTopo) -> Result<&im2col::PackedGemm> {
+        self.ensure_packed();
+        self.packed
+            .get()
+            .and_then(|m| m.get(&l.name))
+            .ok_or_else(|| anyhow!("engine missing packed weights for {}", l.name))
     }
 
     /// Set one layer's activation quantization.
@@ -325,8 +385,9 @@ impl Engine {
         x: &[f32],
         timing: Option<&mut LayerTiming>,
     ) -> Result<Vec<f32>> {
-        let (mut out, mut patches, mut scratch) = (Vec::new(), Vec::new(), Vec::new());
-        self.run_layer_into(l, x, &mut out, &mut patches, &mut scratch, timing, None)?;
+        let (mut out, mut patches, mut apanel, mut scratch) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        self.run_layer_into(l, x, &mut out, &mut patches, &mut apanel, &mut scratch, timing, None)?;
         Ok(out)
     }
 
@@ -349,6 +410,7 @@ impl Engine {
         x: &[f32],
         out: &mut Vec<f32>,
         patches: &mut Vec<f32>,
+        apanel: &mut Vec<f32>,
         quant_scratch: &mut Vec<f32>,
         timing: Option<&mut LayerTiming>,
         intra: Option<&IntraCtx>,
@@ -423,19 +485,26 @@ impl Engine {
         let t_im2col = t0.map(|t| t.elapsed());
         out.resize(l.oc * np, 0.0);
         let t1 = timing.is_some().then(Instant::now);
+        // Repack the gathered patches into A-panel strip layout (serial
+        // — a pure copy the submitter does once), then tile over the
+        // engine's cached B panels. Bit-identical to the old
+        // dot-per-row `gemm` in the default exact mode.
+        let apanel = grow(apanel, np * l.rows);
+        im2col::pack_patches(l, patches, apanel);
+        let pg = self.packed_for(l)?;
+        let nt = im2col::n_panels(l);
         match intra {
-            None => im2col::gemm(l, &lw.w, &lw.b, patches, out),
+            None => im2col::gemm_panels(l, pg, &lw.b, apanel, out, 0, nt),
             Some(ctx) => {
-                let chunks = ctx.split.min(l.oc);
+                let chunks = ctx.split.min(nt);
                 let task = ctx.spawn(
                     IntraOp::Gemm {
                         layer: l,
-                        wts: lw.w.as_ptr(),
-                        wts_len: lw.w.len(),
+                        packed: pg,
                         bias: lw.b.as_ptr(),
                         bias_len: lw.b.len(),
-                        patches: patches.as_ptr(),
-                        patches_len: patches.len(),
+                        apanel: apanel.as_ptr(),
+                        apanel_len: apanel.len(),
                         out: out.as_mut_ptr(),
                     },
                     chunks,
@@ -487,6 +556,7 @@ impl Engine {
                     &s.h,
                     &mut s.out,
                     &mut s.patches,
+                    &mut s.apanel,
                     &mut s.quant,
                     None,
                     s.intra.as_ref(),
@@ -509,6 +579,7 @@ impl Engine {
                         &s.block_in,
                         &mut s.skip,
                         &mut s.patches,
+                        &mut s.apanel,
                         &mut s.quant,
                         None,
                         s.intra.as_ref(),
@@ -668,6 +739,9 @@ impl Engine {
             d.acts = d.acts.max(ic * ih * iw).max(oc * oh * ow);
             let patches = if l.kind == "fc" { ic } else { oh * ow * l.rows };
             d.patches = d.patches.max(patches);
+            if l.kind != "fc" {
+                d.apanel = d.apanel.max(oh * ow * l.rows);
+            }
             d.quant = d.quant.max(2 * l.rows);
         }
         d

@@ -19,6 +19,25 @@
 //! pixels (every tap in-bounds) skip the per-element bounds checks and
 //! copy whole k-wide rows (`kernels::gather_row`); the GEMM inner
 //! product goes through the SIMD-dispatched `kernels::dot`.
+//!
+//! **Packed-panel GEMM.** The serving path no longer walks `dot` per
+//! output row: weights are packed ONCE per engine (`pack_weights`, off
+//! the serving path — `ModelRegistry` builds it at registration) into
+//! B panels of ≤`NR` output channels, each panel stored as `KC`-element
+//! K strips with the `nr` channel rows contiguous per strip; the im2col
+//! patch buffer is repacked per image (`pack_patches`, a pure copy)
+//! into the same strip layout per conv group; and `gemm_panels` walks
+//! `MR x NR` register tiles over the strips via `kernels::gemm_tile_on`.
+//! Panels never cross a conv-group boundary. In the default exact mode
+//! the tile kernel's reduction order is identical to `kernels::dot`'s,
+//! so the packed path is **bit-identical** to `gemm`/`gemm_rows` (which
+//! remain as the reference the property tests compare against).
+//!
+//! Panel indexing: with `ocg = oc/groups` channels and
+//! `ppg = ceil(ocg/NR)` panels per group, global panel `t` covers
+//! channels `[panel_channel(t), panel_channel(t+1))` — a contiguous,
+//! monotone map, so sharding the GEMM by panel ranges yields disjoint
+//! output-channel row ranges exactly like `gemm_rows` sharding did.
 
 use super::kernels;
 use super::topology::LayerTopo;
@@ -149,6 +168,162 @@ pub fn gemm_rows(
     }
 }
 
+/// Weights packed into B-panel layout for the tiled GEMM (module docs).
+/// Built once per engine at registration; `data` is exactly
+/// `oc * rows_per_group` f32s — the panel covering channels
+/// `[c0, c0+nr)` lives at `data[c0*rg..(c0+nr)*rg]`, laid out as KC
+/// strips with the `nr` channel rows contiguous per strip.
+#[derive(Debug, Clone)]
+pub struct PackedGemm {
+    pub data: Vec<f32>,
+    /// K per group (`rows_per_group` at pack time).
+    pub rg: usize,
+    /// Output channels per group.
+    pub ocg: usize,
+    /// Panels per group (`ceil(ocg / NR)`).
+    pub ppg: usize,
+}
+
+/// Number of B panels for `l` (`groups * ppg`); the panel index space
+/// `[0, n_panels)` is what intra-image GEMM sharding chunks over.
+pub fn n_panels(l: &LayerTopo) -> usize {
+    let ocg = l.oc / l.groups;
+    l.groups * ((ocg + kernels::NR - 1) / kernels::NR)
+}
+
+/// First output channel of panel `t`; `panel_channel(l, n_panels(l))`
+/// is `oc`, so `[panel_channel(t0), panel_channel(t1))` is the channel
+/// range a panel range covers.
+pub fn panel_channel(l: &LayerTopo, t: usize) -> usize {
+    let ocg = l.oc / l.groups;
+    let ppg = (ocg + kernels::NR - 1) / kernels::NR;
+    let (g, j) = (t / ppg, t % ppg);
+    g * ocg + j * kernels::NR
+}
+
+/// Pack conv weights into B panels. O(oc·rg) copies, done once per
+/// engine by `ModelRegistry` registration (or lazily on the first bare
+/// `forward`), so the serving path never pays it.
+pub fn pack_weights(l: &LayerTopo, wts: &[f32]) -> PackedGemm {
+    let rg = l.rows_per_group();
+    let ocg = l.oc / l.groups;
+    let ppg = (ocg + kernels::NR - 1) / kernels::NR;
+    debug_assert_eq!(wts.len(), l.oc * rg);
+    let mut data = vec![0.0f32; l.oc * rg];
+    for g in 0..l.groups {
+        for j in 0..ppg {
+            let c0 = g * ocg + j * kernels::NR;
+            let nr = (ocg - j * kernels::NR).min(kernels::NR);
+            let pbase = c0 * rg;
+            let mut kbase = 0;
+            while kbase < rg {
+                let ls = (rg - kbase).min(kernels::KC);
+                for ni in 0..nr {
+                    let src = &wts[(c0 + ni) * rg + kbase..(c0 + ni) * rg + kbase + ls];
+                    let dst = pbase + nr * kbase + ni * ls;
+                    data[dst..dst + ls].copy_from_slice(src);
+                }
+                kbase += ls;
+            }
+        }
+    }
+    PackedGemm { data, rg, ocg, ppg }
+}
+
+/// Repack the im2col patch buffer into the A-panel scratch the tile
+/// kernel reads: one block per conv group at `g*(np*rg)`, each block KC
+/// strips of `np` row-contiguous segments (patch `p`'s slice of strip
+/// `s` at `np*kbase + p*ls`). A pure copy — done serially by the
+/// submitting worker, then shared read-only by every GEMM executor.
+pub fn pack_patches(l: &LayerTopo, patches: &[f32], apanel: &mut [f32]) {
+    let (_, ho, wo) = l.out_chw;
+    let np = ho * wo;
+    let r = l.rows;
+    let rg = l.rows_per_group();
+    debug_assert_eq!(patches.len(), np * r);
+    debug_assert!(apanel.len() >= np * r);
+    for g in 0..l.groups {
+        let gbase = g * (np * rg);
+        let mut kbase = 0;
+        while kbase < rg {
+            let ls = (rg - kbase).min(kernels::KC);
+            let sbase = gbase + np * kbase;
+            for p in 0..np {
+                let src = &patches[p * r + g * rg + kbase..p * r + g * rg + kbase + ls];
+                apanel[sbase + p * ls..sbase + (p + 1) * ls].copy_from_slice(src);
+            }
+            kbase += ls;
+        }
+    }
+}
+
+/// Tiled GEMM over B panels `[t0, t1)` against the packed-A scratch.
+/// `out` is ONLY this range's channel rows —
+/// `(panel_channel(t1) - panel_channel(t0)) * np` f32s — so panel-range
+/// shards hold disjoint `&mut` slices like `gemm_rows` shards did.
+/// Exact mode is bit-identical to `gemm_rows` over the same range.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_panels_on(
+    backend: kernels::Backend,
+    fast: kernels::FastMode,
+    l: &LayerTopo,
+    pg: &PackedGemm,
+    bias: &[f32],
+    apanel: &[f32],
+    out: &mut [f32],
+    t0: usize,
+    t1: usize,
+) {
+    let (_, ho, wo) = l.out_chw;
+    let np = ho * wo;
+    let rg = pg.rg;
+    let o_base = panel_channel(l, t0);
+    debug_assert_eq!(out.len(), (panel_channel(l, t1) - o_base) * np);
+    debug_assert!(t0 <= t1 && t1 <= n_panels(l));
+    let mut sums = [0.0f32; kernels::MR * kernels::NR];
+    for t in t0..t1 {
+        let (g, j) = (t / pg.ppg, t % pg.ppg);
+        let c0 = g * pg.ocg + j * kernels::NR;
+        let nr = (pg.ocg - j * kernels::NR).min(kernels::NR);
+        let panel = &pg.data[c0 * rg..(c0 + nr) * rg];
+        let ablock = &apanel[g * (np * rg)..(g + 1) * (np * rg)];
+        let mut m0 = 0;
+        while m0 < np {
+            let mr = (np - m0).min(kernels::MR);
+            kernels::gemm_tile_on(backend, fast, ablock, np, m0, mr, panel, nr, rg, &mut sums);
+            for mi in 0..mr {
+                for ni in 0..nr {
+                    out[(c0 + ni - o_base) * np + m0 + mi] = sums[mi * nr + ni] + bias[c0 + ni];
+                }
+            }
+            m0 += mr;
+        }
+    }
+}
+
+/// `gemm_panels_on` with the process-wide backend and fast mode.
+pub fn gemm_panels(
+    l: &LayerTopo,
+    pg: &PackedGemm,
+    bias: &[f32],
+    apanel: &[f32],
+    out: &mut [f32],
+    t0: usize,
+    t1: usize,
+) {
+    gemm_panels_on(
+        kernels::active(),
+        kernels::fast_mode(),
+        l,
+        pg,
+        bias,
+        apanel,
+        out,
+        t0,
+        t1,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +412,49 @@ mod tests {
         gemm_rows(&l, &wts, &bias, &patches2, oa, 0, omid);
         gemm_rows(&l, &wts, &bias, &patches2, ob, omid, l.oc);
         assert_eq!(out, out2, "gemm_rows tiles != gemm");
+        // packed-panel tiled GEMM is bit-identical to the dot-based
+        // reference on every available backend (exact mode)
+        let pg = pack_weights(&l, &wts);
+        let nt = n_panels(&l);
+        assert_eq!(panel_channel(&l, nt), l.oc);
+        let mut ap = vec![0.0f32; np * l.rows];
+        pack_patches(&l, &patches, &mut ap);
+        for b in kernels::Backend::all() {
+            if !b.available() {
+                continue;
+            }
+            let mut out3 = vec![0.0f32; l.oc * np];
+            gemm_panels_on(
+                b,
+                kernels::FastMode::Exact,
+                &l,
+                &pg,
+                &bias,
+                &ap,
+                &mut out3,
+                0,
+                nt,
+            );
+            for (i, (a, c)) in out.iter().zip(&out3).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    c.to_bits(),
+                    "packed GEMM != dot GEMM at {i} on {b:?}"
+                );
+            }
+        }
+        // panel-range shards tile to the same bits as the full range
+        if nt >= 2 {
+            let tmid = nt / 2;
+            let o_mid = panel_channel(&l, tmid);
+            let mut out4 = vec![0.0f32; l.oc * np];
+            let (ta, tb) = out4.split_at_mut(o_mid * np);
+            gemm_panels(&l, &pg, &bias, &ap, ta, 0, tmid);
+            gemm_panels(&l, &pg, &bias, &ap, tb, tmid, nt);
+            for (i, (a, c)) in out.iter().zip(&out4).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "panel shards != full at {i}");
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Runtime-dispatched SIMD microkernels for the serving hot loops.
 //!
-//! Three loop families live here: the border quantize-dequantize column
-//! pass (`quant/border.rs`), the im2col interior-row gather, and the
-//! grouped-GEMM dot product (`nn/im2col.rs`). Each has an AVX2 path
-//! (x86_64), a NEON path (aarch64), and a scalar reference that is
-//! always compiled; `active()` picks the best available backend at
-//! first use (override with `AQUANT_KERNELS=scalar|avx2|neon|auto`).
+//! Four loop families live here: the border quantize-dequantize column
+//! pass (`quant/border.rs`), the im2col interior-row gather, the
+//! grouped-GEMM dot product, and the cache-blocked register-tiled GEMM
+//! microkernel (`gemm_tile_on`, driven by the packed-panel machinery in
+//! `nn/im2col.rs`). Each has an AVX2 path (x86_64), a NEON path
+//! (aarch64), and a scalar reference that is always compiled;
+//! `active()` picks the best available backend at first use (override
+//! with `AQUANT_KERNELS=scalar|avx2|neon|auto`).
 //!
 //! **Bit-identity contract.** Every backend produces bit-identical f32
 //! results for the same inputs — serving bit-identity is the invariant
@@ -24,12 +26,24 @@
 //!    scalar code performs, so every element-wise op (mul, add, div,
 //!    ceil) is IEEE correctly rounded and therefore identical per lane
 //!    across backends.
-//! 3. reductions (`dot`) use a lane-blocked accumulator with a fixed
-//!    halving fold that matches the SIMD horizontal-reduce tree: LANES
-//!    partial sums, fold by halves to 2, final `acc[0] + acc[1]`,
-//!    sequential tail. The scalar fallback uses the same tree, so a
-//!    scalar machine and an AVX2 machine of the same LANES width agree
-//!    bitwise with each other and with the vector path.
+//! 3. reductions (`dot` and the tiled GEMM) use a lane-blocked
+//!    accumulator with a fixed halving fold that matches the SIMD
+//!    horizontal-reduce tree: LANES partial sums, fold by halves to 2,
+//!    final `acc[0] + acc[1]`, sequential tail. The scalar fallback
+//!    uses the same tree, so a scalar machine and an AVX2 machine of
+//!    the same LANES width agree bitwise with each other and with the
+//!    vector path. The tiled GEMM vectorizes along K with one
+//!    LANES-wide accumulator per output element, carried across KC
+//!    strips (KC is a LANES multiple, so strip boundaries never split a
+//!    lane block) — which makes its reduction order *identical* to
+//!    `dot`'s for every tile shape.
+//!
+//! **Opt-in fast mode.** `AQUANT_FAST=fma` (or `--fast-kernels`)
+//! switches the tiled GEMM to FMA accumulation with relaxed reduction
+//! order. That mode is explicitly OUTSIDE the bit-identity contract:
+//! results may differ in low-order bits across backends and tile
+//! shapes (pinned allclose-not-bitwise by `kernel_props.rs`). Default
+//! is exact; the resolved mode is surfaced in `/stats`.
 
 use std::sync::OnceLock;
 
@@ -118,6 +132,86 @@ pub fn active() -> Backend {
             None => Backend::best(),
         }
     })
+}
+
+// ---------------------------------------------------------------------------
+// Tiled-GEMM geometry + the opt-in fast mode
+// ---------------------------------------------------------------------------
+
+/// Register-tile rows (im2col patches) per `gemm_tile_on` call.
+pub const MR: usize = 4;
+/// Register-tile columns (output channels) per B panel.
+pub const NR: usize = 4;
+/// K-strip length: B panels and the packed-A scratch are laid out in
+/// KC-element strips so one `MR x NR` tile's working set (A strip rows +
+/// B panel strip) stays L1-resident while accumulators live in
+/// registers. KC must be a LANES multiple: strip boundaries then land
+/// exactly on `dot`'s lane-block boundaries, which is what keeps the
+/// tiled reduction order bit-identical to `scalar::dot` (only the final
+/// strip may be ragged, and its tail is summed sequentially like dot's).
+pub const KC: usize = 256;
+const _: () = assert!(KC % LANES == 0);
+
+/// GEMM accumulation mode. `Exact` (default) is inside the bit-identity
+/// contract; `Fma` fuses multiply-add and relaxes reduction order for
+/// throughput, and is only allclose to the exact result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FastMode {
+    Exact,
+    Fma,
+}
+
+impl FastMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FastMode::Exact => "exact",
+            FastMode::Fma => "fma",
+        }
+    }
+}
+
+static FAST: OnceLock<FastMode> = OnceLock::new();
+
+/// Downgrade an FMA request the hardware can't honor. NEON and the
+/// scalar `mul_add` path always can; AVX2 without the FMA extension
+/// (pre-Haswell) cannot, so the request falls back to exact with a
+/// warning rather than silently changing meaning per host.
+fn resolve_fast(requested: bool) -> FastMode {
+    if !requested {
+        return FastMode::Exact;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if active() == Backend::Avx2 && !is_x86_feature_detected!("fma") {
+        eprintln!("aquant: fast kernels requested but the CPU lacks FMA; staying exact");
+        return FastMode::Exact;
+    }
+    FastMode::Fma
+}
+
+/// The process-wide GEMM mode, resolved once: `AQUANT_FAST` env
+/// (`fma` opts in; empty/`exact`/`off` stay exact) unless
+/// `request_fast_kernels()` already pinned it.
+pub fn fast_mode() -> FastMode {
+    *FAST.get_or_init(|| {
+        let req = std::env::var("AQUANT_FAST").unwrap_or_default();
+        let want = match req.trim().to_ascii_lowercase().as_str() {
+            "" | "exact" | "off" => false,
+            "fma" => true,
+            other => {
+                eprintln!("aquant: unknown AQUANT_FAST={other:?}; staying exact");
+                false
+            }
+        };
+        resolve_fast(want)
+    })
+}
+
+/// CLI hook for `--fast-kernels`: request FMA before first kernel use.
+/// Returns the mode that actually won (a prior env resolution or a
+/// missing-FMA downgrade may keep it exact).
+pub fn request_fast_kernels() -> FastMode {
+    let _ = FAST.set(resolve_fast(true));
+    fast_mode()
 }
 
 // ---------------------------------------------------------------------------
@@ -265,6 +359,79 @@ pub(crate) mod scalar {
         }
         sum
     }
+
+    /// One `mr x nr` register tile of the packed GEMM (see the layout
+    /// docs in `nn/im2col.rs`). `a` is a packed-A group block of `mc`
+    /// rows in KC strips (strip `s` starts at `mc * s*KC`, row `mi` of a
+    /// strip of length `ls` at `+ mi*ls`); `bp` is one B panel of `nr`
+    /// channel rows in the same strip layout. Each output element keeps
+    /// a LANES-wide accumulator carried across every strip, folded once
+    /// at the end with `dot`'s halving tree, then the ragged tail of
+    /// the final strip is added sequentially — the exact reduction
+    /// order of `scalar::dot`, so the exact mode is bit-identical to
+    /// the dot-per-row reference. `fma` switches accumulation to
+    /// `mul_add` (outside the bit-identity contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_tile(
+        a: &[f32],
+        mc: usize,
+        m0: usize,
+        mr: usize,
+        bp: &[f32],
+        nr: usize,
+        k: usize,
+        fma: bool,
+        sums: &mut [f32],
+    ) {
+        debug_assert!(mr <= MR && nr <= NR && sums.len() >= mr * nr);
+        let mut acc = [[[0.0f32; LANES]; NR]; MR];
+        // Tail bookkeeping for the final strip (vb..ls are the elements
+        // past the last full lane block; summed after the fold).
+        let (mut tab, mut tbb, mut tls, mut tvb) = (0usize, 0usize, 0usize, 0usize);
+        let mut kbase = 0;
+        while kbase < k {
+            let ls = (k - kbase).min(KC);
+            let abase = mc * kbase;
+            let bbase = nr * kbase;
+            let vb = ls / LANES * LANES;
+            let mut t = 0;
+            while t < vb {
+                for (mi, am) in acc.iter_mut().enumerate().take(mr) {
+                    for (ni, an) in am.iter_mut().enumerate().take(nr) {
+                        for (j, aj) in an.iter_mut().enumerate() {
+                            let p = a[abase + (m0 + mi) * ls + t + j];
+                            let q = bp[bbase + ni * ls + t + j];
+                            if fma {
+                                *aj = p.mul_add(q, *aj);
+                            } else {
+                                *aj += p * q;
+                            }
+                        }
+                    }
+                }
+                t += LANES;
+            }
+            (tab, tbb, tls, tvb) = (abase, bbase, ls, vb);
+            kbase += ls;
+        }
+        for mi in 0..mr {
+            for ni in 0..nr {
+                let av = &mut acc[mi][ni];
+                let mut width = LANES / 2;
+                while width > 1 {
+                    for j in 0..width {
+                        av[j] += av[j + width];
+                    }
+                    width /= 2;
+                }
+                let mut sum = av[0] + av[1];
+                for t in tvb..tls {
+                    sum += a[tab + (m0 + mi) * tls + t] * bp[tbb + ni * tls + t];
+                }
+                sums[mi * nr + ni] = sum;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -281,6 +448,7 @@ mod avx2 {
     /// `fast_offset` on 8 lanes: a literal transcription of the scalar
     /// expression tree (no FMA; mul/add/div are correctly rounded, so
     /// each lane matches the scalar result bitwise).
+    // SAFETY: caller must ensure AVX2 is available.
     #[target_feature(enable = "avx2")]
     unsafe fn fast_offset_v(u: __m256) -> __m256 {
         let x = _mm256_min_ps(
@@ -301,12 +469,15 @@ mod avx2 {
         _mm256_mul_ps(_mm256_set1_ps(0.5), _mm256_div_ps(p, q))
     }
 
+    // SAFETY: caller must ensure AVX2 is available.
     #[target_feature(enable = "avx2")]
     unsafe fn quantize_v(xs: __m256, border: __m256, s: __m256, qmin: __m256, qmax: __m256) -> __m256 {
         let q = _mm256_ceil_ps(_mm256_sub_ps(xs, border));
         _mm256_mul_ps(s, _mm256_min_ps(_mm256_max_ps(q, qmin), qmax))
     }
 
+    // SAFETY: caller must ensure AVX2 is available; pointer arithmetic
+    // stays inside `col` (vector blocks then a scalar tail).
     #[target_feature(enable = "avx2")]
     pub unsafe fn nearest_col(col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
         let (sv, iv) = (_mm256_set1_ps(s), _mm256_set1_ps(inv_s));
@@ -324,6 +495,8 @@ mod avx2 {
         scalar::nearest_col(&mut col[blocks..], s, inv_s, qmin, qmax);
     }
 
+    // SAFETY: caller must ensure AVX2 is available and the border slices
+    // are at least `col.len()` long (engine layouts guarantee it).
     #[target_feature(enable = "avx2")]
     pub unsafe fn quant_col_lin(
         col: &mut [f32],
@@ -354,6 +527,8 @@ mod avx2 {
         scalar::quant_col_lin(&mut col[blocks..], &b0[blocks..], &b1[blocks..], s, inv_s, qmin, qmax);
     }
 
+    // SAFETY: caller must ensure AVX2 is available and the border slices
+    // are at least `col.len()` long (engine layouts guarantee it).
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
     pub unsafe fn quant_col_quad(
@@ -396,6 +571,8 @@ mod avx2 {
         );
     }
 
+    // SAFETY: caller must ensure AVX2 is available and all slices are at
+    // least `xs.len()` long.
     #[target_feature(enable = "avx2")]
     pub unsafe fn borders_col_lin(xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
         let half = _mm256_set1_ps(0.5);
@@ -414,6 +591,8 @@ mod avx2 {
         scalar::borders_col_lin(&xs[blocks..], &b0[blocks..], &b1[blocks..], &mut out[blocks..]);
     }
 
+    // SAFETY: caller must ensure AVX2 is available and all slices are at
+    // least `xs.len()` long.
     #[target_feature(enable = "avx2")]
     pub unsafe fn borders_col_quad(xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
         let half = _mm256_set1_ps(0.5);
@@ -439,6 +618,8 @@ mod avx2 {
         );
     }
 
+    // SAFETY: caller must ensure AVX2 is available and `dst` is at least
+    // `src.len()` long.
     #[target_feature(enable = "avx2")]
     pub unsafe fn scale_col(src: &[f32], inv_s: f32, dst: &mut [f32]) {
         let iv = _mm256_set1_ps(inv_s);
@@ -455,6 +636,8 @@ mod avx2 {
         scalar::scale_col(&src[blocks..], inv_s, &mut dst[blocks..]);
     }
 
+    // SAFETY: caller must ensure AVX2 is available and `xs`/`borders`
+    // are at least `col.len()` long.
     #[target_feature(enable = "avx2")]
     pub unsafe fn round_col(
         col: &mut [f32],
@@ -478,6 +661,8 @@ mod avx2 {
         scalar::round_col(&mut col[blocks..], &xs[blocks..], &borders[blocks..], s, qmin, qmax);
     }
 
+    // SAFETY: caller must ensure AVX2 is available; `w`/`x` must be the
+    // same length (debug-asserted).
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot(w: &[f32], x: &[f32]) -> f32 {
         debug_assert_eq!(w.len(), x.len());
@@ -505,6 +690,127 @@ mod avx2 {
         }
         sum
     }
+
+    /// `dot`'s horizontal reduce tree on one register: [0..4)+[4..8),
+    /// pairs, lanes 0+1 — matched by the scalar halving fold.
+    // SAFETY: caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hreduce(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let t = _mm_add_ps(lo, hi);
+        let t2 = _mm_add_ps(t, _mm_movehl_ps(t, t));
+        let t3 = _mm_add_ss(t2, _mm_shuffle_ps::<1>(t2, t2));
+        _mm_cvtss_f32(t3)
+    }
+
+    /// Vector transcription of `scalar::gemm_tile` (exact mode): one
+    /// W-wide accumulator per output element, carried across strips,
+    /// folded with `dot`'s tree, sequential ragged tail — bit-identical
+    /// to the scalar tile and to `dot` per element (W == LANES here).
+    // SAFETY: caller must ensure AVX2 is available; slice indexing stays
+    // bounds-checked.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_tile(
+        a: &[f32],
+        mc: usize,
+        m0: usize,
+        mr: usize,
+        bp: &[f32],
+        nr: usize,
+        k: usize,
+        sums: &mut [f32],
+    ) {
+        debug_assert!(mr <= MR && nr <= NR && sums.len() >= mr * nr);
+        let mut acc = [[_mm256_setzero_ps(); NR]; MR];
+        let (mut tab, mut tbb, mut tls, mut tvb) = (0usize, 0usize, 0usize, 0usize);
+        let mut kbase = 0;
+        while kbase < k {
+            let ls = (k - kbase).min(KC);
+            let abase = mc * kbase;
+            let bbase = nr * kbase;
+            let vb = ls / W * W;
+            let mut t = 0;
+            while t < vb {
+                let mut av = [_mm256_setzero_ps(); MR];
+                for (mi, v) in av.iter_mut().enumerate().take(mr) {
+                    *v = _mm256_loadu_ps(a.as_ptr().add(abase + (m0 + mi) * ls + t));
+                }
+                for ni in 0..nr {
+                    let bv = _mm256_loadu_ps(bp.as_ptr().add(bbase + ni * ls + t));
+                    for (mi, v) in av.iter().enumerate().take(mr) {
+                        acc[mi][ni] = _mm256_add_ps(acc[mi][ni], _mm256_mul_ps(*v, bv));
+                    }
+                }
+                t += W;
+            }
+            (tab, tbb, tls, tvb) = (abase, bbase, ls, vb);
+            kbase += ls;
+        }
+        for mi in 0..mr {
+            for ni in 0..nr {
+                let mut sum = hreduce(acc[mi][ni]);
+                for t in tvb..tls {
+                    sum += a[tab + (m0 + mi) * tls + t] * bp[tbb + ni * tls + t];
+                }
+                sums[mi * nr + ni] = sum;
+            }
+        }
+    }
+
+    /// FMA variant (opt-in `AQUANT_FAST=fma`): fused multiply-add, same
+    /// loop structure but relaxed rounding — allclose, NOT bit-identical.
+    // SAFETY: caller must ensure both AVX2 and FMA are available (the
+    // dispatcher's match guard checks `is_x86_feature_detected!("fma")`).
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_tile_fma(
+        a: &[f32],
+        mc: usize,
+        m0: usize,
+        mr: usize,
+        bp: &[f32],
+        nr: usize,
+        k: usize,
+        sums: &mut [f32],
+    ) {
+        debug_assert!(mr <= MR && nr <= NR && sums.len() >= mr * nr);
+        let mut acc = [[_mm256_setzero_ps(); NR]; MR];
+        let (mut tab, mut tbb, mut tls, mut tvb) = (0usize, 0usize, 0usize, 0usize);
+        let mut kbase = 0;
+        while kbase < k {
+            let ls = (k - kbase).min(KC);
+            let abase = mc * kbase;
+            let bbase = nr * kbase;
+            let vb = ls / W * W;
+            let mut t = 0;
+            while t < vb {
+                let mut av = [_mm256_setzero_ps(); MR];
+                for (mi, v) in av.iter_mut().enumerate().take(mr) {
+                    *v = _mm256_loadu_ps(a.as_ptr().add(abase + (m0 + mi) * ls + t));
+                }
+                for ni in 0..nr {
+                    let bv = _mm256_loadu_ps(bp.as_ptr().add(bbase + ni * ls + t));
+                    for (mi, v) in av.iter().enumerate().take(mr) {
+                        acc[mi][ni] = _mm256_fmadd_ps(*v, bv, acc[mi][ni]);
+                    }
+                }
+                t += W;
+            }
+            (tab, tbb, tls, tvb) = (abase, bbase, ls, vb);
+            kbase += ls;
+        }
+        for mi in 0..mr {
+            for ni in 0..nr {
+                let mut sum = hreduce(acc[mi][ni]);
+                for t in tvb..tls {
+                    sum += a[tab + (m0 + mi) * tls + t] * bp[tbb + ni * tls + t];
+                }
+                sums[mi * nr + ni] = sum;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -520,16 +826,19 @@ mod neon {
 
     /// `_mm256_max_ps` semantics on NEON: compare-then-select, NOT
     /// `vmaxq_f32` (FMAX's NaN/±0 handling differs from SSE/AVX max).
+    // SAFETY: caller must ensure NEON is available.
     #[target_feature(enable = "neon")]
     unsafe fn sel_max_v(a: float32x4_t, b: float32x4_t) -> float32x4_t {
         vbslq_f32(vcgtq_f32(a, b), a, b)
     }
 
+    // SAFETY: caller must ensure NEON is available.
     #[target_feature(enable = "neon")]
     unsafe fn sel_min_v(a: float32x4_t, b: float32x4_t) -> float32x4_t {
         vbslq_f32(vcltq_f32(a, b), a, b)
     }
 
+    // SAFETY: caller must ensure NEON is available.
     #[target_feature(enable = "neon")]
     unsafe fn fast_offset_v(u: float32x4_t) -> float32x4_t {
         let x = sel_min_v(
@@ -550,6 +859,7 @@ mod neon {
         vmulq_f32(vdupq_n_f32(0.5), vdivq_f32(p, q))
     }
 
+    // SAFETY: caller must ensure NEON is available.
     #[target_feature(enable = "neon")]
     unsafe fn quantize_v(
         xs: float32x4_t,
@@ -562,6 +872,8 @@ mod neon {
         vmulq_f32(s, sel_min_v(sel_max_v(q, qmin), qmax))
     }
 
+    // SAFETY: caller must ensure NEON is available; pointer arithmetic
+    // stays inside `col` (vector blocks then a scalar tail).
     #[target_feature(enable = "neon")]
     pub unsafe fn nearest_col(col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
         let (sv, iv) = (vdupq_n_f32(s), vdupq_n_f32(inv_s));
@@ -579,6 +891,8 @@ mod neon {
         scalar::nearest_col(&mut col[blocks..], s, inv_s, qmin, qmax);
     }
 
+    // SAFETY: caller must ensure NEON is available and the border slices
+    // are at least `col.len()` long (engine layouts guarantee it).
     #[target_feature(enable = "neon")]
     pub unsafe fn quant_col_lin(
         col: &mut [f32],
@@ -609,6 +923,8 @@ mod neon {
         scalar::quant_col_lin(&mut col[blocks..], &b0[blocks..], &b1[blocks..], s, inv_s, qmin, qmax);
     }
 
+    // SAFETY: caller must ensure NEON is available and the border slices
+    // are at least `col.len()` long (engine layouts guarantee it).
     #[target_feature(enable = "neon")]
     #[allow(clippy::too_many_arguments)]
     pub unsafe fn quant_col_quad(
@@ -651,6 +967,8 @@ mod neon {
         );
     }
 
+    // SAFETY: caller must ensure NEON is available and all slices are at
+    // least `xs.len()` long.
     #[target_feature(enable = "neon")]
     pub unsafe fn borders_col_lin(xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
         let half = vdupq_n_f32(0.5);
@@ -669,6 +987,8 @@ mod neon {
         scalar::borders_col_lin(&xs[blocks..], &b0[blocks..], &b1[blocks..], &mut out[blocks..]);
     }
 
+    // SAFETY: caller must ensure NEON is available and all slices are at
+    // least `xs.len()` long.
     #[target_feature(enable = "neon")]
     pub unsafe fn borders_col_quad(xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
         let half = vdupq_n_f32(0.5);
@@ -694,6 +1014,8 @@ mod neon {
         );
     }
 
+    // SAFETY: caller must ensure NEON is available and `dst` is at least
+    // `src.len()` long.
     #[target_feature(enable = "neon")]
     pub unsafe fn scale_col(src: &[f32], inv_s: f32, dst: &mut [f32]) {
         let iv = vdupq_n_f32(inv_s);
@@ -707,6 +1029,8 @@ mod neon {
         scalar::scale_col(&src[blocks..], inv_s, &mut dst[blocks..]);
     }
 
+    // SAFETY: caller must ensure NEON is available and `xs`/`borders`
+    // are at least `col.len()` long.
     #[target_feature(enable = "neon")]
     pub unsafe fn round_col(
         col: &mut [f32],
@@ -730,6 +1054,8 @@ mod neon {
         scalar::round_col(&mut col[blocks..], &xs[blocks..], &borders[blocks..], s, qmin, qmax);
     }
 
+    // SAFETY: caller must ensure NEON is available; `w`/`x` must be the
+    // same length (debug-asserted).
     #[target_feature(enable = "neon")]
     pub unsafe fn dot(w: &[f32], x: &[f32]) -> f32 {
         debug_assert_eq!(w.len(), x.len());
@@ -753,6 +1079,124 @@ mod neon {
         }
         sum
     }
+
+    /// `dot`'s horizontal reduce: halves, then pairwise — matched by the
+    /// scalar halving fold.
+    // SAFETY: caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    unsafe fn hreduce(acc: float32x4_t) -> f32 {
+        let t = vadd_f32(vget_low_f32(acc), vget_high_f32(acc));
+        let t2 = vpadd_f32(t, t);
+        vget_lane_f32::<0>(t2)
+    }
+
+    /// Vector transcription of `scalar::gemm_tile` (exact mode): one
+    /// W-wide accumulator per output element, carried across strips,
+    /// folded with `dot`'s tree, sequential ragged tail — bit-identical
+    /// to the scalar tile and to `dot` per element (W == LANES here).
+    // SAFETY: caller must ensure NEON is available; slice indexing stays
+    // bounds-checked.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_tile(
+        a: &[f32],
+        mc: usize,
+        m0: usize,
+        mr: usize,
+        bp: &[f32],
+        nr: usize,
+        k: usize,
+        sums: &mut [f32],
+    ) {
+        debug_assert!(mr <= MR && nr <= NR && sums.len() >= mr * nr);
+        let mut acc = [[vdupq_n_f32(0.0); NR]; MR];
+        let (mut tab, mut tbb, mut tls, mut tvb) = (0usize, 0usize, 0usize, 0usize);
+        let mut kbase = 0;
+        while kbase < k {
+            let ls = (k - kbase).min(KC);
+            let abase = mc * kbase;
+            let bbase = nr * kbase;
+            let vb = ls / W * W;
+            let mut t = 0;
+            while t < vb {
+                let mut av = [vdupq_n_f32(0.0); MR];
+                for (mi, v) in av.iter_mut().enumerate().take(mr) {
+                    *v = vld1q_f32(a.as_ptr().add(abase + (m0 + mi) * ls + t));
+                }
+                for ni in 0..nr {
+                    let bv = vld1q_f32(bp.as_ptr().add(bbase + ni * ls + t));
+                    for (mi, v) in av.iter().enumerate().take(mr) {
+                        acc[mi][ni] = vaddq_f32(acc[mi][ni], vmulq_f32(*v, bv));
+                    }
+                }
+                t += W;
+            }
+            (tab, tbb, tls, tvb) = (abase, bbase, ls, vb);
+            kbase += ls;
+        }
+        for mi in 0..mr {
+            for ni in 0..nr {
+                let mut sum = hreduce(acc[mi][ni]);
+                for t in tvb..tls {
+                    sum += a[tab + (m0 + mi) * tls + t] * bp[tbb + ni * tls + t];
+                }
+                sums[mi * nr + ni] = sum;
+            }
+        }
+    }
+
+    /// FMA variant (opt-in `AQUANT_FAST=fma`): `vfmaq_f32` accumulation,
+    /// same loop structure but relaxed rounding — allclose, NOT
+    /// bit-identical. FMA is baseline on aarch64, so no extra detect.
+    // SAFETY: caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_tile_fma(
+        a: &[f32],
+        mc: usize,
+        m0: usize,
+        mr: usize,
+        bp: &[f32],
+        nr: usize,
+        k: usize,
+        sums: &mut [f32],
+    ) {
+        debug_assert!(mr <= MR && nr <= NR && sums.len() >= mr * nr);
+        let mut acc = [[vdupq_n_f32(0.0); NR]; MR];
+        let (mut tab, mut tbb, mut tls, mut tvb) = (0usize, 0usize, 0usize, 0usize);
+        let mut kbase = 0;
+        while kbase < k {
+            let ls = (k - kbase).min(KC);
+            let abase = mc * kbase;
+            let bbase = nr * kbase;
+            let vb = ls / W * W;
+            let mut t = 0;
+            while t < vb {
+                let mut av = [vdupq_n_f32(0.0); MR];
+                for (mi, v) in av.iter_mut().enumerate().take(mr) {
+                    *v = vld1q_f32(a.as_ptr().add(abase + (m0 + mi) * ls + t));
+                }
+                for ni in 0..nr {
+                    let bv = vld1q_f32(bp.as_ptr().add(bbase + ni * ls + t));
+                    for (mi, v) in av.iter().enumerate().take(mr) {
+                        acc[mi][ni] = vfmaq_f32(acc[mi][ni], *v, bv);
+                    }
+                }
+                t += W;
+            }
+            (tab, tbb, tls, tvb) = (abase, bbase, ls, vb);
+            kbase += ls;
+        }
+        for mi in 0..mr {
+            for ni in 0..nr {
+                let mut sum = hreduce(acc[mi][ni]);
+                for t in tvb..tls {
+                    sum += a[tab + (m0 + mi) * tls + t] * bp[tbb + ni * tls + t];
+                }
+                sums[mi * nr + ni] = sum;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -765,6 +1209,9 @@ mod neon {
 
 pub fn nearest_col_on(b: Backend, col: &mut [f32], s: f32, inv_s: f32, qmin: f32, qmax: f32) {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::nearest_col(col, s, inv_s, qmin, qmax) },
@@ -790,6 +1237,9 @@ pub fn quant_col_lin_on(
     qmax: f32,
 ) {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::quant_col_lin(col, b0, b1, s, inv_s, qmin, qmax) },
@@ -816,6 +1266,9 @@ pub fn quant_col_quad_on(
     qmax: f32,
 ) {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::quant_col_quad(col, b0, b1, b2, s, inv_s, qmin, qmax) },
@@ -841,6 +1294,9 @@ pub fn quant_col_quad(
 
 pub fn borders_col_lin_on(b: Backend, xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::borders_col_lin(xs, b0, b1, out) },
@@ -856,6 +1312,9 @@ pub fn borders_col_lin(xs: &[f32], b0: &[f32], b1: &[f32], out: &mut [f32]) {
 
 pub fn borders_col_quad_on(b: Backend, xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mut [f32]) {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::borders_col_quad(xs, b0, b1, b2, out) },
@@ -871,6 +1330,9 @@ pub fn borders_col_quad(xs: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], out: &mu
 
 pub fn scale_col_on(b: Backend, src: &[f32], inv_s: f32, dst: &mut [f32]) {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::scale_col(src, inv_s, dst) },
@@ -894,6 +1356,9 @@ pub fn round_col_on(
     qmax: f32,
 ) {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::round_col(col, xs, borders, s, qmin, qmax) },
@@ -909,6 +1374,9 @@ pub fn round_col(col: &mut [f32], xs: &[f32], borders: &[f32], s: f32, qmin: f32
 
 pub fn dot_on(b: Backend, w: &[f32], x: &[f32]) -> f32 {
     debug_assert!(b.available());
+    // SAFETY: each SIMD arm is cfg-gated to its ISA and callers uphold
+    // the `b.available()` contract (asserted above; `active()` only
+    // ever returns an available backend).
     match b {
         #[cfg(target_arch = "x86_64")]
         Backend::Avx2 => unsafe { avx2::dot(w, x) },
@@ -920,6 +1388,62 @@ pub fn dot_on(b: Backend, w: &[f32], x: &[f32]) -> f32 {
 
 pub fn dot(w: &[f32], x: &[f32]) -> f32 {
     dot_on(active(), w, x)
+}
+
+/// One `mr x nr` register tile of the packed GEMM (layouts documented
+/// on `scalar::gemm_tile` and in `nn/im2col.rs`). Exact mode is
+/// bit-identical across backends and to the `dot`-per-row reference;
+/// `FastMode::Fma` is the opt-in relaxed path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tile_on(
+    b: Backend,
+    fast: FastMode,
+    a: &[f32],
+    mc: usize,
+    m0: usize,
+    mr: usize,
+    bp: &[f32],
+    nr: usize,
+    k: usize,
+    sums: &mut [f32],
+) {
+    debug_assert!(b.available());
+    // SAFETY: every SIMD arm is cfg-gated to its ISA and the asserted
+    // `b.available()` contract holds at every call site; the AVX2 FMA
+    // arm additionally requires the FMA extension, checked by its match
+    // guard (without it the request falls through to the exact AVX2
+    // kernel, so an FMA-less Haswell predecessor never executes vfmadd).
+    match (b, fast) {
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, FastMode::Fma) if is_x86_feature_detected!("fma") => unsafe {
+            avx2::gemm_tile_fma(a, mc, m0, mr, bp, nr, k, sums)
+        },
+        #[cfg(target_arch = "x86_64")]
+        (Backend::Avx2, _) => unsafe { avx2::gemm_tile(a, mc, m0, mr, bp, nr, k, sums) },
+        #[cfg(target_arch = "aarch64")]
+        (Backend::Neon, FastMode::Fma) => unsafe {
+            neon::gemm_tile_fma(a, mc, m0, mr, bp, nr, k, sums)
+        },
+        // SAFETY: NEON is baseline on aarch64 (cfg-gated arm).
+        #[cfg(target_arch = "aarch64")]
+        (Backend::Neon, _) => unsafe { neon::gemm_tile(a, mc, m0, mr, bp, nr, k, sums) },
+        _ => scalar::gemm_tile(a, mc, m0, mr, bp, nr, k, fast == FastMode::Fma, sums),
+    }
+}
+
+/// `gemm_tile_on` with the process-wide backend and fast mode.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tile(
+    a: &[f32],
+    mc: usize,
+    m0: usize,
+    mr: usize,
+    bp: &[f32],
+    nr: usize,
+    k: usize,
+    sums: &mut [f32],
+) {
+    gemm_tile_on(active(), fast_mode(), a, mc, m0, mr, bp, nr, k, sums)
 }
 
 /// Contiguous im2col row gather (the interior fast path copies whole
@@ -948,6 +1472,52 @@ mod tests {
         let x = [2.0f32, 0.5, 4.0];
         let want = 1.5 * 2.0 + -2.0 * 0.5 + 0.25 * 4.0;
         assert_eq!(scalar::dot(&w, &x), want);
+    }
+
+    #[test]
+    fn scalar_gemm_tile_matches_dot_bitwise() {
+        // Pack row-major rows into the KC-strip layout gemm_tile reads.
+        fn pack_strips(rows: &[Vec<f32>], k: usize) -> Vec<f32> {
+            let mc = rows.len();
+            let mut out = vec![0.0; mc * k];
+            let mut kbase = 0;
+            while kbase < k {
+                let ls = (k - kbase).min(KC);
+                for (mi, row) in rows.iter().enumerate() {
+                    out[mc * kbase + mi * ls..mc * kbase + (mi + 1) * ls]
+                        .copy_from_slice(&row[kbase..kbase + ls]);
+                }
+                kbase += ls;
+            }
+            out
+        }
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut nextf = || {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((state >> 33) as f32) / ((1u64 << 31) as f32) - 0.5
+        };
+        for &k in &[1usize, 3, LANES, KC - 1, KC, KC + 1, 2 * KC + 5] {
+            let a_rows: Vec<Vec<f32>> =
+                (0..3).map(|_| (0..k).map(|_| nextf()).collect()).collect();
+            let b_rows: Vec<Vec<f32>> =
+                (0..2).map(|_| (0..k).map(|_| nextf()).collect()).collect();
+            let ap = pack_strips(&a_rows, k);
+            let bp = pack_strips(&b_rows, k);
+            let mut sums = [0.0f32; MR * NR];
+            scalar::gemm_tile(&ap, 3, 0, 3, &bp, 2, k, false, &mut sums);
+            for (mi, arow) in a_rows.iter().enumerate() {
+                for (ni, brow) in b_rows.iter().enumerate() {
+                    let want = scalar::dot(brow, arow);
+                    assert_eq!(
+                        sums[mi * 2 + ni].to_bits(),
+                        want.to_bits(),
+                        "k={k} mi={mi} ni={ni}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -89,7 +89,9 @@ impl BatchState {
 /// Intra-image parallelism configuration for a pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IntraCfg {
-    /// Chunks a big conv layer's gather/GEMM phases split into.
+    /// Chunks a big conv layer's gather/GEMM phases split into (gather
+    /// chunks are output-pixel ranges; GEMM chunks are whole B-panel
+    /// tile-strip ranges, so no register tile splits across executors).
     /// 0 = auto (one chunk per worker); 1 effectively disables sharding.
     pub split: usize,
     /// Minimum patch-buffer size (P·R f32 elements) before a layer is

@@ -77,6 +77,9 @@ impl ModelRegistry {
             engine
                 .validate()
                 .map_err(|e| e.context(format!("registering model {name:?}")))?;
+            // Pack B panels for the tiled GEMM here, once, so the
+            // serving path never pays the pack cost.
+            engine.ensure_packed();
             dims = dims.union(engine.scratch_dims());
             out.push(ModelEntry {
                 name,
@@ -258,7 +261,12 @@ mod tests {
             ModelRegistry::new(vec![("tiny".into(), e1), ("bench".into(), e2)]).unwrap();
         let d = reg.scratch_dims();
         for (a, b) in [(d1, d), (d2, d)] {
-            assert!(a.acts <= b.acts && a.patches <= b.patches && a.quant <= b.quant);
+            assert!(
+                a.acts <= b.acts
+                    && a.patches <= b.patches
+                    && a.apanel <= b.apanel
+                    && a.quant <= b.quant
+            );
         }
         assert_eq!(d, d1.union(d2));
     }

@@ -242,6 +242,11 @@ pub struct Snapshot {
     pub conns_accepted: u64,
     pub conns_rejected: u64,
     pub conns_timed_out: u64,
+    /// Active SIMD kernel backend (`scalar`/`avx2`/`neon`).
+    pub kernel_backend: &'static str,
+    /// Resolved GEMM accuracy mode (`exact`, or `fma` when the relaxed
+    /// kernels were opted into via `--fast-kernels` / `AQUANT_FAST`).
+    pub fast_mode: &'static str,
 }
 
 impl Snapshot {
@@ -285,6 +290,8 @@ impl Snapshot {
             conns_accepted: stats.conns_accepted.load(Ordering::Relaxed),
             conns_rejected: stats.conns_rejected.load(Ordering::Relaxed),
             conns_timed_out: stats.conns_timed_out.load(Ordering::Relaxed),
+            kernel_backend: crate::nn::kernels::active().name(),
+            fast_mode: crate::nn::kernels::fast_mode().name(),
         }
     }
 
@@ -307,6 +314,8 @@ impl Snapshot {
                     ("conns_accepted", json::num(self.conns_accepted as f64)),
                     ("conns_rejected", json::num(self.conns_rejected as f64)),
                     ("conns_timed_out", json::num(self.conns_timed_out as f64)),
+                    ("kernel_backend", json::s(self.kernel_backend)),
+                    ("fast_mode", json::s(self.fast_mode)),
                 ]),
             ),
         ])
@@ -350,7 +359,8 @@ impl Snapshot {
         }
         out.push_str(&format!(
             "server: unknown-model {}  bad-version {}  sched-rounds {}  \
-             conns open {} / accepted {} / rejected {} / timed-out {}\n",
+             conns open {} / accepted {} / rejected {} / timed-out {}  \
+             kernels {} ({})\n",
             self.unknown_model,
             self.bad_version,
             self.rounds,
@@ -358,6 +368,8 @@ impl Snapshot {
             self.conns_accepted,
             self.conns_rejected,
             self.conns_timed_out,
+            self.kernel_backend,
+            self.fast_mode,
         ));
         out
     }
@@ -626,10 +638,19 @@ mod tests {
             &Json::Null
         );
         assert!(j.req("server").unwrap().get("rounds").is_some());
+        // the kernel identity rides along: fast mode is "exact" unless
+        // the relaxed kernels were explicitly requested
+        let server = j.req("server").unwrap();
+        assert_eq!(
+            server.req("kernel_backend").unwrap().as_str(),
+            Some(crate::nn::kernels::active().name())
+        );
+        assert_eq!(server.req("fast_mode").unwrap().as_str(), Some(snap.fast_mode));
         // the text rendering mentions every model
         let text = snap.to_text();
         assert!(text.contains("model 0 a:"), "{text}");
         assert!(text.contains("model 1 b:"), "{text}");
+        assert!(text.contains(&format!("kernels {}", snap.kernel_backend)), "{text}");
     }
 
     #[test]

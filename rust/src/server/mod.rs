@@ -601,6 +601,9 @@ impl Server {
     /// accepted and completed (or forever when None). All queued work
     /// is drained before returning.
     pub fn run(self) -> Result<()> {
+        if self.cfg.fast_kernels {
+            crate::nn::kernels::request_fast_kernels();
+        }
         let workers = self.cfg.resolved_workers();
         // --intra-split 1 (or "off") disables intra-image sharding; 0
         // ("auto") lets the pool pick one chunk per worker.
@@ -630,6 +633,11 @@ impl Server {
             self.cfg.max_batch,
             self.cfg.batch_wait_us,
             self.cfg.queue_images,
+        );
+        println!(
+            "aquant-serve: kernels {} (fast mode: {})",
+            crate::nn::kernels::active().name(),
+            crate::nn::kernels::fast_mode().name(),
         );
         if let Some(a) = self.stats_local_addr() {
             println!(

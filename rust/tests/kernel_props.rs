@@ -6,7 +6,7 @@
 //! `rust/src/nn/kernels.rs` — serving results must not depend on which
 //! ISA the host happens to have.
 
-use aquant::nn::kernels::{self, Backend, LANES};
+use aquant::nn::kernels::{self, Backend, FastMode, KC, LANES, MR, NR};
 use aquant::util::prop;
 use aquant::util::rng::Rng;
 
@@ -175,6 +175,191 @@ fn active_dispatch_matches_explicit_backend() {
     let mut via_on = col.clone();
     kernels::quant_col_lin_on(active, &mut via_on, &b0, &b1, s, inv_s, 0.0, 15.0);
     assert_eq!(via_plain, via_on);
+}
+
+/// Pack a row-major `(rows, k)` matrix into the KC-strip layout
+/// `gemm_tile_on` consumes: per strip, each row's `ls`-element slice
+/// contiguous, rows in order — the layout `im2col::pack_weights` /
+/// `pack_patches` produce for one panel / one group block.
+fn pack_strips(src: &[f32], rows: usize, k: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * k);
+    let mut kbase = 0;
+    while kbase < k {
+        let ls = (k - kbase).min(KC);
+        for r in 0..rows {
+            out.extend_from_slice(&src[r * k + kbase..r * k + kbase + ls]);
+        }
+        kbase += ls;
+    }
+    out
+}
+
+/// Random K biased toward strip boundaries (the only place the tiled
+/// reduction's bookkeeping differs from a flat dot) on top of the usual
+/// lane-boundary mix.
+fn random_k(rng: &mut Rng) -> usize {
+    match rng.below(4) {
+        0 => KC * (1 + rng.below(2)),           // strip-exact
+        1 => KC * (1 + rng.below(2)) + 1 + rng.below(7), // just past a strip
+        2 => KC * (1 + rng.below(2)) - 1 - rng.below(7), // just short of one
+        _ => random_len(rng),                   // lane-level shapes (incl. 0)
+    }
+}
+
+#[test]
+fn gemm_tile_bit_identical_to_scalar_dot() {
+    // The tentpole contract: the packed register-tile GEMM in exact
+    // mode reduces in EXACTLY scalar `dot`'s order, on every backend,
+    // for every ragged tile/strip shape — so swapping dot-per-row for
+    // the tiled kernel cannot move a single output bit.
+    let backends = available();
+    prop::check_default("gemm_tile exact == scalar dot", |rng| {
+        let k = random_k(rng);
+        let mc = 1 + rng.below(2 * MR + 1);
+        let nr = 1 + rng.below(NR);
+        let a = prop::vec_f32(rng, mc * k, -2.0, 2.0);
+        let b = prop::vec_f32(rng, nr * k, -2.0, 2.0);
+        let ap = pack_strips(&a, mc, k);
+        let bp = pack_strips(&b, nr, k);
+        let m0 = rng.below(mc);
+        let mr = (mc - m0).min(1 + rng.below(MR));
+        let mut want = vec![0.0f32; mr * nr];
+        for mi in 0..mr {
+            for ni in 0..nr {
+                want[mi * nr + ni] = kernels::dot_on(
+                    Backend::Scalar,
+                    &b[ni * k..(ni + 1) * k],
+                    &a[(m0 + mi) * k..(m0 + mi + 1) * k],
+                );
+            }
+        }
+        for &bk in &backends {
+            let mut sums = [0.0f32; MR * NR];
+            kernels::gemm_tile_on(bk, FastMode::Exact, &ap, mc, m0, mr, &bp, nr, k, &mut sums);
+            for mi in 0..mr {
+                for ni in 0..nr {
+                    let (g, w) = (sums[mi * nr + ni], want[mi * nr + ni]);
+                    assert!(
+                        g.to_bits() == w.to_bits(),
+                        "gemm_tile: backend {} [{mi},{ni}] {g:?} ({:#010x}) vs dot {w:?} \
+                         ({:#010x}) (k={k} mc={mc} m0={m0} mr={mr} nr={nr})",
+                        bk.name(),
+                        g.to_bits(),
+                        w.to_bits()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_tile_covers_strip_and_tile_boundaries() {
+    // Deterministic sweep of the exact edge shapes: K below one lane,
+    // lane-exact, one off a strip boundary either way, multi-strip; a
+    // ragged trailing M tile; every sub-width panel.
+    let backends = available();
+    let mut rng = Rng::new(11);
+    for k in [1, 3, LANES, LANES + 1, KC - 1, KC, KC + 1, 2 * KC + 5] {
+        let mc = MR + 1; // forces a 1-row ragged tile at m0 = MR
+        for nr in 1..=NR {
+            let a = prop::vec_f32(&mut rng, mc * k, -2.0, 2.0);
+            let b = prop::vec_f32(&mut rng, nr * k, -2.0, 2.0);
+            let ap = pack_strips(&a, mc, k);
+            let bp = pack_strips(&b, nr, k);
+            for m0 in [0, MR] {
+                let mr = (mc - m0).min(MR);
+                for &bk in &backends {
+                    let mut sums = [0.0f32; MR * NR];
+                    kernels::gemm_tile_on(
+                        bk,
+                        FastMode::Exact,
+                        &ap,
+                        mc,
+                        m0,
+                        mr,
+                        &bp,
+                        nr,
+                        k,
+                        &mut sums,
+                    );
+                    for mi in 0..mr {
+                        for ni in 0..nr {
+                            let w = kernels::dot_on(
+                                Backend::Scalar,
+                                &b[ni * k..(ni + 1) * k],
+                                &a[(m0 + mi) * k..(m0 + mi + 1) * k],
+                            );
+                            assert_eq!(
+                                sums[mi * nr + ni].to_bits(),
+                                w.to_bits(),
+                                "k={k} nr={nr} m0={m0} mi={mi} ni={ni} backend {}",
+                                bk.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_tile_fma_allclose_to_exact() {
+    // The opt-in relaxed mode is validated by CLOSENESS, not bit
+    // identity: FMA contracts the multiply-add rounding, so its bits
+    // may legitimately differ from the exact contract — the property is
+    // that every element stays within a few accumulation ulps.
+    let backends = available();
+    prop::check_default("gemm_tile fma allclose to exact", |rng| {
+        let k = random_k(rng);
+        let mc = 1 + rng.below(MR);
+        let nr = 1 + rng.below(NR);
+        let a = prop::vec_f32(rng, mc * k, -2.0, 2.0);
+        let b = prop::vec_f32(rng, nr * k, -2.0, 2.0);
+        let ap = pack_strips(&a, mc, k);
+        let bp = pack_strips(&b, nr, k);
+        for &bk in &backends {
+            let mut exact = [0.0f32; MR * NR];
+            let mut fma = [0.0f32; MR * NR];
+            kernels::gemm_tile_on(bk, FastMode::Exact, &ap, mc, 0, mc, &bp, nr, k, &mut exact);
+            kernels::gemm_tile_on(bk, FastMode::Fma, &ap, mc, 0, mc, &bp, nr, k, &mut fma);
+            for mi in 0..mc {
+                for ni in 0..nr {
+                    // |fma - exact| is bounded by a small multiple of
+                    // eps times the sum of |a·b| magnitudes
+                    let mag: f32 = (0..k)
+                        .map(|t| (a[mi * k + t] * b[ni * k + t]).abs())
+                        .sum();
+                    let tol = 1e-3 * (1.0 + mag);
+                    let (e, f) = (exact[mi * nr + ni], fma[mi * nr + ni]);
+                    assert!(
+                        (e - f).abs() <= tol,
+                        "fma drifted past allclose: backend {} [{mi},{ni}] exact {e} fma {f} \
+                         tol {tol} (k={k})",
+                        bk.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn fast_mode_defaults_to_exact() {
+    // Without AQUANT_FAST (or with it explicitly off) and without a
+    // --fast-kernels request in this process, the resolved mode must be
+    // the exact bit-identity contract.
+    let env_exact = std::env::var("AQUANT_FAST")
+        .map(|v| {
+            let v = v.trim().to_ascii_lowercase();
+            v.is_empty() || v == "exact" || v == "off"
+        })
+        .unwrap_or(true);
+    if env_exact {
+        assert_eq!(kernels::fast_mode(), FastMode::Exact);
+        assert_eq!(kernels::fast_mode().name(), "exact");
+    }
 }
 
 #[test]

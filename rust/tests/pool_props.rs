@@ -164,6 +164,53 @@ fn intra_image_sharding_is_bit_identical() {
 }
 
 #[test]
+fn gemm_panel_strip_sharding_is_bit_identical() {
+    // The GEMM intra chunks are now whole B-panel tile strips, not raw
+    // output rows. Three shapes must stay invisible in the bits: odd
+    // chunk counts (panel ranges of uneven width), far more chunks
+    // requested than any layer has panels (chunk_range hands trailing
+    // executors empty ranges), and a min_elems threshold no layer
+    // reaches (every GEMM takes the serial fallback inside the intra
+    // path instead of spawning chunks).
+    prop::check("panel-strip sharding invisible", 48, |rng| {
+        let (topo, weights) = synth::random_model(rng);
+        let mut engine = synth::engine_with_random_borders(
+            &topo,
+            &weights,
+            rng,
+            rng.bernoulli(0.5),
+            rng.bernoulli(0.5),
+        );
+        if rng.bernoulli(0.5) {
+            engine.fusion = FusionMode::Unfused;
+        }
+        let engine = Arc::new(engine);
+        let img_elems = engine.img_elems();
+        let n = 1 + rng.below(3);
+        let images = prop::vec_f32(rng, n * img_elems, -1.0, 3.0);
+        let refs: Vec<&[f32]> = images.chunks_exact(img_elems).collect();
+        let want = engine.classify_batch(&refs).unwrap();
+        for (workers, split, min_elems) in
+            [(3usize, 5usize, 0usize), (2, 63, 0), (4, 0, 1 << 40)]
+        {
+            let pool = InferencePool::with_intra(
+                workers,
+                engine.scratch_dims(),
+                1,
+                Some(IntraCfg { split, min_elems }),
+            );
+            for rep in 0..2 {
+                assert_eq!(
+                    pool.classify_batch(&engine, &refs).unwrap(),
+                    want,
+                    "workers={workers} split={split} min_elems={min_elems} n={n} rep={rep}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn intra_disabled_pool_matches_sequential() {
     // `intra = None` must behave exactly like the pre-intra pool.
     prop::check("intra off == sequential", 32, |rng| {

@@ -18,7 +18,11 @@
 #       ("p99_service_us", from the same histograms /stats serves)
 #       climbs more than the fraction ABOVE the best (lowest) prior
 #       entry — latency gates in the opposite direction of throughput;
-#       entries predating the key are skipped.
+#       entries predating the key are skipped, or
+#   (f) the packed-panel GEMM kernel rate ("gemm_gflops", exact mode)
+#       regresses the same way — compared only against prior entries
+#       whose "gemm_tile" config matches (entries predating the tiled
+#       kernels measured a bare dot product and are skipped).
 # Each passing run is appended to bench_history/ as serve_NNN.json, so
 # the directory is the PR-over-PR perf trajectory.
 set -euo pipefail
@@ -88,8 +92,16 @@ if conns is None:
 p99 = blob.get(P99)
 if p99 is None:
     sys.exit(f"bench_check: FAIL - no {P99} in the blob")
+GEMM = "gemm_gflops"
+gemm = blob.get(GEMM)
+if gemm is None:
+    sys.exit(f"bench_check: FAIL - no {GEMM} in the blob")
+# GEMM rates are only comparable within one tile config: entries
+# predating the packed-panel kernels measured a bare dot product (no
+# "gemm_tile" key) and are skipped, as is any future tile retune.
+tile = blob.get("gemm_tile", "")
 
-prior, mixed_prior, conns_prior, p99_prior = [], [], [], []
+prior, mixed_prior, conns_prior, p99_prior, gemm_prior = [], [], [], [], []
 for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
     try:
         entry = json.load(open(path))
@@ -99,6 +111,7 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         m = entry.get(MIXED)
         c = entry.get(CONNS)
         p = entry.get(P99)
+        g = entry.get(GEMM) if entry.get("gemm_tile", "") == tile else None
     except (ValueError, KeyError, TypeError, AttributeError):
         print(f"bench_check: warning - unreadable history entry {path}", file=sys.stderr)
         continue
@@ -110,20 +123,22 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         conns_prior.append((c, path))
     if p is not None and p > 0:
         p99_prior.append((p, path))
+    if g is not None:
+        gemm_prior.append((g, path))
 
-def gate(label, value, history, no_prior_msg):
+def gate(label, value, history, no_prior_msg, unit="img/s"):
     if not history:
         print(no_prior_msg)
         return
     best, best_path = max(history)
     print(
-        f"bench_check: {label} {value:.0f} img/s vs best prior "
-        f"{best:.0f} img/s ({os.path.basename(best_path)}, {len(history)} entries)"
+        f"bench_check: {label} {value:.0f} {unit} vs best prior "
+        f"{best:.0f} {unit} ({os.path.basename(best_path)}, {len(history)} entries)"
     )
     if value < best * (1.0 - regression):
         sys.exit(
             f"bench_check: FAIL - {label} regressed >{regression:.0%} "
-            f"vs {best_path} ({value:.0f} < {best * (1.0 - regression):.0f} img/s)"
+            f"vs {best_path} ({value:.0f} < {best * (1.0 - regression):.0f} {unit})"
         )
 
 gate("w4/b64 throughput", cur, prior,
@@ -136,6 +151,11 @@ gate("mixed 2-model throughput", mixed, mixed_prior,
 # end; same skip rule for entries predating the row.
 gate("256-connection throughput", conns, conns_prior,
      f"bench_check: no prior {CONNS} entries; starting the conns trajectory")
+# Kernel-rate trajectory: the packed-panel GEMM in exact mode, gated
+# only against same-tile-config entries (skip rule above).
+gate(f"gemm {tile or 'untiled'}", gemm, gemm_prior,
+     f"bench_check: no prior {GEMM} entries for tile {tile!r}; starting the gemm trajectory",
+     unit="GFLOP/s")
 
 # Tail-latency trajectory: lower is better, so this gate points the
 # other way — fail when the burst's batch-service p99 climbs more than

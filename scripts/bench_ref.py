@@ -4,8 +4,9 @@
 When the container has no Rust toolchain (`scripts/bench_check.sh`
 cannot run `cargo bench`), this script seeds/extends `bench_history/`
 with *reference* entries so the perf trajectory still exists: the same
-border quantize-dequantize column math as `rust/src/nn/kernels.rs`, in
-two variants —
+border quantize-dequantize column math as `rust/src/nn/kernels.rs`,
+plus a KC-strip blocked GEMM matching the packed-panel kernels' loop
+structure, in two variants —
 
   * ``scalar``: a pure-Python element loop (the floor any compiled
     implementation must beat), and
@@ -31,6 +32,14 @@ import numpy as np
 N = 4096
 REPS_SCALAR = 30
 REPS_NUMPY = 300
+
+# Blocked-GEMM reference shape: a mid-network conv after im2col
+# (196 output pixels x 32 channels x 288 patch rows), mirroring the
+# serve_throughput gemm row, blocked in the same KC-element K strips as
+# the Rust packed-panel kernels.
+GEMM_M, GEMM_N, GEMM_K = 196, 32, 288
+GEMM_KC = 256
+REPS_GEMM_SCALAR = 3
 
 
 def fast_offset(u):
@@ -63,11 +72,26 @@ def quant_col_numpy(col, b0, b1, b2, s, inv_s, qmin, qmax):
     return s * np.clip(np.ceil(xs - border), qmin, qmax)
 
 
-def dot_scalar(w, x):
-    acc = 0.0
-    for a, b in zip(w, x):
-        acc += a * b
-    return acc
+def gemm_blocked_scalar(a_rows, b_rows, m, n, k, kc):
+    """Pure-Python KC-strip blocked GEMM: out[mi][ni] = A[mi] . B[ni].
+
+    Same loop structure as the Rust packed-panel kernels (K strips
+    outermost, accumulators carried across strips) so the floor it sets
+    is for the same math, not a different algorithm.
+    """
+    out = [[0.0] * n for _ in range(m)]
+    for k0 in range(0, k, kc):
+        k1 = min(k0 + kc, k)
+        for mi in range(m):
+            arow = a_rows[mi]
+            orow = out[mi]
+            for ni in range(n):
+                brow = b_rows[ni]
+                acc = 0.0
+                for t in range(k0, k1):
+                    acc += arow[t] * brow[t]
+                orow[ni] += acc
+    return out
 
 
 def median_ns(fn, reps):
@@ -98,18 +122,25 @@ def main():
     b0 = rng.uniform(-1.0, 1.0, N)
     b1 = rng.uniform(-1.0, 1.0, N)
     b2 = rng.uniform(-1.0, 1.0, N)
-    w = rng.uniform(-1.0, 1.0, N)
-    x = rng.uniform(-1.0, 1.0, N)
     s, inv_s, qmin, qmax = 0.1, 10.0, 0.0, 15.0
 
     col_l, b0_l, b1_l, b2_l = col.tolist(), b0.tolist(), b1.tolist(), b2.tolist()
-    w_l, x_l = w.tolist(), x.tolist()
 
-    # the two variants must agree on the math before we time them
+    # blocked-GEMM operands: A = im2col patches (M, K), B = weights (N, K)
+    ga = rng.uniform(-1.0, 1.0, (GEMM_M, GEMM_K))
+    gb = rng.uniform(-1.0, 1.0, (GEMM_N, GEMM_K))
+    ga_l, gb_l = ga.tolist(), gb.tolist()
+
+    # the variants must agree on the math before we time them
     ref = np.array(quant_col_scalar(col_l, b0_l, b1_l, b2_l, s, inv_s, qmin, qmax))
     vec = quant_col_numpy(col, b0, b1, b2, s, inv_s, qmin, qmax)
     if not np.allclose(ref, vec, atol=1e-9):
         sys.exit("bench_ref: scalar and numpy border variants disagree")
+    gref = np.array(
+        gemm_blocked_scalar(ga_l, gb_l, GEMM_M, GEMM_N, GEMM_K, GEMM_KC)
+    )
+    if not np.allclose(gref, ga @ gb.T, atol=1e-9):
+        sys.exit("bench_ref: scalar and numpy GEMM variants disagree")
 
     variants = [
         (
@@ -118,7 +149,12 @@ def main():
                 lambda: quant_col_scalar(col_l, b0_l, b1_l, b2_l, s, inv_s, qmin, qmax),
                 REPS_SCALAR,
             ),
-            median_ns(lambda: dot_scalar(w_l, x_l), REPS_SCALAR),
+            median_ns(
+                lambda: gemm_blocked_scalar(
+                    ga_l, gb_l, GEMM_M, GEMM_N, GEMM_K, GEMM_KC
+                ),
+                REPS_GEMM_SCALAR,
+            ),
         ),
         (
             "numpy",
@@ -126,17 +162,19 @@ def main():
                 lambda: quant_col_numpy(col, b0, b1, b2, s, inv_s, qmin, qmax),
                 REPS_NUMPY,
             ),
-            median_ns(lambda: np.dot(w, x), REPS_NUMPY),
+            median_ns(lambda: ga @ gb.T, REPS_NUMPY),
         ),
     ]
 
+    gemm_flops = 2.0 * GEMM_M * GEMM_N * GEMM_K
     os.makedirs(hist_dir, exist_ok=True)
-    for name, border_ns, dot_ns in variants:
-        gflops = 2.0 * N / max(dot_ns, 1.0)  # flops/ns == GFLOP/s
+    for name, border_ns, gemm_ns in variants:
+        gflops = gemm_flops / max(gemm_ns, 1.0)  # flops/ns == GFLOP/s
         blob = {
             "bench": "serve_throughput",
             "backend": "python-ref",
             "kernel_backend": name,
+            "gemm_tile": f"blocked-kc{GEMM_KC}",
             "border_quant_col_ns": round(border_ns, 1),
             "gemm_gflops": round(gflops, 4),
         }
@@ -147,7 +185,7 @@ def main():
             f.write("\n")
         print(
             f"bench_ref: {name}: border column {border_ns:.0f}ns, "
-            f"dot {gflops:.3f} GFLOP/s -> {dst}"
+            f"gemm {GEMM_M}x{GEMM_N}x{GEMM_K} {gflops:.3f} GFLOP/s -> {dst}"
         )
 
 

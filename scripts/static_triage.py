@@ -16,7 +16,12 @@ in review-only development:
   5. external crates referenced by `use`/`extern crate` are limited to
      the declared dependency set (std/core/alloc + anyhow + the
      pjrt-gated xla), so an offline build cannot hit a missing crate;
-  6. `#[test]` fn names are unique within each file.
+  6. `#[test]` fn names are unique within each file;
+  7. every `unsafe fn` / `unsafe {` block carries a `// SAFETY:`
+     comment on the same line or within the 14 preceding lines — wide
+     enough for a pattern-level comment above a multi-field match arm
+     to still count (`unsafe impl` is a type-level promise documented
+     at the type and is exempt).
 
 Exit code 1 if any hard check fails. Run: python3 scripts/static_triage.py
 """
@@ -160,6 +165,26 @@ def main():
             if name in seen:
                 errors.append(f"{rel}: duplicate #[test] fn {name}")
             seen[name] = True
+
+        # unsafe sites must carry a SAFETY comment on the same line or
+        # within the 14 preceding lines of the ORIGINAL source (the
+        # stripped code finds the sites; comments only exist in src).
+        # The window is wide enough for a pattern-level comment above a
+        # multi-field match arm to count for the arm's `unsafe`.
+        # `unsafe impl` is a type-level promise documented at the type
+        # and is exempt.
+        src_lines = src.split("\n")
+        for ln, cline in enumerate(code.split("\n"), 1):
+            if not re.search(r"\bunsafe\s+fn\b|\bunsafe\s*\{", cline):
+                continue
+            if re.search(r"\bunsafe\s+impl\b", cline):
+                continue
+            window = src_lines[max(0, ln - 15):ln]
+            if not any("safety" in w.lower() for w in window):
+                errors.append(
+                    f"{rel}:{ln}: unsafe without a `// SAFETY:` comment in the "
+                    f"preceding 14 lines"
+                )
 
     # orphan files under rust/src (never mod-declared)
     # lib/main are crate roots; files under rust/src/bin are standalone
