@@ -208,6 +208,122 @@ fn main() {
         (ips, p99)
     };
 
+    // Router-tier row: the same pipelined wire shape pushed through a
+    // front-end router — two backend event-loop servers (both hosting
+    // ids 0 and 1; traffic partitioned by the route table) behind one
+    // router forwarding frames verbatim over pooled, pipelined backend
+    // connections. Wall clock over the burst → images/sec; the delta
+    // vs serving directly is the router hop's cost.
+    let router_ips = {
+        use aquant::config::RouteSpec;
+        let conns = 32usize;
+        let driver_threads = 4usize;
+        let reqs = 4usize;
+        let batch = 8usize;
+        let pool = 2usize;
+        let ta = Arc::new(synth::engine_from_spec("tiny", 42).expect("tiny spec"));
+        let tb = Arc::new(synth::engine_from_spec("tiny", 43).expect("tiny spec"));
+        let elems = ta.img_elems();
+        let backend_cfg = ServeConfig {
+            workers: 2,
+            max_batch: 64,
+            batch_wait_us: 200,
+            max_accepts: Some(pool),
+            ..ServeConfig::default()
+        };
+        let mut backends = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..2 {
+            let registry = ModelRegistry::new(vec![
+                ("a".into(), ta.clone()),
+                ("b".into(), tb.clone()),
+            ])
+            .expect("backend registry");
+            let srv = aquant::server::Server::bind(
+                Arc::new(registry),
+                "127.0.0.1:0",
+                backend_cfg.clone(),
+            )
+            .expect("bind backend");
+            addrs.push(srv.local_addr().expect("backend addr"));
+            backends.push(std::thread::spawn(move || srv.run()));
+        }
+        let router_cfg = ServeConfig {
+            route_pool: pool,
+            route_inflight: 32,
+            max_accepts: Some(conns),
+            ..ServeConfig::default()
+        };
+        let routes = vec![
+            RouteSpec {
+                name: "a".into(),
+                addr: addrs[0].to_string(),
+            },
+            RouteSpec {
+                name: "b".into(),
+                addr: addrs[1].to_string(),
+            },
+        ];
+        let srv = aquant::server::RouterServer::bind(routes, "127.0.0.1:0", router_cfg)
+            .expect("bind router");
+        let raddr = srv.local_addr().expect("router addr");
+        let router = std::thread::spawn(move || srv.run());
+        // v1 frames route to id 0 (backend A), v2 id-1 frames to
+        // backend B — alternating per connection, so both backends see
+        // half the burst concurrently
+        let imgs: Vec<f32> = (0..batch * elems).map(|_| rng.range_f32(-1.0, 3.0)).collect();
+        let mut v1 = (batch as u32).to_le_bytes().to_vec();
+        let mut v2 = aquant::server::encode_header_v2(1, batch as u32).to_vec();
+        for v in &imgs {
+            v1.extend_from_slice(&v.to_le_bytes());
+            v2.extend_from_slice(&v.to_le_bytes());
+        }
+        let t0 = Instant::now();
+        let mut drivers = Vec::new();
+        for d in 0..driver_threads {
+            let per = conns / driver_threads;
+            let (v1, v2) = (v1.clone(), v2.clone());
+            drivers.push(std::thread::spawn(move || {
+                let mut socks: Vec<std::net::TcpStream> = (0..per)
+                    .map(|_| std::net::TcpStream::connect(raddr).expect("connect router"))
+                    .collect();
+                for (c, s) in socks.iter_mut().enumerate() {
+                    let payload = if (d * per + c) % 2 == 0 { &v1 } else { &v2 };
+                    for _ in 0..reqs {
+                        s.write_all(payload).expect("request");
+                    }
+                }
+                for s in socks.iter_mut() {
+                    for _ in 0..reqs {
+                        use std::io::Read as _;
+                        let mut hdr = [0u8; 4];
+                        s.read_exact(&mut hdr).expect("response header");
+                        let m = u32::from_le_bytes(hdr) as usize;
+                        assert_eq!(m, batch, "short response via router");
+                        let mut buf = vec![0u8; m * 4];
+                        s.read_exact(&mut buf).expect("response body");
+                    }
+                }
+            }));
+        }
+        for d in drivers {
+            d.join().expect("router driver");
+        }
+        let wall = t0.elapsed();
+        router.join().expect("router thread").expect("route ok");
+        for b in backends {
+            b.join().expect("backend thread").expect("serve ok");
+        }
+        let ips = (conns * reqs * batch) as f64 / wall.as_secs_f64();
+        println!(
+            "serve/router2/pipelined  {:>10.1}ms {:>12.0} images/s \
+             ({conns} conns through 1 router -> 2 backends)",
+            wall.as_secs_f64() * 1e3,
+            ips
+        );
+        ips
+    };
+
     // Kernel microbenches, tagged with the active SIMD backend: the
     // border quantize-dequantize column pass (ns per 4096-row column)
     // and the packed-panel tiled GEMM (GFLOP/s on a conv-shaped
@@ -332,6 +448,7 @@ fn main() {
     json.push_str(&format!(
         "  ],\n  \"mixed_w4_b32x2_images_per_sec\": {mixed_ips:.1},\n  \
          \"conns256_images_per_sec\": {conns_ips:.1},\n  \
+         \"router_images_per_sec\": {router_ips:.1},\n  \
          \"p99_service_us\": {p99_service_us:.1},\n  \
          \"border_quant_col_ns\": {border_quant_col_ns:.1},\n  \
          \"gemm_gflops\": {gemm_gflops:.3},\n  \

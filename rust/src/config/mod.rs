@@ -425,6 +425,53 @@ impl ModelSpec {
     }
 }
 
+/// One routing rule a router-mode process forwards by: a model name
+/// and the backend `host:port` hosting it. Parsed from repeated
+/// `--route` flags; route order assigns the router-visible model ids
+/// (first route is id 0, the model protocol-v1 clients reach), so
+/// backends must host each routed model at the SAME id — frames are
+/// forwarded byte-identically, ids are never rewritten.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouteSpec {
+    /// Route key (the model name clients know; unique per router).
+    pub name: String,
+    /// Backend address, `host:port`.
+    pub addr: String,
+}
+
+impl RouteSpec {
+    /// Parse one `--route MODEL=host:port` value.
+    pub fn parse(spec: &str) -> Result<RouteSpec> {
+        let (name, addr) = crate::util::cli::split_kv(spec)
+            .map_err(|e| anyhow::anyhow!("route spec {spec:?}: {e} (want MODEL=host:port)"))?;
+        if !addr.contains(':') {
+            bail!("route spec {spec:?}: backend {addr:?} is not host:port");
+        }
+        Ok(RouteSpec {
+            name: name.to_string(),
+            addr: addr.to_string(),
+        })
+    }
+
+    /// Parse a repeated `--route` flag list; errors on empty input and
+    /// duplicate route keys (the same rule `--model` names get — a
+    /// duplicate would silently shadow the earlier backend).
+    pub fn parse_all(specs: &[String]) -> Result<Vec<RouteSpec>> {
+        if specs.is_empty() {
+            bail!("no --route specs given");
+        }
+        let mut out: Vec<RouteSpec> = Vec::with_capacity(specs.len());
+        for s in specs {
+            let spec = RouteSpec::parse(s)?;
+            if out.iter().any(|o| o.name == spec.name) {
+                bail!("duplicate route key {:?} (each model routes to one backend)", spec.name);
+            }
+            out.push(spec);
+        }
+        Ok(out)
+    }
+}
+
 /// Serving-runtime knobs, threaded from the CLI (`aquant serve` /
 /// `examples/serve.rs`) into the event-loop server: `--workers`,
 /// `--max-batch`, `--batch-wait-us`, `--queue-images`, `--max-conns`,
@@ -476,6 +523,14 @@ pub struct ServeConfig {
     pub stats_history: Option<String>,
     /// Seconds between history snapshots (`--stats-history-every-s`).
     pub stats_history_every_s: u64,
+    /// Router mode: persistent connections kept per backend
+    /// (`--route-pool`). More connections = more pipelining lanes and
+    /// isolation domains per backend.
+    pub route_pool: usize,
+    /// Router mode: forwarded-but-unanswered requests allowed per
+    /// backend connection before client reads park
+    /// (`--route-inflight`).
+    pub route_inflight: usize,
 }
 
 impl Default for ServeConfig {
@@ -494,6 +549,8 @@ impl Default for ServeConfig {
             stats_addr: None,
             stats_history: None,
             stats_history_every_s: 5,
+            route_pool: 2,
+            route_inflight: 32,
         }
     }
 }
@@ -541,6 +598,8 @@ impl ServeConfig {
             stats_history: args.str_flag_opt("stats-history").map(str::to_string),
             stats_history_every_s: args
                 .num_flag("stats-history-every-s", d.stats_history_every_s)?,
+            route_pool: args.num_flag("route-pool", d.route_pool)?,
+            route_inflight: args.num_flag("route-inflight", d.route_inflight)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -569,6 +628,14 @@ impl ServeConfig {
     /// Upper bound on the stats-history snapshot interval (1 day):
     /// beyond that the operator almost certainly typo'd the unit.
     pub const MAX_STATS_HISTORY_EVERY_S: u64 = 86_400;
+
+    /// Upper bound on `--route-pool`: the router's backend-connection
+    /// token space strides by 64 per backend.
+    pub const MAX_ROUTE_POOL: usize = 64;
+
+    /// Upper bound on `--route-inflight`: a window deeper than the
+    /// protocol's request cap buys nothing.
+    pub const MAX_ROUTE_INFLIGHT: usize = 4096;
 
     pub fn validate(&self) -> Result<()> {
         if self.max_batch == 0 {
@@ -632,6 +699,21 @@ impl ServeConfig {
                 "--stats-history-every-s ({}) must be <= {} (1 day)",
                 self.stats_history_every_s,
                 Self::MAX_STATS_HISTORY_EVERY_S
+            );
+        }
+        if self.route_pool == 0 || self.route_pool > Self::MAX_ROUTE_POOL {
+            bail!(
+                "--route-pool ({}) must be in 1..={} (connections per backend)",
+                self.route_pool,
+                Self::MAX_ROUTE_POOL
+            );
+        }
+        if self.route_inflight == 0 || self.route_inflight > Self::MAX_ROUTE_INFLIGHT {
+            bail!(
+                "--route-inflight ({}) must be in 1..={} (in-flight window per \
+                 backend connection)",
+                self.route_inflight,
+                Self::MAX_ROUTE_INFLIGHT
             );
         }
         Ok(())
@@ -1005,6 +1087,58 @@ mod tests {
         assert_eq!(parsed.len(), 2);
         assert_eq!(parsed[0].name, "a");
         assert!(ModelSpec::parse_all(&[], None, None).is_err());
+    }
+
+    #[test]
+    fn route_spec_parsing() {
+        let r = RouteSpec::parse("tiny=127.0.0.1:7001").unwrap();
+        assert_eq!(r.name, "tiny");
+        assert_eq!(r.addr, "127.0.0.1:7001");
+        let r = RouteSpec::parse("bench=gpu-host:9000").unwrap();
+        assert_eq!((r.name.as_str(), r.addr.as_str()), ("bench", "gpu-host:9000"));
+        assert!(RouteSpec::parse("tiny").is_err(), "no '='");
+        assert!(RouteSpec::parse("=127.0.0.1:7001").is_err(), "empty name");
+        assert!(RouteSpec::parse("tiny=").is_err(), "empty addr");
+        assert!(RouteSpec::parse("tiny=nohostport").is_err(), "no port");
+    }
+
+    #[test]
+    fn route_spec_list_rejects_duplicate_keys() {
+        // same key twice — even to different backends — is an error,
+        // mirroring the duplicate --model name rule
+        let specs: Vec<String> =
+            vec!["a=h1:7001".into(), "b=h2:7002".into(), "a=h3:7003".into()];
+        let err = RouteSpec::parse_all(&specs).unwrap_err().to_string();
+        assert!(err.contains("duplicate route key \"a\""), "{err}");
+        let ok = RouteSpec::parse_all(&specs[..2].to_vec()).unwrap();
+        assert_eq!(ok.len(), 2);
+        // two keys on ONE backend is fine (shared pool, not a dup)
+        let specs: Vec<String> = vec!["a=h1:7001".into(), "b=h1:7001".into()];
+        assert_eq!(RouteSpec::parse_all(&specs).unwrap().len(), 2);
+        assert!(RouteSpec::parse_all(&[]).is_err());
+    }
+
+    #[test]
+    fn serve_config_router_knobs() {
+        use crate::util::cli::Args;
+        let a = |s: &[&str]| Args::parse(s.iter().map(|x| x.to_string())).unwrap();
+        let d = ServeConfig::default();
+        assert_eq!((d.route_pool, d.route_inflight), (2, 32));
+        let cfg = ServeConfig::from_args(&a(&[
+            "serve",
+            "--route-pool",
+            "4",
+            "--route-inflight",
+            "128",
+        ]))
+        .unwrap();
+        assert_eq!((cfg.route_pool, cfg.route_inflight), (4, 128));
+        // both bounded away from 0 and absurdity
+        assert!(ServeConfig::from_args(&a(&["serve", "--route-pool", "0"])).is_err());
+        assert!(ServeConfig::from_args(&a(&["serve", "--route-pool", "65"])).is_err());
+        assert!(ServeConfig::from_args(&a(&["serve", "--route-pool", "64"])).is_ok());
+        assert!(ServeConfig::from_args(&a(&["serve", "--route-inflight", "0"])).is_err());
+        assert!(ServeConfig::from_args(&a(&["serve", "--route-inflight", "4097"])).is_err());
     }
 
     #[test]

@@ -61,6 +61,10 @@ USAGE: aquant <subcommand> [flags]
             [--stats-every-s N] [--stats-addr H:P]
             [--stats-history PATH] [--stats-history-every-s N]
             [--fast-kernels]
+  serve     --route MODEL=H:P [--route MODEL=H:P ...] [--addr H:P]
+            [--route-pool N] [--route-inflight N] [--max-conns N]
+            [--conn-timeout-ms N] [--max-accepts N] [--io-poll]
+            [--stats-every-s N] [--stats-addr H:P]      (router mode)
 
 methods: nearest adaround brecq qdrop aquant aquant-linear aquant-nofusion
 bits:    e.g. W4A4, W2A2, W32A2 (32 = full precision)
@@ -97,6 +101,23 @@ serve knobs: --workers (inference threads shared by all models; auto =
   FMA GEMM kernels, same as AQUANT_FAST=fma; faster but outside the
   cross-backend bit-identity contract — results are allclose, not
   bit-identical; off by default)
+
+router mode (mutually exclusive with --model): --route MODEL=HOST:PORT
+turns the process into a front-end that forwards framed requests to
+backend serving processes over small pools of persistent, pipelined
+connections — payload bytes forward as received, no decode/re-encode.
+Route order assigns the router-visible model ids (first --route is
+id 0, serving v1 clients), and each backend must host the routed
+model at that SAME id. A dead backend fails only its own in-flight
+requests (clients see a closed connection); other backends keep
+serving while the router reconnects with backoff. --route-pool
+(connections per backend, default 2, max 64), --route-inflight
+(in-flight requests per backend connection before clients
+backpressure, default 32, max 4096). /stats gains per-backend
+forwarded/answered/failed counts, in-flight gauge, reconnects, and
+round-trip quantiles.
+  e.g.  aquant serve --route tiny=10.0.0.2:7000 \
+                     --route bench=10.0.0.3:7000 --addr 0.0.0.0:7000
 
 connection I/O (one epoll event loop owns every socket — connections
 cost state, not threads): --max-conns (concurrent-connection cap;
@@ -289,6 +310,16 @@ fn build_registry(args: &Args, specs: &[ModelSpec]) -> Result<ModelRegistry> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    let routes = args.multi_flag("route");
+    if !routes.is_empty() {
+        if !args.multi_flag("model").is_empty() {
+            bail!(
+                "--route and --model are mutually exclusive: a process either \
+                 routes to backends or serves models locally"
+            );
+        }
+        return serve_router(args, routes);
+    }
     let default_method = match args.str_flag_opt("method") {
         Some(m) => Some(Method::parse(m)?),
         None => None,
@@ -315,6 +346,28 @@ fn serve(args: &Args) -> Result<()> {
     }
     srv.run()?;
     // reached only for bounded runs (--max-conns)
+    println!("{}", stats.report());
+    Ok(())
+}
+
+/// Router mode: no local models, no registry — forward framed requests
+/// to the backends named by the `--route` table.
+fn serve_router(args: &Args, routes: &[String]) -> Result<()> {
+    let routes = aquant::config::RouteSpec::parse_all(routes)?;
+    let addr = args.str_flag("addr", "127.0.0.1:7000");
+    let cfg = aquant::config::ServeConfig::from_args(args)?;
+    let every = args.num_flag("stats-every-s", 30u64)?;
+    let srv = aquant::server::RouterServer::bind(routes, &addr, cfg)?;
+    let stats = srv.stats();
+    if every > 0 {
+        let s = stats.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(every));
+            println!("{}", s.report());
+        });
+    }
+    srv.run()?;
+    // reached only for bounded runs (--max-accepts)
     println!("{}", stats.report());
     Ok(())
 }

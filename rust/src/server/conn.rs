@@ -80,8 +80,12 @@ use crate::nn::registry::ModelRegistry;
 use crate::util::poll::{Event, Interest, Poller, Waker};
 
 use super::metrics::{self, Snapshot, StatsParse, MAX_STATS_REQUEST};
+use super::route;
 use super::sched::{BatchQueue, Doorbell, Pending, ReplySink, TryPush};
-use super::{RequestHeader, ServerStats, MAGIC, MAX_REQ_IMAGES, PROTO_VERSION, V2_HEADER_LEN};
+use super::{
+    RequestHeader, ServerStats, DESC_HEADER_LEN, MAGIC, MAGIC_DESC, MAX_REQ_IMAGES, PROTO_VERSION,
+    V2_HEADER_LEN,
+};
 
 /// Stop staging completed replies into a connection's write buffer past
 /// this many unflushed bytes; they wait in their channels instead (the
@@ -127,6 +131,14 @@ pub enum Decoded {
         header: RequestHeader,
         images: Vec<f32>,
     },
+    /// The in-progress request completed in raw (forwarding) mode:
+    /// `frame` is the FULL wire frame — header bytes re-encoded
+    /// byte-exactly plus payload bytes exactly as received — ready to
+    /// append to a backend connection with zero recompute.
+    RequestRaw {
+        header: RequestHeader,
+        frame: Vec<u8>,
+    },
 }
 
 enum DecodeState {
@@ -148,6 +160,15 @@ enum DecodeState {
         remaining: usize,
         carry: [u8; 4],
         carry_len: usize,
+    },
+    /// Streaming payload bytes verbatim into a forwardable frame
+    /// (router mode): `frame` was pre-seeded with the header's exact
+    /// wire bytes so completion hands back one contiguous frame.
+    PayloadRaw {
+        header: RequestHeader,
+        frame: Vec<u8>,
+        /// Raw payload bytes still expected.
+        remaining: usize,
     },
 }
 
@@ -190,6 +211,7 @@ impl RequestDecoder {
             DecodeState::Header { got, need, .. } => need - got,
             DecodeState::Gate(_) => 0,
             DecodeState::Payload { remaining, .. } => *remaining,
+            DecodeState::PayloadRaw { remaining, .. } => *remaining,
         }
     }
 
@@ -234,6 +256,39 @@ impl RequestDecoder {
         };
     }
 
+    /// Accept the gated header in raw (forwarding) mode: accumulate
+    /// `payload_bytes` verbatim after the header's exact wire bytes, so
+    /// the completed [`Decoded::RequestRaw`] frame forwards with zero
+    /// recompute. Caller has validated the header, so `payload_bytes`
+    /// (= `n × img_elems × 4`) bounds the allocation.
+    pub fn begin_payload_raw(&mut self, payload_bytes: usize) {
+        let header = match &self.state {
+            DecodeState::Gate(h) => *h,
+            _ => {
+                debug_assert!(false, "begin_payload_raw outside the header gate");
+                return;
+            }
+        };
+        debug_assert!(payload_bytes > 0, "routed payloads are never empty");
+        let mut frame = header.encode();
+        frame.reserve(payload_bytes);
+        self.state = DecodeState::PayloadRaw {
+            header,
+            frame,
+            remaining: payload_bytes,
+        };
+    }
+
+    /// Back to a fresh header state (used after answering a
+    /// payload-less describe request in place).
+    pub fn reset(&mut self) {
+        self.state = DecodeState::Header {
+            buf: [0; V2_HEADER_LEN],
+            got: 0,
+            need: 4,
+        };
+    }
+
     /// Feed bytes; consumes `min(bytes.len(), want())` and returns
     /// `(consumed, event)`. At most one event per call when fed at most
     /// `want()` bytes (exact-sized reads guarantee that); oversized
@@ -252,9 +307,17 @@ impl RequestDecoder {
                     *need = V2_HEADER_LEN; // sniffed v2: extend the header
                     return (take, Decoded::NeedMore);
                 }
+                if *need == 4 && buf[..4] == MAGIC_DESC {
+                    *need = DESC_HEADER_LEN; // sniffed describe request
+                    return (take, Decoded::NeedMore);
+                }
                 let header = if *need == 4 {
                     RequestHeader::V1 {
                         n: u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]),
+                    }
+                } else if *need == DESC_HEADER_LEN {
+                    RequestHeader::Describe {
+                        version: u16::from_le_bytes([buf[4], buf[5]]),
                     }
                 } else {
                     RequestHeader::V2 {
@@ -309,6 +372,26 @@ impl RequestDecoder {
                 };
                 (take, Decoded::Request { header, images })
             }
+            DecodeState::PayloadRaw {
+                header,
+                frame,
+                remaining,
+            } => {
+                let take = bytes.len().min(*remaining);
+                frame.extend_from_slice(&bytes[..take]);
+                *remaining -= take;
+                if *remaining > 0 {
+                    return (take, Decoded::NeedMore);
+                }
+                let header = *header;
+                let frame = std::mem::take(frame);
+                self.state = DecodeState::Header {
+                    buf: [0; V2_HEADER_LEN],
+                    got: 0,
+                    need: 4,
+                };
+                (take, Decoded::RequestRaw { header, frame })
+            }
         }
     }
 }
@@ -319,7 +402,7 @@ impl RequestDecoder {
 
 /// Outcome of one [`WriteBuf::flush_to`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Flush {
+pub(crate) enum Flush {
     /// Everything staged has hit the socket.
     Done,
     /// The socket stopped accepting bytes (`WouldBlock`); register
@@ -332,18 +415,18 @@ enum Flush {
 /// explicit partial-write/EPIPE path (unit-tested below, exercised over
 /// real sockets by `rust/tests/conn_conformance.rs`).
 #[derive(Default)]
-struct WriteBuf {
+pub(crate) struct WriteBuf {
     buf: Vec<u8>,
     pos: usize,
 }
 
 impl WriteBuf {
     /// Unflushed bytes.
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.buf.len() - self.pos
     }
 
-    fn is_empty(&self) -> bool {
+    pub(crate) fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
@@ -357,15 +440,16 @@ impl WriteBuf {
         }
     }
 
-    /// Stage pre-encoded bytes (the stats endpoint's HTTP responses).
-    fn push_bytes(&mut self, bytes: &[u8]) {
+    /// Stage pre-encoded bytes (stats HTTP responses, forwarded
+    /// frames, describe replies).
+    pub(crate) fn push_bytes(&mut self, bytes: &[u8]) {
         self.buf.extend_from_slice(bytes);
     }
 
     /// Write as much as the socket takes right now. `Err` is fatal for
     /// the connection (EPIPE, reset, ...); `Interrupted` is retried
     /// here, `WouldBlock` returns [`Flush::Blocked`].
-    fn flush_to(&mut self, w: &mut impl Write) -> io::Result<Flush> {
+    pub(crate) fn flush_to(&mut self, w: &mut impl Write) -> io::Result<Flush> {
         while self.pos < self.buf.len() {
             match w.write(&self.buf[self.pos..]) {
                 Ok(0) => {
@@ -419,6 +503,16 @@ enum Phase {
         pending: Pending,
         rx: mpsc::Receiver<Result<Vec<u32>, String>>,
     },
+    /// Router mode's park: a routed request is waiting for backend
+    /// capacity (or the backend's describe handshake). `Some` holds a
+    /// fully-decoded frame that found every backend connection
+    /// saturated; `None` parked at the header gate (the decoder still
+    /// holds the gated header, no payload read yet). Read interest is
+    /// off either way; retried on every sweep.
+    RouteParked {
+        model_id: u16,
+        frame: Option<route::ParkedFrame>,
+    },
     /// No more reads (clean half-close, or a counted protocol
     /// rejection): answer everything already accepted, flush, close.
     /// This preserves the blocking server's ordering guarantee that a
@@ -452,7 +546,7 @@ impl Conn {
     fn timeout_eligible(&self) -> bool {
         self.inflight.is_empty()
             && self.write.is_empty()
-            && !matches!(self.phase, Phase::Parked { .. })
+            && !matches!(self.phase, Phase::Parked { .. } | Phase::RouteParked { .. })
     }
 }
 
@@ -495,11 +589,14 @@ struct StatsConn {
     opened: Instant,
 }
 
-/// Everything [`run_event_loop`] multiplexes (built by `Server::run`).
+/// Everything [`run_event_loop`] multiplexes (built by `Server::run`
+/// in serving mode, `RouterServer::run` in router mode).
 pub(crate) struct LoopCtx {
-    pub registry: Arc<ModelRegistry>,
+    /// Local model registry — `None` in router mode (requests forward
+    /// to backends instead of resolving against local engines).
+    pub registry: Option<Arc<ModelRegistry>>,
     /// One queue per model, indexed by model id (shared with the
-    /// scheduler).
+    /// scheduler). Empty in router mode.
     pub queues: Vec<Arc<BatchQueue>>,
     pub stats: Arc<ServerStats>,
     /// The scheduler's doorbell (rung on became-admissible pushes).
@@ -516,6 +613,9 @@ pub(crate) struct LoopCtx {
     pub poll_fallback: bool,
     /// Already-bound `--stats-addr` listener (None = no endpoint).
     pub stats_listener: Option<TcpListener>,
+    /// Router mode: routing table + backend connection pools, driven
+    /// by this same loop (`None` = local serving).
+    pub router: Option<route::Router>,
 }
 
 pub(crate) fn run_event_loop(listener: TcpListener, ctx: LoopCtx) -> Result<()> {
@@ -590,7 +690,7 @@ impl EventLoop {
             }
             None => None,
         };
-        Ok(EventLoop {
+        let mut el = EventLoop {
             ctx,
             poller,
             waker,
@@ -608,7 +708,14 @@ impl EventLoop {
             stats_free: Vec::new(),
             stats_open: 0,
             stats_accept_errs: 0,
-        })
+        };
+        // Router mode: open the backend pools before accepting clients
+        // (failures only arm backoff deadlines — the loop starts
+        // regardless and keeps retrying).
+        if let Some(router) = el.ctx.router.as_mut() {
+            router.connect_all(&mut el.poller);
+        }
+        Ok(el)
     }
 
     fn run(mut self) -> Result<()> {
@@ -629,8 +736,14 @@ impl EventLoop {
                     TOKEN_WAKER => self.waker.drain(),
                     TOKEN_STATS_LISTENER => stats_accept_ready = true,
                     t if t >= STATS_TOKEN_BASE => self.on_stats_event(*ev),
+                    t if t >= route::ROUTE_TOKEN_BASE => self.on_route_event(*ev),
                     _ => self.on_conn_event(*ev),
                 }
+            }
+            // Router mode: attempt reconnects whose backoff deadline
+            // passed (next_timeout wakes the loop for them).
+            if let Some(router) = self.ctx.router.as_mut() {
+                router.tick(Instant::now(), &mut self.poller);
             }
             // Accept-backoff deadline reached: unmask the listener and
             // retry (the masked fd emitted no event; the poller timeout
@@ -696,7 +809,16 @@ impl EventLoop {
                     .unwrap_or(Duration::ZERO)
             })
             .min();
-        [retry, idle, stats_idle].into_iter().flatten().min()
+        let route_retry = self
+            .ctx
+            .router
+            .as_ref()
+            .and_then(|r| r.next_deadline())
+            .map(|t| t.checked_duration_since(now).unwrap_or(Duration::ZERO));
+        [retry, idle, stats_idle, route_retry]
+            .into_iter()
+            .flatten()
+            .min()
     }
 
     fn sweep_timeouts(&mut self) {
@@ -1032,6 +1154,19 @@ impl EventLoop {
         Ok(())
     }
 
+    // -- backend (router) events --------------------------------------
+
+    /// Readiness on a backend-connection token: hand it to the router
+    /// (flush staged frames / parse replies / tear down + schedule
+    /// reconnect). Client-visible effects surface through the reply
+    /// channels and the following sweep.
+    fn on_route_event(&mut self, ev: Event) {
+        let Some(router) = self.ctx.router.as_mut() else {
+            return; // stale token without a router: ignore
+        };
+        router.on_event(ev, &mut self.poller, &mut self.chunk);
+    }
+
     // -- connection events --------------------------------------------
 
     fn on_conn_event(&mut self, ev: Event) {
@@ -1094,6 +1229,10 @@ impl EventLoop {
                                 self.queue_request(slot, header, images)?;
                                 continue;
                             }
+                            Decoded::RequestRaw { header, frame } => {
+                                self.forward_request(slot, header, frame)?;
+                                continue;
+                            }
                         }
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
@@ -1130,20 +1269,51 @@ impl EventLoop {
 
     /// Validate a gated header exactly as the blocking server did —
     /// same order, same stats — then start payload streaming or drain.
+    /// Router mode swaps the registry lookup for the routing table
+    /// ([`EventLoop::resolve_route_gate`]).
     fn resolve_header_gate(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        if self.ctx.router.is_some() {
+            return self.resolve_route_gate(slot);
+        }
         let conn = self.conns[slot].as_mut().expect("live conn");
         let Some(hdr) = conn.decoder.gated() else {
             return Ok(());
         };
-        if let RequestHeader::V2 { version, .. } = hdr {
-            if version != PROTO_VERSION {
+        match hdr {
+            RequestHeader::V2 { version, .. } | RequestHeader::Describe { version }
+                if version != PROTO_VERSION =>
+            {
                 self.ctx.stats.bad_version.fetch_add(1, Ordering::Relaxed);
                 conn.phase = Phase::Draining;
                 return Ok(());
             }
+            RequestHeader::Describe { .. } => {
+                // Payload-less: answer with the model dimension table
+                // (what a router's handshake needs to size payloads)
+                // and return the decoder to the next header.
+                let registry = self.ctx.registry.as_ref().expect("serving mode");
+                let elems: Vec<u32> = (0..registry.len())
+                    .map(|id| {
+                        registry
+                            .get(id as u16)
+                            .map(|e| e.engine.img_elems() as u32)
+                            .unwrap_or(0)
+                    })
+                    .collect();
+                conn.write.push_bytes(&super::encode_describe_response(&elems));
+                conn.decoder.reset();
+                return Ok(());
+            }
+            _ => {}
         }
         let model_id = hdr.model_id();
-        let Some(entry) = self.ctx.registry.get(model_id) else {
+        let Some(entry) = self
+            .ctx
+            .registry
+            .as_ref()
+            .expect("serving mode")
+            .get(model_id)
+        else {
             self.ctx.stats.unknown_model.fetch_add(1, Ordering::Relaxed);
             conn.phase = Phase::Draining;
             return Ok(());
@@ -1157,6 +1327,111 @@ impl EventLoop {
         }
         conn.decoder.begin_payload(entry.engine.img_elems());
         Ok(())
+    }
+
+    /// Router mode's header gate: same validation order and stats as
+    /// local serving, but the verdict comes from the routing table and
+    /// acceptance starts RAW payload streaming (forwarded verbatim).
+    /// A routed model whose backend handshake is pending, or whose
+    /// backend connections are all saturated, parks the connection at
+    /// the gate — no payload bytes are read into memory that could
+    /// only wait.
+    fn resolve_route_gate(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
+        let conn = self.conns[slot].as_mut().expect("live conn");
+        let Some(hdr) = conn.decoder.gated() else {
+            return Ok(());
+        };
+        let router = self.ctx.router.as_ref().expect("router mode");
+        match hdr {
+            RequestHeader::V2 { version, .. } | RequestHeader::Describe { version }
+                if version != PROTO_VERSION =>
+            {
+                self.ctx.stats.bad_version.fetch_add(1, Ordering::Relaxed);
+                conn.phase = Phase::Draining;
+                return Ok(());
+            }
+            RequestHeader::Describe { .. } => {
+                // Answer from the routing table: per-route img_elems as
+                // learned from backend handshakes (0 while pending).
+                let elems = router.describe_elems();
+                conn.write.push_bytes(&super::encode_describe_response(&elems));
+                conn.decoder.reset();
+                return Ok(());
+            }
+            _ => {}
+        }
+        let model_id = hdr.model_id();
+        if model_id as usize >= router.n_routes() {
+            self.ctx.stats.unknown_model.fetch_add(1, Ordering::Relaxed);
+            conn.phase = Phase::Draining;
+            return Ok(());
+        }
+        let n = hdr.n() as usize;
+        if n == 0 || n > MAX_REQ_IMAGES {
+            let stats = self.ctx.stats.model(model_id).expect("stats per route");
+            stats.rejected.fetch_add(1, Ordering::Relaxed);
+            conn.phase = Phase::Draining;
+            return Ok(());
+        }
+        match router.payload_elems(model_id) {
+            Some(elems) if router.has_capacity(model_id) => {
+                conn.decoder.begin_payload_raw(n * elems as usize * 4);
+            }
+            _ => {
+                conn.phase = Phase::RouteParked {
+                    model_id,
+                    frame: None,
+                };
+            }
+        }
+        Ok(())
+    }
+
+    /// A complete raw frame (router mode): forward it to the model's
+    /// backend, or park it if every backend connection is saturated.
+    fn forward_request(
+        &mut self,
+        slot: usize,
+        header: RequestHeader,
+        frame: Vec<u8>,
+    ) -> std::result::Result<(), CloseReason> {
+        let pf = route::ParkedFrame {
+            frame,
+            n: header.n(),
+            t0: Instant::now(),
+        };
+        self.route_forward(slot, header.model_id(), pf)
+    }
+
+    /// The forward/park seam (router mode's `push_or_park`): used by
+    /// both the fresh-frame path and every sweep retry so they cannot
+    /// drift apart. On success the reply receiver joins the client
+    /// connection's in-flight line — the same in-order staging local
+    /// serving uses.
+    fn route_forward(
+        &mut self,
+        slot: usize,
+        model_id: u16,
+        pf: route::ParkedFrame,
+    ) -> std::result::Result<(), CloseReason> {
+        let router = self.ctx.router.as_mut().expect("router mode");
+        let t0 = pf.t0;
+        match router.try_forward(model_id, pf, &mut self.poller) {
+            route::Forward::Sent(rx) => {
+                let conn = self.conns[slot].as_mut().expect("live conn");
+                conn.phase = Phase::Open;
+                conn.inflight.push_back(InFlight { model_id, rx, t0 });
+                Ok(())
+            }
+            route::Forward::Saturated(pf) => {
+                let conn = self.conns[slot].as_mut().expect("live conn");
+                conn.phase = Phase::RouteParked {
+                    model_id,
+                    frame: Some(pf),
+                };
+                Ok(())
+            }
+        }
     }
 
     /// A complete request: build the Pending and push (or park).
@@ -1251,18 +1526,34 @@ impl EventLoop {
     /// comes back via `update_interest`.
     fn retry_park(&mut self, slot: usize) -> std::result::Result<(), CloseReason> {
         let conn = self.conns[slot].as_mut().expect("live conn");
-        if !matches!(conn.phase, Phase::Parked { .. }) {
-            return Ok(());
+        match conn.phase {
+            Phase::Parked { .. } => {
+                let Phase::Parked {
+                    model_id,
+                    pending,
+                    rx,
+                } = std::mem::replace(&mut conn.phase, Phase::Open)
+                else {
+                    unreachable!()
+                };
+                self.push_or_park(slot, model_id, pending, rx)
+            }
+            // Router mode: a parked frame retries the forward; a
+            // gate-park re-runs the gate (the backend handshake may
+            // have landed, or capacity freed).
+            Phase::RouteParked { .. } => {
+                let Phase::RouteParked { model_id, frame } =
+                    std::mem::replace(&mut conn.phase, Phase::Open)
+                else {
+                    unreachable!()
+                };
+                match frame {
+                    Some(pf) => self.route_forward(slot, model_id, pf),
+                    None => self.resolve_route_gate(slot),
+                }
+            }
+            _ => Ok(()),
         }
-        let Phase::Parked {
-            model_id,
-            pending,
-            rx,
-        } = std::mem::replace(&mut conn.phase, Phase::Open)
-        else {
-            unreachable!()
-        };
-        self.push_or_park(slot, model_id, pending, rx)
     }
 
     /// Move completed replies (front-first — responses stay in request
@@ -1554,9 +1845,93 @@ mod tests {
     #[test]
     fn stats_token_space_is_disjoint() {
         // serving tokens are slot + 2 with slots bounded by fd limits;
-        // pin the constants so the dispatch match stays unambiguous
+        // pin the constants so the dispatch match stays unambiguous:
+        // client < route < stats < stats-listener
         assert!(STATS_TOKEN_BASE > TOKEN_BASE + (1u64 << 32));
         assert!(TOKEN_STATS_LISTENER > STATS_TOKEN_BASE + MAX_STATS_CONNS as u64);
+        assert!(route::ROUTE_TOKEN_BASE > TOKEN_BASE + (1u64 << 32));
+        assert!(
+            STATS_TOKEN_BASE > route::ROUTE_TOKEN_BASE + route::ROUTE_TOKEN_STRIDE * (1u64 << 16),
+            "route tokens (backend x stride + conn) stay below the stats space"
+        );
+    }
+
+    #[test]
+    fn decoder_raw_mode_rebuilds_the_exact_wire_frame() {
+        // router mode: header re-encode + verbatim payload must equal
+        // the bytes the client sent, byte for byte
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&v2_bytes(1, 2));
+        for f in [0.5f32, -1.0, 3.25, 0.0, 9.5, 2.0] {
+            wire.extend_from_slice(&f.to_le_bytes());
+        }
+        let mut d = RequestDecoder::new();
+        let mut off = 0;
+        let mut out = None;
+        while off < wire.len() {
+            if d.want() == 0 {
+                assert!(d.gated().is_some());
+                d.begin_payload_raw(2 * 3 * 4); // n=2, img_elems=3
+                continue;
+            }
+            // drip odd-sized slices to exercise resume points
+            let take = d.want().min(5).min(wire.len() - off);
+            let (c, ev) = d.feed(&wire[off..off + take]);
+            off += c;
+            if let Decoded::RequestRaw { header, frame } = ev {
+                assert_eq!(header, RequestHeader::V2 {
+                    version: PROTO_VERSION,
+                    model_id: 1,
+                    n: 2
+                });
+                out = Some(frame);
+            }
+        }
+        assert_eq!(out.expect("frame completed"), wire);
+        assert_eq!(d.want(), 4, "decoder reset for the next request");
+    }
+
+    #[test]
+    fn decoder_raw_mode_v1_frame_is_byte_identical() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&1u32.to_le_bytes());
+        wire.extend_from_slice(&7.5f32.to_le_bytes());
+        let mut d = RequestDecoder::new();
+        let (c, ev) = d.feed(&wire);
+        assert_eq!((c, ev), (4, Decoded::Header(RequestHeader::V1 { n: 1 })));
+        d.begin_payload_raw(4);
+        let (c, ev) = d.feed(&wire[4..]);
+        assert_eq!(c, 4);
+        match ev {
+            Decoded::RequestRaw { frame, .. } => assert_eq!(frame, wire),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decoder_sniffs_describe_and_resets() {
+        let mut d = RequestDecoder::new();
+        let wire = RequestHeader::Describe {
+            version: PROTO_VERSION,
+        }
+        .encode();
+        let (c, ev) = d.feed(&wire[..4]);
+        assert_eq!((c, ev), (4, Decoded::NeedMore), "magic alone is not a header");
+        assert_eq!(d.want(), super::super::DESC_HEADER_LEN - 4);
+        let (c, ev) = d.feed(&wire[4..]);
+        assert_eq!(c, wire.len() - 4);
+        assert_eq!(
+            ev,
+            Decoded::Header(RequestHeader::Describe {
+                version: PROTO_VERSION
+            })
+        );
+        // describe is payload-less: the server answers in place and
+        // resets the decoder for the next request
+        assert_eq!(d.want(), 0, "gated");
+        d.reset();
+        assert_eq!(d.want(), 4);
+        assert_eq!(d.header_progress(), Some(0));
     }
 
     #[test]

@@ -227,6 +227,41 @@ impl ModelSnapshot {
     }
 }
 
+/// One backend's slice of a router-mode [`Snapshot`].
+#[derive(Debug, Clone)]
+pub struct BackendSnapshot {
+    /// Backend address (`host:port`).
+    pub addr: String,
+    /// Route keys this backend serves.
+    pub models: Vec<String>,
+    pub forwarded: u64,
+    pub answered: u64,
+    pub failed: u64,
+    /// Requests currently awaiting a backend reply (gauge).
+    pub inflight: u64,
+    pub reconnects: u64,
+    /// Backend round-trip time (forward → reply parsed).
+    pub rtt: HistSummary,
+}
+
+impl BackendSnapshot {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("addr", json::s(&self.addr)),
+            (
+                "models",
+                json::arr(self.models.iter().map(|m| json::s(m))),
+            ),
+            ("forwarded", json::num(self.forwarded as f64)),
+            ("answered", json::num(self.answered as f64)),
+            ("failed", json::num(self.failed as f64)),
+            ("inflight", json::num(self.inflight as f64)),
+            ("reconnects", json::num(self.reconnects as f64)),
+            ("rtt", self.rtt.to_json()),
+        ])
+    }
+}
+
 /// Point-in-time view of a whole [`ServerStats`]: what `GET /stats`
 /// serves and what each history line persists. Collected with relaxed
 /// loads while the server runs, so counters may be mutually a few
@@ -235,6 +270,9 @@ impl ModelSnapshot {
 pub struct Snapshot {
     pub uptime_s: f64,
     pub models: Vec<ModelSnapshot>,
+    /// Router mode only: one entry per distinct backend address
+    /// (empty when serving locally).
+    pub backends: Vec<BackendSnapshot>,
     pub unknown_model: u64,
     pub bad_version: u64,
     pub rounds: u64,
@@ -280,9 +318,28 @@ impl Snapshot {
                 service: s.service_hist.summary(),
             })
             .collect();
+        let backends = stats
+            .router()
+            .map(|r| {
+                r.backends
+                    .iter()
+                    .map(|b| BackendSnapshot {
+                        addr: b.addr.clone(),
+                        models: b.models.clone(),
+                        forwarded: b.forwarded.load(Ordering::Relaxed),
+                        answered: b.answered.load(Ordering::Relaxed),
+                        failed: b.failed.load(Ordering::Relaxed),
+                        inflight: b.inflight.load(Ordering::Relaxed),
+                        reconnects: b.reconnects.load(Ordering::Relaxed),
+                        rtt: b.rtt.summary(),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         Snapshot {
             uptime_s: stats.uptime().as_secs_f64(),
             models,
+            backends,
             unknown_model: stats.unknown_model.load(Ordering::Relaxed),
             bad_version: stats.bad_version.load(Ordering::Relaxed),
             rounds: stats.rounds.load(Ordering::Relaxed),
@@ -298,27 +355,37 @@ impl Snapshot {
     /// The JSON document `GET /stats` returns (field glossary in
     /// README "Observability").
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("uptime_s", json::num(self.uptime_s)),
             (
                 "models",
                 json::arr(self.models.iter().map(|m| m.to_json())),
             ),
-            (
-                "server",
-                json::obj(vec![
-                    ("unknown_model", json::num(self.unknown_model as f64)),
-                    ("bad_version", json::num(self.bad_version as f64)),
-                    ("rounds", json::num(self.rounds as f64)),
-                    ("conns_open", json::num(self.conns_open as f64)),
-                    ("conns_accepted", json::num(self.conns_accepted as f64)),
-                    ("conns_rejected", json::num(self.conns_rejected as f64)),
-                    ("conns_timed_out", json::num(self.conns_timed_out as f64)),
-                    ("kernel_backend", json::s(self.kernel_backend)),
-                    ("fast_mode", json::s(self.fast_mode)),
-                ]),
-            ),
-        ])
+        ];
+        if !self.backends.is_empty() {
+            fields.push((
+                "router",
+                json::obj(vec![(
+                    "backends",
+                    json::arr(self.backends.iter().map(|b| b.to_json())),
+                )]),
+            ));
+        }
+        fields.push((
+            "server",
+            json::obj(vec![
+                ("unknown_model", json::num(self.unknown_model as f64)),
+                ("bad_version", json::num(self.bad_version as f64)),
+                ("rounds", json::num(self.rounds as f64)),
+                ("conns_open", json::num(self.conns_open as f64)),
+                ("conns_accepted", json::num(self.conns_accepted as f64)),
+                ("conns_rejected", json::num(self.conns_rejected as f64)),
+                ("conns_timed_out", json::num(self.conns_timed_out as f64)),
+                ("kernel_backend", json::s(self.kernel_backend)),
+                ("fast_mode", json::s(self.fast_mode)),
+            ]),
+        ));
+        json::obj(fields)
     }
 
     /// The plaintext rendering `GET /stats?fmt=text` returns: one line
@@ -355,6 +422,20 @@ impl Snapshot {
                     String::new()
                 },
                 m.effective_weight_milli as f64 / 1000.0,
+            ));
+        }
+        for b in &self.backends {
+            out.push_str(&format!(
+                "backend {} [{}]: forwarded {}  answered {}  failed {}  in-flight {}  \
+                 reconnects {}  rtt {}\n",
+                b.addr,
+                b.models.join(","),
+                b.forwarded,
+                b.answered,
+                b.failed,
+                b.inflight,
+                b.reconnects,
+                b.rtt.quantile_line(),
             ));
         }
         out.push_str(&format!(
@@ -651,6 +732,65 @@ mod tests {
         assert!(text.contains("model 0 a:"), "{text}");
         assert!(text.contains("model 1 b:"), "{text}");
         assert!(text.contains(&format!("kernels {}", snap.kernel_backend)), "{text}");
+    }
+
+    #[test]
+    fn router_snapshot_surfaces_per_backend_counters() {
+        use super::super::route::RouterStats;
+        use crate::config::RouteSpec;
+        let routes = vec![
+            RouteSpec {
+                name: "tiny".into(),
+                addr: "127.0.0.1:9001".into(),
+            },
+            RouteSpec {
+                name: "bench".into(),
+                addr: "127.0.0.1:9002".into(),
+            },
+        ];
+        let router = Arc::new(RouterStats::for_routes(&routes));
+        router.backends[0].forwarded.fetch_add(5, Ordering::Relaxed);
+        router.backends[0].answered.fetch_add(4, Ordering::Relaxed);
+        router.backends[0].inflight.fetch_add(1, Ordering::Relaxed);
+        router.backends[0].rtt.observe(250);
+        router.backends[1].failed.fetch_add(2, Ordering::Relaxed);
+        router.backends[1].reconnects.fetch_add(3, Ordering::Relaxed);
+        let stats = ServerStats::for_router(
+            vec!["tiny".into(), "bench".into()],
+            router,
+        );
+        let snap = Snapshot::collect(&stats);
+        assert_eq!(snap.backends.len(), 2);
+        assert_eq!(snap.backends[0].forwarded, 5);
+        assert_eq!(snap.backends[0].inflight, 1);
+        assert_eq!(snap.backends[0].rtt.count, 1);
+        assert_eq!(snap.backends[1].failed, 2);
+        assert_eq!(snap.backends[1].reconnects, 3);
+        // JSON: router key present, backends carry addr + counters
+        let j = Json::parse(&snap.to_json().dump()).unwrap();
+        let backends = j
+            .req("router")
+            .unwrap()
+            .req("backends")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(backends.len(), 2);
+        assert_eq!(
+            backends[0].req("addr").unwrap().as_str(),
+            Some("127.0.0.1:9001")
+        );
+        assert_eq!(backends[0].req("forwarded").unwrap().as_i64(), Some(5));
+        assert_eq!(backends[1].req("reconnects").unwrap().as_i64(), Some(3));
+        // text rendering names each backend
+        let text = snap.to_text();
+        assert!(text.contains("backend 127.0.0.1:9001 [tiny]:"), "{text}");
+        assert!(text.contains("reconnects 3"), "{text}");
+        // local-serving snapshots carry no router key
+        let local = Snapshot::collect(&test_stats());
+        assert!(local.backends.is_empty());
+        let j = Json::parse(&local.to_json().dump()).unwrap();
+        assert!(j.get("router").is_none());
     }
 
     #[test]

@@ -12,18 +12,27 @@
 //!                (routed to model id 0, the default model)
 //!   v2 request:  magic "AQSV" | u16 version (=2) | u16 model_id |
 //!                u32 n_images (1..=4096), then n·(C·H·W) f32 pixels
-//!   response:    u32 n_images, then n u32 class ids   (both versions)
+//!   describe:    magic "AQSD" | u16 version (=2) | u16 reserved (=0)
+//!                → response u32 n_models, then n u32 img_elems
+//!                  (f32s per image, indexed by model id)
+//!   response:    u32 n_images, then n u32 class ids   (v1 and v2)
 //! ```
 //!
 //! Sniffing is unambiguous: a v1 header reading "AQSV" would mean
 //! n = 0x5653_5141 (≈1.4e9), far beyond the 4096-image protocol cap, so
-//! no *valid* v1 request can be mistaken for v2 (pinned by the protocol
-//! property tests). A connection may pipeline any number of requests —
-//! mixing v1 and v2 freely — and the server answers in order. A request
-//! with a bad `n`, an unknown model id, or an unsupported version is
+//! no *valid* v1 request can be mistaken for v2 — and "AQSD" reads
+//! 0x4453_5141, equally out of range (pinned by the protocol property
+//! tests). A connection may pipeline any number of requests — mixing
+//! v1 and v2 freely — and the server answers in order. A request with
+//! a bad `n`, an unknown model id, or an unsupported version is
 //! rejected by closing the connection (counted in stats); a mid-stream
 //! EOF drops only that connection. Either way the accept loop and the
 //! scheduler keep serving other connections.
+//!
+//! The describe frame exists for the router tier ([`route`]): a
+//! `--route` front-end must size incoming payloads (`n × img_elems ×
+//! 4`) without hosting the models, so it asks each backend for its
+//! dimension table on connect. Any client may send it.
 //!
 //! # Architecture
 //!
@@ -119,6 +128,7 @@
 
 pub mod conn;
 pub mod metrics;
+pub mod route;
 pub mod sched;
 
 use std::io::{ErrorKind, Read, Write};
@@ -135,6 +145,7 @@ use crate::nn::pool::{InferencePool, IntraCfg};
 use crate::nn::registry::ModelRegistry;
 
 pub use metrics::{HistSummary, LatencyHist, Snapshot};
+pub use route::RouterServer;
 pub use sched::{FairScheduler, Grant, Policy, SloAdapter, MAX_WEIGHT, SLO_FACTOR_MAX};
 
 use sched::{BatchQueue, Doorbell, SchedCtx};
@@ -147,11 +158,21 @@ pub const MAX_REQ_IMAGES: usize = 4096;
 /// can never misroute a valid v1 request.
 pub const MAGIC: [u8; 4] = *b"AQSV";
 
+/// Describe-request magic word ("AQSD"): ask a serving process for its
+/// model dimension table (u32 count + count × u32 `img_elems`, indexed
+/// by model id). As a v1 u32 this reads 0x4453_5141 — also far above
+/// [`MAX_REQ_IMAGES`] and distinct from [`MAGIC`] — so the same byte
+/// sniff stays unambiguous. The router tier handshakes with it.
+pub const MAGIC_DESC: [u8; 4] = *b"AQSD";
+
 /// Protocol version this server speaks (and the only one it accepts).
 pub const PROTO_VERSION: u16 = 2;
 
 /// Bytes of a v2 request header (magic + version + model id + n).
 pub const V2_HEADER_LEN: usize = 12;
+
+/// Bytes of a describe request (magic + version + reserved u16).
+pub const DESC_HEADER_LEN: usize = 8;
 
 /// Batch-size histogram buckets: bucket i counts executed batches with
 /// 2^i ..= 2^(i+1)−1 images (last bucket is open-ended at 4096).
@@ -164,27 +185,35 @@ pub const BATCH_BUCKETS: usize = 13;
 pub enum RequestHeader {
     V1 { n: u32 },
     V2 { version: u16, model_id: u16, n: u32 },
+    /// Describe request ("AQSD"): no payload, answered with the model
+    /// dimension table. Carries no model id and no image count.
+    Describe { version: u16 },
 }
 
 impl RequestHeader {
-    /// Images promised by the header.
+    /// Images promised by the header (0 for describe — it has no
+    /// payload).
     pub fn n(&self) -> u32 {
         match *self {
             RequestHeader::V1 { n } | RequestHeader::V2 { n, .. } => n,
+            RequestHeader::Describe { .. } => 0,
         }
     }
 
     /// Model routing: v1 clients always hit the default model (id 0).
+    /// Describe is model-less; it reports 0 so callers that only log
+    /// never branch on it.
     pub fn model_id(&self) -> u16 {
         match *self {
             RequestHeader::V1 { .. } => 0,
             RequestHeader::V2 { model_id, .. } => model_id,
+            RequestHeader::Describe { .. } => 0,
         }
     }
 
-    /// Wire bytes for this header (v1: 4 bytes; v2: 12 bytes). Encoding
-    /// preserves an arbitrary `version` so tests can round-trip
-    /// unsupported versions too.
+    /// Wire bytes for this header (v1: 4 bytes; v2: 12; describe: 8).
+    /// Encoding preserves an arbitrary `version` so tests can
+    /// round-trip unsupported versions too.
     pub fn encode(&self) -> Vec<u8> {
         match *self {
             RequestHeader::V1 { n } => n.to_le_bytes().to_vec(),
@@ -200,8 +229,26 @@ impl RequestHeader {
                 out.extend_from_slice(&n.to_le_bytes());
                 out
             }
+            RequestHeader::Describe { version } => {
+                let mut out = Vec::with_capacity(DESC_HEADER_LEN);
+                out.extend_from_slice(&MAGIC_DESC);
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&0u16.to_le_bytes());
+                out
+            }
         }
     }
+}
+
+/// Encode a describe response: the model dimension table (`img_elems`
+/// per model id).
+pub fn encode_describe_response(elems: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + elems.len() * 4);
+    out.extend_from_slice(&(elems.len() as u32).to_le_bytes());
+    for e in elems {
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+    out
 }
 
 /// Encode a v2 header with the current [`PROTO_VERSION`].
@@ -232,6 +279,12 @@ pub fn read_request_header(stream: &mut impl Read) -> std::io::Result<Option<Req
             version: u16::from_le_bytes([rest[0], rest[1]]),
             model_id: u16::from_le_bytes([rest[2], rest[3]]),
             n: u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]),
+        }))
+    } else if first == MAGIC_DESC {
+        let mut rest = [0u8; DESC_HEADER_LEN - 4];
+        stream.read_exact(&mut rest)?;
+        Ok(Some(RequestHeader::Describe {
+            version: u16::from_le_bytes([rest[0], rest[1]]),
         }))
     } else {
         Ok(Some(RequestHeader::V1 {
@@ -398,15 +451,19 @@ pub struct ServerStats {
     /// Connections closed by the idle/read timeout
     /// (`--conn-timeout-ms`); slow-loris and dead peers land here.
     pub conns_timed_out: AtomicU64,
+    /// Router mode only: per-backend forward/reply counters (`None`
+    /// when this process hosts models itself). Snapshots surface it
+    /// under the `"router"` key.
+    router: Option<Arc<route::RouterStats>>,
     /// When these stats were created (≈ bind time), for uptime.
     started: Instant,
 }
 
 impl ServerStats {
-    fn new(registry: &ModelRegistry) -> Self {
+    fn with_names(names: Vec<String>) -> Self {
         ServerStats {
-            names: registry.iter().map(|(_, e)| e.name.clone()).collect(),
-            models: registry.iter().map(|_| Arc::new(Stats::default())).collect(),
+            models: names.iter().map(|_| Arc::new(Stats::default())).collect(),
+            names,
             started: Instant::now(),
             unknown_model: AtomicU64::new(0),
             bad_version: AtomicU64::new(0),
@@ -415,7 +472,32 @@ impl ServerStats {
             conns_accepted: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
             conns_timed_out: AtomicU64::new(0),
+            router: None,
         }
+    }
+
+    fn new(registry: &ModelRegistry) -> Self {
+        Self::with_names(registry.iter().map(|(_, e)| e.name.clone()).collect())
+    }
+
+    /// Stats for a router-mode process: one per-route [`Stats`] entry
+    /// (so request counts and e2e latency work unchanged — "model" id
+    /// means route id there) plus the per-backend [`route::RouterStats`].
+    /// Queue/batch/weight gauges stay zero except the weight gauges,
+    /// which are pinned to 1 so snapshots render sanely.
+    pub(crate) fn for_router(names: Vec<String>, router: Arc<route::RouterStats>) -> Self {
+        let mut stats = Self::with_names(names);
+        stats.router = Some(router);
+        for s in &stats.models {
+            s.weight.store(1, Ordering::Relaxed);
+            s.effective_weight_milli.store(1000, Ordering::Relaxed);
+        }
+        stats
+    }
+
+    /// Per-backend router counters (router mode only).
+    pub fn router(&self) -> Option<&Arc<route::RouterStats>> {
+        self.router.as_ref()
     }
 
     /// Stats for one model id.
@@ -689,7 +771,7 @@ impl Server {
         };
         let scheduler = std::thread::spawn(move || sched::run_scheduler(ctx));
         let loop_ctx = conn::LoopCtx {
-            registry: self.registry.clone(),
+            registry: Some(self.registry.clone()),
             queues: queues.clone(),
             stats: self.stats.clone(),
             doorbell: doorbell.clone(),
@@ -699,6 +781,7 @@ impl Server {
                 .then(|| Duration::from_millis(self.cfg.conn_timeout_ms)),
             poll_fallback: self.cfg.poll_fallback,
             stats_listener: self.stats_listener,
+            router: None,
         };
         let served = conn::run_event_loop(self.listener, loop_ctx);
         // Every connection is drained (each reply already staged and
@@ -764,6 +847,30 @@ pub fn classify_remote(addr: &str, images: &[f32], n: usize) -> Result<Vec<u32>>
 pub fn classify_remote_v2(addr: &str, model_id: u16, images: &[f32], n: usize) -> Result<Vec<u32>> {
     let mut stream = TcpStream::connect(addr)?;
     classify_on_v2(&mut stream, model_id, images, n)
+}
+
+/// Describe a serving process: its per-model `img_elems` table,
+/// indexed by model id (what the router handshakes with on connect).
+pub fn describe_remote(addr: &str) -> Result<Vec<u32>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(
+        &RequestHeader::Describe {
+            version: PROTO_VERSION,
+        }
+        .encode(),
+    )?;
+    let mut hdr = [0u8; 4];
+    stream.read_exact(&mut hdr)?;
+    let count = u32::from_le_bytes(hdr) as usize;
+    if count > u16::MAX as usize + 1 {
+        return Err(anyhow!("describe response names {count} models (max 65536)"));
+    }
+    let mut buf = vec![0u8; count * 4];
+    stream.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 /// One v1 request/response exchange on an existing connection (clients
@@ -888,5 +995,47 @@ mod tests {
     fn magic_cannot_be_a_valid_v1_header() {
         let as_v1 = u32::from_le_bytes(MAGIC) as usize;
         assert!(as_v1 > MAX_REQ_IMAGES, "sniffing would be ambiguous");
+    }
+
+    #[test]
+    fn describe_magic_is_sniff_disjoint() {
+        // "AQSD" must be impossible as a valid v1 count AND distinct
+        // from the v2 magic, or the 4-byte sniff would misroute
+        let as_v1 = u32::from_le_bytes(MAGIC_DESC) as usize;
+        assert!(as_v1 > MAX_REQ_IMAGES, "sniffing would be ambiguous");
+        assert_ne!(MAGIC_DESC, MAGIC);
+    }
+
+    #[test]
+    fn header_describe_roundtrip() {
+        let h = RequestHeader::Describe {
+            version: PROTO_VERSION,
+        };
+        let bytes = h.encode();
+        assert_eq!(bytes.len(), DESC_HEADER_LEN);
+        assert_eq!(&bytes[..4], &MAGIC_DESC);
+        let got = read_request_header(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(got, h);
+        // describe has no payload and no model
+        assert_eq!(got.n(), 0);
+        assert_eq!(got.model_id(), 0);
+        // truncation inside the describe header is an error, like v2
+        for cut in 4..DESC_HEADER_LEN {
+            let err = read_request_header(&mut &bytes[..cut]).unwrap_err();
+            assert_eq!(err.kind(), ErrorKind::UnexpectedEof, "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn describe_response_encoding() {
+        let bytes = encode_describe_response(&[3072, 12288]);
+        assert_eq!(bytes.len(), 12);
+        assert_eq!(u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]), 2);
+        assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 3072);
+        assert_eq!(
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]),
+            12288
+        );
+        assert_eq!(encode_describe_response(&[]), 0u32.to_le_bytes().to_vec());
     }
 }

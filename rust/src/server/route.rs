@@ -1,0 +1,1039 @@
+//! Router tier: cross-process sharding over the same event loop.
+//!
+//! `--route MODEL=host:port` (repeatable) turns the binary into a
+//! front-end that speaks the exact wire protocol of a serving process —
+//! same readiness loop, same incremental [`super::conn::RequestDecoder`]
+//! — but forwards each framed request to a backend host instead of
+//! queueing it into a local `BatchQueue`. Route order assigns the
+//! router-visible model ids (first `--route` is id 0, the v1 default),
+//! and protocol v2's model id is the routing key.
+//!
+//! # Shape
+//!
+//! ```text
+//!   clients ──► router event loop ──► per-backend conn pool ──► backends
+//!               (decoder in raw        (persistent, pipelined,
+//!                frame mode: no         non-blocking; in-flight
+//!                f32 decode)            FIFO per connection)
+//!               ◄── in-order reply ◄── replies re-associate to the
+//!                   staging             FIFO front (TCP orders them)
+//! ```
+//!
+//! # Invariants
+//!
+//! * **Zero-recompute forward path**: payload bytes are forwarded as
+//!   received — the decoder accumulates the raw frame
+//!   ([`super::conn::Decoded::RequestRaw`]) and the router appends it
+//!   whole to one backend connection's write buffer. No f32
+//!   decode/re-encode, and frames never interleave mid-frame.
+//! * **Byte-identical frames**: the forwarded bytes are exactly the
+//!   bytes the client sent (header re-encoding is byte-exact, pinned by
+//!   `proto_props.rs`), so backends must host each routed model at the
+//!   SAME id the router exposes.
+//! * **Reply re-association is a FIFO**: one backend TCP connection
+//!   answers requests in order, so each connection carries a
+//!   [`PendingReply`] FIFO and every complete reply pops the front.
+//!   A count mismatch or a reply with an empty window is a protocol
+//!   error that kills that backend connection only.
+//! * **Failure isolation**: a backend disconnect fails exactly the
+//!   requests in that connection's in-flight window (their clients get
+//!   an error close); other backends — and other connections to the
+//!   same backend — keep serving. Reconnects retry on a backoff
+//!   deadline folded into the loop's timeout (never a sleep).
+//! * **Backpressure**: when every connection to a model's backend has a
+//!   full in-flight window or write buffer, the client connection parks
+//!   (read interest off — TCP takes over) until a completion frees
+//!   capacity.
+//!
+//! The payload length of a frame is `n × img_elems × 4`, and
+//! `img_elems` is per-model knowledge only backends have — so on
+//! connect the router sends a describe request (`"AQSD"` magic, see
+//! [`super::MAGIC_DESC`]) and each backend answers with its model
+//! dimension table. A connection forwards nothing until the handshake
+//! completes; requests arriving earlier park at the header gate.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{RouteSpec, ServeConfig};
+use crate::util::poll::{Event, Interest, Poller};
+
+use super::conn::{self, WriteBuf};
+use super::metrics::{self, LatencyHist};
+use super::{RequestHeader, ServerStats, MAX_REQ_IMAGES, PROTO_VERSION};
+
+/// Backend-connection tokens: `ROUTE_TOKEN_BASE + backend·STRIDE +
+/// conn`. Far above any client slot (bounded by fd limits) and below
+/// the stats token space — the event loop's token `match` relies on
+/// this ordering (pinned by `stats_token_space_is_disjoint`).
+pub(crate) const ROUTE_TOKEN_BASE: u64 = 1 << 40;
+
+/// Token stride per backend — also the hard ceiling on `--route-pool`.
+pub(crate) const ROUTE_TOKEN_STRIDE: u64 = 64;
+
+/// Blocking connect budget per attempt. Backend connects are the one
+/// blocking syscall in router mode: on loopback/LAN a refused port
+/// fails immediately and an established handshake is microseconds, so
+/// this bounds only the pathological SYN-blackhole case. Reconnect
+/// attempts are additionally spaced by the backoff deadline.
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(150);
+
+/// Reconnect backoff bounds (doubles per failure, resets on a
+/// completed handshake).
+const BACKOFF_MIN: Duration = Duration::from_millis(50);
+const BACKOFF_MAX: Duration = Duration::from_secs(2);
+
+/// Stop choosing a backend connection once this many unflushed bytes
+/// are staged on it. A single frame larger than the cap still forwards
+/// (the check gates *choosing* the connection, not the append), so an
+/// oversized frame can never deadlock.
+const BACKEND_WRITE_SOFT_CAP: usize = 1 << 20;
+
+/// Reads per backend connection per readiness event (level-triggered
+/// polling re-reports leftovers, same rationale as the client side).
+const READ_BUDGET: usize = 16;
+
+/// Describe replies may name at most this many models (the u16 id
+/// space) — bounds allocation against a garbage-spewing backend.
+const MAX_DESC_MODELS: usize = 1 << 16;
+
+// ---------------------------------------------------------------------
+// Incremental reply reader (pure; fuzzed by proto_props.rs)
+// ---------------------------------------------------------------------
+
+/// Incremental parser for one response frame: `u32 count` then `count`
+/// u32 words. Used for both backend replies (count = image count,
+/// capped at [`MAX_REQ_IMAGES`]) and describe replies (count = model
+/// count, capped at [`MAX_DESC_MODELS`]). Consumes at most one frame
+/// per [`ReplyReader::feed`] call — trailing bytes stay with the
+/// caller, which is what keeps pipelined replies separable.
+pub struct ReplyReader {
+    cap: usize,
+    want_count: bool,
+    word: [u8; 4],
+    word_got: usize,
+    n: u32,
+    words: Vec<u32>,
+}
+
+impl Default for ReplyReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplyReader {
+    /// Reader for backend reply frames (count ≤ [`MAX_REQ_IMAGES`]).
+    pub fn new() -> ReplyReader {
+        Self::with_cap(MAX_REQ_IMAGES)
+    }
+
+    /// Reader with an explicit count cap (describe replies use the u16
+    /// model-id space).
+    pub fn with_cap(cap: usize) -> ReplyReader {
+        ReplyReader {
+            cap,
+            want_count: true,
+            word: [0; 4],
+            word_got: 0,
+            n: 0,
+            words: Vec::new(),
+        }
+    }
+
+    /// Feed bytes; returns `(consumed, completed_frame)`. Stops
+    /// consuming right after a frame completes (never over-consumes
+    /// into the next frame); loop on `consumed` to drain a buffer.
+    /// `Err` means the stream is not speaking the protocol (count of
+    /// zero or past the cap) and the connection is unsalvageable.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<(usize, Option<Vec<u32>>), &'static str> {
+        let mut used = 0;
+        while used < bytes.len() {
+            let fill = (4 - self.word_got).min(bytes.len() - used);
+            self.word[self.word_got..self.word_got + fill]
+                .copy_from_slice(&bytes[used..used + fill]);
+            self.word_got += fill;
+            used += fill;
+            if self.word_got < 4 {
+                break;
+            }
+            self.word_got = 0;
+            let w = u32::from_le_bytes(self.word);
+            if self.want_count {
+                if w == 0 || w as usize > self.cap {
+                    return Err("response count out of range");
+                }
+                self.n = w;
+                self.words = Vec::with_capacity(w as usize);
+                self.want_count = false;
+            } else {
+                self.words.push(w);
+                if self.words.len() == self.n as usize {
+                    let out = std::mem::take(&mut self.words);
+                    self.want_count = true;
+                    return Ok((used, Some(out)));
+                }
+            }
+        }
+        Ok((used, None))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-backend in-flight bookkeeping (pure parts are property-tested)
+// ---------------------------------------------------------------------
+
+/// One forwarded request awaiting its reply on a backend connection.
+/// The FIFO order of these IS the re-association: backend replies
+/// arrive in forward order per TCP connection.
+pub struct PendingReply {
+    /// Completion channel into the owning client connection's
+    /// `InFlight` entry (the event loop stages replies from it in
+    /// client-request order, same machinery as local serving).
+    pub tx: mpsc::Sender<Result<Vec<u32>, String>>,
+    /// Image count the reply must carry (mismatch = protocol error).
+    pub n: u32,
+    /// Forward time — the backend round-trip clock.
+    pub t0: Instant,
+}
+
+/// A fully-received frame that could not be forwarded yet (no backend
+/// connection with window/write capacity): parked with its client
+/// connection, retried on every sweep.
+pub(crate) struct ParkedFrame {
+    pub frame: Vec<u8>,
+    pub n: u32,
+    pub t0: Instant,
+}
+
+/// Complete the front of a backend connection's in-flight window with
+/// a parsed reply. Pure FIFO pop + validation, shared by the event
+/// loop and the re-association property tests in `proto_props.rs`.
+pub fn complete_front(
+    fifo: &mut VecDeque<PendingReply>,
+    classes: Vec<u32>,
+    stats: &BackendStats,
+) -> Result<(), &'static str> {
+    let Some(front) = fifo.pop_front() else {
+        return Err("reply with an empty in-flight window");
+    };
+    if front.n as usize != classes.len() {
+        // push it back so the caller's teardown fails it with the rest
+        fifo.push_front(front);
+        return Err("reply image count mismatch");
+    }
+    stats.rtt.observe(front.t0.elapsed().as_micros() as u64);
+    stats.answered.fetch_add(1, Ordering::Relaxed);
+    stats.inflight.fetch_sub(1, Ordering::Relaxed);
+    let _ = front.tx.send(Ok(classes));
+    Ok(())
+}
+
+/// Fail every request in a backend connection's in-flight window (the
+/// backend died or broke protocol). Only THIS window fails — other
+/// connections and backends are untouched.
+pub fn fail_window(fifo: &mut VecDeque<PendingReply>, stats: &BackendStats, msg: &str) {
+    while let Some(p) = fifo.pop_front() {
+        stats.failed.fetch_add(1, Ordering::Relaxed);
+        stats.inflight.fetch_sub(1, Ordering::Relaxed);
+        let _ = p.tx.send(Err(msg.to_string()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------
+
+/// Per-backend router counters, surfaced through `GET /stats`.
+#[derive(Debug)]
+pub struct BackendStats {
+    /// Backend address (`host:port`), the identity key.
+    pub addr: String,
+    /// Route keys served by this backend, in model-id order.
+    pub models: Vec<String>,
+    /// Frames forwarded to the backend.
+    pub forwarded: AtomicU64,
+    /// Replies delivered back to clients.
+    pub answered: AtomicU64,
+    /// Requests failed by a backend disconnect / protocol error.
+    pub failed: AtomicU64,
+    /// Requests currently in flight to this backend (gauge).
+    pub inflight: AtomicU64,
+    /// Reconnect attempts after a lost connection.
+    pub reconnects: AtomicU64,
+    /// Backend round-trip time (forward → reply parsed), µs.
+    pub rtt: LatencyHist,
+}
+
+impl BackendStats {
+    fn new(addr: String, models: Vec<String>) -> BackendStats {
+        BackendStats {
+            addr,
+            models,
+            forwarded: AtomicU64::new(0),
+            answered: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            rtt: LatencyHist::default(),
+        }
+    }
+}
+
+/// All router-mode statistics: one [`BackendStats`] per distinct
+/// backend address (routes sharing a `host:port` share one pool and
+/// one stats entry).
+#[derive(Debug)]
+pub struct RouterStats {
+    pub backends: Vec<Arc<BackendStats>>,
+}
+
+impl RouterStats {
+    /// Build the per-backend entries for a route table, deduplicating
+    /// by address in first-seen order — the same order
+    /// [`Router::new`] assigns backend indices, so stats and pool
+    /// stay aligned.
+    pub fn for_routes(routes: &[RouteSpec]) -> RouterStats {
+        let mut addrs: Vec<String> = Vec::new();
+        let mut models: Vec<Vec<String>> = Vec::new();
+        for r in routes {
+            match addrs.iter().position(|a| *a == r.addr) {
+                Some(i) => models[i].push(r.name.clone()),
+                None => {
+                    addrs.push(r.addr.clone());
+                    models.push(vec![r.name.clone()]);
+                }
+            }
+        }
+        RouterStats {
+            backends: addrs
+                .into_iter()
+                .zip(models)
+                .map(|(a, m)| Arc::new(BackendStats::new(a, m)))
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The router: routing table + backend pools
+// ---------------------------------------------------------------------
+
+/// What [`Router::try_forward`] did with a frame.
+pub(crate) enum Forward {
+    /// Appended to a backend connection; the receiver completes when
+    /// the reply re-associates (or the window fails).
+    Sent(mpsc::Receiver<Result<Vec<u32>, String>>),
+    /// Every connection to the model's backend is saturated or not yet
+    /// handshaken — park the frame and retry on the next sweep.
+    Saturated(ParkedFrame),
+}
+
+/// One pooled connection to a backend.
+struct BackendConn {
+    /// `None` while disconnected (awaiting the reconnect deadline).
+    stream: Option<TcpStream>,
+    write: WriteBuf,
+    interest: Interest,
+    /// Describe handshake parser; the connection forwards nothing
+    /// until it yields the backend's dimension table.
+    desc: ReplyReader,
+    ready: bool,
+    /// Reply parser (active once ready).
+    rd: ReplyReader,
+    /// Forwarded-but-unanswered requests, forward order.
+    fifo: VecDeque<PendingReply>,
+    /// When to attempt the next (re)connect; folded into the event
+    /// loop's poll timeout so a down backend never blocks the loop.
+    reconnect_at: Option<Instant>,
+    backoff: Duration,
+}
+
+impl BackendConn {
+    fn idle() -> BackendConn {
+        BackendConn {
+            stream: None,
+            write: WriteBuf::default(),
+            interest: Interest::READ,
+            desc: ReplyReader::with_cap(MAX_DESC_MODELS),
+            ready: false,
+            rd: ReplyReader::new(),
+            fifo: VecDeque::new(),
+            reconnect_at: None,
+            backoff: BACKOFF_MIN,
+        }
+    }
+}
+
+struct Backend {
+    addr: String,
+    stats: Arc<BackendStats>,
+    conns: Vec<BackendConn>,
+    /// Per-model `img_elems` learned from the describe handshake
+    /// (router-visible model id → f32s per image). Kept across
+    /// disconnects — a backend restart with different dims re-learns
+    /// on the next completed handshake.
+    dims: Option<Vec<u32>>,
+}
+
+/// Routing table + per-backend connection pools, driven by the event
+/// loop (single-threaded, like everything else on the loop).
+pub(crate) struct Router {
+    /// Router-visible model id (route order) → backend index.
+    table: Vec<usize>,
+    backends: Vec<Backend>,
+    /// Per-connection in-flight window (`--route-inflight`).
+    window: usize,
+    stats: Arc<RouterStats>,
+}
+
+impl Router {
+    pub(crate) fn new(routes: &[RouteSpec], cfg: &ServeConfig, stats: Arc<RouterStats>) -> Router {
+        let pool = cfg.route_pool.clamp(1, ROUTE_TOKEN_STRIDE as usize);
+        let mut table = Vec::with_capacity(routes.len());
+        let mut backends: Vec<Backend> = Vec::new();
+        for r in routes {
+            let idx = match backends.iter().position(|b| b.addr == r.addr) {
+                Some(i) => i,
+                None => {
+                    let i = backends.len();
+                    backends.push(Backend {
+                        addr: r.addr.clone(),
+                        stats: stats.backends[i].clone(),
+                        conns: (0..pool).map(|_| BackendConn::idle()).collect(),
+                        dims: None,
+                    });
+                    i
+                }
+            };
+            table.push(idx);
+        }
+        Router {
+            table,
+            backends,
+            window: cfg.route_inflight.max(1),
+            stats,
+        }
+    }
+
+    pub(crate) fn n_routes(&self) -> usize {
+        self.table.len()
+    }
+
+    /// f32s per image for a routed model, once its backend's describe
+    /// handshake completed (`None` = park at the gate).
+    pub(crate) fn payload_elems(&self, model_id: u16) -> Option<u32> {
+        let b = &self.backends[*self.table.get(model_id as usize)?];
+        let elems = *b.dims.as_ref()?.get(model_id as usize)?;
+        (elems > 0).then_some(elems)
+    }
+
+    /// Dimension table the router itself answers describe requests
+    /// with: per routed model, the backend-learned `img_elems` (0 while
+    /// that backend's handshake is still pending).
+    pub(crate) fn describe_elems(&self) -> Vec<u32> {
+        (0..self.table.len())
+            .map(|id| self.payload_elems(id as u16).unwrap_or(0))
+            .collect()
+    }
+
+    /// Can a frame for `model_id` be forwarded right now? (Used at the
+    /// header gate so payload bytes aren't read into memory that can
+    /// only park.)
+    pub(crate) fn has_capacity(&self, model_id: u16) -> bool {
+        let Some(&b) = self.table.get(model_id as usize) else {
+            return false;
+        };
+        self.backends[b]
+            .conns
+            .iter()
+            .any(|c| self.conn_has_capacity(c))
+    }
+
+    fn conn_has_capacity(&self, c: &BackendConn) -> bool {
+        c.stream.is_some()
+            && c.ready
+            && c.fifo.len() < self.window
+            && c.write.len() < BACKEND_WRITE_SOFT_CAP
+    }
+
+    /// Forward one complete frame: append it whole to the least-loaded
+    /// backend connection with capacity and push the pending entry onto
+    /// that connection's FIFO. The frame bytes are exactly what the
+    /// client sent.
+    pub(crate) fn try_forward(
+        &mut self,
+        model_id: u16,
+        pf: ParkedFrame,
+        poller: &mut Poller,
+    ) -> Forward {
+        let b = self.table[model_id as usize];
+        let pick = self.backends[b]
+            .conns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| self.conn_has_capacity(c))
+            .min_by_key(|(_, c)| c.fifo.len())
+            .map(|(i, _)| i);
+        let Some(ci) = pick else {
+            return Forward::Saturated(pf);
+        };
+        let (tx, rx) = mpsc::channel();
+        let stats = self.backends[b].stats.clone();
+        {
+            let c = &mut self.backends[b].conns[ci];
+            c.write.push_bytes(&pf.frame);
+            c.fifo.push_back(PendingReply {
+                tx,
+                n: pf.n,
+                t0: pf.t0,
+            });
+        }
+        stats.forwarded.fetch_add(1, Ordering::Relaxed);
+        stats.inflight.fetch_add(1, Ordering::Relaxed);
+        // Eager flush: most frames hit the socket buffer immediately;
+        // a failure here fails the window (the rx above included) and
+        // schedules the reconnect — the caller still gets Sent.
+        self.flush_conn(b, ci, poller);
+        Forward::Sent(rx)
+    }
+
+    /// Initial connection attempts for every pooled connection (called
+    /// once before the loop starts; failures schedule backoff retries).
+    pub(crate) fn connect_all(&mut self, poller: &mut Poller) {
+        for b in 0..self.backends.len() {
+            for c in 0..self.backends[b].conns.len() {
+                self.try_connect(b, c, poller);
+            }
+        }
+    }
+
+    /// Earliest reconnect deadline (folded into the poll timeout).
+    pub(crate) fn next_deadline(&self) -> Option<Instant> {
+        self.backends
+            .iter()
+            .flat_map(|b| b.conns.iter())
+            .filter_map(|c| c.reconnect_at)
+            .min()
+    }
+
+    /// Attempt reconnects whose deadline passed.
+    pub(crate) fn tick(&mut self, now: Instant, poller: &mut Poller) {
+        for b in 0..self.backends.len() {
+            for c in 0..self.backends[b].conns.len() {
+                let due = self.backends[b].conns[c]
+                    .reconnect_at
+                    .map(|t| now >= t)
+                    .unwrap_or(false);
+                if due {
+                    self.backends[b].conns[c].reconnect_at = None;
+                    self.backends[b]
+                        .stats
+                        .reconnects
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.try_connect(b, c, poller);
+                }
+            }
+        }
+    }
+
+    fn token(b: usize, c: usize) -> u64 {
+        ROUTE_TOKEN_BASE + b as u64 * ROUTE_TOKEN_STRIDE + c as u64
+    }
+
+    fn try_connect(&mut self, b: usize, c: usize, poller: &mut Poller) {
+        let addr = self.backends[b].addr.clone();
+        let stream = (|| -> Result<TcpStream> {
+            let sa = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolving backend {addr}"))?
+                .next()
+                .with_context(|| format!("backend {addr} resolved to no address"))?;
+            let s = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT)
+                .with_context(|| format!("connecting backend {addr}"))?;
+            let _ = s.set_nodelay(true);
+            s.set_nonblocking(true).context("non-blocking backend conn")?;
+            Ok(s)
+        })();
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("aquant-route: backend {addr}: {e:#}");
+                self.schedule_reconnect(b, c);
+                return;
+            }
+        };
+        {
+            use std::os::unix::io::AsRawFd;
+            if let Err(e) = poller.register(stream.as_raw_fd(), Self::token(b, c), Interest::READ)
+            {
+                eprintln!("aquant-route: backend {addr}: registering: {e:#}");
+                self.schedule_reconnect(b, c);
+                return;
+            }
+        }
+        let conn = &mut self.backends[b].conns[c];
+        conn.stream = Some(stream);
+        conn.interest = Interest::READ;
+        conn.ready = false;
+        conn.desc = ReplyReader::with_cap(MAX_DESC_MODELS);
+        conn.rd = ReplyReader::new();
+        conn.write = WriteBuf::default();
+        // Handshake: ask for the backend's model dimension table. The
+        // connection forwards nothing until the reply arrives.
+        conn.write.push_bytes(
+            &RequestHeader::Describe {
+                version: PROTO_VERSION,
+            }
+            .encode(),
+        );
+        self.flush_conn(b, c, poller);
+    }
+
+    fn schedule_reconnect(&mut self, b: usize, c: usize) {
+        let conn = &mut self.backends[b].conns[c];
+        conn.reconnect_at = Some(Instant::now() + conn.backoff);
+        conn.backoff = (conn.backoff * 2).min(BACKOFF_MAX);
+    }
+
+    /// Tear down one backend connection: fail exactly its in-flight
+    /// window, keep every other connection serving, arm the reconnect
+    /// deadline.
+    fn fail_conn(&mut self, b: usize, c: usize, poller: &mut Poller, msg: &str) {
+        let addr = self.backends[b].addr.clone();
+        let stats = self.backends[b].stats.clone();
+        let conn = &mut self.backends[b].conns[c];
+        if let Some(s) = conn.stream.take() {
+            use std::os::unix::io::AsRawFd;
+            let _ = poller.deregister(s.as_raw_fd());
+        }
+        conn.ready = false;
+        conn.write = WriteBuf::default();
+        conn.desc = ReplyReader::with_cap(MAX_DESC_MODELS);
+        conn.rd = ReplyReader::new();
+        if !conn.fifo.is_empty() {
+            eprintln!(
+                "aquant-route: backend {addr}: {msg}; failing {} in-flight request(s)",
+                conn.fifo.len()
+            );
+        } else {
+            eprintln!("aquant-route: backend {addr}: {msg}");
+        }
+        fail_window(&mut conn.fifo, &stats, &format!("backend {addr}: {msg}"));
+        self.schedule_reconnect(b, c);
+    }
+
+    /// Handle a readiness event for a backend-connection token.
+    pub(crate) fn on_event(&mut self, ev: Event, poller: &mut Poller, chunk: &mut [u8]) {
+        let idx = ev.token - ROUTE_TOKEN_BASE;
+        let (b, c) = (
+            (idx / ROUTE_TOKEN_STRIDE) as usize,
+            (idx % ROUTE_TOKEN_STRIDE) as usize,
+        );
+        let live = self
+            .backends
+            .get(b)
+            .and_then(|bk| bk.conns.get(c))
+            .map(|conn| conn.stream.is_some())
+            .unwrap_or(false);
+        if !live {
+            return; // stale event for a torn-down connection
+        }
+        if ev.error || ev.hangup {
+            self.fail_conn(b, c, poller, "connection error");
+            return;
+        }
+        if ev.writable {
+            self.flush_conn(b, c, poller);
+        }
+        if ev.readable {
+            self.read_conn(b, c, poller, chunk);
+        }
+    }
+
+    fn flush_conn(&mut self, b: usize, c: usize, poller: &mut Poller) {
+        let conn = &mut self.backends[b].conns[c];
+        let Some(stream) = conn.stream.as_mut() else {
+            return;
+        };
+        if !conn.write.is_empty() {
+            if let Err(e) = conn.write.flush_to(stream) {
+                self.fail_conn(b, c, poller, &format!("write failed: {e}"));
+                return;
+            }
+        }
+        self.update_interest(b, c, poller);
+    }
+
+    fn update_interest(&mut self, b: usize, c: usize, poller: &mut Poller) {
+        let conn = &mut self.backends[b].conns[c];
+        let Some(stream) = conn.stream.as_ref() else {
+            return;
+        };
+        let want = Interest {
+            readable: true,
+            writable: !conn.write.is_empty(),
+        };
+        if want != conn.interest {
+            use std::os::unix::io::AsRawFd;
+            if poller
+                .modify(stream.as_raw_fd(), Self::token(b, c), want)
+                .is_ok()
+            {
+                conn.interest = want;
+            }
+        }
+    }
+
+    fn read_conn(&mut self, b: usize, c: usize, poller: &mut Poller, chunk: &mut [u8]) {
+        for _ in 0..READ_BUDGET {
+            let conn = &mut self.backends[b].conns[c];
+            let Some(stream) = conn.stream.as_mut() else {
+                return;
+            };
+            match stream.read(chunk) {
+                Ok(0) => {
+                    self.fail_conn(b, c, poller, "disconnected");
+                    return;
+                }
+                Ok(k) => {
+                    if let Err(msg) = self.feed_bytes(b, c, k, chunk) {
+                        self.fail_conn(b, c, poller, msg);
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.fail_conn(b, c, poller, &format!("read failed: {e}"));
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Parse `chunk[..k]`: finish the describe handshake if pending,
+    /// then re-associate complete replies to the FIFO front.
+    fn feed_bytes(&mut self, b: usize, c: usize, k: usize, chunk: &[u8]) -> Result<(), &'static str> {
+        let mut off = 0;
+        while off < k {
+            let backend = &mut self.backends[b];
+            let conn = &mut backend.conns[c];
+            if !conn.ready {
+                let (used, done) = conn.desc.feed(&chunk[off..k])?;
+                off += used;
+                if let Some(elems) = done {
+                    // Every route pointing at this backend must name a
+                    // model the backend actually hosts — at the SAME id
+                    // (frames forward verbatim; ids are not rewritten).
+                    for (id, &tb) in self.table.iter().enumerate() {
+                        if tb == b && elems.get(id).map(|&e| e == 0).unwrap_or(true) {
+                            return Err("backend does not host a routed model id");
+                        }
+                    }
+                    backend.dims = Some(elems);
+                    conn.ready = true;
+                    conn.backoff = BACKOFF_MIN;
+                }
+            } else {
+                let (used, done) = conn.rd.feed(&chunk[off..k])?;
+                off += used;
+                if let Some(classes) = done {
+                    complete_front(&mut conn.fifo, classes, &backend.stats)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// RouterServer: bind/run wrapper (the router-mode `Server`)
+// ---------------------------------------------------------------------
+
+/// A bound router: listener + route table + knobs. The router-mode
+/// counterpart of [`super::Server`] — same bind/run split so callers
+/// (and tests) learn ephemeral ports and grab stats handles before the
+/// blocking loop starts.
+pub struct RouterServer {
+    listener: TcpListener,
+    stats_listener: Option<TcpListener>,
+    routes: Vec<RouteSpec>,
+    cfg: ServeConfig,
+    stats: Arc<ServerStats>,
+    router_stats: Arc<RouterStats>,
+}
+
+impl RouterServer {
+    /// Bind the client listener (and the optional stats listener).
+    /// Route order assigns router-visible model ids: the first route is
+    /// id 0 and serves protocol-v1 clients.
+    pub fn bind(routes: Vec<RouteSpec>, addr: &str, cfg: ServeConfig) -> Result<RouterServer> {
+        cfg.validate()?;
+        if routes.is_empty() {
+            bail!("router mode needs at least one --route MODEL=host:port");
+        }
+        if routes.len() > u16::MAX as usize + 1 {
+            bail!("too many routes ({}) for the u16 model-id space", routes.len());
+        }
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let stats_listener = match cfg.stats_addr.as_deref() {
+            Some(a) => Some(
+                TcpListener::bind(a).with_context(|| format!("binding stats endpoint {a}"))?,
+            ),
+            None => None,
+        };
+        let router_stats = Arc::new(RouterStats::for_routes(&routes));
+        let stats = Arc::new(ServerStats::for_router(
+            routes.iter().map(|r| r.name.clone()).collect(),
+            router_stats.clone(),
+        ));
+        Ok(RouterServer {
+            listener,
+            stats_listener,
+            routes,
+            cfg,
+            stats,
+            router_stats,
+        })
+    }
+
+    /// Actual bound address (use after binding port 0).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Bound stats-endpoint address when `--stats-addr` is configured.
+    pub fn stats_local_addr(&self) -> Option<std::net::SocketAddr> {
+        self.stats_listener.as_ref().and_then(|l| l.local_addr().ok())
+    }
+
+    /// Live statistics handle (per-route request counters + server
+    /// counters), valid before/during/after `run`.
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.stats.clone()
+    }
+
+    /// Live per-backend router counters.
+    pub fn router_stats(&self) -> Arc<RouterStats> {
+        self.router_stats.clone()
+    }
+
+    /// Run the router: the same ONE readiness event loop as serving
+    /// mode, with backend pools in place of queues/scheduler/pool.
+    /// Blocks under the same `max_accepts` bounded-run rules.
+    pub fn run(self) -> Result<()> {
+        let addr = self
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
+        println!(
+            "aquant-serve: router on {addr} ({} route(s), pool {} conn(s)/backend, \
+             in-flight window {}/conn)",
+            self.routes.len(),
+            self.cfg.route_pool,
+            self.cfg.route_inflight,
+        );
+        for (id, r) in self.routes.iter().enumerate() {
+            println!("aquant-serve:   id {id} = {} -> {}", r.name, r.addr);
+        }
+        if let Some(a) = self.stats_local_addr() {
+            println!("aquant-serve: stats endpoint on http://{a}/stats (?fmt=text for plaintext)");
+        }
+        let history = self.cfg.stats_history.clone().map(|path| {
+            println!(
+                "aquant-serve: appending stats history to {path} every {}s",
+                self.cfg.stats_history_every_s
+            );
+            metrics::HistoryWriter::spawn(
+                path,
+                Duration::from_secs(self.cfg.stats_history_every_s.max(1)),
+                self.stats.clone(),
+            )
+        });
+        let router = Router::new(&self.routes, &self.cfg, self.router_stats.clone());
+        let loop_ctx = conn::LoopCtx {
+            registry: None,
+            queues: Vec::new(),
+            stats: self.stats.clone(),
+            doorbell: Arc::new(super::sched::Doorbell::new()),
+            max_conns: self.cfg.max_conns,
+            max_accepts: self.cfg.max_accepts,
+            conn_timeout: (self.cfg.conn_timeout_ms > 0)
+                .then(|| Duration::from_millis(self.cfg.conn_timeout_ms)),
+            poll_fallback: self.cfg.poll_fallback,
+            stats_listener: self.stats_listener,
+            router: Some(router),
+        };
+        let served = conn::run_event_loop(self.listener, loop_ctx);
+        if let Some(w) = history {
+            w.stop();
+        }
+        served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats1() -> BackendStats {
+        BackendStats::new("127.0.0.1:1".into(), vec!["a".into()])
+    }
+
+    fn pending(n: u32) -> (PendingReply, mpsc::Receiver<Result<Vec<u32>, String>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            PendingReply {
+                tx,
+                n,
+                t0: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn reply_reader_one_frame_per_feed_never_over_consumes() {
+        let mut rd = ReplyReader::new();
+        // two pipelined replies back to back: [2; 7, 9] [1; 3]
+        let mut bytes = Vec::new();
+        for w in [2u32, 7, 9, 1, 3] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let (used, done) = rd.feed(&bytes).unwrap();
+        assert_eq!(used, 12, "stops at the first frame boundary");
+        assert_eq!(done, Some(vec![7, 9]));
+        let (used2, done2) = rd.feed(&bytes[used..]).unwrap();
+        assert_eq!(used2, 8);
+        assert_eq!(done2, Some(vec![3]));
+    }
+
+    #[test]
+    fn reply_reader_byte_by_byte() {
+        let mut rd = ReplyReader::new();
+        let mut bytes = Vec::new();
+        for w in [3u32, 10, 20, 30] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        for (i, b) in bytes.iter().enumerate() {
+            let (used, done) = rd.feed(std::slice::from_ref(b)).unwrap();
+            assert_eq!(used, 1);
+            if i + 1 < bytes.len() {
+                assert_eq!(done, None, "byte {i}");
+            } else {
+                assert_eq!(done, Some(vec![10, 20, 30]));
+            }
+        }
+    }
+
+    #[test]
+    fn reply_reader_rejects_out_of_range_counts() {
+        let mut rd = ReplyReader::new();
+        assert!(rd.feed(&0u32.to_le_bytes()).is_err(), "zero count");
+        let mut rd = ReplyReader::new();
+        let too_big = (MAX_REQ_IMAGES as u32 + 1).to_le_bytes();
+        assert!(rd.feed(&too_big).is_err());
+        // the describe cap admits the full u16 model-id space
+        let mut rd = ReplyReader::with_cap(MAX_DESC_MODELS);
+        assert!(rd.feed(&(MAX_DESC_MODELS as u32).to_le_bytes()).is_ok());
+    }
+
+    #[test]
+    fn complete_front_pops_in_order_and_validates_count() {
+        let stats = stats1();
+        let mut fifo = VecDeque::new();
+        let (p1, rx1) = pending(2);
+        let (p2, rx2) = pending(1);
+        stats.inflight.store(2, Ordering::Relaxed);
+        fifo.push_back(p1);
+        fifo.push_back(p2);
+        complete_front(&mut fifo, vec![5, 6], &stats).unwrap();
+        assert_eq!(rx1.try_recv().unwrap().unwrap(), vec![5, 6]);
+        // count mismatch: front stays queued so teardown can fail it
+        assert!(complete_front(&mut fifo, vec![1, 2, 3], &stats).is_err());
+        assert_eq!(fifo.len(), 1);
+        complete_front(&mut fifo, vec![8], &stats).unwrap();
+        assert_eq!(rx2.try_recv().unwrap().unwrap(), vec![8]);
+        assert_eq!(stats.answered.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.inflight.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.rtt.count(), 2);
+        // a reply with nothing in flight is a protocol error
+        assert!(complete_front(&mut fifo, vec![1], &stats).is_err());
+    }
+
+    #[test]
+    fn fail_window_errors_every_pending_request() {
+        let stats = stats1();
+        let mut fifo = VecDeque::new();
+        let (p1, rx1) = pending(1);
+        let (p2, rx2) = pending(1);
+        stats.inflight.store(2, Ordering::Relaxed);
+        fifo.push_back(p1);
+        fifo.push_back(p2);
+        fail_window(&mut fifo, &stats, "backend gone");
+        assert!(fifo.is_empty());
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.inflight.load(Ordering::Relaxed), 0);
+        assert!(rx1.try_recv().unwrap().unwrap_err().contains("backend gone"));
+        assert!(rx2.try_recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn router_stats_dedupes_backends_by_addr() {
+        let routes = vec![
+            RouteSpec {
+                name: "a".into(),
+                addr: "h1:1".into(),
+            },
+            RouteSpec {
+                name: "b".into(),
+                addr: "h2:2".into(),
+            },
+            RouteSpec {
+                name: "c".into(),
+                addr: "h1:1".into(),
+            },
+        ];
+        let rs = RouterStats::for_routes(&routes);
+        assert_eq!(rs.backends.len(), 2);
+        assert_eq!(rs.backends[0].addr, "h1:1");
+        assert_eq!(rs.backends[0].models, vec!["a".to_string(), "c".to_string()]);
+        assert_eq!(rs.backends[1].models, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn router_table_aligns_with_stats_dedup_order() {
+        let routes = vec![
+            RouteSpec {
+                name: "a".into(),
+                addr: "h1:1".into(),
+            },
+            RouteSpec {
+                name: "b".into(),
+                addr: "h2:2".into(),
+            },
+            RouteSpec {
+                name: "c".into(),
+                addr: "h1:1".into(),
+            },
+        ];
+        let stats = Arc::new(RouterStats::for_routes(&routes));
+        let cfg = ServeConfig::default();
+        let r = Router::new(&routes, &cfg, stats.clone());
+        assert_eq!(r.table, vec![0, 1, 0]);
+        assert_eq!(r.n_routes(), 3);
+        assert_eq!(r.backends.len(), 2);
+        assert_eq!(r.backends[0].stats.addr, stats.backends[0].addr);
+        // no handshake yet: every gate parks, describe reports zeros
+        assert!(!r.has_capacity(0));
+        assert_eq!(r.payload_elems(0), None);
+        assert_eq!(r.describe_elems(), vec![0, 0, 0]);
+    }
+}

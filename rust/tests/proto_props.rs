@@ -8,13 +8,23 @@
 //! frames, pure garbage, any chunking — (b) always terminates each
 //! stream in a clean close decision or a complete request, and (c)
 //! agrees byte-for-byte with the blocking reader on valid frames.
+//!
+//! Router-path properties: the decoder's RAW mode (forwarding without
+//! recompute) rebuilds every frame byte-identically to what the client
+//! sent, under any chunking, and never panics or over-consumes on
+//! garbage; [`ReplyReader`] parses pipelined backend replies one frame
+//! per feed without over-consuming; and per-backend FIFO
+//! re-association delivers every reply to the request that owns it
+//! under arbitrary cross-backend completion interleavings, with a
+//! failed window erroring exactly its own members.
 
 use std::io::ErrorKind;
 
 use aquant::server::conn::{Decoded, RequestDecoder};
+use aquant::server::route::{complete_front, fail_window, PendingReply, ReplyReader, RouterStats};
 use aquant::server::{
-    encode_header_v2, read_request_header, RequestHeader, MAGIC, MAX_REQ_IMAGES, PROTO_VERSION,
-    V2_HEADER_LEN,
+    encode_header_v2, read_request_header, RequestHeader, DESC_HEADER_LEN, MAGIC, MAGIC_DESC,
+    MAX_REQ_IMAGES, PROTO_VERSION, V2_HEADER_LEN,
 };
 use aquant::util::prop;
 use aquant::util::rng::Rng;
@@ -293,4 +303,289 @@ fn valid_v1_requests_are_never_sniffed_as_v2() {
     }
     // and the magic word itself, read as v1, is out of protocol range
     assert!(u32::from_le_bytes(MAGIC) as usize > MAX_REQ_IMAGES);
+}
+
+#[test]
+fn describe_magic_is_sniff_disjoint_and_roundtrips() {
+    // the describe handshake word must collide with neither a valid v1
+    // count nor the v2 magic — the 4-byte sniff stays unambiguous
+    assert!(u32::from_le_bytes(MAGIC_DESC) as usize > MAX_REQ_IMAGES);
+    assert_ne!(MAGIC_DESC, MAGIC);
+    let h = RequestHeader::Describe {
+        version: PROTO_VERSION,
+    };
+    let bytes = h.encode();
+    assert_eq!(bytes.len(), DESC_HEADER_LEN);
+    assert_eq!(&bytes[..4], &MAGIC_DESC);
+    let mut r = &bytes[..];
+    assert_eq!(read_request_header(&mut r).unwrap().unwrap(), h);
+    assert!(r.is_empty());
+}
+
+/// Drive the decoder in RAW (router/forwarding) mode the way the
+/// router's event loop does: gate headers, size payloads from a
+/// per-model dimension table, collect rebuilt wire frames. Returns
+/// `(frames, rejected)` with the same termination/consumption
+/// assertions as [`drive_decoder`].
+fn drive_raw(
+    stream: &[u8],
+    rng: &mut Rng,
+    elems_by_id: &[u32],
+) -> (Vec<(RequestHeader, Vec<u8>)>, bool) {
+    let mut dec = RequestDecoder::new();
+    let mut frames = Vec::new();
+    let mut off = 0usize;
+    while off < stream.len() {
+        if let Some(hdr) = dec.gated() {
+            let bad_version = matches!(hdr,
+                RequestHeader::V2 { version, .. } | RequestHeader::Describe { version }
+                    if version != PROTO_VERSION);
+            if bad_version {
+                return (frames, true);
+            }
+            if matches!(hdr, RequestHeader::Describe { .. }) {
+                // payload-less: the router answers it and re-arms
+                dec.reset();
+                continue;
+            }
+            let n = hdr.n() as usize;
+            let Some(&elems) = elems_by_id.get(hdr.model_id() as usize) else {
+                return (frames, true); // unroutable model id
+            };
+            if n == 0 || n > MAX_REQ_IMAGES {
+                return (frames, true);
+            }
+            dec.begin_payload_raw(n * elems as usize * 4);
+            continue;
+        }
+        let chunk = 1 + rng.below(16);
+        let end = (off + chunk).min(stream.len());
+        let want_before = dec.want();
+        let (consumed, event) = dec.feed(&stream[off..end]);
+        assert!(consumed <= end - off, "raw decoder over-consumed");
+        assert!(consumed <= want_before, "raw decoder consumed past want()");
+        assert!(
+            consumed > 0 || want_before == 0,
+            "raw decoder stalled with bytes available"
+        );
+        off += consumed;
+        if let Decoded::RequestRaw { header, frame } = event {
+            frames.push((header, frame));
+        }
+    }
+    (frames, false)
+}
+
+#[test]
+fn raw_decoder_rebuilds_every_forwarded_frame_byte_identically() {
+    // The router's zero-recompute guarantee: whatever chunking the
+    // client uses, the frame handed to the backend is byte-for-byte
+    // the frame the client sent (describes interleaved freely — they
+    // are answered locally, never forwarded).
+    prop::check_default("raw mode is byte-identical", |rng| {
+        let elems_by_id: Vec<u32> = (0..1 + rng.below(3)).map(|_| 1 + rng.below(6) as u32).collect();
+        let mut stream = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::new(); // non-describe frames
+        for _ in 0..1 + rng.below(4) {
+            let start = stream.len();
+            if rng.bernoulli(0.2) {
+                stream.extend_from_slice(
+                    &RequestHeader::Describe {
+                        version: PROTO_VERSION,
+                    }
+                    .encode(),
+                );
+                continue;
+            }
+            let id = rng.below(elems_by_id.len()) as u16;
+            let n = 1 + rng.below(4) as u32;
+            let header = if id == 0 && rng.bernoulli(0.5) {
+                RequestHeader::V1 { n }
+            } else {
+                RequestHeader::V2 {
+                    version: PROTO_VERSION,
+                    model_id: id,
+                    n,
+                }
+            };
+            stream.extend_from_slice(&header.encode());
+            for _ in 0..n as usize * elems_by_id[id as usize] as usize {
+                stream.extend_from_slice(&rng.normal().to_le_bytes());
+            }
+            spans.push((start, stream.len()));
+        }
+        let (frames, rejected) = drive_raw(&stream, rng, &elems_by_id);
+        assert!(!rejected, "valid frames must not be rejected");
+        assert_eq!(frames.len(), spans.len());
+        for (i, ((start, end), (_, frame))) in spans.iter().zip(&frames).enumerate() {
+            assert_eq!(frame, &stream[*start..*end], "frame {i} not byte-identical");
+        }
+    });
+}
+
+#[test]
+fn raw_decoder_never_panics_on_garbage() {
+    // Same hostile streams as the local-serving decoder fuzz, driven
+    // through the raw gate: terminate (reject or starve), never panic,
+    // never over-consume, and any frame completed before the garbage
+    // is still byte-identical.
+    prop::check_default("raw decoder on garbage", |rng| {
+        let elems_by_id = [1 + rng.below(6) as u32, 1 + rng.below(6) as u32];
+        let mut stream: Vec<u8> = Vec::new();
+        let mut valid_spans: Vec<(usize, usize)> = Vec::new();
+        if rng.bernoulli(0.3) {
+            let n = 1 + rng.below(3) as u32;
+            let start = stream.len();
+            stream.extend_from_slice(&RequestHeader::V1 { n }.encode());
+            for _ in 0..n as usize * elems_by_id[0] as usize {
+                stream.extend_from_slice(&rng.normal().to_le_bytes());
+            }
+            valid_spans.push((start, stream.len()));
+        }
+        let junk = 1 + rng.below(256);
+        stream.extend((0..junk).map(|_| rng.next_u64() as u8));
+        let (frames, _rejected) = drive_raw(&stream, rng, &elems_by_id);
+        for ((start, end), (_, frame)) in valid_spans.iter().zip(&frames) {
+            assert_eq!(frame, &stream[*start..*end]);
+        }
+        assert!(
+            frames.len() >= valid_spans.len(),
+            "valid frame lost to trailing garbage"
+        );
+    });
+}
+
+#[test]
+fn reply_reader_parses_pipelined_replies_and_survives_garbage() {
+    prop::check_default("reply reader", |rng| {
+        // valid pipelined reply frames, arbitrary chunking and cut
+        let mut frames: Vec<Vec<u32>> = Vec::new();
+        let mut stream = Vec::new();
+        let mut ends = Vec::new();
+        for _ in 0..1 + rng.below(5) {
+            let n = 1 + rng.below(8);
+            let words: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            stream.extend_from_slice(&(n as u32).to_le_bytes());
+            for w in &words {
+                stream.extend_from_slice(&w.to_le_bytes());
+            }
+            frames.push(words);
+            ends.push(stream.len());
+        }
+        let cut = rng.below(stream.len() + 1);
+        let mut rd = ReplyReader::new();
+        let mut got: Vec<Vec<u32>> = Vec::new();
+        let mut off = 0usize;
+        while off < cut {
+            let chunk = 1 + rng.below(7);
+            let end = (off + chunk).min(cut);
+            let (used, done) = rd.feed(&stream[off..end]).expect("valid replies");
+            assert!(used > 0 && used <= end - off, "honest consumption");
+            off += used;
+            if let Some(f) = done {
+                // one frame per feed: consumption stopped exactly at
+                // this frame's boundary, pipelined bytes left alone
+                assert_eq!(off, ends[got.len()], "over-consumed past a frame");
+                got.push(f);
+            }
+        }
+        let complete = ends.iter().take_while(|&&e| e <= cut).count();
+        assert_eq!(got.len(), complete, "cut={cut}");
+        assert_eq!(got[..], frames[..complete]);
+
+        // garbage: every feed either errors (connection torn down) or
+        // consumes honestly — no panic, no stall, no over-consumption
+        let junk: Vec<u8> = (0..1 + rng.below(64)).map(|_| rng.next_u64() as u8).collect();
+        let mut rd = ReplyReader::new();
+        let mut off = 0usize;
+        while off < junk.len() {
+            match rd.feed(&junk[off..]) {
+                Ok((used, _)) => {
+                    assert!(used > 0 && used <= junk.len() - off);
+                    off += used;
+                }
+                Err(_) => break,
+            }
+        }
+    });
+}
+
+#[test]
+fn fifo_reassociation_survives_out_of_order_cross_backend_completion() {
+    // The router's ordering contract in miniature: per-backend FIFOs
+    // re-associate replies (TCP delivers per-connection in forward
+    // order), while the interleaving ACROSS backends is arbitrary.
+    // Every client receiver must end up with exactly its own reply,
+    // and failing one backend's window errors exactly its members.
+    prop::check_default("fifo reassociation", |rng| {
+        use aquant::config::RouteSpec;
+        use std::collections::VecDeque;
+        use std::sync::atomic::Ordering;
+        use std::sync::mpsc;
+        use std::time::Instant;
+
+        let n_backends = 2 + rng.below(3);
+        let routes: Vec<RouteSpec> = (0..n_backends)
+            .map(|b| RouteSpec {
+                name: format!("m{b}"),
+                addr: format!("backend-{b}:1"),
+            })
+            .collect();
+        let stats = RouterStats::for_routes(&routes);
+        let mut fifos: Vec<VecDeque<PendingReply>> =
+            (0..n_backends).map(|_| VecDeque::new()).collect();
+        // "forward" tagged requests to random backends; the tag is the
+        // reply payload, so delivery to the wrong request is visible
+        let total = 1 + rng.below(24);
+        let mut rxs = Vec::new();
+        let mut queued: Vec<VecDeque<u32>> = (0..n_backends).map(|_| VecDeque::new()).collect();
+        for i in 0..total as u32 {
+            let b = rng.below(n_backends);
+            let n = 1 + rng.below(4) as u32;
+            let (tx, rx) = mpsc::channel();
+            fifos[b].push_back(PendingReply {
+                tx,
+                n,
+                t0: Instant::now(),
+            });
+            stats.backends[b].inflight.fetch_add(1, Ordering::Relaxed);
+            queued[b].push_back(i);
+            rxs.push((i, b, n, rx));
+        }
+        // one backend may die mid-run; its not-yet-answered window
+        // fails, everyone else is untouched
+        let dying = rng.bernoulli(0.5).then(|| rng.below(n_backends));
+        let mut failed_tags: Vec<u32> = Vec::new();
+        let mut done: Vec<u32> = Vec::new();
+        loop {
+            let live: Vec<usize> = (0..n_backends).filter(|b| !fifos[*b].is_empty()).collect();
+            let Some(&b) = live.get(rng.below(live.len().max(1))).or(live.first()) else {
+                break;
+            };
+            if Some(b) == dying && rng.bernoulli(0.4) {
+                failed_tags.extend(queued[b].drain(..));
+                fail_window(&mut fifos[b], &stats.backends[b], "backend gone");
+                continue;
+            }
+            let tag = queued[b].pop_front().unwrap();
+            let n = fifos[b].front().unwrap().n;
+            complete_front(&mut fifos[b], vec![tag; n as usize], &stats.backends[b])
+                .expect("in-order completion");
+            done.push(tag);
+        }
+        assert_eq!(done.len() + failed_tags.len(), total);
+        for (i, b, n, rx) in rxs {
+            let got = rx.try_recv().expect("every request resolved");
+            if failed_tags.contains(&i) {
+                let e = got.expect_err("failed window member must error");
+                assert!(e.contains("backend gone"));
+            } else {
+                assert_eq!(got.unwrap(), vec![i; n as usize], "request {i}");
+            }
+            let _ = b;
+        }
+        for b in 0..n_backends {
+            assert_eq!(stats.backends[b].inflight.load(Ordering::Relaxed), 0);
+        }
+    });
 }

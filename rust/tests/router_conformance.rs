@@ -1,0 +1,504 @@
+//! Router-tier conformance: front-end processes running the same
+//! readiness loop as serving mode, forwarding framed requests verbatim
+//! to backend serving processes over pooled, pipelined connections.
+//!
+//! Scenarios: mixed v1/v2 traffic through N routers and M backends is
+//! bit-identical to direct single-process serving (sequential clients,
+//! a pipelined cross-backend burst answered in request order, and the
+//! describe handshake); a killed backend fails only its own in-flight
+//! window while other models keep answering (and the router keeps
+//! retrying the dead address); slow-loris clients dribbling through
+//! the router; a saturated in-flight window parking and retrying
+//! without reordering; and the router's GET /stats surfacing
+//! per-backend counters.
+//!
+//! Every test arms a [`common::Watchdog`] — a wedged loop aborts the
+//! process rather than hanging CI (scripts/check.sh adds an outer
+//! `timeout` belt on top).
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use aquant::config::{RouteSpec, ServeConfig};
+use aquant::nn::engine::Engine;
+use aquant::nn::registry::ModelRegistry;
+use aquant::server::{
+    classify_remote, classify_remote_v2, describe_remote, encode_describe_response, RouterServer,
+    ServerStats,
+};
+use aquant::util::rng::Rng;
+
+use common::{
+    chunked_write, expect_closed, expected, random_images, read_response, start, synth_engine,
+    v1_request_bytes, v2_request_bytes, Watchdog,
+};
+
+/// Two distinct engines registered at the SAME ids ("a" = 0, "b" = 1)
+/// on every backend — frames forward verbatim (model ids are not
+/// rewritten), so routed ids must line up across the tier. Traffic is
+/// partitioned by the route table: id 0 goes to one backend, id 1 to
+/// the other.
+fn two_model_registry(a: &Arc<Engine>, b: &Arc<Engine>) -> Arc<ModelRegistry> {
+    Arc::new(
+        ModelRegistry::new(vec![("a".into(), a.clone()), ("b".into(), b.clone())])
+            .expect("valid registry"),
+    )
+}
+
+fn backend_cfg(max_accepts: usize) -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_wait_us: 0,
+        max_accepts: Some(max_accepts),
+        ..ServeConfig::default()
+    }
+}
+
+/// Bind an ephemeral-port router over `routes` and run it on its own
+/// thread (the router-mode mirror of [`common::start`]).
+fn start_router(
+    routes: Vec<RouteSpec>,
+    cfg: ServeConfig,
+) -> (
+    SocketAddr,
+    Arc<ServerStats>,
+    Arc<aquant::server::route::RouterStats>,
+    JoinHandle<anyhow::Result<()>>,
+) {
+    let srv = RouterServer::bind(routes, "127.0.0.1:0", cfg).expect("bind router");
+    let addr = srv.local_addr().expect("router addr");
+    let stats = srv.stats();
+    let rstats = srv.router_stats();
+    let handle = std::thread::spawn(move || srv.run());
+    (addr, stats, rstats, handle)
+}
+
+fn route(name: &str, addr: SocketAddr) -> RouteSpec {
+    RouteSpec {
+        name: name.into(),
+        addr: addr.to_string(),
+    }
+}
+
+#[test]
+fn mixed_v1_v2_through_router_matches_direct_serving() {
+    let _wd = Watchdog::arm("router_mixed_v1_v2", Duration::from_secs(120));
+    let ea = synth_engine(201);
+    let eb = synth_engine(202);
+    let elems = ea.img_elems();
+    let pool = 2usize;
+    // both backends host both models at matching ids; the route table
+    // sends "a" (id 0, the v1 default) to A and "b" (id 1) to B
+    let (addr_a, _sa, backend_a) = start(two_model_registry(&ea, &eb), backend_cfg(pool));
+    let (addr_b, _sb, backend_b) = start(two_model_registry(&ea, &eb), backend_cfg(pool));
+
+    let sequential = 6usize;
+    let cfg = ServeConfig {
+        route_pool: pool,
+        route_inflight: 32,
+        max_accepts: Some(sequential + 2), // + pipelined burst + describe
+        ..ServeConfig::default()
+    };
+    let (raddr, stats, rstats, router) =
+        start_router(vec![route("a", addr_a), route("b", addr_b)], cfg);
+    let ra = raddr.to_string();
+
+    // sequential clients, alternating framings and models: every answer
+    // bit-identical to the sequential engines (= direct serving)
+    let mut rng = Rng::new(203);
+    for k in 0..sequential {
+        let n = 1 + k % 3;
+        let images = random_images(&mut rng, n, elems);
+        let got = match k % 3 {
+            0 => classify_remote(&ra, &images, n).expect("v1 via router"),
+            1 => classify_remote_v2(&ra, 0, &images, n).expect("v2 id0 via router"),
+            _ => classify_remote_v2(&ra, 1, &images, n).expect("v2 id1 via router"),
+        };
+        let engine = if k % 3 == 2 { &eb } else { &ea };
+        assert_eq!(got, expected(engine, &images, n), "sequential client {k}");
+    }
+
+    // one connection pipelines a mixed burst across BOTH backends:
+    // replies may complete out of order across backends, but the
+    // client must see them in request order, bit-identical
+    let reqs: Vec<(u16, Vec<f32>, usize)> = (0..16)
+        .map(|i| {
+            let n = 1 + i % 2;
+            (
+                (i % 2) as u16,
+                random_images(&mut rng, n, elems),
+                n,
+            )
+        })
+        .collect();
+    let mut burst = Vec::new();
+    for (i, (id, images, n)) in reqs.iter().enumerate() {
+        if i % 4 == 0 {
+            burst.extend_from_slice(&v1_request_bytes(images, *n as u32)); // routes to id 0
+        } else {
+            burst.extend_from_slice(&v2_request_bytes(*id, images, *n as u32));
+        }
+    }
+    let mut s = TcpStream::connect(raddr).unwrap();
+    s.write_all(&burst).unwrap();
+    for (i, (id, images, n)) in reqs.iter().enumerate() {
+        let engine = if i % 4 != 0 && *id == 1 { &eb } else { &ea };
+        let got = read_response(&mut s).unwrap();
+        assert_eq!(got, expected(engine, images, *n), "pipelined request {i}");
+    }
+    drop(s);
+
+    // the router answers the describe handshake itself, from the dims
+    // its backend handshakes learned (both completed: both models have
+    // answered requests by now)
+    assert_eq!(
+        describe_remote(&ra).expect("describe via router"),
+        vec![elems as u32, eb.img_elems() as u32]
+    );
+
+    router.join().unwrap().unwrap();
+    backend_a.join().unwrap().unwrap();
+    backend_b.join().unwrap().unwrap();
+
+    // per-route request counters on the router match what was served
+    let total = sequential + reqs.len();
+    assert_eq!(stats.total_requests(), total as u64);
+    // per-backend router counters: everything forwarded was answered,
+    // nothing failed, no reconnects, the in-flight gauge drained
+    let mut forwarded = 0u64;
+    for b in &rstats.backends {
+        forwarded += b.forwarded.load(Ordering::Relaxed);
+        assert_eq!(
+            b.forwarded.load(Ordering::Relaxed),
+            b.answered.load(Ordering::Relaxed),
+            "backend {}",
+            b.addr
+        );
+        assert_eq!(b.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(b.inflight.load(Ordering::Relaxed), 0);
+        assert_eq!(b.reconnects.load(Ordering::Relaxed), 0);
+        assert_eq!(b.rtt.count(), b.answered.load(Ordering::Relaxed));
+    }
+    assert_eq!(forwarded, total as u64);
+}
+
+#[test]
+fn two_routers_share_backends_bit_identically() {
+    let _wd = Watchdog::arm("two_routers", Duration::from_secs(120));
+    let ea = synth_engine(211);
+    let eb = synth_engine(212);
+    let elems = ea.img_elems();
+    let routers = 2usize;
+    let pool = 2usize;
+    // each backend accepts one pool per router
+    let (addr_a, _sa, backend_a) = start(two_model_registry(&ea, &eb), backend_cfg(routers * pool));
+    let (addr_b, _sb, backend_b) = start(two_model_registry(&ea, &eb), backend_cfg(routers * pool));
+
+    let cfg = ServeConfig {
+        route_pool: pool,
+        route_inflight: 8,
+        max_accepts: Some(4),
+        ..ServeConfig::default()
+    };
+    let handles: Vec<_> = (0..routers)
+        .map(|_| start_router(vec![route("a", addr_a), route("b", addr_b)], cfg.clone()))
+        .collect();
+
+    let mut rng = Rng::new(213);
+    for (r, (raddr, ..)) in handles.iter().enumerate() {
+        let ra = raddr.to_string();
+        for k in 0..4 {
+            let n = 1 + (r + k) % 3;
+            let images = random_images(&mut rng, n, elems);
+            let (got, engine) = match k {
+                0 => (classify_remote(&ra, &images, n).unwrap(), &ea),
+                1 => (classify_remote_v2(&ra, 0, &images, n).unwrap(), &ea),
+                _ => (classify_remote_v2(&ra, 1, &images, n).unwrap(), &eb),
+            };
+            assert_eq!(got, expected(engine, &images, n), "router {r} client {k}");
+        }
+    }
+
+    for (_, stats, rstats, router) in handles {
+        router.join().unwrap().unwrap();
+        assert_eq!(stats.total_requests(), 4);
+        for b in &rstats.backends {
+            assert_eq!(b.failed.load(Ordering::Relaxed), 0);
+            assert_eq!(b.inflight.load(Ordering::Relaxed), 0);
+        }
+    }
+    backend_a.join().unwrap().unwrap();
+    backend_b.join().unwrap().unwrap();
+}
+
+/// A hand-rolled "backend" that completes the describe handshake and
+/// then drops any connection as soon as a forwarded frame starts to
+/// arrive — a backend dying mid-flight, deterministically.
+fn start_dying_backend(dims: Vec<u32>, pool: usize) -> (SocketAddr, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind fake backend");
+    let addr = listener.local_addr().unwrap();
+    let acceptor = std::thread::spawn(move || {
+        let handlers: Vec<JoinHandle<()>> = (0..pool)
+            .map(|_| {
+                let (mut s, _) = listener.accept().expect("router pool connect");
+                let desc = encode_describe_response(&dims);
+                std::thread::spawn(move || {
+                    let mut hdr = [0u8; 8];
+                    if s.read_exact(&mut hdr).is_err() {
+                        return; // router gone before the handshake
+                    }
+                    s.write_all(&desc).ok();
+                    // wait for the first forwarded byte (or router
+                    // shutdown EOF), then drop: dead mid-request
+                    let mut b = [0u8; 256];
+                    let _ = s.read(&mut b);
+                })
+            })
+            .collect();
+        // listener drops here: reconnects get ECONNREFUSED
+        drop(listener);
+        for h in handlers {
+            h.join().unwrap();
+        }
+    });
+    (addr, acceptor)
+}
+
+#[test]
+fn killed_backend_fails_only_its_inflight_window() {
+    let _wd = Watchdog::arm("killed_backend", Duration::from_secs(120));
+    let ea = synth_engine(221);
+    let elems = ea.img_elems();
+    let pool = 2usize;
+    // model "a" on a real backend; model "b" on a backend that dies the
+    // moment a request reaches it. Its describe table must still host
+    // id 1 (id 0 lives elsewhere, so its entry may be 0).
+    let reg_a = Arc::new(ModelRegistry::new(vec![("a".into(), ea.clone())]).unwrap());
+    let (addr_a, _sa, backend_a) = start(reg_a, backend_cfg(pool));
+    let (addr_b, dying) = start_dying_backend(vec![0, elems as u32], pool);
+
+    let cfg = ServeConfig {
+        route_pool: pool,
+        route_inflight: 8,
+        max_accepts: Some(4),
+        ..ServeConfig::default()
+    };
+    let (raddr, _stats, rstats, router) =
+        start_router(vec![route("a", addr_a), route("b", addr_b)], cfg);
+    let ra = raddr.to_string();
+
+    // model "a" serves before the failure...
+    let mut rng = Rng::new(222);
+    let images = random_images(&mut rng, 2, elems);
+    assert_eq!(
+        classify_remote(&ra, &images, 2).unwrap(),
+        expected(&ea, &images, 2)
+    );
+
+    // ...a request for "b" reaches the dying backend: exactly that
+    // connection's in-flight window fails, and the client whose request
+    // it was is closed without an answer
+    let doomed_images = random_images(&mut rng, 1, elems);
+    let mut doomed = TcpStream::connect(raddr).unwrap();
+    doomed
+        .write_all(&v2_request_bytes(1, &doomed_images, 1))
+        .unwrap();
+    expect_closed(doomed);
+
+    // ...and model "a" keeps answering, bit-identical, afterwards
+    let images = random_images(&mut rng, 3, elems);
+    assert_eq!(
+        classify_remote(&ra, &images, 3).unwrap(),
+        expected(&ea, &images, 3)
+    );
+
+    // hold a connection open so the router outlives the reconnect
+    // backoff (50 ms), then check the isolation ledger while it's live
+    let holder = TcpStream::connect(raddr).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    let b_stats = rstats
+        .backends
+        .iter()
+        .find(|b| b.addr == addr_b.to_string())
+        .expect("dying backend entry");
+    assert!(b_stats.failed.load(Ordering::Relaxed) >= 1, "doomed request failed");
+    assert_eq!(b_stats.inflight.load(Ordering::Relaxed), 0);
+    assert!(
+        b_stats.reconnects.load(Ordering::Relaxed) >= 1,
+        "router keeps retrying the dead backend"
+    );
+    let a_stats = rstats
+        .backends
+        .iter()
+        .find(|b| b.addr == addr_a.to_string())
+        .unwrap();
+    assert_eq!(a_stats.failed.load(Ordering::Relaxed), 0, "healthy backend untouched");
+    assert_eq!(a_stats.answered.load(Ordering::Relaxed), 2);
+
+    drop(holder);
+    router.join().unwrap().unwrap();
+    backend_a.join().unwrap().unwrap();
+    dying.join().unwrap();
+}
+
+#[test]
+fn slow_loris_through_the_router_is_served_not_buffered_to_death() {
+    let _wd = Watchdog::arm("router_slow_loris", Duration::from_secs(120));
+    let ea = synth_engine(231);
+    let eb = synth_engine(232);
+    let elems = ea.img_elems();
+    let pool = 2usize;
+    let (addr_a, _sa, backend_a) = start(two_model_registry(&ea, &eb), backend_cfg(pool));
+    let (addr_b, _sb, backend_b) = start(two_model_registry(&ea, &eb), backend_cfg(pool));
+
+    let lorises = 4usize;
+    let cfg = ServeConfig {
+        route_pool: pool,
+        route_inflight: 8,
+        max_accepts: Some(lorises),
+        ..ServeConfig::default()
+    };
+    let (raddr, _stats, rstats, router) =
+        start_router(vec![route("a", addr_a), route("b", addr_b)], cfg);
+
+    // dribble whole requests a few bytes at a time — the first one
+    // starts before the backend handshakes can possibly be done, so the
+    // gate-park (header decoded, no capacity knowledge yet) is on the
+    // path too
+    let mut rng = Rng::new(233);
+    for k in 0..lorises {
+        let n = 1 + k % 2;
+        let images = random_images(&mut rng, n, elems);
+        let (bytes, engine) = if k % 2 == 0 {
+            (v1_request_bytes(&images, n as u32), &ea)
+        } else {
+            (v2_request_bytes(1, &images, n as u32), &eb)
+        };
+        let mut s = TcpStream::connect(raddr).unwrap();
+        chunked_write(&mut s, &bytes, 7, Duration::from_millis(2)).unwrap();
+        let got = read_response(&mut s).unwrap();
+        assert_eq!(got, expected(engine, &images, n), "loris {k}");
+    }
+
+    router.join().unwrap().unwrap();
+    backend_a.join().unwrap().unwrap();
+    backend_b.join().unwrap().unwrap();
+    for b in &rstats.backends {
+        assert_eq!(b.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(b.inflight.load(Ordering::Relaxed), 0);
+    }
+}
+
+#[test]
+fn saturated_inflight_window_parks_and_answers_in_order() {
+    let _wd = Watchdog::arm("router_saturation", Duration::from_secs(120));
+    let ea = synth_engine(241);
+    let elems = ea.img_elems();
+    // one backend connection with a one-request window: a pipelined
+    // burst must park at the gate, retry as replies free the window,
+    // and still come back in request order
+    let reg = Arc::new(ModelRegistry::new(vec![("a".into(), ea.clone())]).unwrap());
+    let (addr_a, _sa, backend_a) = start(reg, backend_cfg(1));
+
+    let cfg = ServeConfig {
+        route_pool: 1,
+        route_inflight: 1,
+        max_accepts: Some(1),
+        ..ServeConfig::default()
+    };
+    let (raddr, _stats, rstats, router) = start_router(vec![route("a", addr_a)], cfg);
+
+    let mut rng = Rng::new(242);
+    let reqs: Vec<(Vec<f32>, usize)> = (0..8)
+        .map(|i| {
+            let n = 1 + i % 3;
+            (random_images(&mut rng, n, elems), n)
+        })
+        .collect();
+    let mut burst = Vec::new();
+    for (i, (images, n)) in reqs.iter().enumerate() {
+        if i % 2 == 0 {
+            burst.extend_from_slice(&v1_request_bytes(images, *n as u32));
+        } else {
+            burst.extend_from_slice(&v2_request_bytes(0, images, *n as u32));
+        }
+    }
+    let mut s = TcpStream::connect(raddr).unwrap();
+    s.write_all(&burst).unwrap();
+    for (i, (images, n)) in reqs.iter().enumerate() {
+        let got = read_response(&mut s).unwrap();
+        assert_eq!(got, expected(&ea, images, *n), "burst request {i}");
+    }
+    drop(s);
+    router.join().unwrap().unwrap();
+    backend_a.join().unwrap().unwrap();
+
+    let b = &rstats.backends[0];
+    assert_eq!(b.forwarded.load(Ordering::Relaxed), reqs.len() as u64);
+    assert_eq!(b.answered.load(Ordering::Relaxed), reqs.len() as u64);
+    assert_eq!(b.inflight.load(Ordering::Relaxed), 0);
+}
+
+/// Minimal HTTP GET against the router's stats endpoint.
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect stats");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.read_to_string(&mut body).expect("read stats response");
+    body
+}
+
+#[test]
+fn router_stats_endpoint_reports_per_backend_counters() {
+    let _wd = Watchdog::arm("router_stats_endpoint", Duration::from_secs(120));
+    let ea = synth_engine(251);
+    let elems = ea.img_elems();
+    let reg = Arc::new(ModelRegistry::new(vec![("a".into(), ea.clone())]).unwrap());
+    let (addr_a, _sa, backend_a) = start(reg, backend_cfg(2));
+
+    let cfg = ServeConfig {
+        route_pool: 2,
+        route_inflight: 8,
+        max_accepts: Some(2),
+        stats_addr: Some("127.0.0.1:0".into()),
+        ..ServeConfig::default()
+    };
+    let srv = RouterServer::bind(vec![route("a", addr_a)], "127.0.0.1:0", cfg).unwrap();
+    let raddr = srv.local_addr().unwrap();
+    let stats_addr = srv.stats_local_addr().expect("stats endpoint bound");
+    let router = std::thread::spawn(move || srv.run());
+
+    let mut rng = Rng::new(252);
+    let images = random_images(&mut rng, 2, elems);
+    assert_eq!(
+        classify_remote(&raddr.to_string(), &images, 2).unwrap(),
+        expected(&ea, &images, 2)
+    );
+
+    // hold the loop open while scraping (accepts are exhausted once the
+    // holder connects; the stats listener is independent of that)
+    let holder = TcpStream::connect(raddr).unwrap();
+    let json = http_get(stats_addr, "/stats");
+    assert!(json.contains("\"router\""), "JSON router section: {json}");
+    assert!(json.contains("\"backends\""));
+    assert!(
+        json.contains(&format!("\"{addr_a}\"")),
+        "backend addr in JSON: {json}"
+    );
+    assert!(json.contains("\"forwarded\""));
+    let text = http_get(stats_addr, "/stats?fmt=text");
+    assert!(
+        text.contains(&format!("backend {addr_a}")),
+        "backend line in text: {text}"
+    );
+    drop(holder);
+    router.join().unwrap().unwrap();
+    backend_a.join().unwrap().unwrap();
+}

@@ -14,6 +14,9 @@
 #       clients through the readiness event loop,
 #       "conns256_images_per_sec") regresses the same way — same
 #       skip-older-entries rule, or
+#   (d') the router-tier row (32 pipelined clients through one router
+#       forwarding to 2 backend servers, "router_images_per_sec")
+#       regresses the same way — same skip-older-entries rule, or
 #   (e) the batch-service p99 of that 256-connection burst
 #       ("p99_service_us", from the same histograms /stats serves)
 #       climbs more than the fraction ABOVE the best (lowest) prior
@@ -89,6 +92,10 @@ if mixed is None:
 conns = blob.get(CONNS)
 if conns is None:
     sys.exit(f"bench_check: FAIL - no {CONNS} in the blob")
+ROUTER = "router_images_per_sec"
+router = blob.get(ROUTER)
+if router is None:
+    sys.exit(f"bench_check: FAIL - no {ROUTER} in the blob")
 p99 = blob.get(P99)
 if p99 is None:
     sys.exit(f"bench_check: FAIL - no {P99} in the blob")
@@ -101,7 +108,7 @@ if gemm is None:
 # "gemm_tile" key) and are skipped, as is any future tile retune.
 tile = blob.get("gemm_tile", "")
 
-prior, mixed_prior, conns_prior, p99_prior, gemm_prior = [], [], [], [], []
+prior, mixed_prior, conns_prior, router_prior, p99_prior, gemm_prior = [], [], [], [], [], []
 for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
     try:
         entry = json.load(open(path))
@@ -110,6 +117,7 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         v = ips(entry)          # KeyError/TypeError on an off-schema row
         m = entry.get(MIXED)
         c = entry.get(CONNS)
+        r = entry.get(ROUTER)
         p = entry.get(P99)
         g = entry.get(GEMM) if entry.get("gemm_tile", "") == tile else None
     except (ValueError, KeyError, TypeError, AttributeError):
@@ -121,6 +129,8 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         mixed_prior.append((m, path))
     if c is not None:
         conns_prior.append((c, path))
+    if r is not None:
+        router_prior.append((r, path))
     if p is not None and p > 0:
         p99_prior.append((p, path))
     if g is not None:
@@ -151,6 +161,10 @@ gate("mixed 2-model throughput", mixed, mixed_prior,
 # end; same skip rule for entries predating the row.
 gate("256-connection throughput", conns, conns_prior,
      f"bench_check: no prior {CONNS} entries; starting the conns trajectory")
+# Router-tier trajectory: pipelined clients through the forwarding
+# front-end; same skip rule for entries predating the row.
+gate("router-tier throughput", router, router_prior,
+     f"bench_check: no prior {ROUTER} entries; starting the router trajectory")
 # Kernel-rate trajectory: the packed-panel GEMM in exact mode, gated
 # only against same-tile-config entries (skip rule above).
 gate(f"gemm {tile or 'untiled'}", gemm, gemm_prior,

@@ -43,6 +43,10 @@ if command -v cargo >/dev/null 2>&1; then
         # server over real sockets, so a wedged loop must fail, not hang.
         echo "check: re-running stats_endpoint under a 600s timeout guard"
         timeout -k 30 600 cargo test -q --offline --test stats_endpoint || failed=1
+        # Same guard for the router tier: routers, backends, and
+        # killed-backend reconnect loops all run on real sockets.
+        echo "check: re-running router_conformance under a 600s timeout guard"
+        timeout -k 30 600 cargo test -q --offline --test router_conformance || failed=1
     else
         echo "check: timeout(1) unavailable; relying on the suite's in-process watchdogs" >&2
     fi
