@@ -5,7 +5,9 @@
 //! the multi-model serving shape the fair scheduler admits into — and
 //! a high-connection-count row: 256 concurrent TCP clients pipelining
 //! requests through the readiness event loop end to end (sockets,
-//! decode, queue, scheduler, pool, response writes).
+//! decode, queue, scheduler, pool, response writes), and a
+//! reload-under-load row — the same burst with control-plane registry
+//! swaps landing mid-flight, pricing the epoch machinery.
 //!
 //! Prints human rows plus a machine-readable JSON blob; set
 //! `BENCH_JSON=path` to write the blob to a file instead
@@ -206,6 +208,118 @@ fn main() {
             p99
         );
         (ips, p99)
+    };
+
+    // Reload-under-load row: the same 256-connection pipelined burst,
+    // but with the control plane landing registry swaps (policy
+    // retunes, a hot add, a remove, reloads) while the burst drains.
+    // Every swap publishes a fresh epoch the event loop picks up
+    // between requests; the delta vs the conns256 row is the epoch
+    // machinery's cost on the hot path.
+    let reload_ips = {
+        let conns = 256usize;
+        let driver_threads = 8usize;
+        let reqs = 4usize;
+        let batch = 8usize;
+        let tiny_srv = Arc::new(synth::engine_from_spec("tiny", 42).expect("tiny spec"));
+        let elems = tiny_srv.img_elems();
+        let cfg = ServeConfig {
+            workers: 4,
+            max_batch: 64,
+            batch_wait_us: 200,
+            max_accepts: Some(conns),
+            admin_addr: Some("127.0.0.1:0".into()),
+            ..ServeConfig::default()
+        };
+        let registry =
+            ModelRegistry::new(vec![("tiny".into(), tiny_srv)]).expect("reload bench registry");
+        let srv = aquant::server::Server::bind(Arc::new(registry), "127.0.0.1:0", cfg)
+            .expect("bind reload bench server");
+        let addr = srv.local_addr().expect("addr");
+        let admin_addr = srv.admin_local_addr().expect("admin addr");
+        let server = std::thread::spawn(move || srv.run());
+        let payload: Vec<u8> = {
+            let imgs: Vec<f32> = (0..batch * elems).map(|_| rng.range_f32(-1.0, 3.0)).collect();
+            let mut req = (batch as u32).to_le_bytes().to_vec();
+            for v in &imgs {
+                req.extend_from_slice(&v.to_le_bytes());
+            }
+            req
+        };
+        let t0 = Instant::now();
+        let mut drivers = Vec::new();
+        for _ in 0..driver_threads {
+            let per = conns / driver_threads;
+            let payload = payload.clone();
+            drivers.push(std::thread::spawn(move || {
+                let mut socks: Vec<std::net::TcpStream> = (0..per)
+                    .map(|_| std::net::TcpStream::connect(addr).expect("connect"))
+                    .collect();
+                for s in socks.iter_mut() {
+                    for _ in 0..reqs {
+                        s.write_all(&payload).expect("request");
+                    }
+                }
+                for s in socks.iter_mut() {
+                    for _ in 0..reqs {
+                        use std::io::Read as _;
+                        let mut hdr = [0u8; 4];
+                        s.read_exact(&mut hdr).expect("response header");
+                        let m = u32::from_le_bytes(hdr) as usize;
+                        assert_eq!(m, batch, "short response under reload");
+                        let mut buf = vec![0u8; m * 4];
+                        s.read_exact(&mut buf).expect("response body");
+                    }
+                }
+            }));
+        }
+        // Control-plane churn concurrent with the burst; every command
+        // must succeed (a failed swap would mean the row measured
+        // nothing).
+        let mut admin = std::net::TcpStream::connect(admin_addr).expect("admin connect");
+        let mut swaps = 0usize;
+        for cmd in [
+            "policy tiny weight=2",
+            "reload",
+            "add spare=synth:tiny:77",
+            "policy tiny weight=1",
+            "reload",
+            "remove spare",
+        ] {
+            use std::io::Read as _;
+            admin.write_all(cmd.as_bytes()).expect("admin write");
+            admin.write_all(b"\n").expect("admin write");
+            let mut reply = Vec::new();
+            let mut b = [0u8; 1];
+            loop {
+                admin.read_exact(&mut b).expect("admin reply");
+                if b[0] == b'\n' {
+                    break;
+                }
+                reply.push(b[0]);
+            }
+            assert!(
+                reply.starts_with(b"ok"),
+                "admin {cmd:?} failed: {}",
+                String::from_utf8_lossy(&reply)
+            );
+            swaps += 1;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        for d in drivers {
+            d.join().expect("reload driver");
+        }
+        let wall = t0.elapsed();
+        drop(admin);
+        server.join().expect("server thread").expect("serve ok");
+        let ips = (conns * reqs * batch) as f64 / wall.as_secs_f64();
+        println!(
+            "serve/reload-under-load  {:>10.1}ms {:>12.0} images/s \
+             (256 conns, {swaps} registry swaps mid-burst)",
+            wall.as_secs_f64() * 1e3,
+            ips
+        );
+        ips
     };
 
     // Router-tier row: the same pipelined wire shape pushed through a
@@ -448,6 +562,7 @@ fn main() {
     json.push_str(&format!(
         "  ],\n  \"mixed_w4_b32x2_images_per_sec\": {mixed_ips:.1},\n  \
          \"conns256_images_per_sec\": {conns_ips:.1},\n  \
+         \"reload_under_load_images_per_sec\": {reload_ips:.1},\n  \
          \"router_images_per_sec\": {router_ips:.1},\n  \
          \"p99_service_us\": {p99_service_us:.1},\n  \
          \"border_quant_col_ns\": {border_quant_col_ns:.1},\n  \

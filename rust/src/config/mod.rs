@@ -440,12 +440,27 @@ pub struct RouteSpec {
 }
 
 impl RouteSpec {
-    /// Parse one `--route MODEL=host:port` value.
+    /// Parse one `--route MODEL=host:port` value. The address is
+    /// validated structurally here — non-empty host, port a nonzero
+    /// `u16` — so `m=foo:`, `m=:9000`, and `m=a:b` fail at startup
+    /// with a config error instead of at first connect. `rsplit_once`
+    /// keeps bracketed IPv6 (`[::1]:9000`) working: the LAST colon
+    /// separates the port.
     pub fn parse(spec: &str) -> Result<RouteSpec> {
         let (name, addr) = crate::util::cli::split_kv(spec)
             .map_err(|e| anyhow::anyhow!("route spec {spec:?}: {e} (want MODEL=host:port)"))?;
-        if !addr.contains(':') {
+        let Some((host, port)) = addr.rsplit_once(':') else {
             bail!("route spec {spec:?}: backend {addr:?} is not host:port");
+        };
+        if host.is_empty() {
+            bail!("route spec {spec:?}: backend {addr:?} has an empty host");
+        }
+        match port.parse::<u16>() {
+            Ok(p) if p != 0 => {}
+            _ => bail!(
+                "route spec {spec:?}: backend {addr:?} port {port:?} is not \
+                 a nonzero u16"
+            ),
         }
         Ok(RouteSpec {
             name: name.to_string(),
@@ -477,7 +492,7 @@ impl RouteSpec {
 /// `--max-batch`, `--batch-wait-us`, `--queue-images`, `--max-conns`,
 /// `--conn-timeout-ms`, `--max-accepts`, `--io-poll`, `--stats-addr`,
 /// `--stats-history`, `--stats-history-every-s`, `--intra-split`,
-/// `--fast-kernels`.
+/// `--fast-kernels`, `--admin-addr`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServeConfig {
     /// Inference worker threads. 0 = auto (cores − 1).
@@ -518,6 +533,12 @@ pub struct ServeConfig {
     /// `127.0.0.1:9100`): `GET /stats` returns a JSON snapshot,
     /// `GET /stats?fmt=text` plaintext. None = no endpoint.
     pub stats_addr: Option<String>,
+    /// Bind the control-plane admin listener here (`--admin-addr`,
+    /// e.g. `127.0.0.1:9200`): a line-oriented protocol (`add`,
+    /// `remove`, `policy`, `reload`) that epoch-swaps the model
+    /// registry under live traffic. None = no control plane (the
+    /// registry stays immutable after bind).
+    pub admin_addr: Option<String>,
     /// Append periodic stats snapshots to this file as JSON lines
     /// (`--stats-history`); None = no history.
     pub stats_history: Option<String>,
@@ -547,6 +568,7 @@ impl Default for ServeConfig {
             poll_fallback: false,
             fast_kernels: false,
             stats_addr: None,
+            admin_addr: None,
             stats_history: None,
             stats_history_every_s: 5,
             route_pool: 2,
@@ -595,6 +617,7 @@ impl ServeConfig {
             poll_fallback: args.bool_flag("io-poll"),
             fast_kernels: args.bool_flag("fast-kernels"),
             stats_addr: args.str_flag_opt("stats-addr").map(str::to_string),
+            admin_addr: args.str_flag_opt("admin-addr").map(str::to_string),
             stats_history: args.str_flag_opt("stats-history").map(str::to_string),
             stats_history_every_s: args
                 .num_flag("stats-history-every-s", d.stats_history_every_s)?,
@@ -840,8 +863,14 @@ mod tests {
         assert!(!cfg.poll_fallback);
         assert!(!cfg.fast_kernels, "fast kernels must be opt-in");
         assert_eq!(cfg.stats_addr, None);
+        assert_eq!(cfg.admin_addr, None, "control plane must be opt-in");
         assert_eq!(cfg.stats_history, None);
         assert_eq!(cfg.stats_history_every_s, 5);
+
+        // control-plane listener flag
+        let cfg =
+            ServeConfig::from_args(&a(&["serve", "--admin-addr", "127.0.0.1:9200"])).unwrap();
+        assert_eq!(cfg.admin_addr.as_deref(), Some("127.0.0.1:9200"));
 
         // stats endpoint + history flags
         let cfg = ServeConfig::from_args(&a(&[
@@ -1096,10 +1125,31 @@ mod tests {
         assert_eq!(r.addr, "127.0.0.1:7001");
         let r = RouteSpec::parse("bench=gpu-host:9000").unwrap();
         assert_eq!((r.name.as_str(), r.addr.as_str()), ("bench", "gpu-host:9000"));
+        // the last colon splits the port, so bracketed IPv6 parses
+        let r = RouteSpec::parse("tiny=[::1]:9000").unwrap();
+        assert_eq!(r.addr, "[::1]:9000");
         assert!(RouteSpec::parse("tiny").is_err(), "no '='");
         assert!(RouteSpec::parse("=127.0.0.1:7001").is_err(), "empty name");
         assert!(RouteSpec::parse("tiny=").is_err(), "empty addr");
         assert!(RouteSpec::parse("tiny=nohostport").is_err(), "no port");
+    }
+
+    #[test]
+    fn route_spec_rejects_malformed_addresses() {
+        // Structural address validation happens at parse (startup),
+        // not at first connect: each of these used to pass the old
+        // `contains(':')` check and then fail only when the router
+        // dialed the backend.
+        assert!(RouteSpec::parse("m=foo:").is_err(), "empty port");
+        assert!(RouteSpec::parse("m=:9000").is_err(), "empty host");
+        assert!(RouteSpec::parse("m=a:b").is_err(), "non-numeric port");
+        assert!(RouteSpec::parse("m=h:0").is_err(), "port 0");
+        assert!(RouteSpec::parse("m=h:65536").is_err(), "port > u16::MAX");
+        assert!(RouteSpec::parse("m=h:-1").is_err(), "negative port");
+        assert!(RouteSpec::parse("m=h: 9000").is_err(), "spacey port");
+        // boundary values stay accepted
+        assert!(RouteSpec::parse("m=h:1").is_ok());
+        assert!(RouteSpec::parse("m=h:65535").is_ok());
     }
 
     #[test]

@@ -60,7 +60,7 @@ USAGE: aquant <subcommand> [flags]
             [--conn-timeout-ms N] [--max-accepts N] [--io-poll]
             [--stats-every-s N] [--stats-addr H:P]
             [--stats-history PATH] [--stats-history-every-s N]
-            [--fast-kernels]
+            [--admin-addr H:P] [--fast-kernels]
   serve     --route MODEL=H:P [--route MODEL=H:P ...] [--addr H:P]
             [--route-pool N] [--route-inflight N] [--max-conns N]
             [--conn-timeout-ms N] [--max-accepts N] [--io-poll]
@@ -136,6 +136,22 @@ snapshot every --stats-history-every-s seconds (default 5) plus one
 at shutdown, so perf history survives restarts.
   curl -s http://HOST:PORT/stats | python3 -m json.tool
   curl -s 'http://HOST:PORT/stats?fmt=text'
+
+control plane: --admin-addr H:P binds a line-oriented admin endpoint
+on the same event loop for zero-downtime registry swaps. Commands
+(one per line, one reply line each, `ok ...` or `err ...`):
+  add NAME=synth:KIND[:SEED][;key=value...]   hot-add a model
+  remove NAME                                 tombstone a model (new
+                                              requests rejected, queued
+                                              work drains on the old
+                                              engine)
+  policy NAME key=value [key=value ...]       retune a live model's
+                                              serving policy
+  reload                                      bump the registry epoch
+In-flight batches always finish on the engine they started on, and
+unchanged models' predictions are bit-identical across swaps. Bind it
+to localhost: the protocol is unauthenticated by design.
+  printf 'add c=synth:tiny:7\\n' | nc HOST PORT
 ";
 
 #[cfg(feature = "pjrt")]

@@ -11,6 +11,21 @@
 //! [`ScratchDims`] union over all models is computed so the shared
 //! worker pool can pre-size per-worker scratch for the largest model —
 //! heterogeneous shapes then reuse the same buffers allocation-free.
+//!
+//! Registries are **epoch-versioned** for the control plane: a running
+//! server swaps one `Arc<ModelRegistry>` for the next (built by
+//! [`ModelRegistry::with_added`] / [`with_removed`] / [`with_policy`]),
+//! never mutates one in place. The derived-registry rules keep every
+//! already-issued wire id meaningful across swaps:
+//!
+//! - **ids are append-only**: a slot index is assigned once and never
+//!   reused; removing a model leaves a tombstone (`None` slot) so the
+//!   id answers "unknown model" forever after — exactly what the
+//!   describe protocol's `img_elems == 0` convention already encodes;
+//! - **scratch dims are grow-only**: the union only ever accumulates,
+//!   so worker scratch sized for epoch N fits every epoch ≤ N and
+//!   in-flight batches never outgrow their buffers mid-swap;
+//! - each entry records `added_at_epoch` for observability.
 
 use std::sync::Arc;
 
@@ -22,30 +37,39 @@ use crate::config::{ModelSource, ModelSpec, PolicyOverrides};
 
 /// Upper bound on hosted models: far above any deployment this serves,
 /// small enough that per-model queues/batchers/stats stay cheap. (The
-/// wire format would allow u16::MAX + 1.)
+/// wire format would allow u16::MAX + 1.) With the control plane this
+/// bounds *slots ever assigned*, not just live models — tombstones
+/// count, so a churny add/remove loop eventually needs a restart.
 pub const MAX_MODELS: usize = 1024;
 
 /// One hosted model: routing name + its engine + its serving-policy
-/// overrides (the `;key=value` tail of its `--model` spec). Overrides
-/// are resolved against the server-level defaults into a
-/// [`crate::server::sched::Policy`] when a server binds the registry —
-/// the registry itself stays server-config-agnostic.
+/// overrides (the `;key=value` tail of its `--model` spec or a later
+/// admin `policy` command). Overrides are resolved against the
+/// server-level defaults into a [`crate::server::sched::Policy`] when a
+/// server binds or swaps the registry — the registry itself stays
+/// server-config-agnostic.
+#[derive(Clone)]
 pub struct ModelEntry {
     pub name: String,
     pub engine: Arc<Engine>,
     pub policy: PolicyOverrides,
+    /// Registry epoch this model first appeared in (0 = present at
+    /// bind). Survives policy retunes; surfaced in `/stats`.
+    pub added_at_epoch: u64,
 }
 
-/// Immutable set of models behind one server / worker pool. Ids are the
-/// construction order: 0 is the default (v1-compat) model.
+/// Immutable snapshot of the models behind one server / worker pool at
+/// one epoch. Slot index = wire model id; 0 is the default (v1-compat)
+/// model. `None` slots are tombstones left by removed models.
 pub struct ModelRegistry {
-    entries: Vec<ModelEntry>,
+    slots: Vec<Option<ModelEntry>>,
     scratch_dims: ScratchDims,
+    epoch: u64,
 }
 
 impl ModelRegistry {
-    /// Build and validate a registry. `entries` order assigns model
-    /// ids; every model keeps the server-default serving policy.
+    /// Build and validate an epoch-0 registry. `entries` order assigns
+    /// model ids; every model keeps the server-default serving policy.
     pub fn new(entries: Vec<(String, Arc<Engine>)>) -> Result<ModelRegistry> {
         ModelRegistry::with_policies(
             entries
@@ -66,30 +90,21 @@ impl ModelRegistry {
             bail!("model registry holds {} models, max {MAX_MODELS}", entries.len());
         }
         let mut dims = ScratchDims::default();
-        let mut out = Vec::with_capacity(entries.len());
+        let mut out: Vec<Option<ModelEntry>> = Vec::with_capacity(entries.len());
         for (name, engine, policy) in entries {
-            if name.is_empty() {
-                bail!("model name must be non-empty");
-            }
-            if out.iter().any(|e: &ModelEntry| e.name == name) {
-                bail!("duplicate model name {name:?} in registry");
-            }
-            engine
-                .validate()
-                .map_err(|e| e.context(format!("registering model {name:?}")))?;
-            // Pack B panels for the tiled GEMM here, once, so the
-            // serving path never pays the pack cost.
-            engine.ensure_packed();
+            validate_entry(&name, &engine, out.iter().flatten())?;
             dims = dims.union(engine.scratch_dims());
-            out.push(ModelEntry {
+            out.push(Some(ModelEntry {
                 name,
                 engine,
                 policy,
-            });
+                added_at_epoch: 0,
+            }));
         }
         Ok(ModelRegistry {
-            entries: out,
+            slots: out,
             scratch_dims: dims,
+            epoch: 0,
         })
     }
 
@@ -122,42 +137,186 @@ impl ModelRegistry {
         ModelRegistry::with_policies(entries)
     }
 
+    /// Next-epoch registry with `name` appended at a fresh slot id.
+    /// Rejects duplicate live names (a tombstoned name may be re-added
+    /// — it gets a NEW id; the old id stays dead) and invalid engines;
+    /// scratch dims grow by union, never shrink.
+    pub fn with_added(
+        &self,
+        name: &str,
+        engine: Arc<Engine>,
+        policy: PolicyOverrides,
+    ) -> Result<ModelRegistry> {
+        if self.slots.len() >= MAX_MODELS {
+            bail!(
+                "registry has assigned all {MAX_MODELS} model slots (ids are \
+                 append-only; removed slots are not reused)"
+            );
+        }
+        validate_entry(name, &engine, self.live())?;
+        let mut slots = self.slots.clone();
+        let epoch = self.epoch + 1;
+        let dims = self.scratch_dims.union(engine.scratch_dims());
+        slots.push(Some(ModelEntry {
+            name: name.to_string(),
+            engine,
+            policy,
+            added_at_epoch: epoch,
+        }));
+        Ok(ModelRegistry {
+            slots,
+            scratch_dims: dims,
+            epoch,
+        })
+    }
+
+    /// Next-epoch registry with `name` tombstoned: its id keeps
+    /// answering "unknown model" forever. Rejects unknown names and
+    /// removing the last live model (an empty registry cannot serve).
+    pub fn with_removed(&self, name: &str) -> Result<ModelRegistry> {
+        let Some(id) = self.id_of(name) else {
+            bail!("no model named {name:?} to remove");
+        };
+        if self.live().count() == 1 {
+            bail!("cannot remove {name:?}: it is the last live model");
+        }
+        let mut slots = self.slots.clone();
+        slots[id as usize] = None;
+        Ok(ModelRegistry {
+            slots,
+            scratch_dims: self.scratch_dims, // grow-only: keep the union
+            epoch: self.epoch + 1,
+        })
+    }
+
+    /// Next-epoch registry with `name`'s policy overrides updated:
+    /// every `Some` field of `over` replaces the entry's value, `None`
+    /// fields keep it (so `policy m weight=5` retunes one knob without
+    /// resetting the rest). Bounds are enforced when the server
+    /// re-resolves policies at swap time.
+    pub fn with_policy(&self, name: &str, over: &PolicyOverrides) -> Result<ModelRegistry> {
+        let Some(id) = self.id_of(name) else {
+            bail!("no model named {name:?} to retune");
+        };
+        let mut slots = self.slots.clone();
+        let entry = slots[id as usize].as_mut().expect("id_of returned a live id");
+        let p = &mut entry.policy;
+        if let Some(v) = over.max_batch {
+            p.max_batch = Some(v);
+        }
+        if let Some(v) = over.batch_wait_us {
+            p.batch_wait_us = Some(v);
+        }
+        if let Some(v) = over.queue_images {
+            p.queue_images = Some(v);
+        }
+        if let Some(v) = over.weight {
+            p.weight = Some(v);
+        }
+        if let Some(v) = over.slo_us {
+            p.slo_us = Some(v);
+        }
+        Ok(ModelRegistry {
+            slots,
+            scratch_dims: self.scratch_dims,
+            epoch: self.epoch + 1,
+        })
+    }
+
+    /// Next-epoch registry with identical contents: the admin `reload`
+    /// command — forces the scheduler/conn tier to re-resolve policies
+    /// and re-publish stats rows without changing the model set.
+    pub fn reloaded(&self) -> ModelRegistry {
+        ModelRegistry {
+            slots: self.slots.clone(),
+            scratch_dims: self.scratch_dims,
+            epoch: self.epoch + 1,
+        }
+    }
+
+    /// Registry epoch: 0 at bind, +1 per control-plane swap.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Slots ever assigned (live + tombstones) = one past the highest
+    /// wire id this registry answers for. Describe responses and
+    /// per-slot server state are sized by this.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.slots.is_empty()
     }
 
-    /// Entry by wire model id.
+    /// Live (non-tombstoned) model count.
+    pub fn live_len(&self) -> usize {
+        self.live().count()
+    }
+
+    /// Entry by wire model id; `None` for out-of-range ids AND
+    /// tombstoned slots — both are the same "unknown model" to the
+    /// protocol layer.
     pub fn get(&self, id: u16) -> Option<&ModelEntry> {
-        self.entries.get(id as usize)
+        self.slots.get(id as usize).and_then(Option::as_ref)
     }
 
-    /// The v1-compat default model (id 0).
-    pub fn default_entry(&self) -> &ModelEntry {
-        &self.entries[0]
+    /// The v1-compat default model (id 0); `None` once it has been
+    /// removed (v1 clients then get the unknown-model close, like a v2
+    /// client naming a dead id).
+    pub fn default_entry(&self) -> Option<&ModelEntry> {
+        self.get(0)
     }
 
-    /// Wire id for a routing name.
+    /// Wire id for a routing name (live entries only).
     pub fn id_of(&self, name: &str) -> Option<u16> {
-        self.entries
+        self.slots
             .iter()
-            .position(|e| e.name == name)
+            .position(|e| e.as_ref().is_some_and(|e| e.name == name))
             .map(|i| i as u16)
     }
 
-    /// `(id, entry)` in id order.
+    /// Live `(id, entry)` in id order; tombstoned slots are skipped.
     pub fn iter(&self) -> impl Iterator<Item = (u16, &ModelEntry)> {
-        self.entries.iter().enumerate().map(|(i, e)| (i as u16, e))
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (i as u16, e)))
     }
 
-    /// Max-dims union over all hosted models — what each shared-pool
-    /// worker's scratch must accommodate.
+    fn live(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.slots.iter().flatten()
+    }
+
+    /// Max-dims union over all models ever hosted (grow-only across
+    /// epochs) — what each shared-pool worker's scratch must
+    /// accommodate.
     pub fn scratch_dims(&self) -> ScratchDims {
         self.scratch_dims
     }
+}
+
+/// Shared add-time checks: non-empty unique name, valid engine, B
+/// panels packed once so the serving path never pays the pack cost.
+fn validate_entry<'a>(
+    name: &str,
+    engine: &Engine,
+    live: impl Iterator<Item = &'a ModelEntry>,
+) -> Result<()> {
+    if name.is_empty() {
+        bail!("model name must be non-empty");
+    }
+    for e in live {
+        if e.name == name {
+            bail!("duplicate model name {name:?} in registry");
+        }
+    }
+    engine
+        .validate()
+        .map_err(|e| e.context(format!("registering model {name:?}")))?;
+    engine.ensure_packed();
+    Ok(())
 }
 
 #[cfg(test)]
@@ -182,12 +341,15 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(reg.len(), 2);
+        assert_eq!(reg.live_len(), 2);
+        assert_eq!(reg.epoch(), 0);
         assert_eq!(reg.id_of("a"), Some(0));
         assert_eq!(reg.id_of("b"), Some(1));
         assert_eq!(reg.id_of("c"), None);
-        assert_eq!(reg.default_entry().name, "a");
+        assert_eq!(reg.default_entry().unwrap().name, "a");
         assert!(reg.get(2).is_none());
         assert_eq!(reg.get(1).unwrap().name, "b");
+        assert_eq!(reg.get(1).unwrap().added_at_epoch, 0);
     }
 
     #[test]
@@ -269,5 +431,108 @@ mod tests {
             );
         }
         assert_eq!(d, d1.union(d2));
+    }
+
+    #[test]
+    fn with_added_appends_a_fresh_slot() {
+        let reg = ModelRegistry::new(vec![("a".into(), engine(1))]).unwrap();
+        let reg2 = reg
+            .with_added("b", engine(2), PolicyOverrides::default())
+            .unwrap();
+        assert_eq!(reg2.epoch(), 1);
+        assert_eq!(reg2.len(), 2);
+        assert_eq!(reg2.id_of("b"), Some(1));
+        assert_eq!(reg2.get(1).unwrap().added_at_epoch, 1);
+        // original snapshot is untouched (swap, not mutate)
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.epoch(), 0);
+        // duplicate live name rejected
+        assert!(reg2
+            .with_added("a", engine(3), PolicyOverrides::default())
+            .is_err());
+        // invalid engine rejected before any slot is assigned
+        let mut rng = Rng::new(9);
+        let (topo, mut weights) = synth::tiny_model(&mut rng);
+        weights.get_mut("c1").unwrap().w.pop();
+        assert!(reg2
+            .with_added("bad", Arc::new(Engine::new(topo, weights)), Default::default())
+            .is_err());
+    }
+
+    #[test]
+    fn with_removed_tombstones_the_id_forever() {
+        let reg = ModelRegistry::new(vec![
+            ("a".into(), engine(1)),
+            ("b".into(), engine(2)),
+        ])
+        .unwrap();
+        let reg2 = reg.with_removed("a").unwrap();
+        assert_eq!(reg2.epoch(), 1);
+        // the slot stays assigned but answers unknown
+        assert_eq!(reg2.len(), 2);
+        assert_eq!(reg2.live_len(), 1);
+        assert!(reg2.get(0).is_none());
+        assert!(reg2.default_entry().is_none());
+        assert_eq!(reg2.id_of("a"), None);
+        assert_eq!(reg2.id_of("b"), Some(1));
+        // iter skips the tombstone
+        assert_eq!(reg2.iter().map(|(i, _)| i).collect::<Vec<_>>(), vec![1]);
+        // re-adding the name gets a NEW id; the old id stays dead
+        let reg3 = reg2
+            .with_added("a", engine(3), PolicyOverrides::default())
+            .unwrap();
+        assert_eq!(reg3.id_of("a"), Some(2));
+        assert!(reg3.get(0).is_none());
+        // unknown name / last live model rejected
+        assert!(reg2.with_removed("zzz").is_err());
+        assert!(reg2.with_removed("b").is_err());
+    }
+
+    #[test]
+    fn with_policy_merges_single_keys() {
+        let specs = vec![
+            ModelSpec::parse("a=synth:tiny;weight=3;max_batch=8", None, None).unwrap(),
+        ];
+        let reg = ModelRegistry::from_specs(&specs, |_| unreachable!()).unwrap();
+        let over = PolicyOverrides {
+            weight: Some(5),
+            ..Default::default()
+        };
+        let reg2 = reg.with_policy("a", &over).unwrap();
+        assert_eq!(reg2.epoch(), 1);
+        let p = &reg2.get(0).unwrap().policy;
+        // retuned key replaced, untouched key kept
+        assert_eq!(p.weight, Some(5));
+        assert_eq!(p.max_batch, Some(8));
+        // added_at_epoch survives a retune
+        assert_eq!(reg2.get(0).unwrap().added_at_epoch, 0);
+        assert!(reg.with_policy("nope", &over).is_err());
+    }
+
+    #[test]
+    fn scratch_dims_grow_only_across_epochs() {
+        let mut rng = Rng::new(4);
+        let (t2, w2) = synth::bench_model(&mut rng);
+        let big = Arc::new(Engine::new(t2, w2));
+        let big_dims = big.scratch_dims();
+        let reg = ModelRegistry::new(vec![("tiny".into(), engine(1))]).unwrap();
+        let reg2 = reg
+            .with_added("bench", big, PolicyOverrides::default())
+            .unwrap();
+        assert_eq!(reg2.scratch_dims(), reg.scratch_dims().union(big_dims));
+        // removing the big model keeps the union: in-flight batches on
+        // the old engine still fit, and scratch never shrinks mid-run
+        let reg3 = reg2.with_removed("bench").unwrap();
+        assert_eq!(reg3.scratch_dims(), reg2.scratch_dims());
+    }
+
+    #[test]
+    fn reloaded_bumps_only_the_epoch() {
+        let reg = ModelRegistry::new(vec![("a".into(), engine(1))]).unwrap();
+        let reg2 = reg.reloaded();
+        assert_eq!(reg2.epoch(), 1);
+        assert_eq!(reg2.len(), 1);
+        assert_eq!(reg2.get(0).unwrap().name, "a");
+        assert_eq!(reg2.get(0).unwrap().added_at_epoch, 0);
     }
 }

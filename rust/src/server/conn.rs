@@ -20,6 +20,10 @@
 //!     token u64::MAX: stats listener (--stats-addr, optional)
 //!     token 2^48+n:   stats connection → read HTTP head → snapshot →
 //!                           one-shot response → close
+//!     token u64::MAX-1: admin listener (--admin-addr, optional)
+//!     token 2^49+n:   admin connection → line-oriented control
+//!                           protocol → ControlPlane::apply_line →
+//!                           one reply line per command
 //! ```
 //!
 //! The BatchQueue / FairScheduler / InferencePool seam is untouched:
@@ -76,12 +80,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::nn::registry::ModelRegistry;
 use crate::util::poll::{Event, Interest, Poller, Waker};
 
 use super::metrics::{self, Snapshot, StatsParse, MAX_STATS_REQUEST};
+use super::reload::{ControlPlane, EpochState};
 use super::route;
-use super::sched::{BatchQueue, Doorbell, Pending, ReplySink, TryPush};
+use super::sched::{Doorbell, Pending, ReplySink, TryPush};
 use super::{
     RequestHeader, ServerStats, DESC_HEADER_LEN, MAGIC, MAGIC_DESC, MAX_REQ_IMAGES, PROTO_VERSION,
     V2_HEADER_LEN,
@@ -575,6 +579,18 @@ const TOKEN_BASE: u64 = 2;
 const TOKEN_STATS_LISTENER: u64 = u64::MAX;
 const STATS_TOKEN_BASE: u64 = 1 << 48;
 
+/// Admin-endpoint tokens: one listener token just below the stats
+/// listener's, and a connection space a full power of two above the
+/// stats range, so the dispatch `match` stays a strict ladder:
+/// client < route < stats < admin < listeners.
+const TOKEN_ADMIN_LISTENER: u64 = u64::MAX - 1;
+const ADMIN_TOKEN_BASE: u64 = 1 << 49;
+
+/// Concurrent admin connections. The control plane is an operator
+/// channel, not a public endpoint: past the cap new connections are
+/// accepted and dropped, exactly like a stats scrape storm.
+const MAX_ADMIN_CONNS: usize = 8;
+
 /// One in-flight stats scrape: accumulate the request head, answer
 /// once, flush, close. No protocol state machine — a stats connection
 /// is either still reading or still flushing its single response.
@@ -589,15 +605,31 @@ struct StatsConn {
     opened: Instant,
 }
 
+/// One operator control connection: a persistent, line-oriented
+/// session (unlike stats scrapes there is no lifetime cap — an
+/// operator console stays attached between commands). Each complete
+/// line is applied to the control plane and answered with exactly one
+/// reply line.
+struct AdminConn {
+    stream: TcpStream,
+    /// Bytes of the current (incomplete) line. Bounded by
+    /// [`super::MAX_ADMIN_LINE`]: past it the connection gets an error
+    /// reply and closes (line framing is lost beyond that point).
+    buf: Vec<u8>,
+    write: WriteBuf,
+    /// No more reads (EOF or an oversized line): flush staged replies,
+    /// then close.
+    closing: bool,
+}
+
 /// Everything [`run_event_loop`] multiplexes (built by `Server::run`
 /// in serving mode, `RouterServer::run` in router mode).
 pub(crate) struct LoopCtx {
-    /// Local model registry — `None` in router mode (requests forward
-    /// to backends instead of resolving against local engines).
-    pub registry: Option<Arc<ModelRegistry>>,
-    /// One queue per model, indexed by model id (shared with the
-    /// scheduler). Empty in router mode.
-    pub queues: Vec<Arc<BatchQueue>>,
+    /// Control plane: the epoch-versioned registry/queue/policy state
+    /// plus the admin command interpreter — `None` in router mode
+    /// (requests forward to backends instead of resolving against
+    /// local engines).
+    pub control: Option<Arc<ControlPlane>>,
     pub stats: Arc<ServerStats>,
     /// The scheduler's doorbell (rung on became-admissible pushes).
     pub doorbell: Arc<Doorbell>,
@@ -613,6 +645,9 @@ pub(crate) struct LoopCtx {
     pub poll_fallback: bool,
     /// Already-bound `--stats-addr` listener (None = no endpoint).
     pub stats_listener: Option<TcpListener>,
+    /// Already-bound `--admin-addr` listener (None = no control-plane
+    /// endpoint; hot add/remove/policy/reload unavailable).
+    pub admin_listener: Option<TcpListener>,
     /// Router mode: routing table + backend connection pools, driven
     /// by this same loop (`None` = local serving).
     pub router: Option<route::Router>,
@@ -652,6 +687,20 @@ struct EventLoop {
     stats_free: Vec<usize>,
     stats_open: usize,
     stats_accept_errs: u32,
+    /// Cached epoch snapshot (serving mode): the loop resolves every
+    /// registry/queue/stats lookup against this Arc and re-fetches it
+    /// when the control plane's epoch counter moves — one atomic load
+    /// per iteration, zero locks on the request path, and a swap can
+    /// never land mid-request.
+    state: Option<Arc<EpochState>>,
+    /// Optional `--admin-addr` listener (same give-up policy as the
+    /// stats listener: serving survives a dead admin endpoint).
+    admin_listener: Option<TcpListener>,
+    /// Admin-connection slab: token = slot + ADMIN_TOKEN_BASE.
+    admin_conns: Vec<Option<AdminConn>>,
+    admin_free: Vec<usize>,
+    admin_open: usize,
+    admin_accept_errs: u32,
 }
 
 impl EventLoop {
@@ -690,6 +739,19 @@ impl EventLoop {
             }
             None => None,
         };
+        let admin_listener = match ctx.admin_listener.take() {
+            Some(l) => {
+                l.set_nonblocking(true)
+                    .context("non-blocking admin listener")?;
+                use std::os::unix::io::AsRawFd;
+                poller
+                    .register(l.as_raw_fd(), TOKEN_ADMIN_LISTENER, Interest::READ)
+                    .context("registering admin listener")?;
+                Some(l)
+            }
+            None => None,
+        };
+        let state = ctx.control.as_ref().map(|c| c.current());
         let mut el = EventLoop {
             ctx,
             poller,
@@ -708,6 +770,12 @@ impl EventLoop {
             stats_free: Vec::new(),
             stats_open: 0,
             stats_accept_errs: 0,
+            state,
+            admin_listener,
+            admin_conns: Vec::new(),
+            admin_free: Vec::new(),
+            admin_open: 0,
+            admin_accept_errs: 0,
         };
         // Router mode: open the backend pools before accepting clients
         // (failures only arm backoff deadlines — the loop starts
@@ -730,11 +798,18 @@ impl EventLoop {
                 .context("poller wait")?;
             let mut accept_ready = false;
             let mut stats_accept_ready = false;
+            let mut admin_accept_ready = false;
+            // Pick up a control-plane swap before touching any
+            // connection, so every event in this batch resolves
+            // against one consistent epoch.
+            self.refresh_epoch();
             for ev in &events {
                 match ev.token {
                     TOKEN_LISTENER => accept_ready = true,
                     TOKEN_WAKER => self.waker.drain(),
                     TOKEN_STATS_LISTENER => stats_accept_ready = true,
+                    TOKEN_ADMIN_LISTENER => admin_accept_ready = true,
+                    t if t >= ADMIN_TOKEN_BASE => self.on_admin_event(*ev),
                     t if t >= STATS_TOKEN_BASE => self.on_stats_event(*ev),
                     t if t >= route::ROUTE_TOKEN_BASE => self.on_route_event(*ev),
                     _ => self.on_conn_event(*ev),
@@ -766,6 +841,9 @@ impl EventLoop {
             if stats_accept_ready {
                 self.stats_accept_ready();
             }
+            if admin_accept_ready {
+                self.admin_accept_ready();
+            }
             // Progress sweep: completions may have landed for any
             // connection (the waker says "something finished", not
             // which), and freed queue space un-parks in slot order.
@@ -777,6 +855,19 @@ impl EventLoop {
             bail!("accept loop abandoned after repeated listener errors");
         }
         Ok(())
+    }
+
+    /// Re-fetch the cached epoch snapshot when the control plane's
+    /// counter moved (an admin command swapped the registry). One
+    /// atomic load in the steady state; connections resolve every
+    /// lookup against the cached Arc, so a swap lands between loop
+    /// iterations — never mid-request.
+    fn refresh_epoch(&mut self) {
+        if let (Some(control), Some(state)) = (&self.ctx.control, &self.state) {
+            if control.epoch() != state.epoch {
+                self.state = Some(control.current());
+            }
+        }
     }
 
     /// Earliest wake deadline: idle timeouts of eligible connections,
@@ -1119,6 +1210,197 @@ impl EventLoop {
         self.stats_open -= 1;
     }
 
+    // -- admin (control plane) endpoint -------------------------------
+    //
+    // The operator console for hot model add/remove/retune/reload:
+    // persistent line-oriented connections on their own slab. Command
+    // application happens HERE, on the loop thread — a swap publishes
+    // a new epoch snapshot that the scheduler and this loop pick up at
+    // their next epoch check, so no lock is ever shared with serving
+    // I/O and two admin connections can never interleave half-applied
+    // commands.
+
+    fn admin_accept_ready(&mut self) {
+        loop {
+            let Some(listener) = &self.admin_listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    self.admin_accept_errs = 0;
+                    if self.admin_open >= MAX_ADMIN_CONNS {
+                        // Shed, don't queue — same policy as stats.
+                        drop(stream);
+                        continue;
+                    }
+                    if let Err(e) = self.install_admin(stream) {
+                        eprintln!("aquant-serve: failed to install admin connection: {e:#}");
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    self.admin_accept_errs += 1;
+                    eprintln!(
+                        "aquant-serve: admin accept error ({} in a row): {e}",
+                        self.admin_accept_errs
+                    );
+                    if self.admin_accept_errs >= 100 {
+                        eprintln!("aquant-serve: disabling admin endpoint (serving unaffected)");
+                        self.drop_admin_listener();
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drop_admin_listener(&mut self) {
+        if let Some(l) = self.admin_listener.take() {
+            use std::os::unix::io::AsRawFd;
+            let _ = self.poller.deregister(l.as_raw_fd());
+        }
+    }
+
+    fn install_admin(&mut self, stream: TcpStream) -> Result<()> {
+        stream
+            .set_nonblocking(true)
+            .context("non-blocking admin conn")?;
+        let slot = match self.admin_free.pop() {
+            Some(s) => s,
+            None => {
+                self.admin_conns.push(None);
+                self.admin_conns.len() - 1
+            }
+        };
+        let token = ADMIN_TOKEN_BASE + slot as u64;
+        {
+            use std::os::unix::io::AsRawFd;
+            if let Err(e) = self.poller.register(stream.as_raw_fd(), token, Interest::READ) {
+                self.admin_free.push(slot);
+                return Err(e).context("registering admin conn");
+            }
+        }
+        self.admin_conns[slot] = Some(AdminConn {
+            stream,
+            buf: Vec::new(),
+            write: WriteBuf::default(),
+            closing: false,
+        });
+        self.admin_open += 1;
+        Ok(())
+    }
+
+    fn on_admin_event(&mut self, ev: Event) {
+        let slot = (ev.token - ADMIN_TOKEN_BASE) as usize;
+        // Stale event for an already-closed admin slot.
+        if self.admin_conns.get(slot).and_then(Option::as_ref).is_none() {
+            return;
+        }
+        if ev.hangup || ev.error {
+            self.close_admin(slot);
+            return;
+        }
+        if self.admin_read(slot).is_err() {
+            self.close_admin(slot);
+            return;
+        }
+        // Commands applied above may have swapped the epoch; pick the
+        // new snapshot up before this iteration's progress sweep.
+        self.refresh_epoch();
+        self.admin_flush(slot);
+    }
+
+    /// Read command bytes; every complete `\n`-terminated line is
+    /// applied to the control plane and answered with exactly one
+    /// reply line. Blank lines are keep-alives. An overlong line gets
+    /// an error reply and closes the connection (framing is lost past
+    /// that point). `Err` means the connection is unsalvageable.
+    fn admin_read(&mut self, slot: usize) -> std::result::Result<(), ()> {
+        let Some(control) = self.ctx.control.clone() else {
+            // Admin endpoint without a control plane (router mode
+            // never binds one) — nothing sensible to do.
+            return Err(());
+        };
+        loop {
+            let conn = self.admin_conns[slot].as_mut().expect("live admin conn");
+            if conn.closing {
+                return Ok(());
+            }
+            match conn.stream.read(&mut self.chunk[..super::MAX_ADMIN_LINE]) {
+                Ok(0) => {
+                    conn.closing = true; // EOF: flush replies, then close
+                    return Ok(());
+                }
+                Ok(k) => {
+                    conn.buf.extend_from_slice(&self.chunk[..k]);
+                    let mut start = 0;
+                    while let Some(off) = conn.buf[start..].iter().position(|&b| b == b'\n') {
+                        let end = start + off;
+                        let reply = match std::str::from_utf8(&conn.buf[start..end]) {
+                            Ok(s) if s.trim().is_empty() => None,
+                            Ok(s) => Some(control.apply_line(s.trim())),
+                            Err(_) => {
+                                Some(format!("{} command is not valid utf-8", super::ADMIN_ERR))
+                            }
+                        };
+                        if let Some(reply) = reply {
+                            conn.write.push_bytes(reply.as_bytes());
+                            conn.write.push_bytes(b"\n");
+                        }
+                        start = end + 1;
+                    }
+                    conn.buf.drain(..start);
+                    if conn.buf.len() > super::MAX_ADMIN_LINE {
+                        let msg = format!(
+                            "{} line exceeds {} bytes\n",
+                            super::ADMIN_ERR,
+                            super::MAX_ADMIN_LINE
+                        );
+                        conn.write.push_bytes(msg.as_bytes());
+                        conn.closing = true;
+                        return Ok(());
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+    }
+
+    /// Flush staged reply lines; unlike stats this connection is
+    /// persistent, so after a complete flush interest returns to
+    /// read-only (unless the connection is closing, which ends it).
+    fn admin_flush(&mut self, slot: usize) {
+        let (flush_err, done) = {
+            let conn = self.admin_conns[slot].as_mut().expect("live admin conn");
+            let err = !conn.write.is_empty() && conn.write.flush_to(&mut conn.stream).is_err();
+            (err, conn.closing && conn.write.is_empty())
+        };
+        if flush_err || done {
+            self.close_admin(slot);
+            return;
+        }
+        let conn = self.admin_conns[slot].as_ref().expect("live admin conn");
+        let want = Interest {
+            readable: !conn.closing,
+            writable: !conn.write.is_empty(),
+        };
+        use std::os::unix::io::AsRawFd;
+        let fd = conn.stream.as_raw_fd();
+        let _ = self.poller.modify(fd, ADMIN_TOKEN_BASE + slot as u64, want);
+    }
+
+    fn close_admin(&mut self, slot: usize) {
+        let Some(conn) = self.admin_conns[slot].take() else {
+            return;
+        };
+        {
+            use std::os::unix::io::AsRawFd;
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        }
+        self.admin_free.push(slot);
+        self.admin_open -= 1;
+    }
+
     fn install(&mut self, stream: TcpStream) -> Result<()> {
         stream.set_nonblocking(true).context("non-blocking conn")?;
         let slot = match self.free.pop() {
@@ -1275,6 +1557,7 @@ impl EventLoop {
         if self.ctx.router.is_some() {
             return self.resolve_route_gate(slot);
         }
+        let state = self.state.clone().expect("serving mode");
         let conn = self.conns[slot].as_mut().expect("live conn");
         let Some(hdr) = conn.decoder.gated() else {
             return Ok(());
@@ -1290,8 +1573,10 @@ impl EventLoop {
             RequestHeader::Describe { .. } => {
                 // Payload-less: answer with the model dimension table
                 // (what a router's handshake needs to size payloads)
-                // and return the decoder to the next header.
-                let registry = self.ctx.registry.as_ref().expect("serving mode");
+                // and return the decoder to the next header. Removed
+                // (tombstoned) slots report 0 elems, exactly like a
+                // route whose handshake is pending.
+                let registry = &state.registry;
                 let elems: Vec<u32> = (0..registry.len())
                     .map(|id| {
                         registry
@@ -1307,21 +1592,18 @@ impl EventLoop {
             _ => {}
         }
         let model_id = hdr.model_id();
-        let Some(entry) = self
-            .ctx
-            .registry
-            .as_ref()
-            .expect("serving mode")
-            .get(model_id)
-        else {
+        // Tombstoned (hot-removed) models fail this lookup: NEW
+        // requests get the unknown-model rejection while anything
+        // already queued keeps draining on the old engine.
+        let Some(entry) = state.registry.get(model_id) else {
             self.ctx.stats.unknown_model.fetch_add(1, Ordering::Relaxed);
             conn.phase = Phase::Draining;
             return Ok(());
         };
         let n = hdr.n() as usize;
         if n == 0 || n > MAX_REQ_IMAGES {
-            let stats = self.ctx.stats.model(model_id).expect("stats per model");
-            stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let mslot = &state.slots[model_id as usize];
+            mslot.stats.rejected.fetch_add(1, Ordering::Relaxed);
             conn.phase = Phase::Draining;
             return Ok(());
         }
@@ -1464,10 +1746,15 @@ impl EventLoop {
         pending: Pending,
         rx: mpsc::Receiver<Result<Vec<u32>, String>>,
     ) -> std::result::Result<(), CloseReason> {
-        let stats = self.ctx.stats.model(model_id).expect("validated id");
+        // The slot's Arcs outlive any swap: a request validated
+        // against an older epoch still lands in the queue the
+        // scheduler drains (slots are never reused, and tombstoned
+        // slots keep draining until the server exits).
+        let state = self.state.clone().expect("serving mode");
+        let mslot = &state.slots[model_id as usize];
         let conn = self.conns[slot].as_mut().expect("live conn");
         let t0 = pending.enqueued_at;
-        match self.ctx.queues[model_id as usize].try_push(pending, stats) {
+        match mslot.queue.try_push(pending, &mslot.stats) {
             TryPush::Queued(ring) => {
                 conn.phase = Phase::Open;
                 conn.inflight.push_back(InFlight { model_id, rx, t0 });
@@ -1566,7 +1853,13 @@ impl EventLoop {
             }
             match front.rx.try_recv() {
                 Ok(Ok(preds)) => {
-                    let stats = self.ctx.stats.model(front.model_id).expect("validated id");
+                    let stats = match &self.state {
+                        // Serving mode: lock-free per-slot handle.
+                        Some(state) => state.slots[front.model_id as usize].stats.clone(),
+                        // Router mode: routes are fixed at startup, the
+                        // row lock is uncontended.
+                        None => self.ctx.stats.model(front.model_id).expect("validated id"),
+                    };
                     stats.requests.fetch_add(1, Ordering::Relaxed);
                     // End-to-end latency: decode-complete to reply
                     // staged (includes queue wait, batching, inference,
@@ -1854,6 +2147,11 @@ mod tests {
             STATS_TOKEN_BASE > route::ROUTE_TOKEN_BASE + route::ROUTE_TOKEN_STRIDE * (1u64 << 16),
             "route tokens (backend x stride + conn) stay below the stats space"
         );
+        // admin space sits strictly above stats, and both listeners
+        // stay above every slab token
+        assert!(ADMIN_TOKEN_BASE > STATS_TOKEN_BASE + MAX_STATS_CONNS as u64);
+        assert!(TOKEN_ADMIN_LISTENER > ADMIN_TOKEN_BASE + MAX_ADMIN_CONNS as u64);
+        assert_ne!(TOKEN_STATS_LISTENER, TOKEN_ADMIN_LISTENER);
     }
 
     #[test]

@@ -175,6 +175,9 @@ impl HistSummary {
 pub struct ModelSnapshot {
     pub id: usize,
     pub name: String,
+    /// Registry epoch this model was (hot-)added in: 0 for the startup
+    /// set, the swap's epoch for models added over the admin endpoint.
+    pub added_at_epoch: u64,
     pub requests: u64,
     pub images: u64,
     pub batches: u64,
@@ -203,6 +206,7 @@ impl ModelSnapshot {
         json::obj(vec![
             ("id", json::num(self.id as f64)),
             ("name", json::s(&self.name)),
+            ("added_at_epoch", json::num(self.added_at_epoch as f64)),
             ("requests", json::num(self.requests as f64)),
             ("images", json::num(self.images as f64)),
             ("batches", json::num(self.batches as f64)),
@@ -276,6 +280,10 @@ pub struct Snapshot {
     pub unknown_model: u64,
     pub bad_version: u64,
     pub rounds: u64,
+    /// Current registry epoch (0 until the first admin swap).
+    pub registry_epoch: u64,
+    /// Completed control-plane swaps (add/remove/policy/reload).
+    pub reloads: u64,
     pub conns_open: u64,
     pub conns_accepted: u64,
     pub conns_rejected: u64,
@@ -292,13 +300,13 @@ impl Snapshot {
     /// thread, any number of times, while serving continues.
     pub fn collect(stats: &ServerStats) -> Snapshot {
         let models = stats
-            .names
-            .iter()
-            .zip(&stats.models)
+            .rows_snapshot()
+            .into_iter()
             .enumerate()
-            .map(|(id, (name, s))| ModelSnapshot {
+            .map(|(id, (name, s, added_at_epoch))| ModelSnapshot {
                 id,
-                name: name.clone(),
+                name,
+                added_at_epoch,
                 requests: s.requests.load(Ordering::Relaxed),
                 images: s.images.load(Ordering::Relaxed),
                 batches: s.batches.load(Ordering::Relaxed),
@@ -343,6 +351,8 @@ impl Snapshot {
             unknown_model: stats.unknown_model.load(Ordering::Relaxed),
             bad_version: stats.bad_version.load(Ordering::Relaxed),
             rounds: stats.rounds.load(Ordering::Relaxed),
+            registry_epoch: stats.registry_epoch.load(Ordering::Relaxed),
+            reloads: stats.reloads.load(Ordering::Relaxed),
             conns_open: stats.conns_open.load(Ordering::Relaxed),
             conns_accepted: stats.conns_accepted.load(Ordering::Relaxed),
             conns_rejected: stats.conns_rejected.load(Ordering::Relaxed),
@@ -377,6 +387,8 @@ impl Snapshot {
                 ("unknown_model", json::num(self.unknown_model as f64)),
                 ("bad_version", json::num(self.bad_version as f64)),
                 ("rounds", json::num(self.rounds as f64)),
+                ("registry_epoch", json::num(self.registry_epoch as f64)),
+                ("reloads", json::num(self.reloads as f64)),
                 ("conns_open", json::num(self.conns_open as f64)),
                 ("conns_accepted", json::num(self.conns_accepted as f64)),
                 ("conns_rejected", json::num(self.conns_rejected as f64)),
@@ -440,11 +452,14 @@ impl Snapshot {
         }
         out.push_str(&format!(
             "server: unknown-model {}  bad-version {}  sched-rounds {}  \
+             epoch {}  reloads {}  \
              conns open {} / accepted {} / rejected {} / timed-out {}  \
              kernels {} ({})\n",
             self.unknown_model,
             self.bad_version,
             self.rounds,
+            self.registry_epoch,
+            self.reloads,
             self.conns_open,
             self.conns_accepted,
             self.conns_rejected,
@@ -719,6 +734,12 @@ mod tests {
             &Json::Null
         );
         assert!(j.req("server").unwrap().get("rounds").is_some());
+        // control-plane gauges ride along: startup models carry
+        // added_at_epoch 0 and no swap has happened yet
+        assert_eq!(models[0].req("added_at_epoch").unwrap().as_i64(), Some(0));
+        let server = j.req("server").unwrap();
+        assert_eq!(server.req("registry_epoch").unwrap().as_i64(), Some(0));
+        assert_eq!(server.req("reloads").unwrap().as_i64(), Some(0));
         // the kernel identity rides along: fast mode is "exact" unless
         // the relaxed kernels were explicitly requested
         let server = j.req("server").unwrap();

@@ -116,6 +116,11 @@
 //! * `stats_history` (`--stats-history PATH`) — append a JSON-line
 //!   snapshot every `stats_history_every_s` seconds (default 5) plus a
 //!   final one at shutdown
+//! * `admin_addr` (`--admin-addr`) — optional control-plane listener
+//!   on the SAME event loop: line-oriented `add`/`remove`/`policy`/
+//!   `reload` commands epoch-swap the model registry under live
+//!   traffic (see [`reload`]); own token space, never counts against
+//!   `max_conns`, unauthenticated — bind it to localhost
 //! * `slo_us` (per model only, `--model ...;slo_us=N`) — p99
 //!   end-to-end latency target in µs; a slow EWMA of observed p99
 //!   boosts the model's fair-share weight (bounded, up to
@@ -128,13 +133,14 @@
 
 pub mod conn;
 pub mod metrics;
+pub mod reload;
 pub mod route;
 pub mod sched;
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -148,7 +154,7 @@ pub use metrics::{HistSummary, LatencyHist, Snapshot};
 pub use route::RouterServer;
 pub use sched::{FairScheduler, Grant, Policy, SloAdapter, MAX_WEIGHT, SLO_FACTOR_MAX};
 
-use sched::{BatchQueue, Doorbell, SchedCtx};
+use sched::{Doorbell, SchedCtx};
 
 /// Hard protocol cap on images per request.
 pub const MAX_REQ_IMAGES: usize = 4096;
@@ -177,6 +183,40 @@ pub const DESC_HEADER_LEN: usize = 8;
 /// Batch-size histogram buckets: bucket i counts executed batches with
 /// 2^i ..= 2^(i+1)−1 images (last bucket is open-ended at 4096).
 pub const BATCH_BUCKETS: usize = 13;
+
+// ---- Admin (control-plane) protocol -------------------------------
+//
+// Line-oriented text on the optional `--admin-addr` listener (served
+// by the SAME event loop as client traffic, own token space, never
+// counted against `--max-conns`). One command per '\n'-terminated
+// line; one reply line per command:
+//
+//   add NAME=SPEC              register a model at a fresh id
+//   remove NAME                tombstone a model (id never reused)
+//   policy NAME key=value...   retune serving-policy keys in place
+//   reload                     bump the registry epoch (no-op swap)
+//
+// Replies: `ok epoch=N models=M` or `err <reason>` (always one line).
+// See [`reload`] for swap semantics and the README "Control plane"
+// section for the operator view.
+
+/// Admin command: `add NAME=SPEC` (synth specs only — manifest models
+/// need calibration artifacts resolved at startup).
+pub const ADMIN_CMD_ADD: &str = "add";
+/// Admin command: `remove NAME`.
+pub const ADMIN_CMD_REMOVE: &str = "remove";
+/// Admin command: `policy NAME key=value [key=value ...]`.
+pub const ADMIN_CMD_POLICY: &str = "policy";
+/// Admin command: `reload` (epoch bump without a content change).
+pub const ADMIN_CMD_RELOAD: &str = "reload";
+/// First token of every successful admin reply.
+pub const ADMIN_OK: &str = "ok";
+/// First token of every failed admin reply.
+pub const ADMIN_ERR: &str = "err";
+/// Longest accepted admin command line, in bytes (excluding the
+/// newline). A connection that exceeds it gets an `err` reply and is
+/// closed — admin lines are operator-typed, not bulk data.
+pub const MAX_ADMIN_LINE: usize = 4096;
 
 /// One parsed request header, either framing. Framing only — range
 /// checks on `n`, version, and model id are the server's job (their
@@ -425,13 +465,29 @@ impl Stats {
     }
 }
 
-/// All of a server's statistics: one [`Stats`] per hosted model
-/// (indexed by model id) plus server-level counters for requests that
-/// failed before any model was resolved.
+/// One model slot's statistics row: name + counters + the registry
+/// epoch the slot first appeared in. Rows are append-only — a removed
+/// model's row stays (counters frozen once its queue drains) so wire
+/// ids keep meaning in snapshots across control-plane swaps.
+#[derive(Debug)]
+struct ModelRow {
+    name: String,
+    stats: Arc<Stats>,
+    added_at_epoch: u64,
+}
+
+/// All of a server's statistics: one [`Stats`] per model slot ever
+/// assigned (indexed by model id) plus server-level counters for
+/// requests that failed before any model was resolved. The row list
+/// grows under a mutex when the control plane hot-adds a model; hot
+/// paths never take it — they hold per-slot `Arc<Stats>` clones.
 #[derive(Debug)]
 pub struct ServerStats {
-    names: Vec<String>,
-    models: Vec<Arc<Stats>>,
+    rows: Mutex<Vec<ModelRow>>,
+    /// Current registry epoch (0 until the first control-plane swap).
+    pub registry_epoch: AtomicU64,
+    /// Control-plane swaps applied since bind (add/remove/policy/reload).
+    pub reloads: AtomicU64,
     /// v2 requests naming a model id outside the registry.
     pub unknown_model: AtomicU64,
     /// v2 requests with a version this server doesn't speak.
@@ -462,8 +518,18 @@ pub struct ServerStats {
 impl ServerStats {
     fn with_names(names: Vec<String>) -> Self {
         ServerStats {
-            models: names.iter().map(|_| Arc::new(Stats::default())).collect(),
-            names,
+            rows: Mutex::new(
+                names
+                    .into_iter()
+                    .map(|name| ModelRow {
+                        name,
+                        stats: Arc::new(Stats::default()),
+                        added_at_epoch: 0,
+                    })
+                    .collect(),
+            ),
+            registry_epoch: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
             started: Instant::now(),
             unknown_model: AtomicU64::new(0),
             bad_version: AtomicU64::new(0),
@@ -480,6 +546,36 @@ impl ServerStats {
         Self::with_names(registry.iter().map(|(_, e)| e.name.clone()).collect())
     }
 
+    /// Append a stats row for a hot-added model slot and return its
+    /// counters. Called by the control plane only after the whole swap
+    /// validated — a rejected command must not leak rows.
+    pub(crate) fn register_row(&self, name: &str, added_at_epoch: u64) -> Arc<Stats> {
+        let stats = Arc::new(Stats::default());
+        self.rows.lock().unwrap().push(ModelRow {
+            name: name.to_string(),
+            stats: stats.clone(),
+            added_at_epoch,
+        });
+        stats
+    }
+
+    /// Record an applied control-plane swap (epoch gauge + reload count).
+    pub(crate) fn note_swap(&self, epoch: u64) {
+        self.registry_epoch.store(epoch, Ordering::Relaxed);
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every model row: `(name, stats,
+    /// added_at_epoch)` in wire-id order (snapshots and reports walk it).
+    pub(crate) fn rows_snapshot(&self) -> Vec<(String, Arc<Stats>, u64)> {
+        self.rows
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|r| (r.name.clone(), r.stats.clone(), r.added_at_epoch))
+            .collect()
+    }
+
     /// Stats for a router-mode process: one per-route [`Stats`] entry
     /// (so request counts and e2e latency work unchanged — "model" id
     /// means route id there) plus the per-backend [`route::RouterStats`].
@@ -488,9 +584,11 @@ impl ServerStats {
     pub(crate) fn for_router(names: Vec<String>, router: Arc<route::RouterStats>) -> Self {
         let mut stats = Self::with_names(names);
         stats.router = Some(router);
-        for s in &stats.models {
-            s.weight.store(1, Ordering::Relaxed);
-            s.effective_weight_milli.store(1000, Ordering::Relaxed);
+        for row in stats.rows.lock().unwrap().iter() {
+            row.stats.weight.store(1, Ordering::Relaxed);
+            row.stats
+                .effective_weight_milli
+                .store(1000, Ordering::Relaxed);
         }
         stats
     }
@@ -500,24 +598,33 @@ impl ServerStats {
         self.router.as_ref()
     }
 
-    /// Stats for one model id.
-    pub fn model(&self, id: u16) -> Option<&Arc<Stats>> {
-        self.models.get(id as usize)
+    /// Stats for one model id (an owned handle — rows live behind a
+    /// mutex since the control plane can append while serving).
+    pub fn model(&self, id: u16) -> Option<Arc<Stats>> {
+        self.rows
+            .lock()
+            .unwrap()
+            .get(id as usize)
+            .map(|r| r.stats.clone())
     }
 
     /// Stats for the default (v1-compat) model.
-    pub fn default_model(&self) -> &Arc<Stats> {
-        &self.models[0]
+    pub fn default_model(&self) -> Arc<Stats> {
+        self.rows.lock().unwrap()[0].stats.clone()
     }
 
-    /// Hosted model count.
+    /// Model slots ever assigned (live + tombstoned).
     pub fn n_models(&self) -> usize {
-        self.models.len()
+        self.rows.lock().unwrap().len()
     }
 
     /// Model name for a wire id (snapshots and reports use it).
-    pub fn model_name(&self, id: u16) -> Option<&str> {
-        self.names.get(id as usize).map(String::as_str)
+    pub fn model_name(&self, id: u16) -> Option<String> {
+        self.rows
+            .lock()
+            .unwrap()
+            .get(id as usize)
+            .map(|r| r.name.clone())
     }
 
     /// Time since these stats were created (≈ process serving uptime).
@@ -533,26 +640,32 @@ impl ServerStats {
 
     /// Sum of answered requests across models.
     pub fn total_requests(&self) -> u64 {
-        self.models
+        self.rows
+            .lock()
+            .unwrap()
             .iter()
-            .map(|s| s.requests.load(Ordering::Relaxed))
+            .map(|r| r.stats.requests.load(Ordering::Relaxed))
             .sum()
     }
 
     /// Sum of executed images across models.
     pub fn total_images(&self) -> u64 {
-        self.models
+        self.rows
+            .lock()
+            .unwrap()
             .iter()
-            .map(|s| s.images.load(Ordering::Relaxed))
+            .map(|r| r.stats.images.load(Ordering::Relaxed))
             .sum()
     }
 
     /// Sum of rejected requests: per-model bad-`n` rejections plus the
     /// server-level unknown-model / bad-version rejections.
     pub fn total_rejected(&self) -> u64 {
-        self.models
+        self.rows
+            .lock()
+            .unwrap()
             .iter()
-            .map(|s| s.rejected.load(Ordering::Relaxed))
+            .map(|r| r.stats.rejected.load(Ordering::Relaxed))
             .sum::<u64>()
             + self.unknown_model.load(Ordering::Relaxed)
             + self.bad_version.load(Ordering::Relaxed)
@@ -561,15 +674,18 @@ impl ServerStats {
     /// Multi-line human summary: one line per model + server counters.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        for (i, (name, s)) in self.names.iter().zip(&self.models).enumerate() {
+        for (i, (name, s, _)) in self.rows_snapshot().into_iter().enumerate() {
             out.push_str(&format!("model {i} {name}: {}\n", s.report()));
         }
         out.push_str(&format!(
             "server: unknown-model {}  bad-version {}  sched-rounds {}  \
+             reloads {} (epoch {})  \
              conns open {} / accepted {} / rejected {} / timed-out {}  uptime {:.1}s",
             self.unknown_model.load(Ordering::Relaxed),
             self.bad_version.load(Ordering::Relaxed),
             self.rounds.load(Ordering::Relaxed),
+            self.reloads.load(Ordering::Relaxed),
+            self.registry_epoch.load(Ordering::Relaxed),
             self.conns_open.load(Ordering::Relaxed),
             self.conns_accepted.load(Ordering::Relaxed),
             self.conns_rejected.load(Ordering::Relaxed),
@@ -590,6 +706,10 @@ pub struct Server {
     /// learn its ephemeral port before `run` (mirrors `local_addr`).
     /// Served by the same event loop as client traffic.
     stats_listener: Option<TcpListener>,
+    /// Optional `--admin-addr` control-plane listener (same event
+    /// loop, own token space). Bind it to localhost: the admin
+    /// protocol is unauthenticated by design, like `--stats-addr`.
+    admin_listener: Option<TcpListener>,
     registry: Arc<ModelRegistry>,
     cfg: ServeConfig,
     stats: Arc<ServerStats>,
@@ -623,6 +743,12 @@ impl Server {
             ),
             None => None,
         };
+        let admin_listener = match cfg.admin_addr.as_deref() {
+            Some(a) => Some(
+                TcpListener::bind(a).with_context(|| format!("binding admin endpoint {a}"))?,
+            ),
+            None => None,
+        };
         let stats = Arc::new(ServerStats::new(&registry));
         // Policy gauges: static weight / SLO are fixed from here on;
         // the effective weight starts at the static value and is only
@@ -638,6 +764,7 @@ impl Server {
         Ok(Server {
             listener,
             stats_listener,
+            admin_listener,
             registry,
             cfg,
             stats,
@@ -660,6 +787,12 @@ impl Server {
     /// (use after binding port 0).
     pub fn stats_local_addr(&self) -> Option<SocketAddr> {
         self.stats_listener.as_ref().and_then(|l| l.local_addr().ok())
+    }
+
+    /// Bound admin-endpoint address when `--admin-addr` is configured
+    /// (use after binding port 0).
+    pub fn admin_local_addr(&self) -> Option<SocketAddr> {
+        self.admin_listener.as_ref().and_then(|l| l.local_addr().ok())
     }
 
     /// Live statistics handle, valid before/during/after `run`.
@@ -693,9 +826,15 @@ impl Server {
             split: self.cfg.intra_split,
             min_elems: crate::nn::pool::INTRA_MIN_ELEMS,
         });
-        let pool = Arc::new(InferencePool::for_registry_intra(
+        // Per-model execution counters are sized for every slot the
+        // control plane could ever assign (MAX_MODELS), not just the
+        // bind-time registry: hot-added models reuse the same pool.
+        // Worker scratch is pre-sized to the bind-time dims and grows
+        // lazily when a hot-added engine needs more (grow-only).
+        let pool = Arc::new(InferencePool::with_intra(
             workers,
-            &self.registry,
+            self.registry.scratch_dims(),
+            crate::nn::registry::MAX_MODELS,
             intra,
         ));
         let addr = self
@@ -726,6 +865,12 @@ impl Server {
                 "aquant-serve: stats endpoint on http://{a}/stats (?fmt=text for plaintext)"
             );
         }
+        if let Some(a) = self.admin_local_addr() {
+            println!(
+                "aquant-serve: admin endpoint on {a} \
+                 (line protocol: add/remove/policy/reload — keep it on localhost)"
+            );
+        }
         let history = self.cfg.stats_history.clone().map(|path| {
             println!(
                 "aquant-serve: appending stats history to {path} every {}s",
@@ -737,13 +882,13 @@ impl Server {
                 self.stats.clone(),
             )
         });
-        // Per-model bounded queue; ONE scheduler thread next to ONE
-        // event-loop thread (this one). The scheduler is a plain
-        // (non-scoped) thread over Arc'd state: it must outlive the
-        // event loop, which drains all connections before we signal
-        // shutdown.
+        // ONE scheduler thread next to ONE event-loop thread (this
+        // one); per-slot bounded queues live inside the control
+        // plane's epoch state so admin swaps can grow them. The
+        // scheduler is a plain (non-scoped) thread over Arc'd state:
+        // it must outlive the event loop, which drains all connections
+        // before we signal shutdown.
         let doorbell = Arc::new(Doorbell::new());
-        let mut queues = Vec::with_capacity(self.registry.len());
         for (id, entry) in self.registry.iter() {
             let policy = &self.policies[id as usize];
             println!(
@@ -753,17 +898,16 @@ impl Server {
                 entry.engine.topo.n_classes,
                 policy.describe(),
             );
-            queues.push(Arc::new(BatchQueue::new(policy.queue_images, policy.max_batch)));
         }
+        let control = Arc::new(reload::ControlPlane::new(
+            self.registry.clone(),
+            &self.policies,
+            Policy::from_serve_cfg(&self.cfg),
+            self.stats.clone(),
+            doorbell.clone(),
+        ));
         let ctx = SchedCtx {
-            queues: queues.clone(),
-            policies: self.policies.clone(),
-            engines: self.registry.iter().map(|(_, e)| e.engine.clone()).collect(),
-            model_stats: self
-                .registry
-                .iter()
-                .map(|(id, _)| self.stats.model(id).expect("stats per model").clone())
-                .collect(),
+            control: control.clone(),
             stats: self.stats.clone(),
             pool: pool.clone(),
             doorbell: doorbell.clone(),
@@ -771,8 +915,7 @@ impl Server {
         };
         let scheduler = std::thread::spawn(move || sched::run_scheduler(ctx));
         let loop_ctx = conn::LoopCtx {
-            registry: Some(self.registry.clone()),
-            queues: queues.clone(),
+            control: Some(control.clone()),
             stats: self.stats.clone(),
             doorbell: doorbell.clone(),
             max_conns: self.cfg.max_conns,
@@ -781,18 +924,17 @@ impl Server {
                 .then(|| Duration::from_millis(self.cfg.conn_timeout_ms)),
             poll_fallback: self.cfg.poll_fallback,
             stats_listener: self.stats_listener,
+            admin_listener: self.admin_listener,
             router: None,
         };
         let served = conn::run_event_loop(self.listener, loop_ctx);
         // Every connection is drained (each reply already staged and
         // flushed or its connection gone); tell the scheduler to drain
-        // whatever is left and stop. The pool is dropped after the
-        // join, which completes any batches still in flight before its
-        // workers exit.
-        for q in &queues {
-            q.shutdown();
-        }
-        doorbell.ring();
+        // whatever is left — the LATEST epoch's queue set, which
+        // includes every tombstoned slot's still-draining queue — and
+        // stop. The pool is dropped after the join, which completes
+        // any batches still in flight before its workers exit.
+        control.shutdown();
         scheduler
             .join()
             .map_err(|_| anyhow!("scheduler thread panicked"))?;

@@ -1,0 +1,446 @@
+//! Control plane: epoch-swapped model registry under live traffic.
+//!
+//! A serving process owns ONE [`ControlPlane`]. Its current
+//! [`EpochState`] is an immutable snapshot — registry + one
+//! [`SlotState`] per model slot ever assigned — shared as an `Arc`
+//! (the cirrus `ConfigReloaded { new_config: Arc<Config> }` shape:
+//! readers clone the Arc, writers publish a whole new value). The
+//! admin listener (see [`super::conn`]) feeds operator lines into
+//! [`ControlPlane::apply_line`]; each applied command derives a
+//! next-epoch registry, rebuilds the slot table, publishes it, and
+//! rings the scheduler's doorbell.
+//!
+//! # Swap semantics (the drain guarantees)
+//!
+//! * **Per-slot Arcs survive swaps.** A surviving model keeps its
+//!   `BatchQueue`, `Stats`, and (unless re-added) `Engine` across
+//!   epochs, so requests queued before a swap drain normally and
+//!   counters never reset. In-flight batches already carry their
+//!   `Arc<Engine>` — they finish on the old engine no matter what.
+//! * **Removed models tombstone, never vanish.** The slot stays in
+//!   the table with `live = false`: the scheduler keeps polling its
+//!   queue (draining whatever was admitted before the removal, on
+//!   the old engine), while the connection gate rejects NEW requests
+//!   for the id with the existing unknown-model error. Ids are never
+//!   reused; re-adding the name assigns a fresh id.
+//! * **Policy retunes apply at the next scheduling decision.** The
+//!   scheduler reads `max_batch`/`batch_wait_us`/`weight`/`slo_us`
+//!   from the current epoch's slot table every pass, and the queue's
+//!   push-side bound is retuned in place — only the queue's wakeup
+//!   hint (`ready_images`) keeps its creation-time value, a
+//!   heuristic with no correctness weight.
+//! * **A rejected command changes nothing.** Registry derivation and
+//!   policy re-resolution both complete before anything is
+//!   published; any failure replies `err ...` and the old epoch
+//!   stays current.
+//!
+//! Scheduling is the only thing a swap may change — predictions stay
+//! bit-identical for unchanged models (pinned by
+//! `rust/tests/reload_conformance.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelSource, ModelSpec, PolicyOverrides};
+use crate::nn::engine::Engine;
+use crate::nn::registry::ModelRegistry;
+use crate::nn::synth;
+
+use super::sched::{BatchQueue, Doorbell, Policy};
+use super::{ServerStats, Stats};
+use super::{
+    ADMIN_CMD_ADD, ADMIN_CMD_POLICY, ADMIN_CMD_RELOAD, ADMIN_CMD_REMOVE, ADMIN_ERR, ADMIN_OK,
+};
+
+/// One model slot at one epoch: everything the scheduler and the
+/// connection gate need, indexed by wire id. Slots are append-only —
+/// a removed model's slot stays (with `live = false`) so its queue
+/// keeps draining on its old engine.
+pub(crate) struct SlotState {
+    pub queue: Arc<BatchQueue>,
+    /// Resolved serving policy. For a tombstoned slot this is the
+    /// policy it died with — the drain keeps its batching behavior.
+    pub policy: Policy,
+    pub engine: Arc<Engine>,
+    pub stats: Arc<Stats>,
+    /// Live in this epoch's registry; `false` = tombstoned (new
+    /// requests rejected, queued ones drain).
+    pub live: bool,
+}
+
+/// An immutable epoch snapshot: the registry plus the derived
+/// per-slot serving state. Readers hold it as an `Arc` and never see
+/// it mutate; the control plane publishes a fresh one per swap.
+pub(crate) struct EpochState {
+    pub epoch: u64,
+    pub registry: Arc<ModelRegistry>,
+    /// Indexed by model id; `len()` == slots ever assigned.
+    pub slots: Vec<SlotState>,
+}
+
+/// The serving process's control plane: current epoch state plus the
+/// machinery to apply admin commands. One per server; shared by the
+/// event loop (gate + admin protocol), the scheduler (re-resolves on
+/// epoch change), and shutdown.
+pub(crate) struct ControlPlane {
+    /// Mirror of `current.epoch`, readable without the mutex so hot
+    /// loops can detect "nothing changed" with one atomic load.
+    epoch: AtomicU64,
+    current: Mutex<Arc<EpochState>>,
+    /// Server-level policy defaults that per-model overrides resolve
+    /// against (same resolution as bind).
+    defaults: Policy,
+    stats: Arc<ServerStats>,
+    doorbell: Arc<Doorbell>,
+}
+
+impl ControlPlane {
+    /// Wrap the bind-time registry (epoch 0, every slot live) with its
+    /// already-resolved policies. Queues are created here — one per
+    /// slot, bounded by that slot's policy.
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        policies: &[Policy],
+        defaults: Policy,
+        stats: Arc<ServerStats>,
+        doorbell: Arc<Doorbell>,
+    ) -> ControlPlane {
+        let slots = (0..registry.len())
+            .map(|id| {
+                let entry = registry
+                    .get(id as u16)
+                    .expect("bind-time registries have no tombstones");
+                let policy = policies[id];
+                SlotState {
+                    queue: Arc::new(BatchQueue::new(policy.queue_images, policy.max_batch)),
+                    policy,
+                    engine: entry.engine.clone(),
+                    stats: stats.model(id as u16).expect("stats row per slot"),
+                    live: true,
+                }
+            })
+            .collect();
+        let epoch = registry.epoch();
+        stats.registry_epoch.store(epoch, Ordering::Relaxed);
+        ControlPlane {
+            epoch: AtomicU64::new(epoch),
+            current: Mutex::new(Arc::new(EpochState {
+                epoch,
+                registry,
+                slots,
+            })),
+            defaults,
+            stats,
+            doorbell,
+        }
+    }
+
+    /// Current epoch (cheap; hot loops compare it against their cached
+    /// state's epoch before taking the mutex).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The current epoch snapshot.
+    pub fn current(&self) -> Arc<EpochState> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Shut down every slot's queue (latest epoch — includes
+    /// tombstoned slots still draining) and wake the scheduler so it
+    /// can drain and exit.
+    pub fn shutdown(&self) {
+        for slot in &self.current().slots {
+            slot.queue.shutdown();
+        }
+        self.doorbell.ring();
+    }
+
+    /// Apply one admin command line and return the full reply line
+    /// (no trailing newline): `ok epoch=N models=M` or `err <reason>`.
+    /// Only the event-loop thread calls this, so commands are applied
+    /// one at a time in arrival order.
+    pub fn apply_line(&self, line: &str) -> String {
+        match self.apply(line) {
+            Ok(reply) => reply,
+            // {:#} renders the whole anyhow chain on one line
+            Err(e) => format!("{ADMIN_ERR} {:#}", e).replace('\n', " "),
+        }
+    }
+
+    fn apply(&self, line: &str) -> Result<String> {
+        let line = line.trim();
+        let (cmd, rest) = match line.split_once(char::is_whitespace) {
+            Some((c, r)) => (c, r.trim()),
+            None => (line, ""),
+        };
+        let cur = self.current();
+        let registry = match cmd {
+            c if c == ADMIN_CMD_ADD => {
+                let spec = ModelSpec::parse(rest, None, None)
+                    .with_context(|| format!("add: parsing spec {rest:?}"))?;
+                let engine = match &spec.source {
+                    ModelSource::Synth { kind, seed } => synth::engine_from_spec(kind, *seed)
+                        .with_context(|| format!("add: building {rest:?}"))?,
+                    ModelSource::Manifest { .. } => bail!(
+                        "add: hot-add supports synth: specs only (manifest models need \
+                         calibration artifacts resolved at startup)"
+                    ),
+                };
+                cur.registry
+                    .with_added(&spec.name, Arc::new(engine), spec.policy.clone())?
+            }
+            c if c == ADMIN_CMD_REMOVE => {
+                if rest.is_empty() || rest.contains(char::is_whitespace) {
+                    bail!("remove: want exactly one model name, got {rest:?}");
+                }
+                cur.registry.with_removed(rest)?
+            }
+            c if c == ADMIN_CMD_POLICY => {
+                let (name, pairs) = rest
+                    .split_once(char::is_whitespace)
+                    .ok_or_else(|| anyhow::anyhow!("policy: want NAME key=value..., got {rest:?}"))?;
+                let over = PolicyOverrides::parse_pairs(pairs.split_whitespace(), rest)?;
+                if over.is_empty() {
+                    bail!("policy: no keys given for {name:?}");
+                }
+                cur.registry.with_policy(name, &over)?
+            }
+            c if c == ADMIN_CMD_RELOAD => {
+                if !rest.is_empty() {
+                    bail!("reload takes no arguments, got {rest:?}");
+                }
+                cur.registry.reloaded()
+            }
+            other => bail!("unknown admin command {other:?} (want add|remove|policy|reload)"),
+        };
+        self.swap(&cur, Arc::new(registry))
+    }
+
+    /// Publish `registry` as the next epoch: re-resolve every live
+    /// slot's policy (any failure rejects the whole command — nothing
+    /// is published), carry queue/stats/engine Arcs for surviving
+    /// slots, create queue + stats row for new slots, tombstone the
+    /// rest. Ends by bumping the epoch mirror and ringing the
+    /// scheduler's doorbell.
+    fn swap(&self, cur: &EpochState, registry: Arc<ModelRegistry>) -> Result<String> {
+        // Phase 1: validate everything fallible before touching any
+        // shared state (stats rows are append-only — a failed swap
+        // must not leak one).
+        let mut resolved = Vec::with_capacity(registry.len());
+        for id in 0..registry.len() {
+            resolved.push(match registry.get(id as u16) {
+                Some(entry) => Some((
+                    Policy::resolve(&self.defaults, &entry.policy)
+                        .with_context(|| format!("model {id} ({:?}) serving policy", entry.name))?,
+                    entry,
+                )),
+                None => None,
+            });
+        }
+        // Phase 2: build the slot table (infallible from here on).
+        let epoch = registry.epoch();
+        let mut slots = Vec::with_capacity(registry.len());
+        let mut live = 0usize;
+        for (id, r) in resolved.into_iter().enumerate() {
+            let slot = match r {
+                Some((policy, entry)) => {
+                    live += 1;
+                    let (queue, stats) = match cur.slots.get(id) {
+                        // Surviving slot: same queue + counters, new
+                        // policy. Retune the push-side bound in place.
+                        Some(old) => {
+                            old.queue.set_bounds(policy.queue_images, policy.max_batch);
+                            (old.queue.clone(), old.stats.clone())
+                        }
+                        // Hot-added slot: fresh queue + stats row.
+                        None => (
+                            Arc::new(BatchQueue::new(policy.queue_images, policy.max_batch)),
+                            self.stats.register_row(&entry.name, entry.added_at_epoch),
+                        ),
+                    };
+                    stats.weight.store(policy.weight as u64, Ordering::Relaxed);
+                    stats
+                        .slo_us
+                        .store(policy.slo_us.unwrap_or(0), Ordering::Relaxed);
+                    stats
+                        .effective_weight_milli
+                        .store(policy.weight as u64 * 1000, Ordering::Relaxed);
+                    SlotState {
+                        queue,
+                        policy,
+                        engine: entry.engine.clone(),
+                        stats,
+                        live: true,
+                    }
+                }
+                // Tombstoned slot: everything carries over so the
+                // queue drains on the old engine; only `live` flips.
+                None => {
+                    let old = &cur.slots[id];
+                    SlotState {
+                        queue: old.queue.clone(),
+                        policy: old.policy,
+                        engine: old.engine.clone(),
+                        stats: old.stats.clone(),
+                        live: false,
+                    }
+                }
+            };
+            slots.push(slot);
+        }
+        let state = Arc::new(EpochState {
+            epoch,
+            registry,
+            slots,
+        });
+        *self.current.lock().unwrap() = state;
+        self.epoch.store(epoch, Ordering::Release);
+        self.stats.note_swap(epoch);
+        // Wake the scheduler (it re-resolves on the epoch change) and
+        // anything parked on queue room.
+        self.doorbell.ring();
+        Ok(format!("{ADMIN_OK} epoch={epoch} models={live}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(specs: &[&str]) -> ControlPlane {
+        let specs: Vec<ModelSpec> = specs
+            .iter()
+            .map(|s| ModelSpec::parse(s, None, None).unwrap())
+            .collect();
+        let registry =
+            Arc::new(ModelRegistry::from_specs(&specs, |_| unreachable!("synth only")).unwrap());
+        let defaults = Policy {
+            max_batch: 8,
+            batch_wait_us: 0,
+            queue_images: 64,
+            weight: 1,
+            slo_us: None,
+        };
+        let policies: Vec<Policy> = registry
+            .iter()
+            .map(|(_, e)| Policy::resolve(&defaults, &e.policy).unwrap())
+            .collect();
+        let stats = Arc::new(ServerStats::new(&registry));
+        ControlPlane::new(
+            registry,
+            &policies,
+            defaults,
+            stats,
+            Arc::new(Doorbell::new()),
+        )
+    }
+
+    #[test]
+    fn add_assigns_a_fresh_slot_with_fresh_queue_and_stats() {
+        let cp = plane(&["a=synth:tiny"]);
+        let before = cp.current();
+        let reply = cp.apply_line("add b=synth:tiny:7;weight=3");
+        assert_eq!(reply, "ok epoch=1 models=2");
+        let after = cp.current();
+        assert_eq!(cp.epoch(), 1);
+        assert_eq!(after.slots.len(), 2);
+        // surviving slot keeps its Arcs
+        assert!(Arc::ptr_eq(&before.slots[0].queue, &after.slots[0].queue));
+        assert!(Arc::ptr_eq(&before.slots[0].stats, &after.slots[0].stats));
+        assert!(Arc::ptr_eq(&before.slots[0].engine, &after.slots[0].engine));
+        // new slot got a row, the right policy, and live = true
+        assert!(after.slots[1].live);
+        assert_eq!(after.slots[1].policy.weight, 3);
+        assert_eq!(cp.stats.n_models(), 2);
+        assert_eq!(cp.stats.model_name(1).as_deref(), Some("b"));
+        assert_eq!(
+            cp.stats.model(1).unwrap().weight.load(Ordering::Relaxed),
+            3
+        );
+        assert_eq!(cp.stats.reloads.load(Ordering::Relaxed), 1);
+        assert_eq!(cp.stats.registry_epoch.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn remove_tombstones_but_keeps_the_drain_state() {
+        let cp = plane(&["a=synth:tiny", "b=synth:tiny:7"]);
+        let before = cp.current();
+        assert_eq!(cp.apply_line("remove b"), "ok epoch=1 models=1");
+        let after = cp.current();
+        assert_eq!(after.slots.len(), 2);
+        assert!(!after.slots[1].live);
+        // the dead slot keeps queue/engine/stats so queued work drains
+        assert!(Arc::ptr_eq(&before.slots[1].queue, &after.slots[1].queue));
+        assert!(Arc::ptr_eq(&before.slots[1].engine, &after.slots[1].engine));
+        assert!(after.registry.get(1).is_none());
+        // stats rows are append-only: the dead model stays visible
+        assert_eq!(cp.stats.n_models(), 2);
+    }
+
+    #[test]
+    fn policy_retunes_in_place_and_updates_gauges() {
+        let cp = plane(&["a=synth:tiny;weight=2"]);
+        let before = cp.current();
+        assert_eq!(cp.apply_line("policy a weight=5 slo_us=9000"), "ok epoch=1 models=1");
+        let after = cp.current();
+        assert!(Arc::ptr_eq(&before.slots[0].queue, &after.slots[0].queue));
+        assert_eq!(after.slots[0].policy.weight, 5);
+        assert_eq!(after.slots[0].policy.slo_us, Some(9000));
+        let s = cp.stats.model(0).unwrap();
+        assert_eq!(s.weight.load(Ordering::Relaxed), 5);
+        assert_eq!(s.slo_us.load(Ordering::Relaxed), 9000);
+        assert_eq!(s.effective_weight_milli.load(Ordering::Relaxed), 5000);
+    }
+
+    #[test]
+    fn rejected_commands_change_nothing() {
+        let cp = plane(&["a=synth:tiny"]);
+        for bad in [
+            "frobnicate",
+            "add",                         // empty spec
+            "add a=synth:tiny",            // duplicate live name
+            "add m:nearest:W32A32",        // manifest source
+            "add b=synth:tiny;weight=0",   // invalid policy value
+            "remove nope",
+            "remove a b",
+            "policy a",                    // no pairs
+            "policy a nope=3",             // unknown key
+            "reload now",
+        ] {
+            let reply = cp.apply_line(bad);
+            assert!(reply.starts_with(ADMIN_ERR), "{bad:?} -> {reply}");
+        }
+        assert_eq!(cp.epoch(), 0);
+        assert_eq!(cp.current().slots.len(), 1);
+        assert_eq!(cp.stats.n_models(), 1);
+        assert_eq!(cp.stats.reloads.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn reload_bumps_the_epoch_and_wakes_the_scheduler() {
+        let cp = plane(&["a=synth:tiny"]);
+        let bell_before = cp.doorbell.epoch();
+        assert_eq!(cp.apply_line("reload"), "ok epoch=1 models=1");
+        assert_eq!(cp.epoch(), 1);
+        assert!(cp.doorbell.epoch() > bell_before);
+        // removing the last live model is refused at the registry
+        let reply = cp.apply_line("remove a");
+        assert!(reply.starts_with(ADMIN_ERR), "{reply}");
+    }
+
+    #[test]
+    fn readd_after_remove_gets_a_new_id() {
+        let cp = plane(&["a=synth:tiny", "b=synth:tiny:7"]);
+        assert_eq!(cp.apply_line("remove b"), "ok epoch=1 models=1");
+        assert_eq!(cp.apply_line("add b=synth:tiny:8"), "ok epoch=2 models=2");
+        let cur = cp.current();
+        assert_eq!(cur.slots.len(), 3);
+        assert!(!cur.slots[1].live);
+        assert!(cur.slots[2].live);
+        assert_eq!(cur.registry.id_of("b"), Some(2));
+        assert_eq!(cur.registry.get(2).unwrap().added_at_epoch, 2);
+    }
+}

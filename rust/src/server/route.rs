@@ -859,8 +859,7 @@ impl RouterServer {
         });
         let router = Router::new(&self.routes, &self.cfg, self.router_stats.clone());
         let loop_ctx = conn::LoopCtx {
-            registry: None,
-            queues: Vec::new(),
+            control: None,
             stats: self.stats.clone(),
             doorbell: Arc::new(super::sched::Doorbell::new()),
             max_conns: self.cfg.max_conns,
@@ -869,6 +868,7 @@ impl RouterServer {
                 .then(|| Duration::from_millis(self.cfg.conn_timeout_ms)),
             poll_fallback: self.cfg.poll_fallback,
             stats_listener: self.stats_listener,
+            admin_listener: None,
             router: Some(router),
         };
         let served = conn::run_event_loop(self.listener, loop_ctx);

@@ -77,7 +77,6 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{PolicyOverrides, ServeConfig};
-use crate::nn::engine::Engine;
 use crate::nn::pool::InferencePool;
 
 use super::{ServerStats, Stats};
@@ -312,6 +311,16 @@ impl FairScheduler {
         self.weights[id] as u32
     }
 
+    /// Seed one model's deficit from a predecessor scheduler (control-
+    /// plane swap carry-over: surviving models keep their DRR credit
+    /// and, crucially, their oversize debt — a swap must not launder
+    /// it). Clamped to the same range `service` maintains: at most one
+    /// visit's credit, at least [`DEBT_FLOOR`].
+    pub(crate) fn set_deficit(&mut self, id: usize, deficit: i64) {
+        let credit = (self.quantum * self.weights[id]) as i64;
+        self.deficits[id] = deficit.clamp(DEBT_FLOOR, credit);
+    }
+
     fn advance(&mut self) {
         self.cursor = (self.cursor + 1) % self.weights.len();
         self.credited = false;
@@ -456,6 +465,15 @@ impl SloAdapter {
         self.ewma_p99_us[id]
     }
 
+    /// Seed one model's adaptation state from a predecessor adapter
+    /// (control-plane swap carry-over): an SLO model keeps its boost
+    /// and smoothed p99 across a swap instead of re-learning from
+    /// scratch. The factor is clamped to the invariant range.
+    pub(crate) fn seed(&mut self, id: usize, ewma_p99_us: Option<f64>, factor: f64) {
+        self.ewma_p99_us[id] = ewma_p99_us;
+        self.factors[id] = factor.clamp(1.0, SLO_FACTOR_MAX);
+    }
+
     /// Effective weight for one model under the current factors.
     pub fn effective_weight(&self, id: usize) -> u32 {
         let w = (self.static_weights[id] as f64 * self.factors[id]).round() as u32;
@@ -569,6 +587,13 @@ struct QueueState {
     /// small ones that always win the condvar race.
     next_ticket: u64,
     serving: u64,
+    /// Push-side image cap (the policy's `queue_images`). Lives under
+    /// the lock so a control-plane `policy` retune applies to live
+    /// queues ([`BatchQueue::set_bounds`]).
+    cap_images: usize,
+    /// The model's `max_batch`: push uses it to detect the
+    /// became-admissible transitions that must wake the scheduler.
+    ready_images: usize,
 }
 
 /// Outcome of a non-blocking [`BatchQueue::try_push`].
@@ -606,23 +631,33 @@ pub(crate) enum Poll {
 pub(crate) struct BatchQueue {
     state: Mutex<QueueState>,
     not_full: Condvar,
-    cap_images: usize,
-    /// The model's `max_batch`: push uses it to detect the
-    /// became-admissible transitions that must wake the scheduler.
-    ready_images: usize,
 }
 
 impl BatchQueue {
     pub fn new(cap_images: usize, ready_images: usize) -> Self {
         BatchQueue {
-            state: Mutex::new(QueueState::default()),
-            not_full: Condvar::new(),
             // The configured bound is honored as-is: push admits a
             // request larger than the cap only when the queue is empty,
             // so a tight bound can't deadlock a max-size request.
-            cap_images,
-            ready_images,
+            state: Mutex::new(QueueState {
+                cap_images,
+                ready_images,
+                ..QueueState::default()
+            }),
+            not_full: Condvar::new(),
         }
+    }
+
+    /// Retune the push-side bounds in place (a control-plane `policy`
+    /// swap). A raised cap may unblock parked pushers, so waiters are
+    /// notified; a lowered cap applies to future pushes only — nothing
+    /// already queued is dropped.
+    pub fn set_bounds(&self, cap_images: usize, ready_images: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.cap_images = cap_images;
+        st.ready_images = ready_images;
+        drop(st);
+        self.not_full.notify_all();
     }
 
     /// Block until there is room, then enqueue (FIFO across blocked
@@ -649,7 +684,7 @@ impl BatchQueue {
         st.next_ticket += 1;
         while !st.shutdown
             && (ticket != st.serving
-                || (!st.items.is_empty() && st.queued_images + p.n > self.cap_images))
+                || (!st.items.is_empty() && st.queued_images + p.n > st.cap_images))
         {
             st = self.not_full.wait(st).unwrap();
         }
@@ -663,7 +698,7 @@ impl BatchQueue {
         st.serving += 1;
         st.queued_images += p.n;
         let ring = was_empty
-            || (old_images < self.ready_images && st.queued_images >= self.ready_images);
+            || (old_images < st.ready_images && st.queued_images >= st.ready_images);
         let depth = st.queued_images as u64;
         st.items.push_back(p);
         stats.queue_depth.store(depth, Ordering::Relaxed);
@@ -690,7 +725,7 @@ impl BatchQueue {
             return TryPush::Shutdown;
         }
         if st.next_ticket != st.serving
-            || (!st.items.is_empty() && st.queued_images + p.n > self.cap_images)
+            || (!st.items.is_empty() && st.queued_images + p.n > st.cap_images)
         {
             return TryPush::Full(p);
         }
@@ -700,7 +735,7 @@ impl BatchQueue {
         let old_images = st.queued_images;
         st.queued_images += p.n;
         let ring = was_empty
-            || (old_images < self.ready_images && st.queued_images >= self.ready_images);
+            || (old_images < st.ready_images && st.queued_images >= st.ready_images);
         let depth = st.queued_images as u64;
         st.items.push_back(p);
         stats.queue_depth.store(depth, Ordering::Relaxed);
@@ -825,13 +860,11 @@ pub(crate) fn inflight_cap(quantum: u64, workers: usize) -> u64 {
     (2 * quantum).max(2 * workers as u64)
 }
 
-/// Everything the scheduler loop multiplexes: one slot per model, plus
-/// the shared pool, stats, and wakeup plumbing.
+/// Everything the scheduler loop multiplexes: the control plane's
+/// current epoch state (registry + one slot per model: queue, policy,
+/// engine, counters) plus the shared pool, stats, and wakeup plumbing.
 pub(crate) struct SchedCtx {
-    pub queues: Vec<Arc<BatchQueue>>,
-    pub policies: Vec<Policy>,
-    pub engines: Vec<Arc<Engine>>,
-    pub model_stats: Vec<Arc<Stats>>,
+    pub control: Arc<super::reload::ControlPlane>,
     pub stats: Arc<ServerStats>,
     pub pool: Arc<InferencePool>,
     pub doorbell: Arc<Doorbell>,
@@ -846,31 +879,49 @@ pub(crate) struct SchedCtx {
 /// In-flight batches at exit are completed by the pool's workers before
 /// the pool joins them (results flow through each batch's done
 /// callback, not through this thread).
+///
+/// On a control-plane swap (epoch change) the loop rebuilds its
+/// [`FairScheduler`] and [`SloAdapter`] over the new slot table,
+/// carrying per-slot DRR deficits and SLO state for surviving slots —
+/// see [`rebuild_for_epoch`]. Tombstoned slots stay in the rotation
+/// with the policy they died with, so work queued before a removal
+/// drains on the old engine under the old batching rules.
 pub(crate) fn run_scheduler(ctx: SchedCtx) {
-    let n = ctx.queues.len();
-    let mut fs = FairScheduler::new(&ctx.policies).expect("policies validated at bind");
-    let cap = inflight_cap(fs.quantum(), ctx.pool.workers());
-    let mut polls = vec![Poll::Empty; n];
+    let mut state = ctx.control.current();
+    let policies: Vec<Policy> = state.slots.iter().map(|s| s.policy).collect();
+    let mut fs = FairScheduler::new(&policies).expect("policies validated at bind");
+    let mut cap = inflight_cap(fs.quantum(), ctx.pool.workers());
+    let mut polls = vec![Poll::Empty; state.slots.len()];
     // SLO adaptation state: e2e-histogram snapshots to diff per
     // interval. All of it is dead weight (no wakeups, no work) unless
     // some policy actually sets `slo_us`.
-    let mut slo = SloAdapter::new(&ctx.policies);
-    let slo_on = slo.enabled();
-    let mut last_e2e: Vec<_> = ctx
-        .model_stats
+    let mut slo = SloAdapter::new(&policies);
+    let mut slo_on = slo.enabled();
+    let mut last_e2e: Vec<_> = state
+        .slots
         .iter()
-        .map(|s| s.e2e_hist.counts())
+        .map(|s| s.stats.e2e_hist.counts())
         .collect();
     let mut next_adapt = Instant::now() + SLO_ADAPT_INTERVAL;
     loop {
         let tick = ctx.doorbell.epoch();
+        if ctx.control.epoch() != state.epoch {
+            state = ctx.control.current();
+            let (nfs, nslo) = rebuild_for_epoch(&state, &fs, &slo, &mut last_e2e);
+            fs = nfs;
+            slo = nslo;
+            slo_on = slo.enabled();
+            cap = inflight_cap(fs.quantum(), ctx.pool.workers());
+            polls = vec![Poll::Empty; state.slots.len()];
+        }
+        let n = state.slots.len();
         let now = Instant::now();
         if slo_on && now >= next_adapt {
-            adapt_slo_weights(&ctx, &mut fs, &mut slo, &mut last_e2e);
+            adapt_slo_weights(&state, &mut fs, &mut slo, &mut last_e2e);
             next_adapt = now + SLO_ADAPT_INTERVAL;
         }
-        for id in 0..n {
-            polls[id] = ctx.queues[id].poll(ctx.policies[id].max_batch, ctx.policies[id].wait(), now);
+        for (id, slot) in state.slots.iter().enumerate() {
+            polls[id] = slot.queue.poll(slot.policy.max_batch, slot.policy.wait(), now);
         }
         if polls.iter().all(|p| *p == Poll::Drained) {
             return;
@@ -880,10 +931,11 @@ pub(crate) fn run_scheduler(ctx: SchedCtx) {
         if any_ready && room {
             let admitted = fs.service(
                 &mut |id| polls[id] == Poll::Ready,
-                &mut |id, max_images| admit_one(&ctx, cap, id, max_images),
+                &mut |id, max_images| admit_one(&ctx, &state, cap, id, max_images),
             );
             for id in 0..n {
-                ctx.model_stats[id]
+                state.slots[id]
+                    .stats
                     .deficit
                     .store(fs.deficit(id), Ordering::Relaxed);
             }
@@ -905,10 +957,11 @@ pub(crate) fn run_scheduler(ctx: SchedCtx) {
                         continue;
                     }
                     if let Grant::Admitted(got) =
-                        admit_one(&ctx, cap, id, ctx.policies[id].max_batch)
+                        admit_one(&ctx, &state, cap, id, state.slots[id].policy.max_batch)
                     {
                         fs.charge(id, got);
-                        ctx.model_stats[id]
+                        state.slots[id]
+                            .stats
                             .deficit
                             .store(fs.deficit(id), Ordering::Relaxed);
                         forced = got;
@@ -943,21 +996,48 @@ pub(crate) fn run_scheduler(ctx: SchedCtx) {
     }
 }
 
+/// Rebuild the DRR + SLO state over a new epoch's slot table: a fresh
+/// [`FairScheduler`]/[`SloAdapter`] from the (re-resolved) policies,
+/// with each surviving slot's deficit, boost factor, and p99 EWMA
+/// seeded from the predecessor (slot ids are stable across swaps and
+/// the table only grows). New slots start clean; their e2e snapshot
+/// baseline is their (zero) current histogram.
+fn rebuild_for_epoch(
+    state: &super::reload::EpochState,
+    old_fs: &FairScheduler,
+    old_slo: &SloAdapter,
+    last_e2e: &mut Vec<[u64; super::metrics::LAT_BUCKETS]>,
+) -> (FairScheduler, SloAdapter) {
+    let policies: Vec<Policy> = state.slots.iter().map(|s| s.policy).collect();
+    let mut fs =
+        FairScheduler::new(&policies).expect("control plane re-validates policies per swap");
+    let mut slo = SloAdapter::new(&policies);
+    for id in 0..old_fs.n_models().min(policies.len()) {
+        fs.set_deficit(id, old_fs.deficit(id));
+        slo.seed(id, old_slo.ewma_p99_us(id), old_slo.factor(id));
+    }
+    while last_e2e.len() < state.slots.len() {
+        let id = last_e2e.len();
+        last_e2e.push(state.slots[id].stats.e2e_hist.counts());
+    }
+    (fs, slo)
+}
+
 /// One SLO adaptation tick: diff each model's e2e histogram against
 /// the last tick's snapshot, estimate the interval p99 (when the
 /// interval saw ≥ [`SLO_MIN_SAMPLES`] requests), feed the adapter, and
 /// install the resulting weights + gauges. Runs on the scheduler
 /// thread between passes — never on the serving path.
 fn adapt_slo_weights(
-    ctx: &SchedCtx,
+    state: &super::reload::EpochState,
     fs: &mut FairScheduler,
     slo: &mut SloAdapter,
     last_e2e: &mut [[u64; super::metrics::LAT_BUCKETS]],
 ) {
-    let n = ctx.model_stats.len();
+    let n = state.slots.len();
     let mut p99s = vec![None; n];
     for id in 0..n {
-        let cur = ctx.model_stats[id].e2e_hist.counts();
+        let cur = state.slots[id].stats.e2e_hist.counts();
         let mut delta = [0u64; super::metrics::LAT_BUCKETS];
         let mut total = 0u64;
         for b in 0..super::metrics::LAT_BUCKETS {
@@ -973,8 +1053,8 @@ fn adapt_slo_weights(
     let weights = slo.tick(&p99s);
     for id in 0..n {
         fs.set_weight(id, weights[id]);
-        ctx.model_stats[id].effective_weight_milli.store(
-            (ctx.policies[id].weight as f64 * slo.factor(id) * 1000.0).round() as u64,
+        state.slots[id].stats.effective_weight_milli.store(
+            (state.slots[id].policy.weight as f64 * slo.factor(id) * 1000.0).round() as u64,
             Ordering::Relaxed,
         );
     }
@@ -984,15 +1064,22 @@ fn adapt_slo_weights(
 /// with a completion callback that answers every coalesced request,
 /// then account. `Blocked` = in-flight cap reached (the pass parks
 /// here); `Skip` = nothing admissible from this queue right now.
-fn admit_one(ctx: &SchedCtx, cap: u64, id: usize, max_images: usize) -> Grant {
+fn admit_one(
+    ctx: &SchedCtx,
+    state: &super::reload::EpochState,
+    cap: u64,
+    id: usize,
+    max_images: usize,
+) -> Grant {
+    let slot = &state.slots[id];
     if ctx.in_flight.load(Ordering::Acquire) >= cap {
-        ctx.model_stats[id].deferred.fetch_add(1, Ordering::Relaxed);
+        slot.stats.deferred.fetch_add(1, Ordering::Relaxed);
         return Grant::Blocked;
     }
-    let stats = &ctx.model_stats[id];
-    let Some(mut batch) = ctx.queues[id].try_pop(
+    let stats = &slot.stats;
+    let Some(mut batch) = slot.queue.try_pop(
         max_images,
-        ctx.policies[id].wait(),
+        slot.policy.wait(),
         Instant::now(),
         stats,
     ) else {
@@ -1057,7 +1144,7 @@ fn admit_one(ctx: &SchedCtx, cap: u64, id: usize, max_images: usize) -> Grant {
     };
     if let Err(e) = ctx.pool.submit(
         id as u16,
-        &ctx.engines[id],
+        &slot.engine,
         Arc::new(flat),
         n,
         Box::new(done),
@@ -1738,5 +1825,65 @@ mod tests {
         assert_eq!(fs.weight(0), 1);
         fs.set_weight(1, MAX_WEIGHT + 100);
         assert_eq!(fs.weight(1), MAX_WEIGHT);
+    }
+
+    #[test]
+    fn set_deficit_carries_debt_but_clamps_both_ways() {
+        // the control-plane swap path: a rebuilt scheduler seeds each
+        // surviving slot's deficit from its predecessor
+        let mut fs = FairScheduler::new(&[policy(8, 2)]).unwrap();
+        fs.set_deficit(0, -100);
+        assert_eq!(fs.deficit(0), -100, "oversize debt survives a swap");
+        fs.set_deficit(0, DEBT_FLOOR - 10_000);
+        assert_eq!(fs.deficit(0), DEBT_FLOOR);
+        // positive credit caps at one visit's worth (quantum x weight)
+        fs.set_deficit(0, i64::MAX);
+        assert_eq!(fs.deficit(0), 8 * 2);
+    }
+
+    #[test]
+    fn slo_seed_restores_boost_state_across_rebuild() {
+        let policies = [slo_policy(2, Some(1000))];
+        let mut a = SloAdapter::new(&policies);
+        for _ in 0..100 {
+            a.tick(&[Some(4000.0)]);
+        }
+        let (factor, ewma) = (a.factor(0), a.ewma_p99_us(0));
+        assert!(factor > 1.5);
+        let mut b = SloAdapter::new(&policies);
+        b.seed(0, ewma, factor);
+        assert_eq!(b.factor(0), factor);
+        assert_eq!(b.ewma_p99_us(0), ewma);
+        assert_eq!(b.effective_weight(0), a.effective_weight(0));
+        // out-of-range factors (hand-rolled state) clamp to invariant
+        b.seed(0, None, 1e9);
+        assert_eq!(b.factor(0), SLO_FACTOR_MAX);
+        b.seed(0, None, 0.0);
+        assert_eq!(b.factor(0), 1.0);
+    }
+
+    #[test]
+    fn set_bounds_retunes_a_live_queue() {
+        let q = BatchQueue::new(4, 4);
+        let stats = Stats::default();
+        let (p, _r1) = pending(4);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Queued(true)));
+        // at the cap: another push is refused...
+        let (p, _r2) = pending(2);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Full(_)));
+        // ...until a control-plane retune raises the bound in place
+        q.set_bounds(16, 8);
+        let (p, _r3) = pending(2);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Queued(_)));
+        // lowering below the current fill drops nothing, it just
+        // refuses new pushes while over the bound
+        q.set_bounds(2, 2);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 6);
+        let (p, _r4) = pending(1);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Full(_)));
+        let now = Instant::now();
+        assert!(q.try_pop(64, Duration::ZERO, now, &stats).is_some());
+        let (p, _r5) = pending(1);
+        assert!(matches!(q.try_push(p, &stats), TryPush::Queued(true)));
     }
 }

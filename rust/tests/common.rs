@@ -1,5 +1,6 @@
 //! Shared scaffolding for the serving integration suites
-//! (`serve_roundtrip.rs`, `multi_model.rs`, `conn_conformance.rs`):
+//! (`serve_roundtrip.rs`, `multi_model.rs`, `conn_conformance.rs`,
+//! `reload_conformance.rs`):
 //! server startup on an ephemeral port, random payloads,
 //! sequential-engine expectations, raw v1/v2 request builders, a
 //! chunked (slow-loris) writer, the response reader, the
@@ -64,6 +65,27 @@ pub fn start_with_stats(
     let stats = srv.stats();
     let handle = std::thread::spawn(move || srv.run());
     (addr, stats_addr, stats, handle)
+}
+
+/// [`start`] with a control-plane admin endpoint on an ephemeral
+/// port: also returns the bound admin address. `cfg.admin_addr` must
+/// be set (tests use `127.0.0.1:0`).
+pub fn start_with_admin(
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+) -> (
+    SocketAddr,
+    SocketAddr,
+    Arc<ServerStats>,
+    JoinHandle<anyhow::Result<()>>,
+) {
+    assert!(cfg.admin_addr.is_some(), "caller must set cfg.admin_addr");
+    let srv = Server::bind(registry, "127.0.0.1:0", cfg).expect("bind ephemeral");
+    let addr = srv.local_addr().expect("local addr");
+    let admin_addr = srv.admin_local_addr().expect("admin addr");
+    let stats = srv.stats();
+    let handle = std::thread::spawn(move || srv.run());
+    (addr, admin_addr, stats, handle)
 }
 
 /// [`start`] for the single-model (pre-v2) server shape.

@@ -1,0 +1,324 @@
+//! Reload conformance: control-plane registry swaps under live
+//! traffic. (Shared scaffolding in `common.rs`.)
+//!
+//! The acceptance invariants (ISSUE 10):
+//!   * an `add` landing under a 256-connection mixed v1/v2 load drops
+//!     ZERO connections, and every answer stays bit-identical to the
+//!     named model's sequential engine — before, during, and after
+//!     the swap;
+//!   * a request queued before `remove` is still answered from the
+//!     OLD engine (tombstone drain), while fresh requests for the
+//!     removed id get the unknown-model close; re-adding the name
+//!     assigns a fresh id;
+//!   * malformed admin lines are rejected with `err ...` replies and
+//!     change nothing; an overlong line closes only the admin
+//!     connection, never the serving plane.
+//!
+//! This suite deliberately re-declares the admin wire constants
+//! instead of importing them, so it speaks the raw protocol a human
+//! operator would type over `nc`. `scripts/static_triage.py` (check 8)
+//! cross-checks these mirrors against `rust/src/server/mod.rs` — a
+//! drifted rename fails triage instead of silently hanging this suite
+//! against the wrong protocol.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use aquant::config::ServeConfig;
+use aquant::nn::registry::ModelRegistry;
+use aquant::nn::synth;
+use aquant::server::metrics::Snapshot;
+use aquant::server::{classify_on, classify_on_v2, encode_header_v2};
+use aquant::util::rng::Rng;
+
+use common::{expect_closed, expected, random_images, start_with_admin, Watchdog};
+
+// Wire-protocol mirrors (see module doc; triage check 8 pins these to
+// rust/src/server/mod.rs).
+const ADMIN_CMD_ADD: &str = "add";
+const ADMIN_CMD_REMOVE: &str = "remove";
+const ADMIN_CMD_POLICY: &str = "policy";
+const ADMIN_CMD_RELOAD: &str = "reload";
+const ADMIN_OK: &str = "ok";
+const ADMIN_ERR: &str = "err";
+const MAX_ADMIN_LINE: usize = 4096;
+
+/// Read one reply line (without the trailing `\n`) off an admin
+/// connection. Panics if the server closes mid-line.
+fn read_line(s: &mut TcpStream) -> String {
+    let mut out = Vec::new();
+    let mut b = [0u8; 1];
+    loop {
+        match s.read(&mut b).unwrap() {
+            1 if b[0] == b'\n' => break,
+            1 => out.push(b[0]),
+            _ => panic!("admin connection closed mid-line (got {out:?})"),
+        }
+    }
+    String::from_utf8(out).expect("admin replies are utf-8")
+}
+
+/// Send one admin command line and return its reply line.
+fn admin_cmd(s: &mut TcpStream, line: &str) -> String {
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    s.flush().unwrap();
+    read_line(s)
+}
+
+fn two_model_cfg(max_accepts: usize) -> ServeConfig {
+    ServeConfig {
+        workers: 4,
+        max_batch: 8,
+        batch_wait_us: 200,
+        max_accepts: Some(max_accepts),
+        admin_addr: Some("127.0.0.1:0".into()),
+        ..ServeConfig::default()
+    }
+}
+
+/// Tentpole invariant: hot-`add` under a 256-connection mixed v1/v2
+/// load. Every connection runs to completion (read_response panics on
+/// a dropped one), every answer is bit-identical to its model's
+/// sequential engine, and afterwards the added model serves correctly
+/// on a fresh slot while the survivors are byte-for-byte unchanged.
+#[test]
+fn add_under_mixed_load_is_dropless_and_bit_identical() {
+    let _wd = Watchdog::arm("add_under_mixed_load_is_dropless_and_bit_identical", Duration::from_secs(120));
+    let a = Arc::new(synth::engine_from_spec("tiny", 11).unwrap());
+    let b = Arc::new(synth::engine_from_spec("bench", 22).unwrap());
+    let engines = vec![a.clone(), b.clone()];
+    let registry =
+        Arc::new(ModelRegistry::new(vec![("a".into(), a), ("b".into(), b)]).unwrap());
+
+    let (n_clients, rounds, batch) = (256usize, 6usize, 2usize);
+    // exact accounting: 256 load connections + 2 post-swap verify
+    // connections; the admin connection does NOT count toward accepts
+    let (addr, admin_addr, stats, server) = start_with_admin(registry, two_model_cfg(n_clients + 2));
+
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let engines = engines.clone();
+        clients.push(std::thread::spawn(move || {
+            // stagger connects so 256 SYNs don't slam the backlog at once
+            std::thread::sleep(Duration::from_millis((c % 32) as u64));
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut rng = Rng::new(9_000 + c as u64);
+            let id = (c % 2) as u16;
+            let eng = &engines[id as usize];
+            for r in 0..rounds {
+                let images = random_images(&mut rng, batch, eng.img_elems());
+                // even clients exercise the v1 framing (default model 0)
+                let got = if id == 0 && r % 2 == 0 {
+                    classify_on(&mut stream, &images, batch).unwrap()
+                } else {
+                    classify_on_v2(&mut stream, id, &images, batch).unwrap()
+                };
+                assert_eq!(got, expected(eng, &images, batch), "client {c} req {r}");
+                std::thread::sleep(Duration::from_millis(3));
+            }
+        }));
+    }
+
+    // Land the swap mid-load: the staggered connects + per-round
+    // sleeps keep traffic in flight well past this point.
+    std::thread::sleep(Duration::from_millis(15));
+    let mut admin = TcpStream::connect(admin_addr).unwrap();
+    let reply = admin_cmd(&mut admin, &format!("{ADMIN_CMD_ADD} c=synth:tiny:7"));
+    assert_eq!(reply, format!("{ADMIN_OK} epoch=1 models=3"));
+
+    for c in clients {
+        c.join().unwrap(); // any dropped/short-read connection panics here
+    }
+
+    // The added model serves on the fresh slot (id 2), bit-identical
+    // to a locally built engine from the same spec...
+    let added = synth::engine_from_spec("tiny", 7).unwrap();
+    let mut rng = Rng::new(77);
+    let images = random_images(&mut rng, 3, added.img_elems());
+    let mut s = TcpStream::connect(addr).unwrap();
+    let got = classify_on_v2(&mut s, 2, &images, 3).unwrap();
+    assert_eq!(got, expected(&added, &images, 3), "hot-added model");
+    drop(s);
+    // ...and a surviving model is byte-for-byte unchanged post-swap.
+    let images = random_images(&mut rng, 3, engines[0].img_elems());
+    let mut s = TcpStream::connect(addr).unwrap();
+    let got = classify_on_v2(&mut s, 0, &images, 3).unwrap();
+    assert_eq!(got, expected(&engines[0], &images, 3), "surviving model");
+    drop(s);
+    drop(admin);
+    server.join().unwrap().unwrap();
+
+    // zero-drop, in numbers: nothing rejected, nothing refused
+    assert_eq!(stats.total_rejected(), 0);
+    assert_eq!(stats.conns_rejected.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.registry_epoch.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.reloads.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.model(2).unwrap().requests.load(Ordering::Relaxed), 1);
+}
+
+/// Retune, remove, drain, re-add: a request queued before `remove`
+/// is answered from the OLD engine; fresh requests for the removed id
+/// are rejected while it drains; re-adding the name gets a NEW id;
+/// the swap history is visible in the stats snapshot.
+#[test]
+fn remove_drains_from_old_engine_and_rejects_new_requests() {
+    let _wd = Watchdog::arm("remove_drains_from_old_engine_and_rejects_new_requests", Duration::from_secs(60));
+    let a = Arc::new(synth::engine_from_spec("tiny", 11).unwrap());
+    let b = Arc::new(synth::engine_from_spec("bench", 22).unwrap());
+    let registry = Arc::new(
+        ModelRegistry::new(vec![("a".into(), a.clone()), ("b".into(), b.clone())]).unwrap(),
+    );
+    // exactly 4 client connections: drain, rejected, re-added verify,
+    // survivor verify
+    let (addr, admin_addr, stats, server) = start_with_admin(registry, two_model_cfg(4));
+    let mut admin = TcpStream::connect(admin_addr).unwrap();
+
+    // live policy retune lands on the gauges immediately
+    let reply = admin_cmd(&mut admin, &format!("{ADMIN_CMD_POLICY} b weight=5"));
+    assert_eq!(reply, format!("{ADMIN_OK} epoch=1 models=2"));
+    assert_eq!(stats.model(1).unwrap().weight.load(Ordering::Relaxed), 5);
+
+    // park the next b request on the straggler deadline so it is
+    // still queued when the remove lands
+    let reply = admin_cmd(&mut admin, &format!("{ADMIN_CMD_POLICY} b batch_wait_us=300000"));
+    assert_eq!(reply, format!("{ADMIN_OK} epoch=2 models=2"));
+
+    let b_drain = {
+        let b = b.clone();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut rng = Rng::new(41);
+            let images = random_images(&mut rng, 2, b.img_elems());
+            // enqueued now; admitted only after the 300ms straggler
+            // wait — i.e. strictly after the remove below
+            let got = classify_on_v2(&mut s, 1, &images, 2).unwrap();
+            assert_eq!(got, expected(&b, &images, 2), "drained from old engine");
+        })
+    };
+    std::thread::sleep(Duration::from_millis(80));
+
+    let reply = admin_cmd(&mut admin, &format!("{ADMIN_CMD_REMOVE} b"));
+    assert_eq!(reply, format!("{ADMIN_OK} epoch=3 models=1"));
+
+    // a FRESH request for the tombstoned id gets the unknown-model
+    // close, even while its queue is still draining
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&encode_header_v2(1, 1)).unwrap();
+    expect_closed(s);
+
+    b_drain.join().unwrap(); // the queued request was answered, bit-identical
+
+    // re-adding the name assigns a fresh slot: id 2, not a reuse of 1
+    let reply = admin_cmd(&mut admin, &format!("{ADMIN_CMD_ADD} b=synth:tiny:33"));
+    assert_eq!(reply, format!("{ADMIN_OK} epoch=4 models=2"));
+    let readded = synth::engine_from_spec("tiny", 33).unwrap();
+    let mut rng = Rng::new(43);
+    let images = random_images(&mut rng, 2, readded.img_elems());
+    let mut s = TcpStream::connect(addr).unwrap();
+    let got = classify_on_v2(&mut s, 2, &images, 2).unwrap();
+    assert_eq!(got, expected(&readded, &images, 2), "re-added model, new id");
+    drop(s);
+
+    // the untouched model is byte-for-byte unchanged through all four swaps
+    let images = random_images(&mut rng, 2, a.img_elems());
+    let mut s = TcpStream::connect(addr).unwrap();
+    let got = classify_on_v2(&mut s, 0, &images, 2).unwrap();
+    assert_eq!(got, expected(&a, &images, 2), "survivor after 4 swaps");
+    drop(s);
+    drop(admin);
+    server.join().unwrap().unwrap();
+
+    assert_eq!(stats.unknown_model.load(Ordering::Relaxed), 1);
+    let snap = Snapshot::collect(&stats);
+    assert_eq!(snap.registry_epoch, 4);
+    assert_eq!(snap.reloads, 4);
+    assert_eq!(snap.models.len(), 3, "rows are append-only across remove/re-add");
+    assert_eq!(snap.models[0].added_at_epoch, 0);
+    assert_eq!(snap.models[1].name, "b"); // the tombstoned slot stays visible
+    assert_eq!(snap.models[2].name, "b");
+    assert_eq!(snap.models[2].added_at_epoch, 4);
+}
+
+/// Malformed admin input: every bad line gets an `err ...` reply and
+/// changes nothing; an overlong line closes only that admin
+/// connection; blank lines are keep-alives; serving stays bit-identical
+/// throughout.
+#[test]
+fn malformed_admin_lines_are_rejected_without_side_effects() {
+    let _wd = Watchdog::arm("malformed_admin_lines_are_rejected_without_side_effects", Duration::from_secs(60));
+    let a = Arc::new(synth::engine_from_spec("tiny", 11).unwrap());
+    let registry = Arc::new(ModelRegistry::new(vec![("a".into(), a.clone())]).unwrap());
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_wait_us: 0,
+        max_accepts: Some(1),
+        admin_addr: Some("127.0.0.1:0".into()),
+        ..ServeConfig::default()
+    };
+    let (addr, admin_addr, stats, server) = start_with_admin(registry, cfg);
+
+    let mut admin = TcpStream::connect(admin_addr).unwrap();
+    for bad in [
+        "frobnicate".to_string(),
+        ADMIN_CMD_ADD.to_string(),                  // no spec
+        format!("{ADMIN_CMD_ADD} a=synth:tiny"),    // duplicate live name
+        format!("{ADMIN_CMD_REMOVE} a b"),          // two names
+        format!("{ADMIN_CMD_REMOVE} nope"),         // unknown name
+        format!("{ADMIN_CMD_POLICY} a"),            // no key=value pairs
+        format!("{ADMIN_CMD_RELOAD} now"),          // reload takes no args
+    ] {
+        let reply = admin_cmd(&mut admin, &bad);
+        assert!(
+            reply.starts_with(ADMIN_ERR) && reply.len() > ADMIN_ERR.len(),
+            "{bad:?} -> {reply:?} (want `{ADMIN_ERR} <reason>`)"
+        );
+    }
+    // non-utf-8 bytes on the wire get a protocol-level err, not a close
+    admin.write_all(&[0xff, 0xfe, b'\n']).unwrap();
+    assert_eq!(read_line(&mut admin), format!("{ADMIN_ERR} command is not valid utf-8"));
+    // none of the rejected commands moved the epoch
+    let reply = admin_cmd(&mut admin, ADMIN_CMD_RELOAD);
+    assert_eq!(reply, format!("{ADMIN_OK} epoch=1 models=1"));
+    drop(admin);
+
+    // an overlong line (no newline within the cap) gets one final err
+    // and a close — on THIS connection only
+    let mut admin = TcpStream::connect(admin_addr).unwrap();
+    admin.write_all(&vec![b'x'; MAX_ADMIN_LINE + 1000]).unwrap();
+    assert_eq!(
+        read_line(&mut admin),
+        format!("{ADMIN_ERR} line exceeds {MAX_ADMIN_LINE} bytes")
+    );
+    let mut one = [0u8; 1];
+    assert!(
+        matches!(admin.read(&mut one), Ok(0) | Err(_)),
+        "overlong-line connection must be closed"
+    );
+
+    // blank lines are keep-alives: no reply, next command still answered
+    let mut admin = TcpStream::connect(admin_addr).unwrap();
+    admin.write_all(b"\n").unwrap();
+    let reply = admin_cmd(&mut admin, ADMIN_CMD_RELOAD);
+    assert_eq!(reply, format!("{ADMIN_OK} epoch=2 models=1"));
+
+    // the serving plane never noticed any of it
+    let mut rng = Rng::new(5);
+    let images = random_images(&mut rng, 2, a.img_elems());
+    let mut s = TcpStream::connect(addr).unwrap();
+    let got = classify_on(&mut s, &images, 2).unwrap();
+    assert_eq!(got, expected(&a, &images, 2));
+    drop(s);
+    drop(admin);
+    server.join().unwrap().unwrap();
+
+    assert_eq!(stats.reloads.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.registry_epoch.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.total_rejected(), 0);
+}

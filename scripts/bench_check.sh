@@ -17,6 +17,10 @@
 #   (d') the router-tier row (32 pipelined clients through one router
 #       forwarding to 2 backend servers, "router_images_per_sec")
 #       regresses the same way — same skip-older-entries rule, or
+#   (d'') the reload-under-load row (the 256-connection burst with
+#       control-plane registry swaps landing mid-flight,
+#       "reload_under_load_images_per_sec") regresses the same way —
+#       same skip-older-entries rule, or
 #   (e) the batch-service p99 of that 256-connection burst
 #       ("p99_service_us", from the same histograms /stats serves)
 #       climbs more than the fraction ABOVE the best (lowest) prior
@@ -96,6 +100,10 @@ ROUTER = "router_images_per_sec"
 router = blob.get(ROUTER)
 if router is None:
     sys.exit(f"bench_check: FAIL - no {ROUTER} in the blob")
+RELOAD = "reload_under_load_images_per_sec"
+reload_ips = blob.get(RELOAD)
+if reload_ips is None:
+    sys.exit(f"bench_check: FAIL - no {RELOAD} in the blob")
 p99 = blob.get(P99)
 if p99 is None:
     sys.exit(f"bench_check: FAIL - no {P99} in the blob")
@@ -108,7 +116,9 @@ if gemm is None:
 # "gemm_tile" key) and are skipped, as is any future tile retune.
 tile = blob.get("gemm_tile", "")
 
-prior, mixed_prior, conns_prior, router_prior, p99_prior, gemm_prior = [], [], [], [], [], []
+prior, mixed_prior, conns_prior, router_prior, reload_prior, p99_prior, gemm_prior = (
+    [], [], [], [], [], [], []
+)
 for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
     try:
         entry = json.load(open(path))
@@ -118,6 +128,7 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         m = entry.get(MIXED)
         c = entry.get(CONNS)
         r = entry.get(ROUTER)
+        rl = entry.get(RELOAD)
         p = entry.get(P99)
         g = entry.get(GEMM) if entry.get("gemm_tile", "") == tile else None
     except (ValueError, KeyError, TypeError, AttributeError):
@@ -131,6 +142,8 @@ for path in sorted(glob.glob(os.path.join(hist_dir, "serve_*.json"))):
         conns_prior.append((c, path))
     if r is not None:
         router_prior.append((r, path))
+    if rl is not None:
+        reload_prior.append((rl, path))
     if p is not None and p > 0:
         p99_prior.append((p, path))
     if g is not None:
@@ -165,6 +178,10 @@ gate("256-connection throughput", conns, conns_prior,
 # front-end; same skip rule for entries predating the row.
 gate("router-tier throughput", router, router_prior,
      f"bench_check: no prior {ROUTER} entries; starting the router trajectory")
+# Reload-under-load trajectory: the 256-connection burst with registry
+# swaps mid-flight; same skip rule for entries predating the row.
+gate("reload-under-load throughput", reload_ips, reload_prior,
+     f"bench_check: no prior {RELOAD} entries; starting the reload trajectory")
 # Kernel-rate trajectory: the packed-panel GEMM in exact mode, gated
 # only against same-tile-config entries (skip rule above).
 gate(f"gemm {tile or 'untiled'}", gemm, gemm_prior,

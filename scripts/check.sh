@@ -47,6 +47,11 @@ if command -v cargo >/dev/null 2>&1; then
         # killed-backend reconnect loops all run on real sockets.
         echo "check: re-running router_conformance under a 600s timeout guard"
         timeout -k 30 600 cargo test -q --offline --test router_conformance || failed=1
+        # Same guard for the control-plane tier: registry swaps land
+        # under a live 256-connection load, and a swap that wedges the
+        # event loop or drops a draining queue must fail loudly.
+        echo "check: re-running reload_conformance under a 600s timeout guard"
+        timeout -k 30 600 cargo test -q --offline --test reload_conformance || failed=1
     else
         echo "check: timeout(1) unavailable; relying on the suite's in-process watchdogs" >&2
     fi

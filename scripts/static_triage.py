@@ -21,7 +21,13 @@ in review-only development:
      comment on the same line or within the 14 preceding lines — wide
      enough for a pattern-level comment above a multi-field match arm
      to still count (`unsafe impl` is a type-level promise documented
-     at the type and is exempt).
+     at the type and is exempt);
+  8. the admin control-plane wire constants (ADMIN_CMD_*, ADMIN_OK,
+     ADMIN_ERR, MAX_ADMIN_LINE) exist in rust/src/server/mod.rs, and
+     any test file that re-declares one of them (the reload
+     conformance suite does, deliberately) carries the exact same
+     value — a drifted rename breaks here instead of silently
+     hanging a live-swap test against the wrong protocol.
 
 Exit code 1 if any hard check fails. Run: python3 scripts/static_triage.py
 """
@@ -124,6 +130,50 @@ def rust_files():
                     yield os.path.join(base, f)
 
 
+ADMIN_CONST_RE = re.compile(
+    r"(?:pub\s+)?const\s+(ADMIN_[A-Z0-9_]+|MAX_ADMIN_LINE)\s*:\s*[^=]+=\s*([^;]+);"
+)
+
+
+def check_admin_protocol():
+    """Check 8: admin wire constants agree between server and tests."""
+    src_rel = os.path.join("rust", "src", "server", "mod.rs")
+    path = os.path.join(ROOT, src_rel)
+    if not os.path.exists(path):
+        errors.append(f"{src_rel}: missing (admin-protocol constants live here)")
+        return
+    with open(path, encoding="utf-8") as fh:
+        canon = {m.group(1): m.group(2).strip() for m in ADMIN_CONST_RE.finditer(fh.read())}
+    required = {
+        "ADMIN_CMD_ADD",
+        "ADMIN_CMD_REMOVE",
+        "ADMIN_CMD_POLICY",
+        "ADMIN_CMD_RELOAD",
+        "ADMIN_OK",
+        "ADMIN_ERR",
+        "MAX_ADMIN_LINE",
+    }
+    for name in sorted(required - set(canon)):
+        errors.append(f"{src_rel}: admin-protocol constant {name} is missing")
+    tests_dir = os.path.join(ROOT, "rust", "tests")
+    if not os.path.isdir(tests_dir):
+        return
+    for base, _, files in os.walk(tests_dir):
+        for f in sorted(files):
+            if not f.endswith(".rs"):
+                continue
+            rel = os.path.relpath(os.path.join(base, f), ROOT)
+            with open(os.path.join(base, f), encoding="utf-8") as fh:
+                tsrc = fh.read()
+            for m in ADMIN_CONST_RE.finditer(tsrc):
+                name, val = m.group(1), m.group(2).strip()
+                if name in canon and canon[name] != val:
+                    errors.append(
+                        f"{rel}: {name} = {val} drifted from "
+                        f"{src_rel} ({canon[name]})"
+                    )
+
+
 def main():
     reachable = set()
     stripped = {}
@@ -209,6 +259,8 @@ def main():
             m = re.match(r'\s*path\s*=\s*"([^"]+)"', line)
             if m and not os.path.exists(os.path.join(ROOT, m.group(1))):
                 errors.append(f"Cargo.toml:{ln}: target path {m.group(1)} does not exist")
+
+    check_admin_protocol()
 
     for w in warnings:
         print(f"triage: WARN {w}")
